@@ -1,0 +1,280 @@
+"""AOT pipeline: lower every step function of every model variant to HLO
+*text* and emit the runtime artifact set consumed by the rust coordinator.
+
+Per variant, ``artifacts/<variant>/`` contains:
+  train_step.hlo.txt        Adam over the weight group (S frozen)
+  train_step_sgd.hlo.txt    SGD+momentum variant
+  scale_step_adam.hlo.txt   Adam over the scale group (W + BN state frozen)
+  scale_step_sgd.hlo.txt    SGD+momentum over the scale group
+  eval_step.hlo.txt
+  manifest.json             tensor order/kinds/groups + wire signatures
+  init.bin                  initial parameter values (tensor bundle)
+
+HLO **text** is the interchange format, not ``lowered.compile()`` /
+serialized protos: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 (the version behind the rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import zoo
+from .bundle import write_bundle
+from .steps import group_indices, make_eval_step, make_predict_step, make_step
+
+# Default artifact set: (variant, builder kwargs, batch)
+# Batch sizes are deliberately small -- everything executes on the CPU
+# PJRT client; the FL dynamics, not per-step FLOPs, are the experiment.
+DEFAULT_VARIANTS = {
+    "tiny_cnn": dict(kwargs=dict(classes=10, hw=16), batch=16),
+    "vgg11_thin": dict(kwargs=dict(classes=10, hw=32), batch=32),
+    "resnet8": dict(kwargs=dict(classes=20, hw=32), batch=32),
+    "mobilenet_tiny": dict(kwargs=dict(classes=20, hw=32), batch=32),
+    "mobilenet_tiny_full": dict(kwargs=dict(classes=20, hw=32), batch=32),
+    "vgg16_head": dict(kwargs=dict(classes=2, hw=32), batch=32),
+    "vgg16_partial": dict(kwargs=dict(classes=2, hw=32), batch=32),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_variant(name: str, out_dir: str, *, batch: int, kwargs: dict, quiet=False):
+    t0 = time.time()
+    model = zoo.build(name, **kwargs)
+    os.makedirs(out_dir, exist_ok=True)
+    specs = model.specs
+    h, w, c = model.input_shape
+    x_s = _sds((batch, h, w, c))
+    y_s = _sds((batch, model.classes))
+    p_s = [_sds(sp.shape) for sp in specs]
+    scalar = _sds(())
+
+    def opt_shapes(group):
+        return [_sds(specs[i].shape) for i in group_indices(specs, group)]
+
+    files = {}
+
+    def emit(fname, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        files[fname] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if not quiet:
+            print(f"  {fname:26s} {len(text)/1e6:8.2f} MB")
+
+    def wrap(step):
+        n = len(specs)
+        g = step.group_size
+
+        def fn(*args):
+            params = list(args[:n])
+            ms = list(args[n : n + g])
+            vs = list(args[n + g : n + 2 * g])
+            t, lr, x, y = args[n + 2 * g :]
+            return step(params, ms, vs, t, lr, x, y)
+
+        return fn
+
+    wopt = opt_shapes("weight")
+    sopt = opt_shapes("scale")
+    train_args = (*p_s, *wopt, *wopt, scalar, scalar, x_s, y_s)
+    scale_args = (*p_s, *sopt, *sopt, scalar, scalar, x_s, y_s)
+
+    emit(
+        "train_step.hlo.txt",
+        wrap(make_step(model, group="weight", opt="adam", train_bn=True)),
+        train_args,
+    )
+    emit(
+        "train_step_sgd.hlo.txt",
+        wrap(make_step(model, group="weight", opt="sgd", train_bn=True)),
+        train_args,
+    )
+    emit(
+        "scale_step_adam.hlo.txt",
+        wrap(make_step(model, group="scale", opt="adam", train_bn=False)),
+        scale_args,
+    )
+    emit(
+        "scale_step_sgd.hlo.txt",
+        wrap(make_step(model, group="scale", opt="sgd", train_bn=False)),
+        scale_args,
+    )
+
+    ev = make_eval_step(model)
+
+    def eval_fn(*args):
+        return ev(list(args[: len(specs)]), args[-2], args[-1])
+
+    emit("eval_step.hlo.txt", eval_fn, (*p_s, x_s, y_s))
+
+    pr = make_predict_step(model)
+
+    def predict_fn(*args):
+        return pr(list(args[: len(specs)]), args[-1])
+
+    emit("predict_step.hlo.txt", predict_fn, (*p_s, x_s))
+
+    manifest = {
+        "model": model.name,
+        "variant": name,
+        "classes": model.classes,
+        "input": list(model.input_shape),
+        "batch": batch,
+        "param_count": int(sum(np.prod(sp.shape) for sp in specs)),
+        "scale_count": int(
+            sum(np.prod(specs[i].shape) for i in group_indices(specs, "scale"))
+        ),
+        "tensors": [sp.to_json() for sp in specs],
+        "groups": {
+            g: group_indices(specs, g) for g in ("weight", "scale", "state", "frozen")
+        },
+        "wire": {
+            "train": "params + m[weight] + v[weight] + t + lr + x + y -> params + m + v + t + loss + correct",
+            "scale": "params + m[scale] + v[scale] + t + lr + x + y -> params + m + v + t + loss + correct",
+            "eval": "params + x + y -> loss + correct",
+        },
+        "files": files,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # line-based mirror consumed by rust/src/model/manifest.rs (the offline
+    # environment has no serde; manifest.json stays for humans/tools)
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"model\t{model.name}\n")
+        f.write(f"variant\t{name}\n")
+        f.write(f"classes\t{model.classes}\n")
+        f.write("input\t" + " ".join(str(d) for d in model.input_shape) + "\n")
+        f.write(f"batch\t{batch}\n")
+        f.write(f"param_count\t{manifest['param_count']}\n")
+        f.write(f"scale_count\t{manifest['scale_count']}\n")
+        for sp in specs:
+            dims = " ".join(str(d) for d in sp.shape)
+            f.write(
+                "tensor\t"
+                f"{sp.name}\t{sp.kind}\t{sp.group}\t{sp.layer}\t"
+                f"{sp.out_ch if sp.out_ch is not None else '-'}\t"
+                f"{sp.scale_for if sp.scale_for else '-'}\t{dims}\n"
+            )
+    write_bundle(
+        os.path.join(out_dir, "init.bin"),
+        [(sp.name, model.values[sp.name]) for sp in specs],
+    )
+    if not quiet:
+        print(
+            f"  {name}: {manifest['param_count']} params "
+            f"({manifest['scale_count']} scales), {time.time()-t0:.1f}s"
+        )
+    return manifest
+
+
+def lower_kernel_bench(out_dir: str, quiet=False):
+    """Kernel-only HLOs for the rust-side L1 bench (benches/kernel_hlo.rs):
+    the pallas scaled matmul under both schedules plus the pure-XLA dot
+    reference, at a conv3-of-VGG11-like shape (2048x1152x128)."""
+    import importlib
+
+    smod = importlib.import_module("compile.kernels.scaled_matmul")
+    os.makedirs(out_dir, exist_ok=True)
+    b, k, m = 2048, 1152, 128
+    x_s = _sds((b, k))
+    w_s = _sds((k, m))
+    s_s = _sds((m,))
+
+    def emit(fname, fn):
+        lowered = jax.jit(fn).lower(x_s, w_s, s_s)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        if not quiet:
+            print(f"  kernelbench/{fname}")
+
+    emit(
+        "scaled_matmul_single.hlo.txt",
+        lambda x, w, s: (smod.pallas_scaled_matmul(x, w, s, schedule="single"),),
+    )
+    emit(
+        "scaled_matmul_mxu.hlo.txt",
+        lambda x, w, s: (smod.pallas_scaled_matmul(x, w, s, schedule="mxu"),),
+    )
+    emit(
+        "matmul_xla_ref.hlo.txt",
+        lambda x, w, s: (jnp.matmul(x, w) * s[None, :],),
+    )
+    with open(os.path.join(out_dir, "shape.tsv"), "w") as f:
+        f.write(f"{b}\t{k}\t{m}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_VARIANTS),
+        help="comma-separated variant list",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    index = {}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = DEFAULT_VARIANTS[name]
+        if not args.quiet:
+            print(f"[aot] lowering {name} ...", flush=True)
+        man = lower_variant(
+            name,
+            os.path.join(args.out, name),
+            batch=cfg["batch"],
+            kwargs=cfg["kwargs"],
+            quiet=args.quiet,
+        )
+        index[name] = {
+            "batch": cfg["batch"],
+            "classes": man["classes"],
+            "input": man["input"],
+            "param_count": man["param_count"],
+            "scale_count": man["scale_count"],
+        }
+    lower_kernel_bench(os.path.join(args.out, "_kernelbench"), quiet=args.quiet)
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    with open(os.path.join(args.out, "index.tsv"), "w") as f:
+        for name, info in index.items():
+            f.write(f"{name}\t{info['batch']}\t{info['classes']}\t{info['param_count']}\t{info['scale_count']}\n")
+    print(f"[aot] wrote {len(index)} variants to {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Tensor-bundle binary format shared with rust/src/model/io.rs.
+
+Layout (little-endian):
+  magic   : 4 bytes  b"FSTB"
+  version : u32      (1)
+  count   : u32
+  per tensor:
+    name_len : u32
+    name     : utf-8 bytes
+    ndim     : u32
+    dims     : u32 * ndim
+    dtype    : u32 (0 = f32)
+    data     : f32 * prod(dims), little-endian
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FSTB"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+def write_bundle(path: str, tensors: list[tuple[str, np.ndarray]]):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<I", DTYPE_F32))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def read_bundle(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (dtype,) = struct.unpack("<I", f.read(4))
+            assert dtype == DTYPE_F32
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * n), "<f4").reshape(dims)
+            out.append((name, arr))
+    return out

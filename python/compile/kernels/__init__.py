@@ -1,0 +1,7 @@
+"""L1 Pallas kernels for the FSFL compute hot-spot (filter-scaled matmul)."""
+
+from .scaled_matmul import (  # noqa: F401
+    pallas_matmul,
+    pallas_scaled_matmul,
+    scaled_matmul,
+)

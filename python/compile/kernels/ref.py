@@ -1,0 +1,25 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These never appear in the AOT artifacts; they exist so pytest can assert
+kernel == reference (allclose) across randomized shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def scaled_matmul_ref(x, w, s):
+    """(x @ w.T) * s  -- x: [B, K], w: [M, K], s: [M] -> [B, M]."""
+    return jnp.matmul(x, w.T) * s[None, :]
+
+
+def scaled_matmul_grads_ref(x, w, s, g):
+    """Analytic VJP of scaled_matmul for the custom_vjp check."""
+    gs = g * s[None, :]
+    dx = gs @ w
+    dw = gs.T @ x
+    ds = jnp.sum(g * (x @ w.T), axis=0)
+    return dx, dw, ds

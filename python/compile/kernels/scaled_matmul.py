@@ -1,0 +1,246 @@
+"""L1 Pallas kernels: tiled matmul with a fused per-output-channel scale.
+
+The paper's compute hot-spot is the *filter-scaled* convolution / dense
+layer: every output channel m of a conv (or output neuron of a dense
+layer) is multiplied by a trainable scalar s_m (Eq. 4).  On GPU the paper
+fuses this into the cuDNN epilogue; here we re-think it for the TPU
+execution model:
+
+  * convs are lowered to im2col + matmul so the MXU systolic array does
+    the work (bfloat16/f32 dot, 128x128 tiles),
+  * the scale multiply is fused into the *epilogue of the last K-step* of
+    the tiled matmul, so the scaled output is produced on the way from
+    VMEM back to HBM -- no second elementwise pass over the activation
+    tensor,
+  * BlockSpecs express the HBM<->VMEM schedule (the threadblock tiling of
+    the CUDA version): out tile (bm, bn) revisited across the K grid
+    dimension accumulates in place in VMEM.
+
+All kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin
+cannot execute Mosaic custom-calls.  Numerics are validated against the
+pure-jnp oracle in ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile. Small problems are padded up to one tile; the
+# wrapper shrinks tiles for very small inputs so tests stay cheap.
+DEFAULT_TILE = 128
+
+# Tiling schedule (perf pass, EXPERIMENTS.md §Perf):
+#   "mxu"    — 128x128 MXU tiles with a K accumulation loop: the schedule a
+#              real TPU would run (bounded VMEM, systolic-array shaped).
+#   "single" — one grid cell covering the whole (padded) problem: the only
+#              fast configuration under interpret=True, where every extra
+#              grid cell costs ~10 ms of emulation overhead (measured; see
+#              EXPERIMENTS.md). Numerics are identical.
+#   "auto"   — "single" (this build always executes via CPU interpret).
+# The kernel BODY is the same either way; only the BlockSpecs change.
+SCHEDULE = os.environ.get("FSFL_KERNEL_SCHEDULE", "auto")
+
+
+def _resolve_schedule(schedule: str | None) -> str:
+    s = schedule or SCHEDULE
+    if s == "auto":
+        return "single"
+    assert s in ("mxu", "single"), f"unknown schedule {s!r}"
+    return s
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest power-of-two tile <= preferred that keeps padding < 2x."""
+    t = preferred
+    while t > 8 and t >= 2 * dim:
+        t //= 2
+    return t
+
+
+def _tiles(m: int, k: int, n: int, tile: int, schedule: str | None):
+    """(bm, bk, bn) block shape for the resolved schedule."""
+    if _resolve_schedule(schedule) == "single":
+        # One grid cell covering the exact dims: interpret mode has no
+        # alignment requirement, and skipping the pad avoids two full
+        # operand copies per call.
+        return m, k, n
+    return _pick_tile(m, tile), _pick_tile(k, tile), _pick_tile(n, tile)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """o[i,j] = sum_k a[i,k] @ b[k,j], accumulated across the k grid dim.
+
+    The output block (i, j) is revisited for every k step; in-place VMEM
+    accumulation replaces the CUDA shared-memory accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _scaled_matmul_kernel(a_ref, b_ref, s_ref, o_ref, *, nk: int):
+    """o[i,j] = (sum_k a[i,k] @ b[k,j]) * s[j] with the scale applied in the
+    epilogue of the final k step (fused, single pass over the output)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * s_ref[...]
+
+
+# Grid-less kernel bodies for the "single" schedule: the whole problem is
+# one VMEM-resident block, so there is no program_id / revisit logic. The
+# scale stays fused in the same store.
+def _matmul_kernel_single(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _scaled_matmul_kernel_single(a_ref, b_ref, s_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32) * s_ref[...]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Padded pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _pad2(x, rows: int, cols: int):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "schedule"))
+def pallas_matmul(a, b, tile: int = DEFAULT_TILE, schedule: str | None = None):
+    """Tiled ``a @ b`` for f32, a: [M, K], b: [K, N] -> [M, N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    if _resolve_schedule(schedule) == "single":
+        return pl.pallas_call(
+            _matmul_kernel_single,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a.astype(jnp.float32), b.astype(jnp.float32))
+    bm, bk, bn = _tiles(m, k, n, tile, schedule)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = _pad2(a.astype(jnp.float32), mp, kp)
+    b_p = _pad2(b.astype(jnp.float32), kp, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "schedule"))
+def pallas_scaled_matmul(a, b, s, tile: int = DEFAULT_TILE, schedule: str | None = None):
+    """Tiled ``(a @ b) * s[None, :]`` -- the paper's Eq. (4) fused into the
+    matmul epilogue.  a: [M, K], b: [K, N], s: [N] -> [M, N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    assert s.shape == (n,), f"scale shape {s.shape} != ({n},)"
+    if _resolve_schedule(schedule) == "single":
+        return pl.pallas_call(
+            _scaled_matmul_kernel_single,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a.astype(jnp.float32), b.astype(jnp.float32), s.astype(jnp.float32).reshape(1, n))
+    bm, bk, bn = _tiles(m, k, n, tile, schedule)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = _pad2(a.astype(jnp.float32), mp, kp)
+    b_p = _pad2(b.astype(jnp.float32), kp, np_)
+    s_p = jnp.pad(s.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_scaled_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p, s_p)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable scaled matmul (custom VJP; fwd AND bwd run on Pallas)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def scaled_matmul(x, w, s):
+    """``(x @ w.T) * s`` -- x: [B, K], w: [M, K] (filters as rows, im2col
+    layout), s: [M] -> [B, M].
+
+    Differentiable via custom_vjp; pallas_call has no automatic transpose
+    rule, so the backward pass is expressed with the same tiled kernels:
+
+        dx = (g * s) @ w          ds = sum_b g * (x @ w.T)
+        dw = (g * s).T @ x
+    """
+    return pallas_scaled_matmul(x, w.T, s)
+
+
+def _scaled_matmul_fwd(x, w, s):
+    # Keep the unscaled product as a residual: ds = Σ_b g ⊙ raw needs it,
+    # and saving it replaces a full recompute matmul in the backward pass
+    # (≈ -25% of the train-step matmul count; EXPERIMENTS.md §Perf).
+    raw = pallas_matmul(x, w.T)
+    return raw * s[None, :], (x, w, s, raw)
+
+
+def _scaled_matmul_bwd(res, g):
+    x, w, s, raw = res
+    gs = g * s[None, :]
+    dx = pallas_matmul(gs, w)
+    dw = pallas_matmul(gs.T, x)
+    ds = jnp.sum(g * raw, axis=0)
+    return dx, dw, ds
+
+
+scaled_matmul.defvjp(_scaled_matmul_fwd, _scaled_matmul_bwd)

@@ -1,0 +1,292 @@
+"""L2 layer primitives and the parameter/manifest builder.
+
+Every conv / dense layer is stored in **im2col row layout**: a conv
+weight is ``[M, Cin*k*k]`` (one row per filter) and a dense weight is
+``[M, N]`` (one row per output neuron).  This is exactly the granularity
+of the paper's structured sparsification (Eq. 3) and filter scaling
+(Eq. 4), so the rust coordinator can treat "one row = one filter"
+uniformly without knowing about convolutions.
+
+Activations are NHWC.  Convs run as im2col + the L1 Pallas
+``scaled_matmul`` kernel (scale fused in the matmul epilogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import scaled_matmul
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass
+class TensorSpec:
+    """One named parameter tensor; serialized into manifest.json."""
+
+    name: str
+    shape: tuple
+    kind: str  # conv_w | dw_conv_w | dense_w | bias | bn_gamma | bn_beta |
+    #            bn_mean | bn_var | scale
+    group: str  # weight | scale | state | frozen
+    layer: str  # owning layer prefix, e.g. "features.conv3"
+    out_ch: Optional[int] = None  # M for row-structured tensors
+    scale_for: Optional[str] = None  # for kind=scale: the scaled weight name
+
+    def to_json(self):
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        return d
+
+
+class Builder:
+    """Registers parameters in a fixed order and initializes them.
+
+    The registration order *is* the wire order: manifest.json, init.bin
+    and every HLO step signature all use it.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.specs: list[TensorSpec] = []
+        self.values: dict[str, np.ndarray] = {}
+
+    def add(self, spec: TensorSpec, value: np.ndarray):
+        assert spec.name not in self.values, f"duplicate tensor {spec.name}"
+        assert tuple(value.shape) == tuple(spec.shape), (
+            f"{spec.name}: {value.shape} != {spec.shape}"
+        )
+        self.specs.append(spec)
+        self.values[spec.name] = np.asarray(value, np.float32)
+
+    # -- layer constructors -------------------------------------------------
+
+    def conv(
+        self,
+        layer: str,
+        cin: int,
+        cout: int,
+        k: int,
+        *,
+        scale: bool = True,
+        trainable: bool = True,
+        bn: bool = True,
+        bias: bool = True,
+    ):
+        wgroup = "weight" if trainable else "frozen"
+        row = cin * k * k
+        fan_in = row
+        std = math.sqrt(2.0 / fan_in)  # He init (ReLU nets)
+        w = self.rng.normal(0.0, std, size=(cout, row))
+        self.add(
+            TensorSpec(f"{layer}.w", (cout, row), "conv_w", wgroup, layer, cout),
+            w,
+        )
+        if bias:
+            self.add(
+                TensorSpec(f"{layer}.b", (cout,), "bias", wgroup, layer, cout),
+                np.zeros(cout),
+            )
+        if bn:
+            self._bn(layer, cout, trainable)
+        if scale:
+            self._scale(layer, cout, trainable, f"{layer}.w")
+
+    def dwconv(
+        self,
+        layer: str,
+        c: int,
+        k: int,
+        *,
+        scale: bool = True,
+        trainable: bool = True,
+    ):
+        wgroup = "weight" if trainable else "frozen"
+        std = math.sqrt(2.0 / (k * k))
+        w = self.rng.normal(0.0, std, size=(c, k * k))
+        self.add(
+            TensorSpec(f"{layer}.w", (c, k * k), "dw_conv_w", wgroup, layer, c), w
+        )
+        self._bn(layer, c, trainable)
+        if scale:
+            self._scale(layer, c, trainable, f"{layer}.w")
+
+    def dense(
+        self,
+        layer: str,
+        nin: int,
+        nout: int,
+        *,
+        scale: bool = True,
+        trainable: bool = True,
+        bias: bool = True,
+    ):
+        wgroup = "weight" if trainable else "frozen"
+        std = math.sqrt(2.0 / nin)
+        w = self.rng.normal(0.0, std, size=(nout, nin))
+        self.add(
+            TensorSpec(f"{layer}.w", (nout, nin), "dense_w", wgroup, layer, nout), w
+        )
+        if bias:
+            self.add(
+                TensorSpec(f"{layer}.b", (nout,), "bias", wgroup, layer, nout),
+                np.zeros(nout),
+            )
+        if scale:
+            self._scale(layer, nout, trainable, f"{layer}.w")
+
+    def batchnorm(self, layer: str, c: int, *, trainable: bool = True):
+        self._bn(layer, c, trainable)
+
+    def _bn(self, layer: str, c: int, trainable: bool):
+        wgroup = "weight" if trainable else "frozen"
+        self.add(
+            TensorSpec(f"{layer}.gamma", (c,), "bn_gamma", wgroup, layer, c),
+            np.ones(c),
+        )
+        self.add(
+            TensorSpec(f"{layer}.beta", (c,), "bn_beta", wgroup, layer, c),
+            np.zeros(c),
+        )
+        # Running stats: always "state" (updated from batch statistics in
+        # train_step, frozen during scale training per Algorithm 1).
+        sgroup = "state" if trainable else "frozen"
+        self.add(
+            TensorSpec(f"{layer}.mean", (c,), "bn_mean", sgroup, layer, c),
+            np.zeros(c),
+        )
+        self.add(
+            TensorSpec(f"{layer}.var", (c,), "bn_var", sgroup, layer, c),
+            np.ones(c),
+        )
+
+    def _scale(self, layer: str, c: int, trainable: bool, scale_for: str):
+        group = "scale" if trainable else "frozen"
+        self.add(
+            TensorSpec(
+                f"{layer}.s", (c,), "scale", group, layer, c, scale_for=scale_for
+            ),
+            np.ones(c),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Functional ops (used by zoo.py apply functions)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x, k: int, stride: int, padding: str):
+    """x: [B, H, W, C] -> patches [B*Ho*Wo, C*k*k] matching the conv_w row
+    layout (the patch channel order of conv_general_dilated_patches, which
+    is channel-major: c*k*k ordering [C, kh, kw])."""
+    b = x.shape[0]
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, Ho, Wo, C*k*k]
+    ho, wo = patches.shape[1], patches.shape[2]
+    return patches.reshape(b * ho * wo, patches.shape[3]), (b, ho, wo)
+
+
+def conv2d(vals, layer: str, x, *, k: int, stride: int = 1, padding: str = "SAME"):
+    """Filter-scaled conv via im2col + the L1 Pallas kernel."""
+    w = vals[f"{layer}.w"]  # [M, C*k*k]
+    m = w.shape[0]
+    patches, (b, ho, wo) = im2col(x, k, stride, padding)
+    s = vals.get(f"{layer}.s")
+    if s is None:
+        s = jnp.ones((m,), jnp.float32)
+    out = scaled_matmul(patches, w, s)  # [B*Ho*Wo, M]
+    out = out.reshape(b, ho, wo, m)
+    bias = vals.get(f"{layer}.b")
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def dwconv2d(vals, layer: str, x, *, k: int, stride: int = 1, padding: str = "SAME"):
+    """Depthwise conv with per-channel scale folded into the kernel.
+
+    Folding s into the depthwise kernel is mathematically identical to
+    scaling the output channel (Eq. 4 for N=1 filters) and keeps a single
+    conv op; jax differentiates it natively.
+    """
+    w = vals[f"{layer}.w"]  # [C, k*k]
+    c = w.shape[0]
+    s = vals.get(f"{layer}.s")
+    if s is not None:
+        w = w * s[:, None]
+    kern = jnp.transpose(w.reshape(c, k, k), (1, 2, 0)).reshape(k, k, 1, c)
+    return lax.conv_general_dilated(
+        x,
+        kern,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def dense(vals, layer: str, x):
+    w = vals[f"{layer}.w"]  # [M, N]
+    s = vals.get(f"{layer}.s")
+    if s is None:
+        s = jnp.ones((w.shape[0],), jnp.float32)
+    out = scaled_matmul(x, w, s)
+    bias = vals.get(f"{layer}.b")
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def batchnorm(vals, layer: str, x, *, train: bool, new_state: dict):
+    """BN over NHWC (axis=-1 features) or [B, F] dense activations."""
+    gamma, beta = vals[f"{layer}.gamma"], vals[f"{layer}.beta"]
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mu = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state[f"{layer}.mean"] = (
+            BN_MOMENTUM * vals[f"{layer}.mean"] + (1 - BN_MOMENTUM) * mu
+        )
+        new_state[f"{layer}.var"] = (
+            BN_MOMENTUM * vals[f"{layer}.var"] + (1 - BN_MOMENTUM) * var
+        )
+    else:
+        mu, var = vals[f"{layer}.mean"], vals[f"{layer}.var"]
+    inv = lax.rsqrt(var + BN_EPS)
+    return (x - mu) * inv * gamma + beta
+
+
+def maxpool(x, k: int = 2, stride: int = 2):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)

@@ -1,0 +1,17 @@
+"""L2 facade: the paper's jax model fwd/bwd, calling the L1 kernels.
+
+The actual definitions live in:
+  * :mod:`compile.layers` -- layer primitives + parameter manifest builder
+  * :mod:`compile.zoo`    -- the model families (VGG/ResNet/MobileNet, thinned)
+  * :mod:`compile.steps`  -- train / scale-train / eval step functions
+
+This module re-exports the public build surface used by aot.py & tests.
+"""
+
+from .zoo import REGISTRY, Model, build  # noqa: F401
+from .steps import (  # noqa: F401
+    group_indices,
+    init_opt_state,
+    make_eval_step,
+    make_step,
+)

@@ -1,0 +1,144 @@
+"""L2 step functions AOT-lowered to HLO and driven by the rust runtime.
+
+Wire convention (shared with rust/src/runtime/ and manifest.json):
+
+  train_step   inputs : params... , m[weight]..., v[weight]..., t, lr, x, y
+               outputs: params'..., m'...,        v'...,        t', loss, correct
+  scale_step   inputs : params... , m[scale]...,  v[scale]...,  t, lr, x, y
+               outputs: params'..., m'...,        v'...,        t', loss, correct
+  eval_step    inputs : params..., x, y
+               outputs: loss, correct
+
+``params`` is the full ordered tensor list from the manifest; each step
+returns the *full* list with only its group changed (weight+state for
+train, scale for scale_step).  ``t`` is the f32 Adam step count, ``lr``
+the schedule-controlled learning rate (rust owns the schedule, Fig. 1).
+``x`` is [B, H, W, C] f32, ``y`` one-hot [B, classes] f32.
+
+Algorithm 1 semantics:
+  * train_step freezes S (its grads are simply not taken),
+  * scale_step freezes W *and the BatchNorm running stats* -- the model
+    is applied with train=False so BN normalizes with the frozen
+    running statistics while only S receives gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+SGD_MOMENTUM = 0.9
+
+
+def group_indices(specs, group: str):
+    return [i for i, sp in enumerate(specs) if sp.group == group]
+
+
+def softmax_xent(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def count_correct(logits, y_onehot):
+    return jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(
+            jnp.float32
+        )
+    )
+
+
+def _adam(p, g, m, v, t, lr):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1**t)
+    vhat = v / (1 - ADAM_B2**t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def _sgd(p, g, m, v, t, lr):
+    """SGD with momentum 0.9 (paper Appendix A); v is carried unchanged so
+    the wire signature matches Adam."""
+    m = SGD_MOMENTUM * m + g
+    return p - lr * m, m, v
+
+
+OPTIMIZERS = {"adam": _adam, "sgd": _sgd}
+
+
+def make_step(model, *, group: str, opt: str, train_bn: bool):
+    """Build a step that optimizes exactly the tensors in ``group``.
+
+    group="weight", train_bn=True  -> the paper's client W training
+    group="scale",  train_bn=False -> Algorithm 1 scale sub-epoch
+    """
+    specs = model.specs
+    names = [sp.name for sp in specs]
+    gidx = group_indices(specs, group)
+    gnames = [names[i] for i in gidx]
+    sidx = group_indices(specs, "state")
+    update = OPTIMIZERS[opt]
+
+    def step(params, ms, vs, t, lr, x, y):
+        vals = dict(zip(names, params))
+
+        def loss_fn(gvals):
+            local = dict(vals)
+            local.update(zip(gnames, gvals))
+            new_state: dict = {}
+            logits = model.apply(local, x, train=train_bn, new_state=new_state)
+            loss = softmax_xent(logits, y)
+            return loss, (new_state, count_correct(logits, y))
+
+        gvals = [params[i] for i in gidx]
+        (loss, (new_state, correct)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(gvals)
+
+        t1 = t + 1.0
+        new_params = list(params)
+        new_ms, new_vs = list(ms), list(vs)
+        for slot, (i, g) in enumerate(zip(gidx, grads)):
+            p, m, v = update(params[i], g, ms[slot], vs[slot], t1, lr)
+            new_params[i], new_ms[slot], new_vs[slot] = p, m, v
+        if train_bn:
+            for i in sidx:
+                if names[i] in new_state:
+                    new_params[i] = new_state[names[i]]
+        return (*new_params, *new_ms, *new_vs, t1, loss, correct)
+
+    step.group_size = len(gidx)
+    step.group_indices = gidx
+    return step
+
+
+def make_eval_step(model):
+    names = [sp.name for sp in model.specs]
+
+    def eval_step(params, x, y):
+        vals = dict(zip(names, params))
+        logits = model.apply(vals, x, train=False, new_state={})
+        return softmax_xent(logits, y), count_correct(logits, y)
+
+    return eval_step
+
+
+def make_predict_step(model):
+    """Top-1 predictions as f32 [B] (rust computes confusion/F1 from these)."""
+    names = [sp.name for sp in model.specs]
+
+    def predict_step(params, x):
+        vals = dict(zip(names, params))
+        logits = model.apply(vals, x, train=False, new_state={})
+        return (jnp.argmax(logits, axis=-1).astype(jnp.float32),)
+
+    return predict_step
+
+
+def init_opt_state(model, group: str):
+    import numpy as np
+
+    gidx = group_indices(model.specs, group)
+    return [np.zeros(model.specs[i].shape, np.float32) for i in gidx]

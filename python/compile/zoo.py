@@ -1,0 +1,270 @@
+"""L2 model zoo: the paper's network families, thinned for this testbed.
+
+Paper models -> zoo equivalents (Section 5.1 substitutions, see
+DESIGN.md):
+
+  * VGG11_CIFAR10 (thinned, 0.8M params) -> ``vgg11_thin``: the exact
+    [32, 64, 128, 128, 128, 128, 128, 128] conv widths and 128-wide
+    dense layers from the paper, for 32x32 inputs.
+  * ResNet18                              -> ``resnet8``: 3 stages of
+    basic residual blocks with projection shortcuts.
+  * MobileNetV2                           -> ``mobilenet_tiny``:
+    inverted residual blocks (expand pointwise / depthwise / project
+    pointwise), with the paper's two scale placements: ``full`` (every
+    conv) and ``project_only`` (only the output conv of each block,
+    Fig. 2 "full-S" comparison).
+  * VGG16 partial update                  -> ``vgg16_head``: VGG-style
+    feature stack + the paper's classifier head (BatchNorm + two dense
+    layers); ``partial=True`` freezes everything but the head, which is
+    exactly the paper's "258 scaling factors" setting.
+  * ``tiny_cnn``: a 2-conv model for fast tests/CI presets.
+
+Every model is a ``Model`` with an ordered parameter manifest (see
+layers.Builder) and a functional ``apply(values, x, train, new_state)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    builder: L.Builder
+    apply: Callable  # (vals, x, train, new_state) -> logits
+    input_shape: tuple  # (H, W, C)
+    classes: int
+
+    @property
+    def specs(self):
+        return self.builder.specs
+
+    @property
+    def values(self):
+        return self.builder.values
+
+
+# ---------------------------------------------------------------------------
+# tiny_cnn
+# ---------------------------------------------------------------------------
+
+
+def tiny_cnn(classes: int = 10, in_ch: int = 3, hw: int = 16, seed: int = 0):
+    b = L.Builder(seed)
+    b.conv("c1", in_ch, 8, 3)
+    b.conv("c2", 8, 16, 3)
+    feat = 16
+    b.dense("fc", feat, classes)
+
+    def apply(v, x, train, new_state):
+        x = L.relu(L.batchnorm(v, "c1", L.conv2d(v, "c1", x, k=3), train=train, new_state=new_state))
+        x = L.maxpool(x)
+        x = L.relu(L.batchnorm(v, "c2", L.conv2d(v, "c2", x, k=3), train=train, new_state=new_state))
+        x = L.global_avgpool(x)
+        return L.dense(v, "fc", x)
+
+    return Model("tiny_cnn", b, apply, (hw, hw, in_ch), classes)
+
+
+# ---------------------------------------------------------------------------
+# vgg11_thin — the paper's VGG11_CIFAR10
+# ---------------------------------------------------------------------------
+
+VGG11_WIDTHS = [32, 64, 128, 128, 128, 128, 128, 128]
+# VGG11 layout: conv-pool / conv-pool / conv-conv-pool / conv-conv-pool /
+# conv-conv-pool
+VGG11_POOL_AFTER = {0, 1, 3, 5, 7}
+
+
+def vgg11_thin(classes: int = 10, in_ch: int = 3, hw: int = 32, seed: int = 0):
+    b = L.Builder(seed)
+    cin = in_ch
+    for i, w in enumerate(VGG11_WIDTHS):
+        b.conv(f"conv{i}", cin, w, 3)
+        cin = w
+    b.dense("fc1", 128, 128)
+    b.dense("fc2", 128, classes)
+
+    def apply(v, x, train, new_state):
+        for i in range(len(VGG11_WIDTHS)):
+            x = L.conv2d(v, f"conv{i}", x, k=3)
+            x = L.batchnorm(v, f"conv{i}", x, train=train, new_state=new_state)
+            x = L.relu(x)
+            if i in VGG11_POOL_AFTER:
+                x = L.maxpool(x)
+        x = x.reshape(x.shape[0], -1)  # 1x1x128 after 5 pools on 32x32
+        x = L.relu(L.dense(v, "fc1", x))
+        return L.dense(v, "fc2", x)
+
+    return Model("vgg11_thin", b, apply, (hw, hw, in_ch), classes)
+
+
+# ---------------------------------------------------------------------------
+# resnet8
+# ---------------------------------------------------------------------------
+
+
+def resnet8(classes: int = 20, in_ch: int = 3, hw: int = 32, seed: int = 0):
+    b = L.Builder(seed)
+    widths = [16, 32, 64]
+    b.conv("stem", in_ch, widths[0], 3)
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        pfx = f"s{si}"
+        b.conv(f"{pfx}.conv1", cin, w, 3)
+        b.conv(f"{pfx}.conv2", w, w, 3)
+        if cin != w:
+            b.conv(f"{pfx}.proj", cin, w, 1, scale=False, bn=True, bias=False)
+        cin = w
+    b.dense("fc", widths[-1], classes)
+
+    def apply(v, x, train, new_state):
+        def bn(name, t):
+            return L.batchnorm(v, name, t, train=train, new_state=new_state)
+
+        x = L.relu(bn("stem", L.conv2d(v, "stem", x, k=3)))
+        cin_l = widths[0]
+        for si, w in enumerate(widths):
+            pfx = f"s{si}"
+            stride = 1 if si == 0 else 2
+            y = L.relu(bn(f"{pfx}.conv1", L.conv2d(v, f"{pfx}.conv1", x, k=3, stride=stride)))
+            y = bn(f"{pfx}.conv2", L.conv2d(v, f"{pfx}.conv2", y, k=3))
+            if cin_l != w:
+                sc = bn(f"{pfx}.proj", L.conv2d(v, f"{pfx}.proj", x, k=1, stride=stride))
+            else:
+                sc = x
+            x = L.relu(y + sc)
+            cin_l = w
+        x = L.global_avgpool(x)
+        return L.dense(v, "fc", x)
+
+    return Model("resnet8", b, apply, (hw, hw, in_ch), classes)
+
+
+# ---------------------------------------------------------------------------
+# mobilenet_tiny — inverted residual blocks, two scale placements
+# ---------------------------------------------------------------------------
+
+# (expansion, out_ch, stride)
+MBV2_BLOCKS = [(2, 16, 1), (2, 24, 2), (2, 24, 1), (2, 32, 2), (2, 32, 1)]
+
+
+def mobilenet_tiny(
+    classes: int = 20,
+    in_ch: int = 3,
+    hw: int = 32,
+    seed: int = 0,
+    scale_mode: str = "project_only",  # or "full"
+):
+    assert scale_mode in ("project_only", "full")
+    full = scale_mode == "full"
+    b = L.Builder(seed)
+    b.conv("stem", in_ch, 16, 3, scale=full)
+    cin = 16
+    for bi, (exp, out, _stride) in enumerate(MBV2_BLOCKS):
+        pfx = f"b{bi}"
+        mid = cin * exp
+        b.conv(f"{pfx}.expand", cin, mid, 1, scale=full, bias=False)
+        b.dwconv(f"{pfx}.dw", mid, 3, scale=full)
+        # the paper's default placement: scale only the output (project)
+        # conv of each inverted residual block
+        b.conv(f"{pfx}.project", mid, out, 1, scale=True, bias=False)
+        cin = out
+    b.conv("head", cin, 64, 1, scale=full)
+    b.dense("fc", 64, classes)
+
+    def apply(v, x, train, new_state):
+        def bn(name, t):
+            return L.batchnorm(v, name, t, train=train, new_state=new_state)
+
+        x = L.relu6(bn("stem", L.conv2d(v, "stem", x, k=3)))
+        cin_l = 16
+        for bi, (exp, out, stride) in enumerate(MBV2_BLOCKS):
+            pfx = f"b{bi}"
+            y = L.relu6(bn(f"{pfx}.expand", L.conv2d(v, f"{pfx}.expand", x, k=1)))
+            y = L.relu6(bn(f"{pfx}.dw", L.dwconv2d(v, f"{pfx}.dw", y, k=3, stride=stride)))
+            y = bn(f"{pfx}.project", L.conv2d(v, f"{pfx}.project", y, k=1))
+            if stride == 1 and cin_l == out:
+                y = y + x
+            x = y
+            cin_l = out
+        x = L.relu6(bn("head", L.conv2d(v, "head", x, k=1)))
+        x = L.global_avgpool(x)
+        return L.dense(v, "fc", x)
+
+    name = "mobilenet_tiny_full" if full else "mobilenet_tiny"
+    return Model(name, b, apply, (hw, hw, in_ch), classes)
+
+
+# ---------------------------------------------------------------------------
+# vgg16_head — partial (classifier-only) vs end-to-end updates
+# ---------------------------------------------------------------------------
+
+VGG16_WIDTHS = [16, 16, 32, 32, 64, 64]
+VGG16_POOL_AFTER = {1, 3, 5}
+
+
+def vgg16_head(
+    classes: int = 2,
+    in_ch: int = 3,
+    hw: int = 32,
+    seed: int = 0,
+    partial: bool = False,
+):
+    """VGG-style features + the paper's VGG16 classifier head (BatchNorm +
+    two dense layers).  ``partial=True`` freezes the features: only the
+    head's weights and its scale factors are trained/transmitted -- the
+    paper's "partial update" with 258 scale factors analog (here
+    128 + 64 + classes head scales)."""
+    b = L.Builder(seed)
+    t = not partial
+    cin = in_ch
+    for i, w in enumerate(VGG16_WIDTHS):
+        b.conv(f"conv{i}", cin, w, 3, trainable=t)
+        cin = w
+    feat = VGG16_WIDTHS[-1] * 4 * 4  # 32 -> 3 pools -> 4x4
+    b.batchnorm("headbn", feat, trainable=True)
+    b.dense("fc1", feat, 128)
+    b.dense("fc2", 128, classes)
+
+    def apply(v, x, train, new_state):
+        for i in range(len(VGG16_WIDTHS)):
+            x = L.conv2d(v, f"conv{i}", x, k=3)
+            x = L.batchnorm(v, f"conv{i}", x, train=train, new_state=new_state)
+            x = L.relu(x)
+            if i in VGG16_POOL_AFTER:
+                x = L.maxpool(x)
+        x = x.reshape(x.shape[0], -1)
+        x = L.batchnorm(v, "headbn", x, train=train, new_state=new_state)
+        x = L.relu(L.dense(v, "fc1", x))
+        return L.dense(v, "fc2", x)
+
+    name = "vgg16_partial" if partial else "vgg16_head"
+    return Model(name, b, apply, (hw, hw, in_ch), classes)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    "tiny_cnn": tiny_cnn,
+    "vgg11_thin": vgg11_thin,
+    "resnet8": resnet8,
+    "mobilenet_tiny": mobilenet_tiny,
+    "mobilenet_tiny_full": lambda **kw: mobilenet_tiny(scale_mode="full", **kw),
+    "vgg16_head": vgg16_head,
+    "vgg16_partial": lambda **kw: vgg16_head(partial=True, **kw),
+}
+
+
+def build(name: str, **kw) -> Model:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**kw)

@@ -1,0 +1,92 @@
+"""AOT pipeline tests: HLO text emission, manifest/bundle contracts."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import zoo
+from compile.aot import lower_variant, to_hlo_text
+from compile.bundle import read_bundle, write_bundle
+
+
+def test_bundle_roundtrip(tmp_path):
+    p = str(tmp_path / "t.bin")
+    tensors = [
+        ("a.w", np.arange(6, dtype=np.float32).reshape(2, 3)),
+        ("b", np.array([1.5, -2.5], np.float32)),
+        ("scalar0", np.zeros((4,), np.float32)),
+    ]
+    write_bundle(p, tensors)
+    back = read_bundle(p)
+    assert len(back) == 3
+    for (n0, a0), (n1, a1) in zip(tensors, back):
+        assert n0 == n1
+        np.testing.assert_array_equal(a0, a1)
+
+
+def test_hlo_text_is_parseable_hlo():
+    def fn(x):
+        return (jnp.sum(x * 2.0),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_lower_variant_emits_full_artifact_set(tmp_path):
+    out = str(tmp_path / "tiny")
+    man = lower_variant("tiny_cnn", out, batch=4, kwargs=dict(classes=10, hw=16), quiet=True)
+    expected = [
+        "train_step.hlo.txt",
+        "train_step_sgd.hlo.txt",
+        "scale_step_adam.hlo.txt",
+        "scale_step_sgd.hlo.txt",
+        "eval_step.hlo.txt",
+        "predict_step.hlo.txt",
+        "manifest.json",
+        "manifest.tsv",
+        "init.bin",
+    ]
+    for f in expected:
+        assert os.path.exists(os.path.join(out, f)), f
+    assert man["param_count"] > 0
+    assert man["scale_count"] > 0
+    # manifest.tsv tensor lines match the spec count
+    tsv = open(os.path.join(out, "manifest.tsv")).read()
+    n_tensor_lines = sum(1 for l in tsv.splitlines() if l.startswith("tensor\t"))
+    assert n_tensor_lines == len(man["tensors"])
+    # bundle order matches manifest order
+    bundle = read_bundle(os.path.join(out, "init.bin"))
+    assert [n for n, _ in bundle] == [t["name"] for t in man["tensors"]]
+
+
+def test_wire_signature_counts(tmp_path):
+    """Input/output arity of the lowered train step must match the rust
+    marshalling convention: n + 2g + 4 inputs, n + 2g + 3 outputs."""
+    out = str(tmp_path / "tiny2")
+    man = lower_variant("tiny_cnn", out, batch=2, kwargs=dict(classes=10, hw=16), quiet=True)
+    n = len(man["tensors"])
+    g = len(man["groups"]["weight"])
+    text = open(os.path.join(out, "train_step.hlo.txt")).read()
+    header = text.splitlines()[0]
+    assert "entry_computation_layout={(" in header
+    sig = header.split("entry_computation_layout={(")[1]
+    inputs, outputs = sig.split(")->")
+    n_in = inputs.count("f32[")
+    n_out = outputs.count("f32[")
+    assert n_in == n + 2 * g + 4, f"{n_in} != {n + 2*g + 4}"
+    assert n_out == n + 2 * g + 3, f"{n_out} != {n + 2*g + 3}"
+
+
+def test_scale_groups_are_disjoint():
+    model = zoo.build("tiny_cnn")
+    groups = {}
+    for sp in model.specs:
+        groups.setdefault(sp.group, []).append(sp.name)
+    all_names = [sp.name for sp in model.specs]
+    covered = sum(len(v) for v in groups.values())
+    assert covered == len(all_names)

@@ -1,0 +1,145 @@
+"""Kernel vs ref allclose -- the CORE correctness signal for L1.
+
+hypothesis sweeps shapes; every property asserts the Pallas kernel
+against the pure-jnp oracle in compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_matmul, pallas_scaled_matmul, scaled_matmul
+from compile.kernels.ref import (
+    matmul_ref,
+    scaled_matmul_grads_ref,
+    scaled_matmul_ref,
+)
+
+DIMS = st.integers(min_value=1, max_value=200)
+SMALL = st.integers(min_value=1, max_value=48)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _tol(k):
+    # f32 dot accumulation error grows with the contraction length.
+    return dict(rtol=1e-4, atol=1e-4 * max(1.0, k / 16.0))
+
+
+@pytest.mark.parametrize("schedule", ["mxu", "single"])
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_pallas_matmul_matches_ref(schedule, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        pallas_matmul(a, b, schedule=schedule), matmul_ref(a, b), **_tol(k)
+    )
+
+
+@pytest.mark.parametrize("schedule", ["mxu", "single"])
+@settings(max_examples=20, deadline=None)
+@given(b=DIMS, k=DIMS, m=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_pallas_scaled_matmul_matches_ref(schedule, b, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w, s = _rand(rng, b, k), _rand(rng, m, k), _rand(rng, m)
+    np.testing.assert_allclose(
+        pallas_scaled_matmul(x, w.T, s, schedule=schedule),
+        scaled_matmul_ref(x, w, s),
+        **_tol(k),
+    )
+
+
+def test_schedules_agree_bitwise_vs_ref_tolerance():
+    """MXU-tiled and single-block schedules compute the same function."""
+    rng = np.random.default_rng(0)
+    x, w, s = _rand(rng, 150, 70), _rand(rng, 90, 70), _rand(rng, 90)
+    a = pallas_scaled_matmul(x, w.T, s, schedule="mxu")
+    b = pallas_scaled_matmul(x, w.T, s, schedule="single")
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=DIMS, k=DIMS, m=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_scaled_matmul_matches_ref(b, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w, s = _rand(rng, b, k), _rand(rng, m, k), _rand(rng, m)
+    np.testing.assert_allclose(
+        scaled_matmul(x, w, s), scaled_matmul_ref(x, w, s), **_tol(k)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=SMALL, k=SMALL, m=SMALL, seed=st.integers(0, 2**31 - 1))
+def test_scaled_matmul_custom_vjp_matches_analytic(b, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w, s = _rand(rng, b, k), _rand(rng, m, k), _rand(rng, m)
+    g = _rand(rng, b, m)
+    out, vjp = jax.vjp(scaled_matmul, x, w, s)
+    dx, dw, ds = vjp(g)
+    rdx, rdw, rds = scaled_matmul_grads_ref(x, w, s, g)
+    np.testing.assert_allclose(dx, rdx, **_tol(m))
+    np.testing.assert_allclose(dw, rdw, **_tol(b))
+    np.testing.assert_allclose(ds, rds, **_tol(b * k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=SMALL, k=SMALL, m=SMALL, seed=st.integers(0, 2**31 - 1))
+def test_scaled_matmul_vjp_matches_jax_autodiff_of_ref(b, k, m, seed):
+    """custom_vjp must agree with jax's own autodiff of the oracle."""
+    rng = np.random.default_rng(seed)
+    x, w, s = _rand(rng, b, k), _rand(rng, m, k), _rand(rng, m)
+
+    def f_kernel(x, w, s):
+        return jnp.sum(jnp.sin(scaled_matmul(x, w, s)))
+
+    def f_ref(x, w, s):
+        return jnp.sum(jnp.sin(scaled_matmul_ref(x, w, s)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, s)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, s)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-3)
+
+
+def test_scale_of_ones_is_plain_matmul():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 17, 33), _rand(rng, 9, 33)
+    s = jnp.ones((9,), jnp.float32)
+    np.testing.assert_allclose(
+        scaled_matmul(x, w, s), pallas_matmul(x, w.T), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_zero_scale_zeroes_output_column():
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 8, 16), _rand(rng, 4, 16)
+    s = jnp.array([1.0, 0.0, 2.0, 0.0], jnp.float32)
+    out = np.asarray(scaled_matmul(x, w, s))
+    assert np.all(out[:, 1] == 0.0) and np.all(out[:, 3] == 0.0)
+
+
+def test_tile_boundary_shapes():
+    """Exact multiples of the 128 tile and off-by-one both work."""
+    rng = np.random.default_rng(2)
+    for b, k, m in [(128, 128, 128), (129, 127, 128), (256, 64, 130), (1, 1, 1)]:
+        x, w, s = _rand(rng, b, k), _rand(rng, m, k), _rand(rng, m)
+        np.testing.assert_allclose(
+            scaled_matmul(x, w, s), scaled_matmul_ref(x, w, s), **_tol(k)
+        )
+
+
+def test_jit_of_grad_composes():
+    rng = np.random.default_rng(3)
+    x, w, s = _rand(rng, 12, 20), _rand(rng, 7, 20), _rand(rng, 7)
+
+    @jax.jit
+    def loss(x, w, s):
+        return jnp.mean(scaled_matmul(x, w, s) ** 2)
+
+    g = jax.jit(jax.grad(loss, argnums=(1, 2)))(x, w, s)
+    assert all(np.isfinite(np.asarray(t)).all() for t in g)

@@ -1,0 +1,217 @@
+"""L2 model zoo tests: shapes, manifests, group semantics, learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import zoo
+from compile.steps import (
+    group_indices,
+    init_opt_state,
+    make_eval_step,
+    make_step,
+    softmax_xent,
+)
+
+ALL_VARIANTS = sorted(zoo.REGISTRY)
+
+
+def _batch(model, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    h, w, c = model.input_shape
+    x = jnp.asarray(rng.normal(size=(n, h, w, c)), jnp.float32)
+    labels = rng.integers(0, model.classes, size=n)
+    y = jnp.asarray(np.eye(model.classes)[labels], jnp.float32)
+    return x, y
+
+
+def _params(model):
+    return [jnp.asarray(model.values[sp.name]) for sp in model.specs]
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_forward_shapes(name):
+    model = zoo.build(name)
+    x, _ = _batch(model)
+    vals = {sp.name: jnp.asarray(model.values[sp.name]) for sp in model.specs}
+    state = {}
+    logits = model.apply(vals, x, train=True, new_state=state)
+    assert logits.shape == (4, model.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+    # every BN layer reported updated running stats (steps.py persists only
+    # the group=="state" subset; frozen layers' entries are ignored there)
+    n_bn = sum(1 for sp in model.specs if sp.kind == "bn_mean")
+    assert len(state) == 2 * n_bn
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_manifest_structure(name):
+    model = zoo.build(name)
+    names = [sp.name for sp in model.specs]
+    assert len(names) == len(set(names)), "duplicate tensor names"
+    groups = {sp.group for sp in model.specs}
+    assert groups <= {"weight", "scale", "state", "frozen"}
+    for sp in model.specs:
+        if sp.kind == "scale":
+            assert sp.scale_for in names
+            widx = names.index(sp.scale_for)
+            # scale length == number of filter rows it scales
+            assert sp.shape[0] == model.specs[widx].shape[0]
+        if sp.kind in ("conv_w", "dense_w", "dw_conv_w"):
+            assert len(sp.shape) == 2, "row layout required"
+            assert sp.out_ch == sp.shape[0]
+        # initial scale values are exactly 1 (Algorithm 1 init)
+        if sp.kind == "scale":
+            assert np.all(model.values[sp.name] == 1.0)
+
+
+def test_vgg11_matches_paper_table1():
+    """Paper Table 1: VGG11_CIFAR10 has 0.8M params and 1,002 extra
+    scaling parameters."""
+    model = zoo.build("vgg11_thin")
+    total = sum(int(np.prod(sp.shape)) for sp in model.specs)
+    scales = sum(
+        int(np.prod(sp.shape)) for sp in model.specs if sp.group == "scale"
+    )
+    assert scales == 1002
+    assert 0.7e6 < total < 1.0e6
+
+
+def test_partial_variant_freezes_features():
+    full = zoo.build("vgg16_head")
+    part = zoo.build("vgg16_partial")
+    # same tensor set, different groups
+    assert [sp.name for sp in full.specs] == [sp.name for sp in part.specs]
+    fw = {sp.name for sp in part.specs if sp.group in ("weight", "scale", "state")}
+    assert all(not n.startswith("conv") for n in fw)
+    # paper: only a couple hundred scale factors in the partial head
+    n_scales = sum(
+        int(np.prod(sp.shape)) for sp in part.specs if sp.group == "scale"
+    )
+    assert 0 < n_scales < 300
+
+
+def test_mobilenet_scale_placements():
+    proj = zoo.build("mobilenet_tiny")
+    full = zoo.build("mobilenet_tiny_full")
+    n_proj = sum(1 for sp in proj.specs if sp.kind == "scale")
+    n_full = sum(1 for sp in full.specs if sp.kind == "scale")
+    assert n_full > n_proj
+    proj_layers = {sp.layer for sp in proj.specs if sp.kind == "scale"}
+    assert all(".project" in l or l == "fc" for l in proj_layers)
+
+
+def test_train_step_freezes_scales_and_updates_weights():
+    model = zoo.build("tiny_cnn")
+    step = make_step(model, group="weight", opt="adam", train_bn=True)
+    params = _params(model)
+    g = step.group_size
+    ms = [jnp.zeros(model.specs[i].shape) for i in step.group_indices]
+    vs = [jnp.zeros(model.specs[i].shape) for i in step.group_indices]
+    x, y = _batch(model, n=8)
+    out = step(params, ms, vs, jnp.float32(0.0), jnp.float32(1e-2), x, y)
+    n = len(params)
+    new_params = out[:n]
+    scale_idx = group_indices(model.specs, "scale")
+    for i in scale_idx:
+        np.testing.assert_array_equal(np.asarray(new_params[i]), np.asarray(params[i]))
+    widx = group_indices(model.specs, "weight")
+    changed = sum(
+        not np.array_equal(np.asarray(new_params[i]), np.asarray(params[i]))
+        for i in widx
+    )
+    assert changed > 0
+    t_out, loss, correct = out[-3], out[-2], out[-1]
+    assert float(t_out) == 1.0
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= 8
+
+
+def test_scale_step_freezes_weights_and_bn_state():
+    model = zoo.build("tiny_cnn")
+    step = make_step(model, group="scale", opt="adam", train_bn=False)
+    params = _params(model)
+    ms = [jnp.zeros(model.specs[i].shape) for i in step.group_indices]
+    vs = [jnp.zeros(model.specs[i].shape) for i in step.group_indices]
+    x, y = _batch(model, n=8)
+    out = step(params, ms, vs, jnp.float32(0.0), jnp.float32(1e-1), x, y)
+    n = len(params)
+    new_params = out[:n]
+    for i in group_indices(model.specs, "weight") + group_indices(
+        model.specs, "state"
+    ):
+        np.testing.assert_array_equal(np.asarray(new_params[i]), np.asarray(params[i]))
+    changed = sum(
+        not np.array_equal(np.asarray(new_params[i]), np.asarray(params[i]))
+        for i in group_indices(model.specs, "scale")
+    )
+    assert changed > 0
+
+
+@pytest.mark.parametrize("opt", ["adam", "sgd"])
+def test_training_reduces_loss(opt):
+    model = zoo.build("tiny_cnn")
+    step = jax.jit(make_step(model, group="weight", opt=opt, train_bn=True))
+    params = _params(model)
+    gi = group_indices(model.specs, "weight")
+    ms = [jnp.zeros(model.specs[i].shape) for i in gi]
+    vs = [jnp.zeros(model.specs[i].shape) for i in gi]
+    x, y = _batch(model, n=16, seed=7)
+    t = jnp.float32(0.0)
+    lr = jnp.float32(5e-3 if opt == "adam" else 5e-2)
+    losses = []
+    n = len(params)
+    g = len(ms)
+    for _ in range(30):
+        out = step(params, ms, vs, t, lr, x, y)
+        params = list(out[:n])
+        ms, vs = list(out[n : n + g]), list(out[n + g : n + 2 * g])
+        t = out[n + 2 * g]
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_scale_training_can_reduce_loss():
+    """Macro-training: optimizing only S moves the loss (paper Sec. 4)."""
+    model = zoo.build("tiny_cnn")
+    step = jax.jit(make_step(model, group="scale", opt="adam", train_bn=False))
+    params = _params(model)
+    gi = group_indices(model.specs, "scale")
+    ms = [jnp.zeros(model.specs[i].shape) for i in gi]
+    vs = [jnp.zeros(model.specs[i].shape) for i in gi]
+    x, y = _batch(model, n=16, seed=3)
+    t = jnp.float32(0.0)
+    n, g = len(params), len(ms)
+    losses = []
+    for _ in range(20):
+        out = step(params, ms, vs, t, jnp.float32(5e-2), x, y)
+        params = list(out[:n])
+        ms, vs = list(out[n : n + g]), list(out[n + g : n + 2 * g])
+        t = out[n + 2 * g]
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_eval_step_deterministic():
+    model = zoo.build("tiny_cnn")
+    ev = jax.jit(make_eval_step(model))
+    params = _params(model)
+    x, y = _batch(model, n=8)
+    l1, c1 = ev(params, x, y)
+    l2, c2 = ev(params, x, y)
+    assert float(l1) == float(l2) and float(c1) == float(c2)
+
+
+def test_unit_scales_are_identity():
+    """S=1 must not change the computational graph output (Appendix A)."""
+    model = zoo.build("tiny_cnn")
+    vals = {sp.name: jnp.asarray(model.values[sp.name]) for sp in model.specs}
+    x, _ = _batch(model)
+    base = model.apply(dict(vals), x, train=False, new_state={})
+    doubled = dict(vals)
+    for sp in model.specs:
+        if sp.kind == "scale":
+            doubled[sp.name] = vals[sp.name] * 2.0
+    out2 = model.apply(doubled, x, train=False, new_state={})
+    assert not np.allclose(np.asarray(base), np.asarray(out2))

@@ -1,0 +1,122 @@
+"""Unit tests for step-function pieces: loss, metrics, optimizers, and
+layer-level identities (scale folding)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile.steps import (
+    ADAM_B1,
+    ADAM_B2,
+    ADAM_EPS,
+    SGD_MOMENTUM,
+    _adam,
+    _sgd,
+    count_correct,
+    softmax_xent,
+)
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.array([[2.0, 1.0, 0.0], [0.0, 0.0, 0.0]], jnp.float32)
+    y = jnp.array([[1, 0, 0], [0, 0, 1]], jnp.float32)
+    got = float(softmax_xent(logits, y))
+    p = np.exp(np.asarray(logits))
+    p /= p.sum(-1, keepdims=True)
+    want = -(np.log(p[0, 0]) + np.log(p[1, 2])) / 2
+    assert abs(got - want) < 1e-6
+
+
+def test_count_correct():
+    logits = jnp.array([[0.1, 0.9], [0.8, 0.2], [0.3, 0.7]], jnp.float32)
+    y = jnp.array([[0, 1], [0, 1], [0, 1]], jnp.float32)
+    assert float(count_correct(logits, y)) == 2.0
+
+
+def test_adam_single_step_reference():
+    p = jnp.float32(1.0)
+    g = jnp.float32(0.5)
+    m = jnp.float32(0.0)
+    v = jnp.float32(0.0)
+    p1, m1, v1 = _adam(p, g, m, v, jnp.float32(1.0), jnp.float32(0.1))
+    m_ref = (1 - ADAM_B1) * 0.5
+    v_ref = (1 - ADAM_B2) * 0.25
+    mhat = m_ref / (1 - ADAM_B1)
+    vhat = v_ref / (1 - ADAM_B2)
+    p_ref = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + ADAM_EPS)
+    assert abs(float(p1) - p_ref) < 1e-6
+    assert abs(float(m1) - m_ref) < 1e-9
+    assert abs(float(v1) - v_ref) < 1e-9
+
+
+def test_sgd_momentum_accumulates():
+    p, m, v = jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)
+    g = jnp.float32(1.0)
+    lr = jnp.float32(0.1)
+    p, m, v = _sgd(p, g, m, v, jnp.float32(1.0), lr)
+    assert abs(float(p) + 0.1) < 1e-7
+    p, m, v = _sgd(p, g, m, v, jnp.float32(2.0), lr)
+    # m = 0.9*1 + 1 = 1.9 → p = -0.1 - 0.19
+    assert abs(float(m) - (SGD_MOMENTUM + 1.0)) < 1e-6
+    assert abs(float(p) + 0.29) < 1e-6
+
+
+def test_dwconv_scale_folding_equals_output_scaling():
+    """Folding s into the depthwise kernel == scaling the output channel
+    (Eq. 4 for 1-channel filters)."""
+    rng = np.random.default_rng(0)
+    c, k = 4, 3
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, c)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(c, k * k)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(c,)), jnp.float32)
+    vals = {"dw.w": w, "dw.s": s}
+    folded = L.dwconv2d(vals, "dw", x, k=k)
+    vals_nos = {"dw.w": w}
+    unscaled = L.dwconv2d(vals_nos, "dw", x, k=k)
+    np.testing.assert_allclose(
+        np.asarray(folded), np.asarray(unscaled * s), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_conv2d_matches_lax_conv():
+    """The im2col + Pallas path must equal a direct lax convolution."""
+    from jax import lax
+
+    rng = np.random.default_rng(1)
+    cin, cout, k = 3, 5, 3
+    x = jnp.asarray(rng.normal(size=(2, 6, 6, cin)), jnp.float32)
+    w_rows = jnp.asarray(rng.normal(size=(cout, cin * k * k)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(cout,)), jnp.float32)
+    vals = {"c.w": w_rows, "c.s": s}
+    ours = L.conv2d(vals, "c", x, k=k)
+    kern = jnp.transpose(w_rows.reshape(cout, cin, k, k), (2, 3, 1, 0))
+    ref = (
+        lax.conv_general_dilated(
+            x, kern, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        * s
+    )
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_batchnorm_train_vs_eval():
+    rng = np.random.default_rng(2)
+    c = 4
+    x = jnp.asarray(rng.normal(loc=2.0, size=(8, 5, 5, c)), jnp.float32)
+    vals = {
+        "bn.gamma": jnp.ones(c),
+        "bn.beta": jnp.zeros(c),
+        "bn.mean": jnp.zeros(c),
+        "bn.var": jnp.ones(c),
+    }
+    state = {}
+    out_train = L.batchnorm(vals, "bn", x, train=True, new_state=state)
+    # train mode: normalized to ~zero mean
+    assert abs(float(jnp.mean(out_train))) < 1e-4
+    # running stats moved toward the batch stats
+    assert float(jnp.mean(state["bn.mean"])) > 0.1
+    out_eval = L.batchnorm(vals, "bn", x, train=False, new_state={})
+    # eval mode uses the (zero/one) running stats → mean stays ~2
+    assert abs(float(jnp.mean(out_eval)) - 2.0) < 0.1

@@ -1,0 +1,49 @@
+//! End-to-end FL round latency per protocol (the Table 2 execution path):
+//! local epoch + sparsify + quantize + encode + decode + aggregate +
+//! broadcast + central eval, on tiny_cnn.
+
+use std::time::Instant;
+
+use fsfl::data::TaskKind;
+use fsfl::fl::{Experiment, ExperimentConfig, Protocol};
+use fsfl::metrics::fmt_bytes;
+use fsfl::runtime::Runtime;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    println!("fl_round bench: tiny_cnn, 2 clients, 64 train samples each\n");
+    println!(
+        "{:<20} {:>10} {:>12} {:>12} {:>12}",
+        "protocol", "rounds/s", "ms/round", "up B/round", "train share"
+    );
+    for protocol in Protocol::ALL {
+        let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, protocol);
+        cfg.artifacts_root = artifacts_root();
+        cfg.rounds = 6;
+        cfg.train_per_client = 64;
+        cfg.val_per_client = 16;
+        cfg.test_samples = 32;
+        cfg.scale_epochs = 1;
+        let mut exp = Experiment::build(&rt, cfg).unwrap();
+        let t0 = Instant::now();
+        let log = exp.run().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let rounds = log.rounds.len() as f64;
+        let train_ms: u128 = log.rounds.iter().map(|r| r.train_ms + r.scale_ms).sum();
+        let up: usize = log.rounds.iter().map(|r| r.up_bytes).sum();
+        println!(
+            "{:<20} {:>10.2} {:>12.1} {:>12} {:>11.0}%",
+            protocol.name(),
+            rounds / secs,
+            secs * 1000.0 / rounds,
+            fmt_bytes(up / log.rounds.len()),
+            train_ms as f64 / (secs * 1000.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! L1 kernel bench at the HLO level: the Pallas scaled matmul (both
+//! schedules) vs the pure-XLA dot reference, executed through the same
+//! PJRT 0.5.1 backend the production runtime uses. This isolates the
+//! interpret-mode overhead from model-level effects.
+//!
+//! Shape: 2048x1152x128 (VGG11 conv3-like im2col matmul).
+
+use std::time::Duration;
+
+use fsfl::benchkit::bench_auto;
+use fsfl::data::XorShiftRng;
+use fsfl::runtime::Runtime;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let dir = artifacts_root().join("_kernelbench");
+    let shape = std::fs::read_to_string(dir.join("shape.tsv")).expect("make artifacts first");
+    let dims: Vec<usize> = shape
+        .split_whitespace()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let (b, k, m) = (dims[0], dims[1], dims[2]);
+    let flops = 2.0 * b as f64 * k as f64 * m as f64;
+    println!("kernel_hlo bench: [{b},{k}] @ [{k},{m}] * s  ({:.2} GFLOP)\n", flops / 1e9);
+
+    let mut rng = XorShiftRng::new(1);
+    let x: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+    let s: Vec<f32> = (0..m).map(|_| 1.0 + rng.next_f32()).collect();
+    let xl = xla::Literal::vec1(&x).reshape(&[b as i64, k as i64]).unwrap();
+    let wl = xla::Literal::vec1(&w).reshape(&[k as i64, m as i64]).unwrap();
+    let sl = xla::Literal::vec1(&s);
+
+    let mut reference: Option<Vec<f32>> = None;
+    for file in [
+        "matmul_xla_ref.hlo.txt",
+        "scaled_matmul_single.hlo.txt",
+        "scaled_matmul_mxu.hlo.txt",
+    ] {
+        let path = dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt.client().compile(&comp).unwrap();
+        // correctness cross-check against the XLA reference
+        let out = exe.execute(&[&xl, &wl, &sl]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                let max_err = r
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_err < 1e-2, "{file}: max err {max_err}");
+            }
+        }
+        let r = bench_auto(file, Duration::from_secs(3), || {
+            exe.execute(&[&xl, &wl, &sl]).unwrap()
+        });
+        r.print_throughput(flops / 1e9, "GFLOP");
+    }
+}

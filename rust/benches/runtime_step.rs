@@ -1,0 +1,66 @@
+//! PJRT step latency (L2/L3 boundary): train / scale / eval / predict
+//! per-call wall-clock incl. literal marshalling, per model variant.
+//!
+//! Run after `make artifacts`. Skips variants without artifacts.
+
+use std::time::Duration;
+
+use fsfl::benchkit::bench_auto;
+use fsfl::data::{batches, Dataset, TaskKind, TaskSpec};
+use fsfl::model::Group;
+use fsfl::runtime::{ModelRuntime, Optimizer, Runtime};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    for variant in ["tiny_cnn", "vgg11_thin", "resnet8", "mobilenet_tiny"] {
+        let dir = artifacts_root().join(variant);
+        if !dir.exists() {
+            eprintln!("skip {variant}: no artifacts");
+            continue;
+        }
+        let mr = ModelRuntime::open(&rt, artifacts_root(), variant).unwrap();
+        let man = mr.manifest.clone();
+        let task = match man.classes {
+            2 => TaskKind::XrayLike,
+            20 => TaskKind::VocLike,
+            _ => TaskKind::CifarLike,
+        };
+        let spec = TaskSpec::new(task, man.input[0], man.input[2], 7);
+        let ds = Dataset::generate(&spec, man.batch, 0);
+        let order: Vec<usize> = (0..ds.len()).collect();
+        let b = batches(&ds, &order, man.batch).remove(0);
+        let mut params = mr.init_params().unwrap();
+        let mut wopt = mr.opt_state(Group::Weight);
+        let mut sopt = mr.opt_state(Group::Scale);
+
+        println!(
+            "\n== {variant}: {} params, batch {} ==",
+            man.param_count, man.batch
+        );
+        bench_auto("train_step (adam)", Duration::from_secs(3), || {
+            mr.train_step(&mut params, &mut wopt, Optimizer::Adam, 1e-3, &b.x, &b.y)
+                .unwrap()
+        })
+        .print();
+        bench_auto("scale_step (adam)", Duration::from_secs(3), || {
+            mr.scale_step(&mut params, &mut sopt, Optimizer::Adam, 1e-2, &b.x, &b.y)
+                .unwrap()
+        })
+        .print();
+        bench_auto("eval_step", Duration::from_secs(2), || {
+            mr.eval_step(&params, &b.x, &b.y).unwrap()
+        })
+        .print();
+        bench_auto("predict_step", Duration::from_secs(2), || {
+            mr.predict_step(&params, &b.x).unwrap()
+        })
+        .print();
+        println!("total executions: {}", mr.exec_calls.borrow());
+    }
+}

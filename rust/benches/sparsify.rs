@@ -1,0 +1,53 @@
+//! Sparsification kernels (Eq. 2, Eq. 3, top-k) on update-sized tensors.
+
+use std::time::Duration;
+
+use fsfl::benchkit::bench_auto;
+use fsfl::compression::sparsify::{
+    apply_structured, apply_topk, apply_unstructured, structured_threshold,
+    unstructured_threshold,
+};
+use fsfl::data::XorShiftRng;
+
+fn main() {
+    let n = 1 << 20; // 1M elements ≈ vgg11_thin update
+    let rows = 1024;
+    let row_len = n / rows;
+    let mut rng = XorShiftRng::new(1);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+    let mb = (n * 4) as f64 / 1e6;
+    println!("sparsify bench: {n} elements ({mb:.1} MB)\n");
+
+    bench_auto("eq2 threshold (mean/std pass)", Duration::from_secs(2), || {
+        unstructured_threshold(&base, 1.0, 4.88e-4)
+    })
+    .print_throughput(mb, "MB");
+
+    let theta = unstructured_threshold(&base, 1.0, 4.88e-4);
+    bench_auto("eq2 apply (zeroing pass)", Duration::from_secs(2), || {
+        let mut t = base.clone();
+        apply_unstructured(&mut t, theta)
+    })
+    .print_throughput(mb, "MB");
+
+    bench_auto("eq3 threshold (row means)", Duration::from_secs(2), || {
+        structured_threshold(&base, rows, row_len, 1.0)
+    })
+    .print_throughput(mb, "MB");
+
+    let ts = structured_threshold(&base, rows, row_len, 1.0);
+    bench_auto("eq3 apply (row zeroing)", Duration::from_secs(2), || {
+        let mut t = base.clone();
+        apply_structured(&mut t, rows, row_len, ts)
+    })
+    .print_throughput(mb, "MB");
+
+    bench_auto("topk 96% (select_nth)", Duration::from_secs(2), || {
+        let mut t = base.clone();
+        apply_topk(&mut t, 0.96)
+    })
+    .print_throughput(mb, "MB");
+
+    bench_auto("clone only (baseline)", Duration::from_secs(2), || base.clone())
+        .print_throughput(mb, "MB");
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmark harness (the offline registry has no criterion).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! min/median/mean and derived throughput. Used by `rust/benches/*` via
+//! `cargo bench` (harness = false targets).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>6} iters  min {:>12?}  median {:>12?}  mean {:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        );
+    }
+
+    /// Print with a throughput figure (bytes or elements per iteration).
+    pub fn print_throughput(&self, units_per_iter: f64, unit: &str) {
+        let per_sec = units_per_iter / self.median.as_secs_f64();
+        println!(
+            "{:<44} {:>6} iters  median {:>12?}  {:>10.2} {unit}/s",
+            self.name, self.iters, self.median, per_sec
+        );
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[iters / 2],
+        mean,
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the whole
+/// measurement takes roughly `budget`.
+pub fn bench_auto<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> BenchResult {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
+    bench(name, iters.min(10) / 3 + 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal flag parser (the offline registry has no clap).
+//!
+//! Supports `--key value`, `--key=value` and boolean `--flag` arguments,
+//! with typed getters and an unknown-flag check.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Flags {
+    values: BTreeMap<String, String>,
+    /// Flags the command actually read (for unknown-flag diagnostics).
+    known: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Flags {
+    /// Parse `args` (without the program/subcommand names). Boolean flags
+    /// are stored as "true".
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(anyhow!("unexpected positional argument {a:?}"));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                values.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                values.insert(stripped.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                values.insert(stripped.to_string(), "true".to_string());
+            }
+            i += 1;
+        }
+        Ok(Self {
+            values,
+            known: Default::default(),
+        })
+    }
+
+    fn mark(&self, key: &str) {
+        self.known.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.values.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.values.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list.
+    pub fn list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse::<T>().map_err(|e| anyhow!("--{key} {s:?}: {e}")))
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    /// Error out on flags no getter ever consulted (catches typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for k in self.values.keys() {
+            if !known.contains(k) {
+                return Err(anyhow!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_bools() {
+        let f = Flags::parse(&args(&["--a", "1", "--b=x", "--c", "--d", "2.5"])).unwrap();
+        assert_eq!(f.get_or::<i64>("a", 0).unwrap(), 1);
+        assert_eq!(f.str_or("b", ""), "x");
+        assert!(f.flag("c"));
+        assert_eq!(f.get_or::<f64>("d", 0.0).unwrap(), 2.5);
+        f.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let f = Flags::parse(&args(&["--known", "1", "--typo", "2"])).unwrap();
+        let _ = f.get_or::<i64>("known", 0).unwrap();
+        assert!(f.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let f = Flags::parse(&args(&["--clients", "2,4,8"])).unwrap();
+        assert_eq!(f.list::<usize>("clients").unwrap().unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Flags::parse(&args(&["oops"])).is_err());
+    }
+
+    #[test]
+    fn trailing_bool() {
+        let f = Flags::parse(&args(&["--x", "--y"])).unwrap();
+        assert!(f.flag("x") && f.flag("y"));
+    }
+}

@@ -1,0 +1,269 @@
+//! Whole-update encode/decode: a [`Delta`] → self-contained bitstream.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   b"FSDU"
+//! u8      version (1)
+//! u32     tensor entry count
+//! entries u16 manifest index | f32 quantization step
+//! u32     payload byte length
+//! payload arithmetic-coded levels, tensors in entry order:
+//!           row-structured: per row -> row_skip flag, then levels
+//!           flat:           one "row" of levels
+//! ```
+//!
+//! Encoding quantizes with each tensor's step; the function returns both
+//! the bitstream and the **dequantized** update Δ̂ (what the decoder will
+//! reconstruct) so the client can keep its local state consistent with
+//! the server (Algorithm 1 line 11) and compute residuals (Eq. 5).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Manifest, TensorSpec};
+use crate::model::ParamSet;
+
+use super::context::{decode_level, encode_level, LevelContexts, SigCtx};
+use super::engine::{Decoder, Encoder};
+use crate::compression::quantize::{dequantize, quantize};
+use crate::model::params::Delta;
+
+const MAGIC: &[u8; 4] = b"FSDU";
+const VERSION: u8 = 1;
+const FLAG_ADAPTIVE: u8 = 1;
+
+/// Maps a tensor spec to its quantization step size.
+pub type StepFn<'a> = &'a dyn Fn(&TensorSpec) -> f32;
+
+/// Size/occupancy statistics of one encoded update.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EncodeStats {
+    pub bytes: usize,
+    pub nonzero: usize,
+    pub total: usize,
+    pub rows_skipped: usize,
+    pub rows_total: usize,
+}
+
+impl EncodeStats {
+    pub fn sparsity(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            1.0 - self.nonzero as f64 / self.total as f64
+        }
+    }
+}
+
+fn sig_ctx(prev: Option<bool>) -> SigCtx {
+    match prev {
+        None => SigCtx::RowStart,
+        Some(false) => SigCtx::PrevZero,
+        Some(true) => SigCtx::PrevNonZero,
+    }
+}
+
+/// Encode the selected tensors of `delta`. Returns `(bitstream, dequantized
+/// update, stats)`; tensors not in `indices` are all-zero in the output
+/// update.
+pub fn encode_update(
+    delta: &Delta,
+    indices: &[usize],
+    step_of: StepFn,
+) -> (Vec<u8>, Delta, EncodeStats) {
+    encode_update_opts(delta, indices, step_of, true)
+}
+
+/// [`encode_update`] with explicit context-adaptation control (the
+/// "context modeling on/off" ablation; see benches/codec.rs).
+pub fn encode_update_opts(
+    delta: &Delta,
+    indices: &[usize],
+    step_of: StepFn,
+    adaptive: bool,
+) -> (Vec<u8>, Delta, EncodeStats) {
+    let manifest = &delta.manifest;
+    let mut header = Vec::with_capacity(16 + indices.len() * 6);
+    header.extend_from_slice(MAGIC);
+    header.push(VERSION);
+    header.push(if adaptive { FLAG_ADAPTIVE } else { 0 });
+    header.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+
+    let mut deq = Delta::zeros(manifest.clone());
+    let mut enc = Encoder::new();
+    let mut stats = EncodeStats::default();
+
+    for &ti in indices {
+        let spec = &manifest.tensors[ti];
+        let step = step_of(spec);
+        assert!(step > 0.0, "{}: non-positive step", spec.name);
+        header.extend_from_slice(&(ti as u16).to_le_bytes());
+        header.extend_from_slice(&step.to_le_bytes());
+
+        let data = &delta.tensors[ti];
+        let out = &mut deq.tensors[ti];
+        let (rows, row_len) = spec.rows().unwrap_or((1, data.len()));
+        let mut cx = if adaptive {
+            LevelContexts::default()
+        } else {
+            LevelContexts::frozen()
+        };
+        for r in 0..rows {
+            let row = &data[r * row_len..(r + 1) * row_len];
+            let levels: Vec<i32> = row.iter().map(|&x| quantize(x, step)).collect();
+            stats.total += row_len;
+            if spec.rows().is_some() {
+                stats.rows_total += 1;
+                let skip = levels.iter().all(|&q| q == 0);
+                enc.encode_bit(&mut cx.row_skip, skip as u8);
+                if skip {
+                    stats.rows_skipped += 1;
+                    continue;
+                }
+            }
+            let mut prev = None;
+            for (c, &q) in levels.iter().enumerate() {
+                encode_level(&mut enc, &mut cx, sig_ctx(prev), q);
+                prev = Some(q != 0);
+                if q != 0 {
+                    stats.nonzero += 1;
+                    out[r * row_len + c] = dequantize(q, step);
+                }
+            }
+        }
+    }
+
+    let payload = enc.finish();
+    header.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    header.extend_from_slice(&payload);
+    stats.bytes = header.len();
+    (header, deq, stats)
+}
+
+/// Decode a bitstream produced by [`encode_update`].
+pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            return Err(anyhow!("truncated update stream at {pos}"));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        return Err(anyhow!("bad update magic"));
+    }
+    if take(&mut pos, 1)?[0] != VERSION {
+        return Err(anyhow!("unsupported update version"));
+    }
+    let adaptive = take(&mut pos, 1)?[0] & FLAG_ADAPTIVE != 0;
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ti = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let step = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if ti >= manifest.tensors.len() {
+            return Err(anyhow!("tensor index {ti} out of range"));
+        }
+        entries.push((ti, step));
+    }
+    let plen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let payload = take(&mut pos, plen)?;
+
+    let mut dec = Decoder::new(payload);
+    let mut delta = Delta::zeros(manifest.clone());
+    for (ti, step) in entries {
+        let spec = &manifest.tensors[ti];
+        let numel = spec.numel();
+        let (rows, row_len) = spec.rows().unwrap_or((1, numel));
+        let out = &mut delta.tensors[ti];
+        let mut cx = if adaptive {
+            LevelContexts::default()
+        } else {
+            LevelContexts::frozen()
+        };
+        for r in 0..rows {
+            if spec.rows().is_some() && dec.decode_bit(&mut cx.row_skip) == 1 {
+                continue;
+            }
+            let mut prev = None;
+            for c in 0..row_len {
+                let q = decode_level(&mut dec, &mut cx, sig_ctx(prev));
+                prev = Some(q != 0);
+                if q != 0 {
+                    out[r * row_len + c] = dequantize(q, step);
+                }
+            }
+        }
+    }
+    Ok(delta)
+}
+
+/// Bytes an *uncompressed* f32 transmission of these tensors would take
+/// (the paper's plain-FedAvg accounting in Table 2).
+pub fn raw_bytes(params: &ParamSet, indices: &[usize]) -> usize {
+    indices
+        .iter()
+        .map(|&i| params.manifest.tensors[i].numel() * 4)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::manifest_conv_dense;
+
+    #[test]
+    fn roundtrip_mixed_tensors() {
+        let m = manifest_conv_dense();
+        let mut d = Delta::zeros(m.clone());
+        // sparse conv rows, one fully zero row
+        for c in 0..9 {
+            d.tensors[0][c] = if c % 3 == 0 { 0.01 * c as f32 } else { 0.0 };
+        }
+        for c in 0..4 {
+            d.tensors[1][c] = -1e-5 * c as f32;
+        }
+        let idx = vec![0usize, 1];
+        let step = |spec: &TensorSpec| if spec.kind.is_fine_quantized() { 2.38e-6 } else { 4.88e-4 };
+        let (bytes, deq, stats) = encode_update(&d, &idx, &step);
+        assert!(stats.bytes > 0);
+        let back = decode_update(&bytes, &m).unwrap();
+        assert_eq!(back, deq);
+        // dequantized values are within step/2 of originals
+        for (t, spec) in deq.tensors.iter().zip(&m.tensors) {
+            let s = step(spec);
+            for (a, b) in t.iter().zip(&d.tensors[spec_index(&m, &spec.name)]) {
+                assert!((a - b).abs() <= s / 2.0 + 1e-9);
+            }
+        }
+    }
+
+    fn spec_index(m: &Arc<Manifest>, name: &str) -> usize {
+        m.index_of(name).unwrap()
+    }
+
+    #[test]
+    fn zero_update_is_tiny() {
+        let m = manifest_conv_dense();
+        let d = Delta::zeros(m.clone());
+        let idx: Vec<usize> = (0..m.tensors.len()).collect();
+        let (bytes, _, stats) = encode_update(&d, &idx, &|_| 1e-3);
+        assert_eq!(stats.nonzero, 0);
+        // all-zero update: header dominates
+        assert!(bytes.len() < 64 + idx.len() * 6, "got {}", bytes.len());
+        let back = decode_update(&bytes, &m).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn truncated_stream_is_error() {
+        let m = manifest_conv_dense();
+        let d = Delta::zeros(m.clone());
+        let (bytes, _, _) = encode_update(&d, &[0], &|_| 1e-3);
+        assert!(decode_update(&bytes[..3], &m).is_err());
+        assert!(decode_update(&bytes[..10], &m).is_err());
+    }
+}

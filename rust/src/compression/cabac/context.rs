@@ -1,0 +1,179 @@
+//! Context model sets for the quantized-level syntax (NNC-flavored).
+//!
+//! Syntax elements per quantized integer level `q`:
+//!   sig_flag   q != 0        — 3 contexts, selected by the significance
+//!                              of the previous element (row start / prev
+//!                              zero / prev nonzero), exploiting run
+//!                              correlation in sparse updates
+//!   sign_flag  q < 0         — 1 context
+//!   gr1_flag   |q| > 1       — 1 context
+//!   gr2_flag   |q| > 2       — 1 context
+//!   remainder  |q| - 3       — Exp-Golomb(0), bypass bits
+//!
+//! Row-structured tensors additionally code one `row_skip` flag per filter
+//! row (1 context): entire-row zero updates — the product of Eq. (3)
+//! structured sparsification and scale-factor suppression — cost ~one bit
+//! (well below after adaptation).
+
+use super::engine::{BitModel, Decoder, Encoder};
+
+#[derive(Debug, Clone, Default)]
+pub struct LevelContexts {
+    pub row_skip: BitModel,
+    pub sig: [BitModel; 3],
+    pub sign: BitModel,
+    pub gr1: BitModel,
+    pub gr2: BitModel,
+}
+
+impl LevelContexts {
+    /// All-frozen contexts: the "DeepCABAC without context adaptation"
+    /// ablation (every syntax bit coded at p=0.5-ish fixed probability).
+    pub fn frozen() -> Self {
+        Self {
+            row_skip: BitModel::frozen(),
+            sig: [BitModel::frozen(); 3],
+            sign: BitModel::frozen(),
+            gr1: BitModel::frozen(),
+            gr2: BitModel::frozen(),
+        }
+    }
+}
+
+/// Significance context selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SigCtx {
+    RowStart,
+    PrevZero,
+    PrevNonZero,
+}
+
+impl SigCtx {
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            SigCtx::RowStart => 0,
+            SigCtx::PrevZero => 1,
+            SigCtx::PrevNonZero => 2,
+        }
+    }
+}
+
+/// Exp-Golomb order-0 value encoding in bypass mode.
+#[inline]
+pub fn encode_expgolomb(enc: &mut Encoder, value: u32) {
+    let v = value + 1;
+    let nbits = 32 - v.leading_zeros(); // floor(log2(v)) + 1
+    // prefix: nbits-1 zeros then a 1; suffix: nbits-1 low bits of v
+    enc.encode_direct(1, nbits);
+    if nbits > 1 {
+        enc.encode_direct(v & ((1 << (nbits - 1)) - 1), nbits - 1);
+    }
+}
+
+#[inline]
+pub fn decode_expgolomb(dec: &mut Decoder) -> u32 {
+    let mut zeros = 0u32;
+    while dec.decode_direct(1) == 0 {
+        zeros += 1;
+        // Corrupt/truncated streams could otherwise drive the prefix
+        // unbounded; clamp so decoding garbage yields garbage values but
+        // never a shift overflow or runaway loop.
+        if zeros >= 31 {
+            break;
+        }
+    }
+    let suffix = if zeros > 0 { dec.decode_direct(zeros) } else { 0 };
+    ((1u32 << zeros) | suffix).saturating_sub(1)
+}
+
+/// Encode one quantized level with the full syntax.
+#[inline]
+pub fn encode_level(enc: &mut Encoder, cx: &mut LevelContexts, sig_ctx: SigCtx, q: i32) {
+    let sig = (q != 0) as u8;
+    enc.encode_bit(&mut cx.sig[sig_ctx.index()], sig);
+    if sig == 0 {
+        return;
+    }
+    enc.encode_bit(&mut cx.sign, (q < 0) as u8);
+    let mag = q.unsigned_abs();
+    let gr1 = (mag > 1) as u8;
+    enc.encode_bit(&mut cx.gr1, gr1);
+    if gr1 == 0 {
+        return;
+    }
+    let gr2 = (mag > 2) as u8;
+    enc.encode_bit(&mut cx.gr2, gr2);
+    if gr2 == 0 {
+        return;
+    }
+    encode_expgolomb(enc, mag - 3);
+}
+
+#[inline]
+pub fn decode_level(dec: &mut Decoder, cx: &mut LevelContexts, sig_ctx: SigCtx) -> i32 {
+    if dec.decode_bit(&mut cx.sig[sig_ctx.index()]) == 0 {
+        return 0;
+    }
+    let neg = dec.decode_bit(&mut cx.sign) == 1;
+    let mut mag = 1u32;
+    if dec.decode_bit(&mut cx.gr1) == 1 {
+        mag = 2;
+        if dec.decode_bit(&mut cx.gr2) == 1 {
+            mag = 3 + decode_expgolomb(dec);
+        }
+    }
+    if neg {
+        -(mag as i32)
+    } else {
+        mag as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expgolomb_roundtrip() {
+        let mut enc = Encoder::new();
+        let vals: Vec<u32> = (0..2000).map(|i| (i * i) % 100_000).collect();
+        for &v in &vals {
+            encode_expgolomb(&mut enc, v);
+        }
+        let bytes = enc.finish();
+        let mut dec = Decoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(decode_expgolomb(&mut dec), v);
+        }
+    }
+
+    #[test]
+    fn level_roundtrip_with_context_chain() {
+        let levels: Vec<i32> = (0..5000i64)
+            .map(|i| {
+                if i % 17 == 0 {
+                    ((i % 29) - 14) as i32
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut enc = Encoder::new();
+        let mut cx = LevelContexts::default();
+        let mut prev = SigCtx::RowStart;
+        for &q in &levels {
+            encode_level(&mut enc, &mut cx, prev, q);
+            prev = if q != 0 { SigCtx::PrevNonZero } else { SigCtx::PrevZero };
+        }
+        let bytes = enc.finish();
+        let mut dec = Decoder::new(&bytes);
+        let mut cx = LevelContexts::default();
+        let mut prev = SigCtx::RowStart;
+        for &q in &levels {
+            let got = decode_level(&mut dec, &mut cx, prev);
+            assert_eq!(got, q);
+            prev = if q != 0 { SigCtx::PrevNonZero } else { SigCtx::PrevZero };
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Adaptive binary arithmetic coding engine.
+//!
+//! DeepCABAC (the NNC standard's entropy stage) is a context-adaptive
+//! binary arithmetic coder; we implement the same principle with the
+//! well-known LZMA-style range coder: 32-bit range, 11-bit adaptive
+//! probability states, byte-wise renormalization with carry propagation,
+//! plus a bypass ("direct bits") mode for equiprobable suffix bits.
+//!
+//! The encoder/decoder pair is exactly inverse: `decode(encode(bits))`
+//! reproduces the bit sequence for any interleaving of context-coded and
+//! bypass bits (property-tested in `rust/tests/integration_compression.rs`).
+
+pub const PROB_BITS: u32 = 11;
+pub const PROB_ONE: u16 = 1 << PROB_BITS; // 2048
+pub const PROB_INIT: u16 = PROB_ONE / 2;
+/// Adaptation rate: higher = slower adaptation. 5 is the LZMA classic.
+pub const MOVE_BITS: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// One adaptive binary probability state ("context model").
+#[derive(Debug, Clone, Copy)]
+pub struct BitModel {
+    /// Probability that the next bit is 0, in [0, 2048).
+    pub p0: u16,
+    /// When false the state never adapts (the "no context modeling"
+    /// ablation: every bit codes at a fixed probability).
+    pub adapt: bool,
+}
+
+impl Default for BitModel {
+    fn default() -> Self {
+        Self {
+            p0: PROB_INIT,
+            adapt: true,
+        }
+    }
+}
+
+impl BitModel {
+    /// Frozen-probability model (ablation benches).
+    pub fn frozen() -> Self {
+        Self {
+            p0: PROB_INIT,
+            adapt: false,
+        }
+    }
+
+    #[inline]
+    fn update(&mut self, bit: u8) {
+        if !self.adapt {
+            return;
+        }
+        if bit == 0 {
+            self.p0 += (PROB_ONE - self.p0) >> MOVE_BITS;
+        } else {
+            self.p0 -= self.p0 >> MOVE_BITS;
+        }
+    }
+}
+
+/// Range encoder over a growable byte buffer.
+pub struct Encoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self {
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            cache_size: 1,
+            out: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if self.low < 0xFF00_0000 || self.low > 0xFFFF_FFFF {
+            let carry = (self.low >> 32) as u8;
+            if self.cache_size != 0 {
+                self.out.push(self.cache.wrapping_add(carry));
+                for _ in 1..self.cache_size {
+                    self.out.push(0xFFu8.wrapping_add(carry));
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+            self.cache_size = 0;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Encode one bit with an adaptive context model.
+    #[inline]
+    pub fn encode_bit(&mut self, model: &mut BitModel, bit: u8) {
+        let bound = (self.range >> PROB_BITS) * model.p0 as u32;
+        if bit == 0 {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        model.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Encode `n` equiprobable bits, most-significant first (bypass mode —
+    /// used for Exp-Golomb suffixes where adaptation buys nothing).
+    #[inline]
+    pub fn encode_direct(&mut self, value: u32, n: u32) {
+        for i in (0..n).rev() {
+            self.range >>= 1;
+            let bit = (value >> i) & 1;
+            if bit != 0 {
+                self.low += self.range as u64;
+            }
+            while self.range < TOP {
+                self.range <<= 8;
+                self.shift_low();
+            }
+        }
+    }
+
+    /// Flush and return the bitstream.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    pub fn len_upper_bound(&self) -> usize {
+        self.out.len() + 5
+    }
+}
+
+/// Range decoder over a byte slice.
+pub struct Decoder<'a> {
+    code: u32,
+    range: u32,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(input: &'a [u8]) -> Self {
+        let mut d = Self {
+            code: 0,
+            range: u32::MAX,
+            input,
+            pos: 0,
+        };
+        // First encoder byte is always 0 (cache priming); consume 5 bytes.
+        for _ in 0..5 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    #[inline]
+    pub fn decode_bit(&mut self, model: &mut BitModel) -> u8 {
+        let bound = (self.range >> PROB_BITS) * model.p0 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            1
+        };
+        model.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    #[inline]
+    pub fn decode_direct(&mut self, n: u32) -> u32 {
+        let mut v = 0u32;
+        for _ in 0..n {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            v = (v << 1) | bit;
+            while self.range < TOP {
+                self.range <<= 8;
+                self.code = (self.code << 8) | self.next_byte() as u32;
+            }
+        }
+        v
+    }
+
+    /// Bytes consumed so far (diagnostics).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_bits_roundtrip() {
+        let bits: Vec<u8> = (0..4000u32).map(|i| ((i * i + i / 7) % 5 == 0) as u8).collect();
+        let mut enc = Encoder::new();
+        let mut m = BitModel::default();
+        for &b in &bits {
+            enc.encode_bit(&mut m, b);
+        }
+        let bytes = enc.finish();
+        let mut dec = Decoder::new(&bytes);
+        let mut m = BitModel::default();
+        for &b in &bits {
+            assert_eq!(dec.decode_bit(&mut m), b);
+        }
+    }
+
+    #[test]
+    fn direct_bits_roundtrip() {
+        let mut enc = Encoder::new();
+        let vals: Vec<(u32, u32)> = (0..500u32)
+            .map(|i| (i.wrapping_mul(2654435761) % (1 << (i % 24 + 1)), i % 24 + 1))
+            .collect();
+        for &(v, n) in &vals {
+            enc.encode_direct(v, n);
+        }
+        let bytes = enc.finish();
+        let mut dec = Decoder::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(dec.decode_direct(n), v, "n={n}");
+        }
+    }
+
+    #[test]
+    fn skewed_bits_compress() {
+        // 99% zeros should code far below 1 bit/symbol.
+        let n = 100_000;
+        let bits: Vec<u8> = (0..n).map(|i| (i % 100 == 0) as u8).collect();
+        let mut enc = Encoder::new();
+        let mut m = BitModel::default();
+        for &b in &bits {
+            enc.encode_bit(&mut m, b);
+        }
+        let bytes = enc.finish();
+        assert!(
+            bytes.len() < n / 64,
+            "expected < {} bytes, got {}",
+            n / 64,
+            bytes.len()
+        );
+    }
+
+    #[test]
+    fn interleaved_context_and_direct() {
+        let mut enc = Encoder::new();
+        let mut m0 = BitModel::default();
+        let mut m1 = BitModel::default();
+        for i in 0..2000u32 {
+            enc.encode_bit(&mut m0, (i % 3 == 0) as u8);
+            enc.encode_direct(i % 16, 4);
+            enc.encode_bit(&mut m1, (i % 7 == 0) as u8);
+        }
+        let bytes = enc.finish();
+        let mut dec = Decoder::new(&bytes);
+        let mut m0 = BitModel::default();
+        let mut m1 = BitModel::default();
+        for i in 0..2000u32 {
+            assert_eq!(dec.decode_bit(&mut m0), (i % 3 == 0) as u8);
+            assert_eq!(dec.decode_direct(4), i % 16);
+            assert_eq!(dec.decode_bit(&mut m1), (i % 7 == 0) as u8);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! DeepCABAC-style entropy codec, built from scratch:
+//!
+//! * [`engine`] — adaptive binary arithmetic (range) coder
+//! * [`context`] — NNC-flavored syntax/context models for quantized levels
+//! * [`codec`] — whole-update encode/decode with per-row skip flags
+//!
+//! This is the substrate behind every compressed transmission in the
+//! reproduction (FedAvg†, STC†/‡, Eqs.(2)+(3) and FSFL all use it, as in
+//! the paper's Table 2 where even STC is re-encoded with DeepCABAC).
+
+pub mod codec;
+pub mod context;
+pub mod engine;
+
+pub use codec::{decode_update, encode_update, encode_update_opts, EncodeStats, StepFn};
+pub use engine::{BitModel, Decoder, Encoder};

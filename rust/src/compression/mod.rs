@@ -1,0 +1,106 @@
+//! The differential-update compression pipeline (paper Sec. 3):
+//! sparsification → uniform quantization → DeepCABAC entropy coding,
+//! plus the STC baseline and error accumulation.
+//!
+//! [`UpdateCodec`] is the facade the FL protocols use: it owns the
+//! sparsify + quantize + encode configuration and produces
+//! `(bitstream, dequantized Δ̂, stats)` triples.
+
+pub mod cabac;
+pub mod quantize;
+pub mod residual;
+pub mod sparsify;
+pub mod stc;
+
+pub use cabac::{decode_update, encode_update, EncodeStats};
+pub use quantize::QuantConfig;
+pub use residual::Residual;
+pub use sparsify::SparsifyMode;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::params::Delta;
+use crate::model::Manifest;
+
+/// End-to-end codec: how a protocol turns a raw ΔW into wire bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateCodec {
+    pub sparsify: SparsifyMode,
+    pub quant: QuantConfig,
+    /// Ternarize survivors to ±μ before encoding (the STC baseline).
+    pub ternary: bool,
+}
+
+impl UpdateCodec {
+    /// The paper's FSFL configuration (dynamic Eqs. 2+3 thresholds).
+    pub fn fsfl(delta: f32, gamma: f32) -> Self {
+        Self {
+            sparsify: SparsifyMode::Dynamic { delta, gamma },
+            quant: QuantConfig::default(),
+            ternary: false,
+        }
+    }
+
+    /// Fixed-rate variant used in Table 2 (96 % sparsity).
+    pub fn fixed_rate(rate: f32) -> Self {
+        Self {
+            sparsify: SparsifyMode::TopK { rate },
+            quant: QuantConfig::default(),
+            ternary: false,
+        }
+    }
+
+    /// STC baseline: top-k + ternarization (+ DeepCABAC encoding).
+    pub fn stc(rate: f32) -> Self {
+        Self {
+            sparsify: SparsifyMode::TopK { rate },
+            quant: QuantConfig::default(),
+            ternary: true,
+        }
+    }
+
+    /// FedAvg†: quantization + DeepCABAC but no sparsification.
+    pub fn quant_only() -> Self {
+        Self {
+            sparsify: SparsifyMode::None,
+            quant: QuantConfig::default(),
+            ternary: false,
+        }
+    }
+
+    /// Sparsify (consuming the raw update in place), quantize and encode.
+    /// Returns `(wire bytes, dequantized Δ̂, stats)`. `indices` selects the
+    /// transmitted tensors (partial updates transmit fewer).
+    pub fn encode(&self, mut raw: Delta, indices: &[usize]) -> (Vec<u8>, Delta, EncodeStats) {
+        let quant = self.quant;
+        if self.ternary {
+            // STC: top-k happens inside ternarize; survivors become ±μ and
+            // are coded with step = μ so levels are exactly ±1. Side
+            // parameters keep their configured step.
+            let rate = match self.sparsify {
+                SparsifyMode::TopK { rate } => rate,
+                _ => 0.99,
+            };
+            let mus = stc::ternarize(&mut raw, indices, rate);
+            let manifest = raw.manifest.clone();
+            let step_fn = move |spec: &crate::model::TensorSpec| -> f32 {
+                let idx = manifest.index_of(&spec.name).unwrap();
+                if mus[idx] > 0.0 {
+                    mus[idx]
+                } else {
+                    quant.step_for(spec)
+                }
+            };
+            return cabac::encode_update(&raw, indices, &step_fn);
+        }
+        sparsify::sparsify(&mut raw, indices, self.sparsify, &quant);
+        let step_fn = move |spec: &crate::model::TensorSpec| quant.step_for(spec);
+        cabac::encode_update(&raw, indices, &step_fn)
+    }
+
+    pub fn decode(&self, bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
+        cabac::decode_update(bytes, manifest)
+    }
+}

@@ -1,0 +1,84 @@
+//! Uniform quantization (paper Sec. 3): integer levels
+//! `[-q, …, -1, 0, 1, …, p] · step_size`.
+//!
+//! The step sizes follow the paper's Sec. 5.1: a coarse step for weight
+//! updates (4.88e-4 unidirectional, 2.44e-4 bidirectional — halved
+//! because quantization noise is applied on both legs) and a fine step
+//! (2.38e-6) for scale factors, biases and BatchNorm parameters.
+
+use crate::model::TensorSpec;
+
+/// Paper defaults (Sec. 5.1).
+pub const STEP_COARSE_UNI: f32 = 4.88e-4;
+pub const STEP_COARSE_BI: f32 = 2.44e-4;
+pub const STEP_FINE: f32 = 2.38e-6;
+
+#[inline]
+pub fn quantize(x: f32, step: f32) -> i32 {
+    (x / step).round() as i32
+}
+
+#[inline]
+pub fn dequantize(q: i32, step: f32) -> f32 {
+    q as f32 * step
+}
+
+/// Quantization step assignment per tensor (paper Sec. 5.1): row-structured
+/// weight updates take the coarse step; scaling factors, biases and
+/// BatchNorm parameters the fine step.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantConfig {
+    pub coarse_step: f32,
+    pub fine_step: f32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self {
+            coarse_step: STEP_COARSE_UNI,
+            fine_step: STEP_FINE,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn bidirectional() -> Self {
+        Self {
+            coarse_step: STEP_COARSE_BI,
+            fine_step: STEP_FINE,
+        }
+    }
+
+    #[inline]
+    pub fn step_for(&self, spec: &TensorSpec) -> f32 {
+        if spec.kind.is_fine_quantized() {
+            self.fine_step
+        } else {
+            self.coarse_step
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_rounds_to_nearest() {
+        assert_eq!(quantize(0.0, 0.5), 0);
+        assert_eq!(quantize(0.24, 0.5), 0);
+        assert_eq!(quantize(0.26, 0.5), 1);
+        assert_eq!(quantize(-0.26, 0.5), -1);
+        assert_eq!(quantize(1.6, 0.5), 3);
+    }
+
+    #[test]
+    fn dequantize_error_bounded_by_half_step() {
+        let step = 4.88e-4;
+        for i in -1000..1000 {
+            let x = i as f32 * 1.3e-4;
+            let err = (dequantize(quantize(x, step), step) - x).abs();
+            assert!(err <= step / 2.0 + 1e-9, "x={x} err={err}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Error accumulation ("residuals", Eq. 5, after Sattler et al. [21]).
+//!
+//! Each client stores the difference between its full-precision update
+//! and the actually-transmitted (sparsified + quantized) update:
+//!
+//! ```text
+//! ΔW_i^(t+1) = R_i^(t) + W_i^(t+1) − W_i^(t)      (inserted at Alg.1 l.10)
+//! R_i^(t+1)  = ΔW_i^(t+1) − Δ̂W_i^(t+1)
+//! ```
+//!
+//! Small update elements accumulate across rounds until they clear the
+//! sparsification/quantization thresholds, so no learning signal is ever
+//! permanently discarded.
+
+use crate::model::params::Delta;
+
+#[derive(Debug, Clone)]
+pub struct Residual {
+    acc: Delta,
+}
+
+impl Residual {
+    pub fn zeros(manifest: std::sync::Arc<crate::model::Manifest>) -> Self {
+        Self {
+            acc: Delta::zeros(manifest),
+        }
+    }
+
+    /// Inject the carried error into a fresh raw update (Eq. 5, first line).
+    pub fn inject(&self, raw: &mut Delta) {
+        raw.accumulate(&self.acc);
+    }
+
+    /// Store what was lost this round: `R = full − transmitted`.
+    pub fn update(&mut self, full: &Delta, transmitted: &Delta) {
+        for ((acc, f), t) in self
+            .acc
+            .tensors
+            .iter_mut()
+            .zip(&full.tensors)
+            .zip(&transmitted.tensors)
+        {
+            for ((a, &x), &y) in acc.iter_mut().zip(f).zip(t) {
+                *a = x - y;
+            }
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.acc.l2_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::manifest_conv_dense;
+
+    #[test]
+    fn residual_accumulates_until_transmitted() {
+        let m = manifest_conv_dense();
+        let mut res = Residual::zeros(m.clone());
+        // Round 1: tiny update, everything "sparsified away".
+        let mut raw = Delta::zeros(m.clone());
+        raw.tensors[0][0] = 0.3;
+        res.inject(&mut raw);
+        assert_eq!(raw.tensors[0][0], 0.3);
+        let transmitted = Delta::zeros(m.clone()); // all dropped
+        res.update(&raw, &transmitted);
+        assert!((res.l2_norm() - 0.3).abs() < 1e-6);
+
+        // Round 2: same tiny update again; injected raw now carries 0.6.
+        let mut raw2 = Delta::zeros(m.clone());
+        raw2.tensors[0][0] = 0.3;
+        res.inject(&mut raw2);
+        assert!((raw2.tensors[0][0] - 0.6).abs() < 1e-6);
+
+        // This time it is transmitted in full → residual drains to zero.
+        let transmitted2 = raw2.clone();
+        res.update(&raw2, &transmitted2);
+        assert!(res.l2_norm() < 1e-9);
+    }
+}

@@ -1,0 +1,223 @@
+//! Sparsification of differential updates (paper Sec. 3).
+//!
+//! * **Unstructured** (Eq. 2): per-tensor dynamic threshold from a
+//!   Gaussian approximation of the update distribution,
+//!   `θ_u = max(|mean − δ·std|, |mean + δ·std|)`, floored at
+//!   `step_size / 2` (anything below quantizes to zero anyway).
+//! * **Structured** (Eq. 3): per-filter-row threshold
+//!   `θ_s = γ/M · Σ_m |mean(ΔF_m)|`; rows whose absolute update mean
+//!   falls below θ_s are zeroed entirely (these become 1-bit row-skip
+//!   flags in the codec).
+//! * **Fixed-rate top-k**: the constant 96 % sparsity used for the
+//!   Table 2 comparison against STC.
+
+use crate::model::params::Delta;
+use crate::model::TensorSpec;
+
+use super::quantize::QuantConfig;
+
+/// Which sparsification scheme a protocol applies to weight updates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SparsifyMode {
+    /// No sparsification (plain FedAvg baselines).
+    None,
+    /// Eqs. (2) + (3): dynamic unstructured + structured thresholds.
+    Dynamic { delta: f32, gamma: f32 },
+    /// Fixed-rate magnitude top-k (rate = fraction of zeros, e.g. 0.96).
+    TopK { rate: f32 },
+}
+
+/// Eq. (2): Gaussian-approximation threshold for one tensor.
+pub fn unstructured_threshold(t: &[f32], delta: f32, step_size: f32) -> f32 {
+    if t.is_empty() {
+        return step_size / 2.0;
+    }
+    let n = t.len() as f64;
+    let mean = t.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = t.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt();
+    let d = delta as f64;
+    let theta = (mean - d * std).abs().max((mean + d * std).abs()) as f32;
+    theta.max(step_size / 2.0)
+}
+
+/// Zero all elements with |x| < θ. Returns number of zeroed elements.
+pub fn apply_unstructured(t: &mut [f32], theta: f32) -> usize {
+    let mut zeroed = 0;
+    for x in t.iter_mut() {
+        if x.abs() < theta && *x != 0.0 {
+            *x = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Eq. (3): θ_s = γ/M · Σ_m |mean(row_m)| for a row-structured tensor.
+pub fn structured_threshold(t: &[f32], rows: usize, row_len: usize, gamma: f32) -> f32 {
+    if rows == 0 || row_len == 0 {
+        return 0.0;
+    }
+    let sum_abs_means: f64 = (0..rows)
+        .map(|r| {
+            let row = &t[r * row_len..(r + 1) * row_len];
+            (row.iter().map(|&x| x as f64).sum::<f64>() / row_len as f64).abs()
+        })
+        .sum();
+    (gamma as f64 * sum_abs_means / rows as f64) as f32
+}
+
+/// Zero entire rows whose |mean| < θ_s. Returns number of rows zeroed.
+pub fn apply_structured(t: &mut [f32], rows: usize, row_len: usize, theta: f32) -> usize {
+    let mut zeroed = 0;
+    for r in 0..rows {
+        let row = &mut t[r * row_len..(r + 1) * row_len];
+        let mean = row.iter().map(|&x| x as f64).sum::<f64>() / row_len as f64;
+        if (mean.abs() as f32) < theta {
+            row.iter_mut().for_each(|x| *x = 0.0);
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Magnitude top-k: zero everything except the `(1-rate)` fraction with the
+/// largest |x| (per tensor, as in STC / the Table 2 fixed-rate setting).
+pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
+    let n = t.len();
+    let keep = (((1.0 - rate as f64) * n as f64).round() as usize).min(n);
+    if keep == n {
+        return 0;
+    }
+    if keep == 0 {
+        let zeroed = t.iter().filter(|&&x| x != 0.0).count();
+        t.iter_mut().for_each(|x| *x = 0.0);
+        return zeroed;
+    }
+    let mut mags: Vec<f32> = t.iter().map(|x| x.abs()).collect();
+    let cut = n - keep;
+    mags.select_nth_unstable_by(cut, |a, b| a.partial_cmp(b).unwrap());
+    let theta = mags[cut];
+    // Keep strictly-above-theta always; break magnitude ties first-come so
+    // exactly `keep` elements survive.
+    let above = t.iter().filter(|x| x.abs() > theta).count();
+    let mut ties_to_keep = keep.saturating_sub(above);
+    let mut zeroed = 0;
+    for x in t.iter_mut() {
+        let a = x.abs();
+        if a > theta {
+            continue;
+        }
+        if a == theta && ties_to_keep > 0 && a > 0.0 {
+            ties_to_keep -= 1;
+            continue;
+        }
+        if *x != 0.0 {
+            *x = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Apply a [`SparsifyMode`] to every update tensor in `indices`.
+/// Returns total elements zeroed.
+pub fn sparsify(
+    delta: &mut Delta,
+    indices: &[usize],
+    mode: SparsifyMode,
+    quant: &QuantConfig,
+) -> usize {
+    let manifest = delta.manifest.clone();
+    let mut zeroed = 0;
+    for &i in indices {
+        let spec: &TensorSpec = &manifest.tensors[i];
+        let t = &mut delta.tensors[i];
+        match mode {
+            SparsifyMode::None => {}
+            SparsifyMode::Dynamic { delta: d, gamma } => {
+                // Structured first (Eq. 3) on filter rows, then the
+                // unstructured Gaussian threshold (Eq. 2) on survivors.
+                if let Some((rows, row_len)) = spec.rows() {
+                    let theta_s = structured_threshold(t, rows, row_len, gamma);
+                    zeroed += apply_structured(t, rows, row_len, theta_s);
+                }
+                let theta_u = unstructured_threshold(t, d, quant.step_for(spec));
+                zeroed += apply_unstructured(t, theta_u);
+            }
+            SparsifyMode::TopK { rate } => {
+                // Fixed-rate sparsity only targets the (large) weight
+                // tensors; side parameters ride along as in the paper.
+                if spec.rows().is_some() {
+                    zeroed += apply_topk(t, rate);
+                }
+            }
+        }
+    }
+    zeroed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_threshold_zero_mean_gaussian() {
+        // N(0, 1): theta ≈ delta * std (mean ≈ 0)
+        let n = 10_000;
+        let mut rng = crate::data::XorShiftRng::new(11);
+        let t: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let theta = unstructured_threshold(&t, 1.0, 1e-6);
+        let std = {
+            let m = t.iter().sum::<f32>() / n as f32;
+            (t.iter().map(|x| (x - m).powi(2)).sum::<f32>() / n as f32).sqrt()
+        };
+        assert!((theta - std).abs() / std < 0.05, "theta={theta} std={std}");
+    }
+
+    #[test]
+    fn eq2_respects_step_floor() {
+        let t = vec![1e-9, -1e-9, 2e-9];
+        let theta = unstructured_threshold(&t, 0.1, 1.0);
+        assert_eq!(theta, 0.5);
+    }
+
+    #[test]
+    fn eq3_zeroes_low_mean_rows() {
+        // rows: mean 1.0, mean 0.01, mean -1.0 → θ_s(γ=1) = 0.67
+        let mut t = vec![1.0, 1.0, 1.0, 0.01, 0.01, 0.01, -1.0, -1.0, -1.0];
+        let theta = structured_threshold(&t, 3, 3, 1.0);
+        assert!((theta - 0.67).abs() < 1e-3);
+        let zeroed = apply_structured(&mut t, 3, 3, theta);
+        assert_eq!(zeroed, 1);
+        assert_eq!(&t[3..6], &[0.0, 0.0, 0.0]);
+        assert_eq!(t[0], 1.0);
+        assert_eq!(t[8], -1.0);
+    }
+
+    #[test]
+    fn topk_keeps_exact_fraction() {
+        let n = 1000;
+        let mut t: Vec<f32> = (0..n).map(|i| (i as f32 - 500.0) / 100.0).collect();
+        apply_topk(&mut t, 0.96);
+        let nonzero = t.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 40);
+        // survivors are the extremes
+        assert!(t[0] != 0.0 && t[n - 1] != 0.0);
+        assert_eq!(t[n / 2], 0.0);
+    }
+
+    #[test]
+    fn topk_with_ties() {
+        let mut t = vec![1.0f32; 10];
+        apply_topk(&mut t, 0.5);
+        assert_eq!(t.iter().filter(|&&x| x != 0.0).count(), 5);
+    }
+
+    #[test]
+    fn topk_rate_one_zeroes_all() {
+        let mut t = vec![1.0f32, -2.0, 3.0];
+        apply_topk(&mut t, 1.0);
+        assert!(t.iter().all(|&x| x == 0.0));
+    }
+}

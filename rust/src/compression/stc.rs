@@ -1,0 +1,91 @@
+//! Sparse Ternary Compression baseline (Sattler et al. [21], as used in
+//! the paper's Table 2 comparison).
+//!
+//! STC keeps the top-k update elements by magnitude per tensor and
+//! ternarizes the survivors to `±μ`, where μ is the mean magnitude of
+//! the survivors. Combined with error accumulation (Eq. 5, handled by
+//! the protocol layer) this is the strongest prior-work baseline.
+//!
+//! Encoding: the paper re-encodes STC updates with DeepCABAC ("for
+//! better comparability … we encoded weight updates with DeepCABAC in
+//! our STC implementation"), which we mirror: the ternarized tensor is
+//! passed to the cabac codec with step = μ, so levels are exactly
+//! {-1, 0, +1}.
+
+use crate::model::params::Delta;
+
+/// Ternarize the row-structured weight tensors of `delta` in place:
+/// top-(1-rate) magnitude survivors become ±μ. Returns per-tensor μ
+/// (0.0 for tensors that were not ternarized or are all-zero).
+pub fn ternarize(delta: &mut Delta, indices: &[usize], rate: f32) -> Vec<f32> {
+    let manifest = delta.manifest.clone();
+    let mut mus = vec![0.0f32; manifest.tensors.len()];
+    for &i in indices {
+        let spec = &manifest.tensors[i];
+        if spec.rows().is_none() {
+            // Side parameters (bias/BN/scales) are transmitted unternarized,
+            // as in the paper's setup where STC applies to weight tensors.
+            continue;
+        }
+        let t = &mut delta.tensors[i];
+        super::sparsify::apply_topk(t, rate);
+        let survivors: Vec<f32> = t.iter().filter(|&&x| x != 0.0).map(|x| x.abs()).collect();
+        if survivors.is_empty() {
+            continue;
+        }
+        let mu = survivors.iter().sum::<f32>() / survivors.len() as f32;
+        mus[i] = mu;
+        for x in t.iter_mut() {
+            if *x > 0.0 {
+                *x = mu;
+            } else if *x < 0.0 {
+                *x = -mu;
+            }
+        }
+    }
+    mus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::manifest_conv_dense;
+
+    #[test]
+    fn ternary_values_are_plus_minus_mu() {
+        let m = manifest_conv_dense();
+        let mut d = Delta::zeros(m);
+        d.tensors[0] = vec![0.5, -1.5, 0.1, 0.2, -0.3, 2.5, 0.05, -0.02, 1.0];
+        let mus = ternarize(&mut d, &[0, 1], 0.5);
+        let mu = mus[0];
+        assert!(mu > 0.0);
+        let vals: Vec<f32> = d.tensors[0].iter().copied().filter(|&x| x != 0.0).collect();
+        // ~50% kept (9 * 0.5 rounds to 4..5 survivors)
+        assert!(vals.len() == 4 || vals.len() == 5, "{vals:?}");
+        for v in vals {
+            assert!((v.abs() - mu).abs() < 1e-6);
+        }
+        // bias tensor untouched (not row-structured)
+        assert_eq!(mus[1], 0.0);
+    }
+
+    #[test]
+    fn mu_is_mean_of_survivor_magnitudes() {
+        let m = manifest_conv_dense();
+        let mut d = Delta::zeros(m);
+        d.tensors[0] = vec![9.0, -3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let mus = ternarize(&mut d, &[0], 7.0 / 9.0);
+        assert!((mus[0] - 6.0).abs() < 1e-6);
+        assert_eq!(d.tensors[0][0], 6.0);
+        assert_eq!(d.tensors[0][1], -6.0);
+    }
+
+    #[test]
+    fn all_zero_tensor_stays_zero() {
+        let m = manifest_conv_dense();
+        let mut d = Delta::zeros(m);
+        let mus = ternarize(&mut d, &[0, 1], 0.9);
+        assert!(mus.iter().all(|&x| x == 0.0));
+        assert!(d.tensors.iter().all(|t| t.iter().all(|&x| x == 0.0)));
+    }
+}

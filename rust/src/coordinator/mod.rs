@@ -1,0 +1,103 @@
+//! Leader/worker coordination layer.
+//!
+//! XLA executables are thread-affine (the `xla` crate's PJRT handles are
+//! not `Send`), so the compute plane runs on one dedicated OS thread while
+//! the control plane — progress streaming, CSV sinks, the CLI — consumes
+//! events from an mpsc channel. [`run_experiment_threaded`] spawns the
+//! compute thread and streams [`RoundMetrics`]; this is the launcher used
+//! by the `fsfl` binary and the examples.
+//!
+//! The in-process wire protocol is still the *paper's* protocol: clients
+//! emit DeepCABAC bitstreams, the server decodes exactly those bytes
+//! (`Server::decode_client`), and byte accounting happens on the encoded
+//! streams — nothing is short-circuited.
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::fl::{Experiment, ExperimentConfig};
+use crate::metrics::{RoundMetrics, RunLog};
+use crate::runtime::Runtime;
+
+/// Events streamed from the compute thread to observers.
+#[derive(Debug)]
+pub enum Event {
+    RoundDone(RoundMetrics),
+    Finished(RunLog),
+    Failed(String),
+}
+
+/// Run an experiment on a dedicated compute thread, streaming per-round
+/// events to `on_event` on the calling thread. Returns the final
+/// [`RunLog`].
+pub fn run_experiment_threaded(
+    cfg: ExperimentConfig,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    let (tx, rx) = mpsc::channel::<Event>();
+    let handle = std::thread::spawn(move || {
+        let run = || -> Result<RunLog> {
+            let rt = Runtime::cpu()?;
+            let mut exp = Experiment::build(&rt, cfg)?;
+            let tx2 = tx.clone();
+            let log = exp.run_with(move |m| {
+                let _ = tx2.send(Event::RoundDone(m.clone()));
+            })?;
+            Ok(log)
+        };
+        match run() {
+            Ok(log) => {
+                let _ = tx.send(Event::Finished(log));
+            }
+            Err(e) => {
+                let _ = tx.send(Event::Failed(format!("{e:#}")));
+            }
+        }
+    });
+
+    let mut result: Option<RunLog> = None;
+    for ev in rx {
+        on_event(&ev);
+        match ev {
+            Event::Finished(log) => {
+                result = Some(log);
+                break;
+            }
+            Event::Failed(msg) => {
+                let _ = handle.join();
+                return Err(anyhow::anyhow!(msg));
+            }
+            Event::RoundDone(_) => {}
+        }
+    }
+    handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("compute thread panicked"))?;
+    result.ok_or_else(|| anyhow::anyhow!("experiment ended without result"))
+}
+
+/// Synchronous convenience wrapper (shares one [`Runtime`] across calls —
+/// used by harnesses that sweep many configs).
+pub fn run_experiment(rt: &Runtime, cfg: ExperimentConfig) -> Result<RunLog> {
+    let mut exp = Experiment::build(rt, cfg)?;
+    exp.run()
+}
+
+/// Default per-round progress line used by the CLI and examples.
+pub fn print_round(m: &RoundMetrics) {
+    println!(
+        "round {:>3}  acc {:5.3}  f1 {:5.3}  loss {:7.4}  up {:>10}  down {:>10}  sparsity {:4.1}%  rows-skip {:4.1}%  scaleok {}  t {}ms+{}ms",
+        m.round,
+        m.accuracy,
+        m.f1,
+        m.test_loss,
+        crate::metrics::fmt_bytes(m.up_bytes),
+        crate::metrics::fmt_bytes(m.down_bytes),
+        m.update_sparsity * 100.0,
+        m.rows_skipped * 100.0,
+        m.scale_accepted,
+        m.train_ms,
+        m.scale_ms,
+    );
+}

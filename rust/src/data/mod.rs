@@ -1,0 +1,38 @@
+//! Synthetic dataset substrate (DESIGN.md substitution: the paper's
+//! Pascal VOC / CIFAR10 / Chest X-Ray are replaced by deterministic
+//! class-template tasks that exercise the same FL dynamics).
+
+mod rng;
+mod split;
+mod synthetic;
+
+pub use rng::XorShiftRng;
+pub use split::{dirichlet_split, iid_split, ClientSplit};
+pub use synthetic::{Dataset, Sample, TaskKind, TaskSpec};
+
+/// One minibatch in wire layout: x flat [B,H,W,C], y one-hot flat [B,classes].
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub size: usize,
+}
+
+/// Iterate `data` in batches of exactly `batch` samples (drop last partial
+/// batch — step HLOs have a fixed batch dimension).
+pub fn batches(ds: &Dataset, order: &[usize], batch: usize) -> Vec<Batch> {
+    let feat = ds.feature_len();
+    let classes = ds.classes;
+    order
+        .chunks_exact(batch)
+        .map(|chunk| {
+            let mut x = Vec::with_capacity(batch * feat);
+            let mut y = vec![0.0f32; batch * classes];
+            for (bi, &si) in chunk.iter().enumerate() {
+                x.extend_from_slice(&ds.samples[si].x);
+                y[bi * classes + ds.samples[si].label] = 1.0;
+            }
+            Batch { x, y, size: batch }
+        })
+        .collect()
+}

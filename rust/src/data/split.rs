@@ -1,0 +1,141 @@
+//! Client data splits: random non-overlapping partitions (paper Sec. 5.1)
+//! and a Dirichlet non-IID option (paper App. C shows rising non-IID-ness
+//! with random partitioning; Dirichlet makes the degree controllable).
+
+use super::rng::XorShiftRng;
+use super::synthetic::Dataset;
+
+/// Per-client index lists into a [`Dataset`].
+#[derive(Debug, Clone)]
+pub struct ClientSplit {
+    pub train: Vec<Vec<usize>>,
+    pub val: Vec<Vec<usize>>,
+}
+
+/// Random non-overlapping IID-ish split into `clients` parts, each part
+/// further divided into train/val by `val_frac` (the paper evaluates
+/// scale factors on per-client validation splits).
+pub fn iid_split(ds: &Dataset, clients: usize, val_frac: f64, seed: u64) -> ClientSplit {
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = XorShiftRng::new(seed);
+    rng.shuffle(&mut idx);
+    let per = ds.len() / clients;
+    let mut train = Vec::with_capacity(clients);
+    let mut val = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let part = &idx[c * per..(c + 1) * per];
+        let nval = ((part.len() as f64) * val_frac).round() as usize;
+        val.push(part[..nval].to_vec());
+        train.push(part[nval..].to_vec());
+    }
+    ClientSplit { train, val }
+}
+
+/// Label-Dirichlet non-IID split: each client draws a Dirichlet(alpha)
+/// class distribution; low alpha → highly skewed clients.
+pub fn dirichlet_split(
+    ds: &Dataset,
+    clients: usize,
+    alpha: f64,
+    val_frac: f64,
+    seed: u64,
+) -> ClientSplit {
+    let mut rng = XorShiftRng::new(seed);
+    // bucket sample indices per class
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, s) in ds.samples.iter().enumerate() {
+        buckets[s.label].push(i);
+    }
+    for b in buckets.iter_mut() {
+        rng.shuffle(b);
+    }
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    for bucket in &buckets {
+        let p = rng.dirichlet(alpha, clients);
+        // cumulative allocation of this class's samples
+        let mut start = 0usize;
+        for (c, &frac) in p.iter().enumerate() {
+            let n = if c + 1 == clients {
+                bucket.len() - start
+            } else {
+                ((bucket.len() as f64) * frac).round() as usize
+            }
+            .min(bucket.len() - start);
+            parts[c].extend_from_slice(&bucket[start..start + n]);
+            start += n;
+        }
+    }
+    let mut train = Vec::with_capacity(clients);
+    let mut val = Vec::with_capacity(clients);
+    for mut part in parts {
+        rng.shuffle(&mut part);
+        let nval = ((part.len() as f64) * val_frac).round() as usize;
+        val.push(part[..nval].to_vec());
+        train.push(part[nval..].to_vec());
+    }
+    ClientSplit { train, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TaskKind, TaskSpec};
+
+    fn ds() -> Dataset {
+        Dataset::generate(&TaskSpec::new(TaskKind::CifarLike, 8, 1, 1), 400, 0)
+    }
+
+    #[test]
+    fn iid_split_disjoint_and_covering() {
+        let d = ds();
+        let s = iid_split(&d, 4, 0.2, 7);
+        let mut all: Vec<usize> = Vec::new();
+        for c in 0..4 {
+            all.extend(&s.train[c]);
+            all.extend(&s.val[c]);
+            assert!((s.val[c].len() as f64 / 100.0 - 0.2).abs() < 0.02);
+        }
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "overlapping client splits");
+        assert_eq!(n, 400);
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed() {
+        let d = ds();
+        let skewed = dirichlet_split(&d, 4, 0.1, 0.0, 3);
+        let uniform = dirichlet_split(&d, 4, 100.0, 0.0, 3);
+        // measure max class fraction per client, averaged
+        let skew = |sp: &ClientSplit| -> f64 {
+            let mut total = 0.0;
+            for part in &sp.train {
+                let mut counts = vec![0usize; d.classes];
+                for &i in part {
+                    counts[d.samples[i].label] += 1;
+                }
+                let max = *counts.iter().max().unwrap() as f64;
+                total += max / part.len().max(1) as f64;
+            }
+            total / sp.train.len() as f64
+        };
+        assert!(skew(&skewed) > skew(&uniform) + 0.1);
+    }
+
+    #[test]
+    fn dirichlet_split_disjoint() {
+        let d = ds();
+        let s = dirichlet_split(&d, 3, 0.5, 0.25, 11);
+        let mut all: Vec<usize> = Vec::new();
+        for c in 0..3 {
+            all.extend(&s.train[c]);
+            all.extend(&s.val[c]);
+        }
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+        assert_eq!(n, 400);
+    }
+}

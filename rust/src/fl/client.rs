@@ -1,0 +1,252 @@
+//! FL client: Algorithm 1 lines 6–21 — local weight training, dynamic
+//! sparsification of the differential update, scale-factor sub-epochs
+//! with best-of-E validation selection, and the discard rule.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compression::{EncodeStats, Residual, UpdateCodec};
+use crate::data::{batches, Batch, Dataset, XorShiftRng};
+use crate::fl::config::{ExperimentConfig, ProtocolConfig};
+use crate::fl::schedule::LrSchedule;
+use crate::model::params::Delta;
+use crate::model::{Group, ParamSet};
+use crate::runtime::{ModelRuntime, OptState};
+
+/// What one client sends upstream after a round.
+#[derive(Debug)]
+pub struct ClientRoundOutput {
+    /// Encoded bitstreams (W-update stream, optional S-update stream).
+    /// Empty for uncompressed FedAvg.
+    pub streams: Vec<Vec<u8>>,
+    /// The dequantized update the server will reconstruct (== decode of
+    /// `streams`, or the exact raw update for plain FedAvg).
+    pub update: Delta,
+    pub up_bytes: usize,
+    pub stats: EncodeStats,
+    pub scale_accepted: bool,
+    pub train_loss: f64,
+    pub train_ms: u128,
+    pub scale_ms: u128,
+}
+
+pub struct Client {
+    pub id: usize,
+    /// This client's replica of the global model state; only ever mutated
+    /// by applying broadcast deltas (so server/client divergence is a bug,
+    /// asserted in integration tests).
+    pub global: ParamSet,
+    wopt: OptState,
+    sopt: OptState,
+    pub residual: Option<Residual>,
+    pub schedule: LrSchedule,
+    train_idx: Vec<usize>,
+    val_idx: Vec<usize>,
+    rng: XorShiftRng,
+}
+
+impl Client {
+    pub fn new(
+        id: usize,
+        init: ParamSet,
+        train_idx: Vec<usize>,
+        val_idx: Vec<usize>,
+        schedule: LrSchedule,
+        residuals: bool,
+        seed: u64,
+    ) -> Self {
+        let manifest = init.manifest.clone();
+        Self {
+            id,
+            wopt: OptState::zeros(&manifest, Group::Weight),
+            sopt: OptState::zeros(&manifest, Group::Scale),
+            residual: residuals.then(|| Residual::zeros(manifest)),
+            global: init,
+            schedule,
+            train_idx,
+            val_idx,
+            rng: XorShiftRng::new(seed ^ 0xC11E57),
+        }
+    }
+
+    /// Apply the server broadcast (Algorithm 1 lines 7–8).
+    pub fn apply_broadcast(&mut self, delta: &Delta) {
+        self.global.add_delta(delta);
+    }
+
+    fn train_batches(&mut self, ds: &Dataset, batch: usize) -> Vec<Batch> {
+        self.rng.shuffle(&mut self.train_idx);
+        batches(ds, &self.train_idx, batch)
+    }
+
+    fn val_batches(&self, ds: &Dataset, batch: usize) -> Vec<Batch> {
+        batches(ds, &self.val_idx, batch)
+    }
+
+    fn eval_accuracy(&self, mr: &ModelRuntime, params: &ParamSet, val: &[Batch]) -> Result<f64> {
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for b in val {
+            let out = mr.eval_step(params, &b.x, &b.y)?;
+            correct += out.correct as f64;
+            total += b.size;
+        }
+        Ok(if total == 0 { 0.0 } else { correct / total as f64 })
+    }
+
+    /// One communication round (Algorithm 1 lines 6–21).
+    pub fn run_round(
+        &mut self,
+        mr: &ModelRuntime,
+        ds: &Dataset,
+        cfg: &ExperimentConfig,
+        pcfg: &ProtocolConfig,
+    ) -> Result<ClientRoundOutput> {
+        let manifest = self.global.manifest.clone();
+        let update_idx = manifest.update_indices();
+        let scale_idx = manifest.group_indices(Group::Scale);
+
+        // ---- local weight training (line 9; S frozen inside the HLO) ----
+        let t0 = Instant::now();
+        let mut work = self.global.clone();
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for _ in 0..cfg.local_epochs {
+            for b in self.train_batches(ds, mr.batch_size()) {
+                let out =
+                    mr.train_step(&mut work, &mut self.wopt, cfg.optimizer, cfg.lr, &b.x, &b.y)?;
+                loss_sum += out.loss as f64;
+                loss_n += 1;
+            }
+        }
+        let train_ms = t0.elapsed().as_millis();
+
+        // ---- differential update (Eq. 1) + residual injection (Eq. 5) ----
+        let mut raw = work.delta_from(&self.global);
+        if let Some(res) = &self.residual {
+            res.inject(&mut raw);
+        }
+
+        // ---- sparsify + quantize + encode (lines 10–11) ----
+        let (mut streams, w_update, stats, mut up_bytes) = match &pcfg.codec {
+            None => {
+                // plain FedAvg: "transmit" the exact raw update
+                let bytes = crate::compression::cabac::codec::raw_bytes(&work, &update_idx);
+                (Vec::new(), raw.clone(), EncodeStats::default(), bytes)
+            }
+            Some(codec) => {
+                let (bytes, deq, stats) = codec.encode(raw.clone(), &update_idx);
+                let n = bytes.len();
+                (vec![bytes], deq, stats, n)
+            }
+        };
+        if let Some(res) = &mut self.residual {
+            res.update(&raw, &w_update);
+        }
+        // Ŵ = W^(t) + Δ̂ (line 11): the base for scale training.
+        let mut hat = self.global.clone();
+        hat.add_delta(&w_update);
+
+        // ---- scale-factor sub-epochs (lines 13–19) ----
+        let mut scale_accepted = false;
+        let mut scale_ms = 0u128;
+        let mut update = w_update;
+        if pcfg.scaled && cfg.scale_epochs > 0 && !scale_idx.is_empty() {
+            let t1 = Instant::now();
+            let val = self.val_batches(ds, mr.batch_size());
+            let mut best_acc = self.eval_accuracy(mr, &hat, &val)?;
+            let baseline_scales: Vec<Vec<f32>> =
+                scale_idx.iter().map(|&i| hat.tensors[i].clone()).collect();
+            let mut best_scales = baseline_scales.clone();
+            self.schedule.restart(); // CAWR warm restart at each main epoch
+            for _e in 0..cfg.scale_epochs {
+                for b in self.train_batches(ds, mr.batch_size()) {
+                    let lr = self.schedule.next_lr();
+                    mr.scale_step(
+                        &mut hat,
+                        &mut self.sopt,
+                        cfg.scale_optimizer,
+                        lr,
+                        &b.x,
+                        &b.y,
+                    )?;
+                }
+                let acc = self.eval_accuracy(mr, &hat, &val)?;
+                // paper: keep the sub-epoch with best validation perf (>=)
+                if acc >= best_acc {
+                    best_acc = acc;
+                    best_scales = scale_idx.iter().map(|&i| hat.tensors[i].clone()).collect();
+                    scale_accepted = true;
+                }
+            }
+            // restore the selected (or baseline, if nothing improved) S
+            let chosen = if scale_accepted {
+                &best_scales
+            } else {
+                &baseline_scales
+            };
+            for (slot, &i) in scale_idx.iter().enumerate() {
+                hat.tensors[i] = chosen[slot].clone();
+            }
+            if scale_accepted {
+                // re-calculate differences considering S, quantize, encode
+                // (fine step; transmitted as a second stream)
+                let codec = pcfg.codec.unwrap_or(UpdateCodec::quant_only());
+                let s_codec = UpdateCodec {
+                    sparsify: crate::compression::SparsifyMode::None,
+                    quant: codec.quant,
+                    ternary: false,
+                };
+                let sdelta = hat.delta_from(&self.global);
+                let mut only_s = Delta::zeros(manifest.clone());
+                for &i in &scale_idx {
+                    only_s.tensors[i] = sdelta.tensors[i].clone();
+                }
+                let (sbytes, sdeq, _) = s_codec.encode(only_s, &scale_idx);
+                // keep Ŵ's S consistent with what the server reconstructs
+                for &i in &scale_idx {
+                    let mut t = self.global.tensors[i].clone();
+                    for (x, d) in t.iter_mut().zip(&sdeq.tensors[i]) {
+                        *x += d;
+                    }
+                    hat.tensors[i] = t;
+                }
+                update.accumulate(&sdeq);
+                up_bytes += sbytes.len();
+                streams.push(sbytes);
+            }
+            scale_ms = t1.elapsed().as_millis();
+        }
+
+        Ok(ClientRoundOutput {
+            streams,
+            update,
+            up_bytes,
+            stats,
+            scale_accepted,
+            train_loss: if loss_n == 0 {
+                0.0
+            } else {
+                loss_sum / loss_n as f64
+            },
+            train_ms,
+            scale_ms,
+        })
+    }
+
+    /// Current scale-factor values per layer (Fig. 3 statistics).
+    pub fn scale_values(&self) -> Vec<(String, Vec<f32>)> {
+        self.global
+            .manifest
+            .group_indices(Group::Scale)
+            .iter()
+            .map(|&i| {
+                (
+                    self.global.manifest.tensors[i].layer.clone(),
+                    self.global.tensors[i].clone(),
+                )
+            })
+            .collect()
+    }
+}

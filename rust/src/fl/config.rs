@@ -1,0 +1,225 @@
+//! Experiment configuration: protocol presets matching every row/curve in
+//! the paper's evaluation, plus the knobs the harnesses sweep.
+
+use crate::compression::{QuantConfig, SparsifyMode, UpdateCodec};
+use crate::data::TaskKind;
+use crate::fl::schedule::ScheduleKind;
+use crate::runtime::Optimizer;
+
+/// How a client's update is compressed + whether scale training runs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProtocolConfig {
+    /// `None` → plain FedAvg: the raw f32 update is "transmitted".
+    pub codec: Option<UpdateCodec>,
+    /// Run Algorithm 1's scale-factor sub-epochs (the paper's S).
+    pub scaled: bool,
+    /// Error accumulation (Eq. 5).
+    pub residuals: bool,
+}
+
+/// The named protocol rows of Table 2 / curves of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// FedAvg [19]: uncompressed f32 updates.
+    FedAvg,
+    /// FedAvg†: uniform quantization + DeepCABAC, no sparsification.
+    FedAvgQ,
+    /// STC† [21]: top-k + ternary + error feedback + DeepCABAC.
+    Stc,
+    /// Eqs. (2)+(3): our sparsification without scaling.
+    SparseOnly,
+    /// STC‡: STC plus our filter scaling.
+    StcScaled,
+    /// FSFL: the paper's full method.
+    Fsfl,
+}
+
+impl Protocol {
+    pub const ALL: [Protocol; 6] = [
+        Protocol::FedAvg,
+        Protocol::FedAvgQ,
+        Protocol::Stc,
+        Protocol::SparseOnly,
+        Protocol::StcScaled,
+        Protocol::Fsfl,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Protocol::FedAvg => "FedAvg",
+            Protocol::FedAvgQ => "FedAvg+DeepCABAC",
+            Protocol::Stc => "STC",
+            Protocol::SparseOnly => "Eqs.(2)+(3)",
+            Protocol::StcScaled => "STC+scaling",
+            Protocol::Fsfl => "FSFL",
+        }
+    }
+
+    /// Build the protocol config. `sparsify` selects dynamic (Fig. 2) vs
+    /// fixed-rate (Table 2) thresholds for the sparsifying protocols.
+    pub fn config(self, sparsify: SparsifyMode, quant: QuantConfig) -> ProtocolConfig {
+        let rate = match sparsify {
+            SparsifyMode::TopK { rate } => rate,
+            _ => 0.96,
+        };
+        match self {
+            Protocol::FedAvg => ProtocolConfig {
+                codec: None,
+                scaled: false,
+                residuals: false,
+            },
+            Protocol::FedAvgQ => ProtocolConfig {
+                codec: Some(UpdateCodec {
+                    sparsify: SparsifyMode::None,
+                    quant,
+                    ternary: false,
+                }),
+                scaled: false,
+                residuals: false,
+            },
+            Protocol::Stc | Protocol::StcScaled => ProtocolConfig {
+                codec: Some(UpdateCodec {
+                    sparsify: SparsifyMode::TopK { rate },
+                    quant,
+                    ternary: true,
+                }),
+                scaled: self == Protocol::StcScaled,
+                residuals: true,
+            },
+            Protocol::SparseOnly => ProtocolConfig {
+                codec: Some(UpdateCodec {
+                    sparsify,
+                    quant,
+                    ternary: false,
+                }),
+                scaled: false,
+                residuals: false,
+            },
+            Protocol::Fsfl => ProtocolConfig {
+                codec: Some(UpdateCodec {
+                    sparsify,
+                    quant,
+                    ternary: false,
+                }),
+                scaled: true,
+                residuals: false,
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for Protocol {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Ok(Protocol::FedAvg),
+            "fedavg_q" | "fedavgq" => Ok(Protocol::FedAvgQ),
+            "stc" => Ok(Protocol::Stc),
+            "sparse" | "sparse_only" | "eqs23" => Ok(Protocol::SparseOnly),
+            "stc_scaled" => Ok(Protocol::StcScaled),
+            "fsfl" => Ok(Protocol::Fsfl),
+            other => Err(anyhow::anyhow!("unknown protocol {other:?}")),
+        }
+    }
+}
+
+/// Full experiment description (one Fig. 2 curve / Table 2 cell).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub artifacts_root: std::path::PathBuf,
+    pub variant: String,
+    pub task: TaskKind,
+    pub protocol: Protocol,
+    /// Dynamic (Fig. 2) or fixed-rate (Table 2) sparsification.
+    pub sparsify: SparsifyMode,
+    pub quant: QuantConfig,
+    pub clients: usize,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Local weight-training epochs per round.
+    pub local_epochs: usize,
+    /// Scale-factor sub-epochs E (Algorithm 1).
+    pub scale_epochs: usize,
+    pub optimizer: Optimizer,
+    pub lr: f32,
+    pub scale_optimizer: Optimizer,
+    pub scale_lr: f32,
+    pub schedule: ScheduleKind,
+    /// Compress the server→clients broadcast too (Fig. 2 VGG16 bidir).
+    pub bidirectional: bool,
+    /// Dirichlet alpha for non-IID splits; `None` → random IID split.
+    pub dirichlet_alpha: Option<f64>,
+    pub train_per_client: usize,
+    pub val_per_client: usize,
+    pub test_samples: usize,
+    pub seed: u64,
+    /// Early-exit once the central model reaches this accuracy.
+    pub target_accuracy: Option<f64>,
+    /// Fraction of clients participating per round (1.0 = all).
+    pub participation: f64,
+    /// Force error accumulation on/off regardless of protocol default
+    /// (Fig. 5 runs every protocol with residuals).
+    pub residuals_override: Option<bool>,
+    /// Warmup steps on server data before FL starts (emulates the paper's
+    /// ImageNet-pretrained starting point).
+    pub warmup_steps: usize,
+}
+
+impl ExperimentConfig {
+    /// Small, fast defaults (CI preset). Harnesses override fields.
+    pub fn quick(variant: &str, task: TaskKind, protocol: Protocol) -> Self {
+        Self {
+            name: format!("{variant}-{}", protocol.name()),
+            artifacts_root: "artifacts".into(),
+            variant: variant.to_string(),
+            task,
+            protocol,
+            sparsify: SparsifyMode::Dynamic {
+                delta: 1.0,
+                gamma: 1.0,
+            },
+            quant: QuantConfig::default(),
+            clients: 2,
+            rounds: 5,
+            local_epochs: 1,
+            scale_epochs: 2,
+            optimizer: Optimizer::Adam,
+            lr: 1e-3,
+            scale_optimizer: Optimizer::Adam,
+            scale_lr: 1e-2,
+            schedule: ScheduleKind::Linear,
+            bidirectional: false,
+            dirichlet_alpha: None,
+            train_per_client: 64,
+            val_per_client: 32,
+            test_samples: 64,
+            seed: 0,
+            target_accuracy: None,
+            participation: 1.0,
+            residuals_override: None,
+            warmup_steps: 0,
+        }
+    }
+
+    pub fn protocol_config(&self) -> ProtocolConfig {
+        let mut p = self.protocol.config(self.sparsify, self.quant);
+        if let Some(r) = self.residuals_override {
+            p.residuals = r;
+        }
+        p
+    }
+
+    /// Downstream codec for bidirectional compression (paper: halved
+    /// coarse step so two quantization legs stay within budget).
+    pub fn downstream_codec(&self) -> Option<UpdateCodec> {
+        if !self.bidirectional {
+            return None;
+        }
+        Some(UpdateCodec {
+            sparsify: self.sparsify,
+            quant: QuantConfig::bidirectional(),
+            ternary: false,
+        })
+    }
+}

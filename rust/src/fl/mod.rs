@@ -1,0 +1,206 @@
+//! The federated learning system: configuration, schedules, client/server
+//! roles, and the [`Experiment`] driver that runs a full FL process and
+//! produces a [`RunLog`].
+
+pub mod client;
+pub mod config;
+pub mod schedule;
+pub mod server;
+#[cfg(test)]
+mod tests;
+
+pub use client::{Client, ClientRoundOutput};
+pub use config::{ExperimentConfig, Protocol, ProtocolConfig};
+pub use schedule::{LrSchedule, ScheduleKind};
+pub use server::{EvalReport, Server};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{batches, iid_split, Batch, Dataset, TaskSpec};
+use crate::metrics::{RoundMetrics, RunLog, ScaleStats};
+use crate::model::Group;
+use crate::runtime::{ModelRuntime, OptState, Runtime};
+
+/// A fully-wired FL experiment over one model variant + task + protocol.
+pub struct Experiment<'rt> {
+    pub cfg: ExperimentConfig,
+    pub mr: ModelRuntime<'rt>,
+    pub server: Server,
+    pub clients: Vec<Client>,
+    pub train_data: Dataset,
+    pub test_batches: Vec<Batch>,
+}
+
+impl<'rt> Experiment<'rt> {
+    /// Build everything: runtime artifacts, synthetic task, client splits,
+    /// initial synchronization (server and clients share init.bin).
+    pub fn build(rt: &'rt Runtime, cfg: ExperimentConfig) -> Result<Self> {
+        let mr = ModelRuntime::open(rt, &cfg.artifacts_root, &cfg.variant)?;
+        let man = mr.manifest.clone();
+        if man.classes != cfg.task.classes() {
+            return Err(anyhow!(
+                "variant {} has {} classes but task needs {}",
+                cfg.variant,
+                man.classes,
+                cfg.task.classes()
+            ));
+        }
+        let (h, _w, c) = (man.input[0], man.input[1], man.input[2]);
+        let spec = TaskSpec::new(cfg.task, h, c, cfg.seed.wrapping_add(1));
+
+        let per_client = cfg.train_per_client + cfg.val_per_client;
+        let train_data = Dataset::generate(&spec, per_client * cfg.clients, 0);
+        let test_data = Dataset::generate(&spec, cfg.test_samples, 1);
+        let test_order: Vec<usize> = (0..test_data.len()).collect();
+        let test_batches = batches(&test_data, &test_order, man.batch);
+
+        let val_frac = cfg.val_per_client as f64 / per_client as f64;
+        let split = match cfg.dirichlet_alpha {
+            Some(alpha) => {
+                crate::data::dirichlet_split(&train_data, cfg.clients, alpha, val_frac, cfg.seed)
+            }
+            None => iid_split(&train_data, cfg.clients, val_frac, cfg.seed),
+        };
+
+        let mut init = mr.init_params()?;
+
+        // Optional warmup (pretraining substitute): a few server-side steps
+        // on held-out data so FL starts from a non-random model.
+        if cfg.warmup_steps > 0 {
+            let warm = Dataset::generate(&spec, cfg.warmup_steps * man.batch, 2);
+            let order: Vec<usize> = (0..warm.len()).collect();
+            let mut wopt = OptState::zeros(&man, Group::Weight);
+            for b in batches(&warm, &order, man.batch) {
+                mr.train_step(&mut init, &mut wopt, cfg.optimizer, cfg.lr, &b.x, &b.y)?;
+            }
+        }
+
+        let pcfg = cfg.protocol_config();
+        let batches_per_epoch = (cfg.train_per_client / man.batch).max(1);
+        let total_scale_steps = cfg.rounds * cfg.scale_epochs * batches_per_epoch;
+        let period = cfg.scale_epochs * batches_per_epoch;
+
+        let clients = split
+            .train
+            .iter()
+            .zip(&split.val)
+            .enumerate()
+            .map(|(id, (tr, va))| {
+                Client::new(
+                    id,
+                    init.clone(),
+                    tr.clone(),
+                    va.clone(),
+                    LrSchedule::new(cfg.schedule, cfg.scale_lr, total_scale_steps, period),
+                    pcfg.residuals,
+                    cfg.seed ^ (id as u64 + 1),
+                )
+            })
+            .collect();
+
+        let server = Server::new(init, cfg.downstream_codec());
+        Ok(Self {
+            cfg,
+            mr,
+            server,
+            clients,
+            train_data,
+            test_batches,
+        })
+    }
+
+    /// Run the full FL process (Algorithm 1 outer loop), returning the
+    /// per-round log all harnesses consume.
+    pub fn run(&mut self) -> Result<RunLog> {
+        self.run_with(|_| {})
+    }
+
+    /// Like [`Self::run`] but invoking `on_round` after every round (for
+    /// live progress printing in the CLI/examples).
+    pub fn run_with(&mut self, mut on_round: impl FnMut(&RoundMetrics)) -> Result<RunLog> {
+        let pcfg = self.cfg.protocol_config();
+        let mut log = RunLog::new(self.cfg.name.clone());
+        for t in 0..self.cfg.rounds {
+            let m = self.run_round(t, &pcfg)?;
+            on_round(&m);
+            let acc = m.accuracy;
+            log.push(m);
+            if let Some(target) = self.cfg.target_accuracy {
+                if acc >= target {
+                    break;
+                }
+            }
+        }
+        Ok(log)
+    }
+
+    fn run_round(&mut self, t: usize, pcfg: &ProtocolConfig) -> Result<RoundMetrics> {
+        let mut updates = Vec::with_capacity(self.clients.len());
+        let mut m = RoundMetrics {
+            round: t,
+            ..Default::default()
+        };
+        let mut sparsity_sum = 0.0;
+        let mut rows_sum = 0.0;
+        // Partial participation: a deterministic per-round subset.
+        let n = self.clients.len();
+        let take = ((self.cfg.participation * n as f64).round() as usize).clamp(1, n);
+        let mut order: Vec<usize> = (0..n).collect();
+        if take < n {
+            let mut rng = crate::data::XorShiftRng::new(self.cfg.seed ^ (t as u64 + 0xF00D));
+            rng.shuffle(&mut order);
+        }
+        let participants: Vec<usize> = order[..take].to_vec();
+        for &ci in &participants {
+            let client = &mut self.clients[ci];
+            let out = client.run_round(&self.mr, &self.train_data, &self.cfg, pcfg)?;
+            m.up_bytes += out.up_bytes;
+            m.train_ms += out.train_ms;
+            m.scale_ms += out.scale_ms;
+            m.scale_accepted += out.scale_accepted as usize;
+            let sp = out
+                .update
+                .sparsity_of(&self.server.params.manifest.update_indices());
+            m.client_sparsity.push(sp);
+            sparsity_sum += sp;
+            if out.stats.rows_total > 0 {
+                rows_sum += out.stats.rows_skipped as f64 / out.stats.rows_total as f64;
+            }
+            // the server decodes the actual bitstreams (wire-path fidelity)
+            let decoded = self.server.decode_client(&out)?;
+            debug_assert_eq!(decoded, out.update, "codec decode != client view");
+            updates.push(decoded);
+        }
+        m.update_sparsity = sparsity_sum / participants.len() as f64;
+        m.rows_skipped = rows_sum / participants.len() as f64;
+
+        let agg = self.server.aggregate(&updates);
+        m.down_bytes = agg.down_bytes_each * self.clients.len();
+        for client in &mut self.clients {
+            client.apply_broadcast(&agg.broadcast);
+        }
+
+        let report = self.server.evaluate(&self.mr, &self.test_batches)?;
+        m.accuracy = report.accuracy;
+        m.f1 = report.f1;
+        m.test_loss = report.loss;
+
+        // Fig. 3: per-layer scale statistics from client 0's replica
+        if pcfg.scaled {
+            m.scale_stats = self.clients[0]
+                .scale_values()
+                .into_iter()
+                .map(|(layer, vals)| ScaleStats::from_values(&layer, &vals))
+                .collect();
+        }
+        Ok(m)
+    }
+
+    /// Consistency invariant: every client replica must equal the server
+    /// state after synchronization (checked by integration tests).
+    pub fn replicas_in_sync(&self) -> bool {
+        self.clients
+            .iter()
+            .all(|c| c.global == self.server.params)
+    }
+}

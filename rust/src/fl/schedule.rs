@@ -1,0 +1,141 @@
+//! Learning-rate schedules for scale-factor optimization (paper Sec. 4.1,
+//! Fig. 1). The scheduler steps **once per inferenced batch**; CAWR warm
+//! restarts fire at the start of each main training epoch t, right before
+//! the scale sub-epochs.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Constant base learning rate (the "no schedule" Fig. 2 configs).
+    Const,
+    /// Linearly decreasing from base to ~0 over the whole FL process.
+    Linear,
+    /// Cosine annealing with warm restarts at every main epoch.
+    Cawr,
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "const" | "none" => Ok(ScheduleKind::Const),
+            "linear" => Ok(ScheduleKind::Linear),
+            "cawr" | "cosine" => Ok(ScheduleKind::Cawr),
+            other => Err(anyhow::anyhow!("unknown schedule {other:?}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub kind: ScheduleKind,
+    pub base_lr: f32,
+    pub min_lr: f32,
+    /// Total batch-steps across the whole FL process (Linear ramp length).
+    pub total_steps: usize,
+    /// Batch-steps per restart period (CAWR: one round's scale steps).
+    pub period_steps: usize,
+    global_step: usize,
+    period_step: usize,
+}
+
+impl LrSchedule {
+    pub fn new(kind: ScheduleKind, base_lr: f32, total_steps: usize, period_steps: usize) -> Self {
+        Self {
+            kind,
+            base_lr,
+            min_lr: 0.0,
+            total_steps: total_steps.max(1),
+            period_steps: period_steps.max(1),
+            global_step: 0,
+            period_step: 0,
+        }
+    }
+
+    /// Learning rate for the *current* step, then advance.
+    pub fn next_lr(&mut self) -> f32 {
+        let lr = self.peek();
+        self.global_step += 1;
+        self.period_step += 1;
+        lr
+    }
+
+    pub fn peek(&self) -> f32 {
+        match self.kind {
+            ScheduleKind::Const => self.base_lr,
+            ScheduleKind::Linear => {
+                let frac = (self.global_step as f32 / self.total_steps as f32).min(1.0);
+                self.min_lr + (self.base_lr - self.min_lr) * (1.0 - frac)
+            }
+            ScheduleKind::Cawr => {
+                let frac = (self.period_step as f32 / self.period_steps as f32).min(1.0);
+                self.min_lr
+                    + 0.5
+                        * (self.base_lr - self.min_lr)
+                        * (1.0 + (std::f32::consts::PI * frac).cos())
+            }
+        }
+    }
+
+    /// Warm restart (CAWR): reset the within-period counter.
+    pub fn restart(&mut self) {
+        self.period_step = 0;
+    }
+
+    pub fn global_step(&self) -> usize {
+        self.global_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_flat() {
+        let mut s = LrSchedule::new(ScheduleKind::Const, 0.1, 100, 10);
+        for _ in 0..50 {
+            assert_eq!(s.next_lr(), 0.1);
+        }
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let mut s = LrSchedule::new(ScheduleKind::Linear, 1.0, 100, 10);
+        assert!((s.next_lr() - 1.0).abs() < 1e-6);
+        for _ in 0..99 {
+            s.next_lr();
+        }
+        assert!(s.peek() < 1e-6);
+        // monotone decreasing
+        let mut s = LrSchedule::new(ScheduleKind::Linear, 1.0, 50, 10);
+        let mut prev = f32::INFINITY;
+        for _ in 0..50 {
+            let lr = s.next_lr();
+            assert!(lr <= prev);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn cawr_restarts() {
+        let mut s = LrSchedule::new(ScheduleKind::Cawr, 1.0, 1000, 10);
+        assert!((s.next_lr() - 1.0).abs() < 1e-6);
+        for _ in 0..9 {
+            s.next_lr();
+        }
+        // end of period: near min
+        assert!(s.peek() < 0.01);
+        s.restart();
+        assert!((s.peek() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cawr_is_cosine_shaped() {
+        let mut s = LrSchedule::new(ScheduleKind::Cawr, 2.0, 1000, 100);
+        for _ in 0..50 {
+            s.next_lr();
+        }
+        // halfway through the period: half the base lr
+        assert!((s.peek() - 1.0).abs() < 0.05);
+    }
+}

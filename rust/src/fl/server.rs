@@ -1,0 +1,118 @@
+//! FL server: federated averaging of (decoded) client updates, optional
+//! downstream compression, and central-model evaluation.
+
+use anyhow::Result;
+
+use crate::compression::UpdateCodec;
+use crate::data::Batch;
+use crate::metrics::Confusion;
+use crate::model::params::Delta;
+use crate::model::ParamSet;
+use crate::runtime::ModelRuntime;
+
+pub struct Server {
+    pub params: ParamSet,
+    pub downstream: Option<UpdateCodec>,
+    update_idx: Vec<usize>,
+}
+
+/// Result of one aggregation.
+pub struct AggregateOutput {
+    /// The delta every client must apply (dequantized if bidirectional).
+    pub broadcast: Delta,
+    /// Downstream bytes **per client**.
+    pub down_bytes_each: usize,
+}
+
+impl Server {
+    pub fn new(params: ParamSet, downstream: Option<UpdateCodec>) -> Self {
+        let update_idx = params.manifest.update_indices();
+        Self {
+            params,
+            downstream,
+            update_idx,
+        }
+    }
+
+    /// Decode client bitstreams (the wire path every compressed protocol
+    /// exercises). Plain-FedAvg outputs carry the update directly.
+    pub fn decode_client(&self, out: &crate::fl::client::ClientRoundOutput) -> Result<Delta> {
+        if out.streams.is_empty() {
+            return Ok(out.update.clone());
+        }
+        let mut total = Delta::zeros(self.params.manifest.clone());
+        for s in &out.streams {
+            let d = crate::compression::decode_update(s, &self.params.manifest)?;
+            total.accumulate(&d);
+        }
+        Ok(total)
+    }
+
+    /// FedAvg (line 24): ΔW_S = 1/|I| Σ Δ̂W_i, then optional downstream
+    /// compression, then apply to the server model (line 25).
+    pub fn aggregate(&mut self, updates: &[Delta]) -> AggregateOutput {
+        assert!(!updates.is_empty());
+        let mut avg = Delta::zeros(self.params.manifest.clone());
+        let w = 1.0 / updates.len() as f32;
+        for u in updates {
+            avg.accumulate_scaled(u, w);
+        }
+        let (broadcast, down_bytes_each) = match &self.downstream {
+            Some(codec) => {
+                let (bytes, deq, _) = codec.encode(avg, &self.update_idx);
+                (deq, bytes.len())
+            }
+            None => {
+                let bytes = crate::compression::cabac::codec::raw_bytes(&self.params, &self.update_idx);
+                (avg, bytes)
+            }
+        };
+        self.params.add_delta(&broadcast);
+        AggregateOutput {
+            broadcast,
+            down_bytes_each,
+        }
+    }
+
+    /// Central-model evaluation: loss, top-1 accuracy and (via predictions)
+    /// binary F1 for 2-class tasks.
+    pub fn evaluate(&self, mr: &ModelRuntime, test: &[Batch]) -> Result<EvalReport> {
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        let mut confusion = Confusion::default();
+        let classes = self.params.manifest.classes;
+        for b in test {
+            let out = mr.eval_step(&self.params, &b.x, &b.y)?;
+            loss += out.loss as f64 * b.size as f64;
+            correct += out.correct as f64;
+            total += b.size;
+            if classes == 2 {
+                let preds = mr.predict_step(&self.params, &b.x)?;
+                for (bi, &p) in preds.iter().enumerate() {
+                    let label = b.y[bi * classes..(bi + 1) * classes]
+                        .iter()
+                        .position(|&v| v == 1.0)
+                        .unwrap_or(0);
+                    confusion.add(p as usize, label, 0);
+                }
+            }
+        }
+        Ok(EvalReport {
+            loss: if total == 0 { 0.0 } else { loss / total as f64 },
+            accuracy: if total == 0 {
+                0.0
+            } else {
+                correct / total as f64
+            },
+            f1: confusion.f1(),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalReport {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub f1: f64,
+}

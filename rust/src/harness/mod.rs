@@ -1,0 +1,718 @@
+//! Benchmark harnesses: regenerate every table and figure of the paper's
+//! evaluation section (DESIGN.md experiment index).
+//!
+//! Each harness prints the same rows/series the paper reports and writes
+//! CSVs under `results/`. Two presets: `quick` (tiny model, few rounds —
+//! CI-friendly) and `paper` (the thinned paper models, full round counts).
+
+use std::path::Path;
+
+use crate::cli::Flags;
+use anyhow::Result;
+
+use crate::compression::SparsifyMode;
+use crate::data::TaskKind;
+use crate::fl::{ExperimentConfig, LrSchedule, Protocol, ScheduleKind};
+use crate::metrics::{fmt_bytes, RunLog};
+use crate::runtime::{Optimizer, Runtime};
+
+fn is_quick(preset: &str) -> bool {
+    preset != "paper"
+}
+
+fn write_lines(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+fn run_and_save(rt: &Runtime, cfg: ExperimentConfig, out: &Path) -> Result<RunLog> {
+    let name = cfg.name.clone();
+    println!("== {name} ==");
+    let mut exp = crate::fl::Experiment::build(rt, cfg)?;
+    let log = exp.run_with(crate::coordinator::print_round)?;
+    log.write_csv(out.join(format!("{name}.csv")))?;
+    Ok(log)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — learning-rate schedules
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Fig1Args {
+    /// Main training epochs |T|.
+    pub epochs: usize,
+    /// Scheduler steps (batches) per epoch.
+    pub steps_per_epoch: usize,
+    pub base_lr: f32,
+}
+
+impl Fig1Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            epochs: f.get_or("epochs", 15)?,
+            steps_per_epoch: f.get_or("steps-per-epoch", 20)?,
+            base_lr: f.get_or("base-lr", 1e-2)?,
+        })
+    }
+}
+
+pub fn fig1(out: &Path, a: Fig1Args) -> Result<()> {
+    let total = a.epochs * a.steps_per_epoch;
+    let mut rows = Vec::new();
+    let mut schedules = [
+        ("const", LrSchedule::new(ScheduleKind::Const, a.base_lr, total, a.steps_per_epoch)),
+        ("linear", LrSchedule::new(ScheduleKind::Linear, a.base_lr, total, a.steps_per_epoch)),
+        ("cawr", LrSchedule::new(ScheduleKind::Cawr, a.base_lr, total, a.steps_per_epoch)),
+    ];
+    for step in 0..total {
+        if step % a.steps_per_epoch == 0 {
+            schedules.iter_mut().for_each(|(_, s)| s.restart());
+        }
+        let lrs: Vec<f32> = schedules.iter_mut().map(|(_, s)| s.next_lr()).collect();
+        rows.push(format!(
+            "{},{:.3},{:.6},{:.6},{:.6}",
+            step,
+            step as f32 / a.steps_per_epoch as f32,
+            lrs[0],
+            lrs[1],
+            lrs[2]
+        ));
+    }
+    let path = out.join("fig1_schedules.csv");
+    write_lines(&path, "step,epoch,const,linear,cawr", &rows)?;
+    println!("fig1: {} steps over {} epochs → {}", total, a.epochs, path.display());
+    // textual sketch at epoch resolution
+    for e in 0..a.epochs {
+        let i = e * a.steps_per_epoch;
+        let line: Vec<&str> = rows[i].split(',').collect();
+        println!("epoch {e:>2}: const {}, linear {}, cawr {}", line[2], line[3], line[4]);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — accuracy vs cumulative transmitted data per configuration
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Fig2Args {
+    pub preset: String,
+    /// Model variant (paper panels: vgg11_thin, resnet8, mobilenet_tiny,
+    /// vgg16_head / vgg16_partial).
+    pub variant: Option<String>,
+    /// Task (cifar / voc / xray).
+    pub task: Option<String>,
+    /// Also run the SGD scale-optimizer configs (paper Appendix B).
+    pub sgd: bool,
+    /// Bidirectional compression (paper's VGG16 Chest X-Ray panel).
+    pub bidirectional: bool,
+    pub clients: usize,
+    pub rounds: Option<usize>,
+    pub seed: u64,
+}
+
+impl Fig2Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variant: f.str_opt("variant"),
+            task: f.str_opt("task"),
+            sgd: f.flag("sgd"),
+            bidirectional: f.flag("bidirectional"),
+            clients: f.get_or("clients", 2)?,
+            rounds: f.get("rounds")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+fn task_from(s: &str) -> TaskKind {
+    match s {
+        "voc" => TaskKind::VocLike,
+        "xray" => TaskKind::XrayLike,
+        _ => TaskKind::CifarLike,
+    }
+}
+
+pub fn fig2(artifacts: &Path, out: &Path, a: Fig2Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variant = a.variant.clone().unwrap_or_else(|| {
+        if quick { "tiny_cnn" } else { "mobilenet_tiny" }.to_string()
+    });
+    let task = task_from(a.task.as_deref().unwrap_or(if quick { "cifar" } else { "voc" }));
+    let rounds = a.rounds.unwrap_or(if quick { 6 } else { 15 });
+    let rt = Runtime::cpu()?;
+
+    let opts: Vec<(Optimizer, &str)> = if a.sgd {
+        vec![(Optimizer::Adam, "adam"), (Optimizer::Sgd, "sgd")]
+    } else {
+        vec![(Optimizer::Adam, "adam")]
+    };
+    let schedules = [
+        (ScheduleKind::Const, "none"),
+        (ScheduleKind::Linear, "linear"),
+        (ScheduleKind::Cawr, "cawr"),
+    ];
+
+    let base = |name: String, protocol: Protocol| -> ExperimentConfig {
+        let mut c = ExperimentConfig::quick(&variant, task, protocol);
+        c.name = name;
+        c.artifacts_root = artifacts.to_path_buf();
+        c.clients = a.clients;
+        c.rounds = rounds;
+        c.scale_epochs = if quick { 2 } else { 3 };
+        c.train_per_client = if quick { 96 } else { 256 };
+        c.val_per_client = if quick { 32 } else { 64 };
+        c.test_samples = if quick { 64 } else { 256 };
+        c.bidirectional = a.bidirectional;
+        c.seed = a.seed;
+        c
+    };
+
+    let mut summaries = Vec::new();
+    let mut logs = Vec::new();
+    // baseline: no scaling, no sparsification (quantized + DeepCABAC)
+    logs.push(run_and_save(&rt, base(format!("fig2-{variant}-baseline"), Protocol::FedAvgQ), out)?);
+    // sparse baseline: Eqs.(2)+(3) only
+    logs.push(run_and_save(&rt, base(format!("fig2-{variant}-sparse"), Protocol::SparseOnly), out)?);
+    // FSFL configs: optimizer × schedule
+    for (opt, oname) in &opts {
+        for (sched, sname) in &schedules {
+            let mut c = base(
+                format!("fig2-{variant}-fsfl-{oname}-{sname}"),
+                Protocol::Fsfl,
+            );
+            c.scale_optimizer = *opt;
+            c.schedule = *sched;
+            if *opt == Optimizer::Sgd {
+                c.scale_lr = 5e-2;
+            }
+            logs.push(run_and_save(&rt, c, out)?);
+        }
+    }
+    for log in &logs {
+        summaries.push(format!(
+            "{},{:.4},{},{}",
+            log.name,
+            log.best_accuracy(),
+            log.total_bytes(true),
+            log.total_bytes(false)
+        ));
+    }
+    let path = out.join(format!("fig2_{variant}_summary.csv"));
+    write_lines(&path, "config,best_acc,up_bytes,total_bytes", &summaries)?;
+    println!("\nfig2 summary ({}):", path.display());
+    for s in &summaries {
+        println!("  {s}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — scale-factor statistics at three depths
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Fig3Args {
+    pub preset: String,
+    pub variant: Option<String>,
+    pub rounds: Option<usize>,
+    pub seed: u64,
+}
+
+impl Fig3Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variant: f.str_opt("variant"),
+            rounds: f.get("rounds")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+pub fn fig3(artifacts: &Path, out: &Path, a: Fig3Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variant = a
+        .variant
+        .clone()
+        .unwrap_or_else(|| if quick { "tiny_cnn" } else { "mobilenet_tiny" }.to_string());
+    let task = if variant.starts_with("mobilenet") {
+        TaskKind::VocLike
+    } else {
+        TaskKind::CifarLike
+    };
+    let rounds = a.rounds.unwrap_or(if quick { 6 } else { 15 });
+    let rt = Runtime::cpu()?;
+    let mut cfg = ExperimentConfig::quick(&variant, task, Protocol::Fsfl);
+    cfg.name = format!("fig3-{variant}");
+    cfg.artifacts_root = artifacts.to_path_buf();
+    cfg.rounds = rounds;
+    cfg.scale_epochs = if quick { 2 } else { 3 };
+    cfg.scale_lr = 5e-2; // pronounced amplify/suppress dynamics
+    cfg.train_per_client = if quick { 96 } else { 256 };
+    cfg.seed = a.seed;
+
+    let mut exp = crate::fl::Experiment::build(&rt, cfg)?;
+    let log = exp.run_with(crate::coordinator::print_round)?;
+
+    // pick shallow / deep / output layers with scales
+    let layers: Vec<String> = log
+        .rounds
+        .last()
+        .map(|r| r.scale_stats.iter().map(|s| s.layer.clone()).collect())
+        .unwrap_or_default();
+    if layers.is_empty() {
+        return Err(anyhow::anyhow!("no scale stats recorded"));
+    }
+    let picks = [
+        layers.first().unwrap().clone(),
+        layers[layers.len() / 2].clone(),
+        layers.last().unwrap().clone(),
+    ];
+    let mut rows = Vec::new();
+    for r in &log.rounds {
+        for s in &r.scale_stats {
+            if picks.contains(&s.layer) {
+                rows.push(format!(
+                    "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                    r.round, s.layer, s.min, s.q25, s.median, s.q75, s.max, s.mean, s.suppressed
+                ));
+            }
+        }
+    }
+    let path = out.join(format!("fig3_{variant}_scales.csv"));
+    write_lines(&path, "round,layer,min,q25,median,q75,max,mean,suppressed", &rows)?;
+    println!("\nfig3: per-round scale stats for layers {picks:?} → {}", path.display());
+    if let Some(last) = log.rounds.last() {
+        for s in &last.scale_stats {
+            if picks.contains(&s.layer) {
+                println!(
+                    "  final {}: min {:.3} med {:.3} max {:.3} mean {:.3} suppressed {:.1}%",
+                    s.layer, s.min, s.median, s.max, s.mean, s.suppressed * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — ΔW sparsity per epoch, scaled vs unscaled (2 clients)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Fig4Args {
+    pub preset: String,
+    pub variant: Option<String>,
+    pub rounds: Option<usize>,
+    pub seed: u64,
+}
+
+impl Fig4Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variant: f.str_opt("variant"),
+            rounds: f.get("rounds")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+pub fn fig4(artifacts: &Path, out: &Path, a: Fig4Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variant = a
+        .variant
+        .clone()
+        .unwrap_or_else(|| if quick { "tiny_cnn" } else { "mobilenet_tiny" }.to_string());
+    let task = if variant.starts_with("mobilenet") {
+        TaskKind::VocLike
+    } else {
+        TaskKind::CifarLike
+    };
+    let rounds = a.rounds.unwrap_or(if quick { 6 } else { 15 });
+    let rt = Runtime::cpu()?;
+
+    let mk = |protocol: Protocol, name: &str| -> ExperimentConfig {
+        let mut c = ExperimentConfig::quick(&variant, task, protocol);
+        c.name = format!("fig4-{variant}-{name}");
+        c.artifacts_root = artifacts.to_path_buf();
+        c.clients = 2;
+        c.rounds = rounds;
+        c.scale_epochs = if quick { 2 } else { 3 };
+        c.train_per_client = if quick { 96 } else { 256 };
+        c.seed = a.seed;
+        c
+    };
+    let scaled = run_and_save(&rt, mk(Protocol::Fsfl, "scaled"), out)?;
+    let unscaled = run_and_save(&rt, mk(Protocol::SparseOnly, "unscaled"), out)?;
+
+    let mut rows = Vec::new();
+    for (rs, ru) in scaled.rounds.iter().zip(&unscaled.rounds) {
+        let g = |v: &[f64], i: usize| v.get(i).copied().unwrap_or(f64::NAN);
+        rows.push(format!(
+            "{},{:.4},{:.4},{:.4},{:.4}",
+            rs.round,
+            g(&rs.client_sparsity, 0),
+            g(&rs.client_sparsity, 1),
+            g(&ru.client_sparsity, 0),
+            g(&ru.client_sparsity, 1),
+        ));
+    }
+    let path = out.join(format!("fig4_{variant}_sparsity.csv"));
+    write_lines(
+        &path,
+        "round,scaled_c0,scaled_c1,unscaled_c0,unscaled_c1",
+        &rows,
+    )?;
+    println!("\nfig4 → {}", path.display());
+    for r in &rows {
+        println!("  {r}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — residuals + client-count scaling (2/4/8)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Fig5Args {
+    pub preset: String,
+    pub variant: Option<String>,
+    pub clients: Option<Vec<usize>>,
+    pub rounds: Option<usize>,
+    pub seed: u64,
+}
+
+impl Fig5Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variant: f.str_opt("variant"),
+            clients: f.list("clients")?,
+            rounds: f.get("rounds")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+pub fn fig5(artifacts: &Path, out: &Path, a: Fig5Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variant = a
+        .variant
+        .clone()
+        .unwrap_or_else(|| if quick { "tiny_cnn" } else { "resnet8" }.to_string());
+    let task = if variant == "resnet8" {
+        TaskKind::VocLike
+    } else {
+        TaskKind::CifarLike
+    };
+    let clients = a.clients.clone().unwrap_or_else(|| {
+        if quick {
+            vec![2, 4]
+        } else {
+            vec![2, 4, 8]
+        }
+    });
+    let rounds = a.rounds.unwrap_or(if quick { 6 } else { 15 });
+    let rt = Runtime::cpu()?;
+
+    let mut summary = Vec::new();
+    for &n in &clients {
+        for (protocol, label) in [(Protocol::Fsfl, "scaled"), (Protocol::SparseOnly, "unscaled")] {
+            let mut c = ExperimentConfig::quick(&variant, task, protocol);
+            c.name = format!("fig5-{variant}-{label}-c{n}");
+            c.artifacts_root = artifacts.to_path_buf();
+            c.clients = n;
+            c.rounds = rounds;
+            c.residuals_override = Some(true); // error accumulation as in Fig. 5
+            c.scale_epochs = if quick { 2 } else { 3 };
+            c.train_per_client = if quick { 64 } else { 192 };
+            c.seed = a.seed;
+            let log = run_and_save(&rt, c, out)?;
+            summary.push(format!(
+                "{n},{label},{:.4},{}",
+                log.best_accuracy(),
+                log.total_bytes(true)
+            ));
+        }
+    }
+    let path = out.join(format!("fig5_{variant}_summary.csv"));
+    write_lines(&path, "clients,config,best_acc,up_bytes", &summary)?;
+    println!("\nfig5 summary → {}", path.display());
+    for s in &summary {
+        println!("  {s}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — #params_add and t_add per model
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Table1Args {
+    pub preset: String,
+    /// Variants to measure (default: everything in artifacts/index.json).
+    pub variants: Option<Vec<String>>,
+    pub seed: u64,
+}
+
+impl Table1Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variants: f.list("variants")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+pub fn table1(artifacts: &Path, out: &Path, a: Table1Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variants = match &a.variants {
+        Some(v) => v.clone(),
+        None => {
+            let text = std::fs::read_to_string(artifacts.join("index.tsv"))?;
+            let mut v: Vec<String> = text
+                .lines()
+                .filter_map(|l| l.split('\t').next())
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .collect();
+            v.sort();
+            if quick {
+                v.retain(|n| n == "tiny_cnn" || n == "vgg16_partial");
+            }
+            v
+        }
+    };
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    println!("\nTable 1: additional parameters and training time");
+    println!("{:<22} {:>12} {:>12} {:>8}", "model", "#params", "#params_add", "t_add");
+    for variant in &variants {
+        let man = crate::model::Manifest::load(artifacts.join(variant).join("manifest.tsv"))?;
+        let task = match man.classes {
+            2 => TaskKind::XrayLike,
+            20 => TaskKind::VocLike,
+            _ => TaskKind::CifarLike,
+        };
+        let mut cfg = ExperimentConfig::quick(variant, task, Protocol::Fsfl);
+        cfg.name = format!("table1-{variant}");
+        cfg.artifacts_root = artifacts.to_path_buf();
+        cfg.rounds = if quick { 2 } else { 3 };
+        cfg.scale_epochs = 1; // t_add = one W iteration + one S iteration
+        cfg.train_per_client = if quick { 64 } else { 128 };
+        cfg.val_per_client = 32;
+        cfg.test_samples = 32;
+        cfg.seed = a.seed;
+        let mut exp = crate::fl::Experiment::build(&rt, cfg)?;
+        let log = exp.run()?;
+        let train_ms: u128 = log.rounds.iter().map(|r| r.train_ms).sum();
+        let scale_ms: u128 = log.rounds.iter().map(|r| r.scale_ms).sum();
+        let t_add = (train_ms + scale_ms) as f64 / train_ms.max(1) as f64;
+        println!(
+            "{:<22} {:>12} {:>12} {:>7.2}x",
+            variant, man.param_count, man.scale_count, t_add
+        );
+        rows.push(format!(
+            "{variant},{},{},{:.3}",
+            man.param_count, man.scale_count, t_add
+        ));
+    }
+    let path = out.join("table1_overhead.csv");
+    write_lines(&path, "model,params,params_add,t_add", &rows)?;
+    println!("table1 → {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — protocol comparison at 2/4/8/16 clients
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Table2Args {
+    pub preset: String,
+    pub variant: Option<String>,
+    pub clients: Option<Vec<usize>>,
+    /// Communication epochs T (paper: 90).
+    pub rounds: Option<usize>,
+    /// Constant sparsity rate (paper: 0.96).
+    pub rate: f32,
+    /// Target accuracy; default = best accuracy of the FedAvg run.
+    pub target: Option<f64>,
+    pub seed: u64,
+}
+
+impl Table2Args {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            preset: f.str_or("preset", "quick"),
+            variant: f.str_opt("variant"),
+            clients: f.list("clients")?,
+            rounds: f.get("rounds")?,
+            rate: f.get_or("rate", 0.96)?,
+            target: f.get("target")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+pub fn table2(artifacts: &Path, out: &Path, a: Table2Args) -> Result<()> {
+    let quick = is_quick(&a.preset);
+    let variant = a
+        .variant
+        .clone()
+        .unwrap_or_else(|| if quick { "tiny_cnn" } else { "vgg11_thin" }.to_string());
+    let clients = a.clients.clone().unwrap_or_else(|| {
+        if quick {
+            vec![2, 4]
+        } else {
+            vec![2, 4, 8, 16]
+        }
+    });
+    let rounds = a.rounds.unwrap_or(if quick { 36 } else { 90 });
+    let rt = Runtime::cpu()?;
+
+    let mut rows = Vec::new();
+    println!("\nTable 2: Σdata to target accuracy / Σdata at T={rounds} (upstream only)");
+    for &n in &clients {
+        // run FedAvg first: it defines the target accuracy for this column
+        let mut results: Vec<(String, RunLog)> = Vec::new();
+        for protocol in Protocol::ALL {
+            let mut c = ExperimentConfig::quick(&variant, TaskKind::CifarLike, protocol);
+            c.name = format!("table2-{variant}-{}-c{n}", protocol.name().replace(['[', ']', ' ', '+'], ""));
+            c.artifacts_root = artifacts.to_path_buf();
+            c.clients = n;
+            c.rounds = rounds;
+            c.sparsify = SparsifyMode::TopK { rate: a.rate };
+            c.scale_epochs = 2;
+            c.train_per_client = if quick { 96 } else { 160 };
+            c.val_per_client = if quick { 32 } else { 32 };
+            c.test_samples = if quick { 64 } else { 160 };
+            c.seed = a.seed;
+            let log = run_and_save(&rt, c, out)?;
+            results.push((protocol.name().to_string(), log));
+        }
+        let target = a.target.unwrap_or_else(|| {
+            // paper: targets are the accuracies FedAvg reaches; use 95% of
+            // FedAvg's best as the per-column target
+            (results[0].1.best_accuracy() * 0.95).max(0.11)
+        });
+        println!("\n-- {n} clients, target acc {target:.3} --");
+        println!(
+            "{:<18} {:>12} {:>4} {:>12} {:>4} {:>8}",
+            "method", "Σdata@target", "t", "Σdata@T", "T", "best"
+        );
+        for (name, log) in &results {
+            let (t_at, bytes_at) = match log.reached(target, true) {
+                Some((t, b)) => (format!("{t}"), fmt_bytes(b)),
+                None => ("∅".into(), "∅".into()),
+            };
+            let last_t = log.rounds.last().map(|r| r.round).unwrap_or(0);
+            println!(
+                "{:<18} {:>12} {:>4} {:>12} {:>4} {:>7.3}",
+                name,
+                bytes_at,
+                t_at,
+                fmt_bytes(log.total_bytes(true)),
+                last_t,
+                log.best_accuracy()
+            );
+            rows.push(format!(
+                "{n},{name},{target:.4},{},{},{},{:.4}",
+                log.reached(target, true)
+                    .map(|(_, b)| b.to_string())
+                    .unwrap_or_default(),
+                log.reached(target, true)
+                    .map(|(t, _)| t.to_string())
+                    .unwrap_or_default(),
+                log.total_bytes(true),
+                log.best_accuracy()
+            ));
+        }
+    }
+    let path = out.join("table2_comparison.csv");
+    write_lines(
+        &path,
+        "clients,method,target,bytes_at_target,t_at_target,bytes_total,best_acc",
+        &rows,
+    )?;
+    println!("\ntable2 → {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Appendix C — client data distributions (paper Figs. C.1 / C.2)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct AppCArgs {
+    pub task: String,
+    pub clients: usize,
+    pub per_client: usize,
+    pub dirichlet: Option<f64>,
+    pub seed: u64,
+}
+
+impl AppCArgs {
+    pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
+        Ok(Self {
+            task: f.str_or("task", "voc"),
+            clients: f.get_or("clients", 8)?,
+            per_client: f.get_or("per-client", 200)?,
+            dirichlet: f.get("dirichlet")?,
+            seed: f.get_or("seed", 0)?,
+        })
+    }
+}
+
+/// Reproduce the Appendix C distribution figures: per-client label
+/// histograms of the train and validation splits (random partitioning as
+/// in the paper, or `--dirichlet <alpha>` for controlled non-IID-ness).
+pub fn appendix_c(out: &Path, a: AppCArgs) -> Result<()> {
+    use crate::data::{dirichlet_split, iid_split, Dataset, TaskSpec};
+    let kind = match a.task.as_str() {
+        "cifar" => TaskKind::CifarLike,
+        "xray" => TaskKind::XrayLike,
+        _ => TaskKind::VocLike,
+    };
+    let spec = TaskSpec::new(kind, 8, 1, a.seed.wrapping_add(1));
+    let ds = Dataset::generate(&spec, a.per_client * a.clients, 0);
+    let split = match a.dirichlet {
+        Some(alpha) => dirichlet_split(&ds, a.clients, alpha, 0.25, a.seed),
+        None => iid_split(&ds, a.clients, 0.25, a.seed),
+    };
+    let classes = ds.classes;
+    let hist = |idx: &[usize]| -> Vec<usize> {
+        let mut h = vec![0usize; classes];
+        for &i in idx {
+            h[ds.samples[i].label] += 1;
+        }
+        h
+    };
+    let mut rows = Vec::new();
+    println!("Appendix C: per-client label histograms ({} clients, {:?})", a.clients, kind);
+    for (c, (tr, va)) in split.train.iter().zip(&split.val).enumerate() {
+        let ht = hist(tr);
+        let hv = hist(va);
+        println!("client {c}: train {ht:?}");
+        println!("          val   {hv:?}");
+        for k in 0..classes {
+            rows.push(format!("{c},{k},{},{}", ht[k], hv[k]));
+        }
+    }
+    let path = out.join("appendix_c_distributions.csv");
+    write_lines(&path, "client,class,train_count,val_count", &rows)?;
+    println!("appendix C → {}", path.display());
+    Ok(())
+}

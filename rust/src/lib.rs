@@ -1,0 +1,39 @@
+//! # FSFL — Filter-Scaled Sparse Federated Learning
+//!
+//! Production reproduction of *"Adaptive Differential Filters for Fast and
+//! Communication-Efficient Federated Learning"* (Becking et al., 2022) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the federated
+//!   coordinator (server/clients, FedAvg-style rounds), the differential
+//!   update codec (dynamic sparsification → uniform quantization →
+//!   DeepCABAC entropy coding), error accumulation, and the per-filter
+//!   scale-factor training loop of Algorithm 1 with linear/CAWR learning
+//!   rate schedules.
+//! * **L2 (python/compile, build time only)** — jax model zoo + train /
+//!   scale-train / eval step functions, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — the Pallas `scaled_matmul` kernel:
+//!   the paper's Eq. (4) filter scaling fused into the matmul epilogue.
+//!
+//! Python never runs on the request path: `make artifacts` lowers
+//! everything once, then the rust binary loads `artifacts/*/*.hlo.txt`
+//! through the PJRT C API (`xla` crate) and drives the whole FL process.
+//!
+//! Entry points: [`fl::Experiment`] (programmatic), `fsfl` CLI (launcher),
+//! `examples/` (quickstart + scenario drivers).
+
+pub mod benchkit;
+pub mod cli;
+pub mod compression;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+
+pub use anyhow::{anyhow, Result};
+
+/// Crate-wide f32 tolerance used by tests comparing against python refs.
+pub const F32_TOL: f32 = 1e-4;

@@ -1,0 +1,165 @@
+//! `fsfl` — launcher CLI for the FSFL reproduction.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md
+//! experiment index): `run` for ad-hoc experiments, `fig1..fig5` and
+//! `table1`/`table2` to regenerate each figure/table's series.
+
+use anyhow::Result;
+
+use fsfl::cli::Flags;
+use fsfl::compression::SparsifyMode;
+use fsfl::coordinator;
+use fsfl::data::TaskKind;
+use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind};
+use fsfl::harness;
+use fsfl::runtime::Optimizer;
+
+const USAGE: &str = "\
+fsfl — Filter-Scaled Sparse Federated Learning (paper reproduction)
+
+USAGE: fsfl <COMMAND> [--flags]
+
+COMMANDS:
+  run      one FL experiment (--variant --task --protocol --clients
+           --rounds --local-epochs --scale-epochs --optimizer --lr
+           --scale-optimizer --scale-lr --schedule --rate --delta --gamma
+           --bidirectional --dirichlet --train-per-client --val-per-client
+           --test-samples --warmup-steps --participation --seed
+           --target-accuracy)
+  fig1     LR schedule series (--epochs --steps-per-epoch --base-lr)
+  fig2     accuracy vs transmitted data per config (--preset quick|paper
+           --variant --task --sgd --bidirectional --clients --rounds)
+  fig3     scale-factor statistics by depth (--preset --variant --rounds)
+  fig4     update sparsity per epoch, scaled vs unscaled (--preset
+           --variant --rounds)
+  fig5     residuals + client-count scaling (--preset --variant
+           --clients 2,4,8 --rounds)
+  table1   #params_add and t_add per model (--preset --variants a,b,c)
+  table2   protocol comparison (--preset --variant --clients 2,4,8,16
+           --rounds --rate --target)
+  appendix-c  per-client label histograms (--task --clients --dirichlet)
+
+GLOBAL: --artifacts <dir> (default artifacts), --out <dir> (default results)
+";
+
+fn parse_task(s: &str) -> Result<TaskKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "cifar" | "cifar10" => Ok(TaskKind::CifarLike),
+        "voc" | "pascal" => Ok(TaskKind::VocLike),
+        "xray" | "chest" => Ok(TaskKind::XrayLike),
+        other => Err(anyhow::anyhow!("unknown task {other:?}")),
+    }
+}
+
+fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
+    let task = parse_task(&flags.str_or("task", "cifar"))?;
+    let protocol: Protocol = flags.str_or("protocol", "fsfl").parse()?;
+    let variant = flags.str_or("variant", "tiny_cnn");
+    let mut cfg = ExperimentConfig::quick(&variant, task, protocol);
+    cfg.artifacts_root = artifacts.to_path_buf();
+    cfg.clients = flags.get_or("clients", 2)?;
+    cfg.rounds = flags.get_or("rounds", 10)?;
+    cfg.local_epochs = flags.get_or("local-epochs", 1)?;
+    cfg.scale_epochs = flags.get_or("scale-epochs", 2)?;
+    cfg.optimizer = flags.str_or("optimizer", "adam").parse::<Optimizer>()?;
+    cfg.lr = flags.get_or("lr", 1e-3)?;
+    cfg.scale_optimizer = flags
+        .str_or("scale-optimizer", "adam")
+        .parse::<Optimizer>()?;
+    cfg.scale_lr = flags.get_or("scale-lr", 1e-2)?;
+    cfg.schedule = flags.str_or("schedule", "linear").parse::<ScheduleKind>()?;
+    cfg.sparsify = match flags.get::<f32>("rate")? {
+        Some(r) => SparsifyMode::TopK { rate: r },
+        None => SparsifyMode::Dynamic {
+            delta: flags.get_or("delta", 1.0)?,
+            gamma: flags.get_or("gamma", 1.0)?,
+        },
+    };
+    cfg.bidirectional = flags.flag("bidirectional");
+    cfg.dirichlet_alpha = flags.get("dirichlet")?;
+    cfg.train_per_client = flags.get_or("train-per-client", 128)?;
+    cfg.val_per_client = flags.get_or("val-per-client", 32)?;
+    cfg.test_samples = flags.get_or("test-samples", 128)?;
+    cfg.warmup_steps = flags.get_or("warmup-steps", 0)?;
+    cfg.participation = flags.get_or("participation", 1.0)?;
+    cfg.seed = flags.get_or("seed", 0)?;
+    cfg.target_accuracy = flags.get("target-accuracy")?;
+    flags.reject_unknown()?;
+
+    let log = coordinator::run_experiment_threaded(cfg, |ev| {
+        if let coordinator::Event::RoundDone(m) = ev {
+            coordinator::print_round(m);
+        }
+    })?;
+    let csv = out.join(format!("{}.csv", log.name));
+    log.write_csv(&csv)?;
+    println!(
+        "done: best acc {:.3}, total up {}, log → {}",
+        log.best_accuracy(),
+        fsfl::metrics::fmt_bytes(log.total_bytes(true)),
+        csv.display()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let artifacts = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let out = std::path::PathBuf::from(flags.str_or("out", "results"));
+    std::fs::create_dir_all(&out).ok();
+
+    match cmd.as_str() {
+        "run" => cmd_run(&flags, &artifacts, &out)?,
+        "fig1" => {
+            let a = harness::Fig1Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::fig1(&out, a)?;
+        }
+        "fig2" => {
+            let a = harness::Fig2Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::fig2(&artifacts, &out, a)?;
+        }
+        "fig3" => {
+            let a = harness::Fig3Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::fig3(&artifacts, &out, a)?;
+        }
+        "fig4" => {
+            let a = harness::Fig4Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::fig4(&artifacts, &out, a)?;
+        }
+        "fig5" => {
+            let a = harness::Fig5Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::fig5(&artifacts, &out, a)?;
+        }
+        "table1" => {
+            let a = harness::Table1Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::table1(&artifacts, &out, a)?;
+        }
+        "appendix-c" | "appc" => {
+            let a = harness::AppCArgs::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::appendix_c(&out, a)?;
+        }
+        "table2" => {
+            let a = harness::Table2Args::from_flags(&flags)?;
+            flags.reject_unknown()?;
+            harness::table2(&artifacts, &out, a)?;
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,247 @@
+//! Experiment metrics: per-round byte accounting, accuracy/F1, sparsity
+//! and scale-factor statistics — everything the figure/table harnesses
+//! print (Fig. 2–5, Tables 1–2).
+
+use std::io::Write;
+
+/// Scale-factor distribution snapshot for one layer (Fig. 3 series).
+#[derive(Debug, Clone)]
+pub struct ScaleStats {
+    pub layer: String,
+    pub min: f32,
+    pub q25: f32,
+    pub median: f32,
+    pub q75: f32,
+    pub max: f32,
+    pub mean: f32,
+    /// Fraction of scales suppressed toward zero (|s| < 0.1).
+    pub suppressed: f32,
+}
+
+impl ScaleStats {
+    pub fn from_values(layer: &str, values: &[f32]) -> Self {
+        let mut v: Vec<f32> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f32 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            let idx = ((v.len() - 1) as f64 * p).round() as usize;
+            v[idx]
+        };
+        let mean = if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f32>() / v.len() as f32
+        };
+        let suppressed = if v.is_empty() {
+            0.0
+        } else {
+            v.iter().filter(|&&x| x.abs() < 0.1).count() as f32 / v.len() as f32
+        };
+        Self {
+            layer: layer.to_string(),
+            min: v.first().copied().unwrap_or(0.0),
+            q25: q(0.25),
+            median: q(0.5),
+            q75: q(0.75),
+            max: v.last().copied().unwrap_or(0.0),
+            mean,
+            suppressed,
+        }
+    }
+}
+
+/// Binary-classification confusion counts (for the X-Ray task's F1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+    pub tn: usize,
+}
+
+impl Confusion {
+    pub fn add(&mut self, pred: usize, label: usize, positive: usize) {
+        match (pred == positive, label == positive) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, true) => self.fn_ += 1,
+            (false, false) => self.tn += 1,
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.tp as f64 / (self.tp + self.fp).max(1) as f64;
+        let r = self.tp as f64 / (self.tp + self.fn_).max(1) as f64;
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        (self.tp + self.tn) as f64 / (self.tp + self.tn + self.fp + self.fn_).max(1) as f64
+    }
+}
+
+/// One communication round's record.
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Upstream bytes (all clients → server), this round.
+    pub up_bytes: usize,
+    /// Downstream bytes (server → all clients), this round.
+    pub down_bytes: usize,
+    /// Central-model test accuracy after aggregation.
+    pub accuracy: f64,
+    /// Binary F1 (only meaningful for 2-class tasks).
+    pub f1: f64,
+    pub test_loss: f64,
+    /// Mean client ΔW sparsity (zeros fraction) this round.
+    pub update_sparsity: f64,
+    /// Per-client ΔW sparsity (Fig. 4 plots both clients separately).
+    pub client_sparsity: Vec<f64>,
+    /// Mean fraction of filter rows skipped entirely.
+    pub rows_skipped: f64,
+    /// Rounds where at least one client kept its scale-factor update.
+    pub scale_accepted: usize,
+    /// Wall-clock milliseconds: weight training.
+    pub train_ms: u128,
+    /// Wall-clock milliseconds: scale-factor sub-epochs.
+    pub scale_ms: u128,
+    pub scale_stats: Vec<ScaleStats>,
+}
+
+/// Full experiment log: what all figure harnesses consume.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rounds.push(m);
+    }
+
+    /// Cumulative transmitted bytes up to and including round `i`
+    /// (`up_only` reproduces Table 2's upstream-only accounting).
+    pub fn cumulative_bytes(&self, i: usize, up_only: bool) -> usize {
+        self.rounds[..=i]
+            .iter()
+            .map(|r| r.up_bytes + if up_only { 0 } else { r.down_bytes })
+            .sum()
+    }
+
+    pub fn total_bytes(&self, up_only: bool) -> usize {
+        if self.rounds.is_empty() {
+            0
+        } else {
+            self.cumulative_bytes(self.rounds.len() - 1, up_only)
+        }
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.accuracy).fold(0.0, f64::max)
+    }
+
+    /// First round reaching `target` accuracy, with cumulative bytes there
+    /// (Table 2's `Σ data @ t` readout). None if never reached.
+    pub fn reached(&self, target: f64, up_only: bool) -> Option<(usize, usize)> {
+        self.rounds
+            .iter()
+            .position(|r| r.accuracy >= target)
+            .map(|i| (self.rounds[i].round, self.cumulative_bytes(i, up_only)))
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "round,up_bytes,down_bytes,cum_bytes,accuracy,f1,test_loss,update_sparsity,rows_skipped,train_ms,scale_ms"
+        )?;
+        for (i, r) in self.rounds.iter().enumerate() {
+            writeln!(
+                f,
+                "{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{},{}",
+                r.round,
+                r.up_bytes,
+                r.down_bytes,
+                self.cumulative_bytes(i, false),
+                r.accuracy,
+                r.f1,
+                r.test_loss,
+                r.update_sparsity,
+                r.rows_skipped,
+                r.train_ms,
+                r.scale_ms
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Pretty-print helper for byte counts.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.2} MB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        let mut c = Confusion::default();
+        c.add(0, 0, 0);
+        c.add(1, 1, 0);
+        assert_eq!(c.f1(), 1.0);
+        let z = Confusion::default();
+        assert_eq!(z.f1(), 0.0);
+    }
+
+    #[test]
+    fn scale_stats_quartiles() {
+        let vals: Vec<f32> = (0..101).map(|i| i as f32 / 100.0).collect();
+        let s = ScaleStats::from_values("l", &vals);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 1.0);
+        assert!((s.median - 0.5).abs() < 1e-6);
+        assert!((s.q25 - 0.25).abs() < 1e-6);
+        assert!((s.suppressed - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn runlog_reached() {
+        let mut log = RunLog::new("t");
+        for i in 0..5 {
+            log.push(RoundMetrics {
+                round: i,
+                up_bytes: 100,
+                down_bytes: 50,
+                accuracy: 0.1 * i as f64,
+                ..Default::default()
+            });
+        }
+        let (round, bytes) = log.reached(0.25, true).unwrap();
+        assert_eq!(round, 3);
+        assert_eq!(bytes, 400);
+        assert_eq!(log.reached(0.9, true), None);
+        assert_eq!(log.total_bytes(false), 750);
+    }
+}

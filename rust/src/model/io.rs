@@ -1,0 +1,130 @@
+//! Tensor-bundle binary I/O — the counterpart of python/compile/bundle.py.
+//!
+//! Layout (little-endian):
+//! `b"FSTB" | u32 version | u32 count | { u32 name_len | name | u32 ndim |
+//! u32*ndim dims | u32 dtype(0=f32) | f32*numel data }*`
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+const MAGIC: &[u8; 4] = b"FSTB";
+const VERSION: u32 = 1;
+const DTYPE_F32: u32 = 0;
+
+/// A named f32 tensor as stored in a bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BundleTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("{}: bad magic {magic:?}", path.display()));
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(anyhow!("unsupported bundle version {version}"));
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u32(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf-8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let dtype = read_u32(&mut f)?;
+        if dtype != DTYPE_F32 {
+            return Err(anyhow!("{name}: unsupported dtype {dtype}"));
+        }
+        let numel: usize = shape.iter().product::<usize>().max(1);
+        let mut raw = vec![0u8; numel * 4];
+        f.read_exact(&mut raw)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(BundleTensor { name, shape, data });
+    }
+    Ok(out)
+}
+
+pub fn write_bundle(path: impl AsRef<Path>, tensors: &[BundleTensor]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let numel: usize = t.shape.iter().product::<usize>().max(1);
+        if numel != t.data.len() {
+            return Err(anyhow!("{}: shape/data mismatch", t.name));
+        }
+        f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+        f.write_all(t.name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&DTYPE_F32.to_le_bytes())?;
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fsfl_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let tensors = vec![
+            BundleTensor {
+                name: "a.w".into(),
+                shape: vec![2, 3],
+                data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0],
+            },
+            BundleTensor {
+                name: "b".into(),
+                shape: vec![4],
+                data: vec![0.1, 0.2, 0.3, 0.4],
+            },
+        ];
+        write_bundle(&p, &tensors).unwrap();
+        let back = read_bundle(&p).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("fsfl_bundle_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_bundle(&p).is_err());
+    }
+}

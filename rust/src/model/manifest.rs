@@ -1,0 +1,316 @@
+//! `manifest.tsv` parsing — the python↔rust model contract.
+//!
+//! The AOT pipeline emits both `manifest.json` (for humans/tools) and a
+//! line-based `manifest.tsv` that this module parses (the build
+//! environment has no serde). Format:
+//!
+//! ```text
+//! model<TAB>tiny_cnn
+//! variant<TAB>tiny_cnn
+//! classes<TAB>10
+//! input<TAB>16 16 3
+//! batch<TAB>16
+//! param_count<TAB>1692
+//! scale_count<TAB>34
+//! tensor<TAB>name<TAB>kind<TAB>group<TAB>layer<TAB>out_ch<TAB>scale_for<TAB>d0 d1 ...
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// What a tensor *is* — drives codec decisions (structured sparsification
+/// applies to row-structured weight kinds; scales/bias/BN use the fine
+/// quantization step per paper Sec. 5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    ConvW,
+    DwConvW,
+    DenseW,
+    Bias,
+    BnGamma,
+    BnBeta,
+    BnMean,
+    BnVar,
+    Scale,
+}
+
+impl Kind {
+    /// Row-structured kinds: one row of the 2-D tensor = one filter /
+    /// output neuron — the granularity of Eq. (3) and Eq. (4).
+    pub fn is_row_structured(self) -> bool {
+        matches!(self, Kind::ConvW | Kind::DwConvW | Kind::DenseW)
+    }
+
+    /// Side-parameters quantized with the fine step size (2.38e-6 in the
+    /// paper): scaling factors, biases and BatchNorm parameters.
+    pub fn is_fine_quantized(self) -> bool {
+        !self.is_row_structured()
+    }
+}
+
+impl std::str::FromStr for Kind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv_w" => Kind::ConvW,
+            "dw_conv_w" => Kind::DwConvW,
+            "dense_w" => Kind::DenseW,
+            "bias" => Kind::Bias,
+            "bn_gamma" => Kind::BnGamma,
+            "bn_beta" => Kind::BnBeta,
+            "bn_mean" => Kind::BnMean,
+            "bn_var" => Kind::BnVar,
+            "scale" => Kind::Scale,
+            other => return Err(anyhow!("unknown tensor kind {other:?}")),
+        })
+    }
+}
+
+/// Update/training group a tensor belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Group {
+    /// Trained by `train_step` (W, biases, BN affine).
+    Weight,
+    /// Trained by `scale_step` (the paper's S).
+    Scale,
+    /// BatchNorm running stats — updated by `train_step` from batch
+    /// statistics, frozen during scale training.
+    State,
+    /// Never updated (partial-update models' feature extractors).
+    Frozen,
+}
+
+impl std::str::FromStr for Group {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "weight" => Group::Weight,
+            "scale" => Group::Scale,
+            "state" => Group::State,
+            "frozen" => Group::Frozen,
+            other => return Err(anyhow!("unknown tensor group {other:?}")),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: Kind,
+    pub group: Group,
+    pub layer: String,
+    pub out_ch: Option<usize>,
+    pub scale_for: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// (rows, row_len) for row-structured tensors.
+    pub fn rows(&self) -> Option<(usize, usize)> {
+        if self.kind.is_row_structured() && self.shape.len() == 2 {
+            Some((self.shape[0], self.shape[1]))
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub model: String,
+    pub variant: String,
+    pub classes: usize,
+    /// (H, W, C)
+    pub input: Vec<usize>,
+    pub batch: usize,
+    pub param_count: usize,
+    pub scale_count: usize,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let man = Self::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut model = String::new();
+        let mut variant = String::new();
+        let mut classes = 0usize;
+        let mut input = Vec::new();
+        let mut batch = 0usize;
+        let mut param_count = 0usize;
+        let mut scale_count = 0usize;
+        let mut tensors = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let tag = fields[0];
+            let val = |i: usize| -> Result<&str> {
+                fields
+                    .get(i)
+                    .copied()
+                    .ok_or_else(|| anyhow!("line {}: missing field {i}", ln + 1))
+            };
+            match tag {
+                "model" => model = val(1)?.to_string(),
+                "variant" => variant = val(1)?.to_string(),
+                "classes" => classes = val(1)?.parse()?,
+                "input" => {
+                    input = val(1)?
+                        .split_whitespace()
+                        .map(|d| d.parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()?
+                }
+                "batch" => batch = val(1)?.parse()?,
+                "param_count" => param_count = val(1)?.parse()?,
+                "scale_count" => scale_count = val(1)?.parse()?,
+                "tensor" => {
+                    let shape = val(7)?
+                        .split_whitespace()
+                        .map(|d| d.parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()?;
+                    tensors.push(TensorSpec {
+                        name: val(1)?.to_string(),
+                        kind: val(2)?.parse()?,
+                        group: val(3)?.parse()?,
+                        layer: val(4)?.to_string(),
+                        out_ch: match val(5)? {
+                            "-" => None,
+                            s => Some(s.parse()?),
+                        },
+                        scale_for: match val(6)? {
+                            "-" => None,
+                            s => Some(s.to_string()),
+                        },
+                        shape,
+                    });
+                }
+                other => return Err(anyhow!("line {}: unknown tag {other:?}", ln + 1)),
+            }
+        }
+        if tensors.is_empty() {
+            return Err(anyhow!("manifest has no tensors"));
+        }
+        Ok(Self {
+            model,
+            variant,
+            classes,
+            input,
+            batch,
+            param_count,
+            scale_count,
+            tensors,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for t in &self.tensors {
+            if !seen.insert(&t.name) {
+                return Err(anyhow!("duplicate tensor {}", t.name));
+            }
+            if t.kind.is_row_structured() && t.shape.len() != 2 {
+                return Err(anyhow!("{}: row-structured tensor must be 2-D", t.name));
+            }
+        }
+        let total: usize = self.tensors.iter().map(|t| t.numel()).sum();
+        if total != self.param_count {
+            return Err(anyhow!(
+                "param_count mismatch: manifest says {}, tensors sum to {total}",
+                self.param_count
+            ));
+        }
+        for t in &self.tensors {
+            if let Some(sf) = &t.scale_for {
+                let target = self
+                    .tensors
+                    .iter()
+                    .find(|u| &u.name == sf)
+                    .ok_or_else(|| anyhow!("{}: scale_for {:?} not found", t.name, sf))?;
+                if target.shape[0] != t.numel() {
+                    return Err(anyhow!("{}: scale len != target rows", t.name));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tensors.iter().position(|t| t.name == name)
+    }
+
+    pub fn group_indices(&self, group: Group) -> Vec<usize> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.group == group)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Tensors whose updates are transmitted: everything that can change
+    /// locally (weight + scale + state); frozen tensors never move.
+    pub fn update_indices(&self) -> Vec<usize> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.group != Group::Frozen)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total number of trainable scale factors (paper Table 1 #params_add).
+    pub fn scale_param_count(&self) -> usize {
+        self.group_indices(Group::Scale)
+            .iter()
+            .map(|&i| self.tensors[i].numel())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "model\tm\nvariant\tv\nclasses\t2\ninput\t4 4 1\nbatch\t2\nparam_count\t13\nscale_count\t3\ntensor\tc.w\tconv_w\tweight\tc\t3\t-\t3 3\ntensor\tc.s\tscale\tscale\tc\t3\tc.w\t3\ntensor\tc.b\tbias\tweight\tc\t1\t-\t1\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.classes, 2);
+        assert_eq!(m.tensors.len(), 3);
+        assert_eq!(m.tensors[0].rows(), Some((3, 3)));
+        assert_eq!(m.tensors[1].scale_for.as_deref(), Some("c.w"));
+        assert_eq!(m.group_indices(Group::Scale), vec![1]);
+        assert_eq!(m.update_indices(), vec![0, 1, 2]);
+        assert_eq!(m.scale_param_count(), 3);
+    }
+
+    #[test]
+    fn bad_scale_target_rejected() {
+        let bad = SAMPLE.replace("\tc.w\t3\n", "\tnope\t3\n");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let bad = SAMPLE.replace("param_count\t13", "param_count\t14");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

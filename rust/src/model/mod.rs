@@ -1,0 +1,17 @@
+//! Model metadata and parameter plumbing.
+//!
+//! The python AOT pipeline (`python/compile/aot.py`) emits, per model
+//! variant, a `manifest.json` describing every parameter tensor (name,
+//! shape, kind, group) in **wire order**, plus an `init.bin` tensor
+//! bundle with the initial values.  This module is the rust mirror of
+//! that contract: everything the coordinator knows about a model —
+//! which tensors are conv filters (row-structured for Eq. 3), which are
+//! scale factors, which are BatchNorm state — comes from here.
+
+mod io;
+mod manifest;
+pub mod params;
+
+pub use io::{read_bundle, write_bundle, BundleTensor};
+pub use manifest::{Group, Kind, Manifest, TensorSpec};
+pub use params::{Delta, ParamSet};

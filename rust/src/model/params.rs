@@ -1,0 +1,284 @@
+//! [`ParamSet`] — the full model state as flat f32 vectors in wire order.
+//!
+//! All FL-side arithmetic (differential updates Eq. 1, aggregation,
+//! residuals, sparsification) happens on this representation; the runtime
+//! converts to/from XLA literals at step boundaries only.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{Group, Manifest};
+
+/// Model parameters: one `Vec<f32>` per manifest tensor, in wire order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub manifest: Arc<Manifest>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    pub fn new(manifest: Arc<Manifest>, tensors: Vec<Vec<f32>>) -> Result<Self> {
+        if tensors.len() != manifest.tensors.len() {
+            return Err(anyhow!(
+                "tensor count {} != manifest {}",
+                tensors.len(),
+                manifest.tensors.len()
+            ));
+        }
+        for (t, spec) in tensors.iter().zip(&manifest.tensors) {
+            if t.len() != spec.numel() {
+                return Err(anyhow!("{}: len {} != {}", spec.name, t.len(), spec.numel()));
+            }
+        }
+        Ok(Self { manifest, tensors })
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            manifest: self.manifest.clone(),
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+        }
+    }
+
+    /// Load initial parameters from an `init.bin` bundle, verifying names
+    /// and shapes against the manifest.
+    pub fn from_bundle(manifest: Arc<Manifest>, path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let bundle = super::read_bundle(path)?;
+        if bundle.len() != manifest.tensors.len() {
+            return Err(anyhow!("bundle/manifest tensor count mismatch"));
+        }
+        let mut tensors = Vec::with_capacity(bundle.len());
+        for (bt, spec) in bundle.into_iter().zip(&manifest.tensors) {
+            if bt.name != spec.name {
+                return Err(anyhow!("bundle order mismatch: {} != {}", bt.name, spec.name));
+            }
+            if bt.data.len() != spec.numel() {
+                return Err(anyhow!("{}: bundle size mismatch", spec.name));
+            }
+            tensors.push(bt.data);
+        }
+        Ok(Self { manifest, tensors })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        let i = self.manifest.index_of(name)?;
+        Some(&self.tensors[i])
+    }
+
+    /// `self - other`, the differential update ΔW of Eq. (1).
+    pub fn delta_from(&self, prev: &ParamSet) -> Delta {
+        let tensors = self
+            .tensors
+            .iter()
+            .zip(&prev.tensors)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
+            .collect();
+        Delta {
+            manifest: self.manifest.clone(),
+            tensors,
+        }
+    }
+
+    /// `self += delta` (client sync / server apply).
+    pub fn add_delta(&mut self, delta: &Delta) {
+        for (t, d) in self.tensors.iter_mut().zip(&delta.tensors) {
+            for (x, y) in t.iter_mut().zip(d) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Indices of tensors in a training group (wire order).
+    pub fn group_indices(&self, group: Group) -> Vec<usize> {
+        self.manifest.group_indices(group)
+    }
+}
+
+/// A differential update ΔW — same layout as [`ParamSet`], but semantically
+/// a difference; the unit that is sparsified, quantized and transmitted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    pub manifest: Arc<Manifest>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Delta {
+    pub fn zeros(manifest: Arc<Manifest>) -> Self {
+        let tensors = manifest.tensors.iter().map(|t| vec![0.0; t.numel()]).collect();
+        Self { manifest, tensors }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Fraction of exactly-zero elements across all update tensors
+    /// (Fig. 4's sparsity metric).
+    pub fn sparsity(&self) -> f64 {
+        let total = self.numel();
+        if total == 0 {
+            return 1.0;
+        }
+        let zeros: usize = self
+            .tensors
+            .iter()
+            .map(|t| t.iter().filter(|&&x| x == 0.0).count())
+            .sum();
+        zeros as f64 / total as f64
+    }
+
+    /// Sparsity restricted to a tensor subset (e.g. the transmitted
+    /// update tensors — frozen tensors are trivially zero).
+    pub fn sparsity_of(&self, indices: &[usize]) -> f64 {
+        let total: usize = indices.iter().map(|&i| self.tensors[i].len()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let zeros: usize = indices
+            .iter()
+            .map(|&i| self.tensors[i].iter().filter(|&&x| x == 0.0).count())
+            .sum();
+        zeros as f64 / total as f64
+    }
+
+    /// Elementwise accumulate (used by server-side averaging).
+    pub fn accumulate(&mut self, other: &Delta) {
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (x, y) in t.iter_mut().zip(o) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, f: f32) {
+        for t in &mut self.tensors {
+            for x in t.iter_mut() {
+                *x *= f;
+            }
+        }
+    }
+
+    /// `self += other * f` without an intermediate clone.
+    pub fn accumulate_scaled(&mut self, other: &Delta, f: f32) {
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (x, y) in t.iter_mut().zip(o) {
+                *x += y * f;
+            }
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Hand-built manifests for unit tests across the crate.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::model::{Kind, TensorSpec};
+
+    /// conv_w [3,3] (row-structured) + bias [4] (fine-quantized flat).
+    pub fn manifest_conv_dense() -> Arc<Manifest> {
+        let tensors = vec![
+            TensorSpec {
+                name: "c.w".into(),
+                shape: vec![3, 3],
+                kind: Kind::ConvW,
+                group: Group::Weight,
+                layer: "c".into(),
+                out_ch: Some(3),
+                scale_for: None,
+            },
+            TensorSpec {
+                name: "c.b".into(),
+                shape: vec![4],
+                kind: Kind::Bias,
+                group: Group::Weight,
+                layer: "c".into(),
+                out_ch: Some(4),
+                scale_for: None,
+            },
+        ];
+        Arc::new(Manifest {
+            model: "test".into(),
+            variant: "test".into(),
+            classes: 2,
+            input: vec![4, 4, 1],
+            batch: 2,
+            param_count: 13,
+            scale_count: 0,
+            tensors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Kind, TensorSpec};
+
+    pub(crate) fn test_manifest() -> Arc<Manifest> {
+        let tensors = vec![
+            TensorSpec {
+                name: "c.w".into(),
+                shape: vec![4, 9],
+                kind: Kind::ConvW,
+                group: Group::Weight,
+                layer: "c".into(),
+                out_ch: Some(4),
+                scale_for: None,
+            },
+            TensorSpec {
+                name: "c.s".into(),
+                shape: vec![4],
+                kind: Kind::Scale,
+                group: Group::Scale,
+                layer: "c".into(),
+                out_ch: Some(4),
+                scale_for: Some("c.w".into()),
+            },
+        ];
+        Arc::new(Manifest {
+            model: "test".into(),
+            variant: "test".into(),
+            classes: 2,
+            input: vec![4, 4, 1],
+            batch: 2,
+            param_count: 40,
+            scale_count: 4,
+            tensors,
+        })
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let m = test_manifest();
+        let a = ParamSet::new(m.clone(), vec![vec![1.0; 36], vec![1.0; 4]]).unwrap();
+        let mut b = ParamSet::new(m, vec![vec![0.5; 36], vec![2.0; 4]]).unwrap();
+        let d = a.delta_from(&b);
+        assert_eq!(d.tensors[0][0], 0.5);
+        assert_eq!(d.tensors[1][0], -1.0);
+        b.add_delta(&d);
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let m = test_manifest();
+        let mut d = Delta::zeros(m);
+        assert_eq!(d.sparsity(), 1.0);
+        d.tensors[0][0] = 1.0;
+        assert!((d.sparsity() - 39.0 / 40.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,74 @@
+//! Artifact discovery/compilation: one compiled PJRT executable per step
+//! function per model variant, cached after first compile.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::Manifest;
+
+use super::Runtime;
+
+/// Which optimizer drives a step (baked into the HLO at AOT time; the
+/// learning rate stays a runtime input so rust owns the schedule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    Adam,
+    Sgd,
+}
+
+impl std::str::FromStr for Optimizer {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "adam" => Ok(Optimizer::Adam),
+            "sgd" => Ok(Optimizer::Sgd),
+            other => Err(anyhow!("unknown optimizer {other:?}")),
+        }
+    }
+}
+
+/// The on-disk artifact set of one model variant.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Arc<Manifest>,
+}
+
+impl ArtifactSet {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Arc::new(Manifest::load(dir.join("manifest.tsv"))?);
+        Ok(Self { dir, manifest })
+    }
+
+    /// Root-relative helper: `ArtifactSet::open_variant("artifacts", "tiny_cnn")`.
+    pub fn open_variant(root: impl AsRef<Path>, variant: &str) -> Result<Self> {
+        Self::open(root.as_ref().join(variant))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    pub fn init_params(&self) -> Result<crate::model::ParamSet> {
+        crate::model::ParamSet::from_bundle(self.manifest.clone(), self.dir.join("init.bin"))
+    }
+
+    pub(crate) fn compile(
+        &self,
+        rt: &Runtime,
+        file: &str,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.hlo_path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        rt.client()
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+            .with_context(|| format!("artifact {}", path.display()))
+    }
+}

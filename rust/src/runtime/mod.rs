@@ -1,0 +1,71 @@
+//! PJRT runtime: loads AOT artifacts (`artifacts/<variant>/*.hlo.txt`)
+//! and executes train / scale-train / eval steps from the rust hot path.
+//!
+//! HLO **text** is the interchange format (see python/compile/aot.py);
+//! `HloModuleProto::from_text_file` reassigns instruction ids so the
+//! xla_extension 0.5.1 backend accepts modules lowered by jax >= 0.5.
+//!
+//! Python never runs here — after `make artifacts` the binary is
+//! self-contained.
+
+mod artifacts;
+mod step;
+
+pub use artifacts::{ArtifactSet, Optimizer};
+pub use step::{ModelRuntime, OptState, StepOutput};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+/// Process-wide PJRT CPU client. Creating more than one CPU client per
+/// process is wasteful (each spins up its own thread pool), so experiments
+/// share a single [`Runtime`]. Compiled executables are cached by artifact
+/// path: harness sweeps build many [`ModelRuntime`]s over the same variant
+/// and recompiling each time costs seconds per step function (perf pass,
+/// EXPERIMENTS.md §Perf).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exe_cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(Self {
+            client,
+            exe_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub(crate) fn compile_cached(
+        &self,
+        path: &std::path::Path,
+        compile: impl FnOnce() -> Result<xla::PjRtLoadedExecutable>,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exe_cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(compile()?);
+        self.exe_cache
+            .borrow_mut()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.exe_cache.borrow().len()
+    }
+}

@@ -1,0 +1,308 @@
+//! Step executors: marshal [`ParamSet`]s to XLA literals, run the
+//! compiled step, and write results back.
+//!
+//! Wire convention (mirrors python/compile/steps.py):
+//!   train/scale: params… m[g]… v[g]… t lr x y  →  params… m… v… t loss correct
+//!   eval:        params… x y                  →  loss correct
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Group, Manifest, ParamSet};
+
+use super::{ArtifactSet, Optimizer, Runtime};
+
+/// Adam/SGD state for one training group (m, v in group order + step t).
+#[derive(Debug, Clone)]
+pub struct OptState {
+    pub group: Group,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: f32,
+}
+
+impl OptState {
+    pub fn zeros(manifest: &Manifest, group: Group) -> Self {
+        let sizes: Vec<usize> = manifest
+            .group_indices(group)
+            .iter()
+            .map(|&i| manifest.tensors[i].numel())
+            .collect();
+        Self {
+            group,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0.0,
+        }
+    }
+
+    /// Reset (used for warm-restart style scale-optimizer re-inits).
+    pub fn reset(&mut self) {
+        for t in self.m.iter_mut().chain(self.v.iter_mut()) {
+            t.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.t = 0.0;
+    }
+}
+
+/// Scalar results of one step execution.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Number of correct top-1 predictions in the batch.
+    pub correct: f32,
+}
+
+/// All compiled executables of one model variant (lazily compiled).
+pub struct ModelRuntime<'rt> {
+    rt: &'rt Runtime,
+    pub artifacts: ArtifactSet,
+    pub manifest: Arc<Manifest>,
+    weight_idx: Vec<usize>,
+    scale_idx: Vec<usize>,
+    train_adam: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    train_sgd: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    scale_adam: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    scale_sgd: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    eval: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    predict: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative host→device→host marshalling + execute time (perf pass).
+    pub exec_calls: RefCell<u64>,
+}
+
+fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    // Single-copy construction (perf pass): vec1+reshape would copy the
+    // tensor twice; create_from_shape_and_untyped_data copies once.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("literal create: {e}"))
+}
+
+impl<'rt> ModelRuntime<'rt> {
+    pub fn load(rt: &'rt Runtime, artifacts: ArtifactSet) -> Result<Self> {
+        let manifest = artifacts.manifest.clone();
+        Ok(Self {
+            rt,
+            manifest: manifest.clone(),
+            weight_idx: manifest.group_indices(Group::Weight),
+            scale_idx: manifest.group_indices(Group::Scale),
+            artifacts,
+            train_adam: RefCell::new(None),
+            train_sgd: RefCell::new(None),
+            scale_adam: RefCell::new(None),
+            scale_sgd: RefCell::new(None),
+            eval: RefCell::new(None),
+            predict: RefCell::new(None),
+            exec_calls: RefCell::new(0),
+        })
+    }
+
+    pub fn open(rt: &'rt Runtime, root: impl AsRef<std::path::Path>, variant: &str) -> Result<Self> {
+        Self::load(rt, ArtifactSet::open_variant(root, variant)?)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn init_params(&self) -> Result<ParamSet> {
+        self.artifacts.init_params()
+    }
+
+    pub fn opt_state(&self, group: Group) -> OptState {
+        OptState::zeros(&self.manifest, group)
+    }
+
+    fn exe(
+        &self,
+        slot: &RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+        file: &str,
+    ) -> Result<()> {
+        if slot.borrow().is_none() {
+            // process-wide cache: sweeps over the same variant reuse the
+            // compiled executable instead of re-running the XLA compiler
+            let path = self.artifacts.hlo_path(file);
+            let exe = self
+                .rt
+                .compile_cached(&path, || self.artifacts.compile(self.rt, file))?;
+            *slot.borrow_mut() = Some(exe);
+        }
+        Ok(())
+    }
+
+    fn group_idx(&self, group: Group) -> Result<&[usize]> {
+        match group {
+            Group::Weight => Ok(&self.weight_idx),
+            Group::Scale => Ok(&self.scale_idx),
+            _ => Err(anyhow!("no optimizer group for {group:?}")),
+        }
+    }
+
+    /// One weight-training step (Algorithm 1 line 9; S frozen inside HLO).
+    pub fn train_step(
+        &self,
+        params: &mut ParamSet,
+        opt: &mut OptState,
+        optimizer: Optimizer,
+        lr: f32,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<StepOutput> {
+        debug_assert_eq!(opt.group, Group::Weight);
+        let (slot, file) = match optimizer {
+            Optimizer::Adam => (&self.train_adam, "train_step.hlo.txt"),
+            Optimizer::Sgd => (&self.train_sgd, "train_step_sgd.hlo.txt"),
+        };
+        self.exe(slot, file)?;
+        let guard = slot.borrow();
+        self.run_opt_step(guard.as_ref().unwrap(), Group::Weight, params, opt, lr, x, y)
+    }
+
+    /// One scale-factor sub-epoch step (Algorithm 1 line 14; W + BN state
+    /// frozen inside the HLO — the model normalizes with running stats).
+    pub fn scale_step(
+        &self,
+        params: &mut ParamSet,
+        opt: &mut OptState,
+        optimizer: Optimizer,
+        lr: f32,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<StepOutput> {
+        debug_assert_eq!(opt.group, Group::Scale);
+        let (slot, file) = match optimizer {
+            Optimizer::Adam => (&self.scale_adam, "scale_step_adam.hlo.txt"),
+            Optimizer::Sgd => (&self.scale_sgd, "scale_step_sgd.hlo.txt"),
+        };
+        self.exe(slot, file)?;
+        let guard = slot.borrow();
+        self.run_opt_step(guard.as_ref().unwrap(), Group::Scale, params, opt, lr, x, y)
+    }
+
+    /// Loss + correct-count on one batch with frozen params (BN running
+    /// stats, no updates).
+    pub fn eval_step(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<StepOutput> {
+        self.exe(&self.eval, "eval_step.hlo.txt")?;
+        let guard = self.eval.borrow();
+        let exe = guard.as_ref().unwrap();
+        let mut inputs = Vec::with_capacity(self.manifest.tensors.len() + 2);
+        for (t, spec) in params.tensors.iter().zip(&self.manifest.tensors) {
+            inputs.push(literal(t, &spec.shape)?);
+        }
+        inputs.push(self.batch_x_literal(x)?);
+        inputs.push(self.batch_y_literal(y)?);
+        let outs = self.execute(exe, &inputs)?;
+        if outs.len() != 2 {
+            return Err(anyhow!("eval: expected 2 outputs, got {}", outs.len()));
+        }
+        Ok(StepOutput {
+            loss: outs[0].to_vec::<f32>()?[0],
+            correct: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Top-1 predictions for one batch (f32 class indices, length B).
+    pub fn predict_step(&self, params: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
+        self.exe(&self.predict, "predict_step.hlo.txt")?;
+        let guard = self.predict.borrow();
+        let exe = guard.as_ref().unwrap();
+        let mut inputs = Vec::with_capacity(self.manifest.tensors.len() + 1);
+        for (t, spec) in params.tensors.iter().zip(&self.manifest.tensors) {
+            inputs.push(literal(t, &spec.shape)?);
+        }
+        inputs.push(self.batch_x_literal(x)?);
+        let outs = self.execute(exe, &inputs)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("predict: expected 1 output, got {}", outs.len()));
+        }
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn batch_x_literal(&self, x: &[f32]) -> Result<xla::Literal> {
+        let (h, w, c) = (
+            self.manifest.input[0],
+            self.manifest.input[1],
+            self.manifest.input[2],
+        );
+        let b = self.manifest.batch;
+        if x.len() != b * h * w * c {
+            return Err(anyhow!("x len {} != {}x{}x{}x{}", x.len(), b, h, w, c));
+        }
+        literal(x, &[b, h, w, c])
+    }
+
+    fn batch_y_literal(&self, y: &[f32]) -> Result<xla::Literal> {
+        let b = self.manifest.batch;
+        if y.len() != b * self.manifest.classes {
+            return Err(anyhow!("y len {} != {}x{}", y.len(), b, self.manifest.classes));
+        }
+        literal(y, &[b, self.manifest.classes])
+    }
+
+    fn run_opt_step(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        group: Group,
+        params: &mut ParamSet,
+        opt: &mut OptState,
+        lr: f32,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<StepOutput> {
+        let gidx = self.group_idx(group)?.to_vec();
+        let n = self.manifest.tensors.len();
+        let g = gidx.len();
+        let mut inputs = Vec::with_capacity(n + 2 * g + 4);
+        for (t, spec) in params.tensors.iter().zip(&self.manifest.tensors) {
+            inputs.push(literal(t, &spec.shape)?);
+        }
+        for (slot, &i) in gidx.iter().enumerate() {
+            inputs.push(literal(&opt.m[slot], &self.manifest.tensors[i].shape)?);
+        }
+        for (slot, &i) in gidx.iter().enumerate() {
+            inputs.push(literal(&opt.v[slot], &self.manifest.tensors[i].shape)?);
+        }
+        inputs.push(xla::Literal::scalar(opt.t));
+        inputs.push(xla::Literal::scalar(lr));
+        inputs.push(self.batch_x_literal(x)?);
+        inputs.push(self.batch_y_literal(y)?);
+
+        let outs = self.execute(exe, &inputs)?;
+        let want = n + 2 * g + 3;
+        if outs.len() != want {
+            return Err(anyhow!("step: expected {want} outputs, got {}", outs.len()));
+        }
+        for (i, out) in outs[..n].iter().enumerate() {
+            params.tensors[i] = out.to_vec::<f32>()?;
+        }
+        for slot in 0..g {
+            opt.m[slot] = outs[n + slot].to_vec::<f32>()?;
+            opt.v[slot] = outs[n + g + slot].to_vec::<f32>()?;
+        }
+        opt.t = outs[n + 2 * g].to_vec::<f32>()?[0];
+        Ok(StepOutput {
+            loss: outs[n + 2 * g + 1].to_vec::<f32>()?[0],
+            correct: outs[n + 2 * g + 2].to_vec::<f32>()?[0],
+        })
+    }
+
+    fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        *self.exec_calls.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))
+    }
+}

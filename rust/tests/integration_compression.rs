@@ -1,0 +1,270 @@
+//! Property-style integration tests of the compression substrate
+//! (randomized over fsfl's deterministic RNG — the offline registry has
+//! no proptest): arbitrary updates must round-trip exactly through
+//! sparsify → quantize → DeepCABAC encode → decode, and compressed sizes
+//! must track sparsity.
+
+use std::sync::Arc;
+
+use fsfl::compression::cabac::{decode_update, encode_update};
+use fsfl::compression::{QuantConfig, SparsifyMode, UpdateCodec};
+use fsfl::data::XorShiftRng;
+use fsfl::model::params::Delta;
+use fsfl::model::{Group, Kind, Manifest, TensorSpec};
+
+fn manifest(rows: usize, row_len: usize, side: usize) -> Arc<Manifest> {
+    let tensors = vec![
+        TensorSpec {
+            name: "w".into(),
+            shape: vec![rows, row_len],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "l".into(),
+            out_ch: Some(rows),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "s".into(),
+            shape: vec![side],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "l".into(),
+            out_ch: Some(side),
+            scale_for: None,
+        },
+    ];
+    Arc::new(Manifest {
+        model: "pt".into(),
+        variant: "pt".into(),
+        classes: 2,
+        input: vec![2, 2, 1],
+        batch: 1,
+        param_count: rows * row_len + side,
+        scale_count: side,
+        tensors,
+    })
+}
+
+/// Random sparse-ish update: zeros, large values and sub-step noise mixed.
+fn random_delta(rng: &mut XorShiftRng) -> Delta {
+    let rows = 1 + rng.below(12);
+    let row_len = 1 + rng.below(20);
+    let side = 1 + rng.below(8);
+    let m = manifest(rows, row_len, side);
+    let mut d = Delta::zeros(m);
+    d.tensors[0] = (0..rows * row_len)
+        .map(|_| match rng.below(6) {
+            0 | 1 | 2 => 0.0,
+            3 | 4 => (rng.next_f32() - 0.5) * 2.0,
+            _ => (rng.next_f32() - 0.5) * 2e-5,
+        })
+        .collect();
+    d.tensors[1] = (0..side).map(|_| (rng.next_f32() - 0.5) * 0.02).collect();
+    d
+}
+
+/// decode(encode(Δ)) == the dequantized Δ̂ returned by encode, always.
+#[test]
+fn codec_roundtrip_exact() {
+    let mut rng = XorShiftRng::new(1);
+    for _ in 0..128 {
+        let d = random_delta(&mut rng);
+        let m = d.manifest.clone();
+        let q = QuantConfig::default();
+        let (bytes, deq, _stats) = encode_update(&d, &[0, 1], &|spec| q.step_for(spec));
+        let back = decode_update(&bytes, &m).unwrap();
+        assert_eq!(back, deq);
+    }
+}
+
+/// Quantization error of the reconstruction is bounded by step/2.
+#[test]
+fn codec_error_bounded() {
+    let mut rng = XorShiftRng::new(2);
+    for _ in 0..128 {
+        let d = random_delta(&mut rng);
+        let q = QuantConfig::default();
+        let (_bytes, deq, _) = encode_update(&d, &[0, 1], &|spec| q.step_for(spec));
+        for (x, y) in d.tensors[0].iter().zip(&deq.tensors[0]) {
+            assert!((x - y).abs() <= q.coarse_step / 2.0 + 1e-6, "{x} vs {y}");
+        }
+        for (x, y) in d.tensors[1].iter().zip(&deq.tensors[1]) {
+            assert!((x - y).abs() <= q.fine_step / 2.0 + 1e-9, "{x} vs {y}");
+        }
+    }
+}
+
+/// Sparser updates never encode to more bytes.
+#[test]
+fn sparser_is_smaller() {
+    for seed in 0..64u64 {
+        let m = manifest(16, 32, 4);
+        let mut rng = XorShiftRng::new(seed);
+        let mut dense = Delta::zeros(m.clone());
+        dense.tensors[0] = (0..16 * 32).map(|_| rng.normal() * 0.01).collect();
+        let q = QuantConfig::default();
+        let step = |spec: &TensorSpec| q.step_for(spec);
+        let (b_dense, _, _) = encode_update(&dense, &[0], &step);
+        let mut sparse = dense.clone();
+        fsfl::compression::sparsify::apply_topk(&mut sparse.tensors[0], 0.9);
+        let (b_sparse, _, _) = encode_update(&sparse, &[0], &step);
+        assert!(
+            b_sparse.len() <= b_dense.len(),
+            "seed {seed}: {} > {}",
+            b_sparse.len(),
+            b_dense.len()
+        );
+    }
+}
+
+/// STC codec: levels are ternary, roundtrip holds.
+#[test]
+fn stc_roundtrip_and_ternary() {
+    for seed in 0..64u64 {
+        let m = manifest(8, 16, 2);
+        let mut rng = XorShiftRng::new(seed ^ 0xABCD);
+        let mut d = Delta::zeros(m.clone());
+        d.tensors[0] = (0..8 * 16).map(|_| rng.normal() * 0.02).collect();
+        d.tensors[1] = vec![1e-5, -2e-5];
+        let codec = UpdateCodec::stc(0.75);
+        let (bytes, deq, _) = codec.encode(d, &[0, 1]);
+        let back = codec.decode(&bytes, &m).unwrap();
+        assert_eq!(back, deq);
+        let mags: Vec<f32> = deq.tensors[0]
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .map(|x| x.abs())
+            .collect();
+        if let Some(&m0) = mags.first() {
+            for &v in &mags {
+                assert!((v - m0).abs() < 1e-6, "non-ternary magnitudes");
+            }
+        }
+        // ~25% survivors
+        let nz = mags.len() as f64 / (8.0 * 16.0);
+        assert!((nz - 0.25).abs() < 0.05, "nz={nz}");
+    }
+}
+
+/// Dynamic sparsification (Eqs. 2+3) then codec roundtrip.
+#[test]
+fn dynamic_pipeline_roundtrip() {
+    for seed in 0..64u64 {
+        let m = manifest(12, 24, 3);
+        let mut rng = XorShiftRng::new(seed ^ 0x77);
+        let mut d = Delta::zeros(m.clone());
+        d.tensors[0] = (0..12 * 24).map(|_| rng.normal() * 0.005).collect();
+        d.tensors[1] = vec![0.001, -0.002, 0.0005];
+        let codec = UpdateCodec {
+            sparsify: SparsifyMode::Dynamic {
+                delta: 1.0,
+                gamma: 1.0,
+            },
+            quant: QuantConfig::default(),
+            ternary: false,
+        };
+        let (bytes, deq, stats) = codec.encode(d, &[0, 1]);
+        let back = codec.decode(&bytes, &m).unwrap();
+        assert_eq!(back, deq);
+        assert!(stats.sparsity() > 0.0);
+    }
+}
+
+/// Entire-row structured sparsity pays ~one bit per skipped row: an update
+/// with 90% zero rows must code dramatically smaller than element-wise
+/// zeros of the same count spread randomly.
+#[test]
+fn row_skip_exploits_structure() {
+    let m = manifest(100, 64, 1);
+    let mut rng = XorShiftRng::new(9);
+    // structured: 10 dense rows, 90 all-zero rows
+    let mut structured = Delta::zeros(m.clone());
+    for r in 0..10 {
+        for c in 0..64 {
+            structured.tensors[0][r * 64 + c] = rng.normal() * 0.01;
+        }
+    }
+    // unstructured: same number of nonzeros scattered
+    let mut scattered = Delta::zeros(m.clone());
+    let mut placed = 0;
+    while placed < 640 {
+        let i = rng.below(100 * 64);
+        if scattered.tensors[0][i] == 0.0 {
+            scattered.tensors[0][i] = rng.normal() * 0.01;
+            placed += 1;
+        }
+    }
+    let q = QuantConfig::default();
+    let step = |spec: &TensorSpec| q.step_for(spec);
+    let (b_struct, _, s_struct) = encode_update(&structured, &[0], &step);
+    let (b_scatter, _, _) = encode_update(&scattered, &[0], &step);
+    assert_eq!(s_struct.rows_skipped, 90);
+    assert!(
+        (b_struct.len() as f64) < 0.8 * b_scatter.len() as f64,
+        "structured {} vs scattered {}",
+        b_struct.len(),
+        b_scatter.len()
+    );
+}
+
+/// Frozen-context (no adaptation) streams roundtrip too, and adaptive
+/// contexts always code sparse updates tighter.
+#[test]
+fn context_adaptation_roundtrip_and_wins() {
+    use fsfl::compression::cabac::encode_update_opts;
+    let m = manifest(64, 64, 1);
+    let q = QuantConfig::default();
+    let step = |spec: &TensorSpec| q.step_for(spec);
+    for seed in 0..16u64 {
+        let mut rng = XorShiftRng::new(seed ^ 0x51);
+        let mut d = Delta::zeros(m.clone());
+        for x in d.tensors[0].iter_mut() {
+            if rng.below(20) == 0 {
+                *x = rng.normal() * 0.01;
+            }
+        }
+        let (b_ad, deq_ad, _) = encode_update_opts(&d, &[0], &step, true);
+        let (b_fz, deq_fz, _) = encode_update_opts(&d, &[0], &step, false);
+        assert_eq!(decode_update(&b_ad, &m).unwrap(), deq_ad);
+        assert_eq!(decode_update(&b_fz, &m).unwrap(), deq_fz);
+        assert_eq!(deq_ad, deq_fz, "flag must not change reconstruction");
+        assert!(
+            b_ad.len() < b_fz.len(),
+            "seed {seed}: adaptive {} >= frozen {}",
+            b_ad.len(),
+            b_fz.len()
+        );
+    }
+}
+
+/// Residual + codec: over rounds, accumulated residual drains into
+/// transmitted updates (no signal permanently lost).
+#[test]
+fn residual_conservation_over_rounds() {
+    let m = manifest(4, 8, 1);
+    let mut residual = fsfl::compression::Residual::zeros(m.clone());
+    let codec = UpdateCodec::fixed_rate(0.75);
+    let mut rng = XorShiftRng::new(33);
+    let mut total_raw = Delta::zeros(m.clone());
+    let mut total_sent = Delta::zeros(m.clone());
+    for _ in 0..50 {
+        let mut raw = Delta::zeros(m.clone());
+        raw.tensors[0] = (0..32).map(|_| rng.normal() * 0.01).collect();
+        total_raw.accumulate(&raw);
+        residual.inject(&mut raw);
+        let (_bytes, sent, _) = codec.encode(raw.clone(), &[0]);
+        residual.update(&raw, &sent);
+        total_sent.accumulate(&sent);
+    }
+    // Conservation: total_raw - total_sent == final residual exactly (up
+    // to f32 summation noise) — nothing was lost, only deferred.
+    let mut outstanding = total_raw.clone();
+    outstanding.accumulate_scaled(&total_sent, -1.0);
+    let diff = (outstanding.l2_norm() - residual.l2_norm()).abs();
+    assert!(
+        diff < 1e-4,
+        "outstanding {} vs residual {}",
+        outstanding.l2_norm(),
+        residual.l2_norm()
+    );
+}

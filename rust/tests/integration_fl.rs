@@ -1,0 +1,218 @@
+//! End-to-end FL integration tests: full rounds through the real wire
+//! path (client encodes → server decodes → aggregate → broadcast),
+//! protocol invariants, partial updates, bidirectional compression.
+
+use fsfl::compression::SparsifyMode;
+use fsfl::data::TaskKind;
+use fsfl::fl::{Experiment, ExperimentConfig, Protocol};
+use fsfl::model::Group;
+use fsfl::runtime::Runtime;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn quick(protocol: Protocol) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, protocol);
+    cfg.artifacts_root = artifacts_root();
+    cfg.rounds = 3;
+    cfg.train_per_client = 48;
+    cfg.val_per_client = 16;
+    cfg.test_samples = 32;
+    cfg
+}
+
+#[test]
+fn fsfl_round_trip_keeps_replicas_in_sync() {
+    let rt = Runtime::cpu().unwrap();
+    let mut exp = Experiment::build(&rt, quick(Protocol::Fsfl)).unwrap();
+    let log = exp.run().unwrap();
+    assert_eq!(log.rounds.len(), 3);
+    assert!(exp.replicas_in_sync(), "client replicas diverged from server");
+    assert!(log.total_bytes(true) > 0);
+    // every round transmits something and measures accuracy in [0,1]
+    for r in &log.rounds {
+        assert!(r.up_bytes > 0);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+        assert!(r.update_sparsity > 0.0, "dynamic sparsification inert");
+    }
+}
+
+#[test]
+fn all_protocols_run_and_order_bytes_sanely() {
+    let rt = Runtime::cpu().unwrap();
+    let mut bytes = std::collections::HashMap::new();
+    for protocol in Protocol::ALL {
+        let mut cfg = quick(protocol);
+        cfg.rounds = 2;
+        cfg.sparsify = SparsifyMode::TopK { rate: 0.96 };
+        let mut exp = Experiment::build(&rt, cfg).unwrap();
+        let log = exp.run().unwrap();
+        assert!(exp.replicas_in_sync(), "{:?} diverged", protocol);
+        bytes.insert(protocol.name(), log.total_bytes(true));
+    }
+    // uncompressed FedAvg must dominate everything else by a wide margin
+    let fedavg = bytes["FedAvg"];
+    for (name, &b) in &bytes {
+        if *name != "FedAvg" {
+            assert!(
+                b < fedavg / 4,
+                "{name} used {b} bytes vs FedAvg {fedavg}"
+            );
+        }
+    }
+    // sparsified protocols beat quantization-only
+    assert!(bytes["STC"] < bytes["FedAvg+DeepCABAC"]);
+    assert!(bytes["Eqs.(2)+(3)"] < bytes["FedAvg+DeepCABAC"]);
+}
+
+#[test]
+fn fedavg_transmits_exact_updates() {
+    // With no codec the server must reconstruct the exact raw update:
+    // after one round every replica equals server state bit-for-bit.
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = quick(Protocol::FedAvg);
+    cfg.rounds = 1;
+    let mut exp = Experiment::build(&rt, cfg).unwrap();
+    let log = exp.run().unwrap();
+    assert!(exp.replicas_in_sync());
+    // raw f32 accounting: bytes == 4 * update params * clients
+    let update_numel: usize = exp
+        .server
+        .params
+        .manifest
+        .update_indices()
+        .iter()
+        .map(|&i| exp.server.params.manifest.tensors[i].numel())
+        .sum();
+    assert_eq!(log.rounds[0].up_bytes, 4 * update_numel * 2);
+}
+
+#[test]
+fn bidirectional_compresses_downstream() {
+    let rt = Runtime::cpu().unwrap();
+    let mut uni = quick(Protocol::Fsfl);
+    uni.rounds = 2;
+    let mut bi = quick(Protocol::Fsfl);
+    bi.rounds = 2;
+    bi.bidirectional = true;
+    let mut exp_uni = Experiment::build(&rt, uni).unwrap();
+    let log_uni = exp_uni.run().unwrap();
+    let mut exp_bi = Experiment::build(&rt, bi).unwrap();
+    let log_bi = exp_bi.run().unwrap();
+    assert!(exp_bi.replicas_in_sync());
+    let down_uni = log_uni.total_bytes(false) - log_uni.total_bytes(true);
+    let down_bi = log_bi.total_bytes(false) - log_bi.total_bytes(true);
+    assert!(
+        down_bi < down_uni / 4,
+        "bidirectional downstream {down_bi} vs raw {down_uni}"
+    );
+}
+
+#[test]
+fn partial_update_never_touches_frozen_tensors() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = ExperimentConfig::quick("vgg16_partial", TaskKind::XrayLike, Protocol::Fsfl);
+    cfg.artifacts_root = artifacts_root();
+    cfg.rounds = 2;
+    cfg.train_per_client = 64;
+    cfg.val_per_client = 32;
+    cfg.test_samples = 32;
+    let mut exp = Experiment::build(&rt, cfg).unwrap();
+    let init = exp.server.params.clone();
+    let frozen = init.manifest.group_indices(Group::Frozen);
+    assert!(!frozen.is_empty(), "partial variant should freeze features");
+    let log = exp.run().unwrap();
+    for &i in &frozen {
+        assert_eq!(
+            exp.server.params.tensors[i], init.tensors[i],
+            "frozen tensor {i} changed"
+        );
+    }
+    // partial updates are much smaller than the full model
+    let full_bytes = 4 * init.manifest.param_count;
+    assert!(log.rounds[0].up_bytes < full_bytes / 4);
+    // xray task reports a meaningful F1
+    assert!(log.rounds.iter().all(|r| (0.0..=1.0).contains(&r.f1)));
+}
+
+#[test]
+fn residuals_accumulate_learning_signal() {
+    // With aggressive fixed sparsity, residuals must eventually push
+    // update elements over the threshold: total transmitted magnitude
+    // with residuals >= without, over enough rounds.
+    let rt = Runtime::cpu().unwrap();
+    let mut with = quick(Protocol::SparseOnly);
+    with.rounds = 4;
+    with.sparsify = SparsifyMode::TopK { rate: 0.99 };
+    with.residuals_override = Some(true);
+    let mut without = quick(Protocol::SparseOnly);
+    without.rounds = 4;
+    without.sparsify = SparsifyMode::TopK { rate: 0.99 };
+    let mut e1 = Experiment::build(&rt, with).unwrap();
+    let l1 = e1.run().unwrap();
+    let mut e2 = Experiment::build(&rt, without).unwrap();
+    let l2 = e2.run().unwrap();
+    assert!(e1.replicas_in_sync() && e2.replicas_in_sync());
+    // residual streams carry at least as many bytes (more surviving info)
+    assert!(l1.total_bytes(true) >= l2.total_bytes(true));
+}
+
+#[test]
+fn scale_training_moves_scale_factors_through_the_wire() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = quick(Protocol::Fsfl);
+    cfg.rounds = 3;
+    cfg.scale_epochs = 2;
+    cfg.scale_lr = 5e-2;
+    let mut exp = Experiment::build(&rt, cfg).unwrap();
+    let log = exp.run().unwrap();
+    let accepted: usize = log.rounds.iter().map(|r| r.scale_accepted).sum();
+    if accepted > 0 {
+        // server-side scales must have moved away from 1.0
+        let scale_idx = exp.server.params.manifest.group_indices(Group::Scale);
+        let moved = scale_idx.iter().any(|&i| {
+            exp.server.params.tensors[i].iter().any(|&s| (s - 1.0).abs() > 1e-7)
+        });
+        assert!(moved, "scale updates accepted but server scales still 1.0");
+    }
+    assert!(exp.replicas_in_sync());
+}
+
+#[test]
+fn partial_participation_still_syncs() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = quick(Protocol::Fsfl);
+    cfg.clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 3;
+    cfg.train_per_client = 32;
+    let mut exp = Experiment::build(&rt, cfg).unwrap();
+    let log = exp.run().unwrap();
+    assert!(exp.replicas_in_sync());
+    // only 2 of 4 clients upload per round
+    for r in &log.rounds {
+        assert_eq!(r.client_sparsity.len(), 2);
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let rt = Runtime::cpu().unwrap();
+    let mk = || {
+        let mut c = quick(Protocol::Fsfl);
+        c.rounds = 2;
+        c.seed = 42;
+        c
+    };
+    let mut a = Experiment::build(&rt, mk()).unwrap();
+    let la = a.run().unwrap();
+    let mut b = Experiment::build(&rt, mk()).unwrap();
+    let lb = b.run().unwrap();
+    for (ra, rb) in la.rounds.iter().zip(&lb.rounds) {
+        assert_eq!(ra.up_bytes, rb.up_bytes);
+        assert_eq!(ra.accuracy, rb.accuracy);
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the rust
+//! side must faithfully drive the jax-lowered step functions.
+//!
+//! Requires `make artifacts` (tiny_cnn) — the Makefile test target
+//! guarantees this ordering.
+
+use fsfl::data::{batches, Dataset, TaskKind, TaskSpec};
+use fsfl::model::Group;
+use fsfl::runtime::{ModelRuntime, Optimizer, Runtime};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("pjrt cpu client")
+}
+
+fn batch_for(mr: &ModelRuntime) -> (Vec<f32>, Vec<f32>) {
+    let man = &mr.manifest;
+    let spec = TaskSpec::new(TaskKind::CifarLike, man.input[0], man.input[2], 7);
+    let ds = Dataset::generate(&spec, man.batch, 0);
+    let order: Vec<usize> = (0..ds.len()).collect();
+    let b = batches(&ds, &order, man.batch).remove(0);
+    (b.x, b.y)
+}
+
+#[test]
+fn train_step_learns_and_freezes_scales() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let mut params = mr.init_params().unwrap();
+    let before_scales: Vec<Vec<f32>> = params
+        .group_indices(Group::Scale)
+        .iter()
+        .map(|&i| params.tensors[i].clone())
+        .collect();
+    let mut opt = mr.opt_state(Group::Weight);
+    let (x, y) = batch_for(&mr);
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = mr
+            .train_step(&mut params, &mut opt, Optimizer::Adam, 5e-3, &x, &y)
+            .unwrap();
+        assert!(out.loss.is_finite());
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.7),
+        "loss did not decrease: {losses:?}"
+    );
+    assert_eq!(opt.t, 30.0);
+    // S must be untouched by weight training (Algorithm 1)
+    for (slot, &i) in params.group_indices(Group::Scale).iter().enumerate() {
+        assert_eq!(params.tensors[i], before_scales[slot], "scale {i} changed");
+    }
+}
+
+#[test]
+fn scale_step_only_moves_scales() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let mut params = mr.init_params().unwrap();
+    let baseline = params.clone();
+    let mut opt = mr.opt_state(Group::Scale);
+    let (x, y) = batch_for(&mr);
+    for _ in 0..5 {
+        mr.scale_step(&mut params, &mut opt, Optimizer::Adam, 5e-2, &x, &y)
+            .unwrap();
+    }
+    let scale_idx = params.group_indices(Group::Scale);
+    let mut changed = 0;
+    for (i, (t, b)) in params.tensors.iter().zip(&baseline.tensors).enumerate() {
+        if scale_idx.contains(&i) {
+            if t != b {
+                changed += 1;
+            }
+        } else {
+            assert_eq!(t, b, "non-scale tensor {i} changed during scale step");
+        }
+    }
+    assert!(changed > 0, "no scales moved");
+}
+
+#[test]
+fn sgd_variants_run() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let mut params = mr.init_params().unwrap();
+    let (x, y) = batch_for(&mr);
+    let mut wopt = mr.opt_state(Group::Weight);
+    let out = mr
+        .train_step(&mut params, &mut wopt, Optimizer::Sgd, 1e-2, &x, &y)
+        .unwrap();
+    assert!(out.loss.is_finite());
+    let mut sopt = mr.opt_state(Group::Scale);
+    let out = mr
+        .scale_step(&mut params, &mut sopt, Optimizer::Sgd, 1e-2, &x, &y)
+        .unwrap();
+    assert!(out.loss.is_finite());
+}
+
+#[test]
+fn eval_is_deterministic_and_stateless() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let params = mr.init_params().unwrap();
+    let snapshot = params.clone();
+    let (x, y) = batch_for(&mr);
+    let a = mr.eval_step(&params, &x, &y).unwrap();
+    let b = mr.eval_step(&params, &x, &y).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.correct, b.correct);
+    assert!(a.correct >= 0.0 && a.correct <= mr.batch_size() as f32);
+    assert_eq!(params, snapshot);
+}
+
+#[test]
+fn predict_matches_classes() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let params = mr.init_params().unwrap();
+    let (x, _y) = batch_for(&mr);
+    let preds = mr.predict_step(&params, &x).unwrap();
+    assert_eq!(preds.len(), mr.batch_size());
+    for &p in &preds {
+        assert!(p >= 0.0 && (p as usize) < mr.manifest.classes);
+        assert_eq!(p.fract(), 0.0);
+    }
+}
+
+#[test]
+fn predict_consistent_with_eval_correct_count() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let params = mr.init_params().unwrap();
+    let (x, y) = batch_for(&mr);
+    let ev = mr.eval_step(&params, &x, &y).unwrap();
+    let preds = mr.predict_step(&params, &x).unwrap();
+    let classes = mr.manifest.classes;
+    let correct = preds
+        .iter()
+        .enumerate()
+        .filter(|(i, &p)| y[i * classes + p as usize] == 1.0)
+        .count();
+    assert_eq!(correct as f32, ev.correct);
+}
+
+#[test]
+fn manifest_and_bundle_agree() {
+    let rt = runtime();
+    let mr = ModelRuntime::open(&rt, artifacts_root(), "tiny_cnn").unwrap();
+    let params = mr.init_params().unwrap();
+    assert_eq!(params.numel(), mr.manifest.param_count);
+    // scales initialized to 1 (Algorithm 1 init)
+    for &i in &params.group_indices(Group::Scale) {
+        assert!(params.tensors[i].iter().all(|&s| s == 1.0));
+    }
+    assert_eq!(mr.manifest.scale_param_count(), mr.manifest.scale_count);
+}
