@@ -7,8 +7,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use fsfl::benchkit::bench_auto;
-use fsfl::compression::cabac::{decode_update, encode_update};
+use fsfl::benchkit::{bench_auto, smoke_mode};
+use fsfl::compression::cabac::{
+    decode_update, decode_update_with, encode_update, encode_update_into, DecodeScratch,
+    EncodeScratch,
+};
 use fsfl::compression::QuantConfig;
 use fsfl::data::XorShiftRng;
 use fsfl::model::params::Delta;
@@ -57,30 +60,60 @@ fn delta_with_sparsity(m: &Arc<Manifest>, sparsity: f64, structured: bool, seed:
 }
 
 fn main() {
-    let m = manifest(512, 1024); // 512k-element update (~vgg11 conv stack)
+    let smoke = smoke_mode();
+    let (rows, row_len) = if smoke { (64, 256) } else { (512, 1024) };
+    let budget = if smoke {
+        Duration::from_millis(50)
+    } else {
+        Duration::from_secs(2)
+    };
+    let m = manifest(rows, row_len); // 512k-element update (~vgg11 conv stack)
     let q = QuantConfig::default();
     let step = |spec: &TensorSpec| q.step_for(spec);
-    let raw_mb = (512 * 1024 * 4) as f64 / 1e6;
-    println!("codec bench: 512x1024 f32 update ({raw_mb:.1} MB raw)\n");
+    let numel = rows * row_len;
+    let raw_mb = (numel * 4) as f64 / 1e6;
+    println!(
+        "codec bench: {rows}x{row_len} f32 update ({raw_mb:.1} MB raw){}\n",
+        if smoke { " [smoke]" } else { "" }
+    );
 
-    for &sparsity in &[0.0, 0.5, 0.9, 0.96, 0.99] {
+    let sparsities: &[f64] = if smoke { &[0.96] } else { &[0.0, 0.5, 0.9, 0.96, 0.99] };
+    for &sparsity in sparsities {
         let d = delta_with_sparsity(&m, sparsity, false, 1);
         let (bytes, _, stats) = encode_update(&d, &[0], &step);
         let r = bench_auto(
             &format!("encode sparsity={sparsity:.2} ({} B)", bytes.len()),
-            Duration::from_secs(2),
+            budget,
             || encode_update(&d, &[0], &step),
+        );
+        r.print_throughput(raw_mb, "MB(raw)");
+        // steady-state path: recycled scratch + output buffers
+        let mut scratch = EncodeScratch::default();
+        let mut deq = fsfl::model::params::Delta::zeros(m.clone());
+        let mut dst = Vec::new();
+        let r = bench_auto(
+            &format!("encode_into sparsity={sparsity:.2} (0-alloc)"),
+            budget,
+            || encode_update_into(&d, &[0], &step, true, &mut scratch, &mut deq, &mut dst),
         );
         r.print_throughput(raw_mb, "MB(raw)");
         let r = bench_auto(
             &format!("decode sparsity={sparsity:.2}"),
-            Duration::from_secs(2),
+            budget,
             || decode_update(&bytes, &m).unwrap(),
+        );
+        r.print_throughput(raw_mb, "MB(raw)");
+        let mut dscratch = DecodeScratch::default();
+        let mut out = fsfl::model::params::Delta::zeros(m.clone());
+        let r = bench_auto(
+            &format!("decode_into sparsity={sparsity:.2} (0-alloc)"),
+            budget,
+            || decode_update_with(&bytes, &mut out, &mut dscratch).unwrap(),
         );
         r.print_throughput(raw_mb, "MB(raw)");
         println!(
             "    ratio {:.1}x  nonzero {}  rows skipped {}/{}\n",
-            (512.0 * 1024.0 * 4.0) / bytes.len() as f64,
+            (numel * 4) as f64 / bytes.len() as f64,
             stats.nonzero,
             stats.rows_skipped,
             stats.rows_total
@@ -96,7 +129,7 @@ fn main() {
         let (bytes, _, _) = encode_update(&d, &[0], &step);
         let r = bench_auto(
             &format!("encode {label} ({} B)", bytes.len()),
-            Duration::from_secs(2),
+            budget,
             || encode_update(&d, &[0], &step),
         );
         r.print_throughput(raw_mb, "MB(raw)");
@@ -112,7 +145,7 @@ fn main() {
         println!(
             "{label:<30} {:>9} B  ({:.1}x vs raw)",
             bytes.len(),
-            (512.0 * 1024.0 * 4.0) / bytes.len() as f64
+            (numel * 4) as f64 / bytes.len() as f64
         );
     }
 }

@@ -1,13 +1,247 @@
-//! End-to-end FL round latency per protocol (the Table 2 execution path):
-//! local epoch + sparsify + quantize + encode + decode + aggregate +
-//! broadcast + central eval, on tiny_cnn.
+//! End-to-end FL round throughput, split by plane.
+//!
+//! Section 1 (runs everywhere, including CI): the **codec plane** of a
+//! round — per-client sparsify → quantize → DeepCABAC encode, server-side
+//! decode of the actual bitstreams, FedAvg aggregation — driven through
+//! the real `RoundLane`/`WorkerPool`/`Server` machinery at several pool
+//! widths. Asserts byte-identical streams across widths, counts heap
+//! allocations per steady-state round (the zero-allocation pipeline
+//! claim), and emits `BENCH_fl_round.json` so future PRs have a perf
+//! trajectory to diff against.
+//!
+//! Section 2 (needs `make artifacts` + a real PJRT backend): the full
+//! Table 2 execution path per protocol, as before.
+//!
+//! `cargo bench --bench fl_round -- --test` runs a seconds-long smoke
+//! subset (the CI gate).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use fsfl::data::TaskKind;
-use fsfl::fl::{Experiment, ExperimentConfig, Protocol};
+use fsfl::benchkit::{smoke_mode, Report};
+use fsfl::compression::{QuantConfig, SparsifyMode};
+use fsfl::data::{TaskKind, XorShiftRng};
+use fsfl::exec::WorkerPool;
+use fsfl::fl::{Experiment, ExperimentConfig, Protocol, ProtocolConfig, RoundLane, Server};
 use fsfl::metrics::fmt_bytes;
+use fsfl::model::params::Delta;
+use fsfl::model::{Group, Kind, Manifest, ParamSet, TensorSpec};
 use fsfl::runtime::Runtime;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: measures steady-state allocations per codec round.
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Section 1: codec-plane round (no PJRT needed)
+// ---------------------------------------------------------------------------
+
+fn bench_manifest(rows: usize, row_len: usize) -> Arc<Manifest> {
+    Arc::new(Manifest {
+        model: "bench".into(),
+        variant: "bench".into(),
+        classes: 2,
+        input: vec![2, 2, 1],
+        batch: 1,
+        param_count: rows * row_len,
+        scale_count: 0,
+        tensors: vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![rows, row_len],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "l".into(),
+            out_ch: Some(rows),
+            scale_for: None,
+        }],
+    })
+}
+
+struct CodecBench {
+    lanes: Vec<RoundLane>,
+    base: Vec<Delta>,
+    server: Server,
+    broadcast: Delta,
+    pcfg: ProtocolConfig,
+    update_idx: Vec<usize>,
+}
+
+impl CodecBench {
+    fn new(manifest: &Arc<Manifest>, clients: usize) -> Self {
+        let mut rng = XorShiftRng::new(0xBE7C);
+        let base: Vec<Delta> = (0..clients)
+            .map(|_| {
+                let mut d = Delta::zeros(manifest.clone());
+                for x in d.tensors[0].iter_mut() {
+                    // ~90% of elements below the dynamic threshold
+                    *x = rng.normal() * 6e-4;
+                }
+                d
+            })
+            .collect();
+        let params = ParamSet::new(
+            manifest.clone(),
+            manifest.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+        )
+        .unwrap();
+        let pcfg = Protocol::Fsfl.config(
+            SparsifyMode::Dynamic { delta: 1.0, gamma: 1.0 },
+            QuantConfig::default(),
+        );
+        Self {
+            lanes: (0..clients).map(|_| RoundLane::new(manifest.clone())).collect(),
+            base,
+            server: Server::new(params, None),
+            broadcast: Delta::zeros(manifest.clone()),
+            pcfg,
+            update_idx: vec![0],
+        }
+    }
+
+    /// One codec-plane round: fan encode + wire-decode out over `pool`,
+    /// then aggregate. Returns total upstream bytes.
+    fn round(&mut self, pool: &WorkerPool) -> usize {
+        for (k, lane) in self.lanes.iter_mut().enumerate() {
+            lane.begin(k);
+            lane.raw.copy_from(&self.base[k]);
+        }
+        let pcfg = &self.pcfg;
+        let update_idx = &self.update_idx;
+        pool.run_mut(&mut self.lanes, |_, lane| {
+            lane.encode_upstream(pcfg, update_idx)
+        });
+        pool.run_mut(&mut self.lanes, |_, lane| lane.finish_round(pcfg, &[]));
+        let updates: Vec<&Delta> = self.lanes.iter().map(|l| &l.decoded).collect();
+        self.server.aggregate_into(&updates, &mut self.broadcast);
+        self.lanes.iter().map(|l| l.up_bytes).sum()
+    }
+}
+
+fn codec_plane_section(report: &mut Report, smoke: bool) {
+    let (rows, row_len) = if smoke { (64, 256) } else { (256, 1024) };
+    let clients = 8;
+    let rounds = if smoke { 3 } else { 20 };
+    let manifest = bench_manifest(rows, row_len);
+    let raw_mb = (rows * row_len * 4 * clients) as f64 / 1e6;
+    println!(
+        "codec-plane round: {clients} clients x {rows}x{row_len} f32 ({raw_mb:.1} MB raw/round)\n"
+    );
+    println!(
+        "{:>7} {:>12} {:>14} {:>16} {:>14}",
+        "workers", "rounds/s", "ms/round", "encode µs/client", "allocs/round"
+    );
+
+    report.int("clients", clients as u64);
+    report.int("update_elems", (rows * row_len) as u64);
+    report.int("rounds", rounds as u64);
+
+    let widths = [1usize, 2, 4];
+    let mut per_width: Vec<(usize, f64)> = Vec::new();
+    let mut reference: Option<(Vec<Vec<u8>>, u64)> = None;
+    for &w in &widths {
+        let pool = WorkerPool::new(w);
+        let mut bench = CodecBench::new(&manifest, clients);
+        // warm-up round grows every buffer to steady-state size
+        let up_bytes = bench.round(&pool);
+
+        // byte-identical across pool widths (and vs the serial reference)
+        let streams: Vec<Vec<u8>> = bench.lanes.iter().map(|l| l.stream_w.clone()).collect();
+        let decoded_sum: u64 = bench.lanes.iter().map(|l| l.decoded.checksum()).fold(0, u64::wrapping_add);
+        match &reference {
+            None => reference = Some((streams, decoded_sum)),
+            Some((ref_streams, ref_sum)) => {
+                assert_eq!(&streams, ref_streams, "pool width {w}: bitstreams diverged");
+                assert_eq!(decoded_sum, *ref_sum, "pool width {w}: decodes diverged");
+            }
+        }
+
+        let a0 = allocs();
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            bench.round(&pool);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let allocs_per_round = (allocs() - a0) as f64 / rounds as f64;
+
+        // encode-stage-only timing (stage 2 of the round pipeline)
+        let t1 = Instant::now();
+        for _ in 0..rounds {
+            for (k, lane) in bench.lanes.iter_mut().enumerate() {
+                lane.begin(k);
+                lane.raw.copy_from(&bench.base[k]);
+            }
+            let pcfg = &bench.pcfg;
+            let update_idx = &bench.update_idx;
+            pool.run_mut(&mut bench.lanes, |_, lane| {
+                lane.encode_upstream(pcfg, update_idx)
+            });
+        }
+        let encode_us_per_client =
+            t1.elapsed().as_secs_f64() * 1e6 / (rounds * clients) as f64;
+
+        let rps = rounds as f64 / secs;
+        println!(
+            "{:>7} {:>12.2} {:>14.2} {:>16.1} {:>14.1}   (up {}/round)",
+            pool.workers(),
+            rps,
+            secs * 1000.0 / rounds as f64,
+            encode_us_per_client,
+            allocs_per_round,
+            fmt_bytes(up_bytes)
+        );
+        per_width.push((pool.workers(), rps));
+
+        let mut sub = Report::new();
+        sub.int("workers", pool.workers() as u64)
+            .num("rounds_per_sec", rps)
+            .num("ms_per_round", secs * 1000.0 / rounds as f64)
+            .num("encode_us_per_client", encode_us_per_client)
+            .num("allocs_per_round", allocs_per_round)
+            .int("up_bytes_per_round", up_bytes as u64);
+        report.obj(&format!("pool{}", pool.workers()), sub);
+    }
+
+    let serial = per_width.iter().find(|(w, _)| *w == 1).map(|&(_, r)| r);
+    let par = per_width.iter().find(|(w, _)| *w == 4).map(|&(_, r)| r);
+    if let (Some(serial), Some(par)) = (serial, par) {
+        let speedup = par / serial;
+        println!("\ncodec-plane speedup 4 workers vs serial: {speedup:.2}x");
+        report.num("speedup_4_vs_1", speedup);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Section 2: full experiment path (needs PJRT + artifacts)
+// ---------------------------------------------------------------------------
 
 fn artifacts_root() -> std::path::PathBuf {
     std::env::var("FSFL_ARTIFACTS")
@@ -15,35 +249,68 @@ fn artifacts_root() -> std::path::PathBuf {
         .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-fn main() {
-    let rt = Runtime::cpu().expect("pjrt cpu");
-    println!("fl_round bench: tiny_cnn, 2 clients, 64 train samples each\n");
+fn experiment_section() {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\nskipping end-to-end section: {e}");
+            return;
+        }
+    };
+    if !artifacts_root().join("tiny_cnn").join("manifest.tsv").exists() {
+        println!("\nskipping end-to-end section: no artifacts (run `make artifacts`)");
+        return;
+    }
+    println!("\nfl_round bench: tiny_cnn, 8 clients, 64 train samples each\n");
     println!(
-        "{:<20} {:>10} {:>12} {:>12} {:>12}",
-        "protocol", "rounds/s", "ms/round", "up B/round", "train share"
+        "{:<20} {:>8} {:>10} {:>12} {:>12} {:>12}",
+        "protocol", "workers", "rounds/s", "ms/round", "up B/round", "train share"
     );
     for protocol in Protocol::ALL {
-        let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, protocol);
-        cfg.artifacts_root = artifacts_root();
-        cfg.rounds = 6;
-        cfg.train_per_client = 64;
-        cfg.val_per_client = 16;
-        cfg.test_samples = 32;
-        cfg.scale_epochs = 1;
-        let mut exp = Experiment::build(&rt, cfg).unwrap();
-        let t0 = Instant::now();
-        let log = exp.run().unwrap();
-        let secs = t0.elapsed().as_secs_f64();
-        let rounds = log.rounds.len() as f64;
-        let train_ms: u128 = log.rounds.iter().map(|r| r.train_ms + r.scale_ms).sum();
-        let up: usize = log.rounds.iter().map(|r| r.up_bytes).sum();
-        println!(
-            "{:<20} {:>10.2} {:>12.1} {:>12} {:>11.0}%",
-            protocol.name(),
-            rounds / secs,
-            secs * 1000.0 / rounds,
-            fmt_bytes(up / log.rounds.len()),
-            train_ms as f64 / (secs * 1000.0) * 100.0
-        );
+        for workers in [1usize, 4] {
+            let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, protocol);
+            cfg.artifacts_root = artifacts_root();
+            cfg.rounds = 6;
+            cfg.clients = 8;
+            cfg.train_per_client = 64;
+            cfg.val_per_client = 16;
+            cfg.test_samples = 32;
+            cfg.scale_epochs = 1;
+            cfg.codec_workers = workers;
+            let mut exp = Experiment::build(&rt, cfg).unwrap();
+            let t0 = Instant::now();
+            let log = exp.run().unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            let rounds = log.rounds.len() as f64;
+            let train_ms: u128 = log.rounds.iter().map(|r| r.train_ms + r.scale_ms).sum();
+            let up: usize = log.rounds.iter().map(|r| r.up_bytes).sum();
+            println!(
+                "{:<20} {:>8} {:>10.2} {:>12.1} {:>12} {:>11.0}%",
+                protocol.name(),
+                workers,
+                rounds / secs,
+                secs * 1000.0 / rounds,
+                fmt_bytes(up / log.rounds.len()),
+                train_ms as f64 / (secs * 1000.0) * 100.0
+            );
+        }
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut report = Report::new();
+    report.str("bench", "fl_round");
+    report.str("mode", if smoke { "smoke" } else { "full" });
+
+    codec_plane_section(&mut report, smoke);
+    if !smoke {
+        experiment_section();
+    }
+
+    let out = std::env::var("FSFL_BENCH_OUT").unwrap_or_else(|_| "BENCH_fl_round.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nreport → {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
 }

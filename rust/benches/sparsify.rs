@@ -2,52 +2,76 @@
 
 use std::time::Duration;
 
-use fsfl::benchkit::bench_auto;
+use fsfl::benchkit::{bench_auto, smoke_mode};
 use fsfl::compression::sparsify::{
-    apply_structured, apply_topk, apply_unstructured, structured_threshold,
-    unstructured_threshold,
+    apply_structured, apply_topk, apply_topk_with, apply_unstructured, row_means_into,
+    structured_threshold, threshold_from_means, unstructured_threshold,
 };
 use fsfl::data::XorShiftRng;
 
 fn main() {
-    let n = 1 << 20; // 1M elements ≈ vgg11_thin update
-    let rows = 1024;
+    let smoke = smoke_mode();
+    let n = if smoke { 1 << 14 } else { 1 << 20 }; // 1M elements ≈ vgg11_thin update
+    let rows = if smoke { 64 } else { 1024 };
     let row_len = n / rows;
+    let budget = if smoke {
+        Duration::from_millis(50)
+    } else {
+        Duration::from_secs(2)
+    };
     let mut rng = XorShiftRng::new(1);
     let base: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
     let mb = (n * 4) as f64 / 1e6;
-    println!("sparsify bench: {n} elements ({mb:.1} MB)\n");
+    println!("sparsify bench: {n} elements ({mb:.1} MB){}\n", if smoke { " [smoke]" } else { "" });
 
-    bench_auto("eq2 threshold (mean/std pass)", Duration::from_secs(2), || {
+    bench_auto("eq2 threshold (fused sum/sumsq pass)", budget, || {
         unstructured_threshold(&base, 1.0, 4.88e-4)
     })
     .print_throughput(mb, "MB");
 
     let theta = unstructured_threshold(&base, 1.0, 4.88e-4);
-    bench_auto("eq2 apply (zeroing pass)", Duration::from_secs(2), || {
+    bench_auto("eq2 apply (zeroing pass)", budget, || {
         let mut t = base.clone();
         apply_unstructured(&mut t, theta)
     })
     .print_throughput(mb, "MB");
 
-    bench_auto("eq3 threshold (row means)", Duration::from_secs(2), || {
+    bench_auto("eq3 threshold (row means)", budget, || {
         structured_threshold(&base, rows, row_len, 1.0)
     })
     .print_throughput(mb, "MB");
 
     let ts = structured_threshold(&base, rows, row_len, 1.0);
-    bench_auto("eq3 apply (row zeroing)", Duration::from_secs(2), || {
+    bench_auto("eq3 apply (recomputed means)", budget, || {
         let mut t = base.clone();
         apply_structured(&mut t, rows, row_len, ts)
     })
     .print_throughput(mb, "MB");
 
-    bench_auto("topk 96% (select_nth)", Duration::from_secs(2), || {
+    // shared-row-means path (the production pipeline): one means pass
+    // feeds both the threshold and the zeroing
+    let mut means = Vec::new();
+    bench_auto("eq3 threshold+apply (shared means)", budget, || {
+        let mut t = base.clone();
+        row_means_into(&t, rows, row_len, &mut means);
+        let theta = threshold_from_means(&means, 1.0);
+        fsfl::compression::sparsify::apply_structured_with_means(&mut t, rows, row_len, theta, &means)
+    })
+    .print_throughput(mb, "MB");
+
+    bench_auto("topk 96% (select_nth)", budget, || {
         let mut t = base.clone();
         apply_topk(&mut t, 0.96)
     })
     .print_throughput(mb, "MB");
 
-    bench_auto("clone only (baseline)", Duration::from_secs(2), || base.clone())
+    let mut mags = Vec::new();
+    bench_auto("topk 96% (recycled scratch)", budget, || {
+        let mut t = base.clone();
+        apply_topk_with(&mut t, 0.96, &mut mags)
+    })
+    .print_throughput(mb, "MB");
+
+    bench_auto("clone only (baseline)", budget, || base.clone())
         .print_throughput(mb, "MB");
 }

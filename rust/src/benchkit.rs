@@ -3,6 +3,13 @@
 //! Measures wall-clock over warmup + timed iterations, reports
 //! min/median/mean and derived throughput. Used by `rust/benches/*` via
 //! `cargo bench` (harness = false targets).
+//!
+//! Two extras for CI / perf-trajectory tracking:
+//! * [`smoke_mode`] — benches run a seconds-long subset when invoked as
+//!   `cargo bench --bench <name> -- --test` (the CI smoke gate).
+//! * [`Report`] — a dependency-free JSON sink; `benches/fl_round.rs`
+//!   emits `BENCH_fl_round.json` so future PRs can diff rounds/sec,
+//!   encode µs/client and allocation counts against this one.
 
 use std::time::{Duration, Instant};
 
@@ -64,6 +71,81 @@ pub fn bench_auto<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> 
     bench(name, iters.min(10) / 3 + 1, iters, f)
 }
 
+/// True when the bench binary was invoked in smoke mode
+/// (`cargo bench --bench <name> -- --test`): run a fast subset that only
+/// checks the bench still executes, not its timings.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--test" || a == "--smoke")
+}
+
+/// Minimal JSON object writer for benchmark artifacts (flat string /
+/// number / nested-object values; no external deps by design).
+#[derive(Debug, Default)]
+pub struct Report {
+    fields: Vec<(String, String)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(&mut self, key: &str, value: &str) -> &mut Self {
+        self.fields
+            .push((key.to_string(), format!("\"{}\"", json_escape(value))));
+        self
+    }
+
+    pub fn num(&mut self, key: &str, value: f64) -> &mut Self {
+        let v = if value.is_finite() {
+            format!("{value}")
+        } else {
+            "null".to_string()
+        };
+        self.fields.push((key.to_string(), v));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, value: u64) -> &mut Self {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Nest another report as an object value.
+    pub fn obj(&mut self, key: &str, value: Report) -> &mut Self {
+        self.fields.push((key.to_string(), value.render()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let inner: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
+            .collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.render() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +161,19 @@ mod tests {
         });
         assert_eq!(r.iters, 5);
         assert!(r.min <= r.median && r.median <= r.mean * 2);
+    }
+
+    #[test]
+    fn report_renders_valid_flat_json() {
+        let mut inner = Report::new();
+        inner.num("rounds_per_sec", 12.5).int("clients", 8);
+        let mut r = Report::new();
+        r.str("bench", "fl_round\"x\"").num("nan", f64::NAN).obj("pool4", inner);
+        let s = r.render();
+        assert_eq!(
+            s,
+            "{\"bench\": \"fl_round\\\"x\\\"\", \"nan\": null, \
+             \"pool4\": {\"rounds_per_sec\": 12.5, \"clients\": 8}}"
+        );
     }
 }

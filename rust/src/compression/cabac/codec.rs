@@ -16,13 +16,21 @@
 //! the bitstream and the **dequantized** update Δ̂ (what the decoder will
 //! reconstruct) so the client can keep its local state consistent with
 //! the server (Algorithm 1 line 11) and compute residuals (Eq. 5).
+//!
+//! Two API layers: the `*_into` functions are the allocation-free core
+//! (caller-owned output buffers + [`EncodeScratch`]/[`DecodeScratch`],
+//! reused across rounds on the codec worker pool), and the original
+//! allocating signatures remain as thin wrappers. Scratch reuse never
+//! leaks state between calls: every output buffer is cleared up front
+//! and the arithmetic-coder contexts are re-initialized per tensor, so
+//! bitstreams are byte-identical whether buffers are fresh or recycled.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{Manifest, TensorSpec};
 use crate::model::ParamSet;
+use crate::model::{Manifest, TensorSpec};
 
 use super::context::{decode_level, encode_level, LevelContexts, SigCtx};
 use super::engine::{Decoder, Encoder};
@@ -56,6 +64,21 @@ impl EncodeStats {
     }
 }
 
+/// Reusable encode-side buffers: the per-row quantized-level staging
+/// area and the arithmetic coder's payload buffer. Holding one of these
+/// per codec lane makes steady-state encoding allocation-free.
+#[derive(Debug, Default)]
+pub struct EncodeScratch {
+    levels: Vec<i32>,
+    payload: Vec<u8>,
+}
+
+/// Reusable decode-side buffers (header entry table).
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    entries: Vec<(usize, f32)>,
+}
+
 fn sig_ctx(prev: Option<bool>) -> SigCtx {
     match prev {
         None => SigCtx::RowStart,
@@ -83,23 +106,44 @@ pub fn encode_update_opts(
     step_of: StepFn,
     adaptive: bool,
 ) -> (Vec<u8>, Delta, EncodeStats) {
-    let manifest = &delta.manifest;
-    let mut header = Vec::with_capacity(16 + indices.len() * 6);
-    header.extend_from_slice(MAGIC);
-    header.push(VERSION);
-    header.push(if adaptive { FLAG_ADAPTIVE } else { 0 });
-    header.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    let mut scratch = EncodeScratch::default();
+    let mut deq = Delta::zeros(delta.manifest.clone());
+    let mut dst = Vec::new();
+    let stats = encode_update_into(delta, indices, step_of, adaptive, &mut scratch, &mut deq, &mut dst);
+    (dst, deq, stats)
+}
 
-    let mut deq = Delta::zeros(manifest.clone());
-    let mut enc = Encoder::new();
+/// Allocation-free core: encode into `dst` and the dequantized view into
+/// `deq` (both cleared first; `deq` must share `delta`'s manifest).
+/// Produces bitstreams byte-identical to [`encode_update_opts`].
+pub fn encode_update_into(
+    delta: &Delta,
+    indices: &[usize],
+    step_of: StepFn,
+    adaptive: bool,
+    scratch: &mut EncodeScratch,
+    deq: &mut Delta,
+    dst: &mut Vec<u8>,
+) -> EncodeStats {
+    let manifest = &delta.manifest;
+    debug_assert_eq!(deq.tensors.len(), manifest.tensors.len());
+    deq.clear();
+    dst.clear();
+    dst.extend_from_slice(MAGIC);
+    dst.push(VERSION);
+    dst.push(if adaptive { FLAG_ADAPTIVE } else { 0 });
+    dst.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+
+    let mut enc = Encoder::with_buffer(std::mem::take(&mut scratch.payload));
+    let levels = &mut scratch.levels;
     let mut stats = EncodeStats::default();
 
     for &ti in indices {
         let spec = &manifest.tensors[ti];
         let step = step_of(spec);
         assert!(step > 0.0, "{}: non-positive step", spec.name);
-        header.extend_from_slice(&(ti as u16).to_le_bytes());
-        header.extend_from_slice(&step.to_le_bytes());
+        dst.extend_from_slice(&(ti as u16).to_le_bytes());
+        dst.extend_from_slice(&step.to_le_bytes());
 
         let data = &delta.tensors[ti];
         let out = &mut deq.tensors[ti];
@@ -111,7 +155,8 @@ pub fn encode_update_opts(
         };
         for r in 0..rows {
             let row = &data[r * row_len..(r + 1) * row_len];
-            let levels: Vec<i32> = row.iter().map(|&x| quantize(x, step)).collect();
+            levels.clear();
+            levels.extend(row.iter().map(|&x| quantize(x, step)));
             stats.total += row_len;
             if spec.rows().is_some() {
                 stats.rows_total += 1;
@@ -135,14 +180,30 @@ pub fn encode_update_opts(
     }
 
     let payload = enc.finish();
-    header.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    header.extend_from_slice(&payload);
-    stats.bytes = header.len();
-    (header, deq, stats)
+    dst.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    dst.extend_from_slice(&payload);
+    scratch.payload = payload; // recycle the coder buffer for the next call
+    stats.bytes = dst.len();
+    stats
 }
 
 /// Decode a bitstream produced by [`encode_update`].
 pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
+    let mut out = Delta::zeros(manifest.clone());
+    decode_update_into(bytes, &mut out)?;
+    Ok(out)
+}
+
+/// Decode into a caller-owned (recycled) `Delta`; cleared first.
+pub fn decode_update_into(bytes: &[u8], out: &mut Delta) -> Result<()> {
+    let mut scratch = DecodeScratch::default();
+    decode_update_with(bytes, out, &mut scratch)
+}
+
+/// Allocation-free core of [`decode_update`].
+pub fn decode_update_with(bytes: &[u8], out: &mut Delta, scratch: &mut DecodeScratch) -> Result<()> {
+    let manifest = out.manifest.clone();
+    out.clear();
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
         if *pos + n > bytes.len() {
@@ -160,7 +221,8 @@ pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
     }
     let adaptive = take(&mut pos, 1)?[0] & FLAG_ADAPTIVE != 0;
     let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let mut entries = Vec::with_capacity(count);
+    let entries = &mut scratch.entries;
+    entries.clear();
     for _ in 0..count {
         let ti = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
         let step = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
@@ -173,12 +235,11 @@ pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
     let payload = take(&mut pos, plen)?;
 
     let mut dec = Decoder::new(payload);
-    let mut delta = Delta::zeros(manifest.clone());
-    for (ti, step) in entries {
+    for &(ti, step) in entries.iter() {
         let spec = &manifest.tensors[ti];
         let numel = spec.numel();
         let (rows, row_len) = spec.rows().unwrap_or((1, numel));
-        let out = &mut delta.tensors[ti];
+        let tensor = &mut out.tensors[ti];
         let mut cx = if adaptive {
             LevelContexts::default()
         } else {
@@ -193,20 +254,25 @@ pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
                 let q = decode_level(&mut dec, &mut cx, sig_ctx(prev));
                 prev = Some(q != 0);
                 if q != 0 {
-                    out[r * row_len + c] = dequantize(q, step);
+                    tensor[r * row_len + c] = dequantize(q, step);
                 }
             }
         }
     }
-    Ok(delta)
+    Ok(())
 }
 
 /// Bytes an *uncompressed* f32 transmission of these tensors would take
 /// (the paper's plain-FedAvg accounting in Table 2).
 pub fn raw_bytes(params: &ParamSet, indices: &[usize]) -> usize {
+    raw_bytes_of(&params.manifest, indices)
+}
+
+/// [`raw_bytes`] from the manifest alone (no parameter values needed).
+pub fn raw_bytes_of(manifest: &Manifest, indices: &[usize]) -> usize {
     indices
         .iter()
-        .map(|&i| params.manifest.tensors[i].numel() * 4)
+        .map(|&i| manifest.tensors[i].numel() * 4)
         .sum()
 }
 
@@ -265,5 +331,47 @@ mod tests {
         let (bytes, _, _) = encode_update(&d, &[0], &|_| 1e-3);
         assert!(decode_update(&bytes[..3], &m).is_err());
         assert!(decode_update(&bytes[..10], &m).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_is_byte_identical_and_leak_free() {
+        let m = manifest_conv_dense();
+        let step = |_: &TensorSpec| 1e-3f32;
+        let mut scratch = EncodeScratch::default();
+        let mut deq = Delta::zeros(m.clone());
+        let mut dst = Vec::new();
+
+        // First encode: a dense update that dirties every buffer.
+        let mut dense = Delta::zeros(m.clone());
+        for t in &mut dense.tensors {
+            for (i, x) in t.iter_mut().enumerate() {
+                *x = 0.05 * (i as f32 + 1.0);
+            }
+        }
+        let idx = vec![0usize, 1];
+        encode_update_into(&dense, &idx, &step, true, &mut scratch, &mut deq, &mut dst);
+        assert!(dst.len() > 16);
+
+        // Second encode through the SAME scratch/deq/dst must match a
+        // fresh allocating encode bit for bit — nothing from the dense
+        // update may leak into the sparse one.
+        let mut sparse = Delta::zeros(m.clone());
+        sparse.tensors[0][4] = 2.5e-3;
+        let stats2 = encode_update_into(&sparse, &idx, &step, true, &mut scratch, &mut deq, &mut dst);
+        let (fresh_bytes, fresh_deq, fresh_stats) = encode_update(&sparse, &idx, &step);
+        assert_eq!(dst, fresh_bytes);
+        assert_eq!(deq, fresh_deq);
+        assert_eq!(stats2.nonzero, fresh_stats.nonzero);
+
+        // Decode through a recycled Delta + scratch matches too.
+        let mut dscratch = DecodeScratch::default();
+        let mut out = Delta::zeros(m.clone());
+        decode_update_with(&fresh_bytes, &mut out, &mut dscratch).unwrap();
+        // dirty it, decode again
+        for t in &mut out.tensors {
+            t.iter_mut().for_each(|x| *x = 7.0);
+        }
+        decode_update_with(&fresh_bytes, &mut out, &mut dscratch).unwrap();
+        assert_eq!(out, fresh_deq);
     }
 }

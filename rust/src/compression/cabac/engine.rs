@@ -75,12 +75,21 @@ impl Default for Encoder {
 
 impl Encoder {
     pub fn new() -> Self {
+        Self::with_buffer(Vec::new())
+    }
+
+    /// Encode into a recycled buffer (cleared, capacity kept): the
+    /// steady-state FL round re-uses one payload buffer per client, so
+    /// encoding allocates nothing once buffers have grown to size.
+    /// The produced bytes are identical to [`Encoder::new`]'s.
+    pub fn with_buffer(mut out: Vec<u8>) -> Self {
+        out.clear();
         Self {
             low: 0,
             range: u32::MAX,
             cache: 0,
             cache_size: 1,
-            out: Vec::new(),
+            out,
         }
     }
 

@@ -12,5 +12,8 @@ pub mod codec;
 pub mod context;
 pub mod engine;
 
-pub use codec::{decode_update, encode_update, encode_update_opts, EncodeStats, StepFn};
+pub use codec::{
+    decode_update, decode_update_into, decode_update_with, encode_update, encode_update_into,
+    encode_update_opts, DecodeScratch, EncodeScratch, EncodeStats, StepFn,
+};
 pub use engine::{BitModel, Decoder, Encoder};

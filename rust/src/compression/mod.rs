@@ -5,6 +5,16 @@
 //! [`UpdateCodec`] is the facade the FL protocols use: it owns the
 //! sparsify + quantize + encode configuration and produces
 //! `(bitstream, dequantized Δ̂, stats)` triples.
+//!
+//! The hot path is [`UpdateCodec::encode_into`] / [`UpdateCodec::decode_into`]
+//! with a per-lane [`CodecScratch`]: every intermediate buffer (row
+//! quantization levels, range-coder payload, top-k magnitudes, Eq. 3 row
+//! means, STC μ table, decoder entry table) is recycled across rounds,
+//! so steady-state encoding/decoding performs no heap allocation.
+//! **Scratch contract:** no call ever reads scratch contents left by a
+//! previous call — every buffer is cleared (or fully overwritten) before
+//! use, so one scratch may serve tensors and updates of any shape
+//! back-to-back without leaking data across tensors or clients.
 
 pub mod cabac;
 pub mod quantize;
@@ -15,7 +25,7 @@ pub mod stc;
 pub use cabac::{decode_update, encode_update, EncodeStats};
 pub use quantize::QuantConfig;
 pub use residual::Residual;
-pub use sparsify::SparsifyMode;
+pub use sparsify::{SparsifyMode, SparsifyScratch};
 
 use std::sync::Arc;
 
@@ -23,6 +33,16 @@ use anyhow::Result;
 
 use crate::model::params::Delta;
 use crate::model::Manifest;
+
+/// All recycled buffers one codec lane (client slot or server) needs.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    pub sparsify: SparsifyScratch,
+    pub encode: cabac::EncodeScratch,
+    pub decode: cabac::DecodeScratch,
+    /// Per-tensor STC μ values (ternary protocols only).
+    mus: Vec<f32>,
+}
 
 /// End-to-end codec: how a protocol turns a raw ΔW into wire bytes.
 #[derive(Debug, Clone, Copy)]
@@ -74,7 +94,32 @@ impl UpdateCodec {
     /// Returns `(wire bytes, dequantized Δ̂, stats)`. `indices` selects the
     /// transmitted tensors (partial updates transmit fewer).
     pub fn encode(&self, mut raw: Delta, indices: &[usize]) -> (Vec<u8>, Delta, EncodeStats) {
+        let mut scratch = CodecScratch::default();
+        let mut deq = Delta::zeros(raw.manifest.clone());
+        let mut dst = Vec::new();
+        let stats = self.encode_into(&mut raw, indices, &mut scratch, &mut deq, &mut dst);
+        (dst, deq, stats)
+    }
+
+    /// Allocation-free encode: sparsifies `raw` **in place**, writes the
+    /// bitstream to `dst` and the dequantized Δ̂ to `deq` (both cleared
+    /// first; `deq` must share `raw`'s manifest). Byte-identical to
+    /// [`UpdateCodec::encode`].
+    pub fn encode_into(
+        &self,
+        raw: &mut Delta,
+        indices: &[usize],
+        scratch: &mut CodecScratch,
+        deq: &mut Delta,
+        dst: &mut Vec<u8>,
+    ) -> EncodeStats {
         let quant = self.quant;
+        let CodecScratch {
+            sparsify: sp,
+            encode: enc,
+            mus,
+            ..
+        } = scratch;
         if self.ternary {
             // STC: top-k happens inside ternarize; survivors become ±μ and
             // are coded with step = μ so levels are exactly ±1. Side
@@ -83,8 +128,9 @@ impl UpdateCodec {
                 SparsifyMode::TopK { rate } => rate,
                 _ => 0.99,
             };
-            let mus = stc::ternarize(&mut raw, indices, rate);
+            stc::ternarize_into(raw, indices, rate, &mut sp.mags, mus);
             let manifest = raw.manifest.clone();
+            let mus: &Vec<f32> = mus;
             let step_fn = move |spec: &crate::model::TensorSpec| -> f32 {
                 let idx = manifest.index_of(&spec.name).unwrap();
                 if mus[idx] > 0.0 {
@@ -93,14 +139,68 @@ impl UpdateCodec {
                     quant.step_for(spec)
                 }
             };
-            return cabac::encode_update(&raw, indices, &step_fn);
+            return cabac::encode_update_into(raw, indices, &step_fn, true, enc, deq, dst);
         }
-        sparsify::sparsify(&mut raw, indices, self.sparsify, &quant);
+        sparsify::sparsify_with(raw, indices, self.sparsify, &quant, sp);
         let step_fn = move |spec: &crate::model::TensorSpec| quant.step_for(spec);
-        cabac::encode_update(&raw, indices, &step_fn)
+        cabac::encode_update_into(raw, indices, &step_fn, true, enc, deq, dst)
     }
 
     pub fn decode(&self, bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
         cabac::decode_update(bytes, manifest)
+    }
+
+    /// Allocation-free decode into a recycled `Delta` (cleared first).
+    pub fn decode_into(
+        &self,
+        bytes: &[u8],
+        out: &mut Delta,
+        scratch: &mut CodecScratch,
+    ) -> Result<()> {
+        cabac::decode_update_with(bytes, out, &mut scratch.decode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::manifest_conv_dense;
+
+    /// One dirty scratch must serve every protocol family back to back
+    /// and stay byte-identical to the allocating path.
+    #[test]
+    fn codec_scratch_reuse_matches_fresh_encode() {
+        let m = manifest_conv_dense();
+        let mut rng = crate::data::XorShiftRng::new(21);
+        let mk = |rng: &mut crate::data::XorShiftRng| {
+            let mut d = Delta::zeros(m.clone());
+            for t in &mut d.tensors {
+                for x in t.iter_mut() {
+                    *x = rng.normal() * 2e-3;
+                }
+            }
+            d
+        };
+        let idx = vec![0usize, 1];
+        let mut scratch = CodecScratch::default();
+        for codec in [
+            UpdateCodec::fsfl(0.5, 1.0),
+            UpdateCodec::stc(0.5),
+            UpdateCodec::fixed_rate(0.5),
+            UpdateCodec::quant_only(),
+        ] {
+            let raw = mk(&mut rng);
+            let (fresh_bytes, fresh_deq, fresh_stats) = codec.encode(raw.clone(), &idx);
+            let mut raw2 = raw;
+            let mut deq = Delta::zeros(m.clone());
+            let mut dst = Vec::new();
+            let stats = codec.encode_into(&mut raw2, &idx, &mut scratch, &mut deq, &mut dst);
+            assert_eq!(dst, fresh_bytes, "{codec:?}");
+            assert_eq!(deq, fresh_deq, "{codec:?}");
+            assert_eq!(stats.bytes, fresh_stats.bytes);
+            let mut decoded = Delta::zeros(m.clone());
+            codec.decode_into(&dst, &mut decoded, &mut scratch).unwrap();
+            assert_eq!(decoded, fresh_deq, "{codec:?}");
+        }
     }
 }

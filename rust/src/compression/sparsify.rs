@@ -4,12 +4,18 @@
 //!   Gaussian approximation of the update distribution,
 //!   `θ_u = max(|mean − δ·std|, |mean + δ·std|)`, floored at
 //!   `step_size / 2` (anything below quantizes to zero anyway).
+//!   Mean/std come from one fused sum/sum-of-squares pass.
 //! * **Structured** (Eq. 3): per-filter-row threshold
 //!   `θ_s = γ/M · Σ_m |mean(ΔF_m)|`; rows whose absolute update mean
 //!   falls below θ_s are zeroed entirely (these become 1-bit row-skip
-//!   flags in the codec).
+//!   flags in the codec). Row means are computed once and shared between
+//!   the threshold and the zeroing pass via [`SparsifyScratch`].
 //! * **Fixed-rate top-k**: the constant 96 % sparsity used for the
 //!   Table 2 comparison against STC.
+//!
+//! The `*_with` entry points take a [`SparsifyScratch`] and are
+//! allocation-free in steady state; the original signatures remain as
+//! wrappers for tests/benches.
 
 use crate::model::params::Delta;
 use crate::model::TensorSpec;
@@ -27,14 +33,33 @@ pub enum SparsifyMode {
     TopK { rate: f32 },
 }
 
-/// Eq. (2): Gaussian-approximation threshold for one tensor.
+/// Reusable buffers for the sparsification kernels. The contents carry
+/// no meaning across calls — every user clears before filling — so one
+/// scratch can serve tensors of any shape back to back.
+#[derive(Debug, Default)]
+pub struct SparsifyScratch {
+    /// Per-row means for Eq. (3) (shared threshold + apply pass).
+    pub(crate) row_means: Vec<f64>,
+    /// Magnitude staging for top-k selection.
+    pub(crate) mags: Vec<f32>,
+}
+
+/// Eq. (2): Gaussian-approximation threshold for one tensor. Single
+/// fused pass: `var = E[x²] − mean²` (clamped at 0 against f64 rounding).
 pub fn unstructured_threshold(t: &[f32], delta: f32, step_size: f32) -> f32 {
     if t.is_empty() {
         return step_size / 2.0;
     }
     let n = t.len() as f64;
-    let mean = t.iter().map(|&x| x as f64).sum::<f64>() / n;
-    let var = t.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let mut sum = 0.0f64;
+    let mut sumsq = 0.0f64;
+    for &x in t {
+        let x = x as f64;
+        sum += x;
+        sumsq += x * x;
+    }
+    let mean = sum / n;
+    let var = (sumsq / n - mean * mean).max(0.0);
     let std = var.sqrt();
     let d = delta as f64;
     let theta = (mean - d * std).abs().max((mean + d * std).abs()) as f32;
@@ -53,37 +78,65 @@ pub fn apply_unstructured(t: &mut [f32], theta: f32) -> usize {
     zeroed
 }
 
+/// Fill `means` with the per-row means of a row-structured tensor.
+pub fn row_means_into(t: &[f32], rows: usize, row_len: usize, means: &mut Vec<f64>) {
+    means.clear();
+    means.extend((0..rows).map(|r| {
+        let row = &t[r * row_len..(r + 1) * row_len];
+        row.iter().map(|&x| x as f64).sum::<f64>() / row_len as f64
+    }));
+}
+
+/// Eq. (3) threshold from precomputed row means.
+pub fn threshold_from_means(means: &[f64], gamma: f32) -> f32 {
+    if means.is_empty() {
+        return 0.0;
+    }
+    let sum_abs_means: f64 = means.iter().map(|m| m.abs()).sum();
+    (gamma as f64 * sum_abs_means / means.len() as f64) as f32
+}
+
 /// Eq. (3): θ_s = γ/M · Σ_m |mean(row_m)| for a row-structured tensor.
 pub fn structured_threshold(t: &[f32], rows: usize, row_len: usize, gamma: f32) -> f32 {
     if rows == 0 || row_len == 0 {
         return 0.0;
     }
-    let sum_abs_means: f64 = (0..rows)
-        .map(|r| {
-            let row = &t[r * row_len..(r + 1) * row_len];
-            (row.iter().map(|&x| x as f64).sum::<f64>() / row_len as f64).abs()
-        })
-        .sum();
-    (gamma as f64 * sum_abs_means / rows as f64) as f32
+    let mut means = Vec::new();
+    row_means_into(t, rows, row_len, &mut means);
+    threshold_from_means(&means, gamma)
 }
 
-/// Zero entire rows whose |mean| < θ_s. Returns number of rows zeroed.
-pub fn apply_structured(t: &mut [f32], rows: usize, row_len: usize, theta: f32) -> usize {
+/// Zero entire rows whose precomputed |mean| < θ_s (the means must come
+/// from [`row_means_into`] on the same tensor). Returns rows zeroed.
+pub fn apply_structured_with_means(
+    t: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    theta: f32,
+    means: &[f64],
+) -> usize {
+    debug_assert_eq!(means.len(), rows);
     let mut zeroed = 0;
-    for r in 0..rows {
-        let row = &mut t[r * row_len..(r + 1) * row_len];
-        let mean = row.iter().map(|&x| x as f64).sum::<f64>() / row_len as f64;
+    for (r, mean) in means.iter().enumerate().take(rows) {
         if (mean.abs() as f32) < theta {
-            row.iter_mut().for_each(|x| *x = 0.0);
+            t[r * row_len..(r + 1) * row_len]
+                .iter_mut()
+                .for_each(|x| *x = 0.0);
             zeroed += 1;
         }
     }
     zeroed
 }
 
-/// Magnitude top-k: zero everything except the `(1-rate)` fraction with the
-/// largest |x| (per tensor, as in STC / the Table 2 fixed-rate setting).
-pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
+/// Zero entire rows whose |mean| < θ_s. Returns number of rows zeroed.
+pub fn apply_structured(t: &mut [f32], rows: usize, row_len: usize, theta: f32) -> usize {
+    let mut means = Vec::new();
+    row_means_into(t, rows, row_len, &mut means);
+    apply_structured_with_means(t, rows, row_len, theta, &means)
+}
+
+/// Magnitude top-k through a recycled magnitude buffer.
+pub fn apply_topk_with(t: &mut [f32], rate: f32, mags: &mut Vec<f32>) -> usize {
     let n = t.len();
     let keep = (((1.0 - rate as f64) * n as f64).round() as usize).min(n);
     if keep == n {
@@ -94,7 +147,8 @@ pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
         t.iter_mut().for_each(|x| *x = 0.0);
         return zeroed;
     }
-    let mut mags: Vec<f32> = t.iter().map(|x| x.abs()).collect();
+    mags.clear();
+    mags.extend(t.iter().map(|x| x.abs()));
     let cut = n - keep;
     mags.select_nth_unstable_by(cut, |a, b| a.partial_cmp(b).unwrap());
     let theta = mags[cut];
@@ -120,13 +174,21 @@ pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
     zeroed
 }
 
-/// Apply a [`SparsifyMode`] to every update tensor in `indices`.
-/// Returns total elements zeroed.
-pub fn sparsify(
+/// Magnitude top-k: zero everything except the `(1-rate)` fraction with the
+/// largest |x| (per tensor, as in STC / the Table 2 fixed-rate setting).
+pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
+    let mut mags = Vec::new();
+    apply_topk_with(t, rate, &mut mags)
+}
+
+/// Apply a [`SparsifyMode`] to every update tensor in `indices` using
+/// recycled scratch buffers. Returns total elements zeroed.
+pub fn sparsify_with(
     delta: &mut Delta,
     indices: &[usize],
     mode: SparsifyMode,
     quant: &QuantConfig,
+    scratch: &mut SparsifyScratch,
 ) -> usize {
     let manifest = delta.manifest.clone();
     let mut zeroed = 0;
@@ -139,8 +201,10 @@ pub fn sparsify(
                 // Structured first (Eq. 3) on filter rows, then the
                 // unstructured Gaussian threshold (Eq. 2) on survivors.
                 if let Some((rows, row_len)) = spec.rows() {
-                    let theta_s = structured_threshold(t, rows, row_len, gamma);
-                    zeroed += apply_structured(t, rows, row_len, theta_s);
+                    row_means_into(t, rows, row_len, &mut scratch.row_means);
+                    let theta_s = threshold_from_means(&scratch.row_means, gamma);
+                    zeroed +=
+                        apply_structured_with_means(t, rows, row_len, theta_s, &scratch.row_means);
                 }
                 let theta_u = unstructured_threshold(t, d, quant.step_for(spec));
                 zeroed += apply_unstructured(t, theta_u);
@@ -149,12 +213,24 @@ pub fn sparsify(
                 // Fixed-rate sparsity only targets the (large) weight
                 // tensors; side parameters ride along as in the paper.
                 if spec.rows().is_some() {
-                    zeroed += apply_topk(t, rate);
+                    zeroed += apply_topk_with(t, rate, &mut scratch.mags);
                 }
             }
         }
     }
     zeroed
+}
+
+/// Apply a [`SparsifyMode`] to every update tensor in `indices`.
+/// Returns total elements zeroed.
+pub fn sparsify(
+    delta: &mut Delta,
+    indices: &[usize],
+    mode: SparsifyMode,
+    quant: &QuantConfig,
+) -> usize {
+    let mut scratch = SparsifyScratch::default();
+    sparsify_with(delta, indices, mode, quant, &mut scratch)
 }
 
 #[cfg(test)]
@@ -183,6 +259,14 @@ mod tests {
     }
 
     #[test]
+    fn eq2_constant_tensor_has_zero_variance() {
+        // fused sum/sumsq must not go negative on constant input
+        let t = vec![0.25f32; 4096];
+        let theta = unstructured_threshold(&t, 3.0, 1e-9);
+        assert!((theta - 0.25).abs() < 1e-5, "theta={theta}");
+    }
+
+    #[test]
     fn eq3_zeroes_low_mean_rows() {
         // rows: mean 1.0, mean 0.01, mean -1.0 → θ_s(γ=1) = 0.67
         let mut t = vec![1.0, 1.0, 1.0, 0.01, 0.01, 0.01, -1.0, -1.0, -1.0];
@@ -193,6 +277,22 @@ mod tests {
         assert_eq!(&t[3..6], &[0.0, 0.0, 0.0]);
         assert_eq!(t[0], 1.0);
         assert_eq!(t[8], -1.0);
+    }
+
+    #[test]
+    fn eq3_shared_means_match_recompute() {
+        let mut rng = crate::data::XorShiftRng::new(3);
+        let t: Vec<f32> = (0..256).map(|_| rng.normal() * 0.01).collect();
+        let mut means = Vec::new();
+        row_means_into(&t, 16, 16, &mut means);
+        let theta = threshold_from_means(&means, 1.0);
+        assert_eq!(theta, structured_threshold(&t, 16, 16, 1.0));
+        let mut a = t.clone();
+        let mut b = t;
+        let za = apply_structured_with_means(&mut a, 16, 16, theta, &means);
+        let zb = apply_structured(&mut b, 16, 16, theta);
+        assert_eq!(za, zb);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -219,5 +319,41 @@ mod tests {
         let mut t = vec![1.0f32, -2.0, 3.0];
         apply_topk(&mut t, 1.0);
         assert!(t.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topk_scratch_reuse_across_shapes() {
+        let mut mags = Vec::new();
+        let mut big: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        apply_topk_with(&mut big, 0.9, &mut mags);
+        // smaller tensor through the same (dirty, larger) scratch
+        let mut small = vec![5.0f32, -1.0, 3.0, 0.5];
+        let mut expect = small.clone();
+        apply_topk(&mut expect, 0.5);
+        apply_topk_with(&mut small, 0.5, &mut mags);
+        assert_eq!(small, expect);
+    }
+
+    #[test]
+    fn sparsify_with_matches_sparsify() {
+        use crate::model::params::tests_support::manifest_conv_dense;
+        let m = manifest_conv_dense();
+        let mut rng = crate::data::XorShiftRng::new(9);
+        let mut base = crate::model::params::Delta::zeros(m.clone());
+        for t in &mut base.tensors {
+            for x in t.iter_mut() {
+                *x = rng.normal() * 1e-3;
+            }
+        }
+        let q = QuantConfig::default();
+        let idx = vec![0usize, 1];
+        let mode = SparsifyMode::Dynamic { delta: 0.5, gamma: 1.0 };
+        let mut a = base.clone();
+        let z1 = sparsify(&mut a, &idx, mode, &q);
+        let mut scratch = SparsifyScratch::default();
+        let mut b = base;
+        let z2 = sparsify_with(&mut b, &idx, mode, &q, &mut scratch);
+        assert_eq!(z1, z2);
+        assert_eq!(a, b);
     }
 }

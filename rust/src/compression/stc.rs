@@ -18,8 +18,26 @@ use crate::model::params::Delta;
 /// top-(1-rate) magnitude survivors become ±μ. Returns per-tensor μ
 /// (0.0 for tensors that were not ternarized or are all-zero).
 pub fn ternarize(delta: &mut Delta, indices: &[usize], rate: f32) -> Vec<f32> {
+    let mut mus = Vec::new();
+    let mut mags = Vec::new();
+    ternarize_into(delta, indices, rate, &mut mags, &mut mus);
+    mus
+}
+
+/// Allocation-free core of [`ternarize`]: `mags` is the recycled top-k
+/// magnitude buffer, `mus` the per-tensor μ output (resized + zeroed
+/// here). μ is accumulated in a single pass over the survivors instead
+/// of staging them in a temporary vector.
+pub fn ternarize_into(
+    delta: &mut Delta,
+    indices: &[usize],
+    rate: f32,
+    mags: &mut Vec<f32>,
+    mus: &mut Vec<f32>,
+) {
     let manifest = delta.manifest.clone();
-    let mut mus = vec![0.0f32; manifest.tensors.len()];
+    mus.clear();
+    mus.resize(manifest.tensors.len(), 0.0);
     for &i in indices {
         let spec = &manifest.tensors[i];
         if spec.rows().is_none() {
@@ -28,12 +46,19 @@ pub fn ternarize(delta: &mut Delta, indices: &[usize], rate: f32) -> Vec<f32> {
             continue;
         }
         let t = &mut delta.tensors[i];
-        super::sparsify::apply_topk(t, rate);
-        let survivors: Vec<f32> = t.iter().filter(|&&x| x != 0.0).map(|x| x.abs()).collect();
-        if survivors.is_empty() {
+        super::sparsify::apply_topk_with(t, rate, mags);
+        let mut sum = 0.0f32;
+        let mut count = 0usize;
+        for &x in t.iter() {
+            if x != 0.0 {
+                sum += x.abs();
+                count += 1;
+            }
+        }
+        if count == 0 {
             continue;
         }
-        let mu = survivors.iter().sum::<f32>() / survivors.len() as f32;
+        let mu = sum / count as f32;
         mus[i] = mu;
         for x in t.iter_mut() {
             if *x > 0.0 {
@@ -43,7 +68,6 @@ pub fn ternarize(delta: &mut Delta, indices: &[usize], rate: f32) -> Vec<f32> {
             }
         }
     }
-    mus
 }
 
 #[cfg(test)]

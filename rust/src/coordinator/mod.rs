@@ -7,10 +7,13 @@
 //! compute thread and streams [`RoundMetrics`]; this is the launcher used
 //! by the `fsfl` binary and the examples.
 //!
-//! The in-process wire protocol is still the *paper's* protocol: clients
-//! emit DeepCABAC bitstreams, the server decodes exactly those bytes
-//! (`Server::decode_client`), and byte accounting happens on the encoded
-//! streams — nothing is short-circuited.
+//! Within a round the compute thread additionally fans the **codec
+//! plane** (per-client encode, server-side decode) out across the
+//! experiment's [`crate::exec::WorkerPool`] — see `fl/mod.rs` for the
+//! stage diagram. The in-process wire protocol is still the *paper's*
+//! protocol: clients emit DeepCABAC bitstreams, the server decodes
+//! exactly those bytes (`RoundLane::finish_round`), and byte accounting
+//! happens on the encoded streams — nothing is short-circuited.
 
 use std::sync::mpsc;
 

@@ -1,0 +1,156 @@
+//! Scoped worker pool for the **codec plane**.
+//!
+//! An FL round has two very different kinds of work: the *compute plane*
+//! (PJRT step execution — thread-affine, stays on the thread that built
+//! the XLA client) and the *codec plane* (per-client sparsify → quantize
+//! → DeepCABAC encode, and server-side decode — pure CPU code with no
+//! XLA dependency). [`WorkerPool`] fans the codec plane out across OS
+//! threads with `std::thread::scope`, so borrowed per-client state flows
+//! in without `Arc`/channels and without any new dependencies.
+//!
+//! Determinism contract: work items are processed independently and
+//! results land in the slot of the item that produced them, so outputs
+//! are **bit-for-bit identical for every pool size** (including 1). The
+//! serial/parallel equivalence tests in `tests/integration_parallel.rs`
+//! pin this down for the full codec pipeline.
+
+/// A fixed-width scoped worker pool. Threads live only for the duration
+/// of one [`WorkerPool::run_mut`]/[`WorkerPool::map`] call; with one
+/// worker (or one item) everything runs inline on the caller's thread.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+/// Upper bound for auto-sized pools: codec work saturates memory
+/// bandwidth long before it scales past this.
+const MAX_AUTO_WORKERS: usize = 16;
+
+impl WorkerPool {
+    /// `workers == 0` → auto (available parallelism, capped); otherwise
+    /// exactly `workers` threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(MAX_AUTO_WORKERS)
+        } else {
+            workers
+        };
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Strictly serial pool (the baseline the equivalence tests compare
+    /// every other width against).
+    pub fn serial() -> Self {
+        Self { workers: 1 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every item, in place. `f` receives the item's index
+    /// in `items`. Items are distributed as contiguous chunks (codec
+    /// work is near-uniform per client, so static partitioning beats a
+    /// shared queue's synchronization). Panics in `f` propagate to the
+    /// caller when the scope joins.
+    pub fn run_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        let w = self.workers.min(n);
+        if w <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let chunk = (n + w - 1) / w;
+        std::thread::scope(|s| {
+            for (c, slice) in items.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, item) in slice.iter_mut().enumerate() {
+                        f(c * chunk + j, item);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Consume `items`, producing one output per item in input order.
+    pub fn map<I, O, F>(&self, items: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send,
+        O: Send,
+        F: Fn(usize, I) -> O + Sync,
+    {
+        let mut slots: Vec<(Option<I>, Option<O>)> =
+            items.into_iter().map(|i| (Some(i), None)).collect();
+        self.run_mut(&mut slots, |i, slot| {
+            let input = slot.0.take().expect("map slot consumed twice");
+            slot.1 = Some(f(i, input));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.1.expect("map slot not produced"))
+            .collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_mut_hits_every_item_with_its_index() {
+        for workers in [1, 2, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let mut items: Vec<usize> = vec![0; 37];
+            pool.run_mut(&mut items, |i, x| *x = i * i);
+            for (i, &x) in items.iter().enumerate() {
+                assert_eq!(x, i * i, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_for_all_widths() {
+        let inputs: Vec<u64> = (0..101).collect();
+        let serial = WorkerPool::serial().map(inputs.clone(), |_, x| x.wrapping_mul(2654435761));
+        for workers in [2, 4, 16] {
+            let par = WorkerPool::new(workers).map(inputs.clone(), |_, x| {
+                x.wrapping_mul(2654435761)
+            });
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_are_inline() {
+        let pool = WorkerPool::new(8);
+        let mut empty: Vec<u32> = Vec::new();
+        pool.run_mut(&mut empty, |_, _| unreachable!());
+        let out = pool.map(vec![7u32], |i, x| (i, x + 1));
+        assert_eq!(out, vec![(0, 8)]);
+    }
+
+    #[test]
+    fn auto_width_is_sane() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.workers() >= 1 && pool.workers() <= MAX_AUTO_WORKERS);
+        assert_eq!(WorkerPool::serial().workers(), 1);
+    }
+}

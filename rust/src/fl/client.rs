@@ -1,35 +1,27 @@
 //! FL client: Algorithm 1 lines 6–21 — local weight training, dynamic
 //! sparsification of the differential update, scale-factor sub-epochs
 //! with best-of-E validation selection, and the discard rule.
+//!
+//! The round is split into **compute-plane** methods that must run on
+//! the XLA thread ([`Client::train_round`], [`Client::scale_round`]) and
+//! codec-plane work that lives on the [`crate::fl::RoundLane`] and runs
+//! on the worker pool. All round-to-round state (the global replica, the
+//! local training replica `work`, the Ŵ replica `hat`, optimizer state,
+//! scale-selection buffers) is persistent: a steady-state round clones
+//! no `ParamSet` and allocates nothing on this path.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compression::{EncodeStats, Residual, UpdateCodec};
+use crate::compression::Residual;
 use crate::data::{batches, Batch, Dataset, XorShiftRng};
 use crate::fl::config::{ExperimentConfig, ProtocolConfig};
+use crate::fl::lane::RoundLane;
 use crate::fl::schedule::LrSchedule;
 use crate::model::params::Delta;
 use crate::model::{Group, ParamSet};
 use crate::runtime::{ModelRuntime, OptState};
-
-/// What one client sends upstream after a round.
-#[derive(Debug)]
-pub struct ClientRoundOutput {
-    /// Encoded bitstreams (W-update stream, optional S-update stream).
-    /// Empty for uncompressed FedAvg.
-    pub streams: Vec<Vec<u8>>,
-    /// The dequantized update the server will reconstruct (== decode of
-    /// `streams`, or the exact raw update for plain FedAvg).
-    pub update: Delta,
-    pub up_bytes: usize,
-    pub stats: EncodeStats,
-    pub scale_accepted: bool,
-    pub train_loss: f64,
-    pub train_ms: u128,
-    pub scale_ms: u128,
-}
 
 pub struct Client {
     pub id: usize,
@@ -37,13 +29,35 @@ pub struct Client {
     /// by applying broadcast deltas (so server/client divergence is a bug,
     /// asserted in integration tests).
     pub global: ParamSet,
+    /// Local weight-training replica (overwritten from `global` each
+    /// round; persistent so rounds don't clone the full model).
+    work: ParamSet,
+    /// Ŵ = W + Δ̂ replica for the scale sub-epochs (same reuse scheme).
+    hat: ParamSet,
     wopt: OptState,
     sopt: OptState,
     pub residual: Option<Residual>,
     pub schedule: LrSchedule,
     train_idx: Vec<usize>,
     val_idx: Vec<usize>,
+    /// Scale-tensor indices (cached from the manifest).
+    scale_idx: Vec<usize>,
+    /// Best-of-E selection buffers (one slice per scale tensor).
+    baseline_scales: Vec<Vec<f32>>,
+    best_scales: Vec<Vec<f32>>,
     rng: XorShiftRng,
+}
+
+/// Snapshot `params`' scale tensors into reusable per-slot buffers.
+fn copy_scales(params: &ParamSet, scale_idx: &[usize], out: &mut Vec<Vec<f32>>) {
+    if out.len() != scale_idx.len() {
+        out.clear();
+        out.extend(scale_idx.iter().map(|&i| params.tensors[i].clone()));
+        return;
+    }
+    for (slot, &i) in scale_idx.iter().enumerate() {
+        out[slot].copy_from_slice(&params.tensors[i]);
+    }
 }
 
 impl Client {
@@ -59,13 +73,18 @@ impl Client {
         let manifest = init.manifest.clone();
         Self {
             id,
+            work: init.clone(),
+            hat: init.clone(),
             wopt: OptState::zeros(&manifest, Group::Weight),
             sopt: OptState::zeros(&manifest, Group::Scale),
-            residual: residuals.then(|| Residual::zeros(manifest)),
+            residual: residuals.then(|| Residual::zeros(manifest.clone())),
+            scale_idx: manifest.group_indices(Group::Scale),
             global: init,
             schedule,
             train_idx,
             val_idx,
+            baseline_scales: Vec::new(),
+            best_scales: Vec::new(),
             rng: XorShiftRng::new(seed ^ 0xC11E57),
         }
     }
@@ -95,151 +114,135 @@ impl Client {
         Ok(if total == 0 { 0.0 } else { correct / total as f64 })
     }
 
-    /// One communication round (Algorithm 1 lines 6–21).
-    pub fn run_round(
+    /// Compute stage 1 (Algorithm 1 line 9; S frozen inside the HLO):
+    /// local weight training, then the raw differential update (Eq. 1)
+    /// with the carried residual injected (Eq. 5) into `lane.raw`.
+    pub fn train_round(
+        &mut self,
+        mr: &ModelRuntime,
+        ds: &Dataset,
+        cfg: &ExperimentConfig,
+        lane: &mut RoundLane,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        self.work.copy_from(&self.global);
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for _ in 0..cfg.local_epochs {
+            for b in self.train_batches(ds, mr.batch_size()) {
+                let out = mr.train_step(
+                    &mut self.work,
+                    &mut self.wopt,
+                    cfg.optimizer,
+                    cfg.lr,
+                    &b.x,
+                    &b.y,
+                )?;
+                loss_sum += out.loss as f64;
+                loss_n += 1;
+            }
+        }
+        lane.train_ms = t0.elapsed().as_millis();
+        lane.train_loss = if loss_n == 0 {
+            0.0
+        } else {
+            loss_sum / loss_n as f64
+        };
+
+        // ---- differential update (Eq. 1) + residual injection (Eq. 5) ----
+        self.work.delta_from_into(&self.global, &mut lane.raw);
+        if let Some(res) = &self.residual {
+            res.inject(&mut lane.raw);
+        }
+        Ok(())
+    }
+
+    /// Compute stage 2 (Algorithm 1 lines 13–19), after the codec plane
+    /// produced the dequantized Δ̂ in `lane.update`: residual bookkeeping,
+    /// then the scale-factor sub-epochs on Ŵ = W + Δ̂ with best-of-E
+    /// validation selection and the discard rule. On acceptance the raw
+    /// S-only delta is staged in `lane.sdelta` for the codec plane.
+    pub fn scale_round(
         &mut self,
         mr: &ModelRuntime,
         ds: &Dataset,
         cfg: &ExperimentConfig,
         pcfg: &ProtocolConfig,
-    ) -> Result<ClientRoundOutput> {
-        let manifest = self.global.manifest.clone();
-        let update_idx = manifest.update_indices();
-        let scale_idx = manifest.group_indices(Group::Scale);
-
-        // ---- local weight training (line 9; S frozen inside the HLO) ----
-        let t0 = Instant::now();
-        let mut work = self.global.clone();
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        for _ in 0..cfg.local_epochs {
-            for b in self.train_batches(ds, mr.batch_size()) {
-                let out =
-                    mr.train_step(&mut work, &mut self.wopt, cfg.optimizer, cfg.lr, &b.x, &b.y)?;
-                loss_sum += out.loss as f64;
-                loss_n += 1;
-            }
-        }
-        let train_ms = t0.elapsed().as_millis();
-
-        // ---- differential update (Eq. 1) + residual injection (Eq. 5) ----
-        let mut raw = work.delta_from(&self.global);
-        if let Some(res) = &self.residual {
-            res.inject(&mut raw);
-        }
-
-        // ---- sparsify + quantize + encode (lines 10–11) ----
-        let (mut streams, w_update, stats, mut up_bytes) = match &pcfg.codec {
-            None => {
-                // plain FedAvg: "transmit" the exact raw update
-                let bytes = crate::compression::cabac::codec::raw_bytes(&work, &update_idx);
-                (Vec::new(), raw.clone(), EncodeStats::default(), bytes)
-            }
-            Some(codec) => {
-                let (bytes, deq, stats) = codec.encode(raw.clone(), &update_idx);
-                let n = bytes.len();
-                (vec![bytes], deq, stats, n)
-            }
-        };
+        lane: &mut RoundLane,
+    ) -> Result<()> {
+        // Eq. (5): store what the codec dropped this round.
         if let Some(res) = &mut self.residual {
-            res.update(&raw, &w_update);
+            res.update(&lane.raw, &lane.update);
         }
+        lane.scale_accepted = false;
+        lane.scale_ms = 0;
+        if !(pcfg.scaled && cfg.scale_epochs > 0 && !self.scale_idx.is_empty()) {
+            return Ok(());
+        }
+
+        let t1 = Instant::now();
         // Ŵ = W^(t) + Δ̂ (line 11): the base for scale training.
-        let mut hat = self.global.clone();
-        hat.add_delta(&w_update);
-
-        // ---- scale-factor sub-epochs (lines 13–19) ----
-        let mut scale_accepted = false;
-        let mut scale_ms = 0u128;
-        let mut update = w_update;
-        if pcfg.scaled && cfg.scale_epochs > 0 && !scale_idx.is_empty() {
-            let t1 = Instant::now();
-            let val = self.val_batches(ds, mr.batch_size());
-            let mut best_acc = self.eval_accuracy(mr, &hat, &val)?;
-            let baseline_scales: Vec<Vec<f32>> =
-                scale_idx.iter().map(|&i| hat.tensors[i].clone()).collect();
-            let mut best_scales = baseline_scales.clone();
-            self.schedule.restart(); // CAWR warm restart at each main epoch
-            for _e in 0..cfg.scale_epochs {
-                for b in self.train_batches(ds, mr.batch_size()) {
-                    let lr = self.schedule.next_lr();
-                    mr.scale_step(
-                        &mut hat,
-                        &mut self.sopt,
-                        cfg.scale_optimizer,
-                        lr,
-                        &b.x,
-                        &b.y,
-                    )?;
-                }
-                let acc = self.eval_accuracy(mr, &hat, &val)?;
-                // paper: keep the sub-epoch with best validation perf (>=)
-                if acc >= best_acc {
-                    best_acc = acc;
-                    best_scales = scale_idx.iter().map(|&i| hat.tensors[i].clone()).collect();
-                    scale_accepted = true;
-                }
+        self.hat.copy_from(&self.global);
+        self.hat.add_delta(&lane.update);
+        let val = self.val_batches(ds, mr.batch_size());
+        let mut best_acc = self.eval_accuracy(mr, &self.hat, &val)?;
+        copy_scales(&self.hat, &self.scale_idx, &mut self.baseline_scales);
+        copy_scales(&self.hat, &self.scale_idx, &mut self.best_scales);
+        let mut accepted = false;
+        self.schedule.restart(); // CAWR warm restart at each main epoch
+        for _e in 0..cfg.scale_epochs {
+            for b in self.train_batches(ds, mr.batch_size()) {
+                let lr = self.schedule.next_lr();
+                mr.scale_step(
+                    &mut self.hat,
+                    &mut self.sopt,
+                    cfg.scale_optimizer,
+                    lr,
+                    &b.x,
+                    &b.y,
+                )?;
             }
-            // restore the selected (or baseline, if nothing improved) S
-            let chosen = if scale_accepted {
-                &best_scales
-            } else {
-                &baseline_scales
-            };
-            for (slot, &i) in scale_idx.iter().enumerate() {
-                hat.tensors[i] = chosen[slot].clone();
+            let acc = self.eval_accuracy(mr, &self.hat, &val)?;
+            // paper: keep the sub-epoch with best validation perf (>=)
+            if acc >= best_acc {
+                best_acc = acc;
+                copy_scales(&self.hat, &self.scale_idx, &mut self.best_scales);
+                accepted = true;
             }
-            if scale_accepted {
-                // re-calculate differences considering S, quantize, encode
-                // (fine step; transmitted as a second stream)
-                let codec = pcfg.codec.unwrap_or(UpdateCodec::quant_only());
-                let s_codec = UpdateCodec {
-                    sparsify: crate::compression::SparsifyMode::None,
-                    quant: codec.quant,
-                    ternary: false,
-                };
-                let sdelta = hat.delta_from(&self.global);
-                let mut only_s = Delta::zeros(manifest.clone());
-                for &i in &scale_idx {
-                    only_s.tensors[i] = sdelta.tensors[i].clone();
-                }
-                let (sbytes, sdeq, _) = s_codec.encode(only_s, &scale_idx);
-                // keep Ŵ's S consistent with what the server reconstructs
-                for &i in &scale_idx {
-                    let mut t = self.global.tensors[i].clone();
-                    for (x, d) in t.iter_mut().zip(&sdeq.tensors[i]) {
-                        *x += d;
-                    }
-                    hat.tensors[i] = t;
-                }
-                update.accumulate(&sdeq);
-                up_bytes += sbytes.len();
-                streams.push(sbytes);
-            }
-            scale_ms = t1.elapsed().as_millis();
         }
-
-        Ok(ClientRoundOutput {
-            streams,
-            update,
-            up_bytes,
-            stats,
-            scale_accepted,
-            train_loss: if loss_n == 0 {
-                0.0
-            } else {
-                loss_sum / loss_n as f64
-            },
-            train_ms,
-            scale_ms,
-        })
+        // restore the selected (or baseline, if nothing improved) S
+        let chosen = if accepted {
+            &self.best_scales
+        } else {
+            &self.baseline_scales
+        };
+        for (slot, &i) in self.scale_idx.iter().enumerate() {
+            self.hat.tensors[i].copy_from_slice(&chosen[slot]);
+        }
+        if accepted {
+            // Stage the S-only difference for the fine-step stream
+            // (encoded + accumulated into Δ̂ on the codec plane). Only the
+            // scale tensors are written here and only `scale_idx` is ever
+            // encoded from `sdelta`, so no full clear() is needed — its
+            // non-scale tensors stay zero from construction.
+            for &i in &self.scale_idx {
+                for ((d, &h), &g) in lane.sdelta.tensors[i]
+                    .iter_mut()
+                    .zip(&self.hat.tensors[i])
+                    .zip(&self.global.tensors[i])
+                {
+                    *d = h - g;
+                }
+            }
+        }
+        lane.scale_accepted = accepted;
+        lane.scale_ms = t1.elapsed().as_millis();
+        Ok(())
     }
 
     /// Current scale-factor values per layer (Fig. 3 statistics).
     pub fn scale_values(&self) -> Vec<(String, Vec<f32>)> {
-        self.global
-            .manifest
-            .group_indices(Group::Scale)
+        self.scale_idx
             .iter()
             .map(|&i| {
                 (

@@ -164,6 +164,10 @@ pub struct ExperimentConfig {
     /// Warmup steps on server data before FL starts (emulates the paper's
     /// ImageNet-pretrained starting point).
     pub warmup_steps: usize,
+    /// Codec-plane worker pool width (encode/decode fan-out per round);
+    /// `0` = auto (available parallelism), `1` = strictly serial. Any
+    /// width produces byte-identical bitstreams and metrics.
+    pub codec_workers: usize,
 }
 
 impl ExperimentConfig {
@@ -199,6 +203,7 @@ impl ExperimentConfig {
             participation: 1.0,
             residuals_override: None,
             warmup_steps: 0,
+            codec_workers: 0,
         }
     }
 

@@ -1,0 +1,223 @@
+//! Per-participant round state shared between the compute plane and the
+//! codec plane.
+//!
+//! A [`RoundLane`] owns every buffer one client's round needs outside the
+//! XLA step functions: the raw differential update, the encoded
+//! bitstreams, the dequantized views, the server-side decode target and
+//! the codec scratch. Lanes live in [`crate::fl::Experiment`] and are
+//! recycled across rounds, so the whole codec path allocates nothing in
+//! steady state. Crucially, a lane is `Send` and self-contained: the
+//! codec stages ([`RoundLane::encode_upstream`], [`RoundLane::finish_round`])
+//! borrow no client or server state, which is what lets the
+//! [`crate::exec::WorkerPool`] fan them out across threads while the
+//! thread-affine compute plane stays put.
+
+use std::sync::Arc;
+
+use crate::compression::cabac::codec::raw_bytes_of;
+use crate::compression::{CodecScratch, EncodeStats, SparsifyMode, UpdateCodec};
+use crate::fl::config::ProtocolConfig;
+use crate::model::params::Delta;
+use crate::model::Manifest;
+
+/// All state one participant needs for one round, outside the runtime.
+pub struct RoundLane {
+    /// Which client this lane serves this round.
+    pub client: usize,
+    /// Raw differential update ΔW (+ injected residual), Eq. (1)/(5).
+    pub raw: Delta,
+    /// Sparsify/ternarize working copy (keeps `raw` intact for Eq. (5)
+    /// residual bookkeeping when error accumulation is on).
+    sparse: Delta,
+    /// Dequantized transmitted update Δ̂ (W stream, then += S stream).
+    pub update: Delta,
+    /// Raw S-only delta from the scale sub-epochs (Algorithm 1 l. 20).
+    pub sdelta: Delta,
+    /// Dequantized S update (client-side view of the S stream).
+    pub sdeq: Delta,
+    /// Server-side decode target for the S stream (wire path).
+    sdec: Delta,
+    /// Server-side reconstruction of all streams (what aggregation uses).
+    pub decoded: Delta,
+    /// Encoded W-update stream (empty for plain FedAvg).
+    pub stream_w: Vec<u8>,
+    /// Encoded S-update stream (empty unless a scale update was kept).
+    pub stream_s: Vec<u8>,
+    pub scratch: CodecScratch,
+    pub stats: EncodeStats,
+    pub up_bytes: usize,
+    pub scale_accepted: bool,
+    has_w_stream: bool,
+    has_s_stream: bool,
+    pub train_loss: f64,
+    pub train_ms: u128,
+    pub scale_ms: u128,
+    /// Codec-stage failure (decode of a malformed stream), surfaced back
+    /// on the driver thread after the parallel stage joins.
+    pub error: Option<anyhow::Error>,
+}
+
+impl RoundLane {
+    pub fn new(manifest: Arc<Manifest>) -> Self {
+        Self {
+            client: usize::MAX,
+            raw: Delta::zeros(manifest.clone()),
+            sparse: Delta::zeros(manifest.clone()),
+            update: Delta::zeros(manifest.clone()),
+            sdelta: Delta::zeros(manifest.clone()),
+            sdeq: Delta::zeros(manifest.clone()),
+            sdec: Delta::zeros(manifest.clone()),
+            decoded: Delta::zeros(manifest),
+            stream_w: Vec::new(),
+            stream_s: Vec::new(),
+            scratch: CodecScratch::default(),
+            stats: EncodeStats::default(),
+            up_bytes: 0,
+            scale_accepted: false,
+            has_w_stream: false,
+            has_s_stream: false,
+            train_loss: 0.0,
+            train_ms: 0,
+            scale_ms: 0,
+            error: None,
+        }
+    }
+
+    /// Reset per-round bookkeeping and bind the lane to a client. Buffer
+    /// contents are *not* cleared here — every stage overwrites its
+    /// outputs before any reader sees them (the scratch contract).
+    pub fn begin(&mut self, client: usize) {
+        self.client = client;
+        self.stats = EncodeStats::default();
+        self.up_bytes = 0;
+        self.scale_accepted = false;
+        self.has_w_stream = false;
+        self.has_s_stream = false;
+        self.train_loss = 0.0;
+        self.train_ms = 0;
+        self.scale_ms = 0;
+        self.error = None;
+    }
+
+    /// Codec stage A (parallel, after local training): sparsify +
+    /// quantize + DeepCABAC-encode the W update, or account the raw f32
+    /// bytes for plain FedAvg. Pure function of lane state + `pcfg`.
+    pub fn encode_upstream(&mut self, pcfg: &ProtocolConfig, update_idx: &[usize]) {
+        self.stream_w.clear();
+        self.stream_s.clear();
+        match pcfg.codec {
+            None => {
+                // plain FedAvg: "transmit" the exact raw update
+                self.update.copy_from(&self.raw);
+                self.stats = EncodeStats::default();
+                self.up_bytes = raw_bytes_of(&self.raw.manifest, update_idx);
+            }
+            Some(codec) => {
+                if pcfg.residuals {
+                    // Eq. (5) needs the pre-sparsification update later;
+                    // sparsify a copy (memcpy, no allocation).
+                    self.sparse.copy_from(&self.raw);
+                    self.stats = codec.encode_into(
+                        &mut self.sparse,
+                        update_idx,
+                        &mut self.scratch,
+                        &mut self.update,
+                        &mut self.stream_w,
+                    );
+                } else {
+                    self.stats = codec.encode_into(
+                        &mut self.raw,
+                        update_idx,
+                        &mut self.scratch,
+                        &mut self.update,
+                        &mut self.stream_w,
+                    );
+                }
+                self.has_w_stream = true;
+                self.up_bytes = self.stream_w.len();
+            }
+        }
+    }
+
+    /// Codec stage B (parallel, after the scale sub-epochs): encode the
+    /// fine-step S stream if the client kept a scale update, then decode
+    /// every stream exactly as the server will (wire-path fidelity) and
+    /// cross-check the reconstruction against the client-side view.
+    pub fn finish_round(&mut self, pcfg: &ProtocolConfig, scale_idx: &[usize]) {
+        if self.scale_accepted {
+            // re-calculated differences considering S, quantized with the
+            // fine step, transmitted as a second stream
+            let base = pcfg.codec.unwrap_or(UpdateCodec::quant_only());
+            let s_codec = UpdateCodec {
+                sparsify: SparsifyMode::None,
+                quant: base.quant,
+                ternary: false,
+            };
+            s_codec.encode_into(
+                &mut self.sdelta,
+                scale_idx,
+                &mut self.scratch,
+                &mut self.sdeq,
+                &mut self.stream_s,
+            );
+            self.update.accumulate(&self.sdeq);
+            self.up_bytes += self.stream_s.len();
+            self.has_s_stream = true;
+        }
+
+        // Server-side decode of the actual bitstreams.
+        if let Err(e) = self.decode_wire() {
+            self.error = Some(e);
+            return;
+        }
+        // Wire-path integrity: the server's reconstruction must equal the
+        // client's view. Full `Delta` equality is pointlessly expensive in
+        // debug builds of large variants; a single-pass FNV checksum over
+        // the exact f32 bit patterns catches any mismatch just as surely.
+        debug_assert_eq!(
+            self.decoded.checksum(),
+            self.update.checksum(),
+            "codec decode != client view (client {})",
+            self.client
+        );
+    }
+
+    fn decode_wire(&mut self) -> anyhow::Result<()> {
+        if !self.has_w_stream && !self.has_s_stream {
+            // plain FedAvg: the exact raw update crosses the wire
+            self.decoded.copy_from(&self.update);
+            return Ok(());
+        }
+        if self.has_w_stream {
+            crate::compression::cabac::decode_update_with(
+                &self.stream_w,
+                &mut self.decoded,
+                &mut self.scratch.decode,
+            )?;
+        } else {
+            self.decoded.clear();
+        }
+        if self.has_s_stream {
+            crate::compression::cabac::decode_update_with(
+                &self.stream_s,
+                &mut self.sdec,
+                &mut self.scratch.decode,
+            )?;
+            self.decoded.accumulate(&self.sdec);
+        }
+        Ok(())
+    }
+
+    /// Encoded streams in wire order (W first, then S), for byte-level
+    /// equivalence tests.
+    pub fn streams(&self) -> Vec<&[u8]> {
+        let mut v = Vec::new();
+        if self.has_w_stream {
+            v.push(self.stream_w.as_slice());
+        }
+        if self.has_s_stream {
+            v.push(self.stream_s.as_slice());
+        }
+        v
+    }
+}

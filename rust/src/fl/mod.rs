@@ -1,23 +1,49 @@
 //! The federated learning system: configuration, schedules, client/server
 //! roles, and the [`Experiment`] driver that runs a full FL process and
 //! produces a [`RunLog`].
+//!
+//! # Round pipeline: compute plane × codec plane
+//!
+//! Every round is staged so that the **compute plane** (PJRT step
+//! execution — thread-affine, serial on the thread that owns the XLA
+//! client) and the **codec plane** (per-client sparsify → quantize →
+//! DeepCABAC encode, plus server-side decode — pure CPU, embarrassingly
+//! parallel across clients) never block each other's scaling:
+//!
+//! ```text
+//! stage 1  compute  local weight training per participant      (serial)
+//! stage 2  codec    encode W updates                           (worker pool)
+//! stage 3  compute  residual bookkeeping + scale sub-epochs    (serial)
+//! stage 4  codec    encode S updates + wire decode + checksum  (worker pool)
+//! stage 5  control  metrics, FedAvg, broadcast, central eval   (serial)
+//! ```
+//!
+//! Codec work items are independent per client and deterministic, so
+//! bitstreams and `RunLog` metrics are **identical for every pool size**
+//! (pinned by `tests/integration_parallel.rs`). All per-round buffers
+//! live in recycled [`RoundLane`]s — the codec path allocates nothing in
+//! steady state.
 
 pub mod client;
 pub mod config;
+pub mod lane;
 pub mod schedule;
 pub mod server;
 #[cfg(test)]
 mod tests;
 
-pub use client::{Client, ClientRoundOutput};
+pub use client::Client;
 pub use config::{ExperimentConfig, Protocol, ProtocolConfig};
+pub use lane::RoundLane;
 pub use schedule::{LrSchedule, ScheduleKind};
 pub use server::{EvalReport, Server};
 
 use anyhow::{anyhow, Result};
 
 use crate::data::{batches, iid_split, Batch, Dataset, TaskSpec};
+use crate::exec::WorkerPool;
 use crate::metrics::{RoundMetrics, RunLog, ScaleStats};
+use crate::model::params::Delta;
 use crate::model::Group;
 use crate::runtime::{ModelRuntime, OptState, Runtime};
 
@@ -29,6 +55,17 @@ pub struct Experiment<'rt> {
     pub clients: Vec<Client>,
     pub train_data: Dataset,
     pub test_batches: Vec<Batch>,
+    /// Codec-plane worker pool (width from `cfg.codec_workers`).
+    pool: WorkerPool,
+    /// One recycled lane per round participant.
+    lanes: Vec<RoundLane>,
+    /// Recycled broadcast-delta buffer.
+    broadcast: Delta,
+    /// Cached manifest index sets (computed once, not per round/client).
+    update_idx: Vec<usize>,
+    scale_idx: Vec<usize>,
+    /// Recycled participant-selection buffer.
+    order: Vec<usize>,
 }
 
 impl<'rt> Experiment<'rt> {
@@ -80,7 +117,7 @@ impl<'rt> Experiment<'rt> {
         let total_scale_steps = cfg.rounds * cfg.scale_epochs * batches_per_epoch;
         let period = cfg.scale_epochs * batches_per_epoch;
 
-        let clients = split
+        let clients: Vec<Client> = split
             .train
             .iter()
             .zip(&split.val)
@@ -98,8 +135,20 @@ impl<'rt> Experiment<'rt> {
             })
             .collect();
 
+        // Participant count is constant given the config; size the lane
+        // set once so rounds recycle buffers instead of allocating.
+        let n = clients.len();
+        let take = ((cfg.participation * n as f64).round() as usize).clamp(1, n);
+        let lanes = (0..take).map(|_| RoundLane::new(man.clone())).collect();
+
         let server = Server::new(init, cfg.downstream_codec());
         Ok(Self {
+            pool: WorkerPool::new(cfg.codec_workers),
+            lanes,
+            broadcast: Delta::zeros(man.clone()),
+            update_idx: man.update_indices(),
+            scale_idx: man.group_indices(Group::Scale),
+            order: Vec::with_capacity(n),
             cfg,
             mr,
             server,
@@ -107,6 +156,11 @@ impl<'rt> Experiment<'rt> {
             train_data,
             test_batches,
         })
+    }
+
+    /// Codec-plane pool width actually in use.
+    pub fn codec_workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Run the full FL process (Algorithm 1 outer loop), returning the
@@ -135,49 +189,81 @@ impl<'rt> Experiment<'rt> {
     }
 
     fn run_round(&mut self, t: usize, pcfg: &ProtocolConfig) -> Result<RoundMetrics> {
-        let mut updates = Vec::with_capacity(self.clients.len());
         let mut m = RoundMetrics {
             round: t,
             ..Default::default()
         };
-        let mut sparsity_sum = 0.0;
-        let mut rows_sum = 0.0;
         // Partial participation: a deterministic per-round subset.
         let n = self.clients.len();
-        let take = ((self.cfg.participation * n as f64).round() as usize).clamp(1, n);
-        let mut order: Vec<usize> = (0..n).collect();
+        let take = self.lanes.len();
+        self.order.clear();
+        self.order.extend(0..n);
         if take < n {
             let mut rng = crate::data::XorShiftRng::new(self.cfg.seed ^ (t as u64 + 0xF00D));
-            rng.shuffle(&mut order);
+            rng.shuffle(&mut self.order);
         }
-        let participants: Vec<usize> = order[..take].to_vec();
-        for &ci in &participants {
-            let client = &mut self.clients[ci];
-            let out = client.run_round(&self.mr, &self.train_data, &self.cfg, pcfg)?;
-            m.up_bytes += out.up_bytes;
-            m.train_ms += out.train_ms;
-            m.scale_ms += out.scale_ms;
-            m.scale_accepted += out.scale_accepted as usize;
-            let sp = out
-                .update
-                .sparsity_of(&self.server.params.manifest.update_indices());
+
+        // ---- stage 1 · compute plane: local weight training (serial —
+        //      the PJRT executables are thread-affine) ----
+        for k in 0..take {
+            let ci = self.order[k];
+            self.lanes[k].begin(ci);
+            self.clients[ci].train_round(&self.mr, &self.train_data, &self.cfg, &mut self.lanes[k])?;
+        }
+
+        // ---- stage 2 · codec plane: sparsify + quantize + encode the W
+        //      updates, fanned out across the worker pool ----
+        {
+            let update_idx = &self.update_idx;
+            self.pool.run_mut(&mut self.lanes[..take], |_, lane| {
+                lane.encode_upstream(pcfg, update_idx)
+            });
+        }
+
+        // ---- stage 3 · compute plane: residual bookkeeping + scale
+        //      sub-epochs on Ŵ = W + Δ̂ (serial) ----
+        for k in 0..take {
+            let ci = self.lanes[k].client;
+            self.clients[ci].scale_round(&self.mr, &self.train_data, &self.cfg, pcfg, &mut self.lanes[k])?;
+        }
+
+        // ---- stage 4 · codec plane: encode S streams + decode the actual
+        //      bitstreams server-side (wire-path fidelity), in parallel ----
+        {
+            let scale_idx = &self.scale_idx;
+            self.pool.run_mut(&mut self.lanes[..take], |_, lane| {
+                lane.finish_round(pcfg, scale_idx)
+            });
+        }
+        for lane in &mut self.lanes[..take] {
+            if let Some(e) = lane.error.take() {
+                return Err(e);
+            }
+        }
+
+        // ---- stage 5 · control plane: metrics, FedAvg, broadcast, eval ----
+        let mut sparsity_sum = 0.0;
+        let mut rows_sum = 0.0;
+        for lane in &self.lanes[..take] {
+            m.up_bytes += lane.up_bytes;
+            m.train_ms += lane.train_ms;
+            m.scale_ms += lane.scale_ms;
+            m.scale_accepted += lane.scale_accepted as usize;
+            let sp = lane.update.sparsity_of(&self.update_idx);
             m.client_sparsity.push(sp);
             sparsity_sum += sp;
-            if out.stats.rows_total > 0 {
-                rows_sum += out.stats.rows_skipped as f64 / out.stats.rows_total as f64;
+            if lane.stats.rows_total > 0 {
+                rows_sum += lane.stats.rows_skipped as f64 / lane.stats.rows_total as f64;
             }
-            // the server decodes the actual bitstreams (wire-path fidelity)
-            let decoded = self.server.decode_client(&out)?;
-            debug_assert_eq!(decoded, out.update, "codec decode != client view");
-            updates.push(decoded);
         }
-        m.update_sparsity = sparsity_sum / participants.len() as f64;
-        m.rows_skipped = rows_sum / participants.len() as f64;
+        m.update_sparsity = sparsity_sum / take as f64;
+        m.rows_skipped = rows_sum / take as f64;
 
-        let agg = self.server.aggregate(&updates);
-        m.down_bytes = agg.down_bytes_each * self.clients.len();
+        let updates: Vec<&Delta> = self.lanes[..take].iter().map(|l| &l.decoded).collect();
+        let down_bytes_each = self.server.aggregate_into(&updates, &mut self.broadcast);
+        m.down_bytes = down_bytes_each * self.clients.len();
         for client in &mut self.clients {
-            client.apply_broadcast(&agg.broadcast);
+            client.apply_broadcast(&self.broadcast);
         }
 
         let report = self.server.evaluate(&self.mr, &self.test_batches)?;

@@ -1,9 +1,17 @@
 //! FL server: federated averaging of (decoded) client updates, optional
 //! downstream compression, and central-model evaluation.
+//!
+//! Aggregation runs through persistent buffers ([`Server::aggregate_into`]):
+//! the running average, the downstream bitstream and the codec scratch
+//! are all recycled, so the server side of a round allocates nothing in
+//! steady state either.
+
+use std::borrow::Borrow;
 
 use anyhow::Result;
 
-use crate::compression::UpdateCodec;
+use crate::compression::cabac::codec::raw_bytes_of;
+use crate::compression::{CodecScratch, UpdateCodec};
 use crate::data::Batch;
 use crate::metrics::Confusion;
 use crate::model::params::Delta;
@@ -14,6 +22,11 @@ pub struct Server {
     pub params: ParamSet,
     pub downstream: Option<UpdateCodec>,
     update_idx: Vec<usize>,
+    /// Recycled FedAvg accumulator.
+    avg: Delta,
+    /// Recycled downstream bitstream + codec scratch.
+    down_stream: Vec<u8>,
+    scratch: CodecScratch,
 }
 
 /// Result of one aggregation.
@@ -27,47 +40,57 @@ pub struct AggregateOutput {
 impl Server {
     pub fn new(params: ParamSet, downstream: Option<UpdateCodec>) -> Self {
         let update_idx = params.manifest.update_indices();
+        let avg = Delta::zeros(params.manifest.clone());
         Self {
             params,
             downstream,
             update_idx,
+            avg,
+            down_stream: Vec::new(),
+            scratch: CodecScratch::default(),
         }
-    }
-
-    /// Decode client bitstreams (the wire path every compressed protocol
-    /// exercises). Plain-FedAvg outputs carry the update directly.
-    pub fn decode_client(&self, out: &crate::fl::client::ClientRoundOutput) -> Result<Delta> {
-        if out.streams.is_empty() {
-            return Ok(out.update.clone());
-        }
-        let mut total = Delta::zeros(self.params.manifest.clone());
-        for s in &out.streams {
-            let d = crate::compression::decode_update(s, &self.params.manifest)?;
-            total.accumulate(&d);
-        }
-        Ok(total)
     }
 
     /// FedAvg (line 24): ΔW_S = 1/|I| Σ Δ̂W_i, then optional downstream
-    /// compression, then apply to the server model (line 25).
-    pub fn aggregate(&mut self, updates: &[Delta]) -> AggregateOutput {
+    /// compression, then apply to the server model (line 25). The
+    /// broadcast delta lands in the caller-owned `broadcast` buffer;
+    /// returns downstream bytes per client. Accepts `&[Delta]` or
+    /// `&[&Delta]` (the round loop aggregates straight out of the lanes).
+    pub fn aggregate_into<D: Borrow<Delta>>(
+        &mut self,
+        updates: &[D],
+        broadcast: &mut Delta,
+    ) -> usize {
         assert!(!updates.is_empty());
-        let mut avg = Delta::zeros(self.params.manifest.clone());
+        self.avg.clear();
         let w = 1.0 / updates.len() as f32;
         for u in updates {
-            avg.accumulate_scaled(u, w);
+            self.avg.accumulate_scaled(u.borrow(), w);
         }
-        let (broadcast, down_bytes_each) = match &self.downstream {
+        let down_bytes_each = match self.downstream {
             Some(codec) => {
-                let (bytes, deq, _) = codec.encode(avg, &self.update_idx);
-                (deq, bytes.len())
+                codec.encode_into(
+                    &mut self.avg,
+                    &self.update_idx,
+                    &mut self.scratch,
+                    broadcast,
+                    &mut self.down_stream,
+                );
+                self.down_stream.len()
             }
             None => {
-                let bytes = crate::compression::cabac::codec::raw_bytes(&self.params, &self.update_idx);
-                (avg, bytes)
+                broadcast.copy_from(&self.avg);
+                raw_bytes_of(&self.params.manifest, &self.update_idx)
             }
         };
-        self.params.add_delta(&broadcast);
+        self.params.add_delta(broadcast);
+        down_bytes_each
+    }
+
+    /// Allocating wrapper around [`Server::aggregate_into`].
+    pub fn aggregate<D: Borrow<Delta>>(&mut self, updates: &[D]) -> AggregateOutput {
+        let mut broadcast = Delta::zeros(self.params.manifest.clone());
+        let down_bytes_each = self.aggregate_into(updates, &mut broadcast);
         AggregateOutput {
             broadcast,
             down_bytes_each,

@@ -27,6 +27,7 @@ pub mod cli;
 pub mod compression;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod fl;
 pub mod harness;
 pub mod metrics;

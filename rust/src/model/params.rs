@@ -72,15 +72,28 @@ impl ParamSet {
 
     /// `self - other`, the differential update ΔW of Eq. (1).
     pub fn delta_from(&self, prev: &ParamSet) -> Delta {
-        let tensors = self
-            .tensors
-            .iter()
-            .zip(&prev.tensors)
-            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
-            .collect();
-        Delta {
-            manifest: self.manifest.clone(),
-            tensors,
+        let mut out = Delta::zeros(self.manifest.clone());
+        self.delta_from_into(prev, &mut out);
+        out
+    }
+
+    /// [`Self::delta_from`] into a caller-owned buffer (steady-state FL
+    /// rounds reuse one `Delta` per client instead of allocating).
+    pub fn delta_from_into(&self, prev: &ParamSet, out: &mut Delta) {
+        debug_assert!(Arc::ptr_eq(&self.manifest, &out.manifest) || self.manifest == out.manifest);
+        for ((o, a), b) in out.tensors.iter_mut().zip(&self.tensors).zip(&prev.tensors) {
+            for ((d, &x), &y) in o.iter_mut().zip(a).zip(b) {
+                *d = x - y;
+            }
+        }
+    }
+
+    /// Overwrite `self` with `other`'s values without reallocating the
+    /// tensor storage (both must share a manifest).
+    pub fn copy_from(&mut self, other: &ParamSet) {
+        debug_assert_eq!(self.tensors.len(), other.tensors.len());
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            t.copy_from_slice(o);
         }
     }
 
@@ -144,6 +157,41 @@ impl Delta {
             .map(|&i| self.tensors[i].iter().filter(|&&x| x == 0.0).count())
             .sum();
         zeros as f64 / total as f64
+    }
+
+    /// Zero every element, keeping the allocated storage (buffer reuse
+    /// across rounds — and the "no data leaks across tensors" half of the
+    /// scratch-buffer contract).
+    pub fn clear(&mut self) {
+        for t in &mut self.tensors {
+            t.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Overwrite `self` with `other`'s values without reallocating.
+    pub fn copy_from(&mut self, other: &Delta) {
+        debug_assert_eq!(self.tensors.len(), other.tensors.len());
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            t.copy_from_slice(o);
+        }
+    }
+
+    /// FNV-1a over the exact f32 bit patterns (tensor lengths mixed in).
+    /// One allocation-free pass — the cheap stand-in for full `Delta`
+    /// equality in debug assertions on the wire path.
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        for t in &self.tensors {
+            h ^= t.len() as u64;
+            h = h.wrapping_mul(PRIME);
+            for &x in t {
+                h ^= x.to_bits() as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        h
     }
 
     /// Elementwise accumulate (used by server-side averaging).
@@ -271,6 +319,43 @@ mod tests {
         assert_eq!(d.tensors[1][0], -1.0);
         b.add_delta(&d);
         assert_eq!(b, a);
+    }
+
+    #[test]
+    fn reuse_helpers_match_allocating_paths() {
+        let m = test_manifest();
+        let a = ParamSet::new(m.clone(), vec![vec![1.5; 36], vec![0.25; 4]]).unwrap();
+        let b = ParamSet::new(m.clone(), vec![vec![1.0; 36], vec![1.0; 4]]).unwrap();
+        let fresh = a.delta_from(&b);
+        let mut reused = Delta::zeros(m.clone());
+        reused.tensors[0][7] = 99.0; // stale garbage must be overwritten
+        a.delta_from_into(&b, &mut reused);
+        assert_eq!(fresh, reused);
+        let mut copy = Delta::zeros(m.clone());
+        copy.copy_from(&fresh);
+        assert_eq!(copy, fresh);
+        copy.clear();
+        assert_eq!(copy.sparsity(), 1.0);
+        let mut p = ParamSet::new(m, vec![vec![0.0; 36], vec![0.0; 4]]).unwrap();
+        p.copy_from(&a);
+        assert_eq!(p, a);
+    }
+
+    #[test]
+    fn checksum_tracks_content_and_layout() {
+        let m = test_manifest();
+        let mut d1 = Delta::zeros(m.clone());
+        let mut d2 = Delta::zeros(m);
+        assert_eq!(d1.checksum(), d2.checksum());
+        d1.tensors[0][3] = 1.0e-3;
+        assert_ne!(d1.checksum(), d2.checksum());
+        d2.tensors[0][3] = 1.0e-3;
+        assert_eq!(d1.checksum(), d2.checksum());
+        // same value in a different slot must differ (position mixed in
+        // via the running FNV state)
+        let mut d3 = Delta::zeros(d1.manifest.clone());
+        d3.tensors[0][4] = 1.0e-3;
+        assert_ne!(d1.checksum(), d3.checksum());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Serial/parallel equivalence of the codec plane.
+//!
+//! The round pipeline fans per-client codec work (sparsify → quantize →
+//! DeepCABAC encode, server-side decode) out over `exec::WorkerPool`.
+//! The contract: **pool width never changes any output** — bitstreams
+//! are byte-identical and decoded updates bit-for-bit equal for widths
+//! 1, 2 and `available_parallelism`, with buffers recycled across
+//! rounds. The codec-plane tests drive the real `RoundLane` machinery on
+//! synthetic updates and run everywhere; the full-experiment test
+//! additionally pins `RunLog` equality and is skipped without a PJRT
+//! backend + artifacts.
+
+use std::sync::Arc;
+
+use fsfl::compression::{QuantConfig, SparsifyMode};
+use fsfl::data::{TaskKind, XorShiftRng};
+use fsfl::exec::WorkerPool;
+use fsfl::fl::{Experiment, ExperimentConfig, Protocol, ProtocolConfig, RoundLane};
+use fsfl::model::params::Delta;
+use fsfl::model::{Group, Kind, Manifest, TensorSpec};
+use fsfl::runtime::Runtime;
+
+const CLIENTS: usize = 8;
+
+fn manifest() -> Arc<Manifest> {
+    let tensors = vec![
+        TensorSpec {
+            name: "c.w".into(),
+            shape: vec![16, 48],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "c.b".into(),
+            shape: vec![16],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "c.s".into(),
+            shape: vec![16],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: Some("c.w".into()),
+        },
+    ];
+    Arc::new(Manifest {
+        model: "t".into(),
+        variant: "t".into(),
+        classes: 2,
+        input: vec![4, 4, 1],
+        batch: 1,
+        param_count: 16 * 48 + 16 + 16,
+        scale_count: 16,
+        tensors,
+    })
+}
+
+fn client_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
+    let mut rng = XorShiftRng::new(seed);
+    let mut d = Delta::zeros(m.clone());
+    for (t, spec) in d.tensors.iter_mut().zip(&m.tensors) {
+        let scale = if spec.kind.is_fine_quantized() { 5e-6 } else { 8e-4 };
+        for x in t.iter_mut() {
+            *x = rng.normal() * scale;
+        }
+    }
+    d
+}
+
+fn scale_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
+    let mut rng = XorShiftRng::new(seed ^ 0x5CA1E);
+    let mut d = Delta::zeros(m.clone());
+    let si = m.index_of("c.s").unwrap();
+    for x in d.tensors[si].iter_mut() {
+        *x = rng.normal() * 1e-4;
+    }
+    d
+}
+
+/// Run the codec stages of one round over `CLIENTS` lanes at the given
+/// pool width, from fixed inputs. Every other lane carries a scale
+/// update, so both the W and S streams are exercised.
+fn codec_round(
+    lanes: &mut [RoundLane],
+    pool: &WorkerPool,
+    pcfg: &ProtocolConfig,
+    m: &Arc<Manifest>,
+    round_seed: u64,
+) {
+    let update_idx = m.update_indices();
+    let scale_idx = m.group_indices(Group::Scale);
+    for (k, lane) in lanes.iter_mut().enumerate() {
+        lane.begin(k);
+        lane.raw.copy_from(&client_delta(m, round_seed + k as u64));
+    }
+    pool.run_mut(lanes, |_, lane| lane.encode_upstream(pcfg, &update_idx));
+    for (k, lane) in lanes.iter_mut().enumerate() {
+        if pcfg.scaled && k % 2 == 0 {
+            lane.sdelta.copy_from(&scale_delta(m, round_seed + k as u64));
+            lane.scale_accepted = true;
+        }
+    }
+    pool.run_mut(lanes, |_, lane| lane.finish_round(pcfg, &scale_idx));
+    for lane in lanes.iter_mut() {
+        if let Some(e) = lane.error.take() {
+            panic!("codec stage failed: {e:#}");
+        }
+    }
+}
+
+/// Byte-level fingerprint of everything a round produced.
+fn fingerprint(lanes: &[RoundLane]) -> Vec<(Vec<Vec<u8>>, u64, u64, usize)> {
+    lanes
+        .iter()
+        .map(|l| {
+            (
+                l.streams().iter().map(|s| s.to_vec()).collect(),
+                l.update.checksum(),
+                l.decoded.checksum(),
+                l.up_bytes,
+            )
+        })
+        .collect()
+}
+
+fn pool_widths() -> Vec<usize> {
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    vec![1, 2, ncpu]
+}
+
+fn protocols() -> Vec<(&'static str, ProtocolConfig)> {
+    let q = QuantConfig::default();
+    let dynamic = SparsifyMode::Dynamic { delta: 1.0, gamma: 1.0 };
+    let topk = SparsifyMode::TopK { rate: 0.9 };
+    vec![
+        ("fedavg", Protocol::FedAvg.config(dynamic, q)),
+        ("fedavg_q", Protocol::FedAvgQ.config(dynamic, q)),
+        ("fsfl", Protocol::Fsfl.config(dynamic, q)),
+        ("stc", Protocol::Stc.config(topk, q)),
+        ("stc_scaled", Protocol::StcScaled.config(topk, q)),
+        ("eqs23", Protocol::SparseOnly.config(dynamic, q)),
+    ]
+}
+
+#[test]
+fn bitstreams_identical_across_pool_widths() {
+    let m = manifest();
+    for (name, pcfg) in protocols() {
+        let mut reference = None;
+        for width in pool_widths() {
+            let pool = WorkerPool::new(width);
+            let mut lanes: Vec<RoundLane> =
+                (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+            codec_round(&mut lanes, &pool, &pcfg, &m, 100);
+            let fp = fingerprint(&lanes);
+            match &reference {
+                None => reference = Some(fp),
+                Some(r) => assert_eq!(&fp, r, "{name}: width {width} diverged from serial"),
+            }
+        }
+    }
+}
+
+#[test]
+fn recycled_lanes_match_fresh_lanes_across_rounds() {
+    // Buffer reuse must not leak state between rounds: round 2 through
+    // recycled lanes must equal round 2 through brand-new lanes.
+    let m = manifest();
+    let pool = WorkerPool::new(3);
+    for (name, pcfg) in protocols() {
+        let mut recycled: Vec<RoundLane> =
+            (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+        codec_round(&mut recycled, &pool, &pcfg, &m, 100);
+        codec_round(&mut recycled, &pool, &pcfg, &m, 200);
+        let mut fresh: Vec<RoundLane> =
+            (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+        codec_round(&mut fresh, &pool, &pcfg, &m, 200);
+        assert_eq!(
+            fingerprint(&recycled),
+            fingerprint(&fresh),
+            "{name}: recycled buffers leaked state into round 2"
+        );
+    }
+}
+
+#[test]
+fn wire_decode_reconstructs_client_view_exactly() {
+    // The server-side decode of the actual bitstreams (W + S) must equal
+    // the client's dequantized view bit for bit — the release-build
+    // guarantee behind the debug-only checksum assert.
+    let m = manifest();
+    let pool = WorkerPool::serial();
+    for (name, pcfg) in protocols() {
+        let mut lanes: Vec<RoundLane> =
+            (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+        codec_round(&mut lanes, &pool, &pcfg, &m, 7);
+        for lane in &lanes {
+            assert_eq!(lane.decoded, lane.update, "{name}: wire decode diverged");
+        }
+    }
+}
+
+#[test]
+fn full_experiment_runlog_identical_across_pool_widths() {
+    let artifacts: std::path::PathBuf = std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !artifacts.join("tiny_cnn").join("manifest.tsv").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let mut reference: Option<Vec<(usize, usize, f64, f64, Vec<f64>)>> = None;
+    for width in pool_widths() {
+        let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, Protocol::Fsfl);
+        cfg.artifacts_root = artifacts.clone();
+        cfg.rounds = 3;
+        cfg.clients = 4;
+        cfg.train_per_client = 48;
+        cfg.val_per_client = 16;
+        cfg.test_samples = 32;
+        cfg.seed = 11;
+        cfg.codec_workers = width;
+        let mut exp = Experiment::build(&rt, cfg).unwrap();
+        let log = exp.run().unwrap();
+        assert!(exp.replicas_in_sync(), "width {width}: replicas diverged");
+        let fp: Vec<(usize, usize, f64, f64, Vec<f64>)> = log
+            .rounds
+            .iter()
+            .map(|r| {
+                (
+                    r.up_bytes,
+                    r.down_bytes,
+                    r.accuracy,
+                    r.update_sparsity,
+                    r.client_sparsity.clone(),
+                )
+            })
+            .collect();
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(&fp, r, "width {width}: RunLog diverged from serial"),
+        }
+    }
+}

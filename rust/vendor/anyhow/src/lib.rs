@@ -1,0 +1,201 @@
+//! Minimal offline drop-in for the subset of `anyhow` this repository
+//! uses: [`Error`], [`Result`], the [`anyhow!`] macro and the
+//! [`Context`] extension trait. The build registry has no network
+//! access, so the real crate cannot be fetched; this shim keeps the
+//! public surface source-compatible (swap the path dependency for the
+//! crates.io release to get backtraces and downcasting).
+
+use std::fmt;
+
+/// An error chain: a message plus an optional boxed cause. `{:#}`
+/// (alternate) formatting prints the whole chain `a: b: c`, matching
+/// how the CLI reports failures.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self {
+            msg: ctx.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+
+    pub fn root_cause(&self) -> &Error {
+        self.chain().last().unwrap()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, e) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket conversion below coherent (same trick as the
+// real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.unwrap()
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("format {args}")` — construct an [`Error`] from a format
+/// string (or from any single `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(...)` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to `Result`/`Option` values (anyhow's extension trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+    }
+
+    #[test]
+    fn context_chains_alternate_display() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.with_context(|| "opening file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening file: gone");
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(e.root_cause().to_string(), "gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

@@ -1,0 +1,222 @@
+//! Null PJRT backend.
+//!
+//! The production runtime drives jax-lowered HLO through the `xla` crate
+//! (xla-rs) and its PJRT C-API bindings. That crate needs the
+//! `xla_extension` C++ distribution, which the offline build image does
+//! not carry. This crate mirrors the exact API surface
+//! `fsfl::runtime` + the benches consume so the whole workspace builds,
+//! unit-tests and benches everywhere; every *backend* entry point
+//! (client construction, HLO parsing, compilation, execution) returns a
+//! clean [`Error`] that callers already propagate as `anyhow` errors.
+//!
+//! Pure host-side [`Literal`] plumbing (construction, reshape, readback)
+//! is implemented for real so data-marshalling code stays testable.
+//!
+//! To run on a real backend, point the `xla` path dependency in
+//! `rust/Cargo.toml` at xla-rs ≥ 0.1.6 — no fsfl source changes needed.
+
+use std::fmt;
+
+/// Error type matching xla-rs' `Error` role (Display + Debug only).
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT backend unavailable (fsfl built against the null xla backend; \
+             point the `xla` path dependency at xla-rs to enable compute)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Whether this build can actually execute HLO (false: null backend).
+pub const BACKEND_AVAILABLE: bool = false;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Elements a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    fn from_le(bytes: &[u8]) -> Self;
+    const SIZE: usize;
+}
+
+impl NativeType for f32 {
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+    const SIZE: usize = 4;
+}
+
+/// Host-side tensor value (shape + raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let numel: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != numel * 4 {
+            return Err(Error(format!(
+                "literal: {} bytes for shape {shape:?} (want {})",
+                data.len(),
+                numel * 4
+            )));
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: Vec::new(),
+            data: v.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn vec1(v: &[f32]) -> Self {
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Self {
+            shape: vec![v.len()],
+            data,
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let numel: usize = dims.iter().map(|&d| d.max(0) as usize).product();
+        if numel * 4 != self.data.len() {
+            return Err(Error(format!("reshape to {dims:?}: element count mismatch")));
+        }
+        Ok(Self {
+            shape: dims.iter().map(|&d| d as usize).collect(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.chunks_exact(T::SIZE).map(T::from_le).collect())
+    }
+
+    /// Tuple readback: the null backend never produces tuples (nothing
+    /// executes), so this only exists for API parity.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("literal to_tuple"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("literal to_tuple1"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable("HLO parse"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "null".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, -2.5, 3.25]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        let r = l.reshape(&[3, 1]).unwrap();
+        assert_eq!(r.shape(), &[3, 1]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("PJRT backend unavailable"));
+    }
+
+    #[test]
+    fn untyped_literal_checks_size() {
+        let bytes = [0u8; 8];
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &bytes).is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).is_err());
+    }
+}
