@@ -9,7 +9,13 @@
 //! claim), and emits `BENCH_fl_round.json` so future PRs have a perf
 //! trajectory to diff against.
 //!
-//! Section 2 (needs `make artifacts` + a real PJRT backend): the full
+//! Section 2 (runs everywhere): **staged vs pipelined round schedule** —
+//! the same codec round driven through `fl::scheduler` with a calibrated
+//! busy-loop standing in for PJRT compute. Asserts byte-identical
+//! outputs across modes and records both rounds/sec figures so the
+//! overlap win shows in the perf trajectory.
+//!
+//! Section 3 (needs `make artifacts` + a real PJRT backend): the full
 //! Table 2 execution path per protocol, as before.
 //!
 //! `cargo bench --bench fl_round -- --test` runs a seconds-long smoke
@@ -24,6 +30,7 @@ use fsfl::benchkit::{smoke_mode, Report};
 use fsfl::compression::{QuantConfig, SparsifyMode};
 use fsfl::data::{TaskKind, XorShiftRng};
 use fsfl::exec::WorkerPool;
+use fsfl::fl::scheduler::{self, ComputePlane, ScheduleMode};
 use fsfl::fl::{Experiment, ExperimentConfig, Protocol, ProtocolConfig, RoundLane, Server};
 use fsfl::metrics::fmt_bytes;
 use fsfl::model::params::Delta;
@@ -240,7 +247,136 @@ fn codec_plane_section(report: &mut Report, smoke: bool) {
 }
 
 // ---------------------------------------------------------------------------
-// Section 2: full experiment path (needs PJRT + artifacts)
+// Section 2: staged vs pipelined round schedule (no PJRT needed)
+// ---------------------------------------------------------------------------
+
+/// Deterministic compute spin: the stand-in for a thread-affine PJRT
+/// step while measuring scheduler overlap.
+fn spin(iters: u64) -> f64 {
+    let mut x = 0.0f64;
+    let mut i = 0u64;
+    while i < iters {
+        x += (i as f64).sqrt();
+        i += 1;
+    }
+    x
+}
+
+/// Synthetic compute plane: fixed per-client raw update + calibrated
+/// busy-loops for the train/scale stages.
+struct SimCompute {
+    base: Vec<Delta>,
+    train_iters: u64,
+    scale_iters: u64,
+}
+
+impl ComputePlane for SimCompute {
+    fn train(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
+        lane.raw.copy_from(&self.base[lane.client]);
+        std::hint::black_box(spin(self.train_iters));
+        Ok(())
+    }
+
+    fn scale(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
+        std::hint::black_box(spin(self.scale_iters));
+        Ok(())
+    }
+}
+
+fn scheduler_section(report: &mut Report, smoke: bool) {
+    let (rows, row_len) = if smoke { (64, 256) } else { (256, 1024) };
+    let clients = 8usize;
+    let rounds = if smoke { 3 } else { 15 };
+    let manifest = bench_manifest(rows, row_len);
+    let pcfg = Protocol::Fsfl.config(
+        SparsifyMode::Dynamic { delta: 1.0, gamma: 1.0 },
+        QuantConfig::default(),
+    );
+    let update_idx = vec![0usize];
+    let scale_idx: Vec<usize> = Vec::new();
+    let order: Vec<usize> = (0..clients).collect();
+    let pool = WorkerPool::new(4);
+
+    let mut rng = XorShiftRng::new(0x5EED);
+    let base: Vec<Delta> = (0..clients)
+        .map(|_| {
+            let mut d = Delta::zeros(manifest.clone());
+            for x in d.tensors[0].iter_mut() {
+                *x = rng.normal() * 6e-4;
+            }
+            d
+        })
+        .collect();
+
+    // Calibrate the busy-loop so "compute" costs ~0.8 ms per train stage
+    // (same order as the codec stages — the regime where overlap pays).
+    let t0 = Instant::now();
+    std::hint::black_box(spin(1_000_000));
+    let per_iter = t0.elapsed().as_secs_f64() / 1e6;
+    let train_iters = (0.0008 / per_iter.max(1e-12)) as u64;
+    let scale_iters = train_iters / 2;
+
+    println!(
+        "\nround schedule: {clients} clients x {rows}x{row_len} f32, \
+         sim compute {train_iters} iters/train (pool {})\n",
+        pool.workers()
+    );
+    println!("{:>10} {:>12} {:>14}", "schedule", "rounds/s", "ms/round");
+
+    let run_mode = |mode: ScheduleMode| -> (f64, Vec<Vec<u8>>) {
+        let mut lanes: Vec<RoundLane> = (0..clients)
+            .map(|_| RoundLane::new(manifest.clone()))
+            .collect();
+        let mut compute = SimCompute {
+            base: base.clone(),
+            train_iters,
+            scale_iters,
+        };
+        // warm-up round grows buffers and faults in code paths
+        scheduler::run_round(
+            mode, &pool, &mut compute, &mut lanes, &order, &pcfg, &update_idx, &scale_idx,
+        )
+        .unwrap();
+        let streams: Vec<Vec<u8>> = lanes.iter().map(|l| l.stream_w.clone()).collect();
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            scheduler::run_round(
+                mode, &pool, &mut compute, &mut lanes, &order, &pcfg, &update_idx, &scale_idx,
+            )
+            .unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rps = rounds as f64 / secs;
+        println!(
+            "{:>10} {:>12.2} {:>14.2}",
+            format!("{mode:?}").to_lowercase(),
+            rps,
+            secs * 1000.0 / rounds as f64
+        );
+        (rps, streams)
+    };
+
+    let (staged_rps, staged_streams) = run_mode(ScheduleMode::Staged);
+    let (pipelined_rps, pipelined_streams) = run_mode(ScheduleMode::Pipelined);
+    assert_eq!(
+        staged_streams, pipelined_streams,
+        "pipelined schedule changed the bitstreams"
+    );
+    let speedup = pipelined_rps / staged_rps;
+    println!("\npipelined vs staged: {speedup:.2}x");
+
+    let mut sub = Report::new();
+    sub.num("staged_rounds_per_sec", staged_rps)
+        .num("pipelined_rounds_per_sec", pipelined_rps)
+        .num("pipeline_speedup", speedup)
+        .bool("pipeline_overlap_wins", pipelined_rps >= staged_rps)
+        .int("sim_train_iters", train_iters)
+        .int("clients", clients as u64);
+    report.obj("scheduler", sub);
+}
+
+// ---------------------------------------------------------------------------
+// Section 3: full experiment path (needs PJRT + artifacts)
 // ---------------------------------------------------------------------------
 
 fn artifacts_root() -> std::path::PathBuf {
@@ -304,6 +440,7 @@ fn main() {
     report.str("mode", if smoke { "smoke" } else { "full" });
 
     codec_plane_section(&mut report, smoke);
+    scheduler_section(&mut report, smoke);
     if !smoke {
         experiment_section();
     }

@@ -13,15 +13,22 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing summary of one benchmark.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations measured.
     pub iters: usize,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration.
     pub median: Duration,
+    /// Mean iteration.
     pub mean: Duration,
 }
 
 impl BenchResult {
+    /// Print one aligned result line.
     pub fn print(&self) {
         println!(
             "{:<44} {:>6} iters  min {:>12?}  median {:>12?}  mean {:>12?}",
@@ -101,16 +108,19 @@ fn json_escape(s: &str) -> String {
 }
 
 impl Report {
+    /// Empty report.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a string field.
     pub fn str(&mut self, key: &str, value: &str) -> &mut Self {
         self.fields
             .push((key.to_string(), format!("\"{}\"", json_escape(value))));
         self
     }
 
+    /// Append a number field (non-finite values render as `null`).
     pub fn num(&mut self, key: &str, value: f64) -> &mut Self {
         let v = if value.is_finite() {
             format!("{value}")
@@ -121,7 +131,14 @@ impl Report {
         self
     }
 
+    /// Append an integer field.
     pub fn int(&mut self, key: &str, value: u64) -> &mut Self {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Append a boolean field.
+    pub fn bool(&mut self, key: &str, value: bool) -> &mut Self {
         self.fields.push((key.to_string(), value.to_string()));
         self
     }
@@ -132,6 +149,7 @@ impl Report {
         self
     }
 
+    /// Render the report as one JSON object.
     pub fn render(&self) -> String {
         let inner: Vec<String> = self
             .fields
@@ -141,6 +159,7 @@ impl Report {
         format!("{{{}}}", inner.join(", "))
     }
 
+    /// Write the rendered JSON (newline-terminated) to `path`.
     pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         std::fs::write(path, self.render() + "\n")
     }

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+/// Parsed command-line flags with typed getters.
 #[derive(Debug, Default, Clone)]
 pub struct Flags {
     values: BTreeMap<String, String>,
@@ -45,15 +46,18 @@ impl Flags {
         self.known.borrow_mut().insert(key.to_string());
     }
 
+    /// String flag value, if present.
     pub fn str_opt(&self, key: &str) -> Option<String> {
         self.mark(key);
         self.values.get(key).cloned()
     }
 
+    /// String flag value with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or_else(|| default.to_string())
     }
 
+    /// Parsed flag value, if present.
     pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -68,6 +72,7 @@ impl Flags {
         }
     }
 
+    /// Parsed flag value with a default.
     pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
@@ -75,6 +80,7 @@ impl Flags {
         Ok(self.get(key)?.unwrap_or(default))
     }
 
+    /// Boolean flag (`--flag` or `--flag 1`).
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         matches!(self.values.get(key).map(|s| s.as_str()), Some("true") | Some("1"))

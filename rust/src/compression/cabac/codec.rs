@@ -47,14 +47,20 @@ pub type StepFn<'a> = &'a dyn Fn(&TensorSpec) -> f32;
 /// Size/occupancy statistics of one encoded update.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EncodeStats {
+    /// Encoded bitstream length (header + payload).
     pub bytes: usize,
+    /// Nonzero quantized levels encoded.
     pub nonzero: usize,
+    /// Total elements covered by the encode.
     pub total: usize,
+    /// Filter rows skipped entirely (1-bit row flags).
     pub rows_skipped: usize,
+    /// Total filter rows seen.
     pub rows_total: usize,
 }
 
 impl EncodeStats {
+    /// Fraction of zero levels in the encoded update.
     pub fn sparsity(&self) -> f64 {
         if self.total == 0 {
             1.0

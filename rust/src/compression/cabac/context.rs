@@ -17,12 +17,18 @@
 
 use super::engine::{BitModel, Decoder, Encoder};
 
+/// The adaptive context-model set for one tensor's quantized levels.
 #[derive(Debug, Clone, Default)]
 pub struct LevelContexts {
+    /// Per-row all-zero skip flag.
     pub row_skip: BitModel,
+    /// Significance flags, indexed by [`SigCtx`].
     pub sig: [BitModel; 3],
+    /// Sign flag.
     pub sign: BitModel,
+    /// |q| > 1 flag.
     pub gr1: BitModel,
+    /// |q| > 2 flag.
     pub gr2: BitModel,
 }
 
@@ -43,12 +49,16 @@ impl LevelContexts {
 /// Significance context selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SigCtx {
+    /// First element of a row.
     RowStart,
+    /// Previous element quantized to zero.
     PrevZero,
+    /// Previous element quantized nonzero.
     PrevNonZero,
 }
 
 impl SigCtx {
+    /// Index into [`LevelContexts::sig`].
     #[inline]
     pub fn index(self) -> usize {
         match self {
@@ -71,6 +81,7 @@ pub fn encode_expgolomb(enc: &mut Encoder, value: u32) {
     }
 }
 
+/// Exp-Golomb order-0 value decoding (inverse of [`encode_expgolomb`]).
 #[inline]
 pub fn decode_expgolomb(dec: &mut Decoder) -> u32 {
     let mut zeros = 0u32;
@@ -110,6 +121,7 @@ pub fn encode_level(enc: &mut Encoder, cx: &mut LevelContexts, sig_ctx: SigCtx, 
     encode_expgolomb(enc, mag - 3);
 }
 
+/// Decode one quantized level (inverse of [`encode_level`]).
 #[inline]
 pub fn decode_level(dec: &mut Decoder, cx: &mut LevelContexts, sig_ctx: SigCtx) -> i32 {
     if dec.decode_bit(&mut cx.sig[sig_ctx.index()]) == 0 {

@@ -10,8 +10,11 @@
 //! reproduces the bit sequence for any interleaving of context-coded and
 //! bypass bits (property-tested in `rust/tests/integration_compression.rs`).
 
+/// Probability resolution in bits.
 pub const PROB_BITS: u32 = 11;
-pub const PROB_ONE: u16 = 1 << PROB_BITS; // 2048
+/// Probability denominator (2048).
+pub const PROB_ONE: u16 = 1 << PROB_BITS;
+/// Initial (equiprobable) state of a fresh context model.
 pub const PROB_INIT: u16 = PROB_ONE / 2;
 /// Adaptation rate: higher = slower adaptation. 5 is the LZMA classic.
 pub const MOVE_BITS: u32 = 5;
@@ -74,6 +77,7 @@ impl Default for Encoder {
 }
 
 impl Encoder {
+    /// Encoder over a fresh buffer.
     pub fn new() -> Self {
         Self::with_buffer(Vec::new())
     }
@@ -82,6 +86,23 @@ impl Encoder {
     /// steady-state FL round re-uses one payload buffer per client, so
     /// encoding allocates nothing once buffers have grown to size.
     /// The produced bytes are identical to [`Encoder::new`]'s.
+    ///
+    /// ```
+    /// use fsfl::compression::cabac::engine::{BitModel, Decoder, Encoder};
+    ///
+    /// let recycled = Vec::with_capacity(64); // e.g. last round's payload
+    /// let mut enc = Encoder::with_buffer(recycled);
+    /// let mut model = BitModel::default();
+    /// for bit in [1u8, 0, 0, 1, 0, 1, 1, 0] {
+    ///     enc.encode_bit(&mut model, bit);
+    /// }
+    /// let bytes = enc.finish();
+    ///
+    /// let mut dec = Decoder::new(&bytes);
+    /// let mut model = BitModel::default();
+    /// let decoded: Vec<u8> = (0..8).map(|_| dec.decode_bit(&mut model)).collect();
+    /// assert_eq!(decoded, [1, 0, 0, 1, 0, 1, 1, 0]);
+    /// ```
     pub fn with_buffer(mut out: Vec<u8>) -> Self {
         out.clear();
         Self {
@@ -152,6 +173,7 @@ impl Encoder {
         self.out
     }
 
+    /// Upper bound on the finished bitstream length.
     pub fn len_upper_bound(&self) -> usize {
         self.out.len() + 5
     }
@@ -166,6 +188,7 @@ pub struct Decoder<'a> {
 }
 
 impl<'a> Decoder<'a> {
+    /// Decoder over an encoded bitstream (reads past-the-end as zeros).
     pub fn new(input: &'a [u8]) -> Self {
         let mut d = Self {
             code: 0,
@@ -187,6 +210,7 @@ impl<'a> Decoder<'a> {
         b
     }
 
+    /// Decode one context-coded bit (inverse of [`Encoder::encode_bit`]).
     #[inline]
     pub fn decode_bit(&mut self, model: &mut BitModel) -> u8 {
         let bound = (self.range >> PROB_BITS) * model.p0 as u32;
@@ -206,6 +230,7 @@ impl<'a> Decoder<'a> {
         bit
     }
 
+    /// Decode `n` bypass bits (inverse of [`Encoder::encode_direct`]).
     #[inline]
     pub fn decode_direct(&mut self, n: u32) -> u32 {
         let mut v = 0u32;

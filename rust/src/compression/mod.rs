@@ -37,8 +37,11 @@ use crate::model::Manifest;
 /// All recycled buffers one codec lane (client slot or server) needs.
 #[derive(Debug, Default)]
 pub struct CodecScratch {
+    /// Sparsification buffers (row means, top-k magnitudes).
     pub sparsify: SparsifyScratch,
+    /// Encode-side buffers (level staging, coder payload).
     pub encode: cabac::EncodeScratch,
+    /// Decode-side buffers (header entry table).
     pub decode: cabac::DecodeScratch,
     /// Per-tensor STC μ values (ternary protocols only).
     mus: Vec<f32>,
@@ -47,7 +50,9 @@ pub struct CodecScratch {
 /// End-to-end codec: how a protocol turns a raw ΔW into wire bytes.
 #[derive(Debug, Clone, Copy)]
 pub struct UpdateCodec {
+    /// Sparsification applied before quantization.
     pub sparsify: SparsifyMode,
+    /// Quantization step assignment.
     pub quant: QuantConfig,
     /// Ternarize survivors to ±μ before encoding (the STC baseline).
     pub ternary: bool,
@@ -104,7 +109,40 @@ impl UpdateCodec {
     /// Allocation-free encode: sparsifies `raw` **in place**, writes the
     /// bitstream to `dst` and the dequantized Δ̂ to `deq` (both cleared
     /// first; `deq` must share `raw`'s manifest). Byte-identical to
-    /// [`UpdateCodec::encode`].
+    /// [`UpdateCodec::encode`], and one `scratch` may serve updates of
+    /// any shape back to back without leaking state between calls.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use fsfl::compression::{CodecScratch, UpdateCodec};
+    /// use fsfl::model::params::Delta;
+    /// use fsfl::model::{Group, Kind, Manifest, TensorSpec};
+    ///
+    /// let manifest = Arc::new(Manifest {
+    ///     model: "doc".into(), variant: "doc".into(), classes: 2,
+    ///     input: vec![2, 2, 1], batch: 1, param_count: 8, scale_count: 0,
+    ///     tensors: vec![TensorSpec {
+    ///         name: "w".into(), shape: vec![2, 4], kind: Kind::ConvW,
+    ///         group: Group::Weight, layer: "l".into(), out_ch: Some(2),
+    ///         scale_for: None,
+    ///     }],
+    /// });
+    /// let mut raw = Delta::zeros(manifest.clone());
+    /// raw.tensors[0][1] = 6e-3;
+    ///
+    /// let codec = UpdateCodec::fsfl(1.0, 1.0);
+    /// let mut scratch = CodecScratch::default();
+    /// let mut deq = Delta::zeros(manifest.clone());
+    /// let mut wire = Vec::new();
+    /// let stats = codec.encode_into(&mut raw, &[0], &mut scratch, &mut deq, &mut wire);
+    /// assert_eq!(stats.bytes, wire.len());
+    /// assert!(stats.nonzero > 0);
+    ///
+    /// // The server decodes exactly those wire bytes back into Δ̂.
+    /// let mut decoded = Delta::zeros(manifest);
+    /// codec.decode_into(&wire, &mut decoded, &mut scratch).unwrap();
+    /// assert_eq!(decoded, deq);
+    /// ```
     pub fn encode_into(
         &self,
         raw: &mut Delta,
@@ -146,11 +184,13 @@ impl UpdateCodec {
         cabac::encode_update_into(raw, indices, &step_fn, true, enc, deq, dst)
     }
 
+    /// Decode a bitstream into a fresh [`Delta`].
     pub fn decode(&self, bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
         cabac::decode_update(bytes, manifest)
     }
 
     /// Allocation-free decode into a recycled `Delta` (cleared first).
+    /// See [`UpdateCodec::encode_into`] for a round-trip example.
     pub fn decode_into(
         &self,
         bytes: &[u8],

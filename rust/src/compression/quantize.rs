@@ -8,16 +8,20 @@
 
 use crate::model::TensorSpec;
 
-/// Paper defaults (Sec. 5.1).
+/// Coarse weight-update step, unidirectional setups (paper Sec. 5.1).
 pub const STEP_COARSE_UNI: f32 = 4.88e-4;
+/// Coarse weight-update step, bidirectional setups (halved — two legs).
 pub const STEP_COARSE_BI: f32 = 2.44e-4;
+/// Fine step for scale factors, biases and BatchNorm parameters.
 pub const STEP_FINE: f32 = 2.38e-6;
 
+/// Nearest integer quantization level of `x` at `step`.
 #[inline]
 pub fn quantize(x: f32, step: f32) -> i32 {
     (x / step).round() as i32
 }
 
+/// Reconstruction of level `q` at `step`.
 #[inline]
 pub fn dequantize(q: i32, step: f32) -> f32 {
     q as f32 * step
@@ -28,7 +32,9 @@ pub fn dequantize(q: i32, step: f32) -> f32 {
 /// BatchNorm parameters the fine step.
 #[derive(Debug, Clone, Copy)]
 pub struct QuantConfig {
+    /// Step for row-structured weight updates.
     pub coarse_step: f32,
+    /// Step for scale/bias/BatchNorm updates.
     pub fine_step: f32,
 }
 
@@ -42,6 +48,7 @@ impl Default for QuantConfig {
 }
 
 impl QuantConfig {
+    /// Bidirectional preset: halved coarse step (paper Sec. 5.1).
     pub fn bidirectional() -> Self {
         Self {
             coarse_step: STEP_COARSE_BI,
@@ -49,6 +56,7 @@ impl QuantConfig {
         }
     }
 
+    /// The step a tensor quantizes with (coarse vs fine by kind).
     #[inline]
     pub fn step_for(&self, spec: &TensorSpec) -> f32 {
         if spec.kind.is_fine_quantized() {

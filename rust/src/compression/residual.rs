@@ -14,12 +14,14 @@
 
 use crate::model::params::Delta;
 
+/// One client's carried error-accumulation state.
 #[derive(Debug, Clone)]
 pub struct Residual {
     acc: Delta,
 }
 
 impl Residual {
+    /// Zero-initialized residual for a manifest.
     pub fn zeros(manifest: std::sync::Arc<crate::model::Manifest>) -> Self {
         Self {
             acc: Delta::zeros(manifest),
@@ -46,6 +48,7 @@ impl Residual {
         }
     }
 
+    /// Euclidean norm of the carried error.
     pub fn l2_norm(&self) -> f64 {
         self.acc.l2_norm()
     }

@@ -28,9 +28,17 @@ pub enum SparsifyMode {
     /// No sparsification (plain FedAvg baselines).
     None,
     /// Eqs. (2) + (3): dynamic unstructured + structured thresholds.
-    Dynamic { delta: f32, gamma: f32 },
+    Dynamic {
+        /// Std-dev multiplier of the Eq. (2) Gaussian threshold.
+        delta: f32,
+        /// Row-mean multiplier of the Eq. (3) structured threshold.
+        gamma: f32,
+    },
     /// Fixed-rate magnitude top-k (rate = fraction of zeros, e.g. 0.96).
-    TopK { rate: f32 },
+    TopK {
+        /// Fraction of elements zeroed.
+        rate: f32,
+    },
 }
 
 /// Reusable buffers for the sparsification kernels. The contents carry

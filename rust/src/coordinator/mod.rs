@@ -1,43 +1,82 @@
 //! Leader/worker coordination layer.
 //!
 //! XLA executables are thread-affine (the `xla` crate's PJRT handles are
-//! not `Send`), so the compute plane runs on one dedicated OS thread while
-//! the control plane — progress streaming, CSV sinks, the CLI — consumes
-//! events from an mpsc channel. [`run_experiment_threaded`] spawns the
-//! compute thread and streams [`RoundMetrics`]; this is the launcher used
-//! by the `fsfl` binary and the examples.
+//! not `Send`), so compute always runs on dedicated OS threads while the
+//! control plane — progress streaming, CSV sinks, the CLI — consumes
+//! [`Event`]s from an mpsc channel. Two deployment shapes share that
+//! contract:
 //!
-//! Within a round the compute thread additionally fans the **codec
-//! plane** (per-client encode, server-side decode) out across the
-//! experiment's [`crate::exec::WorkerPool`] — see `fl/mod.rs` for the
-//! stage diagram. The in-process wire protocol is still the *paper's*
-//! protocol: clients emit DeepCABAC bitstreams, the server decodes
-//! exactly those bytes (`RoundLane::finish_round`), and byte accounting
-//! happens on the encoded streams — nothing is short-circuited.
+//! * [`run_experiment_threaded`] — one compute thread drives the whole
+//!   [`crate::fl::Experiment`]; the round scheduler (see
+//!   `fl/scheduler.rs`) overlaps its codec plane with compute when
+//!   `cfg.pipelined` is set.
+//! * [`run_experiment_sharded`] — clients are split round-robin over
+//!   `cfg.compute_shards` **shard threads**, each owning its own PJRT
+//!   client, client subset and codec worker pool. Shards run the same
+//!   scheduler over their slice of each round's participants and stream
+//!   their finished [`RoundLane`]s into the coordinator over one mpsc
+//!   fan-in channel. The coordinator performs the **ordered reduction**
+//!   (lanes sorted by round slot — exactly the single-thread aggregation
+//!   order), applies FedAvg, and hands the broadcast delta back to every
+//!   shard; shard 0 evaluates the central model on its synced replica.
+//!
+//! Both shapes speak the *paper's* wire protocol: clients emit DeepCABAC
+//! bitstreams, the server decodes exactly those bytes
+//! (`RoundLane::finish_round`), and byte accounting happens on the
+//! encoded streams — nothing is short-circuited. Determinism invariant:
+//! for a fixed config, bitstreams and `RunLog` metrics are byte-identical
+//! across shard counts, schedule modes and pool widths (see
+//! `ARCHITECTURE.md` and `tests/integration_parallel.rs`).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::fl::{Experiment, ExperimentConfig};
-use crate::metrics::{RoundMetrics, RunLog};
-use crate::runtime::Runtime;
+use crate::exec::WorkerPool;
+use crate::fl::scheduler::{self, ScheduleMode};
+use crate::fl::{
+    build_setup, evaluate_params, EvalReport, Experiment, ExperimentCompute, ExperimentConfig,
+    RoundLane, Server,
+};
+use crate::metrics::{RoundMetrics, RunLog, ScaleStats};
+use crate::model::params::Delta;
+use crate::model::ParamSet;
+use crate::runtime::{ModelRuntime, Runtime};
 
-/// Events streamed from the compute thread to observers.
+/// Events streamed from the compute thread(s) to observers.
 #[derive(Debug)]
 pub enum Event {
+    /// One round finished; carries its metrics.
     RoundDone(RoundMetrics),
+    /// The experiment completed with this log.
     Finished(RunLog),
+    /// The experiment failed (message is the rendered error chain).
     Failed(String),
 }
 
-/// Run an experiment on a dedicated compute thread, streaming per-round
+/// The compute-shard count a config actually resolves to (never more
+/// shards than clients, never less than one).
+pub fn resolved_shards(cfg: &ExperimentConfig) -> usize {
+    cfg.compute_shards.min(cfg.clients).max(1)
+}
+
+/// Run an experiment on dedicated compute thread(s), streaming per-round
 /// events to `on_event` on the calling thread. Returns the final
-/// [`RunLog`].
+/// [`RunLog`]. Dispatches to [`run_experiment_sharded`] when the config
+/// asks for more than one compute shard.
 pub fn run_experiment_threaded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    if resolved_shards(&cfg) > 1 {
+        return run_experiment_sharded(cfg, on_event);
+    }
+    run_single_thread(cfg, &mut on_event)
+}
+
+/// The single-compute-thread launcher body.
+fn run_single_thread(cfg: ExperimentConfig, on_event: &mut impl FnMut(&Event)) -> Result<RunLog> {
     let (tx, rx) = mpsc::channel::<Event>();
     let handle = std::thread::spawn(move || {
         let run = || -> Result<RunLog> {
@@ -81,10 +120,392 @@ pub fn run_experiment_threaded(
 }
 
 /// Synchronous convenience wrapper (shares one [`Runtime`] across calls —
-/// used by harnesses that sweep many configs).
+/// used by harnesses that sweep many configs). Always single-shard: the
+/// caller owns the runtime's thread.
 pub fn run_experiment(rt: &Runtime, cfg: ExperimentConfig) -> Result<RunLog> {
     let mut exp = Experiment::build(rt, cfg)?;
     exp.run()
+}
+
+// ---------------------------------------------------------------------------
+// Sharded deployment
+// ---------------------------------------------------------------------------
+
+/// Shard → coordinator messages (all shards share one fan-in channel).
+enum ShardMsg {
+    /// Shard built its runtime + client subset; carries the initial
+    /// model so the coordinator can construct the server without a
+    /// runtime of its own.
+    Ready { shard: usize, init: ParamSet },
+    /// One round's finished lanes, each tagged with its global slot.
+    RoundDone {
+        shard: usize,
+        lanes: Vec<(usize, RoundLane)>,
+    },
+    /// Central-model evaluation after broadcast (shard 0 only).
+    Eval {
+        report: EvalReport,
+        scale_stats: Vec<ScaleStats>,
+    },
+    /// Fatal shard error (rendered error chain).
+    Failed { shard: usize, msg: String },
+}
+
+/// Coordinator → shard commands (one channel per shard).
+enum ShardCmd {
+    /// Run the round over these `(global slot, client id)` assignments
+    /// (possibly empty — the shard still participates in the barrier).
+    Round { slots: Vec<(usize, usize)> },
+    /// Apply the aggregated broadcast to every local replica, take the
+    /// round's lanes back for recycling, and — when `eval` — evaluate
+    /// the central model on the synced replica.
+    Apply {
+        broadcast: Arc<Delta>,
+        lanes: Vec<(usize, RoundLane)>,
+        eval: bool,
+    },
+    /// Shut down cleanly.
+    Stop,
+}
+
+/// Run an experiment with clients sharded over `cfg.compute_shards`
+/// compute threads (one PJRT client per shard). Streams the same
+/// [`Event`]s as [`run_experiment_threaded`] and returns the final
+/// [`RunLog`]; outputs are byte-identical to the single-thread path for
+/// any shard count.
+pub fn run_experiment_sharded(
+    cfg: ExperimentConfig,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    let shards = resolved_shards(&cfg);
+    if shards <= 1 {
+        return run_single_thread(cfg, &mut on_event);
+    }
+
+    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+    let mut cmd_txs: Vec<mpsc::Sender<ShardCmd>> = Vec::with_capacity(shards);
+    let mut handles = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+        cmd_txs.push(cmd_tx);
+        let cfg2 = cfg.clone();
+        let tx = msg_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            shard_worker(cfg2, shard, shards, cmd_rx, tx)
+        }));
+    }
+    drop(msg_tx);
+
+    let result = coordinate(&cfg, shards, &cmd_txs, &msg_rx, &mut on_event);
+    // Shut every shard down (dead shards just return a send error).
+    for tx in &cmd_txs {
+        let _ = tx.send(ShardCmd::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    match &result {
+        Ok(log) => on_event(&Event::Finished(log.clone())),
+        Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
+    }
+    result
+}
+
+/// Turn a dead-shard condition into its parked `Failed` message when one
+/// is already queued, otherwise the fallback description.
+fn shard_failure(msg_rx: &mpsc::Receiver<ShardMsg>, fallback: &str) -> anyhow::Error {
+    while let Ok(m) = msg_rx.try_recv() {
+        if let ShardMsg::Failed { shard, msg } = m {
+            return anyhow!("shard {shard}: {msg}");
+        }
+    }
+    anyhow!("{fallback}")
+}
+
+/// The coordinator's control loop: round fan-out, ordered fan-in
+/// reduction, FedAvg, broadcast, metrics.
+fn coordinate(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
+    // Startup barrier: every shard builds its runtime + clients.
+    let mut init: Option<ParamSet> = None;
+    let mut ready = 0usize;
+    while ready < shards {
+        match msg_rx.recv() {
+            Ok(ShardMsg::Ready { shard, init: i }) => {
+                debug_assert!(shard < shards, "ready from unknown shard {shard}");
+                ready += 1;
+                if init.is_none() {
+                    init = Some(i);
+                }
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => return Err(anyhow!("shard {shard}: {msg}")),
+            Ok(_) => return Err(anyhow!("unexpected shard message during startup")),
+            Err(_) => return Err(shard_failure(msg_rx, "shards exited during startup")),
+        }
+    }
+    let init = init.expect("startup barrier passed without init");
+
+    let mut server = Server::new(init, cfg.downstream_codec());
+    let update_idx = server.params.manifest.update_indices();
+    let n = cfg.clients;
+    let take = ((cfg.participation * n as f64).round() as usize).clamp(1, n);
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut broadcast = Delta::zeros(server.params.manifest.clone());
+    // Recycled Arc for the broadcast fan-out: by the time the next round
+    // aggregates, every shard has applied and dropped its clone, so the
+    // buffer is uniquely owned again and no model-sized allocation
+    // happens in steady state (a slow shard only costs a fallback copy).
+    let mut bc_slot: Option<Arc<Delta>> = None;
+    let mut log = RunLog::new(cfg.name.clone());
+
+    for t in 0..cfg.rounds {
+        // Fan-out: the same deterministic participant selection as the
+        // single-thread round, split by shard ownership.
+        scheduler::select_participants(cfg.seed, t, n, take, &mut order);
+        let mut per_shard: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards];
+        for (slot, &ci) in order.iter().enumerate() {
+            per_shard[scheduler::shard_of(ci, shards)].push((slot, ci));
+        }
+        for (s, slots) in per_shard.into_iter().enumerate() {
+            cmd_txs[s]
+                .send(ShardCmd::Round { slots })
+                .map_err(|_| shard_failure(msg_rx, &format!("shard {s} disconnected")))?;
+        }
+
+        // Fan-in: collect every shard's lanes, then reduce in slot order.
+        let mut tagged: Vec<(usize, RoundLane)> = Vec::with_capacity(take);
+        let mut done = 0usize;
+        while done < shards {
+            match msg_rx.recv() {
+                Ok(ShardMsg::RoundDone { shard, lanes }) => {
+                    debug_assert!(shard < shards, "lanes from unknown shard {shard}");
+                    done += 1;
+                    tagged.extend(lanes);
+                }
+                Ok(ShardMsg::Failed { shard, msg }) => {
+                    return Err(anyhow!("shard {shard}: {msg}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard message during round {t}")),
+                Err(_) => return Err(shard_failure(msg_rx, "shards exited mid-round")),
+            }
+        }
+        let mut tagged = scheduler::fan_in(tagged);
+        for (_, lane) in tagged.iter_mut() {
+            if let Some(e) = lane.error.take() {
+                return Err(e);
+            }
+        }
+
+        // Ordered reduction: metrics + FedAvg exactly as a single-shard
+        // round would compute them.
+        let mut m = RoundMetrics {
+            round: t,
+            ..Default::default()
+        };
+        scheduler::collect_lane_metrics(&mut m, tagged.iter().map(|(_, l)| l), &update_idx);
+        let updates: Vec<&Delta> = tagged.iter().map(|(_, l)| &l.decoded).collect();
+        let down_bytes_each = server.aggregate_into(&updates, &mut broadcast);
+        m.down_bytes = down_bytes_each * n;
+
+        // Broadcast + lane return; shard 0 evaluates the synced replica.
+        let mut bc = bc_slot
+            .take()
+            .unwrap_or_else(|| Arc::new(Delta::zeros(server.params.manifest.clone())));
+        let reused = match Arc::get_mut(&mut bc) {
+            Some(d) => {
+                d.copy_from(&broadcast);
+                true
+            }
+            None => false,
+        };
+        if !reused {
+            bc = Arc::new(broadcast.clone());
+        }
+        let mut back: Vec<Vec<(usize, RoundLane)>> = vec![Vec::new(); shards];
+        for (slot, lane) in tagged {
+            back[scheduler::shard_of(lane.client, shards)].push((slot, lane));
+        }
+        for (s, lanes) in back.into_iter().enumerate() {
+            cmd_txs[s]
+                .send(ShardCmd::Apply {
+                    broadcast: bc.clone(),
+                    lanes,
+                    eval: s == 0,
+                })
+                .map_err(|_| shard_failure(msg_rx, &format!("shard {s} disconnected")))?;
+        }
+        loop {
+            match msg_rx.recv() {
+                Ok(ShardMsg::Eval {
+                    report,
+                    scale_stats,
+                }) => {
+                    m.accuracy = report.accuracy;
+                    m.f1 = report.f1;
+                    m.test_loss = report.loss;
+                    m.scale_stats = scale_stats;
+                    break;
+                }
+                Ok(ShardMsg::Failed { shard, msg }) => {
+                    return Err(anyhow!("shard {shard}: {msg}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard message awaiting eval")),
+                Err(_) => return Err(shard_failure(msg_rx, "shards exited awaiting eval")),
+            }
+        }
+
+        // Keep our reference for reuse next round (shards drop theirs
+        // once they have applied the delta).
+        bc_slot = Some(bc);
+
+        on_event(&Event::RoundDone(m.clone()));
+        let acc = m.accuracy;
+        log.push(m);
+        if let Some(target) = cfg.target_accuracy {
+            if acc >= target {
+                break;
+            }
+        }
+    }
+    Ok(log)
+}
+
+/// One shard's thread body: build a private runtime + client subset,
+/// then serve round commands until `Stop`.
+fn shard_worker(
+    cfg: ExperimentConfig,
+    shard: usize,
+    shards: usize,
+    cmd_rx: mpsc::Receiver<ShardCmd>,
+    msg_tx: mpsc::Sender<ShardMsg>,
+) {
+    let run = || -> Result<()> {
+        let rt = Runtime::cpu()?;
+        let mr = ModelRuntime::open(&rt, &cfg.artifacts_root, &cfg.variant)?;
+        // Identical deterministic substrate on every shard; only the
+        // round-robin-owned clients are instantiated here.
+        let setup = build_setup(&mr, &cfg, |ci| scheduler::shard_of(ci, shards) == shard)?;
+        let mut clients = setup.clients;
+        let train_data = setup.train_data;
+        let test_batches = setup.test_batches;
+        let manifest = mr.manifest.clone();
+        let pcfg = cfg.protocol_config();
+        let update_idx = manifest.update_indices();
+        let scale_idx = manifest.group_indices(crate::model::Group::Scale);
+        // Auto-sized pools split the machine between shards instead of
+        // each grabbing full parallelism (N shards × ncpu codec threads
+        // would just thrash); explicit widths are per-shard as documented.
+        let pool = if cfg.codec_workers == 0 {
+            let auto = WorkerPool::new(0).workers();
+            WorkerPool::new((auto / shards).max(1))
+        } else {
+            WorkerPool::new(cfg.codec_workers)
+        };
+        let mode: ScheduleMode = cfg.schedule_mode();
+
+        msg_tx
+            .send(ShardMsg::Ready {
+                shard,
+                init: setup.init,
+            })
+            .map_err(|_| anyhow!("coordinator disconnected"))?;
+
+        // Recycled lanes: grown to this shard's per-round watermark.
+        let mut free: Vec<RoundLane> = Vec::new();
+        let mut lanes: Vec<RoundLane> = Vec::new();
+        loop {
+            match cmd_rx.recv() {
+                Ok(ShardCmd::Round { slots }) => {
+                    let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
+                    while free.len() < order.len() {
+                        free.push(RoundLane::new(manifest.clone()));
+                    }
+                    lanes.clear();
+                    let keep = free.len() - order.len();
+                    lanes.extend(free.drain(keep..));
+                    // The same ComputePlane glue the single-process
+                    // Experiment uses, with round-robin local indexing.
+                    let mut compute = ExperimentCompute {
+                        mr: &mr,
+                        clients: &mut clients,
+                        shards,
+                        train_data: &train_data,
+                        cfg: &cfg,
+                        pcfg: &pcfg,
+                    };
+                    scheduler::run_round(
+                        mode,
+                        &pool,
+                        &mut compute,
+                        &mut lanes,
+                        &order,
+                        &pcfg,
+                        &update_idx,
+                        &scale_idx,
+                    )?;
+                    let tagged: Vec<(usize, RoundLane)> = slots
+                        .iter()
+                        .map(|&(slot, _)| slot)
+                        .zip(lanes.drain(..))
+                        .collect();
+                    msg_tx
+                        .send(ShardMsg::RoundDone {
+                            shard,
+                            lanes: tagged,
+                        })
+                        .map_err(|_| anyhow!("coordinator disconnected"))?;
+                }
+                Ok(ShardCmd::Apply {
+                    broadcast,
+                    lanes: returned,
+                    eval,
+                }) => {
+                    for c in clients.iter_mut() {
+                        c.apply_broadcast(&broadcast);
+                    }
+                    free.extend(returned.into_iter().map(|(_, l)| l));
+                    if eval {
+                        // Post-broadcast, every replica equals the server
+                        // model; evaluate on this shard's first client
+                        // (global client 0 lives on shard 0).
+                        let replica = &clients
+                            .first()
+                            .ok_or_else(|| anyhow!("eval shard owns no clients"))?
+                            .global;
+                        let report = evaluate_params(&mr, replica, &test_batches)?;
+                        let scale_stats = if pcfg.scaled {
+                            clients[0]
+                                .scale_values()
+                                .into_iter()
+                                .map(|(layer, vals)| ScaleStats::from_values(&layer, &vals))
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        msg_tx
+                            .send(ShardMsg::Eval {
+                                report,
+                                scale_stats,
+                            })
+                            .map_err(|_| anyhow!("coordinator disconnected"))?;
+                    }
+                }
+                Ok(ShardCmd::Stop) | Err(_) => break,
+            }
+        }
+        Ok(())
+    };
+    if let Err(e) = run() {
+        let _ = msg_tx.send(ShardMsg::Failed {
+            shard,
+            msg: format!("{e:#}"),
+        });
+    }
 }
 
 /// Default per-round progress line used by the CLI and examples.

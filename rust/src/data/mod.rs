@@ -13,8 +13,11 @@ pub use synthetic::{Dataset, Sample, TaskKind, TaskSpec};
 /// One minibatch in wire layout: x flat [B,H,W,C], y one-hot flat [B,classes].
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Inputs, flat [B, H, W, C].
     pub x: Vec<f32>,
+    /// One-hot labels, flat [B, classes].
     pub y: Vec<f32>,
+    /// Samples in the batch (B).
     pub size: usize,
 }
 

@@ -1,18 +1,21 @@
 //! Deterministic xorshift64* RNG — no external dependency, identical
 //! streams across platforms, so every experiment is exactly repeatable.
 
+/// A seeded xorshift64* pseudo-random generator.
 #[derive(Debug, Clone)]
 pub struct XorShiftRng {
     state: u64,
 }
 
 impl XorShiftRng {
+    /// Seeded generator (any seed, including 0, is valid).
     pub fn new(seed: u64) -> Self {
         Self {
             state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1,
         }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;

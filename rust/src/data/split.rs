@@ -8,7 +8,9 @@ use super::synthetic::Dataset;
 /// Per-client index lists into a [`Dataset`].
 #[derive(Debug, Clone)]
 pub struct ClientSplit {
+    /// Training indices, one list per client.
     pub train: Vec<Vec<usize>>,
+    /// Validation indices, one list per client.
     pub val: Vec<Vec<usize>>,
 }
 

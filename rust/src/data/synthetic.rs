@@ -15,14 +15,19 @@
 
 use super::rng::XorShiftRng;
 
+/// Which paper dataset a synthetic task stands in for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
+    /// 10 balanced classes (CIFAR10 stand-in).
     CifarLike,
+    /// 20 mildly imbalanced classes (Pascal VOC stand-in).
     VocLike,
+    /// 2 classes at 3:1 imbalance (Chest X-Ray stand-in).
     XrayLike,
 }
 
 impl TaskKind {
+    /// Class count of the task.
     pub fn classes(self) -> usize {
         match self {
             TaskKind::CifarLike => 10,
@@ -41,17 +46,25 @@ impl TaskKind {
     }
 }
 
+/// Full description of one synthetic task instance.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
+    /// Task preset.
     pub kind: TaskKind,
+    /// Image height = width.
     pub hw: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Per-sample Gaussian noise amplitude.
     pub noise: f32,
+    /// Maximum per-sample spatial shift in pixels.
     pub max_shift: usize,
+    /// Template seed (every client/server sees the same concepts).
     pub seed: u64,
 }
 
 impl TaskSpec {
+    /// Task spec with the default noise/shift settings.
     pub fn new(kind: TaskKind, hw: usize, channels: usize, seed: u64) -> Self {
         Self {
             kind,
@@ -100,17 +113,23 @@ pub fn class_templates(spec: &TaskSpec, classes: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// One labeled sample.
 #[derive(Debug, Clone)]
 pub struct Sample {
     /// Flat [H, W, C].
     pub x: Vec<f32>,
+    /// Class label.
     pub label: usize,
 }
 
+/// A generated dataset (train, validation or test portion).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// The task this dataset was generated from.
     pub spec: TaskSpec,
+    /// Class count.
     pub classes: usize,
+    /// All samples, in generation order.
     pub samples: Vec<Sample>,
 }
 
@@ -171,18 +190,22 @@ impl Dataset {
         }
     }
 
+    /// Flat input length (H·W·C).
     pub fn feature_len(&self) -> usize {
         self.spec.hw * self.spec.hw * self.spec.channels
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// All labels, in sample order.
     pub fn labels(&self) -> Vec<usize> {
         self.samples.iter().map(|s| s.label).collect()
     }

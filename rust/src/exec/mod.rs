@@ -8,15 +8,43 @@
 //! threads with `std::thread::scope`, so borrowed per-client state flows
 //! in without `Arc`/channels and without any new dependencies.
 //!
+//! Two execution shapes:
+//!
+//! * **Barrier** ([`WorkerPool::run_mut`] / [`WorkerPool::map`]) — apply
+//!   one function to a whole slice and join. Used by the *staged* round
+//!   schedule, where every codec stage runs between two compute stages.
+//! * **Pipeline** ([`WorkerPool::pipeline`]) — a scoped submit/take job
+//!   queue. The calling thread keeps running (e.g. training the next
+//!   client on the compute plane) while submitted jobs execute on the
+//!   pool; results are claimed by ticket in any order. This is the
+//!   substrate of the *pipelined* round schedule in
+//!   [`crate::fl::scheduler`].
+//!
 //! Determinism contract: work items are processed independently and
-//! results land in the slot of the item that produced them, so outputs
-//! are **bit-for-bit identical for every pool size** (including 1). The
-//! serial/parallel equivalence tests in `tests/integration_parallel.rs`
-//! pin this down for the full codec pipeline.
+//! results land in the slot/ticket of the item that produced them, so
+//! outputs are **bit-for-bit identical for every pool size** (including
+//! 1) and for both execution shapes. The serial/parallel equivalence
+//! tests in `tests/integration_parallel.rs` pin this down for the full
+//! codec pipeline.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
 
 /// A fixed-width scoped worker pool. Threads live only for the duration
-/// of one [`WorkerPool::run_mut`]/[`WorkerPool::map`] call; with one
-/// worker (or one item) everything runs inline on the caller's thread.
+/// of one [`WorkerPool::run_mut`]/[`WorkerPool::map`]/[`WorkerPool::pipeline`]
+/// call; for barrier calls with one worker (or one item) everything runs
+/// inline on the caller's thread.
+///
+/// ```
+/// use fsfl::exec::WorkerPool;
+///
+/// let pool = WorkerPool::new(4);
+/// let mut rows = vec![vec![1.0f32; 8]; 16];
+/// pool.run_mut(&mut rows, |i, row| row.iter_mut().for_each(|x| *x *= i as f32));
+/// assert_eq!(rows[3][0], 3.0);
+/// let squares = pool.map((0..10u32).collect::<Vec<_>>(), |_, x| x * x);
+/// assert_eq!(squares[7], 49);
+/// ```
 #[derive(Debug, Clone)]
 pub struct WorkerPool {
     workers: usize,
@@ -49,6 +77,7 @@ impl WorkerPool {
         Self { workers: 1 }
     }
 
+    /// The pool width actually in use (≥ 1).
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -102,11 +131,181 @@ impl WorkerPool {
             .map(|s| s.1.expect("map slot not produced"))
             .collect()
     }
+
+    /// Scoped job pipeline: run `body` on the calling thread with a
+    /// [`PipelineHandle`] that can [`submit`](PipelineHandle::submit)
+    /// owned work items to the pool and later [`take`](PipelineHandle::take)
+    /// each result back by ticket — in any order, while the calling
+    /// thread keeps doing its own (e.g. thread-affine compute) work in
+    /// between. `worker` runs on the pool threads and must be a pure
+    /// function of its item; results are keyed by ticket, so outputs are
+    /// identical for every pool width and every completion order.
+    ///
+    /// Workers exist only for the duration of this call. Jobs still
+    /// queued when `body` returns are finished and then discarded. A
+    /// panicking `worker` never deadlocks the pipeline: a blocked
+    /// [`take`](PipelineHandle::take) panics immediately (via a
+    /// worker-died marker sent while the panic unwinds) and the original
+    /// panic is re-raised when the scope joins.
+    ///
+    /// ```
+    /// use fsfl::exec::WorkerPool;
+    ///
+    /// let pool = WorkerPool::new(2);
+    /// let sum: u32 = pool.pipeline(
+    ///     |x: u32| x + 1,
+    ///     |h| {
+    ///         let tickets: Vec<usize> = (0..8).map(|x| h.submit(x)).collect();
+    ///         tickets.into_iter().map(|t| h.take(t)).sum()
+    ///     },
+    /// );
+    /// assert_eq!(sum, 36);
+    /// ```
+    pub fn pipeline<T, R, O, W, B>(&self, worker: W, body: B) -> O
+    where
+        T: Send,
+        R: Send,
+        W: Fn(T) -> R + Sync,
+        B: FnOnce(&mut PipelineHandle<'_, T, R>) -> O,
+    {
+        let (job_tx, job_rx) = mpsc::channel::<(usize, T)>();
+        let (res_tx, res_rx) = mpsc::channel::<PipeMsg<R>>();
+        let job_rx = Mutex::new(job_rx);
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                let job_rx = &job_rx;
+                let res_tx = res_tx.clone();
+                let worker = &worker;
+                s.spawn(move || loop {
+                    // The guard is released at the end of this statement,
+                    // so jobs execute unlocked.
+                    let job = job_rx.lock().expect("pipeline: job queue poisoned").recv();
+                    match job {
+                        Ok((ticket, item)) => {
+                            // If `worker` panics, the guard's Drop runs
+                            // during unwinding and tells the take() side a
+                            // result will never come — without it, other
+                            // workers' live senders would keep take()
+                            // blocked forever.
+                            let mut guard = PanicGuard {
+                                tx: &res_tx,
+                                armed: true,
+                            };
+                            let r = worker(item);
+                            guard.armed = false;
+                            drop(guard);
+                            if res_tx.send(PipeMsg::Done(ticket, r)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break, // submit side closed: drain done
+                    }
+                });
+            }
+            drop(res_tx);
+            let mut handle = PipelineHandle {
+                job_tx,
+                res_rx: &res_rx,
+                buf: Vec::new(),
+                claimed: Vec::new(),
+                next_ticket: 0,
+            };
+            body(&mut handle)
+            // `handle` (and with it the job sender) drops here, workers
+            // drain the queue and exit, then the scope joins them.
+        })
+    }
+}
+
+/// Internal pipeline result-channel protocol.
+enum PipeMsg<R> {
+    /// A finished job: (ticket, result).
+    Done(usize, R),
+    /// A worker died mid-job; its ticket will never resolve.
+    WorkerPanicked,
+}
+
+/// Sends [`PipeMsg::WorkerPanicked`] iff dropped while still armed —
+/// i.e. while a worker panic unwinds through a job.
+struct PanicGuard<'a, R> {
+    tx: &'a mpsc::Sender<PipeMsg<R>>,
+    armed: bool,
+}
+
+impl<R> Drop for PanicGuard<'_, R> {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.tx.send(PipeMsg::WorkerPanicked);
+        }
+    }
 }
 
 impl Default for WorkerPool {
+    /// Auto-sized pool (`WorkerPool::new(0)`).
     fn default() -> Self {
         Self::new(0)
+    }
+}
+
+/// Submit/take interface of one [`WorkerPool::pipeline`] invocation.
+///
+/// Tickets are assigned in submission order; results can be claimed in
+/// any order (out-of-order completions are buffered internally).
+pub struct PipelineHandle<'a, T, R> {
+    job_tx: mpsc::Sender<(usize, T)>,
+    res_rx: &'a mpsc::Receiver<PipeMsg<R>>,
+    /// Completed results whose ticket nobody asked for yet.
+    buf: Vec<(usize, R)>,
+    /// `claimed[ticket]` — guards take() against double claims (which
+    /// would otherwise block forever instead of failing fast).
+    claimed: Vec<bool>,
+    next_ticket: usize,
+}
+
+impl<T, R> PipelineHandle<'_, T, R> {
+    /// Enqueue one work item; returns the ticket to [`take`](Self::take)
+    /// its result with.
+    pub fn submit(&mut self, item: T) -> usize {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.claimed.push(false);
+        self.job_tx
+            .send((ticket, item))
+            .expect("pipeline: workers exited before submit");
+        ticket
+    }
+
+    /// Block until the result of `ticket` is available and return it.
+    ///
+    /// Panics if claimed twice, never submitted, or if a worker died
+    /// before producing it.
+    pub fn take(&mut self, ticket: usize) -> R {
+        assert!(
+            ticket < self.next_ticket,
+            "pipeline: ticket {ticket} was never submitted"
+        );
+        assert!(
+            !self.claimed[ticket],
+            "pipeline: ticket {ticket} claimed twice"
+        );
+        self.claimed[ticket] = true;
+        if let Some(pos) = self.buf.iter().position(|(t, _)| *t == ticket) {
+            return self.buf.swap_remove(pos).1;
+        }
+        loop {
+            match self.res_rx.recv() {
+                Ok(PipeMsg::Done(t, r)) => {
+                    if t == ticket {
+                        return r;
+                    }
+                    self.buf.push((t, r));
+                }
+                Ok(PipeMsg::WorkerPanicked) => {
+                    panic!("pipeline: a worker panicked; its result will never arrive")
+                }
+                Err(_) => panic!("pipeline: workers exited before producing a claimed result"),
+            }
+        }
     }
 }
 
@@ -152,5 +351,130 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert!(pool.workers() >= 1 && pool.workers() <= MAX_AUTO_WORKERS);
         assert_eq!(WorkerPool::serial().workers(), 1);
+    }
+
+    #[test]
+    fn pipeline_results_keyed_by_ticket_for_all_widths() {
+        for workers in [1, 2, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let out: Vec<u64> = pool.pipeline(
+                |x: u64| x.wrapping_mul(2654435761),
+                |h| {
+                    let tickets: Vec<usize> = (0..200u64).map(|x| h.submit(x)).collect();
+                    tickets.into_iter().map(|t| h.take(t)).collect()
+                },
+            );
+            let want: Vec<u64> = (0..200u64).map(|x| x.wrapping_mul(2654435761)).collect();
+            assert_eq!(out, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pipeline_take_out_of_submission_order() {
+        let pool = WorkerPool::new(4);
+        let (a, b, c) = pool.pipeline(
+            |x: u32| x * 10,
+            |h| {
+                let ta = h.submit(1);
+                let tb = h.submit(2);
+                let tc = h.submit(3);
+                // claim in reverse order: buffered completions must resolve
+                let c = h.take(tc);
+                let b = h.take(tb);
+                let a = h.take(ta);
+                (a, b, c)
+            },
+        );
+        assert_eq!((a, b, c), (10, 20, 30));
+    }
+
+    #[test]
+    fn pipeline_interleaved_submit_take() {
+        // The pipelined round shape: submit k, do local work, take k-1.
+        let pool = WorkerPool::new(2);
+        let out: Vec<usize> = pool.pipeline(
+            |x: usize| x + 100,
+            |h| {
+                let mut results = Vec::new();
+                let mut prev: Option<usize> = None;
+                for k in 0..20 {
+                    let t = h.submit(k);
+                    if let Some(p) = prev {
+                        results.push(h.take(p));
+                    }
+                    prev = Some(t);
+                }
+                results.push(h.take(prev.unwrap()));
+                results
+            },
+        );
+        let want: Vec<usize> = (100..120).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pipeline_discards_unclaimed_results() {
+        // body returning early must not deadlock or leak threads
+        let pool = WorkerPool::new(3);
+        let first = pool.pipeline(
+            |x: u32| x * 2,
+            |h| {
+                for x in 0..50 {
+                    h.submit(x);
+                }
+                h.take(0)
+            },
+        );
+        assert_eq!(first, 0);
+    }
+
+    #[test]
+    fn pipeline_empty_body_is_fine() {
+        let pool = WorkerPool::new(4);
+        let out = pool.pipeline(|x: u8| x, |_| 42u8);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn pipeline_take_rejects_double_claims_and_unknown_tickets() {
+        let pool = WorkerPool::new(2);
+        let double = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.pipeline(
+                |x: u32| x,
+                |h| {
+                    let t = h.submit(5);
+                    let v = h.take(t);
+                    let _ = h.take(t); // must panic, not hang
+                    v
+                },
+            )
+        }));
+        assert!(double.is_err(), "double claim was not rejected");
+        let unknown = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.pipeline(|x: u32| x, |h| h.take(7))
+        }));
+        assert!(unknown.is_err(), "unknown ticket was not rejected");
+    }
+
+    #[test]
+    fn pipeline_worker_panic_propagates_instead_of_deadlocking() {
+        // A panicking worker must fail the blocked take() (and re-raise
+        // at the scope join), never hang the calling thread.
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.pipeline(
+                |x: u32| {
+                    if x == 3 {
+                        panic!("boom");
+                    }
+                    x
+                },
+                |h| {
+                    let tickets: Vec<usize> = (0..8).map(|x| h.submit(x)).collect();
+                    tickets.into_iter().map(|t| h.take(t)).sum::<u32>()
+                },
+            )
+        }));
+        assert!(result.is_err(), "worker panic was swallowed");
     }
 }

@@ -23,7 +23,9 @@ use crate::model::params::Delta;
 use crate::model::{Group, ParamSet};
 use crate::runtime::{ModelRuntime, OptState};
 
+/// One federated client: its replicas, optimizer state and round logic.
 pub struct Client {
+    /// Global client id (stable across rounds and shards).
     pub id: usize,
     /// This client's replica of the global model state; only ever mutated
     /// by applying broadcast deltas (so server/client divergence is a bug,
@@ -36,7 +38,9 @@ pub struct Client {
     hat: ParamSet,
     wopt: OptState,
     sopt: OptState,
+    /// Error-accumulation state (Eq. 5) when the protocol enables it.
     pub residual: Option<Residual>,
+    /// Scale-factor learning-rate schedule (stepped once per batch).
     pub schedule: LrSchedule,
     train_idx: Vec<usize>,
     val_idx: Vec<usize>,
@@ -61,6 +65,7 @@ fn copy_scales(params: &ParamSet, scale_idx: &[usize], out: &mut Vec<Vec<f32>>) 
 }
 
 impl Client {
+    /// Create a client with its synced initial replica and data split.
     pub fn new(
         id: usize,
         init: ParamSet,

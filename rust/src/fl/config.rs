@@ -4,6 +4,7 @@
 use crate::compression::{QuantConfig, SparsifyMode, UpdateCodec};
 use crate::data::TaskKind;
 use crate::fl::schedule::ScheduleKind;
+use crate::fl::scheduler::ScheduleMode;
 use crate::runtime::Optimizer;
 
 /// How a client's update is compressed + whether scale training runs.
@@ -35,6 +36,7 @@ pub enum Protocol {
 }
 
 impl Protocol {
+    /// Every protocol, in the paper's Table 2 row order.
     pub const ALL: [Protocol; 6] = [
         Protocol::FedAvg,
         Protocol::FedAvgQ,
@@ -44,6 +46,7 @@ impl Protocol {
         Protocol::Fsfl,
     ];
 
+    /// Human-readable protocol name (Table 2 row label).
     pub fn name(self) -> &'static str {
         match self {
             Protocol::FedAvg => "FedAvg",
@@ -126,14 +129,21 @@ impl std::str::FromStr for Protocol {
 /// Full experiment description (one Fig. 2 curve / Table 2 cell).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Experiment name (used for log/CSV file naming).
     pub name: String,
+    /// Directory holding the AOT artifacts (`artifacts/<variant>/…`).
     pub artifacts_root: std::path::PathBuf,
+    /// Model variant (an `artifacts/` subdirectory, e.g. `tiny_cnn`).
     pub variant: String,
+    /// Synthetic task standing in for the paper's dataset.
     pub task: TaskKind,
+    /// Which Table 2 protocol row to run.
     pub protocol: Protocol,
     /// Dynamic (Fig. 2) or fixed-rate (Table 2) sparsification.
     pub sparsify: SparsifyMode,
+    /// Quantization step assignment (coarse/fine, Sec. 5.1).
     pub quant: QuantConfig,
+    /// Total client count.
     pub clients: usize,
     /// Communication rounds T.
     pub rounds: usize,
@@ -141,18 +151,28 @@ pub struct ExperimentConfig {
     pub local_epochs: usize,
     /// Scale-factor sub-epochs E (Algorithm 1).
     pub scale_epochs: usize,
+    /// Weight-training optimizer.
     pub optimizer: Optimizer,
+    /// Weight-training learning rate.
     pub lr: f32,
+    /// Scale-factor optimizer (paper Appendix B sweeps Adam vs SGD).
     pub scale_optimizer: Optimizer,
+    /// Scale-factor base learning rate.
     pub scale_lr: f32,
+    /// Scale-factor learning-rate schedule (Fig. 1).
     pub schedule: ScheduleKind,
     /// Compress the server→clients broadcast too (Fig. 2 VGG16 bidir).
     pub bidirectional: bool,
     /// Dirichlet alpha for non-IID splits; `None` → random IID split.
     pub dirichlet_alpha: Option<f64>,
+    /// Training samples per client.
     pub train_per_client: usize,
+    /// Validation samples per client (scale-factor selection).
     pub val_per_client: usize,
+    /// Central test-set size.
     pub test_samples: usize,
+    /// Master seed: datasets, splits, participation and client RNGs all
+    /// derive from it, so a config is exactly repeatable.
     pub seed: u64,
     /// Early-exit once the central model reaches this accuracy.
     pub target_accuracy: Option<f64>,
@@ -166,8 +186,20 @@ pub struct ExperimentConfig {
     pub warmup_steps: usize,
     /// Codec-plane worker pool width (encode/decode fan-out per round);
     /// `0` = auto (available parallelism), `1` = strictly serial. Any
-    /// width produces byte-identical bitstreams and metrics.
+    /// width produces byte-identical bitstreams and metrics. In sharded
+    /// deployments an explicit width applies per shard, while auto
+    /// divides the machine's parallelism across shards.
     pub codec_workers: usize,
+    /// Software-pipeline each round (client *k*'s codec work overlaps
+    /// client *k+1*'s compute; see `fl/scheduler.rs`). `false` = the
+    /// staged schedule. Outputs are byte-identical either way.
+    pub pipelined: bool,
+    /// Compute shards for `coordinator::run_experiment_sharded`: clients
+    /// are split round-robin over this many compute threads, each owning
+    /// its own PJRT client. `0`/`1` = single compute thread. The
+    /// in-process [`crate::fl::Experiment`] itself always runs one
+    /// shard; outputs are byte-identical for every shard count.
+    pub compute_shards: usize,
 }
 
 impl ExperimentConfig {
@@ -204,9 +236,21 @@ impl ExperimentConfig {
             residuals_override: None,
             warmup_steps: 0,
             codec_workers: 0,
+            pipelined: false,
+            compute_shards: 1,
         }
     }
 
+    /// The round schedule mode selected by [`Self::pipelined`].
+    pub fn schedule_mode(&self) -> ScheduleMode {
+        if self.pipelined {
+            ScheduleMode::Pipelined
+        } else {
+            ScheduleMode::Staged
+        }
+    }
+
+    /// Resolve the protocol preset, applying [`Self::residuals_override`].
     pub fn protocol_config(&self) -> ProtocolConfig {
         let mut p = self.protocol.config(self.sparsify, self.quant);
         if let Some(r) = self.residuals_override {

@@ -43,14 +43,22 @@ pub struct RoundLane {
     pub stream_w: Vec<u8>,
     /// Encoded S-update stream (empty unless a scale update was kept).
     pub stream_s: Vec<u8>,
+    /// Recycled codec buffers (see the scratch contract in
+    /// [`crate::compression`]).
     pub scratch: CodecScratch,
+    /// Size/occupancy statistics of the W encode.
     pub stats: EncodeStats,
+    /// Total upstream wire bytes this round (W + S streams).
     pub up_bytes: usize,
+    /// Whether the client kept a scale update (Algorithm 1 discard rule).
     pub scale_accepted: bool,
     has_w_stream: bool,
     has_s_stream: bool,
+    /// Mean training loss over this round's local batches.
     pub train_loss: f64,
+    /// Wall-clock milliseconds spent in local weight training.
     pub train_ms: u128,
+    /// Wall-clock milliseconds spent in the scale sub-epochs.
     pub scale_ms: u128,
     /// Codec-stage failure (decode of a malformed stream), surfaced back
     /// on the driver thread after the parallel stage joins.
@@ -58,6 +66,7 @@ pub struct RoundLane {
 }
 
 impl RoundLane {
+    /// Allocate a lane's buffers once; reuse it for every later round.
     pub fn new(manifest: Arc<Manifest>) -> Self {
         Self {
             client: usize::MAX,

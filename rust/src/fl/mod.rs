@@ -1,33 +1,45 @@
 //! The federated learning system: configuration, schedules, client/server
-//! roles, and the [`Experiment`] driver that runs a full FL process and
-//! produces a [`RunLog`].
+//! roles, the round [`scheduler`], and the [`Experiment`] driver that runs
+//! a full FL process and produces a [`RunLog`].
 //!
-//! # Round pipeline: compute plane × codec plane
+//! # Round pipeline: compute plane × codec plane × scheduler
 //!
-//! Every round is staged so that the **compute plane** (PJRT step
-//! execution — thread-affine, serial on the thread that owns the XLA
-//! client) and the **codec plane** (per-client sparsify → quantize →
-//! DeepCABAC encode, plus server-side decode — pure CPU, embarrassingly
-//! parallel across clients) never block each other's scaling:
+//! Every round consists of **compute plane** work (PJRT step execution —
+//! thread-affine, serial on the thread that owns the XLA client) and
+//! **codec plane** work (per-client sparsify → quantize → DeepCABAC
+//! encode, plus server-side decode — pure CPU, embarrassingly parallel
+//! across clients). The [`scheduler`] decides how the two interleave:
 //!
 //! ```text
-//! stage 1  compute  local weight training per participant      (serial)
-//! stage 2  codec    encode W updates                           (worker pool)
-//! stage 3  compute  residual bookkeeping + scale sub-epochs    (serial)
-//! stage 4  codec    encode S updates + wire decode + checksum  (worker pool)
-//! stage 5  control  metrics, FedAvg, broadcast, central eval   (serial)
+//! staged    stage 1  compute  local weight training per participant  (serial)
+//!           stage 2  codec    encode W updates                       (worker pool)
+//!           stage 3  compute  residual bookkeeping + scale epochs    (serial)
+//!           stage 4  codec    encode S + wire decode + checksum      (worker pool)
+//!           stage 5  control  metrics, FedAvg, broadcast, eval       (serial)
+//!
+//! pipelined client k's codec stages overlap client k+1's compute
+//!           stages (same stage 5); see `fl/scheduler.rs` for the
+//!           timeline diagram
 //! ```
 //!
 //! Codec work items are independent per client and deterministic, so
-//! bitstreams and `RunLog` metrics are **identical for every pool size**
-//! (pinned by `tests/integration_parallel.rs`). All per-round buffers
-//! live in recycled [`RoundLane`]s — the codec path allocates nothing in
-//! steady state.
+//! bitstreams and `RunLog` metrics are **identical for every pool size,
+//! both schedule modes, and every shard count** (pinned by
+//! `tests/integration_parallel.rs`). All per-round buffers live in
+//! recycled [`RoundLane`]s — the codec path allocates nothing in steady
+//! state (pipelined mode adds a handful of small queue/ticket
+//! allocations per round, never model-sized buffers).
+//!
+//! Multi-tenant scale: `coordinator::run_experiment_sharded` shards
+//! clients across N compute threads (one PJRT client per shard) and
+//! fans their lanes back into the same ordered reduction; see
+//! `ARCHITECTURE.md`.
 
 pub mod client;
 pub mod config;
 pub mod lane;
 pub mod schedule;
+pub mod scheduler;
 pub mod server;
 #[cfg(test)]
 mod tests;
@@ -36,7 +48,8 @@ pub use client::Client;
 pub use config::{ExperimentConfig, Protocol, ProtocolConfig};
 pub use lane::RoundLane;
 pub use schedule::{LrSchedule, ScheduleKind};
-pub use server::{EvalReport, Server};
+pub use scheduler::{ComputePlane, ScheduleMode};
+pub use server::{evaluate_params, EvalReport, Server};
 
 use anyhow::{anyhow, Result};
 
@@ -44,16 +57,22 @@ use crate::data::{batches, iid_split, Batch, Dataset, TaskSpec};
 use crate::exec::WorkerPool;
 use crate::metrics::{RoundMetrics, RunLog, ScaleStats};
 use crate::model::params::Delta;
-use crate::model::Group;
+use crate::model::{Group, ParamSet};
 use crate::runtime::{ModelRuntime, OptState, Runtime};
 
 /// A fully-wired FL experiment over one model variant + task + protocol.
 pub struct Experiment<'rt> {
+    /// The experiment description this instance was built from.
     pub cfg: ExperimentConfig,
+    /// Compiled step executables for the model variant (thread-affine).
     pub mr: ModelRuntime<'rt>,
+    /// Central server state (FedAvg accumulator + broadcast codec).
     pub server: Server,
+    /// All clients, indexed by client id.
     pub clients: Vec<Client>,
+    /// The pooled training data every client split indexes into.
     pub train_data: Dataset,
+    /// Central evaluation batches (fixed across rounds).
     pub test_batches: Vec<Batch>,
     /// Codec-plane worker pool (width from `cfg.codec_workers`).
     pool: WorkerPool,
@@ -68,80 +87,142 @@ pub struct Experiment<'rt> {
     order: Vec<usize>,
 }
 
+/// The deterministic substrate every FL deployment shape shares: task
+/// spec, datasets, client splits, and the (optionally warmed-up) initial
+/// model plus client set. Extracted from [`Experiment::build`] so the
+/// sharded coordinator constructs byte-identical state per shard —
+/// `keep` filters which client ids this process actually instantiates.
+pub(crate) struct ExperimentSetup {
+    pub train_data: Dataset,
+    pub test_batches: Vec<Batch>,
+    pub init: ParamSet,
+    /// The kept clients, ascending by (global) client id.
+    pub clients: Vec<Client>,
+}
+
+/// Build the shared experiment substrate. Everything here is a pure
+/// function of `cfg` (datasets, splits, schedules) plus the runtime's
+/// deterministic init/warmup, so two calls with the same `cfg` — in the
+/// same process or across shard threads — produce identical state.
+pub(crate) fn build_setup(
+    mr: &ModelRuntime,
+    cfg: &ExperimentConfig,
+    keep: impl Fn(usize) -> bool,
+) -> Result<ExperimentSetup> {
+    let man = mr.manifest.clone();
+    if man.classes != cfg.task.classes() {
+        return Err(anyhow!(
+            "variant {} has {} classes but task needs {}",
+            cfg.variant,
+            man.classes,
+            cfg.task.classes()
+        ));
+    }
+    let (h, _w, c) = (man.input[0], man.input[1], man.input[2]);
+    let spec = TaskSpec::new(cfg.task, h, c, cfg.seed.wrapping_add(1));
+
+    let per_client = cfg.train_per_client + cfg.val_per_client;
+    let train_data = Dataset::generate(&spec, per_client * cfg.clients, 0);
+    let test_data = Dataset::generate(&spec, cfg.test_samples, 1);
+    let test_order: Vec<usize> = (0..test_data.len()).collect();
+    let test_batches = batches(&test_data, &test_order, man.batch);
+
+    let val_frac = cfg.val_per_client as f64 / per_client as f64;
+    let split = match cfg.dirichlet_alpha {
+        Some(alpha) => {
+            crate::data::dirichlet_split(&train_data, cfg.clients, alpha, val_frac, cfg.seed)
+        }
+        None => iid_split(&train_data, cfg.clients, val_frac, cfg.seed),
+    };
+
+    let mut init = mr.init_params()?;
+
+    // Optional warmup (pretraining substitute): a few server-side steps
+    // on held-out data so FL starts from a non-random model.
+    if cfg.warmup_steps > 0 {
+        let warm = Dataset::generate(&spec, cfg.warmup_steps * man.batch, 2);
+        let order: Vec<usize> = (0..warm.len()).collect();
+        let mut wopt = OptState::zeros(&man, Group::Weight);
+        for b in batches(&warm, &order, man.batch) {
+            mr.train_step(&mut init, &mut wopt, cfg.optimizer, cfg.lr, &b.x, &b.y)?;
+        }
+    }
+
+    let pcfg = cfg.protocol_config();
+    let batches_per_epoch = (cfg.train_per_client / man.batch).max(1);
+    let total_scale_steps = cfg.rounds * cfg.scale_epochs * batches_per_epoch;
+    let period = cfg.scale_epochs * batches_per_epoch;
+
+    let clients: Vec<Client> = split
+        .train
+        .iter()
+        .zip(&split.val)
+        .enumerate()
+        .filter(|(id, _)| keep(*id))
+        .map(|(id, (tr, va))| {
+            Client::new(
+                id,
+                init.clone(),
+                tr.clone(),
+                va.clone(),
+                LrSchedule::new(cfg.schedule, cfg.scale_lr, total_scale_steps, period),
+                pcfg.residuals,
+                cfg.seed ^ (id as u64 + 1),
+            )
+        })
+        .collect();
+
+    Ok(ExperimentSetup {
+        train_data,
+        test_batches,
+        init,
+        clients,
+    })
+}
+
+/// [`scheduler::ComputePlane`] over a (possibly sharded) client set:
+/// slot-ordered training and scale sub-epochs on the thread that owns
+/// the PJRT runtime. `clients` holds the locally-instantiated clients of
+/// one shard under round-robin ownership, so global client `ci` lives at
+/// local index `ci / shards`; the single-process [`Experiment`] is the
+/// `shards == 1` case, where that mapping is the identity.
+pub(crate) struct ExperimentCompute<'a, 'rt> {
+    pub mr: &'a ModelRuntime<'rt>,
+    pub clients: &'a mut [Client],
+    /// Total compute-shard count (1 = unsharded).
+    pub shards: usize,
+    pub train_data: &'a Dataset,
+    pub cfg: &'a ExperimentConfig,
+    pub pcfg: &'a ProtocolConfig,
+}
+
+impl ComputePlane for ExperimentCompute<'_, '_> {
+    fn train(&mut self, lane: &mut RoundLane) -> Result<()> {
+        let local = lane.client / self.shards;
+        self.clients[local].train_round(self.mr, self.train_data, self.cfg, lane)
+    }
+
+    fn scale(&mut self, lane: &mut RoundLane) -> Result<()> {
+        let local = lane.client / self.shards;
+        self.clients[local].scale_round(self.mr, self.train_data, self.cfg, self.pcfg, lane)
+    }
+}
+
 impl<'rt> Experiment<'rt> {
     /// Build everything: runtime artifacts, synthetic task, client splits,
     /// initial synchronization (server and clients share init.bin).
     pub fn build(rt: &'rt Runtime, cfg: ExperimentConfig) -> Result<Self> {
         let mr = ModelRuntime::open(rt, &cfg.artifacts_root, &cfg.variant)?;
+        let setup = build_setup(&mr, &cfg, |_| true)?;
         let man = mr.manifest.clone();
-        if man.classes != cfg.task.classes() {
-            return Err(anyhow!(
-                "variant {} has {} classes but task needs {}",
-                cfg.variant,
-                man.classes,
-                cfg.task.classes()
-            ));
-        }
-        let (h, _w, c) = (man.input[0], man.input[1], man.input[2]);
-        let spec = TaskSpec::new(cfg.task, h, c, cfg.seed.wrapping_add(1));
-
-        let per_client = cfg.train_per_client + cfg.val_per_client;
-        let train_data = Dataset::generate(&spec, per_client * cfg.clients, 0);
-        let test_data = Dataset::generate(&spec, cfg.test_samples, 1);
-        let test_order: Vec<usize> = (0..test_data.len()).collect();
-        let test_batches = batches(&test_data, &test_order, man.batch);
-
-        let val_frac = cfg.val_per_client as f64 / per_client as f64;
-        let split = match cfg.dirichlet_alpha {
-            Some(alpha) => {
-                crate::data::dirichlet_split(&train_data, cfg.clients, alpha, val_frac, cfg.seed)
-            }
-            None => iid_split(&train_data, cfg.clients, val_frac, cfg.seed),
-        };
-
-        let mut init = mr.init_params()?;
-
-        // Optional warmup (pretraining substitute): a few server-side steps
-        // on held-out data so FL starts from a non-random model.
-        if cfg.warmup_steps > 0 {
-            let warm = Dataset::generate(&spec, cfg.warmup_steps * man.batch, 2);
-            let order: Vec<usize> = (0..warm.len()).collect();
-            let mut wopt = OptState::zeros(&man, Group::Weight);
-            for b in batches(&warm, &order, man.batch) {
-                mr.train_step(&mut init, &mut wopt, cfg.optimizer, cfg.lr, &b.x, &b.y)?;
-            }
-        }
-
-        let pcfg = cfg.protocol_config();
-        let batches_per_epoch = (cfg.train_per_client / man.batch).max(1);
-        let total_scale_steps = cfg.rounds * cfg.scale_epochs * batches_per_epoch;
-        let period = cfg.scale_epochs * batches_per_epoch;
-
-        let clients: Vec<Client> = split
-            .train
-            .iter()
-            .zip(&split.val)
-            .enumerate()
-            .map(|(id, (tr, va))| {
-                Client::new(
-                    id,
-                    init.clone(),
-                    tr.clone(),
-                    va.clone(),
-                    LrSchedule::new(cfg.schedule, cfg.scale_lr, total_scale_steps, period),
-                    pcfg.residuals,
-                    cfg.seed ^ (id as u64 + 1),
-                )
-            })
-            .collect();
 
         // Participant count is constant given the config; size the lane
         // set once so rounds recycle buffers instead of allocating.
-        let n = clients.len();
+        let n = setup.clients.len();
         let take = ((cfg.participation * n as f64).round() as usize).clamp(1, n);
         let lanes = (0..take).map(|_| RoundLane::new(man.clone())).collect();
 
-        let server = Server::new(init, cfg.downstream_codec());
+        let server = Server::new(setup.init, cfg.downstream_codec());
         Ok(Self {
             pool: WorkerPool::new(cfg.codec_workers),
             lanes,
@@ -152,9 +233,9 @@ impl<'rt> Experiment<'rt> {
             cfg,
             mr,
             server,
-            clients,
-            train_data,
-            test_batches,
+            clients: setup.clients,
+            train_data: setup.train_data,
+            test_batches: setup.test_batches,
         })
     }
 
@@ -196,70 +277,42 @@ impl<'rt> Experiment<'rt> {
         // Partial participation: a deterministic per-round subset.
         let n = self.clients.len();
         let take = self.lanes.len();
-        self.order.clear();
-        self.order.extend(0..n);
-        if take < n {
-            let mut rng = crate::data::XorShiftRng::new(self.cfg.seed ^ (t as u64 + 0xF00D));
-            rng.shuffle(&mut self.order);
-        }
+        scheduler::select_participants(self.cfg.seed, t, n, take, &mut self.order);
 
-        // ---- stage 1 · compute plane: local weight training (serial —
-        //      the PJRT executables are thread-affine) ----
-        for k in 0..take {
-            let ci = self.order[k];
-            self.lanes[k].begin(ci);
-            self.clients[ci].train_round(&self.mr, &self.train_data, &self.cfg, &mut self.lanes[k])?;
-        }
-
-        // ---- stage 2 · codec plane: sparsify + quantize + encode the W
-        //      updates, fanned out across the worker pool ----
+        // ---- stages 1–4 · the scheduler interleaves compute plane and
+        //      codec plane per `cfg.pipelined` (byte-identical outputs
+        //      either way) ----
+        let mode = self.cfg.schedule_mode();
         {
-            let update_idx = &self.update_idx;
-            self.pool.run_mut(&mut self.lanes[..take], |_, lane| {
-                lane.encode_upstream(pcfg, update_idx)
-            });
+            let mut compute = ExperimentCompute {
+                mr: &self.mr,
+                clients: &mut self.clients,
+                shards: 1,
+                train_data: &self.train_data,
+                cfg: &self.cfg,
+                pcfg,
+            };
+            scheduler::run_round(
+                mode,
+                &self.pool,
+                &mut compute,
+                &mut self.lanes,
+                &self.order,
+                pcfg,
+                &self.update_idx,
+                &self.scale_idx,
+            )?;
         }
-
-        // ---- stage 3 · compute plane: residual bookkeeping + scale
-        //      sub-epochs on Ŵ = W + Δ̂ (serial) ----
-        for k in 0..take {
-            let ci = self.lanes[k].client;
-            self.clients[ci].scale_round(&self.mr, &self.train_data, &self.cfg, pcfg, &mut self.lanes[k])?;
-        }
-
-        // ---- stage 4 · codec plane: encode S streams + decode the actual
-        //      bitstreams server-side (wire-path fidelity), in parallel ----
-        {
-            let scale_idx = &self.scale_idx;
-            self.pool.run_mut(&mut self.lanes[..take], |_, lane| {
-                lane.finish_round(pcfg, scale_idx)
-            });
-        }
-        for lane in &mut self.lanes[..take] {
+        for lane in &mut self.lanes {
             if let Some(e) = lane.error.take() {
                 return Err(e);
             }
         }
 
         // ---- stage 5 · control plane: metrics, FedAvg, broadcast, eval ----
-        let mut sparsity_sum = 0.0;
-        let mut rows_sum = 0.0;
-        for lane in &self.lanes[..take] {
-            m.up_bytes += lane.up_bytes;
-            m.train_ms += lane.train_ms;
-            m.scale_ms += lane.scale_ms;
-            m.scale_accepted += lane.scale_accepted as usize;
-            let sp = lane.update.sparsity_of(&self.update_idx);
-            m.client_sparsity.push(sp);
-            sparsity_sum += sp;
-            if lane.stats.rows_total > 0 {
-                rows_sum += lane.stats.rows_skipped as f64 / lane.stats.rows_total as f64;
-            }
-        }
-        m.update_sparsity = sparsity_sum / take as f64;
-        m.rows_skipped = rows_sum / take as f64;
+        scheduler::collect_lane_metrics(&mut m, self.lanes.iter(), &self.update_idx);
 
-        let updates: Vec<&Delta> = self.lanes[..take].iter().map(|l| &l.decoded).collect();
+        let updates: Vec<&Delta> = self.lanes.iter().map(|l| &l.decoded).collect();
         let down_bytes_each = self.server.aggregate_into(&updates, &mut self.broadcast);
         m.down_bytes = down_bytes_each * self.clients.len();
         for client in &mut self.clients {

@@ -3,6 +3,7 @@
 //! restarts fire at the start of each main training epoch t, right before
 //! the scale sub-epochs.
 
+/// Which learning-rate curve drives the scale sub-epochs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScheduleKind {
     /// Constant base learning rate (the "no schedule" Fig. 2 configs).
@@ -25,10 +26,14 @@ impl std::str::FromStr for ScheduleKind {
     }
 }
 
+/// A stateful learning-rate schedule (one per client).
 #[derive(Debug, Clone)]
 pub struct LrSchedule {
+    /// Curve shape.
     pub kind: ScheduleKind,
+    /// Peak learning rate.
     pub base_lr: f32,
+    /// Floor learning rate (0 by default).
     pub min_lr: f32,
     /// Total batch-steps across the whole FL process (Linear ramp length).
     pub total_steps: usize,
@@ -39,6 +44,7 @@ pub struct LrSchedule {
 }
 
 impl LrSchedule {
+    /// Build a schedule; step counts are clamped to at least 1.
     pub fn new(kind: ScheduleKind, base_lr: f32, total_steps: usize, period_steps: usize) -> Self {
         Self {
             kind,
@@ -59,6 +65,7 @@ impl LrSchedule {
         lr
     }
 
+    /// Learning rate for the current step without advancing.
     pub fn peek(&self) -> f32 {
         match self.kind {
             ScheduleKind::Const => self.base_lr,
@@ -81,6 +88,7 @@ impl LrSchedule {
         self.period_step = 0;
     }
 
+    /// Batch-steps taken since construction.
     pub fn global_step(&self) -> usize {
         self.global_step
     }

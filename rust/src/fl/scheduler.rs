@@ -1,0 +1,340 @@
+//! Round scheduler: how one FL round's compute-plane and codec-plane
+//! work is ordered across threads.
+//!
+//! The scheduler owns three decisions, all behind one entry point
+//! ([`run_round`]):
+//!
+//! * **Participant selection** ([`select_participants`]) — the
+//!   deterministic per-round subset under partial participation. One
+//!   shared implementation so the single-process [`crate::fl::Experiment`]
+//!   and the sharded coordinator can never diverge.
+//! * **Stage interleaving** ([`ScheduleMode`]) — `Staged` runs the four
+//!   round stages back to back (compute, codec, compute, codec; PR 1
+//!   behavior), while `Pipelined` software-pipelines across clients:
+//!   client *k*'s sparsify → quantize → encode (and later its
+//!   encode-S + wire decode) executes on the [`WorkerPool`] while client
+//!   *k+1* trains on the calling thread. The compute plane stays on the
+//!   caller because PJRT executables are thread-affine.
+//! * **Lane ownership** — each participant owns exactly one
+//!   [`RoundLane`] for the whole round. In pipelined mode the lane
+//!   *moves* into the codec job and back (no sharing, no locks), which
+//!   is what makes the overlap race-free by construction.
+//!
+//! ```text
+//! staged      compute:  T0 T1 T2 T3 ............ S0 S1 S2 S3
+//!             codec:                E0 E1 E2 E3              F0 F1 F2 F3
+//!
+//! pipelined   compute:  T0 T1 T2 T3 S0 S1 S2 S3
+//!             codec:       E0 E1 E2 E3 F0 F1 F2 F3
+//!                          (T = train, E = encode W, S = scale epochs,
+//!                           F = encode S + wire decode)
+//! ```
+//!
+//! **Determinism invariant.** Every codec stage is a pure function of
+//! its lane, and the compute stages run in slot order on one thread in
+//! both modes, so bitstreams and `RunLog` metrics are byte-identical
+//! for every [`ScheduleMode`], every pool width, and every shard count
+//! (pinned by `tests/integration_parallel.rs`). Server aggregation
+//! consumes lanes in slot order — an *ordered reduction* — which is why
+//! sharded fan-in goes through [`fan_in`] instead of arrival order.
+//!
+//! The compute side is abstracted as [`ComputePlane`] so the scheduler
+//! can be driven by the real PJRT-backed clients, by a per-shard client
+//! subset (see `coordinator::run_experiment_sharded`), or by synthetic
+//! compute in tests and benches.
+
+use anyhow::Result;
+
+use crate::data::XorShiftRng;
+use crate::exec::WorkerPool;
+use crate::fl::config::ProtocolConfig;
+use crate::fl::lane::RoundLane;
+use crate::metrics::RoundMetrics;
+
+/// How the round scheduler interleaves compute-plane and codec-plane
+/// work. Both modes produce byte-identical outputs; they differ only in
+/// wall-clock overlap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScheduleMode {
+    /// Four back-to-back stages: all trains, all W encodes, all scale
+    /// sub-epochs, all S encodes + wire decodes (PR 1 behavior).
+    #[default]
+    Staged,
+    /// Software pipelining across clients: codec work for client *k*
+    /// overlaps compute for client *k+1* via [`WorkerPool::pipeline`].
+    Pipelined,
+}
+
+/// The compute-plane half of one round, abstracted over who owns the
+/// clients. Implementations must be deterministic per client: the
+/// scheduler may reorder *codec* work freely, but it always invokes
+/// `train`/`scale` in slot order on the calling thread.
+pub trait ComputePlane {
+    /// Stage 1 for one participant: local weight training + raw
+    /// differential update (with residual injected) into `lane.raw`.
+    /// `lane.client` identifies the participant.
+    fn train(&mut self, lane: &mut RoundLane) -> Result<()>;
+
+    /// Stage 3 for one participant: residual bookkeeping + scale
+    /// sub-epochs; stages the S-only delta in `lane.sdelta` and sets
+    /// `lane.scale_accepted` when a scale update is kept.
+    fn scale(&mut self, lane: &mut RoundLane) -> Result<()>;
+}
+
+/// Deterministic per-round participant selection under partial
+/// participation. Fills `order` with the participating client ids, one
+/// per round slot (`order.len() == take` afterwards). With full
+/// participation (`take == clients`) the order is the identity; with a
+/// subset it is a seeded shuffle of all clients truncated to `take` —
+/// exactly the PR 1 behavior, now shared between the single-process
+/// experiment and the sharded coordinator.
+pub fn select_participants(
+    seed: u64,
+    round: usize,
+    clients: usize,
+    take: usize,
+    order: &mut Vec<usize>,
+) {
+    order.clear();
+    order.extend(0..clients);
+    if take < clients {
+        let mut rng = XorShiftRng::new(seed ^ (round as u64 + 0xF00D));
+        rng.shuffle(order);
+    }
+    order.truncate(take);
+}
+
+/// Static shard ownership: client `client` trains on shard
+/// `client % shards`. Round-robin keeps shard loads balanced for every
+/// contiguous client-id range and makes the local index computable as
+/// `client / shards`.
+pub fn shard_of(client: usize, shards: usize) -> usize {
+    client % shards.max(1)
+}
+
+/// Ordered fan-in reduction for sharded rounds: merge per-shard lane
+/// sets (each tagged with its global round slot) back into slot order,
+/// so downstream aggregation and metrics see exactly the order a
+/// single-shard round would produce. Slot tags are kept so the caller
+/// can route each lane back to its owning shard afterwards.
+pub fn fan_in(mut parts: Vec<(usize, RoundLane)>) -> Vec<(usize, RoundLane)> {
+    parts.sort_by_key(|(slot, _)| *slot);
+    parts
+}
+
+/// Run the compute + codec stages of one round over `lanes` (one lane
+/// per participant; `order[k]` is slot `k`'s client id). On return every
+/// lane holds its encoded streams, the server-side decode and the round
+/// bookkeeping; codec-stage failures are parked in `lane.error` for the
+/// caller to surface. Compute errors abort (pipelined mode still drains
+/// in-flight codec jobs first so no lane is lost).
+pub fn run_round<C: ComputePlane>(
+    mode: ScheduleMode,
+    pool: &WorkerPool,
+    compute: &mut C,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    update_idx: &[usize],
+    scale_idx: &[usize],
+) -> Result<()> {
+    assert_eq!(
+        lanes.len(),
+        order.len(),
+        "scheduler: one recycled lane per participant"
+    );
+    match mode {
+        ScheduleMode::Staged => {
+            run_staged(pool, compute, lanes, order, pcfg, update_idx, scale_idx)
+        }
+        ScheduleMode::Pipelined => {
+            run_pipelined(pool, compute, lanes, order, pcfg, update_idx, scale_idx)
+        }
+    }
+}
+
+/// PR 1's staged schedule: barrier between every stage.
+fn run_staged<C: ComputePlane>(
+    pool: &WorkerPool,
+    compute: &mut C,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    update_idx: &[usize],
+    scale_idx: &[usize],
+) -> Result<()> {
+    // stage 1 · compute: local weight training, serial in slot order
+    for (k, lane) in lanes.iter_mut().enumerate() {
+        lane.begin(order[k]);
+        compute.train(lane)?;
+    }
+    // stage 2 · codec: encode W updates, fanned out
+    pool.run_mut(&mut lanes[..], |_, lane| {
+        lane.encode_upstream(pcfg, update_idx)
+    });
+    // stage 3 · compute: residuals + scale sub-epochs, serial
+    for lane in lanes.iter_mut() {
+        compute.scale(lane)?;
+    }
+    // stage 4 · codec: encode S streams + wire decode, fanned out
+    pool.run_mut(&mut lanes[..], |_, lane| lane.finish_round(pcfg, scale_idx));
+    Ok(())
+}
+
+/// The software-pipelined schedule: lanes move into owned codec jobs on
+/// the pool while the calling thread keeps training/scaling later slots.
+fn run_pipelined<C: ComputePlane>(
+    pool: &WorkerPool,
+    compute: &mut C,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    update_idx: &[usize],
+    scale_idx: &[usize],
+) -> Result<()> {
+    /// One owned codec job: the lane travels with its stage tag.
+    enum Job {
+        Encode(RoundLane),
+        Finish(RoundLane),
+    }
+
+    let take = order.len();
+    let mut slots: Vec<Option<RoundLane>> = lanes.drain(..).map(Some).collect();
+    let mut enc_tickets = vec![0usize; take];
+    let mut fin_tickets = vec![0usize; take];
+    // Compute errors are buffered (not early-returned) so every lane
+    // still flows through both codec hops and lands back in its slot;
+    // codec work on a stale lane is deterministic and harmless.
+    let mut err: Option<anyhow::Error> = None;
+
+    pool.pipeline(
+        |job: Job| match job {
+            Job::Encode(mut lane) => {
+                lane.encode_upstream(pcfg, update_idx);
+                Job::Encode(lane)
+            }
+            Job::Finish(mut lane) => {
+                lane.finish_round(pcfg, scale_idx);
+                Job::Finish(lane)
+            }
+        },
+        |h| {
+            // Stages 1+2 interleaved: encode slot k overlaps train k+1…
+            for k in 0..take {
+                let mut lane = slots[k].take().expect("lane taken twice");
+                lane.begin(order[k]);
+                if err.is_none() {
+                    if let Err(e) = compute.train(&mut lane) {
+                        err = Some(e);
+                    }
+                }
+                enc_tickets[k] = h.submit(Job::Encode(lane));
+            }
+            // Stages 3+4 interleaved: finish slot k overlaps scale k+1…
+            for k in 0..take {
+                let mut lane = match h.take(enc_tickets[k]) {
+                    Job::Encode(lane) => lane,
+                    Job::Finish(_) => unreachable!("encode ticket yielded finish job"),
+                };
+                if err.is_none() {
+                    if let Err(e) = compute.scale(&mut lane) {
+                        err = Some(e);
+                    }
+                }
+                fin_tickets[k] = h.submit(Job::Finish(lane));
+            }
+            // Collect every lane back into its slot.
+            for k in 0..take {
+                let lane = match h.take(fin_tickets[k]) {
+                    Job::Finish(lane) => lane,
+                    Job::Encode(_) => unreachable!("finish ticket yielded encode job"),
+                };
+                slots[k] = Some(lane);
+            }
+        },
+    );
+
+    lanes.extend(
+        slots
+            .into_iter()
+            .map(|s| s.expect("lane lost in pipeline")),
+    );
+    match err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Stage-5 per-lane metric accumulation, shared between the
+/// single-process round loop and the sharded coordinator so both
+/// produce identical [`RoundMetrics`]. Lanes must be supplied in slot
+/// order (float accumulation order is part of the determinism
+/// invariant).
+pub fn collect_lane_metrics<'a>(
+    m: &mut RoundMetrics,
+    lanes: impl IntoIterator<Item = &'a RoundLane>,
+    update_idx: &[usize],
+) {
+    let mut take = 0usize;
+    let mut sparsity_sum = 0.0;
+    let mut rows_sum = 0.0;
+    for lane in lanes {
+        take += 1;
+        m.up_bytes += lane.up_bytes;
+        m.train_ms += lane.train_ms;
+        m.scale_ms += lane.scale_ms;
+        m.scale_accepted += lane.scale_accepted as usize;
+        let sp = lane.update.sparsity_of(update_idx);
+        m.client_sparsity.push(sp);
+        sparsity_sum += sp;
+        if lane.stats.rows_total > 0 {
+            rows_sum += lane.stats.rows_skipped as f64 / lane.stats.rows_total as f64;
+        }
+    }
+    if take > 0 {
+        m.update_sparsity = sparsity_sum / take as f64;
+        m.rows_skipped = rows_sum / take as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_is_identity_order() {
+        let mut order = Vec::new();
+        select_participants(7, 3, 5, 5, &mut order);
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn partial_participation_is_seeded_and_truncated() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        select_participants(7, 3, 10, 4, &mut a);
+        select_participants(7, 3, 10, 4, &mut b);
+        assert_eq!(a, b, "same seed+round must select the same subset");
+        assert_eq!(a.len(), 4);
+        // a valid subset: distinct client ids in range
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        assert!(sorted.iter().all(|&ci| ci < 10));
+        // recycled buffer: contents fully replaced
+        select_participants(7, 3, 6, 6, &mut a);
+        assert_eq!(a, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shard_assignment_round_robin() {
+        assert_eq!(shard_of(0, 3), 0);
+        assert_eq!(shard_of(1, 3), 1);
+        assert_eq!(shard_of(5, 3), 2);
+        assert_eq!(shard_of(9, 3), 0);
+        // degenerate shard counts never divide by zero
+        assert_eq!(shard_of(4, 0), 0);
+        assert_eq!(shard_of(4, 1), 0);
+    }
+}

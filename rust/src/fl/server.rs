@@ -18,8 +18,11 @@ use crate::model::params::Delta;
 use crate::model::ParamSet;
 use crate::runtime::ModelRuntime;
 
+/// The central FL server: model state + aggregation machinery.
 pub struct Server {
+    /// The central model (every synced client replica equals this).
     pub params: ParamSet,
+    /// Optional server→client broadcast codec (bidirectional setups).
     pub downstream: Option<UpdateCodec>,
     update_idx: Vec<usize>,
     /// Recycled FedAvg accumulator.
@@ -38,6 +41,8 @@ pub struct AggregateOutput {
 }
 
 impl Server {
+    /// Wrap the initial model state; `downstream` enables bidirectional
+    /// (server→client) compression of the broadcast.
     pub fn new(params: ParamSet, downstream: Option<UpdateCodec>) -> Self {
         let update_idx = params.manifest.update_indices();
         let avg = Delta::zeros(params.manifest.clone());
@@ -100,42 +105,55 @@ impl Server {
     /// Central-model evaluation: loss, top-1 accuracy and (via predictions)
     /// binary F1 for 2-class tasks.
     pub fn evaluate(&self, mr: &ModelRuntime, test: &[Batch]) -> Result<EvalReport> {
-        let mut loss = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut total = 0usize;
-        let mut confusion = Confusion::default();
-        let classes = self.params.manifest.classes;
-        for b in test {
-            let out = mr.eval_step(&self.params, &b.x, &b.y)?;
-            loss += out.loss as f64 * b.size as f64;
-            correct += out.correct as f64;
-            total += b.size;
-            if classes == 2 {
-                let preds = mr.predict_step(&self.params, &b.x)?;
-                for (bi, &p) in preds.iter().enumerate() {
-                    let label = b.y[bi * classes..(bi + 1) * classes]
-                        .iter()
-                        .position(|&v| v == 1.0)
-                        .unwrap_or(0);
-                    confusion.add(p as usize, label, 0);
-                }
-            }
-        }
-        Ok(EvalReport {
-            loss: if total == 0 { 0.0 } else { loss / total as f64 },
-            accuracy: if total == 0 {
-                0.0
-            } else {
-                correct / total as f64
-            },
-            f1: confusion.f1(),
-        })
+        evaluate_params(mr, &self.params, test)
     }
 }
 
+/// Central-model evaluation of an arbitrary parameter set. A free
+/// function (rather than a [`Server`] method) because in sharded
+/// deployments evaluation runs on whichever compute thread owns a PJRT
+/// runtime — against its synced client replica — while the server state
+/// lives on the coordinator thread.
+pub fn evaluate_params(mr: &ModelRuntime, params: &ParamSet, test: &[Batch]) -> Result<EvalReport> {
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    let mut confusion = Confusion::default();
+    let classes = params.manifest.classes;
+    for b in test {
+        let out = mr.eval_step(params, &b.x, &b.y)?;
+        loss += out.loss as f64 * b.size as f64;
+        correct += out.correct as f64;
+        total += b.size;
+        if classes == 2 {
+            let preds = mr.predict_step(params, &b.x)?;
+            for (bi, &p) in preds.iter().enumerate() {
+                let label = b.y[bi * classes..(bi + 1) * classes]
+                    .iter()
+                    .position(|&v| v == 1.0)
+                    .unwrap_or(0);
+                confusion.add(p as usize, label, 0);
+            }
+        }
+    }
+    Ok(EvalReport {
+        loss: if total == 0 { 0.0 } else { loss / total as f64 },
+        accuracy: if total == 0 {
+            0.0
+        } else {
+            correct / total as f64
+        },
+        f1: confusion.f1(),
+    })
+}
+
+/// Central-model quality after one round.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EvalReport {
+    /// Mean test loss.
     pub loss: f64,
+    /// Top-1 test accuracy.
     pub accuracy: f64,
+    /// Binary F1 (0.0 for tasks with more than two classes).
     pub f1: f64,
 }

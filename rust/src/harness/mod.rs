@@ -43,16 +43,19 @@ fn run_and_save(rt: &Runtime, cfg: ExperimentConfig, out: &Path) -> Result<RunLo
 // Fig. 1 — learning-rate schedules
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Fig. 1 harness.
 #[derive(Debug)]
 pub struct Fig1Args {
     /// Main training epochs |T|.
     pub epochs: usize,
     /// Scheduler steps (batches) per epoch.
     pub steps_per_epoch: usize,
+    /// Peak learning rate.
     pub base_lr: f32,
 }
 
 impl Fig1Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             epochs: f.get_or("epochs", 15)?,
@@ -62,6 +65,7 @@ impl Fig1Args {
     }
 }
 
+/// Fig. 1: the three scale-LR schedules over the whole FL process.
 pub fn fig1(out: &Path, a: Fig1Args) -> Result<()> {
     let total = a.epochs * a.steps_per_epoch;
     let mut rows = Vec::new();
@@ -100,8 +104,10 @@ pub fn fig1(out: &Path, a: Fig1Args) -> Result<()> {
 // Fig. 2 — accuracy vs cumulative transmitted data per configuration
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Fig. 2 harness.
 #[derive(Debug)]
 pub struct Fig2Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
     /// Model variant (paper panels: vgg11_thin, resnet8, mobilenet_tiny,
     /// vgg16_head / vgg16_partial).
@@ -112,12 +118,16 @@ pub struct Fig2Args {
     pub sgd: bool,
     /// Bidirectional compression (paper's VGG16 Chest X-Ray panel).
     pub bidirectional: bool,
+    /// Client count.
     pub clients: usize,
+    /// Round-count override.
     pub rounds: Option<usize>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Fig2Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -140,6 +150,7 @@ fn task_from(s: &str) -> TaskKind {
     }
 }
 
+/// Fig. 2: accuracy vs cumulative transmitted data per configuration.
 pub fn fig2(artifacts: &Path, out: &Path, a: Fig2Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variant = a.variant.clone().unwrap_or_else(|| {
@@ -218,15 +229,21 @@ pub fn fig2(artifacts: &Path, out: &Path, a: Fig2Args) -> Result<()> {
 // Fig. 3 — scale-factor statistics at three depths
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Fig. 3 harness.
 #[derive(Debug)]
 pub struct Fig3Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
+    /// Model-variant override.
     pub variant: Option<String>,
+    /// Round-count override.
     pub rounds: Option<usize>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Fig3Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -237,6 +254,7 @@ impl Fig3Args {
     }
 }
 
+/// Fig. 3: per-layer scale-factor statistics over rounds.
 pub fn fig3(artifacts: &Path, out: &Path, a: Fig3Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variant = a
@@ -307,15 +325,21 @@ pub fn fig3(artifacts: &Path, out: &Path, a: Fig3Args) -> Result<()> {
 // Fig. 4 — ΔW sparsity per epoch, scaled vs unscaled (2 clients)
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Fig. 4 harness.
 #[derive(Debug)]
 pub struct Fig4Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
+    /// Model-variant override.
     pub variant: Option<String>,
+    /// Round-count override.
     pub rounds: Option<usize>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Fig4Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -326,6 +350,7 @@ impl Fig4Args {
     }
 }
 
+/// Fig. 4: per-client ΔW sparsity per round, scaled vs unscaled.
 pub fn fig4(artifacts: &Path, out: &Path, a: Fig4Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variant = a
@@ -383,16 +408,23 @@ pub fn fig4(artifacts: &Path, out: &Path, a: Fig4Args) -> Result<()> {
 // Fig. 5 — residuals + client-count scaling (2/4/8)
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Fig. 5 harness.
 #[derive(Debug)]
 pub struct Fig5Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
+    /// Model-variant override.
     pub variant: Option<String>,
+    /// Client counts to sweep.
     pub clients: Option<Vec<usize>>,
+    /// Round-count override.
     pub rounds: Option<usize>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Fig5Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -404,6 +436,7 @@ impl Fig5Args {
     }
 }
 
+/// Fig. 5: error accumulation + client-count scaling.
 pub fn fig5(artifacts: &Path, out: &Path, a: Fig5Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variant = a
@@ -458,15 +491,19 @@ pub fn fig5(artifacts: &Path, out: &Path, a: Fig5Args) -> Result<()> {
 // Table 1 — #params_add and t_add per model
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Table 1 harness.
 #[derive(Debug)]
 pub struct Table1Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
     /// Variants to measure (default: everything in artifacts/index.json).
     pub variants: Option<Vec<String>>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Table1Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -476,6 +513,7 @@ impl Table1Args {
     }
 }
 
+/// Table 1: `#params_add` and `t_add` per model variant.
 pub fn table1(artifacts: &Path, out: &Path, a: Table1Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variants = match &a.variants {
@@ -539,10 +577,14 @@ pub fn table1(artifacts: &Path, out: &Path, a: Table1Args) -> Result<()> {
 // Table 2 — protocol comparison at 2/4/8/16 clients
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Table 2 harness.
 #[derive(Debug)]
 pub struct Table2Args {
+    /// `quick` (CI-sized) or `paper` preset.
     pub preset: String,
+    /// Model-variant override.
     pub variant: Option<String>,
+    /// Client counts to sweep.
     pub clients: Option<Vec<usize>>,
     /// Communication epochs T (paper: 90).
     pub rounds: Option<usize>,
@@ -550,10 +592,12 @@ pub struct Table2Args {
     pub rate: f32,
     /// Target accuracy; default = best accuracy of the FedAvg run.
     pub target: Option<f64>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl Table2Args {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             preset: f.str_or("preset", "quick"),
@@ -567,6 +611,7 @@ impl Table2Args {
     }
 }
 
+/// Table 2: Σdata-to-target protocol comparison at several client counts.
 pub fn table2(artifacts: &Path, out: &Path, a: Table2Args) -> Result<()> {
     let quick = is_quick(&a.preset);
     let variant = a
@@ -655,16 +700,23 @@ pub fn table2(artifacts: &Path, out: &Path, a: Table2Args) -> Result<()> {
 // Appendix C — client data distributions (paper Figs. C.1 / C.2)
 // ---------------------------------------------------------------------------
 
+/// Arguments of the Appendix C harness.
 #[derive(Debug)]
 pub struct AppCArgs {
+    /// Task name (cifar / voc / xray).
     pub task: String,
+    /// Client count.
     pub clients: usize,
+    /// Samples per client.
     pub per_client: usize,
+    /// Dirichlet alpha (`None` → random partitioning).
     pub dirichlet: Option<f64>,
+    /// Master seed.
     pub seed: u64,
 }
 
 impl AppCArgs {
+    /// Parse from CLI flags.
     pub fn from_flags(f: &Flags) -> anyhow::Result<Self> {
         Ok(Self {
             task: f.str_or("task", "voc"),

@@ -20,7 +20,12 @@
 //! through the PJRT C API (`xla` crate) and drives the whole FL process.
 //!
 //! Entry points: [`fl::Experiment`] (programmatic), `fsfl` CLI (launcher),
-//! `examples/` (quickstart + scenario drivers).
+//! `examples/` (quickstart + scenario drivers). The round execution
+//! model — compute plane × codec plane × scheduler, and the determinism
+//! invariant every parallel shape upholds — is documented in
+//! `ARCHITECTURE.md` at the repository root.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

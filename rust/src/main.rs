@@ -25,7 +25,8 @@ COMMANDS:
            --scale-optimizer --scale-lr --schedule --rate --delta --gamma
            --bidirectional --dirichlet --train-per-client --val-per-client
            --test-samples --warmup-steps --participation --seed
-           --target-accuracy --codec-workers)
+           --target-accuracy --codec-workers --pipelined
+           --compute-shards)
   fig1     LR schedule series (--epochs --steps-per-epoch --base-lr)
   fig2     accuracy vs transmitted data per config (--preset quick|paper
            --variant --task --sgd --bidirectional --clients --rounds)
@@ -82,6 +83,8 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     cfg.test_samples = flags.get_or("test-samples", 128)?;
     cfg.warmup_steps = flags.get_or("warmup-steps", 0)?;
     cfg.codec_workers = flags.get_or("codec-workers", 0)?;
+    cfg.pipelined = flags.flag("pipelined");
+    cfg.compute_shards = flags.get_or("compute-shards", 1)?;
     cfg.participation = flags.get_or("participation", 1.0)?;
     cfg.seed = flags.get_or("seed", 0)?;
     cfg.target_accuracy = flags.get("target-accuracy")?;

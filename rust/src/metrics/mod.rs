@@ -7,18 +7,26 @@ use std::io::Write;
 /// Scale-factor distribution snapshot for one layer (Fig. 3 series).
 #[derive(Debug, Clone)]
 pub struct ScaleStats {
+    /// Layer name.
     pub layer: String,
+    /// Smallest scale value.
     pub min: f32,
+    /// 25th percentile.
     pub q25: f32,
+    /// Median.
     pub median: f32,
+    /// 75th percentile.
     pub q75: f32,
+    /// Largest scale value.
     pub max: f32,
+    /// Mean scale value.
     pub mean: f32,
     /// Fraction of scales suppressed toward zero (|s| < 0.1).
     pub suppressed: f32,
 }
 
 impl ScaleStats {
+    /// Summarize one layer's scale values.
     pub fn from_values(layer: &str, values: &[f32]) -> Self {
         let mut v: Vec<f32> = values.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -55,13 +63,19 @@ impl ScaleStats {
 /// Binary-classification confusion counts (for the X-Ray task's F1).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Confusion {
+    /// True positives.
     pub tp: usize,
+    /// False positives.
     pub fp: usize,
+    /// False negatives.
     pub fn_: usize,
+    /// True negatives.
     pub tn: usize,
 }
 
 impl Confusion {
+    /// Record one prediction against its label, with `positive` naming
+    /// the positive class.
     pub fn add(&mut self, pred: usize, label: usize, positive: usize) {
         match (pred == positive, label == positive) {
             (true, true) => self.tp += 1,
@@ -71,6 +85,7 @@ impl Confusion {
         }
     }
 
+    /// Binary F1 score (0.0 when undefined).
     pub fn f1(&self) -> f64 {
         let p = self.tp as f64 / (self.tp + self.fp).max(1) as f64;
         let r = self.tp as f64 / (self.tp + self.fn_).max(1) as f64;
@@ -81,6 +96,7 @@ impl Confusion {
         }
     }
 
+    /// Fraction of correct predictions.
     pub fn accuracy(&self) -> f64 {
         (self.tp + self.tn) as f64 / (self.tp + self.tn + self.fp + self.fn_).max(1) as f64
     }
@@ -89,6 +105,7 @@ impl Confusion {
 /// One communication round's record.
 #[derive(Debug, Clone, Default)]
 pub struct RoundMetrics {
+    /// Round index t.
     pub round: usize,
     /// Upstream bytes (all clients → server), this round.
     pub up_bytes: usize,
@@ -98,6 +115,7 @@ pub struct RoundMetrics {
     pub accuracy: f64,
     /// Binary F1 (only meaningful for 2-class tasks).
     pub f1: f64,
+    /// Central-model mean test loss.
     pub test_loss: f64,
     /// Mean client ΔW sparsity (zeros fraction) this round.
     pub update_sparsity: f64,
@@ -111,17 +129,21 @@ pub struct RoundMetrics {
     pub train_ms: u128,
     /// Wall-clock milliseconds: scale-factor sub-epochs.
     pub scale_ms: u128,
+    /// Per-layer scale statistics (scaled protocols only; Fig. 3).
     pub scale_stats: Vec<ScaleStats>,
 }
 
 /// Full experiment log: what all figure harnesses consume.
 #[derive(Debug, Clone, Default)]
 pub struct RunLog {
+    /// Experiment name (from the config).
     pub name: String,
+    /// One record per completed round.
     pub rounds: Vec<RoundMetrics>,
 }
 
 impl RunLog {
+    /// Empty log for a named experiment.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -129,6 +151,7 @@ impl RunLog {
         }
     }
 
+    /// Append one round's record.
     pub fn push(&mut self, m: RoundMetrics) {
         self.rounds.push(m);
     }
@@ -142,6 +165,7 @@ impl RunLog {
             .sum()
     }
 
+    /// Total transmitted bytes over the whole run.
     pub fn total_bytes(&self, up_only: bool) -> usize {
         if self.rounds.is_empty() {
             0
@@ -150,6 +174,7 @@ impl RunLog {
         }
     }
 
+    /// Best central-model accuracy over all rounds.
     pub fn best_accuracy(&self) -> f64 {
         self.rounds.iter().map(|r| r.accuracy).fold(0.0, f64::max)
     }
@@ -163,6 +188,7 @@ impl RunLog {
             .map(|i| (self.rounds[i].round, self.cumulative_bytes(i, up_only)))
     }
 
+    /// Write the per-round records as a CSV file.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(

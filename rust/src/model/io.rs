@@ -16,8 +16,11 @@ const DTYPE_F32: u32 = 0;
 /// A named f32 tensor as stored in a bundle.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BundleTensor {
+    /// Tensor name (matches the manifest).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Flat values, row-major.
     pub data: Vec<f32>,
 }
 
@@ -27,6 +30,7 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Read a tensor bundle (e.g. `init.bin`) from disk.
 pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
     let path = path.as_ref();
     let mut f = std::io::BufReader::new(
@@ -69,6 +73,7 @@ pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
     Ok(out)
 }
 
+/// Write a tensor bundle to disk (the inverse of [`read_bundle`]).
 pub fn write_bundle(path: impl AsRef<Path>, tensors: &[BundleTensor]) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
     f.write_all(MAGIC)?;

@@ -24,14 +24,23 @@ use anyhow::{anyhow, Context, Result};
 /// quantization step per paper Sec. 5.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Kind {
+    /// Convolution weights (rows = output filters).
     ConvW,
+    /// Depthwise-convolution weights.
     DwConvW,
+    /// Dense/linear weights (rows = output neurons).
     DenseW,
+    /// Bias vector.
     Bias,
+    /// BatchNorm affine scale γ.
     BnGamma,
+    /// BatchNorm affine shift β.
     BnBeta,
+    /// BatchNorm running mean.
     BnMean,
+    /// BatchNorm running variance.
     BnVar,
+    /// Per-filter scale factor (the paper's S).
     Scale,
 }
 
@@ -94,18 +103,27 @@ impl std::str::FromStr for Group {
     }
 }
 
+/// One parameter tensor's metadata, in wire order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Unique tensor name (e.g. `conv1.w`).
     pub name: String,
+    /// Tensor shape (row-structured kinds are 2-D: rows × row_len).
     pub shape: Vec<usize>,
+    /// What the tensor is (drives codec decisions).
     pub kind: Kind,
+    /// Which training group updates it.
     pub group: Group,
+    /// Layer this tensor belongs to.
     pub layer: String,
+    /// Output-channel count for filterable tensors.
     pub out_ch: Option<usize>,
+    /// For scale tensors: the weight tensor they scale.
     pub scale_for: Option<String>,
 }
 
 impl TensorSpec {
+    /// Element count (≥ 1).
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -120,20 +138,29 @@ impl TensorSpec {
     }
 }
 
+/// The full model contract emitted by the python AOT pipeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
+    /// Base model name.
     pub model: String,
+    /// Variant name (an `artifacts/` subdirectory).
     pub variant: String,
+    /// Output class count.
     pub classes: usize,
     /// (H, W, C)
     pub input: Vec<usize>,
+    /// Fixed batch dimension baked into the step HLOs.
     pub batch: usize,
+    /// Total parameter count across all tensors.
     pub param_count: usize,
+    /// Total scale-factor count (paper Table 1 `#params_add`).
     pub scale_count: usize,
+    /// Every parameter tensor, in wire order.
     pub tensors: Vec<TensorSpec>,
 }
 
 impl Manifest {
+    /// Load and validate a `manifest.tsv`.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
@@ -143,6 +170,7 @@ impl Manifest {
         Ok(man)
     }
 
+    /// Parse manifest text (see the module docs for the format).
     pub fn parse(text: &str) -> Result<Self> {
         let mut model = String::new();
         let mut variant = String::new();
@@ -216,6 +244,8 @@ impl Manifest {
         })
     }
 
+    /// Structural sanity checks: unique names, 2-D row-structured
+    /// tensors, parameter-count and scale-target consistency.
     pub fn validate(&self) -> Result<()> {
         let mut seen = std::collections::HashSet::new();
         for t in &self.tensors {
@@ -248,10 +278,12 @@ impl Manifest {
         Ok(())
     }
 
+    /// Wire-order index of a tensor by name.
     pub fn index_of(&self, name: &str) -> Option<usize> {
         self.tensors.iter().position(|t| t.name == name)
     }
 
+    /// Wire-order indices of every tensor in a training group.
     pub fn group_indices(&self, group: Group) -> Vec<usize> {
         self.tensors
             .iter()

@@ -13,11 +13,14 @@ use super::{Group, Manifest};
 /// Model parameters: one `Vec<f32>` per manifest tensor, in wire order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamSet {
+    /// The model contract these values conform to.
     pub manifest: Arc<Manifest>,
+    /// Flat tensor values, in manifest (wire) order.
     pub tensors: Vec<Vec<f32>>,
 }
 
 impl ParamSet {
+    /// Wrap tensor values, validating counts/shapes against the manifest.
     pub fn new(manifest: Arc<Manifest>, tensors: Vec<Vec<f32>>) -> Result<Self> {
         if tensors.len() != manifest.tensors.len() {
             return Err(anyhow!(
@@ -34,6 +37,7 @@ impl ParamSet {
         Ok(Self { manifest, tensors })
     }
 
+    /// A same-shape parameter set with every value zero.
     pub fn zeros_like(&self) -> Self {
         Self {
             manifest: self.manifest.clone(),
@@ -61,10 +65,12 @@ impl ParamSet {
         Ok(Self { manifest, tensors })
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }
 
+    /// A tensor's values by name.
     pub fn get(&self, name: &str) -> Option<&[f32]> {
         let i = self.manifest.index_of(name)?;
         Some(&self.tensors[i])
@@ -116,16 +122,20 @@ impl ParamSet {
 /// a difference; the unit that is sparsified, quantized and transmitted.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Delta {
+    /// The model contract this difference conforms to.
     pub manifest: Arc<Manifest>,
+    /// Flat difference values, in manifest (wire) order.
     pub tensors: Vec<Vec<f32>>,
 }
 
 impl Delta {
+    /// All-zero difference for a manifest.
     pub fn zeros(manifest: Arc<Manifest>) -> Self {
         let tensors = manifest.tensors.iter().map(|t| vec![0.0; t.numel()]).collect();
         Self { manifest, tensors }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }
@@ -203,6 +213,7 @@ impl Delta {
         }
     }
 
+    /// `self *= f` elementwise.
     pub fn scale(&mut self, f: f32) {
         for t in &mut self.tensors {
             for x in t.iter_mut() {
@@ -220,6 +231,7 @@ impl Delta {
         }
     }
 
+    /// Euclidean norm over all elements.
     pub fn l2_norm(&self) -> f64 {
         self.tensors
             .iter()

@@ -14,7 +14,9 @@ use super::Runtime;
 /// learning rate stays a runtime input so rust owns the schedule).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Optimizer {
+    /// Adam with the jax defaults.
     Adam,
+    /// Plain SGD.
     Sgd,
 }
 
@@ -31,11 +33,14 @@ impl std::str::FromStr for Optimizer {
 
 /// The on-disk artifact set of one model variant.
 pub struct ArtifactSet {
+    /// Variant directory (`artifacts/<variant>`).
     pub dir: PathBuf,
+    /// The variant's parsed model contract.
     pub manifest: Arc<Manifest>,
 }
 
 impl ArtifactSet {
+    /// Open a variant directory and load its manifest.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Arc::new(Manifest::load(dir.join("manifest.tsv"))?);
@@ -47,10 +52,12 @@ impl ArtifactSet {
         Self::open(root.as_ref().join(variant))
     }
 
+    /// Absolute path of one step function's HLO text file.
     pub fn hlo_path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }
 
+    /// Load the variant's initial parameters (`init.bin`).
     pub fn init_params(&self) -> Result<crate::model::ParamSet> {
         crate::model::ParamSet::from_bundle(self.manifest.clone(), self.dir.join("init.bin"))
     }

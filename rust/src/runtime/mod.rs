@@ -33,6 +33,8 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Create the PJRT CPU client (errors cleanly on the vendored null
+    /// backend — callers treat that as "no compute plane available").
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
         Ok(Self {
@@ -41,10 +43,12 @@ impl Runtime {
         })
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

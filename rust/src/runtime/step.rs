@@ -18,13 +18,18 @@ use super::{ArtifactSet, Optimizer, Runtime};
 /// Adam/SGD state for one training group (m, v in group order + step t).
 #[derive(Debug, Clone)]
 pub struct OptState {
+    /// The training group this state belongs to.
     pub group: Group,
+    /// First-moment estimates, one slot per group tensor.
     pub m: Vec<Vec<f32>>,
+    /// Second-moment estimates, one slot per group tensor.
     pub v: Vec<Vec<f32>>,
+    /// Adam step counter.
     pub t: f32,
 }
 
 impl OptState {
+    /// Fresh optimizer state for a manifest's training group.
     pub fn zeros(manifest: &Manifest, group: Group) -> Self {
         let sizes: Vec<usize> = manifest
             .group_indices(group)
@@ -51,6 +56,7 @@ impl OptState {
 /// Scalar results of one step execution.
 #[derive(Debug, Clone, Copy)]
 pub struct StepOutput {
+    /// Mean batch loss.
     pub loss: f32,
     /// Number of correct top-1 predictions in the batch.
     pub correct: f32,
@@ -59,7 +65,9 @@ pub struct StepOutput {
 /// All compiled executables of one model variant (lazily compiled).
 pub struct ModelRuntime<'rt> {
     rt: &'rt Runtime,
+    /// The variant's on-disk artifact set.
     pub artifacts: ArtifactSet,
+    /// The variant's model contract.
     pub manifest: Arc<Manifest>,
     weight_idx: Vec<usize>,
     scale_idx: Vec<usize>,
@@ -84,6 +92,7 @@ fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 impl<'rt> ModelRuntime<'rt> {
+    /// Wrap an artifact set; step functions compile lazily on first use.
     pub fn load(rt: &'rt Runtime, artifacts: ArtifactSet) -> Result<Self> {
         let manifest = artifacts.manifest.clone();
         Ok(Self {
@@ -102,18 +111,22 @@ impl<'rt> ModelRuntime<'rt> {
         })
     }
 
+    /// Open a variant by name under an artifacts root.
     pub fn open(rt: &'rt Runtime, root: impl AsRef<std::path::Path>, variant: &str) -> Result<Self> {
         Self::load(rt, ArtifactSet::open_variant(root, variant)?)
     }
 
+    /// The fixed batch dimension baked into the step HLOs.
     pub fn batch_size(&self) -> usize {
         self.manifest.batch
     }
 
+    /// The variant's initial parameters (`init.bin`).
     pub fn init_params(&self) -> Result<ParamSet> {
         self.artifacts.init_params()
     }
 
+    /// Fresh optimizer state for one training group.
     pub fn opt_state(&self, group: Group) -> OptState {
         OptState::zeros(&self.manifest, group)
     }

@@ -1,20 +1,23 @@
-//! Serial/parallel equivalence of the codec plane.
+//! Serial/parallel equivalence of the codec plane and the round scheduler.
 //!
-//! The round pipeline fans per-client codec work (sparsify → quantize →
-//! DeepCABAC encode, server-side decode) out over `exec::WorkerPool`.
-//! The contract: **pool width never changes any output** — bitstreams
-//! are byte-identical and decoded updates bit-for-bit equal for widths
-//! 1, 2 and `available_parallelism`, with buffers recycled across
-//! rounds. The codec-plane tests drive the real `RoundLane` machinery on
-//! synthetic updates and run everywhere; the full-experiment test
-//! additionally pins `RunLog` equality and is skipped without a PJRT
-//! backend + artifacts.
+//! The round scheduler fans per-client codec work (sparsify → quantize →
+//! DeepCABAC encode, server-side decode) out over `exec::WorkerPool`,
+//! optionally software-pipelined against compute, optionally sharded
+//! over several compute threads. The contract: **none of pool width,
+//! schedule mode, shard count or partial participation changes any
+//! output** — bitstreams are byte-identical and decoded updates
+//! bit-for-bit equal vs the staged serial path, with buffers recycled
+//! across rounds. The codec-plane and scheduler tests drive the real
+//! `RoundLane`/`scheduler` machinery on synthetic compute and run
+//! everywhere; the full-experiment tests additionally pin `RunLog`
+//! equality and are skipped without a PJRT backend + artifacts.
 
 use std::sync::Arc;
 
 use fsfl::compression::{QuantConfig, SparsifyMode};
 use fsfl::data::{TaskKind, XorShiftRng};
 use fsfl::exec::WorkerPool;
+use fsfl::fl::scheduler::{self, ComputePlane, ScheduleMode};
 use fsfl::fl::{Experiment, ExperimentConfig, Protocol, ProtocolConfig, RoundLane};
 use fsfl::model::params::Delta;
 use fsfl::model::{Group, Kind, Manifest, TensorSpec};
@@ -209,6 +212,206 @@ fn wire_decode_reconstructs_client_view_exactly() {
     }
 }
 
+/// Synthetic, deterministic compute plane: what a client "trains" is a
+/// pure function of (client id, round seed), so staged, pipelined and
+/// sharded schedules must reproduce it bit for bit.
+struct SynthCompute {
+    m: Arc<Manifest>,
+    round_seed: u64,
+    scaled: bool,
+}
+
+impl ComputePlane for SynthCompute {
+    fn train(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
+        lane.raw
+            .copy_from(&client_delta(&self.m, self.round_seed + lane.client as u64));
+        Ok(())
+    }
+
+    fn scale(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
+        // Client-intrinsic acceptance (by id parity, not round slot), so
+        // the decision is independent of scheduling shape.
+        if self.scaled && lane.client % 2 == 0 {
+            lane.sdelta
+                .copy_from(&scale_delta(&self.m, self.round_seed + lane.client as u64));
+            lane.scale_accepted = true;
+        }
+        Ok(())
+    }
+}
+
+/// Drive one scheduled round over `lanes` and surface codec errors.
+fn scheduled_round(
+    mode: ScheduleMode,
+    pool: &WorkerPool,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    m: &Arc<Manifest>,
+    round_seed: u64,
+) {
+    let update_idx = m.update_indices();
+    let scale_idx = m.group_indices(Group::Scale);
+    let mut compute = SynthCompute {
+        m: m.clone(),
+        round_seed,
+        scaled: pcfg.scaled,
+    };
+    scheduler::run_round(
+        mode,
+        pool,
+        &mut compute,
+        lanes,
+        order,
+        pcfg,
+        &update_idx,
+        &scale_idx,
+    )
+    .unwrap();
+    for lane in lanes.iter_mut() {
+        if let Some(e) = lane.error.take() {
+            panic!("codec stage failed: {e:#}");
+        }
+    }
+}
+
+#[test]
+fn pipelined_schedule_matches_staged_serial_under_partial_participation() {
+    // 5 of 8 clients participate per round; three rounds through
+    // recycled lanes. Every (mode, width) combination must reproduce the
+    // staged/serial reference byte for byte.
+    let m = manifest();
+    let n = CLIENTS;
+    let take = 5;
+    for (name, pcfg) in protocols() {
+        let mut reference: Option<Vec<_>> = None;
+        for mode in [ScheduleMode::Staged, ScheduleMode::Pipelined] {
+            for width in pool_widths() {
+                let pool = WorkerPool::new(width);
+                let mut lanes: Vec<RoundLane> =
+                    (0..take).map(|_| RoundLane::new(m.clone())).collect();
+                let mut order = Vec::new();
+                let mut fps = Vec::new();
+                for t in 0..3 {
+                    scheduler::select_participants(42, t, n, take, &mut order);
+                    assert_eq!(order.len(), take);
+                    scheduled_round(mode, &pool, &mut lanes, &order, &pcfg, &m, 1000 + t as u64);
+                    fps.push(fingerprint(&lanes));
+                }
+                match &reference {
+                    None => reference = Some(fps),
+                    Some(r) => assert_eq!(
+                        &fps, r,
+                        "{name}: mode {mode:?} width {width} diverged from staged serial"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_rounds_match_staged_serial_under_partial_participation() {
+    // Clients sharded round-robin over real threads, each shard running
+    // the scheduler on its own subset with its own recycled lanes; the
+    // ordered fan-in must reproduce the single-shard staged serial round
+    // byte for byte — including with pipelining inside the shards.
+    let m = manifest();
+    let n = CLIENTS;
+    let take = 6;
+    let seed = 7u64;
+    let rounds = 2usize;
+    for (name, pcfg) in protocols() {
+        // Reference: staged serial, single shard.
+        let mut reference = Vec::new();
+        {
+            let mut lanes: Vec<RoundLane> = (0..take).map(|_| RoundLane::new(m.clone())).collect();
+            let mut order = Vec::new();
+            for t in 0..rounds {
+                scheduler::select_participants(seed, t, n, take, &mut order);
+                scheduled_round(
+                    ScheduleMode::Staged,
+                    &WorkerPool::serial(),
+                    &mut lanes,
+                    &order,
+                    &pcfg,
+                    &m,
+                    500 + t as u64,
+                );
+                reference.push(fingerprint(&lanes));
+            }
+        }
+
+        for shards in [2usize, 3] {
+            for mode in [ScheduleMode::Staged, ScheduleMode::Pipelined] {
+                // Per-shard free-lane pools persist across rounds, like
+                // the sharded coordinator's.
+                let mut shard_free: Vec<Vec<RoundLane>> =
+                    (0..shards).map(|_| Vec::new()).collect();
+                let mut order = Vec::new();
+                for t in 0..rounds {
+                    scheduler::select_participants(seed, t, n, take, &mut order);
+                    let mut per_shard: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards];
+                    for (slot, &ci) in order.iter().enumerate() {
+                        per_shard[scheduler::shard_of(ci, shards)].push((slot, ci));
+                    }
+                    let (tx, rx) = std::sync::mpsc::channel::<Vec<(usize, RoundLane)>>();
+                    std::thread::scope(|s| {
+                        for (shard, slots) in per_shard.into_iter().enumerate() {
+                            let tx = tx.clone();
+                            let pcfg = &pcfg;
+                            let m2 = m.clone();
+                            let mut free = std::mem::take(&mut shard_free[shard]);
+                            let round_seed = 500 + t as u64;
+                            s.spawn(move || {
+                                let order: Vec<usize> =
+                                    slots.iter().map(|&(_, ci)| ci).collect();
+                                while free.len() < order.len() {
+                                    free.push(RoundLane::new(m2.clone()));
+                                }
+                                free.truncate(order.len());
+                                let mut lanes = free;
+                                scheduled_round(
+                                    mode,
+                                    &WorkerPool::new(2),
+                                    &mut lanes,
+                                    &order,
+                                    pcfg,
+                                    &m2,
+                                    round_seed,
+                                );
+                                let tagged: Vec<(usize, RoundLane)> = slots
+                                    .iter()
+                                    .map(|&(slot, _)| slot)
+                                    .zip(lanes.drain(..))
+                                    .collect();
+                                tx.send(tagged).unwrap();
+                            });
+                        }
+                    });
+                    drop(tx);
+                    let mut all: Vec<(usize, RoundLane)> = Vec::new();
+                    for part in rx {
+                        all.extend(part);
+                    }
+                    let tagged = scheduler::fan_in(all);
+                    let ordered: Vec<RoundLane> =
+                        tagged.into_iter().map(|(_, lane)| lane).collect();
+                    assert_eq!(
+                        fingerprint(&ordered),
+                        reference[t],
+                        "{name}: shards {shards} mode {mode:?} round {t} diverged"
+                    );
+                    // Recycle lanes back to their owning shard.
+                    for lane in ordered {
+                        shard_free[scheduler::shard_of(lane.client, shards)].push(lane);
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn full_experiment_runlog_identical_across_pool_widths() {
     let artifacts: std::path::PathBuf = std::env::var("FSFL_ARTIFACTS")
@@ -255,6 +458,66 @@ fn full_experiment_runlog_identical_across_pool_widths() {
         match &reference {
             None => reference = Some(fp),
             Some(r) => assert_eq!(&fp, r, "width {width}: RunLog diverged from serial"),
+        }
+    }
+}
+
+#[test]
+fn full_experiment_runlog_identical_across_schedules_and_shards() {
+    // The end-to-end determinism invariant: pipelined scheduling and
+    // sharded deployment must reproduce the staged single-thread RunLog
+    // exactly. Needs a PJRT backend + artifacts (skips otherwise).
+    let artifacts: std::path::PathBuf = std::env::var("FSFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !artifacts.join("tiny_cnn").join("manifest.tsv").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    if let Err(e) = Runtime::cpu() {
+        eprintln!("skipping: {e}");
+        return;
+    }
+    let base_cfg = || {
+        let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::CifarLike, Protocol::Fsfl);
+        cfg.artifacts_root = artifacts.clone();
+        cfg.rounds = 3;
+        cfg.clients = 5;
+        cfg.participation = 0.6; // 3 of 5 participate per round
+        cfg.train_per_client = 48;
+        cfg.val_per_client = 16;
+        cfg.test_samples = 32;
+        cfg.seed = 23;
+        cfg
+    };
+    let fp_of = |log: &fsfl::metrics::RunLog| -> Vec<(usize, usize, f64, f64, Vec<f64>)> {
+        log.rounds
+            .iter()
+            .map(|r| {
+                (
+                    r.up_bytes,
+                    r.down_bytes,
+                    r.accuracy,
+                    r.update_sparsity,
+                    r.client_sparsity.clone(),
+                )
+            })
+            .collect()
+    };
+
+    let mut reference: Option<Vec<(usize, usize, f64, f64, Vec<f64>)>> = None;
+    for (pipelined, shards) in [(false, 1), (true, 1), (false, 2), (true, 3)] {
+        let mut cfg = base_cfg();
+        cfg.pipelined = pipelined;
+        cfg.compute_shards = shards;
+        let log = fsfl::coordinator::run_experiment_threaded(cfg, |_| {}).unwrap();
+        let fp = fp_of(&log);
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(
+                &fp, r,
+                "pipelined={pipelined} shards={shards}: RunLog diverged from staged single-thread"
+            ),
         }
     }
 }
