@@ -1,48 +1,75 @@
 //! Leader/worker coordination layer.
 //!
 //! XLA executables are thread-affine (the `xla` crate's PJRT handles are
-//! not `Send`), so compute always runs on dedicated OS threads while the
-//! control plane — progress streaming, CSV sinks, the CLI — consumes
-//! [`Event`]s from an mpsc channel. Two deployment shapes share that
-//! contract:
+//! not `Send`), so compute always runs on dedicated OS threads (or
+//! processes) while the control plane — progress streaming, CSV sinks,
+//! the CLI — consumes [`Event`]s from an mpsc channel. Deployment
+//! shapes sharing that contract:
 //!
 //! * [`run_experiment_threaded`] — one compute thread drives the whole
 //!   [`crate::fl::Experiment`]; the round scheduler (see
 //!   `fl/scheduler.rs`) overlaps its codec plane with compute when
 //!   `cfg.pipelined` is set.
 //! * [`run_experiment_sharded`] — clients are split round-robin over
-//!   `cfg.compute_shards` **shard threads**, each owning its own PJRT
+//!   `cfg.compute_shards` **shard workers**, each owning its own PJRT
 //!   client, client subset and codec worker pool. Shards run the same
 //!   scheduler over their slice of each round's participants and stream
-//!   their finished [`RoundLane`]s into the coordinator over one mpsc
-//!   fan-in channel. The coordinator performs the **ordered reduction**
-//!   (lanes sorted by round slot — exactly the single-thread aggregation
-//!   order), applies FedAvg, and hands the broadcast delta back to every
-//!   shard; shard 0 evaluates the central model on its synced replica.
+//!   their finished [`RoundLane`]s into the coordinator's fan-in. The
+//!   coordinator performs the **ordered reduction** (lanes sorted by
+//!   round slot — exactly the single-thread aggregation order), applies
+//!   FedAvg, and hands the broadcast delta back to every shard; shard 0
+//!   evaluates the central model on its synced replica.
+//! * [`serve`] / [`join_shard`] / [`run_experiment_processes`] — the
+//!   same protocol with shards as **separate OS processes** over TCP
+//!   (`fsfl shard-worker` is the CLI entry for the worker side).
 //!
-//! Both shapes speak the *paper's* wire protocol: clients emit DeepCABAC
-//! bitstreams, the server decodes exactly those bytes
-//! (`RoundLane::finish_round`), and byte accounting happens on the
-//! encoded streams — nothing is short-circuited. Determinism invariant:
-//! for a fixed config, bitstreams and `RunLog` metrics are byte-identical
-//! across shard counts, schedule modes and pool widths (see
-//! `ARCHITECTURE.md` and `tests/integration_parallel.rs`).
+//! How shard traffic moves is the config's
+//! [`TransportKind`](crate::fl::TransportKind): in-process typed mpsc
+//! channels (the historical fast path), or the serialized wire protocol
+//! of [`crate::net`] over loopback pipes or TCP. On a wire transport
+//! every `ShardCmd`/`ShardMsg` crosses a real byte boundary — framed,
+//! checksummed, length-prefixed — the coordinator *decodes the actual
+//! transmitted bitstreams* before aggregating, and transfer bytes are
+//! measured at the frame layer into [`RunLog::wire`] instead of being
+//! estimated.
+//!
+//! All shapes speak the *paper's* wire protocol: clients emit DeepCABAC
+//! bitstreams, the server decodes exactly those bytes, and byte
+//! accounting happens on the encoded streams — nothing is
+//! short-circuited. Determinism invariant: for a fixed config,
+//! bitstreams and `RunLog` round metrics are byte-identical across
+//! shard counts, schedule modes, pool widths **and transports** (see
+//! `ARCHITECTURE.md`, `tests/integration_parallel.rs` and
+//! `tests/integration_transport.rs`).
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::data::{Batch, Dataset};
 use crate::exec::WorkerPool;
 use crate::fl::scheduler::{self, ScheduleMode};
+use crate::fl::synth::{synth_eval, SyntheticPlane};
 use crate::fl::{
-    build_setup, evaluate_params, EvalReport, Experiment, ExperimentCompute, ExperimentConfig,
-    RoundLane, Server,
+    build_setup, evaluate_params, Client, EvalReport, Experiment, ExperimentCompute,
+    ExperimentConfig, ProtocolConfig, RoundLane, Server, TransportKind,
 };
-use crate::metrics::{RoundMetrics, RunLog, ScaleStats};
+use crate::metrics::{RoundMetrics, RunLog, ScaleStats, WireStats};
 use crate::model::params::Delta;
-use crate::model::ParamSet;
+use crate::model::{Group, Manifest, ParamSet};
+use crate::net::wire::{self, CmdTag, MsgTag};
+use crate::net::{loopback_pair, FrameSink, FrameSource, TcpTransport, Transport};
 use crate::runtime::{ModelRuntime, Runtime};
+
+pub use crate::net::wire::ComputeSpec;
+
+/// How long [`serve`] waits for all shard workers to join before giving
+/// up (the liveness callback can fail it earlier).
+const JOIN_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Events streamed from the compute thread(s) to observers.
 #[derive(Debug)]
@@ -64,12 +91,12 @@ pub fn resolved_shards(cfg: &ExperimentConfig) -> usize {
 /// Run an experiment on dedicated compute thread(s), streaming per-round
 /// events to `on_event` on the calling thread. Returns the final
 /// [`RunLog`]. Dispatches to [`run_experiment_sharded`] when the config
-/// asks for more than one compute shard.
+/// asks for more than one compute shard or for a wire transport.
 pub fn run_experiment_threaded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    if resolved_shards(&cfg) > 1 {
+    if resolved_shards(&cfg) > 1 || cfg.transport.is_wire() {
         return run_experiment_sharded(cfg, on_event);
     }
     run_single_thread(cfg, &mut on_event)
@@ -132,10 +159,14 @@ pub fn run_experiment(rt: &Runtime, cfg: ExperimentConfig) -> Result<RunLog> {
 // ---------------------------------------------------------------------------
 
 /// Shard → coordinator messages (all shards share one fan-in channel).
+/// On a wire transport these cross as serialized frames (`net::wire`
+/// tags `READY`/`ROUND_DONE`/`EVAL`/`FAILED`); per-connection reader
+/// threads decode them back into this enum, so the control loop is
+/// transport-oblivious.
 enum ShardMsg {
     /// Shard built its runtime + client subset; carries the initial
     /// model so the coordinator can construct the server without a
-    /// runtime of its own.
+    /// runtime (or artifacts directory) of its own.
     Ready { shard: usize, init: ParamSet },
     /// One round's finished lanes, each tagged with its global slot.
     RoundDone {
@@ -151,7 +182,10 @@ enum ShardMsg {
     Failed { shard: usize, msg: String },
 }
 
-/// Coordinator → shard commands (one channel per shard).
+/// Coordinator → shard commands (one channel/connection per shard). On
+/// a wire transport these cross as serialized frames (`net::wire` tags
+/// `ROUND`/`APPLY`/`STOP`; lane recycling stays local to each side, so
+/// `Apply`'s lanes never travel).
 enum ShardCmd {
     /// Run the round over these `(global slot, client id)` assignments
     /// (possibly empty — the shard still participates in the barrier).
@@ -168,47 +202,423 @@ enum ShardCmd {
     Stop,
 }
 
+/// Coordinator-side state shared by every wire [`ShardTx`] and reader:
+/// the recycled lane pool, and the once-per-round encoded APPLY
+/// payload (the broadcast delta is model-sized, so serializing it once
+/// and fanning the bytes out beats re-encoding it per shard N×).
+struct WireShared {
+    /// Lane recycling: readers pop on ROUND_DONE decode, `Apply` sends
+    /// push back.
+    pool: Mutex<Vec<RoundLane>>,
+    /// Cached APPLY payload for the current round (encoded with
+    /// `eval = false`; the flag byte is patched per send). Any ROUND
+    /// send marks it stale, so the cache can never leak a previous
+    /// round's broadcast even though the `Arc<Delta>` buffer recycles.
+    apply: Mutex<ApplyCache>,
+}
+
+#[derive(Default)]
+struct ApplyCache {
+    buf: Vec<u8>,
+    fresh: bool,
+}
+
+/// Coordinator-side sender for one shard: typed channel (mpsc) or a
+/// framed wire sink. Wire sends serialize through recycled buffers;
+/// `Apply` lanes are returned to the shared coordinator-side lane pool
+/// instead of crossing the transport.
+enum ShardTx {
+    Mpsc(mpsc::Sender<ShardCmd>),
+    Wire {
+        sink: FrameSink,
+        shared: Arc<WireShared>,
+        buf: Vec<u8>,
+    },
+}
+
+/// Byte offset of the eval flag inside an APPLY payload (tag, then
+/// bool) — patched per shard over the shared once-encoded broadcast.
+const APPLY_EVAL_OFFSET: usize = 1;
+
+impl ShardTx {
+    fn send(&mut self, cmd: ShardCmd) -> Result<()> {
+        match self {
+            ShardTx::Mpsc(tx) => tx
+                .send(cmd)
+                .map_err(|_| anyhow!("shard channel closed")),
+            ShardTx::Wire { sink, shared, buf } => match cmd {
+                ShardCmd::Round { slots } => {
+                    wire::encode_round(buf, &slots);
+                    if let Ok(mut cache) = shared.apply.lock() {
+                        cache.fresh = false;
+                    }
+                    sink.send(buf)
+                }
+                ShardCmd::Apply {
+                    broadcast,
+                    lanes,
+                    eval,
+                } => {
+                    if let Ok(mut free) = shared.pool.lock() {
+                        free.extend(lanes.into_iter().map(|(_, l)| l));
+                    }
+                    let mut cache = shared
+                        .apply
+                        .lock()
+                        .map_err(|_| anyhow!("apply cache poisoned"))?;
+                    if !cache.fresh {
+                        wire::encode_apply(&mut cache.buf, &broadcast, false);
+                        cache.fresh = true;
+                    }
+                    if eval {
+                        // Patch-and-restore under the lock: payloads are
+                        // identical across shards except this one byte,
+                        // and the frame checksum is computed per send.
+                        cache.buf[APPLY_EVAL_OFFSET] = 1;
+                        let sent = sink.send(&cache.buf);
+                        cache.buf[APPLY_EVAL_OFFSET] = 0;
+                        sent
+                    } else {
+                        sink.send(&cache.buf)
+                    }
+                }
+                ShardCmd::Stop => {
+                    wire::encode_stop(buf);
+                    sink.send(buf)
+                }
+            },
+        }
+    }
+}
+
 /// Run an experiment with clients sharded over `cfg.compute_shards`
-/// compute threads (one PJRT client per shard). Streams the same
-/// [`Event`]s as [`run_experiment_threaded`] and returns the final
-/// [`RunLog`]; outputs are byte-identical to the single-thread path for
-/// any shard count.
+/// compute workers (one PJRT client per shard) over the config's
+/// transport. Streams the same [`Event`]s as [`run_experiment_threaded`]
+/// and returns the final [`RunLog`]; outputs are byte-identical to the
+/// single-thread path for any shard count and transport.
 pub fn run_experiment_sharded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_sharded_impl(cfg, ComputeSpec::Real, &mut on_event)
+}
+
+/// [`run_experiment_sharded`] over the deterministic synthetic compute
+/// plane ([`crate::fl::SyntheticPlane`] on `manifest`) instead of real
+/// PJRT clients. This is the transport test harness: it exercises the
+/// full coordinator protocol — fan-out, wire serialization, ordered
+/// fan-in, FedAvg, broadcast, eval barrier — with no XLA backend and no
+/// artifacts, so the differential conformance and multi-process CI
+/// tests run everywhere.
+pub fn run_experiment_synthetic(
+    cfg: ExperimentConfig,
+    manifest: Arc<Manifest>,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_sharded_impl(cfg, ComputeSpec::Synthetic { manifest }, &mut on_event)
+}
+
+/// Transport dispatch for the sharded deployment shapes.
+fn run_sharded_impl(
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
     let shards = resolved_shards(&cfg);
-    if shards <= 1 {
-        return run_single_thread(cfg, &mut on_event);
+    if shards <= 1 && !cfg.transport.is_wire() && matches!(compute, ComputeSpec::Real) {
+        return run_single_thread(cfg, on_event);
     }
-
-    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
-    let mut cmd_txs: Vec<mpsc::Sender<ShardCmd>> = Vec::with_capacity(shards);
-    let mut handles = Vec::with_capacity(shards);
-    for shard in 0..shards {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
-        cmd_txs.push(cmd_tx);
-        let cfg2 = cfg.clone();
-        let tx = msg_tx.clone();
-        handles.push(std::thread::spawn(move || {
-            shard_worker(cfg2, shard, shards, cmd_rx, tx)
-        }));
-    }
-    drop(msg_tx);
-
-    let result = coordinate(&cfg, shards, &cmd_txs, &msg_rx, &mut on_event);
-    // Shut every shard down (dead shards just return a send error).
-    for tx in &cmd_txs {
-        let _ = tx.send(ShardCmd::Stop);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
+    let result = match cfg.transport {
+        TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, on_event),
+        TransportKind::Loopback | TransportKind::Tcp => {
+            run_wire_sharded(&cfg, shards, &compute, on_event)
+        }
+    };
     match &result {
         Ok(log) => on_event(&Event::Finished(log.clone())),
         Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
     }
     result
+}
+
+/// Shards as threads, typed mpsc channels (no serialization).
+fn run_mpsc_sharded(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    compute: &ComputeSpec,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
+    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+    let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
+    let mut handles = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+        txs.push(ShardTx::Mpsc(cmd_tx));
+        let cfg2 = cfg.clone();
+        let compute2 = compute.clone();
+        let tx = msg_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            shard_thread_mpsc(cfg2, compute2, shard, shards, cmd_rx, tx)
+        }));
+    }
+    drop(msg_tx);
+
+    let result = coordinate(cfg, shards, &mut txs, &msg_rx, on_event);
+    // Shut every shard down (dead shards just return a send error).
+    for tx in &mut txs {
+        let _ = tx.send(ShardCmd::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Shards as threads speaking the serialized wire protocol (loopback
+/// pipes or real localhost TCP sockets).
+fn run_wire_sharded(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    compute: &ComputeSpec,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
+    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
+    let mut handles = Vec::with_capacity(shards);
+    match cfg.transport {
+        TransportKind::Loopback => {
+            for _ in 0..shards {
+                let (coord_end, shard_end) = loopback_pair();
+                conns.push(Box::new(coord_end));
+                handles.push(std::thread::spawn(move || {
+                    serve_shard_transport(Box::new(shard_end))
+                }));
+            }
+        }
+        TransportKind::Tcp => {
+            let listener = TcpListener::bind("127.0.0.1:0")
+                .map_err(|e| anyhow!("binding shard listener: {e}"))?;
+            let addr = listener
+                .local_addr()
+                .map_err(|e| anyhow!("listener address: {e}"))?;
+            for _ in 0..shards {
+                handles.push(std::thread::spawn(move || {
+                    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
+                }));
+            }
+            for _ in 0..shards {
+                let stream = accept_one(&listener, JOIN_TIMEOUT, || Ok(()))?;
+                conns.push(Box::new(TcpTransport::new(stream)));
+            }
+        }
+        TransportKind::Mpsc => unreachable!("mpsc is not a wire transport"),
+    }
+
+    let result = drive_wire_coordinator(cfg, shards, conns, compute, on_event);
+    for h in handles {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Accept one shard connection with a deadline, polling `liveness`
+/// while waiting so a dead worker fails the join fast instead of
+/// hanging the accept loop.
+fn accept_one(
+    listener: &TcpListener,
+    timeout: Duration,
+    mut liveness: impl FnMut() -> Result<()>,
+) -> Result<std::net::TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow!("listener nonblocking: {e}"))?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| anyhow!("stream blocking mode: {e}"))?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                liveness()?;
+                if Instant::now() > deadline {
+                    return Err(anyhow!(
+                        "timed out after {timeout:?} waiting for a shard worker to join"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!("accept failed: {e}")),
+        }
+    }
+}
+
+/// Run the coordinator over already-established wire connections: INIT
+/// handshakes out, per-connection reader threads in, then the shared
+/// control loop. Measures frame-layer traffic into [`RunLog::wire`].
+fn drive_wire_coordinator(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    conns: Vec<Box<dyn Transport>>,
+    compute: &ComputeSpec,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
+    debug_assert_eq!(conns.len(), shards);
+    // A Real-compute worker re-opens the artifacts path from the
+    // handshake config; reject paths the UTF-8 config encoding would
+    // silently mangle instead of failing remotely with a phantom path.
+    if matches!(compute, ComputeSpec::Real) && cfg.artifacts_root.to_str().is_none() {
+        return Err(anyhow!(
+            "artifacts path {:?} is not valid UTF-8 and cannot cross the config handshake",
+            cfg.artifacts_root
+        ));
+    }
+    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+    let shared = Arc::new(WireShared {
+        pool: Mutex::new(Vec::new()),
+        apply: Mutex::new(ApplyCache::default()),
+    });
+    let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
+    let mut readers = Vec::with_capacity(shards);
+    let mut sent: Vec<Arc<AtomicU64>> = Vec::with_capacity(shards);
+    let mut received: Vec<Arc<AtomicU64>> = Vec::with_capacity(shards);
+    let mut buf = Vec::new();
+    for (shard, conn) in conns.into_iter().enumerate() {
+        let (mut sink, source) = conn.open()?;
+        wire::encode_init(&mut buf, shard, shards, cfg, compute);
+        sink.send(&buf)
+            .map_err(|e| anyhow!("shard {shard}: INIT send failed: {e:#}"))?;
+        sent.push(sink.counter());
+        received.push(source.counter());
+        let tx = msg_tx.clone();
+        let shared2 = shared.clone();
+        readers.push(std::thread::spawn(move || {
+            reader_loop(shard, source, shared2, tx)
+        }));
+        txs.push(ShardTx::Wire {
+            sink,
+            shared: shared.clone(),
+            buf: Vec::new(),
+        });
+    }
+    drop(msg_tx);
+
+    let result = coordinate(cfg, shards, &mut txs, &msg_rx, on_event);
+    for tx in &mut txs {
+        let _ = tx.send(ShardCmd::Stop);
+    }
+    // Close the write halves so shards (and with them the readers) wind
+    // down even on the error path.
+    drop(txs);
+    for r in readers {
+        let _ = r.join();
+    }
+    let stats = WireStats {
+        sent: sent.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
+        received: received.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
+    };
+    result.map(|mut log| {
+        log.wire = Some(stats);
+        log
+    })
+}
+
+/// One wire connection's receive pump: decode frames into [`ShardMsg`]s
+/// for the shared fan-in channel. Any transport error, protocol
+/// violation or mid-run close is surfaced as a `Failed` message so the
+/// control loop fails fast with a descriptive error instead of
+/// deadlocking on a barrier a dead shard will never reach. (A close
+/// *after* the control loop finished parks a `Failed` nobody reads —
+/// harmless.)
+fn reader_loop(
+    shard: usize,
+    mut source: FrameSource,
+    shared: Arc<WireShared>,
+    tx: mpsc::Sender<ShardMsg>,
+) {
+    let mut manifest: Option<Arc<Manifest>> = None;
+    let mut buf = Vec::new();
+    loop {
+        match source.recv(&mut buf) {
+            Ok(true) => {}
+            Ok(false) => {
+                let _ = tx.send(ShardMsg::Failed {
+                    shard,
+                    msg: "connection closed".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(ShardMsg::Failed {
+                    shard,
+                    msg: format!("transport receive failed: {e:#}"),
+                });
+                return;
+            }
+        }
+        match decode_shard_msg(&buf, shard, &mut manifest, &shared.pool) {
+            Ok(msg) => {
+                if tx.send(msg).is_err() {
+                    return; // coordinator gone; nothing left to tell
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(ShardMsg::Failed {
+                    shard,
+                    msg: format!("wire decode failed: {e:#}"),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Decode one shard→coordinator frame, learning the model contract from
+/// the READY handshake and recycling lanes through the shared pool.
+fn decode_shard_msg(
+    buf: &[u8],
+    conn_shard: usize,
+    manifest: &mut Option<Arc<Manifest>>,
+    pool: &Mutex<Vec<RoundLane>>,
+) -> Result<ShardMsg> {
+    match wire::msg_tag(buf)? {
+        MsgTag::Ready => {
+            let (shard, init) = wire::decode_ready(buf)?;
+            if shard != conn_shard {
+                return Err(anyhow!(
+                    "READY claims shard {shard} on connection {conn_shard}"
+                ));
+            }
+            *manifest = Some(init.manifest.clone());
+            Ok(ShardMsg::Ready { shard, init })
+        }
+        MsgTag::RoundDone => {
+            let m = manifest
+                .as_ref()
+                .ok_or_else(|| anyhow!("ROUND_DONE before READY handshake"))?;
+            let mut free = pool.lock().map_err(|_| anyhow!("lane pool poisoned"))?;
+            let (shard, lanes) = wire::decode_round_done_into(buf, m, &mut free)?;
+            drop(free);
+            if shard != conn_shard {
+                return Err(anyhow!(
+                    "ROUND_DONE claims shard {shard} on connection {conn_shard}"
+                ));
+            }
+            Ok(ShardMsg::RoundDone { shard, lanes })
+        }
+        MsgTag::Eval => {
+            let (report, scale_stats) = wire::decode_eval(buf)?;
+            Ok(ShardMsg::Eval {
+                report,
+                scale_stats,
+            })
+        }
+        MsgTag::Failed => {
+            let (shard, msg) = wire::decode_failed(buf)?;
+            Ok(ShardMsg::Failed { shard, msg })
+        }
+    }
 }
 
 /// Turn a dead-shard condition into its parked `Failed` message when one
@@ -223,11 +633,12 @@ fn shard_failure(msg_rx: &mpsc::Receiver<ShardMsg>, fallback: &str) -> anyhow::E
 }
 
 /// The coordinator's control loop: round fan-out, ordered fan-in
-/// reduction, FedAvg, broadcast, metrics.
+/// reduction, FedAvg, broadcast, metrics. Transport-oblivious — it
+/// talks [`ShardTx`]/[`ShardMsg`] and never sees frames.
 fn coordinate(
     cfg: &ExperimentConfig,
     shards: usize,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    txs: &mut [ShardTx],
     msg_rx: &mpsc::Receiver<ShardMsg>,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
@@ -272,7 +683,7 @@ fn coordinate(
             per_shard[scheduler::shard_of(ci, shards)].push((slot, ci));
         }
         for (s, slots) in per_shard.into_iter().enumerate() {
-            cmd_txs[s]
+            txs[s]
                 .send(ShardCmd::Round { slots })
                 .map_err(|_| shard_failure(msg_rx, &format!("shard {s} disconnected")))?;
         }
@@ -293,6 +704,12 @@ fn coordinate(
                 Ok(_) => return Err(anyhow!("unexpected shard message during round {t}")),
                 Err(_) => return Err(shard_failure(msg_rx, "shards exited mid-round")),
             }
+        }
+        if tagged.len() != take {
+            return Err(anyhow!(
+                "round {t}: fan-in produced {} lanes, expected {take}",
+                tagged.len()
+            ));
         }
         let mut tagged = scheduler::fan_in(tagged);
         for (_, lane) in tagged.iter_mut() {
@@ -331,7 +748,7 @@ fn coordinate(
             back[scheduler::shard_of(lane.client, shards)].push((slot, lane));
         }
         for (s, lanes) in back.into_iter().enumerate() {
-            cmd_txs[s]
+            txs[s]
                 .send(ShardCmd::Apply {
                     broadcast: bc.clone(),
                     lanes,
@@ -375,130 +792,425 @@ fn coordinate(
     Ok(log)
 }
 
-/// One shard's thread body: build a private runtime + client subset,
+// ---------------------------------------------------------------------------
+// Shard workers
+// ---------------------------------------------------------------------------
+
+/// One shard's compute + eval capability, abstracted over real
+/// PJRT-backed clients vs the synthetic plane so every transport loop
+/// drives both identically.
+trait ShardBody {
+    /// The model contract this shard serves.
+    fn manifest(&self) -> Arc<Manifest>;
+    /// Initial model parameters (sent in the READY handshake).
+    fn init_params(&self) -> ParamSet;
+    /// Run one round's compute + codec stages over `lanes` (one per
+    /// local participant; `order[k]` is the global client id of slot k).
+    fn run_round(&mut self, order: &[usize], lanes: &mut Vec<RoundLane>) -> Result<()>;
+    /// Apply the aggregated broadcast to every local replica.
+    fn apply(&mut self, broadcast: &Delta) -> Result<()>;
+    /// Evaluate the central model on the synced replica (shard 0 only).
+    fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)>;
+}
+
+/// Per-shard codec pool width: auto-sized pools split the machine
+/// between shards instead of each grabbing full parallelism (N shards ×
+/// ncpu codec threads would just thrash); explicit widths are per-shard
+/// as documented.
+fn shard_pool(cfg: &ExperimentConfig, shards: usize) -> WorkerPool {
+    if cfg.codec_workers == 0 {
+        let auto = WorkerPool::new(0).workers();
+        WorkerPool::new((auto / shards).max(1))
+    } else {
+        WorkerPool::new(cfg.codec_workers)
+    }
+}
+
+/// [`ShardBody`] over real PJRT-backed clients (the production shape).
+struct RealShard<'a, 'rt> {
+    mr: &'a ModelRuntime<'rt>,
+    cfg: &'a ExperimentConfig,
+    shards: usize,
+    clients: Vec<Client>,
+    train_data: Dataset,
+    test_batches: Vec<Batch>,
+    manifest: Arc<Manifest>,
+    pcfg: ProtocolConfig,
+    update_idx: Vec<usize>,
+    scale_idx: Vec<usize>,
+    pool: WorkerPool,
+    mode: ScheduleMode,
+    init: ParamSet,
+}
+
+impl<'a, 'rt> RealShard<'a, 'rt> {
+    fn build(
+        mr: &'a ModelRuntime<'rt>,
+        cfg: &'a ExperimentConfig,
+        shard: usize,
+        shards: usize,
+    ) -> Result<Self> {
+        // Identical deterministic substrate on every shard; only the
+        // round-robin-owned clients are instantiated here.
+        let setup = build_setup(mr, cfg, |ci| scheduler::shard_of(ci, shards) == shard)?;
+        let manifest = mr.manifest.clone();
+        Ok(Self {
+            mr,
+            cfg,
+            shards,
+            clients: setup.clients,
+            train_data: setup.train_data,
+            test_batches: setup.test_batches,
+            pcfg: cfg.protocol_config(),
+            update_idx: manifest.update_indices(),
+            scale_idx: manifest.group_indices(Group::Scale),
+            pool: shard_pool(cfg, shards),
+            mode: cfg.schedule_mode(),
+            manifest,
+            init: setup.init,
+        })
+    }
+}
+
+impl ShardBody for RealShard<'_, '_> {
+    fn manifest(&self) -> Arc<Manifest> {
+        self.manifest.clone()
+    }
+
+    fn init_params(&self) -> ParamSet {
+        self.init.clone()
+    }
+
+    fn run_round(&mut self, order: &[usize], lanes: &mut Vec<RoundLane>) -> Result<()> {
+        // The same ComputePlane glue the single-process Experiment uses,
+        // with round-robin local indexing.
+        let mut compute = ExperimentCompute {
+            mr: self.mr,
+            clients: &mut self.clients,
+            shards: self.shards,
+            train_data: &self.train_data,
+            cfg: self.cfg,
+            pcfg: &self.pcfg,
+        };
+        scheduler::run_round(
+            self.mode,
+            &self.pool,
+            &mut compute,
+            lanes,
+            order,
+            &self.pcfg,
+            &self.update_idx,
+            &self.scale_idx,
+        )
+    }
+
+    fn apply(&mut self, broadcast: &Delta) -> Result<()> {
+        for c in self.clients.iter_mut() {
+            c.apply_broadcast(broadcast);
+        }
+        Ok(())
+    }
+
+    fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)> {
+        // Post-broadcast, every replica equals the server model;
+        // evaluate on this shard's first client (global client 0 lives
+        // on shard 0).
+        let replica = &self
+            .clients
+            .first()
+            .ok_or_else(|| anyhow!("eval shard owns no clients"))?
+            .global;
+        let report = evaluate_params(self.mr, replica, &self.test_batches)?;
+        let scale_stats = if self.pcfg.scaled {
+            self.clients[0]
+                .scale_values()
+                .into_iter()
+                .map(|(layer, vals)| ScaleStats::from_values(&layer, &vals))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok((report, scale_stats))
+    }
+}
+
+/// [`ShardBody`] over [`SyntheticPlane`]: protocol-complete, PJRT-free.
+/// Tracks the accumulated broadcast history so its `eval` (see
+/// [`synth_eval`]) is a pure function of every aggregated byte.
+struct SynthShard {
+    plane: SyntheticPlane,
+    pool: WorkerPool,
+    pcfg: ProtocolConfig,
+    update_idx: Vec<usize>,
+    scale_idx: Vec<usize>,
+    mode: ScheduleMode,
+    seed: u64,
+    round: u64,
+    accum: Delta,
+}
+
+impl SynthShard {
+    fn new(manifest: Arc<Manifest>, cfg: &ExperimentConfig, shards: usize) -> Self {
+        let pcfg = cfg.protocol_config();
+        Self {
+            plane: SyntheticPlane {
+                manifest: manifest.clone(),
+                round_seed: 0,
+                scaled: pcfg.scaled,
+            },
+            pool: shard_pool(cfg, shards),
+            pcfg,
+            update_idx: manifest.update_indices(),
+            scale_idx: manifest.group_indices(Group::Scale),
+            mode: cfg.schedule_mode(),
+            seed: cfg.seed,
+            round: 0,
+            accum: Delta::zeros(manifest),
+        }
+    }
+}
+
+impl ShardBody for SynthShard {
+    fn manifest(&self) -> Arc<Manifest> {
+        self.plane.manifest.clone()
+    }
+
+    fn init_params(&self) -> ParamSet {
+        let m = self.plane.manifest.clone();
+        let tensors = m.tensors.iter().map(|t| vec![0.0f32; t.numel()]).collect();
+        ParamSet::new(m, tensors).expect("zero params match their own manifest")
+    }
+
+    fn run_round(&mut self, order: &[usize], lanes: &mut Vec<RoundLane>) -> Result<()> {
+        // Every shard sees every ROUND command (empty slot sets
+        // included), so a local counter stays globally consistent.
+        self.plane.round_seed = self
+            .seed
+            .wrapping_add((self.round + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.round += 1;
+        scheduler::run_round(
+            self.mode,
+            &self.pool,
+            &mut self.plane,
+            lanes,
+            order,
+            &self.pcfg,
+            &self.update_idx,
+            &self.scale_idx,
+        )
+    }
+
+    fn apply(&mut self, broadcast: &Delta) -> Result<()> {
+        self.accum.accumulate(broadcast);
+        Ok(())
+    }
+
+    fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)> {
+        Ok((synth_eval(&self.accum), Vec::new()))
+    }
+}
+
+/// The round-serving loop over typed mpsc channels (lanes move to the
+/// coordinator and come back for recycling in `Apply`).
+fn shard_loop_mpsc(
+    body: &mut dyn ShardBody,
+    shard: usize,
+    cmd_rx: &mpsc::Receiver<ShardCmd>,
+    msg_tx: &mpsc::Sender<ShardMsg>,
+) -> Result<()> {
+    let manifest = body.manifest();
+    msg_tx
+        .send(ShardMsg::Ready {
+            shard,
+            init: body.init_params(),
+        })
+        .map_err(|_| anyhow!("coordinator disconnected"))?;
+
+    // Recycled lanes: grown to this shard's per-round watermark.
+    let mut free: Vec<RoundLane> = Vec::new();
+    let mut lanes: Vec<RoundLane> = Vec::new();
+    loop {
+        match cmd_rx.recv() {
+            Ok(ShardCmd::Round { slots }) => {
+                let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
+                while free.len() < order.len() {
+                    free.push(RoundLane::new(manifest.clone()));
+                }
+                lanes.clear();
+                let keep = free.len() - order.len();
+                lanes.extend(free.drain(keep..));
+                body.run_round(&order, &mut lanes)?;
+                let tagged: Vec<(usize, RoundLane)> = slots
+                    .iter()
+                    .map(|&(slot, _)| slot)
+                    .zip(lanes.drain(..))
+                    .collect();
+                msg_tx
+                    .send(ShardMsg::RoundDone {
+                        shard,
+                        lanes: tagged,
+                    })
+                    .map_err(|_| anyhow!("coordinator disconnected"))?;
+            }
+            Ok(ShardCmd::Apply {
+                broadcast,
+                lanes: returned,
+                eval,
+            }) => {
+                body.apply(&broadcast)?;
+                free.extend(returned.into_iter().map(|(_, l)| l));
+                if eval {
+                    let (report, scale_stats) = body.eval()?;
+                    msg_tx
+                        .send(ShardMsg::Eval {
+                            report,
+                            scale_stats,
+                        })
+                        .map_err(|_| anyhow!("coordinator disconnected"))?;
+                }
+            }
+            Ok(ShardCmd::Stop) | Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+/// The round-serving loop over a wire connection: commands are decoded
+/// frames, lanes are serialized out and recycled locally (they never
+/// come back), the broadcast is deserialized into one recycled buffer.
+fn shard_loop_wire(
+    body: &mut dyn ShardBody,
+    shard: usize,
+    sink: &mut FrameSink,
+    source: &mut FrameSource,
+) -> Result<()> {
+    let manifest = body.manifest();
+    let mut out = Vec::new();
+    wire::encode_ready(&mut out, shard, &body.init_params());
+    sink.send(&out)
+        .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+
+    let mut free: Vec<RoundLane> = Vec::new();
+    let mut lanes: Vec<RoundLane> = Vec::new();
+    let mut bcast = Delta::zeros(manifest.clone());
+    let mut inbuf = Vec::new();
+    loop {
+        // A *closed* inbound link is the wire analogue of the mpsc recv
+        // error: the coordinator is gone, wind down quietly. A *corrupt*
+        // frame is a real fault — propagate it so the FAILED path runs
+        // (best effort) and the worker exits nonzero instead of
+        // masquerading as a clean shutdown.
+        match source.recv(&mut inbuf) {
+            Ok(true) => {}
+            Ok(false) => break,
+            Err(e) => return Err(anyhow!("command receive failed: {e:#}")),
+        }
+        match wire::cmd_tag(&inbuf)? {
+            CmdTag::Init => return Err(anyhow!("unexpected second INIT handshake")),
+            CmdTag::Round => {
+                let slots = wire::decode_round(&inbuf)?;
+                let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
+                while free.len() < order.len() {
+                    free.push(RoundLane::new(manifest.clone()));
+                }
+                lanes.clear();
+                let keep = free.len() - order.len();
+                lanes.extend(free.drain(keep..));
+                body.run_round(&order, &mut lanes)?;
+                let tagged: Vec<(usize, RoundLane)> = slots
+                    .iter()
+                    .map(|&(slot, _)| slot)
+                    .zip(lanes.drain(..))
+                    .collect();
+                wire::encode_round_done(&mut out, shard, &tagged)?;
+                sink.send(&out)
+                    .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+                // Lanes recycle locally — only their bytes crossed.
+                free.extend(tagged.into_iter().map(|(_, l)| l));
+            }
+            CmdTag::Apply => {
+                let eval = wire::decode_apply_into(&inbuf, &mut bcast)?;
+                body.apply(&bcast)?;
+                if eval {
+                    let (report, scale_stats) = body.eval()?;
+                    wire::encode_eval(&mut out, &report, &scale_stats);
+                    sink.send(&out)
+                        .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+                }
+            }
+            CmdTag::Stop => break,
+        }
+    }
+    Ok(())
+}
+
+/// Build the [`ShardBody`] a decoded INIT asks for and serve the wire
+/// loop with it. `Real` needs a PJRT runtime + artifacts; `Synthetic`
+/// needs neither.
+fn run_shard_body(init: &wire::Init, sink: &mut FrameSink, source: &mut FrameSource) -> Result<()> {
+    match &init.compute {
+        ComputeSpec::Real => {
+            let rt = Runtime::cpu()?;
+            let mr = ModelRuntime::open(&rt, &init.cfg.artifacts_root, &init.cfg.variant)?;
+            let mut body = RealShard::build(&mr, &init.cfg, init.shard, init.shards)?;
+            shard_loop_wire(&mut body, init.shard, sink, source)
+        }
+        ComputeSpec::Synthetic { manifest } => {
+            let mut body = SynthShard::new(manifest.clone(), &init.cfg, init.shards);
+            shard_loop_wire(&mut body, init.shard, sink, source)
+        }
+    }
+}
+
+/// Serve one shard over an established transport connection: INIT
+/// handshake in, then the round loop until STOP or disconnect. A fatal
+/// error is reported back as a FAILED frame (best effort) before
+/// returning it.
+fn serve_shard_transport(transport: Box<dyn Transport>) -> Result<()> {
+    let (mut sink, mut source) = transport.open()?;
+    let mut buf = Vec::new();
+    match source.recv(&mut buf) {
+        Ok(true) => {}
+        Ok(false) => return Err(anyhow!("coordinator closed before INIT")),
+        Err(e) => return Err(anyhow!("INIT receive failed: {e:#}")),
+    }
+    if !matches!(wire::cmd_tag(&buf)?, CmdTag::Init) {
+        return Err(anyhow!("expected INIT handshake first"));
+    }
+    let init = wire::decode_init(&buf)?;
+    let shard = init.shard;
+    let result = run_shard_body(&init, &mut sink, &mut source);
+    if let Err(e) = &result {
+        let mut out = Vec::new();
+        wire::encode_failed(&mut out, shard, &format!("{e:#}"));
+        let _ = sink.send(&out);
+    }
+    result
+}
+
+/// One shard's mpsc-mode thread body: build the requested compute,
 /// then serve round commands until `Stop`.
-fn shard_worker(
+fn shard_thread_mpsc(
     cfg: ExperimentConfig,
+    compute: ComputeSpec,
     shard: usize,
     shards: usize,
     cmd_rx: mpsc::Receiver<ShardCmd>,
     msg_tx: mpsc::Sender<ShardMsg>,
 ) {
     let run = || -> Result<()> {
-        let rt = Runtime::cpu()?;
-        let mr = ModelRuntime::open(&rt, &cfg.artifacts_root, &cfg.variant)?;
-        // Identical deterministic substrate on every shard; only the
-        // round-robin-owned clients are instantiated here.
-        let setup = build_setup(&mr, &cfg, |ci| scheduler::shard_of(ci, shards) == shard)?;
-        let mut clients = setup.clients;
-        let train_data = setup.train_data;
-        let test_batches = setup.test_batches;
-        let manifest = mr.manifest.clone();
-        let pcfg = cfg.protocol_config();
-        let update_idx = manifest.update_indices();
-        let scale_idx = manifest.group_indices(crate::model::Group::Scale);
-        // Auto-sized pools split the machine between shards instead of
-        // each grabbing full parallelism (N shards × ncpu codec threads
-        // would just thrash); explicit widths are per-shard as documented.
-        let pool = if cfg.codec_workers == 0 {
-            let auto = WorkerPool::new(0).workers();
-            WorkerPool::new((auto / shards).max(1))
-        } else {
-            WorkerPool::new(cfg.codec_workers)
-        };
-        let mode: ScheduleMode = cfg.schedule_mode();
-
-        msg_tx
-            .send(ShardMsg::Ready {
-                shard,
-                init: setup.init,
-            })
-            .map_err(|_| anyhow!("coordinator disconnected"))?;
-
-        // Recycled lanes: grown to this shard's per-round watermark.
-        let mut free: Vec<RoundLane> = Vec::new();
-        let mut lanes: Vec<RoundLane> = Vec::new();
-        loop {
-            match cmd_rx.recv() {
-                Ok(ShardCmd::Round { slots }) => {
-                    let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
-                    while free.len() < order.len() {
-                        free.push(RoundLane::new(manifest.clone()));
-                    }
-                    lanes.clear();
-                    let keep = free.len() - order.len();
-                    lanes.extend(free.drain(keep..));
-                    // The same ComputePlane glue the single-process
-                    // Experiment uses, with round-robin local indexing.
-                    let mut compute = ExperimentCompute {
-                        mr: &mr,
-                        clients: &mut clients,
-                        shards,
-                        train_data: &train_data,
-                        cfg: &cfg,
-                        pcfg: &pcfg,
-                    };
-                    scheduler::run_round(
-                        mode,
-                        &pool,
-                        &mut compute,
-                        &mut lanes,
-                        &order,
-                        &pcfg,
-                        &update_idx,
-                        &scale_idx,
-                    )?;
-                    let tagged: Vec<(usize, RoundLane)> = slots
-                        .iter()
-                        .map(|&(slot, _)| slot)
-                        .zip(lanes.drain(..))
-                        .collect();
-                    msg_tx
-                        .send(ShardMsg::RoundDone {
-                            shard,
-                            lanes: tagged,
-                        })
-                        .map_err(|_| anyhow!("coordinator disconnected"))?;
-                }
-                Ok(ShardCmd::Apply {
-                    broadcast,
-                    lanes: returned,
-                    eval,
-                }) => {
-                    for c in clients.iter_mut() {
-                        c.apply_broadcast(&broadcast);
-                    }
-                    free.extend(returned.into_iter().map(|(_, l)| l));
-                    if eval {
-                        // Post-broadcast, every replica equals the server
-                        // model; evaluate on this shard's first client
-                        // (global client 0 lives on shard 0).
-                        let replica = &clients
-                            .first()
-                            .ok_or_else(|| anyhow!("eval shard owns no clients"))?
-                            .global;
-                        let report = evaluate_params(&mr, replica, &test_batches)?;
-                        let scale_stats = if pcfg.scaled {
-                            clients[0]
-                                .scale_values()
-                                .into_iter()
-                                .map(|(layer, vals)| ScaleStats::from_values(&layer, &vals))
-                                .collect()
-                        } else {
-                            Vec::new()
-                        };
-                        msg_tx
-                            .send(ShardMsg::Eval {
-                                report,
-                                scale_stats,
-                            })
-                            .map_err(|_| anyhow!("coordinator disconnected"))?;
-                    }
-                }
-                Ok(ShardCmd::Stop) | Err(_) => break,
+        match &compute {
+            ComputeSpec::Real => {
+                let rt = Runtime::cpu()?;
+                let mr = ModelRuntime::open(&rt, &cfg.artifacts_root, &cfg.variant)?;
+                let mut body = RealShard::build(&mr, &cfg, shard, shards)?;
+                shard_loop_mpsc(&mut body, shard, &cmd_rx, &msg_tx)
+            }
+            ComputeSpec::Synthetic { manifest } => {
+                let mut body = SynthShard::new(manifest.clone(), &cfg, shards);
+                shard_loop_mpsc(&mut body, shard, &cmd_rx, &msg_tx)
             }
         }
-        Ok(())
     };
     if let Err(e) = run() {
         let _ = msg_tx.send(ShardMsg::Failed {
@@ -506,6 +1218,116 @@ fn shard_worker(
             msg: format!("{e:#}"),
         });
     }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process deployment
+// ---------------------------------------------------------------------------
+
+/// Coordinate an experiment over shard workers joining through
+/// `listener` (the multi-process server side). Accepts
+/// `resolved_shards(&cfg)` connections — polling `liveness` while
+/// waiting, so a dead worker fails the join fast — then drives the full
+/// wire protocol and returns the [`RunLog`] (with measured
+/// [`RunLog::wire`] traffic). Shard identity is assigned by the INIT
+/// handshake, so join order does not matter.
+pub fn serve(
+    cfg: ExperimentConfig,
+    listener: &TcpListener,
+    compute: ComputeSpec,
+    mut liveness: impl FnMut() -> Result<()>,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    let shards = resolved_shards(&cfg);
+    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let stream = accept_one(listener, JOIN_TIMEOUT, &mut liveness)?;
+        conns.push(Box::new(TcpTransport::new(stream)));
+    }
+    let result = drive_wire_coordinator(&cfg, shards, conns, &compute, &mut on_event);
+    match &result {
+        Ok(log) => on_event(&Event::Finished(log.clone())),
+        Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
+    }
+    result
+}
+
+/// Join a coordinator as one shard worker (the multi-process worker
+/// side; `fsfl shard-worker --connect HOST:PORT` calls this). Connects,
+/// receives the INIT handshake (experiment config + compute spec +
+/// shard assignment), serves rounds until STOP, then returns.
+pub fn join_shard(addr: &str) -> Result<()> {
+    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
+}
+
+/// Run a sharded experiment with every shard as a **separate OS
+/// process**: binds a localhost listener, spawns one `worker_exe
+/// shard-worker --connect <addr>` child per shard, and serves the wire
+/// protocol. Children are reaped on success and killed on failure (a
+/// child dying early fails the run fast instead of hanging it).
+pub fn run_experiment_processes(
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    worker_exe: &Path,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    let shards = resolved_shards(&cfg);
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| anyhow!("binding shard listener: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| anyhow!("listener address: {e}"))?;
+    let mut spawned = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let child = std::process::Command::new(worker_exe)
+            .arg("shard-worker")
+            .arg("--connect")
+            .arg(addr.to_string())
+            .spawn()
+            .map_err(|e| {
+                anyhow!(
+                    "spawning shard worker {shard} via {}: {e}",
+                    worker_exe.display()
+                )
+            })?;
+        spawned.push(child);
+    }
+    let children = std::cell::RefCell::new(spawned);
+    let result = serve(
+        cfg,
+        &listener,
+        compute,
+        || {
+            let mut kids = children.borrow_mut();
+            for (i, c) in kids.iter_mut().enumerate() {
+                if let Some(status) = c
+                    .try_wait()
+                    .map_err(|e| anyhow!("polling shard worker {i}: {e}"))?
+                {
+                    return Err(anyhow!(
+                        "shard worker {i} exited early ({status}) before joining"
+                    ));
+                }
+            }
+            Ok(())
+        },
+        on_event,
+    );
+    let mut kids = children.into_inner();
+    match &result {
+        Ok(_) => {
+            for c in kids.iter_mut() {
+                let _ = c.wait();
+            }
+        }
+        Err(_) => {
+            for c in kids.iter_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    result
 }
 
 /// Default per-round progress line used by the CLI and examples.

@@ -126,6 +126,60 @@ impl std::str::FromStr for Protocol {
     }
 }
 
+/// How shard workers and the coordinator exchange `ShardCmd`/`ShardMsg`
+/// traffic in sharded deployments (see `coordinator` and `net`).
+///
+/// Every kind produces byte-identical bitstreams and `RunLog` round
+/// metrics for a fixed config — pinned by the differential conformance
+/// tests in `tests/integration_transport.rs`. They differ in what
+/// actually moves: `Mpsc` passes owned structs between threads, the
+/// wire kinds serialize every message through the `net` frame codec
+/// (and therefore also *measure* transfer bytes instead of estimating
+/// them — see [`crate::metrics::WireStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process typed mpsc channels (zero serialization; the fastest
+    /// shape for shards-as-threads).
+    #[default]
+    Mpsc,
+    /// In-process byte pipes speaking the full wire protocol (frames,
+    /// checksums, serialization) without a socket — the loopback
+    /// reference every TCP byte is compared against.
+    Loopback,
+    /// `std::net` TCP on localhost; shards may live in other OS
+    /// processes (`fsfl shard-worker`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Human-readable name (matches the `--transport` CLI values).
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Mpsc => "mpsc",
+            TransportKind::Loopback => "loopback",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Whether shard traffic crosses the serialized wire protocol (as
+    /// opposed to moving as owned in-process structs).
+    pub fn is_wire(self) -> bool {
+        !matches!(self, TransportKind::Mpsc)
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mpsc" | "channel" => Ok(TransportKind::Mpsc),
+            "loopback" | "loop" => Ok(TransportKind::Loopback),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(anyhow::anyhow!("unknown transport {other:?}")),
+        }
+    }
+}
+
 /// Full experiment description (one Fig. 2 curve / Table 2 cell).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -200,6 +254,11 @@ pub struct ExperimentConfig {
     /// in-process [`crate::fl::Experiment`] itself always runs one
     /// shard; outputs are byte-identical for every shard count.
     pub compute_shards: usize,
+    /// How shard traffic moves between workers and the coordinator. A
+    /// wire kind forces the sharded deployment path even for one shard
+    /// (so the serialization seam is exercised); outputs are
+    /// byte-identical for every kind.
+    pub transport: TransportKind,
 }
 
 impl ExperimentConfig {
@@ -238,6 +297,7 @@ impl ExperimentConfig {
             codec_workers: 0,
             pipelined: false,
             compute_shards: 1,
+            transport: TransportKind::Mpsc,
         }
     }
 

@@ -65,6 +65,34 @@ pub struct RoundLane {
     pub error: Option<anyhow::Error>,
 }
 
+/// Borrowed wire image of one finished [`RoundLane`] — the fields a
+/// shard transmits so the coordinator can reconstruct the lane (see
+/// [`RoundLane::wire_parts`] / [`RoundLane::restore_wire`]).
+pub struct LaneParts<'a> {
+    /// Client id this lane served.
+    pub client: usize,
+    /// Encoded W-update bitstream (None for plain FedAvg).
+    pub stream_w: Option<&'a [u8]>,
+    /// Encoded S-update bitstream (None unless a scale update was kept
+    /// alongside an encoded W stream).
+    pub stream_s: Option<&'a [u8]>,
+    /// The raw f32 update when no W stream exists (plain FedAvg's wire
+    /// format; already includes any S contribution).
+    pub raw: Option<&'a Delta>,
+    /// Upstream wire-byte accounting for this lane.
+    pub up_bytes: usize,
+    /// Wall-clock milliseconds of local weight training.
+    pub train_ms: u128,
+    /// Wall-clock milliseconds of the scale sub-epochs.
+    pub scale_ms: u128,
+    /// Mean local training loss.
+    pub train_loss: f64,
+    /// Whether the client kept its scale update.
+    pub scale_accepted: bool,
+    /// W-encode size/occupancy statistics.
+    pub stats: EncodeStats,
+}
+
 impl RoundLane {
     /// Allocate a lane's buffers once; reuse it for every later round.
     pub fn new(manifest: Arc<Manifest>) -> Self {
@@ -214,6 +242,70 @@ impl RoundLane {
             )?;
             self.decoded.accumulate(&self.sdec);
         }
+        Ok(())
+    }
+
+    /// The lane's wire image: exactly what a shard must transmit for the
+    /// coordinator to reconstruct this round's contribution (see
+    /// `net::wire`). Encoded protocols ship the actual bitstreams; plain
+    /// FedAvg ships the raw f32 update (`raw` covers any S contribution
+    /// already, so no separate S stream travels in that case).
+    pub fn wire_parts(&self) -> LaneParts<'_> {
+        let w = self.has_w_stream;
+        LaneParts {
+            client: self.client,
+            stream_w: w.then(|| self.stream_w.as_slice()),
+            stream_s: (w && self.has_s_stream).then(|| self.stream_s.as_slice()),
+            raw: (!w).then_some(&self.update),
+            up_bytes: self.up_bytes,
+            train_ms: self.train_ms,
+            scale_ms: self.scale_ms,
+            train_loss: self.train_loss,
+            scale_accepted: self.scale_accepted,
+            stats: self.stats,
+        }
+    }
+
+    /// Rebuild a coordinator-side lane from a received wire image.
+    ///
+    /// Caller contract (upheld by `net::wire::decode_round_done_into`):
+    /// before this call, `stream_w`/`stream_s` hold the received
+    /// bitstreams when `has_w`/`has_s` are set, and `decoded` holds the
+    /// received raw f32 update when neither is. This method resets the
+    /// per-round bookkeeping, installs the transmitted scalars, and —
+    /// for encoded lanes — performs the server-side decode of the actual
+    /// bitstreams into `decoded` (wire-path fidelity: aggregation
+    /// consumes exactly the bytes that crossed the transport).
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore_wire(
+        &mut self,
+        client: usize,
+        has_w: bool,
+        has_s: bool,
+        up_bytes: usize,
+        train_ms: u128,
+        scale_ms: u128,
+        train_loss: f64,
+        scale_accepted: bool,
+        stats: EncodeStats,
+    ) -> anyhow::Result<()> {
+        self.begin(client);
+        self.has_w_stream = has_w;
+        self.has_s_stream = has_s;
+        self.up_bytes = up_bytes;
+        self.train_ms = train_ms;
+        self.scale_ms = scale_ms;
+        self.train_loss = train_loss;
+        self.scale_accepted = scale_accepted;
+        self.stats = stats;
+        if has_w || has_s {
+            self.decode_wire()?;
+        }
+        // The client-side view equals the server-side reconstruction by
+        // the codec invariant; restoring both keeps every downstream
+        // consumer (metrics sparsity, aggregation) oblivious to whether
+        // the lane crossed a wire.
+        self.update.copy_from(&self.decoded);
         Ok(())
     }
 

@@ -31,9 +31,10 @@
 //! allocations per round, never model-sized buffers).
 //!
 //! Multi-tenant scale: `coordinator::run_experiment_sharded` shards
-//! clients across N compute threads (one PJRT client per shard) and
-//! fans their lanes back into the same ordered reduction; see
-//! `ARCHITECTURE.md`.
+//! clients across N compute workers (one PJRT client per shard —
+//! threads over in-process channels, or OS processes speaking the
+//! framed wire protocol in `crate::net`) and fans their lanes back
+//! into the same ordered reduction; see `ARCHITECTURE.md`.
 
 pub mod client;
 pub mod config;
@@ -41,15 +42,17 @@ pub mod lane;
 pub mod schedule;
 pub mod scheduler;
 pub mod server;
+pub mod synth;
 #[cfg(test)]
 mod tests;
 
 pub use client::Client;
-pub use config::{ExperimentConfig, Protocol, ProtocolConfig};
-pub use lane::RoundLane;
+pub use config::{ExperimentConfig, Protocol, ProtocolConfig, TransportKind};
+pub use lane::{LaneParts, RoundLane};
 pub use schedule::{LrSchedule, ScheduleKind};
 pub use scheduler::{ComputePlane, ScheduleMode};
 pub use server::{evaluate_params, EvalReport, Server};
+pub use synth::SyntheticPlane;
 
 use anyhow::{anyhow, Result};
 

@@ -117,6 +117,13 @@ pub fn shard_of(client: usize, shards: usize) -> usize {
 /// so downstream aggregation and metrics see exactly the order a
 /// single-shard round would produce. Slot tags are kept so the caller
 /// can route each lane back to its owning shard afterwards.
+///
+/// This is also the ordering guarantee of the **wire** deployments
+/// (`crate::net`): slot tags travel inside each `ROUND_DONE` frame, so
+/// whether lanes arrive as moved structs from threads or as decoded
+/// frames from TCP peers — in whatever interleaving the transport
+/// produces — the reduction order is a pure function of the round's
+/// participant selection, never of arrival order.
 pub fn fan_in(mut parts: Vec<(usize, RoundLane)>) -> Vec<(usize, RoundLane)> {
     parts.sort_by_key(|(slot, _)| *slot);
     parts

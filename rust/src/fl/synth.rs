@@ -1,0 +1,110 @@
+//! Deterministic synthetic compute plane.
+//!
+//! The transport/scheduler test planes need a compute plane whose output
+//! is a pure function of `(client id, round seed)` — no PJRT backend, no
+//! artifacts directory — so the *protocol* machinery (scheduling,
+//! sharded fan-in, wire transports, multi-process workers) can be
+//! exercised byte-for-byte everywhere, including CI on the vendored null
+//! XLA backend. [`SyntheticPlane`] is that plane: what a client "trains"
+//! is seeded noise shaped like a real differential update (coarse
+//! magnitudes on row-structured tensors, fine magnitudes on
+//! scale/bias/BN tensors), and scale updates are accepted by client-id
+//! parity so the decision is independent of scheduling shape.
+//!
+//! The synthetic shard worker (see `coordinator`) pairs this with
+//! [`synth_eval`]: a central-model "evaluation" derived from the FNV
+//! checksum of the accumulated broadcasts. Any single-bit divergence in
+//! any aggregated broadcast — i.e. in any transmitted bitstream —
+//! changes the reported accuracy, which is what lets the differential
+//! conformance tests pin bitstream identity through nothing but
+//! `RunLog` equality.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::XorShiftRng;
+use crate::fl::scheduler::ComputePlane;
+use crate::fl::server::EvalReport;
+use crate::fl::RoundLane;
+use crate::model::params::Delta;
+use crate::model::{Group, Manifest};
+
+/// Fill `out` with a seeded synthetic differential update: every tensor
+/// is overwritten with Gaussian noise at coarse (row-structured) or fine
+/// (scale/bias/BN) magnitude, mimicking a real post-training ΔW.
+pub fn synth_client_delta(m: &Arc<Manifest>, seed: u64, out: &mut Delta) {
+    let mut rng = XorShiftRng::new(seed);
+    for (t, spec) in out.tensors.iter_mut().zip(&m.tensors) {
+        let scale = if spec.kind.is_fine_quantized() { 5e-6 } else { 8e-4 };
+        for x in t.iter_mut() {
+            *x = rng.normal() * scale;
+        }
+    }
+}
+
+/// Fill `out` with a seeded synthetic S-only delta: zeros everywhere
+/// except the scale-group tensors (the shape `RoundLane::finish_round`
+/// expects in `sdelta`).
+pub fn synth_scale_delta(m: &Arc<Manifest>, seed: u64, out: &mut Delta) {
+    let mut rng = XorShiftRng::new(seed ^ 0x5CA1E);
+    out.clear();
+    for &si in &m.group_indices(Group::Scale) {
+        for x in out.tensors[si].iter_mut() {
+            *x = rng.normal() * 1e-4;
+        }
+    }
+}
+
+/// Deterministic stand-in for central-model evaluation: quality metrics
+/// derived from the FNV checksum of the accumulated broadcast deltas.
+/// A pure function of every byte the server ever aggregated, so two
+/// deployments report equal accuracy iff their broadcast history is
+/// bit-identical.
+pub fn synth_eval(broadcast_accum: &Delta) -> EvalReport {
+    let h = broadcast_accum.checksum();
+    let unit = |x: u64| (x % 1_000_000) as f64 / 1e6;
+    EvalReport {
+        loss: unit(h.rotate_left(17)),
+        accuracy: unit(h),
+        f1: unit(h.rotate_left(31)),
+    }
+}
+
+/// A [`ComputePlane`] whose training output is a pure function of
+/// `(round_seed, client id)`. The driver sets [`Self::round_seed`]
+/// before each round (the synthetic shard worker derives it from the
+/// experiment seed and a per-round counter, identically on every shard).
+pub struct SyntheticPlane {
+    /// Model contract the synthetic deltas conform to.
+    pub manifest: Arc<Manifest>,
+    /// Per-round seed; combined with the client id per lane.
+    pub round_seed: u64,
+    /// Whether scale sub-epochs run (even-id clients keep an S update).
+    pub scaled: bool,
+}
+
+impl ComputePlane for SyntheticPlane {
+    fn train(&mut self, lane: &mut RoundLane) -> Result<()> {
+        synth_client_delta(
+            &self.manifest,
+            self.round_seed + lane.client as u64,
+            &mut lane.raw,
+        );
+        Ok(())
+    }
+
+    fn scale(&mut self, lane: &mut RoundLane) -> Result<()> {
+        // Client-intrinsic acceptance (by id parity, not round slot), so
+        // the decision is independent of scheduling shape.
+        if self.scaled && lane.client % 2 == 0 {
+            synth_scale_delta(
+                &self.manifest,
+                self.round_seed + lane.client as u64,
+                &mut lane.sdelta,
+            );
+            lane.scale_accepted = true;
+        }
+        Ok(())
+    }
+}

@@ -37,6 +37,7 @@ pub mod fl;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 
 pub use anyhow::{anyhow, Result};

@@ -10,7 +10,7 @@ use fsfl::cli::Flags;
 use fsfl::compression::SparsifyMode;
 use fsfl::coordinator;
 use fsfl::data::TaskKind;
-use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind};
+use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind, TransportKind};
 use fsfl::harness;
 use fsfl::runtime::Optimizer;
 
@@ -26,7 +26,10 @@ COMMANDS:
            --bidirectional --dirichlet --train-per-client --val-per-client
            --test-samples --warmup-steps --participation --seed
            --target-accuracy --codec-workers --pipelined
-           --compute-shards)
+           --compute-shards --transport mpsc|loopback|tcp --shard-procs)
+  shard-worker  join a coordinator as one shard process
+           (--connect HOST:PORT; spawned automatically by
+           `run --shard-procs`, or launch by hand against `serve`)
   fig1     LR schedule series (--epochs --steps-per-epoch --base-lr)
   fig2     accuracy vs transmitted data per config (--preset quick|paper
            --variant --task --sgd --bidirectional --clients --rounds)
@@ -88,13 +91,28 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     cfg.participation = flags.get_or("participation", 1.0)?;
     cfg.seed = flags.get_or("seed", 0)?;
     cfg.target_accuracy = flags.get("target-accuracy")?;
+    cfg.transport = flags.str_or("transport", "mpsc").parse::<TransportKind>()?;
+    let shard_procs = flags.flag("shard-procs");
     flags.reject_unknown()?;
 
-    let log = coordinator::run_experiment_threaded(cfg, |ev| {
+    let on_event = |ev: &coordinator::Event| {
         if let coordinator::Event::RoundDone(m) = ev {
             coordinator::print_round(m);
         }
-    })?;
+    };
+    let log = if shard_procs {
+        // Real OS processes need a socket: shard-procs implies TCP.
+        cfg.transport = TransportKind::Tcp;
+        let exe = std::env::current_exe()?;
+        coordinator::run_experiment_processes(
+            cfg,
+            coordinator::ComputeSpec::Real,
+            &exe,
+            on_event,
+        )?
+    } else {
+        coordinator::run_experiment_threaded(cfg, on_event)?
+    };
     let csv = out.join(format!("{}.csv", log.name));
     log.write_csv(&csv)?;
     println!(
@@ -103,6 +121,13 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         fsfl::metrics::fmt_bytes(log.total_bytes(true)),
         csv.display()
     );
+    if let Some(w) = log.wire {
+        println!(
+            "wire (measured at the frame layer): {} to shards, {} from shards",
+            fsfl::metrics::fmt_bytes(w.sent as usize),
+            fsfl::metrics::fmt_bytes(w.received as usize),
+        );
+    }
     Ok(())
 }
 
@@ -115,10 +140,20 @@ fn main() -> Result<()> {
     let flags = Flags::parse(&args[1..])?;
     let artifacts = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
     let out = std::path::PathBuf::from(flags.str_or("out", "results"));
-    std::fs::create_dir_all(&out).ok();
+    // Worker processes produce no result files; don't litter their CWD.
+    if !matches!(cmd.as_str(), "shard-worker" | "--shard-worker") {
+        std::fs::create_dir_all(&out).ok();
+    }
 
     match cmd.as_str() {
         "run" => cmd_run(&flags, &artifacts, &out)?,
+        "shard-worker" | "--shard-worker" => {
+            let addr = flags
+                .str_opt("connect")
+                .ok_or_else(|| anyhow::anyhow!("shard-worker needs --connect HOST:PORT"))?;
+            flags.reject_unknown()?;
+            coordinator::join_shard(&addr)?;
+        }
         "fig1" => {
             let a = harness::Fig1Args::from_flags(&flags)?;
             flags.reject_unknown()?;

@@ -29,7 +29,10 @@ impl ScaleStats {
     /// Summarize one layer's scale values.
     pub fn from_values(layer: &str, values: &[f32]) -> Self {
         let mut v: Vec<f32> = values.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a diverging run can produce NaN scale values, and
+        // `partial_cmp(..).unwrap()` would panic the whole experiment on
+        // the first one. Total order sorts NaNs to the ends instead.
+        v.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| -> f32 {
             if v.is_empty() {
                 return 0.0;
@@ -133,6 +136,32 @@ pub struct RoundMetrics {
     pub scale_stats: Vec<ScaleStats>,
 }
 
+/// Bytes actually moved over a shard transport, **measured at the frame
+/// layer** (length prefix, checksum and payload included) rather than
+/// estimated from bitstream lengths. Only populated by wire transports
+/// (loopback/TCP); the in-process mpsc fan-in moves no bytes.
+///
+/// These are coordinator-side totals over the whole run: `sent` counts
+/// coordinator→shard traffic (round fan-out + broadcasts), `received`
+/// counts shard→coordinator traffic (lane bitstreams + metrics). The
+/// framing is deterministic, so for a fixed config the loopback and TCP
+/// transports measure identical totals (pinned by
+/// `tests/integration_transport.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Total frame bytes sent coordinator → shards.
+    pub sent: u64,
+    /// Total frame bytes received shards → coordinator.
+    pub received: u64,
+}
+
+impl WireStats {
+    /// Sum of both directions.
+    pub fn total(&self) -> u64 {
+        self.sent + self.received
+    }
+}
+
 /// Full experiment log: what all figure harnesses consume.
 #[derive(Debug, Clone, Default)]
 pub struct RunLog {
@@ -140,6 +169,10 @@ pub struct RunLog {
     pub name: String,
     /// One record per completed round.
     pub rounds: Vec<RoundMetrics>,
+    /// Measured transport traffic (wire deployments only, `None` for the
+    /// in-process paths). Deliberately *not* part of the per-round
+    /// metrics: round records stay byte-identical across transports.
+    pub wire: Option<WireStats>,
 }
 
 impl RunLog {
@@ -148,6 +181,7 @@ impl RunLog {
         Self {
             name: name.into(),
             rounds: Vec::new(),
+            wire: None,
         }
     }
 
@@ -250,6 +284,22 @@ mod tests {
         assert!((s.median - 0.5).abs() < 1e-6);
         assert!((s.q25 - 0.25).abs() < 1e-6);
         assert!((s.suppressed - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn scale_stats_survive_nan_values() {
+        // Regression: a diverging run produces NaN scales; from_values
+        // used partial_cmp().unwrap() and panicked. total_cmp sorts NaN
+        // to the ends and the summary stays well-defined for the finite
+        // slots.
+        let vals = vec![0.5f32, f32::NAN, 0.1, 0.9, f32::NAN];
+        let s = ScaleStats::from_values("l", &vals);
+        assert_eq!(s.min, 0.1, "finite minimum survives NaN neighbours");
+        assert!(s.max.is_nan(), "positive NaN sorts last under total order");
+        assert!(s.layer == "l");
+        // all-NaN input: still no panic
+        let s = ScaleStats::from_values("l", &[f32::NAN, f32::NAN]);
+        assert!(s.min.is_nan() && s.max.is_nan());
     }
 
     #[test]

@@ -56,6 +56,22 @@ impl Kind {
     pub fn is_fine_quantized(self) -> bool {
         !self.is_row_structured()
     }
+
+    /// The TSV tag this kind parses from (inverse of
+    /// [`std::str::FromStr`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::ConvW => "conv_w",
+            Kind::DwConvW => "dw_conv_w",
+            Kind::DenseW => "dense_w",
+            Kind::Bias => "bias",
+            Kind::BnGamma => "bn_gamma",
+            Kind::BnBeta => "bn_beta",
+            Kind::BnMean => "bn_mean",
+            Kind::BnVar => "bn_var",
+            Kind::Scale => "scale",
+        }
+    }
 }
 
 impl std::str::FromStr for Kind {
@@ -88,6 +104,19 @@ pub enum Group {
     State,
     /// Never updated (partial-update models' feature extractors).
     Frozen,
+}
+
+impl Group {
+    /// The TSV tag this group parses from (inverse of
+    /// [`std::str::FromStr`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Group::Weight => "weight",
+            Group::Scale => "scale",
+            Group::State => "state",
+            Group::Frozen => "frozen",
+        }
+    }
 }
 
 impl std::str::FromStr for Group {
@@ -278,6 +307,39 @@ impl Manifest {
         Ok(())
     }
 
+    /// Render the manifest back to its `manifest.tsv` text form — the
+    /// exact format [`Manifest::parse`] reads (round-trip pinned by unit
+    /// test). This is how the model contract crosses the shard wire: a
+    /// joining shard sends its manifest in the `Ready` handshake so the
+    /// coordinator needs no artifacts directory of its own.
+    pub fn to_tsv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "model\t{}", self.model);
+        let _ = writeln!(out, "variant\t{}", self.variant);
+        let _ = writeln!(out, "classes\t{}", self.classes);
+        let dims: Vec<String> = self.input.iter().map(|d| d.to_string()).collect();
+        let _ = writeln!(out, "input\t{}", dims.join(" "));
+        let _ = writeln!(out, "batch\t{}", self.batch);
+        let _ = writeln!(out, "param_count\t{}", self.param_count);
+        let _ = writeln!(out, "scale_count\t{}", self.scale_count);
+        for t in &self.tensors {
+            let shape: Vec<String> = t.shape.iter().map(|d| d.to_string()).collect();
+            let _ = writeln!(
+                out,
+                "tensor\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                t.name,
+                t.kind.as_str(),
+                t.group.as_str(),
+                t.layer,
+                t.out_ch.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+                t.scale_for.clone().unwrap_or_else(|| "-".into()),
+                shape.join(" "),
+            );
+        }
+        out
+    }
+
     /// Wire-order index of a tensor by name.
     pub fn index_of(&self, name: &str) -> Option<usize> {
         self.tensors.iter().position(|t| t.name == name)
@@ -330,6 +392,14 @@ mod tests {
         assert_eq!(m.group_indices(Group::Scale), vec![1]);
         assert_eq!(m.update_indices(), vec![0, 1, 2]);
         assert_eq!(m.scale_param_count(), 3);
+    }
+
+    #[test]
+    fn tsv_round_trips() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let again = Manifest::parse(&m.to_tsv()).unwrap();
+        assert_eq!(m, again, "to_tsv → parse must be the identity");
+        again.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Length-prefixed, checksummed frame codec — the lowest layer of the
+//! shard wire protocol.
+//!
+//! Every message crosses the transport as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"FSNT"
+//! 4       4     payload length, u32 LE
+//! 8       8     FNV-1a 64 of the payload, u64 LE
+//! 16      len   payload (one `net::wire` message)
+//! ```
+//!
+//! The reader is defensive by construction: a wrong magic, an oversized
+//! length, a truncated header/payload or a checksum mismatch all return
+//! errors (never panic, never a partial frame in `buf`), and a clean
+//! close *between* frames is distinguished from a close *inside* one —
+//! the coordinator uses that distinction to tell "shard finished" from
+//! "shard died mid-round". Pinned by the fault-injection property tests
+//! in `tests/integration_transport.rs`.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, Result};
+
+/// Frame preamble; rejects cross-protocol traffic immediately.
+pub const MAGIC: [u8; 4] = *b"FSNT";
+
+/// Fixed frame header size (magic + length + checksum).
+pub const HEADER_LEN: usize = 16;
+
+/// Default payload-size cap. Generous (a broadcast delta for a large
+/// model is tens of MB) but finite, so a corrupted length field can
+/// never drive an unbounded allocation.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// FNV-1a 64 over a byte slice (same constants as `Delta::checksum`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Total on-wire size of a frame with a `payload_len`-byte payload.
+pub fn frame_len(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len
+}
+
+/// Write one frame. The caller flushes (batching several frames per
+/// syscall is the transport's choice, not the codec's).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(anyhow!(
+            "frame payload {} bytes exceeds cap {MAX_PAYLOAD}",
+            payload.len()
+        ));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[8..16].copy_from_slice(&fnv1a(payload).to_le_bytes());
+    w.write_all(&header)
+        .and_then(|_| w.write_all(payload))
+        .map_err(|e| anyhow!("frame write failed: {e}"))
+}
+
+/// Read until `dst` is full, reporting how the stream ended if it ends
+/// early. `already` is how many bytes of the larger unit were consumed
+/// before this call (for the error message's benefit).
+fn read_full(r: &mut impl Read, dst: &mut [u8], what: &str, already: usize) -> Result<usize> {
+    let mut got = 0usize;
+    while got < dst.len() {
+        match r.read(&mut dst[got..]) {
+            Ok(0) => return Ok(got),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(anyhow!(
+                    "frame read failed in {what} after {} bytes: {e}",
+                    already + got
+                ))
+            }
+        }
+    }
+    Ok(got)
+}
+
+/// Read one frame's payload into `buf` (cleared and overwritten).
+///
+/// Returns `Ok(true)` on a valid frame, `Ok(false)` on a clean close at
+/// a frame boundary (zero bytes read), and an error for everything
+/// else: truncated header/payload, bad magic, length above
+/// `max_payload`, or checksum mismatch. On error `buf` contents are
+/// unspecified but never observed as a valid message (callers bail).
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>, max_payload: usize) -> Result<bool> {
+    let mut header = [0u8; HEADER_LEN];
+    let got = read_full(r, &mut header, "header", 0)?;
+    if got == 0 {
+        return Ok(false);
+    }
+    if got < HEADER_LEN {
+        return Err(anyhow!("connection closed mid-frame ({got} header bytes)"));
+    }
+    if header[..4] != MAGIC {
+        return Err(anyhow!(
+            "bad frame magic {:02x?} (protocol mismatch or stream desync)",
+            &header[..4]
+        ));
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > max_payload {
+        return Err(anyhow!("oversized frame: {len} bytes > cap {max_payload}"));
+    }
+    let want = u64::from_le_bytes([
+        header[8], header[9], header[10], header[11], header[12], header[13], header[14],
+        header[15],
+    ]);
+    buf.clear();
+    buf.resize(len, 0);
+    let got = read_full(r, buf, "payload", HEADER_LEN)?;
+    if got < len {
+        return Err(anyhow!(
+            "connection closed mid-frame ({got} of {len} payload bytes)"
+        ));
+    }
+    let have = fnv1a(buf);
+    if have != want {
+        return Err(anyhow!(
+            "frame checksum mismatch: header says {want:#018x}, payload hashes to {have:#018x}"
+        ));
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let payload = b"hello shard".to_vec();
+        let wire = frame_bytes(&payload);
+        assert_eq!(wire.len(), frame_len(payload.len()));
+        let mut r = wire.as_slice();
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf, MAX_PAYLOAD).unwrap());
+        assert_eq!(buf, payload);
+        // stream exhausted: clean EOF at the frame boundary
+        assert!(!read_frame(&mut r, &mut buf, MAX_PAYLOAD).unwrap());
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let wire = frame_bytes(&[]);
+        let mut r = wire.as_slice();
+        let mut buf = vec![9u8; 4]; // stale contents must be cleared
+        assert!(read_frame(&mut r, &mut buf, MAX_PAYLOAD).unwrap());
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_partial_frame() {
+        let wire = frame_bytes(b"0123456789");
+        let mut buf = Vec::new();
+        for cut in 1..wire.len() {
+            let mut r = &wire[..cut];
+            let err = read_frame(&mut r, &mut buf, MAX_PAYLOAD).unwrap_err();
+            assert!(
+                format!("{err}").contains("mid-frame"),
+                "cut at {cut}: unexpected error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_are_detected() {
+        let wire = frame_bytes(b"sensitive bits");
+        let mut buf = Vec::new();
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x40;
+            let mut r = bad.as_slice();
+            // Every single-bit corruption must surface as *some* error
+            // (magic, length/truncation, or checksum) — never a clean
+            // frame with wrong bytes.
+            assert!(
+                read_frame(&mut r, &mut buf, MAX_PAYLOAD).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut wire = frame_bytes(b"x");
+        wire[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = wire.as_slice();
+        let err = read_frame(&mut r, &mut Vec::new(), MAX_PAYLOAD).unwrap_err();
+        assert!(format!("{err}").contains("oversized"));
+        // and a caller-tightened cap applies too
+        let wire = frame_bytes(&vec![0u8; 64]);
+        let mut r = wire.as_slice();
+        assert!(read_frame(&mut r, &mut Vec::new(), 16).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut wire = frame_bytes(b"payload");
+        wire[0] = b'X';
+        let mut r = wire.as_slice();
+        let err = read_frame(&mut r, &mut Vec::new(), MAX_PAYLOAD).unwrap_err();
+        assert!(format!("{err}").contains("magic"));
+    }
+}

@@ -1,0 +1,1076 @@
+//! Message serialization for the shard wire protocol.
+//!
+//! One frame (see [`super::frame`]) carries one message. The first
+//! payload byte is a tag; commands (coordinator → shard) and messages
+//! (shard → coordinator) use disjoint tag ranges so a misrouted frame
+//! is caught immediately:
+//!
+//! ```text
+//! coordinator → shard            shard → coordinator
+//! 0x01 INIT   handshake: cfg +   0x11 READY      manifest.tsv + init
+//!             compute spec                       params (the model
+//! 0x02 ROUND  (slot, client)*                    contract crosses the
+//! 0x03 APPLY  broadcast Δ + eval                 wire, so the
+//! 0x04 STOP                                      coordinator needs no
+//!                                                artifacts of its own)
+//!                                0x12 ROUND_DONE lane frames: bitstreams
+//!                                                + per-lane metrics
+//!                                0x13 EVAL       EvalReport + ScaleStats
+//!                                0x14 FAILED     rendered error chain
+//! ```
+//!
+//! Integers are u64 LE, floats are IEEE-754 LE bit patterns (exact
+//! round-trip), strings and byte blobs are length-prefixed. Every
+//! decoder is total: truncated, oversized, or inconsistent payloads
+//! return errors — never panic, never a partially-restored lane — and
+//! trailing bytes are rejected (a length desync can't hide). Pinned by
+//! the randomized corpus tests in `tests/integration_transport.rs`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::compression::{EncodeStats, QuantConfig, SparsifyMode};
+use crate::data::TaskKind;
+use crate::fl::config::TransportKind;
+use crate::fl::schedule::ScheduleKind;
+use crate::fl::server::EvalReport;
+use crate::fl::{ExperimentConfig, Protocol, RoundLane};
+use crate::metrics::ScaleStats;
+use crate::model::params::{Delta, ParamSet};
+use crate::model::Manifest;
+use crate::runtime::Optimizer;
+
+/// Wire-protocol revision; bumped on any incompatible layout change.
+/// Carried in INIT and READY so mismatched binaries fail the handshake
+/// with a clear error instead of a checksum/desync mystery.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+const TAG_INIT: u8 = 0x01;
+const TAG_ROUND: u8 = 0x02;
+const TAG_APPLY: u8 = 0x03;
+const TAG_STOP: u8 = 0x04;
+const TAG_READY: u8 = 0x11;
+const TAG_ROUND_DONE: u8 = 0x12;
+const TAG_EVAL: u8 = 0x13;
+const TAG_FAILED: u8 = 0x14;
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_usize(buf, b.len());
+    buf.extend_from_slice(b);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_bytes(buf, s.as_bytes());
+}
+
+/// Bounds-checked cursor over one message payload.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(anyhow!(
+                "truncated message: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn usize_(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow!("value {v} overflows usize"))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn bool_(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(anyhow!("invalid bool byte {other:#04x}")),
+        }
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize_()?;
+        self.take(n)
+    }
+
+    fn str_(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        std::str::from_utf8(b)
+            .map(|s| s.to_string())
+            .map_err(|e| anyhow!("invalid utf-8 string on the wire: {e}"))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(anyhow!(
+                "{} trailing bytes after message end (length desync)",
+                self.remaining()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn expect_tag(rd: &mut Rd, want: u8, what: &str) -> Result<()> {
+    let got = rd.u8()?;
+    if got != want {
+        return Err(anyhow!("expected {what} (tag {want:#04x}), got {got:#04x}"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// f32 slabs (Delta / ParamSet payloads)
+// ---------------------------------------------------------------------------
+
+/// Append a delta's flat f32 values (element count + LE bit patterns,
+/// manifest order). Both sides share the manifest, so tensor boundaries
+/// are implied.
+fn put_delta(buf: &mut Vec<u8>, d: &Delta) {
+    put_usize(buf, d.numel());
+    for t in &d.tensors {
+        for &x in t {
+            put_f32(buf, x);
+        }
+    }
+}
+
+/// Read a slab written by [`put_delta`] into `out` (shape from its
+/// manifest; a size mismatch is an error before anything is written).
+fn read_delta_into(rd: &mut Rd, out: &mut Delta) -> Result<()> {
+    let n = rd.usize_()?;
+    if n != out.numel() {
+        return Err(anyhow!(
+            "delta size mismatch: wire carries {n} values, manifest wants {}",
+            out.numel()
+        ));
+    }
+    let need = n
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("delta byte size overflows"))?;
+    let bytes = rd.take(need)?;
+    let mut off = 0usize;
+    for t in out.tensors.iter_mut() {
+        for x in t.iter_mut() {
+            *x = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+            off += 4;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ExperimentConfig
+// ---------------------------------------------------------------------------
+
+fn put_sparsify(buf: &mut Vec<u8>, m: SparsifyMode) {
+    match m {
+        SparsifyMode::None => buf.push(0),
+        SparsifyMode::Dynamic { delta, gamma } => {
+            buf.push(1);
+            put_f32(buf, delta);
+            put_f32(buf, gamma);
+        }
+        SparsifyMode::TopK { rate } => {
+            buf.push(2);
+            put_f32(buf, rate);
+        }
+    }
+}
+
+fn read_sparsify(rd: &mut Rd) -> Result<SparsifyMode> {
+    Ok(match rd.u8()? {
+        0 => SparsifyMode::None,
+        1 => SparsifyMode::Dynamic {
+            delta: rd.f32()?,
+            gamma: rd.f32()?,
+        },
+        2 => SparsifyMode::TopK { rate: rd.f32()? },
+        other => return Err(anyhow!("unknown sparsify tag {other}")),
+    })
+}
+
+fn put_opt_f64(buf: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => buf.push(0),
+        Some(x) => {
+            buf.push(1);
+            put_f64(buf, x);
+        }
+    }
+}
+
+fn read_opt_f64(rd: &mut Rd) -> Result<Option<f64>> {
+    Ok(match rd.u8()? {
+        0 => None,
+        1 => Some(rd.f64()?),
+        other => return Err(anyhow!("invalid option byte {other}")),
+    })
+}
+
+/// Serialize an [`ExperimentConfig`] (appended to `buf`; field order is
+/// fixed by this function and [`read_config`] alone).
+fn put_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
+    put_str(buf, &cfg.name);
+    put_str(buf, &cfg.artifacts_root.to_string_lossy());
+    put_str(buf, &cfg.variant);
+    buf.push(match cfg.task {
+        TaskKind::CifarLike => 0,
+        TaskKind::VocLike => 1,
+        TaskKind::XrayLike => 2,
+    });
+    buf.push(match cfg.protocol {
+        Protocol::FedAvg => 0,
+        Protocol::FedAvgQ => 1,
+        Protocol::Stc => 2,
+        Protocol::SparseOnly => 3,
+        Protocol::StcScaled => 4,
+        Protocol::Fsfl => 5,
+    });
+    put_sparsify(buf, cfg.sparsify);
+    put_f32(buf, cfg.quant.coarse_step);
+    put_f32(buf, cfg.quant.fine_step);
+    put_usize(buf, cfg.clients);
+    put_usize(buf, cfg.rounds);
+    put_usize(buf, cfg.local_epochs);
+    put_usize(buf, cfg.scale_epochs);
+    put_bool(buf, matches!(cfg.optimizer, Optimizer::Sgd));
+    put_f32(buf, cfg.lr);
+    put_bool(buf, matches!(cfg.scale_optimizer, Optimizer::Sgd));
+    put_f32(buf, cfg.scale_lr);
+    buf.push(match cfg.schedule {
+        ScheduleKind::Const => 0,
+        ScheduleKind::Linear => 1,
+        ScheduleKind::Cawr => 2,
+    });
+    put_bool(buf, cfg.bidirectional);
+    put_opt_f64(buf, cfg.dirichlet_alpha);
+    put_usize(buf, cfg.train_per_client);
+    put_usize(buf, cfg.val_per_client);
+    put_usize(buf, cfg.test_samples);
+    put_u64(buf, cfg.seed);
+    put_opt_f64(buf, cfg.target_accuracy);
+    put_f64(buf, cfg.participation);
+    match cfg.residuals_override {
+        None => buf.push(0),
+        Some(false) => buf.push(1),
+        Some(true) => buf.push(2),
+    }
+    put_usize(buf, cfg.warmup_steps);
+    put_usize(buf, cfg.codec_workers);
+    put_bool(buf, cfg.pipelined);
+    put_usize(buf, cfg.compute_shards);
+    buf.push(match cfg.transport {
+        TransportKind::Mpsc => 0,
+        TransportKind::Loopback => 1,
+        TransportKind::Tcp => 2,
+    });
+}
+
+fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
+    let name = rd.str_()?;
+    let artifacts_root = std::path::PathBuf::from(rd.str_()?);
+    let variant = rd.str_()?;
+    let task = match rd.u8()? {
+        0 => TaskKind::CifarLike,
+        1 => TaskKind::VocLike,
+        2 => TaskKind::XrayLike,
+        other => return Err(anyhow!("unknown task tag {other}")),
+    };
+    let protocol = match rd.u8()? {
+        0 => Protocol::FedAvg,
+        1 => Protocol::FedAvgQ,
+        2 => Protocol::Stc,
+        3 => Protocol::SparseOnly,
+        4 => Protocol::StcScaled,
+        5 => Protocol::Fsfl,
+        other => return Err(anyhow!("unknown protocol tag {other}")),
+    };
+    let sparsify = read_sparsify(rd)?;
+    let quant = QuantConfig {
+        coarse_step: rd.f32()?,
+        fine_step: rd.f32()?,
+    };
+    let clients = rd.usize_()?;
+    let rounds = rd.usize_()?;
+    let local_epochs = rd.usize_()?;
+    let scale_epochs = rd.usize_()?;
+    let optimizer = if rd.bool_()? {
+        Optimizer::Sgd
+    } else {
+        Optimizer::Adam
+    };
+    let lr = rd.f32()?;
+    let scale_optimizer = if rd.bool_()? {
+        Optimizer::Sgd
+    } else {
+        Optimizer::Adam
+    };
+    let scale_lr = rd.f32()?;
+    let schedule = match rd.u8()? {
+        0 => ScheduleKind::Const,
+        1 => ScheduleKind::Linear,
+        2 => ScheduleKind::Cawr,
+        other => return Err(anyhow!("unknown schedule tag {other}")),
+    };
+    let bidirectional = rd.bool_()?;
+    let dirichlet_alpha = read_opt_f64(rd)?;
+    let train_per_client = rd.usize_()?;
+    let val_per_client = rd.usize_()?;
+    let test_samples = rd.usize_()?;
+    let seed = rd.u64()?;
+    let target_accuracy = read_opt_f64(rd)?;
+    let participation = rd.f64()?;
+    let residuals_override = match rd.u8()? {
+        0 => None,
+        1 => Some(false),
+        2 => Some(true),
+        other => return Err(anyhow!("invalid residuals-override byte {other}")),
+    };
+    let warmup_steps = rd.usize_()?;
+    let codec_workers = rd.usize_()?;
+    let pipelined = rd.bool_()?;
+    let compute_shards = rd.usize_()?;
+    let transport = match rd.u8()? {
+        0 => TransportKind::Mpsc,
+        1 => TransportKind::Loopback,
+        2 => TransportKind::Tcp,
+        other => return Err(anyhow!("unknown transport tag {other}")),
+    };
+    Ok(ExperimentConfig {
+        name,
+        artifacts_root,
+        variant,
+        task,
+        protocol,
+        sparsify,
+        quant,
+        clients,
+        rounds,
+        local_epochs,
+        scale_epochs,
+        optimizer,
+        lr,
+        scale_optimizer,
+        scale_lr,
+        schedule,
+        bidirectional,
+        dirichlet_alpha,
+        train_per_client,
+        val_per_client,
+        test_samples,
+        seed,
+        target_accuracy,
+        participation,
+        residuals_override,
+        warmup_steps,
+        codec_workers,
+        pipelined,
+        compute_shards,
+        transport,
+    })
+}
+
+/// Serialize an [`ExperimentConfig`] into `buf` (cleared first). Exact
+/// round-trip through [`decode_config`] — floats travel as bit
+/// patterns, so a config crosses the process boundary without any
+/// value drift.
+pub fn encode_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
+    buf.clear();
+    put_config(buf, cfg);
+}
+
+/// Inverse of [`encode_config`].
+pub fn decode_config(payload: &[u8]) -> Result<ExperimentConfig> {
+    let mut rd = Rd::new(payload);
+    let cfg = read_config(&mut rd)?;
+    rd.done()?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// commands (coordinator → shard)
+// ---------------------------------------------------------------------------
+
+/// What a joining shard should run its compute plane on.
+#[derive(Clone)]
+pub enum ComputeSpec {
+    /// Real PJRT-backed clients built from the config's artifacts.
+    Real,
+    /// The deterministic [`crate::fl::SyntheticPlane`] over this model
+    /// contract — no PJRT, no artifacts; what the transport conformance
+    /// and multi-process CI tests run on.
+    Synthetic {
+        /// Model contract the synthetic deltas conform to.
+        manifest: Arc<Manifest>,
+    },
+}
+
+/// Decoded INIT handshake: everything a joining shard needs to build
+/// its half of the experiment.
+pub struct Init {
+    /// This shard's index.
+    pub shard: usize,
+    /// Total shard count.
+    pub shards: usize,
+    /// The experiment to run (exact copy of the coordinator's config).
+    pub cfg: ExperimentConfig,
+    /// Which compute plane to build.
+    pub compute: ComputeSpec,
+}
+
+/// Encode the INIT handshake into `buf` (cleared first).
+pub fn encode_init(
+    buf: &mut Vec<u8>,
+    shard: usize,
+    shards: usize,
+    cfg: &ExperimentConfig,
+    compute: &ComputeSpec,
+) {
+    buf.clear();
+    buf.push(TAG_INIT);
+    buf.push(PROTOCOL_VERSION);
+    put_usize(buf, shard);
+    put_usize(buf, shards);
+    put_config(buf, cfg);
+    match compute {
+        ComputeSpec::Real => buf.push(0),
+        ComputeSpec::Synthetic { manifest } => {
+            buf.push(1);
+            put_str(buf, &manifest.to_tsv());
+        }
+    }
+}
+
+/// Decode an INIT payload (version-checked).
+pub fn decode_init(payload: &[u8]) -> Result<Init> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_INIT, "INIT")?;
+    let version = rd.u8()?;
+    if version != PROTOCOL_VERSION {
+        return Err(anyhow!(
+            "wire protocol version mismatch: coordinator speaks v{version}, this binary v{PROTOCOL_VERSION}"
+        ));
+    }
+    let shard = rd.usize_()?;
+    let shards = rd.usize_()?;
+    if shards == 0 || shard >= shards {
+        return Err(anyhow!("invalid shard assignment {shard}/{shards}"));
+    }
+    let cfg = read_config(&mut rd)?;
+    let compute = match rd.u8()? {
+        0 => ComputeSpec::Real,
+        1 => {
+            let tsv = rd.str_()?;
+            let manifest = Manifest::parse(&tsv)?;
+            manifest.validate()?;
+            ComputeSpec::Synthetic {
+                manifest: Arc::new(manifest),
+            }
+        }
+        other => return Err(anyhow!("unknown compute-spec tag {other}")),
+    };
+    rd.done()?;
+    Ok(Init {
+        shard,
+        shards,
+        cfg,
+        compute,
+    })
+}
+
+/// Encode a ROUND command (this round's `(global slot, client id)`
+/// assignments for one shard; possibly empty) into `buf`.
+pub fn encode_round(buf: &mut Vec<u8>, slots: &[(usize, usize)]) {
+    buf.clear();
+    buf.push(TAG_ROUND);
+    put_usize(buf, slots.len());
+    for &(slot, client) in slots {
+        put_usize(buf, slot);
+        put_usize(buf, client);
+    }
+}
+
+/// Decode a ROUND payload.
+pub fn decode_round(payload: &[u8]) -> Result<Vec<(usize, usize)>> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_ROUND, "ROUND")?;
+    let count = rd.usize_()?;
+    if count > rd.remaining() / 16 {
+        return Err(anyhow!(
+            "implausible slot count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut slots = Vec::with_capacity(count);
+    for _ in 0..count {
+        let slot = rd.usize_()?;
+        let client = rd.usize_()?;
+        slots.push((slot, client));
+    }
+    rd.done()?;
+    Ok(slots)
+}
+
+/// Encode an APPLY command (the aggregated broadcast delta + whether
+/// this shard evaluates the central model afterwards) into `buf`.
+pub fn encode_apply(buf: &mut Vec<u8>, broadcast: &Delta, eval: bool) {
+    buf.clear();
+    buf.push(TAG_APPLY);
+    put_bool(buf, eval);
+    put_delta(buf, broadcast);
+}
+
+/// Decode an APPLY payload into a recycled broadcast buffer; returns
+/// the eval flag.
+pub fn decode_apply_into(payload: &[u8], broadcast: &mut Delta) -> Result<bool> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_APPLY, "APPLY")?;
+    let eval = rd.bool_()?;
+    read_delta_into(&mut rd, broadcast)?;
+    rd.done()?;
+    Ok(eval)
+}
+
+/// Encode a STOP command into `buf`.
+pub fn encode_stop(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(TAG_STOP);
+}
+
+/// Command-frame kinds (first payload byte), for dispatch before the
+/// per-kind decoder runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmdTag {
+    /// INIT handshake.
+    Init,
+    /// ROUND fan-out.
+    Round,
+    /// APPLY broadcast.
+    Apply,
+    /// Clean shutdown.
+    Stop,
+}
+
+/// Classify a command payload by tag.
+pub fn cmd_tag(payload: &[u8]) -> Result<CmdTag> {
+    match payload.first() {
+        Some(&TAG_INIT) => Ok(CmdTag::Init),
+        Some(&TAG_ROUND) => Ok(CmdTag::Round),
+        Some(&TAG_APPLY) => Ok(CmdTag::Apply),
+        Some(&TAG_STOP) => Ok(CmdTag::Stop),
+        Some(&other) => Err(anyhow!("unknown command tag {other:#04x}")),
+        None => Err(anyhow!("empty command frame")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// messages (shard → coordinator)
+// ---------------------------------------------------------------------------
+
+/// Encode a READY handshake into `buf`: shard index, the model contract
+/// as `manifest.tsv` text, and the initial parameters — everything the
+/// coordinator needs to build the server without artifacts or a runtime
+/// of its own.
+pub fn encode_ready(buf: &mut Vec<u8>, shard: usize, init: &ParamSet) {
+    buf.clear();
+    buf.push(TAG_READY);
+    buf.push(PROTOCOL_VERSION);
+    put_usize(buf, shard);
+    put_str(buf, &init.manifest.to_tsv());
+    put_usize(buf, init.numel());
+    for t in &init.tensors {
+        for &x in t {
+            put_f32(buf, x);
+        }
+    }
+}
+
+/// Decode a READY payload; parses and validates the manifest, then
+/// shapes the parameter slab against it.
+pub fn decode_ready(payload: &[u8]) -> Result<(usize, ParamSet)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_READY, "READY")?;
+    let version = rd.u8()?;
+    if version != PROTOCOL_VERSION {
+        return Err(anyhow!(
+            "wire protocol version mismatch: shard speaks v{version}, this binary v{PROTOCOL_VERSION}"
+        ));
+    }
+    let shard = rd.usize_()?;
+    let tsv = rd.str_()?;
+    let manifest = Manifest::parse(&tsv)?;
+    manifest.validate()?;
+    let manifest = Arc::new(manifest);
+    let numel = rd.usize_()?;
+    let want: usize = manifest.tensors.iter().map(|t| t.numel()).sum();
+    if numel != want {
+        return Err(anyhow!(
+            "init params size mismatch: wire carries {numel} values, manifest wants {want}"
+        ));
+    }
+    let need = numel
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("param byte size overflows"))?;
+    let bytes = rd.take(need)?;
+    let mut off = 0usize;
+    let mut tensors = Vec::with_capacity(manifest.tensors.len());
+    for spec in &manifest.tensors {
+        let mut t = vec![0.0f32; spec.numel()];
+        for x in t.iter_mut() {
+            *x = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+            off += 4;
+        }
+        tensors.push(t);
+    }
+    rd.done()?;
+    let init = ParamSet::new(manifest, tensors)?;
+    Ok((shard, init))
+}
+
+/// Encode a ROUND_DONE message into `buf`: every finished lane's wire
+/// image ([`RoundLane::wire_parts`]), tagged with its global round slot.
+/// Errors only if a wall-clock value overflows the wire (u64 ms).
+pub fn encode_round_done(
+    buf: &mut Vec<u8>,
+    shard: usize,
+    lanes: &[(usize, RoundLane)],
+) -> Result<()> {
+    buf.clear();
+    buf.push(TAG_ROUND_DONE);
+    put_usize(buf, shard);
+    put_usize(buf, lanes.len());
+    for (slot, lane) in lanes {
+        let p = lane.wire_parts();
+        put_usize(buf, *slot);
+        put_usize(buf, p.client);
+        let mut flags = 0u8;
+        if p.stream_w.is_some() {
+            flags |= 1;
+        }
+        if p.stream_s.is_some() {
+            flags |= 2;
+        }
+        if p.raw.is_some() {
+            flags |= 4;
+        }
+        buf.push(flags);
+        put_usize(buf, p.up_bytes);
+        put_u64(
+            buf,
+            u64::try_from(p.train_ms).map_err(|_| anyhow!("train_ms overflows the wire"))?,
+        );
+        put_u64(
+            buf,
+            u64::try_from(p.scale_ms).map_err(|_| anyhow!("scale_ms overflows the wire"))?,
+        );
+        put_f64(buf, p.train_loss);
+        put_bool(buf, p.scale_accepted);
+        put_usize(buf, p.stats.bytes);
+        put_usize(buf, p.stats.nonzero);
+        put_usize(buf, p.stats.total);
+        put_usize(buf, p.stats.rows_skipped);
+        put_usize(buf, p.stats.rows_total);
+        if let Some(w) = p.stream_w {
+            put_bytes(buf, w);
+        }
+        if let Some(s) = p.stream_s {
+            put_bytes(buf, s);
+        }
+        if let Some(raw) = p.raw {
+            put_delta(buf, raw);
+        }
+    }
+    Ok(())
+}
+
+/// Decode a ROUND_DONE payload into coordinator-side lanes (popped from
+/// `free` when available, freshly allocated otherwise). For encoded
+/// protocols this *decodes the transmitted bitstreams* — the server's
+/// aggregation input is reconstructed from exactly the bytes that
+/// crossed the transport. Any inconsistency (flag combinations, sizes,
+/// malformed bitstreams) is an error; no partially-restored lane is
+/// ever returned.
+pub fn decode_round_done_into(
+    payload: &[u8],
+    manifest: &Arc<Manifest>,
+    free: &mut Vec<RoundLane>,
+) -> Result<(usize, Vec<(usize, RoundLane)>)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_ROUND_DONE, "ROUND_DONE")?;
+    let shard = rd.usize_()?;
+    let count = rd.usize_()?;
+    if count > rd.remaining() {
+        return Err(anyhow!(
+            "implausible lane count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut out: Vec<(usize, RoundLane)> = Vec::with_capacity(count);
+    for _ in 0..count {
+        let slot = rd.usize_()?;
+        let client = rd.usize_()?;
+        let flags = rd.u8()?;
+        if flags & !0b111 != 0 {
+            return Err(anyhow!("unknown lane flags {flags:#04x}"));
+        }
+        let (has_w, has_s, has_raw) = (flags & 1 != 0, flags & 2 != 0, flags & 4 != 0);
+        if has_w == has_raw {
+            return Err(anyhow!(
+                "lane must carry exactly one of stream-W / raw update (flags {flags:#04x})"
+            ));
+        }
+        if has_s && !has_w {
+            return Err(anyhow!("S stream without a W stream (flags {flags:#04x})"));
+        }
+        let up_bytes = rd.usize_()?;
+        let train_ms = rd.u64()? as u128;
+        let scale_ms = rd.u64()? as u128;
+        let train_loss = rd.f64()?;
+        let scale_accepted = rd.bool_()?;
+        let stats = EncodeStats {
+            bytes: rd.usize_()?,
+            nonzero: rd.usize_()?,
+            total: rd.usize_()?,
+            rows_skipped: rd.usize_()?,
+            rows_total: rd.usize_()?,
+        };
+        let mut lane = free
+            .pop()
+            .unwrap_or_else(|| RoundLane::new(manifest.clone()));
+        lane.stream_w.clear();
+        lane.stream_s.clear();
+        if has_w {
+            let b = rd.bytes()?;
+            lane.stream_w.extend_from_slice(b);
+        }
+        if has_s {
+            let b = rd.bytes()?;
+            lane.stream_s.extend_from_slice(b);
+        }
+        if has_raw {
+            read_delta_into(&mut rd, &mut lane.decoded)?;
+        }
+        lane.restore_wire(
+            client,
+            has_w,
+            has_s,
+            up_bytes,
+            train_ms,
+            scale_ms,
+            train_loss,
+            scale_accepted,
+            stats,
+        )?;
+        out.push((slot, lane));
+    }
+    rd.done()?;
+    Ok((shard, out))
+}
+
+/// Encode an EVAL message (central-model report + per-layer scale
+/// statistics) into `buf`.
+pub fn encode_eval(buf: &mut Vec<u8>, report: &EvalReport, stats: &[ScaleStats]) {
+    buf.clear();
+    buf.push(TAG_EVAL);
+    put_f64(buf, report.loss);
+    put_f64(buf, report.accuracy);
+    put_f64(buf, report.f1);
+    put_usize(buf, stats.len());
+    for s in stats {
+        put_str(buf, &s.layer);
+        put_f32(buf, s.min);
+        put_f32(buf, s.q25);
+        put_f32(buf, s.median);
+        put_f32(buf, s.q75);
+        put_f32(buf, s.max);
+        put_f32(buf, s.mean);
+        put_f32(buf, s.suppressed);
+    }
+}
+
+/// Decode an EVAL payload.
+pub fn decode_eval(payload: &[u8]) -> Result<(EvalReport, Vec<ScaleStats>)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_EVAL, "EVAL")?;
+    let report = EvalReport {
+        loss: rd.f64()?,
+        accuracy: rd.f64()?,
+        f1: rd.f64()?,
+    };
+    let count = rd.usize_()?;
+    if count > rd.remaining() {
+        return Err(anyhow!(
+            "implausible scale-stats count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut stats = Vec::with_capacity(count);
+    for _ in 0..count {
+        stats.push(ScaleStats {
+            layer: rd.str_()?,
+            min: rd.f32()?,
+            q25: rd.f32()?,
+            median: rd.f32()?,
+            q75: rd.f32()?,
+            max: rd.f32()?,
+            mean: rd.f32()?,
+            suppressed: rd.f32()?,
+        });
+    }
+    rd.done()?;
+    Ok((report, stats))
+}
+
+/// Encode a FAILED message (fatal shard error) into `buf`.
+pub fn encode_failed(buf: &mut Vec<u8>, shard: usize, msg: &str) {
+    buf.clear();
+    buf.push(TAG_FAILED);
+    put_usize(buf, shard);
+    put_str(buf, msg);
+}
+
+/// Decode a FAILED payload.
+pub fn decode_failed(payload: &[u8]) -> Result<(usize, String)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_FAILED, "FAILED")?;
+    let shard = rd.usize_()?;
+    let msg = rd.str_()?;
+    rd.done()?;
+    Ok((shard, msg))
+}
+
+/// Message-frame kinds (first payload byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgTag {
+    /// READY handshake.
+    Ready,
+    /// ROUND_DONE lane delivery.
+    RoundDone,
+    /// EVAL report.
+    Eval,
+    /// FAILED fatal error.
+    Failed,
+}
+
+/// Classify a message payload by tag.
+pub fn msg_tag(payload: &[u8]) -> Result<MsgTag> {
+    match payload.first() {
+        Some(&TAG_READY) => Ok(MsgTag::Ready),
+        Some(&TAG_ROUND_DONE) => Ok(MsgTag::RoundDone),
+        Some(&TAG_EVAL) => Ok(MsgTag::Eval),
+        Some(&TAG_FAILED) => Ok(MsgTag::Failed),
+        Some(&other) => Err(anyhow!("unknown message tag {other:#04x}")),
+        None => Err(anyhow!("empty message frame")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::ExperimentConfig;
+
+    fn sample_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::quick("tiny_cnn", TaskKind::XrayLike, Protocol::Stc);
+        cfg.dirichlet_alpha = Some(0.37);
+        cfg.target_accuracy = Some(0.91);
+        cfg.residuals_override = Some(true);
+        cfg.pipelined = true;
+        cfg.compute_shards = 3;
+        cfg.transport = TransportKind::Tcp;
+        cfg.sparsify = SparsifyMode::TopK { rate: 0.96 };
+        cfg.participation = 0.625;
+        cfg.seed = u64::MAX - 7;
+        cfg
+    }
+
+    fn cfg_fingerprint(cfg: &ExperimentConfig) -> String {
+        format!("{cfg:?}")
+    }
+
+    #[test]
+    fn config_round_trips_exactly() {
+        let cfg = sample_cfg();
+        let mut buf = Vec::new();
+        encode_config(&mut buf, &cfg);
+        let back = decode_config(&buf).unwrap();
+        assert_eq!(cfg_fingerprint(&cfg), cfg_fingerprint(&back));
+    }
+
+    #[test]
+    fn init_round_trips_with_both_compute_specs() {
+        let cfg = sample_cfg();
+        let mut buf = Vec::new();
+        encode_init(&mut buf, 2, 3, &cfg, &ComputeSpec::Real);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Init);
+        let init = decode_init(&buf).unwrap();
+        assert_eq!((init.shard, init.shards), (2, 3));
+        assert!(matches!(init.compute, ComputeSpec::Real));
+        assert_eq!(cfg_fingerprint(&init.cfg), cfg_fingerprint(&cfg));
+
+        let m = crate::model::params::tests_support::manifest_conv_dense();
+        encode_init(&mut buf, 0, 1, &cfg, &ComputeSpec::Synthetic { manifest: m.clone() });
+        let init = decode_init(&buf).unwrap();
+        match init.compute {
+            ComputeSpec::Synthetic { manifest } => assert_eq!(*manifest, *m),
+            ComputeSpec::Real => panic!("lost the synthetic manifest"),
+        }
+    }
+
+    #[test]
+    fn init_rejects_bad_version_and_assignment() {
+        let cfg = sample_cfg();
+        let mut buf = Vec::new();
+        encode_init(&mut buf, 0, 2, &cfg, &ComputeSpec::Real);
+        buf[1] = PROTOCOL_VERSION + 1;
+        assert!(format!("{}", decode_init(&buf).unwrap_err()).contains("version"));
+        encode_init(&mut buf, 5, 2, &cfg, &ComputeSpec::Real);
+        assert!(decode_init(&buf).is_err(), "shard ≥ shards must be rejected");
+    }
+
+    #[test]
+    fn round_and_stop_round_trip() {
+        let mut buf = Vec::new();
+        let slots = vec![(0usize, 4usize), (3, 1), (5, 9)];
+        encode_round(&mut buf, &slots);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Round);
+        assert_eq!(decode_round(&buf).unwrap(), slots);
+        encode_round(&mut buf, &[]);
+        assert!(decode_round(&buf).unwrap().is_empty());
+        encode_stop(&mut buf);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Stop);
+    }
+
+    #[test]
+    fn apply_round_trips_through_a_recycled_buffer() {
+        let m = crate::model::params::tests_support::manifest_conv_dense();
+        let mut d = Delta::zeros(m.clone());
+        d.tensors[0][4] = -0.25;
+        d.tensors[1][1] = 1.5e-6;
+        let mut buf = Vec::new();
+        encode_apply(&mut buf, &d, true);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Apply);
+        let mut out = Delta::zeros(m);
+        out.tensors[0][0] = 9.0; // stale garbage must be overwritten
+        let eval = decode_apply_into(&buf, &mut out).unwrap();
+        assert!(eval);
+        assert_eq!(out, d);
+    }
+
+    #[test]
+    fn eval_and_failed_round_trip() {
+        let report = EvalReport {
+            loss: 0.125,
+            accuracy: 0.75,
+            f1: 0.5,
+        };
+        let stats = vec![ScaleStats {
+            layer: "conv1".into(),
+            min: -1.0,
+            q25: 0.1,
+            median: 0.5,
+            q75: 0.9,
+            max: 2.0,
+            mean: 0.55,
+            suppressed: 0.125,
+        }];
+        let mut buf = Vec::new();
+        encode_eval(&mut buf, &report, &stats);
+        assert_eq!(msg_tag(&buf).unwrap(), MsgTag::Eval);
+        let (r, s) = decode_eval(&buf).unwrap();
+        assert_eq!(
+            (r.loss, r.accuracy, r.f1),
+            (report.loss, report.accuracy, report.f1)
+        );
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].layer, "conv1");
+        assert_eq!(s[0].suppressed, 0.125);
+
+        encode_failed(&mut buf, 7, "shard exploded: details");
+        assert_eq!(msg_tag(&buf).unwrap(), MsgTag::Failed);
+        assert_eq!(
+            decode_failed(&buf).unwrap(),
+            (7, "shard exploded: details".to_string())
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        encode_round(&mut buf, &[(1, 2)]);
+        buf.push(0xAB);
+        assert!(format!("{}", decode_round(&buf).unwrap_err()).contains("trailing"));
+    }
+
+    #[test]
+    fn empty_and_unknown_tags_rejected() {
+        assert!(cmd_tag(&[]).is_err());
+        assert!(msg_tag(&[]).is_err());
+        assert!(cmd_tag(&[0xEE]).is_err());
+        assert!(msg_tag(&[0x01]).is_err(), "command tag is not a message tag");
+    }
+}

@@ -1,0 +1,191 @@
+//! Shared harness helpers for the integration suites
+//! (`integration_parallel.rs`, `integration_transport.rs`): the
+//! hand-built test manifest, deterministic synthetic deltas (thin
+//! wrappers over `fl::synth`), the codec-round driver, and byte-level
+//! lane fingerprints. One copy so the parallel-equivalence and
+//! transport-conformance suites can never drift apart on what
+//! "identical" means.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use fsfl::compression::{QuantConfig, SparsifyMode};
+use fsfl::exec::WorkerPool;
+use fsfl::fl::scheduler::{self, ScheduleMode};
+use fsfl::fl::synth::{synth_client_delta, synth_scale_delta};
+use fsfl::fl::{Protocol, ProtocolConfig, RoundLane, SyntheticPlane};
+use fsfl::model::params::Delta;
+use fsfl::model::{Group, Kind, Manifest, TensorSpec};
+
+/// Client count the codec-plane suites run with.
+pub const CLIENTS: usize = 8;
+
+/// Hand-built three-tensor manifest: a row-structured conv weight, its
+/// fine-quantized bias, and a per-filter scale vector.
+pub fn manifest() -> Arc<Manifest> {
+    let tensors = vec![
+        TensorSpec {
+            name: "c.w".into(),
+            shape: vec![16, 48],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "c.b".into(),
+            shape: vec![16],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "c.s".into(),
+            shape: vec![16],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "c".into(),
+            out_ch: Some(16),
+            scale_for: Some("c.w".into()),
+        },
+    ];
+    Arc::new(Manifest {
+        model: "t".into(),
+        variant: "t".into(),
+        classes: 2,
+        input: vec![4, 4, 1],
+        batch: 1,
+        param_count: 16 * 48 + 16 + 16,
+        scale_count: 16,
+        tensors,
+    })
+}
+
+/// Allocating wrapper over [`synth_client_delta`].
+pub fn client_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
+    let mut d = Delta::zeros(m.clone());
+    synth_client_delta(m, seed, &mut d);
+    d
+}
+
+/// Allocating wrapper over [`synth_scale_delta`].
+pub fn scale_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
+    let mut d = Delta::zeros(m.clone());
+    synth_scale_delta(m, seed, &mut d);
+    d
+}
+
+/// Run the codec stages of one round over `lanes` at the given pool
+/// width, from fixed inputs. Every other lane carries a scale update,
+/// so both the W and S streams are exercised.
+pub fn codec_round(
+    lanes: &mut [RoundLane],
+    pool: &WorkerPool,
+    pcfg: &ProtocolConfig,
+    m: &Arc<Manifest>,
+    round_seed: u64,
+) {
+    let update_idx = m.update_indices();
+    let scale_idx = m.group_indices(Group::Scale);
+    for (k, lane) in lanes.iter_mut().enumerate() {
+        lane.begin(k);
+        lane.raw.copy_from(&client_delta(m, round_seed + k as u64));
+    }
+    pool.run_mut(lanes, |_, lane| lane.encode_upstream(pcfg, &update_idx));
+    for (k, lane) in lanes.iter_mut().enumerate() {
+        if pcfg.scaled && k % 2 == 0 {
+            lane.sdelta.copy_from(&scale_delta(m, round_seed + k as u64));
+            lane.scale_accepted = true;
+        }
+    }
+    pool.run_mut(lanes, |_, lane| lane.finish_round(pcfg, &scale_idx));
+    for lane in lanes.iter_mut() {
+        if let Some(e) = lane.error.take() {
+            panic!("codec stage failed: {e:#}");
+        }
+    }
+}
+
+/// Byte-level fingerprint of everything a round produced.
+pub type RoundFp = Vec<(Vec<Vec<u8>>, u64, u64, usize)>;
+
+/// Fingerprint `lanes`: exact stream bytes, client-view and decoded
+/// checksums, and upstream byte accounting.
+pub fn fingerprint(lanes: &[RoundLane]) -> RoundFp {
+    lanes
+        .iter()
+        .map(|l| {
+            (
+                l.streams().iter().map(|s| s.to_vec()).collect(),
+                l.update.checksum(),
+                l.decoded.checksum(),
+                l.up_bytes,
+            )
+        })
+        .collect()
+}
+
+/// Pool widths every equivalence suite sweeps: serial, small, machine.
+pub fn pool_widths() -> Vec<usize> {
+    let ncpu = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    vec![1, 2, ncpu]
+}
+
+/// Every Table-2 protocol preset the codec suites sweep.
+pub fn protocols() -> Vec<(&'static str, ProtocolConfig)> {
+    let q = QuantConfig::default();
+    let dynamic = SparsifyMode::Dynamic {
+        delta: 1.0,
+        gamma: 1.0,
+    };
+    let topk = SparsifyMode::TopK { rate: 0.9 };
+    vec![
+        ("fedavg", Protocol::FedAvg.config(dynamic, q)),
+        ("fedavg_q", Protocol::FedAvgQ.config(dynamic, q)),
+        ("fsfl", Protocol::Fsfl.config(dynamic, q)),
+        ("stc", Protocol::Stc.config(topk, q)),
+        ("stc_scaled", Protocol::StcScaled.config(topk, q)),
+        ("eqs23", Protocol::SparseOnly.config(dynamic, q)),
+    ]
+}
+
+/// Drive one scheduled round over `lanes` on the library's
+/// [`SyntheticPlane`] and surface codec errors.
+pub fn scheduled_round(
+    mode: ScheduleMode,
+    pool: &WorkerPool,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    m: &Arc<Manifest>,
+    round_seed: u64,
+) {
+    let update_idx = m.update_indices();
+    let scale_idx = m.group_indices(Group::Scale);
+    let mut compute = SyntheticPlane {
+        manifest: m.clone(),
+        round_seed,
+        scaled: pcfg.scaled,
+    };
+    scheduler::run_round(
+        mode,
+        pool,
+        &mut compute,
+        lanes,
+        order,
+        pcfg,
+        &update_idx,
+        &scale_idx,
+    )
+    .unwrap();
+    for lane in lanes.iter_mut() {
+        if let Some(e) = lane.error.take() {
+            panic!("codec stage failed: {e:#}");
+        }
+    }
+}

@@ -4,155 +4,26 @@
 //! DeepCABAC encode, server-side decode) out over `exec::WorkerPool`,
 //! optionally software-pipelined against compute, optionally sharded
 //! over several compute threads. The contract: **none of pool width,
-//! schedule mode, shard count or partial participation changes any
-//! output** — bitstreams are byte-identical and decoded updates
-//! bit-for-bit equal vs the staged serial path, with buffers recycled
-//! across rounds. The codec-plane and scheduler tests drive the real
-//! `RoundLane`/`scheduler` machinery on synthetic compute and run
-//! everywhere; the full-experiment tests additionally pin `RunLog`
-//! equality and are skipped without a PJRT backend + artifacts.
+//! schedule mode, shard count, partial participation or transport
+//! changes any output** — bitstreams are byte-identical and decoded
+//! updates bit-for-bit equal vs the staged serial path, with buffers
+//! recycled across rounds. The codec-plane and scheduler tests drive
+//! the real `RoundLane`/`scheduler` machinery on synthetic compute and
+//! run everywhere (shared helpers live in `tests/common/mod.rs`; the
+//! wire-transport conformance suite is `integration_transport.rs`); the
+//! full-experiment tests additionally pin `RunLog` equality and are
+//! skipped without a PJRT backend + artifacts.
 
-use std::sync::Arc;
+mod common;
 
-use fsfl::compression::{QuantConfig, SparsifyMode};
-use fsfl::data::{TaskKind, XorShiftRng};
+use common::*;
+
+use fsfl::data::TaskKind;
 use fsfl::exec::WorkerPool;
-use fsfl::fl::scheduler::{self, ComputePlane, ScheduleMode};
-use fsfl::fl::{Experiment, ExperimentConfig, Protocol, ProtocolConfig, RoundLane};
-use fsfl::model::params::Delta;
-use fsfl::model::{Group, Kind, Manifest, TensorSpec};
+use fsfl::fl::scheduler::{self, ScheduleMode};
+use fsfl::fl::{Experiment, ExperimentConfig, Protocol, TransportKind};
+use fsfl::fl::RoundLane;
 use fsfl::runtime::Runtime;
-
-const CLIENTS: usize = 8;
-
-fn manifest() -> Arc<Manifest> {
-    let tensors = vec![
-        TensorSpec {
-            name: "c.w".into(),
-            shape: vec![16, 48],
-            kind: Kind::ConvW,
-            group: Group::Weight,
-            layer: "c".into(),
-            out_ch: Some(16),
-            scale_for: None,
-        },
-        TensorSpec {
-            name: "c.b".into(),
-            shape: vec![16],
-            kind: Kind::Bias,
-            group: Group::Weight,
-            layer: "c".into(),
-            out_ch: Some(16),
-            scale_for: None,
-        },
-        TensorSpec {
-            name: "c.s".into(),
-            shape: vec![16],
-            kind: Kind::Scale,
-            group: Group::Scale,
-            layer: "c".into(),
-            out_ch: Some(16),
-            scale_for: Some("c.w".into()),
-        },
-    ];
-    Arc::new(Manifest {
-        model: "t".into(),
-        variant: "t".into(),
-        classes: 2,
-        input: vec![4, 4, 1],
-        batch: 1,
-        param_count: 16 * 48 + 16 + 16,
-        scale_count: 16,
-        tensors,
-    })
-}
-
-fn client_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
-    let mut rng = XorShiftRng::new(seed);
-    let mut d = Delta::zeros(m.clone());
-    for (t, spec) in d.tensors.iter_mut().zip(&m.tensors) {
-        let scale = if spec.kind.is_fine_quantized() { 5e-6 } else { 8e-4 };
-        for x in t.iter_mut() {
-            *x = rng.normal() * scale;
-        }
-    }
-    d
-}
-
-fn scale_delta(m: &Arc<Manifest>, seed: u64) -> Delta {
-    let mut rng = XorShiftRng::new(seed ^ 0x5CA1E);
-    let mut d = Delta::zeros(m.clone());
-    let si = m.index_of("c.s").unwrap();
-    for x in d.tensors[si].iter_mut() {
-        *x = rng.normal() * 1e-4;
-    }
-    d
-}
-
-/// Run the codec stages of one round over `CLIENTS` lanes at the given
-/// pool width, from fixed inputs. Every other lane carries a scale
-/// update, so both the W and S streams are exercised.
-fn codec_round(
-    lanes: &mut [RoundLane],
-    pool: &WorkerPool,
-    pcfg: &ProtocolConfig,
-    m: &Arc<Manifest>,
-    round_seed: u64,
-) {
-    let update_idx = m.update_indices();
-    let scale_idx = m.group_indices(Group::Scale);
-    for (k, lane) in lanes.iter_mut().enumerate() {
-        lane.begin(k);
-        lane.raw.copy_from(&client_delta(m, round_seed + k as u64));
-    }
-    pool.run_mut(lanes, |_, lane| lane.encode_upstream(pcfg, &update_idx));
-    for (k, lane) in lanes.iter_mut().enumerate() {
-        if pcfg.scaled && k % 2 == 0 {
-            lane.sdelta.copy_from(&scale_delta(m, round_seed + k as u64));
-            lane.scale_accepted = true;
-        }
-    }
-    pool.run_mut(lanes, |_, lane| lane.finish_round(pcfg, &scale_idx));
-    for lane in lanes.iter_mut() {
-        if let Some(e) = lane.error.take() {
-            panic!("codec stage failed: {e:#}");
-        }
-    }
-}
-
-/// Byte-level fingerprint of everything a round produced.
-fn fingerprint(lanes: &[RoundLane]) -> Vec<(Vec<Vec<u8>>, u64, u64, usize)> {
-    lanes
-        .iter()
-        .map(|l| {
-            (
-                l.streams().iter().map(|s| s.to_vec()).collect(),
-                l.update.checksum(),
-                l.decoded.checksum(),
-                l.up_bytes,
-            )
-        })
-        .collect()
-}
-
-fn pool_widths() -> Vec<usize> {
-    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    vec![1, 2, ncpu]
-}
-
-fn protocols() -> Vec<(&'static str, ProtocolConfig)> {
-    let q = QuantConfig::default();
-    let dynamic = SparsifyMode::Dynamic { delta: 1.0, gamma: 1.0 };
-    let topk = SparsifyMode::TopK { rate: 0.9 };
-    vec![
-        ("fedavg", Protocol::FedAvg.config(dynamic, q)),
-        ("fedavg_q", Protocol::FedAvgQ.config(dynamic, q)),
-        ("fsfl", Protocol::Fsfl.config(dynamic, q)),
-        ("stc", Protocol::Stc.config(topk, q)),
-        ("stc_scaled", Protocol::StcScaled.config(topk, q)),
-        ("eqs23", Protocol::SparseOnly.config(dynamic, q)),
-    ]
-}
 
 #[test]
 fn bitstreams_identical_across_pool_widths() {
@@ -208,69 +79,6 @@ fn wire_decode_reconstructs_client_view_exactly() {
         codec_round(&mut lanes, &pool, &pcfg, &m, 7);
         for lane in &lanes {
             assert_eq!(lane.decoded, lane.update, "{name}: wire decode diverged");
-        }
-    }
-}
-
-/// Synthetic, deterministic compute plane: what a client "trains" is a
-/// pure function of (client id, round seed), so staged, pipelined and
-/// sharded schedules must reproduce it bit for bit.
-struct SynthCompute {
-    m: Arc<Manifest>,
-    round_seed: u64,
-    scaled: bool,
-}
-
-impl ComputePlane for SynthCompute {
-    fn train(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
-        lane.raw
-            .copy_from(&client_delta(&self.m, self.round_seed + lane.client as u64));
-        Ok(())
-    }
-
-    fn scale(&mut self, lane: &mut RoundLane) -> fsfl::Result<()> {
-        // Client-intrinsic acceptance (by id parity, not round slot), so
-        // the decision is independent of scheduling shape.
-        if self.scaled && lane.client % 2 == 0 {
-            lane.sdelta
-                .copy_from(&scale_delta(&self.m, self.round_seed + lane.client as u64));
-            lane.scale_accepted = true;
-        }
-        Ok(())
-    }
-}
-
-/// Drive one scheduled round over `lanes` and surface codec errors.
-fn scheduled_round(
-    mode: ScheduleMode,
-    pool: &WorkerPool,
-    lanes: &mut Vec<RoundLane>,
-    order: &[usize],
-    pcfg: &ProtocolConfig,
-    m: &Arc<Manifest>,
-    round_seed: u64,
-) {
-    let update_idx = m.update_indices();
-    let scale_idx = m.group_indices(Group::Scale);
-    let mut compute = SynthCompute {
-        m: m.clone(),
-        round_seed,
-        scaled: pcfg.scaled,
-    };
-    scheduler::run_round(
-        mode,
-        pool,
-        &mut compute,
-        lanes,
-        order,
-        pcfg,
-        &update_idx,
-        &scale_idx,
-    )
-    .unwrap();
-    for lane in lanes.iter_mut() {
-        if let Some(e) = lane.error.take() {
-            panic!("codec stage failed: {e:#}");
         }
     }
 }
@@ -463,10 +271,12 @@ fn full_experiment_runlog_identical_across_pool_widths() {
 }
 
 #[test]
-fn full_experiment_runlog_identical_across_schedules_and_shards() {
-    // The end-to-end determinism invariant: pipelined scheduling and
-    // sharded deployment must reproduce the staged single-thread RunLog
-    // exactly. Needs a PJRT backend + artifacts (skips otherwise).
+fn full_experiment_runlog_identical_across_schedules_shards_and_transports() {
+    // The end-to-end determinism invariant: pipelined scheduling,
+    // sharded deployment and wire transports must reproduce the staged
+    // single-thread RunLog exactly. Needs a PJRT backend + artifacts
+    // (skips otherwise); the PJRT-free conformance grid lives in
+    // `integration_transport.rs`.
     let artifacts: std::path::PathBuf = std::env::var("FSFL_ARTIFACTS")
         .map(Into::into)
         .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
@@ -505,18 +315,28 @@ fn full_experiment_runlog_identical_across_schedules_and_shards() {
             .collect()
     };
 
+    let grid = [
+        (false, 1, TransportKind::Mpsc),
+        (true, 1, TransportKind::Mpsc),
+        (false, 2, TransportKind::Mpsc),
+        (true, 3, TransportKind::Mpsc),
+        (false, 2, TransportKind::Loopback),
+        (true, 2, TransportKind::Tcp),
+    ];
     let mut reference: Option<Vec<(usize, usize, f64, f64, Vec<f64>)>> = None;
-    for (pipelined, shards) in [(false, 1), (true, 1), (false, 2), (true, 3)] {
+    for (pipelined, shards, transport) in grid {
         let mut cfg = base_cfg();
         cfg.pipelined = pipelined;
         cfg.compute_shards = shards;
+        cfg.transport = transport;
         let log = fsfl::coordinator::run_experiment_threaded(cfg, |_| {}).unwrap();
         let fp = fp_of(&log);
         match &reference {
             None => reference = Some(fp),
             Some(r) => assert_eq!(
                 &fp, r,
-                "pipelined={pipelined} shards={shards}: RunLog diverged from staged single-thread"
+                "pipelined={pipelined} shards={shards} transport={}: RunLog diverged from staged single-thread",
+                transport.name()
             ),
         }
     }

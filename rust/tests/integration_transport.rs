@@ -1,0 +1,548 @@
+//! Wire-transport conformance and fault-injection suite.
+//!
+//! Four layers, all PJRT-free (the protocol machinery runs on the
+//! deterministic `fl::synth` compute plane, so every test here runs in
+//! CI on the vendored null XLA backend):
+//!
+//! 1. **Frame/property tests** — a seeded randomized corpus through the
+//!    frame codec; truncations and bit flips must error, never panic,
+//!    never yield a corrupt frame.
+//! 2. **Wire round-trips** — every `ShardCmd`/`ShardMsg` image through
+//!    `net::wire`, including real encoded lanes for every Table-2
+//!    protocol; malformed lane frames are rejected with no partial
+//!    lanes.
+//! 3. **Differential conformance** — the same seeded experiment run
+//!    via in-process mpsc, loopback transport and TCP transport ×
+//!    {staged, pipelined} × shard counts {1, 2, 3} (plus real OS
+//!    processes over TCP) must produce byte-identical `RunLog` metrics;
+//!    the synthetic eval is a checksum of every aggregated broadcast,
+//!    so metric equality pins bitstream equality.
+//! 4. **Fault injection** — a shard connection dropped mid-round (or
+//!    corrupted) makes the coordinator fail fast with a descriptive
+//!    error: no deadlock, no torn aggregation.
+
+mod common;
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::*;
+
+use fsfl::coordinator::{self, ComputeSpec};
+use fsfl::data::{TaskKind, XorShiftRng};
+use fsfl::exec::WorkerPool;
+use fsfl::fl::{ExperimentConfig, Protocol, RoundLane, TransportKind};
+use fsfl::metrics::{RunLog, WireStats};
+use fsfl::model::{Manifest, ParamSet};
+use fsfl::net::{frame, wire, FrameSink, FrameSource, TcpTransport, Transport};
+
+// ---------------------------------------------------------------------------
+// 1 · frame codec property tests
+// ---------------------------------------------------------------------------
+
+fn corpus(rng: &mut XorShiftRng, n: usize, max_len: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| {
+            let len = (rng.next_u64() as usize) % (max_len + 1);
+            (0..len).map(|_| rng.next_u64() as u8).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn frame_codec_round_trips_a_randomized_corpus() {
+    let mut rng = XorShiftRng::new(0xF4A3E);
+    let payloads = corpus(&mut rng, 200, 4096);
+    // All frames through one contiguous stream, like a socket would see.
+    let mut stream = Vec::new();
+    for p in &payloads {
+        frame::write_frame(&mut stream, p).unwrap();
+    }
+    let mut r = stream.as_slice();
+    let mut buf = Vec::new();
+    for (i, p) in payloads.iter().enumerate() {
+        assert!(
+            frame::read_frame(&mut r, &mut buf, frame::MAX_PAYLOAD).unwrap(),
+            "frame {i} missing"
+        );
+        assert_eq!(&buf, p, "frame {i} corrupted");
+    }
+    assert!(
+        !frame::read_frame(&mut r, &mut buf, frame::MAX_PAYLOAD).unwrap(),
+        "stream must end with a clean EOF"
+    );
+}
+
+#[test]
+fn frame_codec_never_accepts_truncated_or_flipped_frames() {
+    let mut rng = XorShiftRng::new(0xBADF00D);
+    for p in corpus(&mut rng, 40, 256) {
+        let mut wire_bytes = Vec::new();
+        frame::write_frame(&mut wire_bytes, &p).unwrap();
+        let mut buf = Vec::new();
+        // every truncation point errors (cut 0 is a clean EOF)
+        for cut in 1..wire_bytes.len() {
+            let mut r = &wire_bytes[..cut];
+            assert!(
+                frame::read_frame(&mut r, &mut buf, frame::MAX_PAYLOAD).is_err(),
+                "truncation at {cut}/{} accepted",
+                wire_bytes.len()
+            );
+        }
+        // random single-bit flips error (or, if the flip lands in the
+        // length field and enlarges it, error via truncation)
+        for _ in 0..32 {
+            let byte = (rng.next_u64() as usize) % wire_bytes.len();
+            let bit = (rng.next_u64() as usize) % 8;
+            let mut bad = wire_bytes.clone();
+            bad[byte] ^= 1 << bit;
+            let mut r = bad.as_slice();
+            match frame::read_frame(&mut r, &mut buf, frame::MAX_PAYLOAD) {
+                Err(_) => {}
+                Ok(got) => panic!(
+                    "flip at byte {byte} bit {bit} accepted (returned {got}) for {}-byte payload",
+                    p.len()
+                ),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2 · wire message round-trips over real lanes
+// ---------------------------------------------------------------------------
+
+fn zero_params(m: &Arc<Manifest>) -> ParamSet {
+    ParamSet::new(
+        m.clone(),
+        m.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+    )
+    .unwrap()
+}
+
+/// Fingerprint of the transmitted scalars `RoundLane::wire_parts`
+/// carries alongside the streams.
+fn lane_meta(l: &RoundLane) -> (usize, u128, u128, bool, usize, usize) {
+    (
+        l.up_bytes,
+        l.train_ms,
+        l.scale_ms,
+        l.scale_accepted,
+        l.stats.rows_skipped,
+        l.stats.rows_total,
+    )
+}
+
+#[test]
+fn round_done_round_trips_real_lanes_for_every_protocol() {
+    let m = manifest();
+    let pool = WorkerPool::serial();
+    for (name, pcfg) in protocols() {
+        let mut lanes: Vec<RoundLane> =
+            (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+        codec_round(&mut lanes, &pool, &pcfg, &m, 900);
+        let want_fp = fingerprint(&lanes);
+        let want_meta: Vec<_> = lanes.iter().map(lane_meta).collect();
+        let tagged: Vec<(usize, RoundLane)> =
+            lanes.into_iter().enumerate().map(|(i, l)| (i * 3, l)).collect();
+
+        let mut buf = Vec::new();
+        wire::encode_round_done(&mut buf, 1, &tagged).unwrap();
+        assert_eq!(wire::msg_tag(&buf).unwrap(), wire::MsgTag::RoundDone);
+
+        // decode through a recycled pool (stale lanes must be fully
+        // overwritten) and through fresh allocation
+        for prime_pool in [false, true] {
+            let mut free: Vec<RoundLane> = Vec::new();
+            if prime_pool {
+                let mut stale: Vec<RoundLane> =
+                    (0..CLIENTS).map(|_| RoundLane::new(m.clone())).collect();
+                codec_round(&mut stale, &pool, &pcfg, &m, 77); // different round
+                free.extend(stale);
+            }
+            let (shard, got) = wire::decode_round_done_into(&buf, &m, &mut free).unwrap();
+            assert_eq!(shard, 1);
+            let slots: Vec<usize> = got.iter().map(|(s, _)| *s).collect();
+            assert_eq!(slots, (0..CLIENTS).map(|i| i * 3).collect::<Vec<_>>());
+            let restored: Vec<RoundLane> = got.into_iter().map(|(_, l)| l).collect();
+            // decoded stream bytes, checksums and byte accounting all
+            // survive the wire — and update == decoded by restoration
+            for ((lane, fp), meta) in restored.iter().zip(&want_fp).zip(&want_meta) {
+                assert_eq!(
+                    lane.streams().iter().map(|s| s.to_vec()).collect::<Vec<_>>(),
+                    fp.0,
+                    "{name}: stream bytes diverged (pool primed: {prime_pool})"
+                );
+                assert_eq!(lane.decoded.checksum(), fp.2, "{name}: decode diverged");
+                assert_eq!(lane.update.checksum(), fp.2, "{name}: update != decoded");
+                assert_eq!(lane.up_bytes, fp.3, "{name}: up_bytes diverged");
+                assert_eq!(&lane_meta(lane), meta, "{name}: lane metadata diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn round_done_truncations_and_bad_flags_never_panic_or_yield_partial_lanes() {
+    let m = manifest();
+    let pool = WorkerPool::serial();
+    let (_, pcfg) = protocols().remove(2); // fsfl: W streams + S streams
+    let mut lanes: Vec<RoundLane> = (0..2).map(|_| RoundLane::new(m.clone())).collect();
+    codec_round(&mut lanes, &pool, &pcfg, &m, 31);
+    let tagged: Vec<(usize, RoundLane)> = lanes.into_iter().enumerate().collect();
+    let mut buf = Vec::new();
+    wire::encode_round_done(&mut buf, 0, &tagged).unwrap();
+
+    // every truncation errors; the recycled pool never shrinks below
+    // what the failed decode consumed-and-dropped
+    for cut in 1..buf.len() {
+        let mut free: Vec<RoundLane> = Vec::new();
+        assert!(
+            wire::decode_round_done_into(&buf[..cut], &m, &mut free).is_err(),
+            "truncated ROUND_DONE at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+
+    // flag corruption: first lane's flags byte sits after
+    // tag(1) + shard(8) + count(8) + slot(8) + client(8)
+    let flags_off = 1 + 8 + 8 + 8 + 8;
+    for bad_flags in [0u8, 0b101, 0b110, 0b1000] {
+        let mut bad = buf.clone();
+        bad[flags_off] = bad_flags;
+        let mut free: Vec<RoundLane> = Vec::new();
+        assert!(
+            wire::decode_round_done_into(&bad, &m, &mut free).is_err(),
+            "invalid lane flags {bad_flags:#05b} accepted"
+        );
+    }
+}
+
+#[test]
+fn ready_round_trips_manifest_and_params() {
+    let m = manifest();
+    let mut init = zero_params(&m);
+    let mut rng = XorShiftRng::new(5);
+    for t in init.tensors.iter_mut() {
+        for x in t.iter_mut() {
+            *x = rng.normal();
+        }
+    }
+    let mut buf = Vec::new();
+    wire::encode_ready(&mut buf, 2, &init);
+    assert_eq!(wire::msg_tag(&buf).unwrap(), wire::MsgTag::Ready);
+    let (shard, got) = wire::decode_ready(&buf).unwrap();
+    assert_eq!(shard, 2);
+    assert_eq!(*got.manifest, *m, "manifest must survive the tsv round-trip");
+    assert_eq!(got.tensors, init.tensors, "param bits must survive");
+}
+
+// ---------------------------------------------------------------------------
+// 3 · differential conformance
+// ---------------------------------------------------------------------------
+
+/// Exact per-round fingerprint: every metric field, floats as bit
+/// patterns. The synthetic eval derives accuracy/f1/loss from the FNV
+/// checksum of all aggregated broadcasts, so equality here pins the
+/// transmitted bitstreams bit-for-bit.
+type RoundsFp = Vec<(
+    usize,
+    usize,
+    usize,
+    u64,
+    u64,
+    u64,
+    u64,
+    Vec<u64>,
+    u64,
+    usize,
+    u128,
+    u128,
+)>;
+
+fn fp_rounds(log: &RunLog) -> RoundsFp {
+    log.rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.up_bytes,
+                r.down_bytes,
+                r.accuracy.to_bits(),
+                r.f1.to_bits(),
+                r.test_loss.to_bits(),
+                r.update_sparsity.to_bits(),
+                r.client_sparsity.iter().map(|s| s.to_bits()).collect(),
+                r.rows_skipped.to_bits(),
+                r.scale_accepted,
+                r.train_ms,
+                r.scale_ms,
+            )
+        })
+        .collect()
+}
+
+fn synth_cfg(protocol: Protocol) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, protocol);
+    if matches!(protocol, Protocol::Stc | Protocol::StcScaled) {
+        cfg.sparsify = fsfl::compression::SparsifyMode::TopK { rate: 0.9 };
+    }
+    cfg.clients = 5;
+    cfg.rounds = 3;
+    cfg.participation = 0.6; // 3 of 5 participate per round
+    cfg.seed = 23;
+    cfg
+}
+
+#[test]
+fn runlog_identical_across_transports_schedules_and_shard_counts() {
+    let m = manifest();
+    for protocol in [Protocol::Fsfl, Protocol::Stc, Protocol::FedAvg] {
+        // Reference: the single-process staged schedule (1 shard, mpsc).
+        let mut reference: Option<RoundsFp> = None;
+        for shards in [1usize, 2, 3] {
+            for pipelined in [false, true] {
+                let mut wire_ref: Option<WireStats> = None;
+                for transport in [
+                    TransportKind::Mpsc,
+                    TransportKind::Loopback,
+                    TransportKind::Tcp,
+                ] {
+                    let mut cfg = synth_cfg(protocol);
+                    cfg.compute_shards = shards;
+                    cfg.pipelined = pipelined;
+                    cfg.transport = transport;
+                    let log =
+                        coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap();
+                    let fp = fp_rounds(&log);
+                    assert_eq!(fp.len(), 3, "wrong round count");
+                    match &reference {
+                        None => reference = Some(fp),
+                        Some(r) => assert_eq!(
+                            &fp,
+                            r,
+                            "{:?} shards={shards} pipelined={pipelined} transport={}: \
+                             RunLog diverged from staged single-process",
+                            protocol,
+                            transport.name()
+                        ),
+                    }
+                    if transport.is_wire() {
+                        let w = log.wire.expect("wire transports must measure traffic");
+                        assert!(
+                            w.sent > 0 && w.received > 0,
+                            "wire bytes must be measured, not estimated"
+                        );
+                        // Deterministic framing: loopback and TCP move
+                        // byte-identical traffic for the same config.
+                        match &wire_ref {
+                            None => wire_ref = Some(w),
+                            Some(r) => assert_eq!(
+                                &w, r,
+                                "{:?} shards={shards} pipelined={pipelined}: \
+                                 loopback vs tcp measured traffic diverged",
+                                protocol
+                            ),
+                        }
+                    } else {
+                        assert!(log.wire.is_none(), "mpsc moves no wire bytes");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_shard_processes_match_the_single_process_staged_schedule() {
+    // The acceptance pin: `run_experiment_sharded` over TCP with real
+    // OS shard-worker processes reproduces the single-process staged
+    // RunLog byte for byte.
+    let m = manifest();
+    let reference = {
+        let mut cfg = synth_cfg(Protocol::Fsfl);
+        cfg.compute_shards = 1;
+        cfg.pipelined = false;
+        cfg.transport = TransportKind::Mpsc;
+        coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap()
+    };
+    let exe = std::path::Path::new(env!("CARGO_BIN_EXE_fsfl"));
+    for shards in [2usize, 3] {
+        let mut cfg = synth_cfg(Protocol::Fsfl);
+        cfg.compute_shards = shards;
+        cfg.transport = TransportKind::Tcp;
+        let log = coordinator::run_experiment_processes(
+            cfg,
+            ComputeSpec::Synthetic {
+                manifest: m.clone(),
+            },
+            exe,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            fp_rounds(&log),
+            fp_rounds(&reference),
+            "{shards} OS shard processes diverged from the single-process staged schedule"
+        );
+        let w = log.wire.expect("process deployment must measure traffic");
+        assert!(w.sent > 0 && w.received > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4 · fault injection
+// ---------------------------------------------------------------------------
+
+/// Join a thread with a watchdog: a coordinator that deadlocks instead
+/// of failing fast is itself a test failure (mirrors the shape of the
+/// `exec::WorkerPool` worker-panic test: the failure must propagate,
+/// never hang the caller).
+fn join_with_timeout<T: Send + 'static>(
+    h: std::thread::JoinHandle<T>,
+    secs: u64,
+    what: &str,
+) -> T {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !h.is_finished() {
+        assert!(
+            Instant::now() < deadline,
+            "{what}: no result after {secs}s — coordinator deadlocked"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    h.join().expect("watchdogged thread panicked")
+}
+
+fn open_fake(addr: SocketAddr) -> (FrameSink, FrameSource) {
+    let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr).unwrap());
+    t.open().unwrap()
+}
+
+/// Drive the fake shard through INIT → READY and return its assigned
+/// shard id plus the open halves.
+fn fake_handshake(addr: SocketAddr, m: &Arc<Manifest>) -> (usize, FrameSink, FrameSource) {
+    let (mut sink, mut source) = open_fake(addr);
+    let mut buf = Vec::new();
+    assert!(source.recv(&mut buf).unwrap(), "coordinator closed early");
+    let init = wire::decode_init(&buf).unwrap();
+    let mut out = Vec::new();
+    wire::encode_ready(&mut out, init.shard, &zero_params(m));
+    sink.send(&out).unwrap();
+    (init.shard, sink, source)
+}
+
+#[test]
+fn shard_dropped_during_startup_fails_fast() {
+    let m = manifest();
+    let mut cfg = synth_cfg(Protocol::Fsfl);
+    cfg.clients = 2;
+    cfg.compute_shards = 1;
+    cfg.transport = TransportKind::Tcp;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let spec = ComputeSpec::Synthetic {
+        manifest: m.clone(),
+    };
+    let coord = std::thread::spawn(move || {
+        coordinator::serve(cfg, &listener, spec, || Ok(()), |_| {})
+    });
+    // Connect, read INIT, then vanish before READY.
+    let (_sink, mut source) = open_fake(addr);
+    let mut buf = Vec::new();
+    assert!(source.recv(&mut buf).unwrap());
+    drop(_sink);
+    drop(source);
+    let err = join_with_timeout(coord, 30, "startup-drop").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard 0") && (msg.contains("closed") || msg.contains("receive failed")),
+        "undescriptive startup-failure error: {msg}"
+    );
+}
+
+#[test]
+fn shard_dropped_mid_round_fails_fast_with_descriptive_error() {
+    // Two shards; shard A is a *real* worker (`join_shard`), shard B
+    // completes the handshake, receives its ROUND command, then drops
+    // the connection instead of delivering lanes. The coordinator must
+    // surface a descriptive shard failure promptly — not deadlock on
+    // the fan-in barrier, not aggregate a torn round.
+    let m = manifest();
+    let mut cfg = synth_cfg(Protocol::Fsfl);
+    cfg.clients = 4;
+    cfg.compute_shards = 2;
+    cfg.transport = TransportKind::Tcp;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let spec = ComputeSpec::Synthetic {
+        manifest: m.clone(),
+    };
+    let coord = std::thread::spawn(move || {
+        coordinator::serve(cfg, &listener, spec, || Ok(()), |_| {})
+    });
+
+    // Shard A: a fully real worker serving the whole protocol.
+    let addr_str = addr.to_string();
+    let real = std::thread::spawn(move || coordinator::join_shard(&addr_str));
+
+    // Shard B: handshakes, takes its round assignment, dies.
+    let (shard_b, sink_b, mut source_b) = fake_handshake(addr, &m);
+    let mut buf = Vec::new();
+    assert!(source_b.recv(&mut buf).unwrap(), "expected a ROUND command");
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::Round);
+    drop(sink_b);
+    drop(source_b);
+
+    let err = join_with_timeout(coord, 30, "mid-round-drop").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains(&format!("shard {shard_b}")),
+        "error does not name the dead shard: {msg}"
+    );
+    assert!(
+        msg.contains("closed") || msg.contains("receive failed") || msg.contains("disconnected"),
+        "error does not describe the disconnect: {msg}"
+    );
+    // The surviving worker must wind down (Ok after a Stop, or a
+    // "coordinator disconnected" error if teardown won the race) —
+    // never hang. The watchdog is the assertion.
+    let _ = join_with_timeout(real, 30, "surviving worker");
+}
+
+#[test]
+fn corrupted_frame_from_a_shard_fails_the_run_descriptively() {
+    let m = manifest();
+    let mut cfg = synth_cfg(Protocol::Fsfl);
+    cfg.clients = 2;
+    cfg.compute_shards = 1;
+    cfg.transport = TransportKind::Tcp;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let spec = ComputeSpec::Synthetic {
+        manifest: m.clone(),
+    };
+    let coord = std::thread::spawn(move || {
+        coordinator::serve(cfg, &listener, spec, || Ok(()), |_| {})
+    });
+    // Raw socket: handshake bytes are garbage, not a frame.
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    {
+        use std::io::Write as _;
+        let mut s = &stream;
+        s.write_all(b"this is not a frame at all..............").unwrap();
+        s.flush().unwrap();
+    }
+    let err = join_with_timeout(coord, 30, "corrupt-frame").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard 0"),
+        "error does not name the shard: {msg}"
+    );
+    assert!(
+        msg.contains("magic") || msg.contains("receive failed"),
+        "error does not describe the corruption: {msg}"
+    );
+    drop(stream);
+}
