@@ -103,6 +103,13 @@ impl Flags {
         }
     }
 
+    /// Every flag name actually provided on the command line (for
+    /// commands that must reject contradictory combinations, e.g.
+    /// `run --resume` with experiment-shape flags).
+    pub fn keys(&self) -> Vec<String> {
+        self.values.keys().cloned().collect()
+    }
+
     /// Error out on flags no getter ever consulted (catches typos).
     pub fn reject_unknown(&self) -> Result<()> {
         let known = self.known.borrow();

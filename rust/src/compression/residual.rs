@@ -52,6 +52,46 @@ impl Residual {
     pub fn l2_norm(&self) -> f64 {
         self.acc.l2_norm()
     }
+
+    /// Snapshot the carried error values, tensor-major in manifest order
+    /// (session plane).
+    pub fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.acc.tensors.clone()
+    }
+
+    /// Validate a [`Residual::snapshot`]'s shape against this residual
+    /// without writing anything (callers that must guarantee no partial
+    /// apply check every piece of state before mutating any of it).
+    pub fn check(&self, slabs: &[Vec<f32>]) -> anyhow::Result<()> {
+        if slabs.len() != self.acc.tensors.len() {
+            return Err(anyhow::anyhow!(
+                "residual snapshot has {} tensors, manifest wants {}",
+                slabs.len(),
+                self.acc.tensors.len()
+            ));
+        }
+        for (i, (s, t)) in slabs.iter().zip(&self.acc.tensors).enumerate() {
+            if s.len() != t.len() {
+                return Err(anyhow::anyhow!(
+                    "residual tensor {i}: snapshot len {} != manifest len {}",
+                    s.len(),
+                    t.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore carried error values from a [`Residual::snapshot`]. Every
+    /// slab length is validated before anything is written — a mismatch
+    /// errors with the state untouched (no partial apply).
+    pub fn restore(&mut self, slabs: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.check(slabs)?;
+        for (t, s) in self.acc.tensors.iter_mut().zip(slabs) {
+            t.copy_from_slice(s);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

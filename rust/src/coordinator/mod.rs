@@ -31,16 +31,35 @@
 //! checksummed, length-prefixed — the coordinator *decodes the actual
 //! transmitted bitstreams* before aggregating, and transfer bytes are
 //! measured at the frame layer into [`RunLog::wire`] instead of being
-//! estimated.
+//! estimated. Bidirectional setups additionally broadcast the APPLY as
+//! the server's **downstream bitstream, encoded once per round** and
+//! fanned out as bytes; every shard decodes those exact bytes back into
+//! the identical dequantized delta.
+//!
+//! # Session plane (checkpoint / resume / elastic membership)
+//!
+//! When [`crate::fl::ExperimentConfig::session`] is set, the
+//! coordinator collects every shard's round-boundary client state over
+//! the wire `STATE` pair at the configured cadence and writes a
+//! versioned, checksummed snapshot through [`crate::session`]. A killed
+//! run resumes from its newest valid snapshot
+//! ([`run_experiment_resumed`], `fsfl run --resume`) with byte-identical
+//! remaining bitstreams and final [`RunLog`]. The same `STATE` machinery
+//! powers **elastic shard membership** ([`ElasticPlan`]): at a round
+//! boundary a shard can leave and a replacement join through the normal
+//! INIT/READY handshake; the departing shard's client state migrates
+//! over the wire into the newcomer, so membership churn never changes
+//! outputs.
 //!
 //! All shapes speak the *paper's* wire protocol: clients emit DeepCABAC
 //! bitstreams, the server decodes exactly those bytes, and byte
 //! accounting happens on the encoded streams — nothing is
 //! short-circuited. Determinism invariant: for a fixed config,
 //! bitstreams and `RunLog` round metrics are byte-identical across
-//! shard counts, schedule modes, pool widths **and transports** (see
-//! `ARCHITECTURE.md`, `tests/integration_parallel.rs` and
-//! `tests/integration_transport.rs`).
+//! shard counts, schedule modes, pool widths, transports, kill/resume
+//! boundaries **and membership churn** (see `ARCHITECTURE.md`,
+//! `tests/integration_parallel.rs`, `tests/integration_transport.rs`
+//! and `tests/integration_session.rs`).
 
 use std::net::TcpListener;
 use std::path::Path;
@@ -55,15 +74,16 @@ use crate::exec::WorkerPool;
 use crate::fl::scheduler::{self, ScheduleMode};
 use crate::fl::synth::{synth_eval, SyntheticPlane};
 use crate::fl::{
-    build_setup, evaluate_params, Client, EvalReport, Experiment, ExperimentCompute,
+    build_setup, evaluate_params, Client, ClientState, EvalReport, Experiment, ExperimentCompute,
     ExperimentConfig, ProtocolConfig, RoundLane, Server, TransportKind,
 };
 use crate::metrics::{RoundMetrics, RunLog, ScaleStats, WireStats};
 use crate::model::params::Delta;
 use crate::model::{Group, Manifest, ParamSet};
-use crate::net::wire::{self, CmdTag, MsgTag};
+use crate::net::wire::{self, CmdTag, MsgTag, StateCmd, StateInstall};
 use crate::net::{loopback_pair, FrameSink, FrameSource, TcpTransport, Transport};
 use crate::runtime::{ModelRuntime, Runtime};
+use crate::session::{SessionState, SessionStore};
 
 pub use crate::net::wire::ComputeSpec;
 
@@ -82,6 +102,26 @@ pub enum Event {
     Failed(String),
 }
 
+/// Scripted round-boundary membership changes for elastic deployments.
+/// Each `(round, shard)` entry means: immediately before round `round`
+/// starts, shard `shard` leaves (its client state is collected over the
+/// wire first) and a freshly provisioned worker re-joins under the same
+/// index through the ordinary INIT/READY handshake, then is rehydrated
+/// with the migrated state. Outputs are byte-identical to the
+/// static-membership run (pinned by `tests/integration_session.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct ElasticPlan {
+    /// `(round, shard)` replacement events, processed in order.
+    pub replace: Vec<(usize, usize)>,
+}
+
+impl ElasticPlan {
+    /// Whether the plan schedules no membership change at all.
+    pub fn is_empty(&self) -> bool {
+        self.replace.is_empty()
+    }
+}
+
 /// The compute-shard count a config actually resolves to (never more
 /// shards than clients, never less than one).
 pub fn resolved_shards(cfg: &ExperimentConfig) -> usize {
@@ -91,12 +131,13 @@ pub fn resolved_shards(cfg: &ExperimentConfig) -> usize {
 /// Run an experiment on dedicated compute thread(s), streaming per-round
 /// events to `on_event` on the calling thread. Returns the final
 /// [`RunLog`]. Dispatches to [`run_experiment_sharded`] when the config
-/// asks for more than one compute shard or for a wire transport.
+/// asks for more than one compute shard, a wire transport, or a durable
+/// session (checkpointing lives in the sharded coordinator).
 pub fn run_experiment_threaded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    if resolved_shards(&cfg) > 1 || cfg.transport.is_wire() {
+    if resolved_shards(&cfg) > 1 || cfg.transport.is_wire() || cfg.session.is_some() {
         return run_experiment_sharded(cfg, on_event);
     }
     run_single_thread(cfg, &mut on_event)
@@ -160,9 +201,12 @@ pub fn run_experiment(rt: &Runtime, cfg: ExperimentConfig) -> Result<RunLog> {
 
 /// Shard → coordinator messages (all shards share one fan-in channel).
 /// On a wire transport these cross as serialized frames (`net::wire`
-/// tags `READY`/`ROUND_DONE`/`EVAL`/`FAILED`); per-connection reader
-/// threads decode them back into this enum, so the control loop is
-/// transport-oblivious.
+/// tags `READY`/`ROUND_DONE`/`EVAL`/`STATE`/`FAILED`); per-connection
+/// reader threads decode them back into this enum, so the control loop
+/// is transport-oblivious. `ConnDown` is coordinator-local: a reader
+/// reporting that its connection died, tagged with the connection
+/// generation so a deliberately-departed shard's close is told apart
+/// from a live shard's failure.
 enum ShardMsg {
     /// Shard built its runtime + client subset; carries the initial
     /// model so the coordinator can construct the server without a
@@ -178,26 +222,44 @@ enum ShardMsg {
         report: EvalReport,
         scale_stats: Vec<ScaleStats>,
     },
+    /// Collected client states (session plane: checkpoint / migration).
+    State {
+        shard: usize,
+        clients: Vec<ClientState>,
+    },
     /// Fatal shard error (rendered error chain).
     Failed { shard: usize, msg: String },
+    /// A wire connection closed or corrupted (reader-local; `conn` is
+    /// the connection generation, so stale reports from replaced shards
+    /// are ignored).
+    ConnDown {
+        conn: u64,
+        shard: usize,
+        msg: String,
+    },
 }
 
 /// Coordinator → shard commands (one channel/connection per shard). On
 /// a wire transport these cross as serialized frames (`net::wire` tags
-/// `ROUND`/`APPLY`/`STOP`; lane recycling stays local to each side, so
-/// `Apply`'s lanes never travel).
+/// `ROUND`/`APPLY`/`STATE`/`STOP`; lane recycling stays local to each
+/// side, so `Apply`'s lanes never travel).
 enum ShardCmd {
     /// Run the round over these `(global slot, client id)` assignments
     /// (possibly empty — the shard still participates in the barrier).
     Round { slots: Vec<(usize, usize)> },
     /// Apply the aggregated broadcast to every local replica, take the
     /// round's lanes back for recycling, and — when `eval` — evaluate
-    /// the central model on the synced replica.
+    /// the central model on the synced replica. In bidirectional wire
+    /// modes `stream` carries the server's once-encoded downstream
+    /// bitstream; those exact bytes fan out instead of the dense delta.
     Apply {
         broadcast: Arc<Delta>,
+        stream: Option<Arc<Vec<u8>>>,
         lanes: Vec<(usize, RoundLane)>,
         eval: bool,
     },
+    /// Session plane: install replica/client state and/or collect it.
+    State(StateCmd),
     /// Shut down cleanly.
     Stop,
 }
@@ -256,6 +318,7 @@ impl ShardTx {
                 }
                 ShardCmd::Apply {
                     broadcast,
+                    stream,
                     lanes,
                     eval,
                 } => {
@@ -267,7 +330,10 @@ impl ShardTx {
                         .lock()
                         .map_err(|_| anyhow!("apply cache poisoned"))?;
                     if !cache.fresh {
-                        wire::encode_apply(&mut cache.buf, &broadcast, false);
+                        match &stream {
+                            Some(s) => wire::encode_apply_stream(&mut cache.buf, s, false),
+                            None => wire::encode_apply(&mut cache.buf, &broadcast, false),
+                        }
                         cache.fresh = true;
                     }
                     if eval {
@@ -282,6 +348,10 @@ impl ShardTx {
                         sink.send(&cache.buf)
                     }
                 }
+                ShardCmd::State(state) => {
+                    wire::encode_state_cmd(buf, &state);
+                    sink.send(buf)
+                }
                 ShardCmd::Stop => {
                     wire::encode_stop(buf);
                     sink.send(buf)
@@ -290,6 +360,284 @@ impl ShardTx {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Session context + worker admission
+// ---------------------------------------------------------------------------
+
+/// Everything session-related the control loop needs: the snapshot
+/// store + cadence, an optional resume state, the scripted membership
+/// plan and crash injection.
+struct SessionCtx {
+    store: Option<SessionStore>,
+    every: usize,
+    crash_after: Option<usize>,
+    resume: Option<SessionState>,
+    plan: ElasticPlan,
+    synthetic: bool,
+}
+
+impl SessionCtx {
+    fn build(
+        cfg: &ExperimentConfig,
+        compute: &ComputeSpec,
+        plan: ElasticPlan,
+        resume: Option<SessionState>,
+    ) -> Result<Self> {
+        let store = match &cfg.session {
+            Some(s) => {
+                // The checkpoint dir crosses the config codec (INIT
+                // handshakes and every snapshot embed the config), which
+                // is UTF-8; a lossily-encoded dir would silently redirect
+                // the *resumed* run's checkpoints elsewhere.
+                if s.dir.to_str().is_none() {
+                    return Err(anyhow!(
+                        "checkpoint dir {:?} is not valid UTF-8 and cannot cross the \
+                         config codec (snapshots embed the experiment config)",
+                        s.dir
+                    ));
+                }
+                Some(SessionStore::open(&s.dir)?)
+            }
+            None => None,
+        };
+        Ok(Self {
+            store,
+            every: cfg.session.as_ref().map(|s| s.every).unwrap_or(0),
+            crash_after: cfg.session.as_ref().and_then(|s| s.crash_after),
+            resume,
+            plan,
+            synthetic: matches!(compute, ComputeSpec::Synthetic { .. }),
+        })
+    }
+}
+
+/// How the control loop provisions a replacement shard worker at a
+/// membership boundary. Each deployment shape brings its own
+/// implementation (spawn a thread, open a loopback pair, connect a TCP
+/// worker); `NoAdmit` is the shape that cannot (externally-joined
+/// workers must reconnect on their own).
+trait Admit {
+    /// Provision one worker for `shard` (of `shards`), returning its
+    /// connection generation and sender. The worker introduces itself
+    /// with READY over the shared fan-in channel.
+    fn admit(&mut self, shard: usize, shards: usize) -> Result<(u64, ShardTx)>;
+
+    /// Release any retained fan-in sender once no further admission can
+    /// happen, so channel disconnection (every worker gone without a
+    /// message) still fails the control loop fast. Idempotent.
+    fn seal(&mut self) {}
+}
+
+/// [`Admit`] for deployments that cannot provision workers themselves.
+struct NoAdmit;
+
+impl Admit for NoAdmit {
+    fn admit(&mut self, shard: usize, _shards: usize) -> Result<(u64, ShardTx)> {
+        Err(anyhow!(
+            "cannot provision a replacement for shard {shard}: this deployment's workers \
+             join externally (start a new `fsfl shard-worker` and re-serve)"
+        ))
+    }
+}
+
+/// [`Admit`] over in-process mpsc shard threads.
+struct MpscAdmit {
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    /// Fan-in sender handed to every spawned shard. Dropped via
+    /// [`MpscAdmit::seal`] once no further admissions can happen, so
+    /// `msg_rx.recv()` still disconnects (and the control loop still
+    /// fails fast) when every shard exits without a message.
+    msg_tx: Option<mpsc::Sender<ShardMsg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    next_conn: u64,
+}
+
+impl Admit for MpscAdmit {
+    fn seal(&mut self) {
+        self.msg_tx = None;
+    }
+
+    fn admit(&mut self, shard: usize, shards: usize) -> Result<(u64, ShardTx)> {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+        let cfg = self.cfg.clone();
+        let compute = self.compute.clone();
+        let tx = self
+            .msg_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("admission channel sealed (static membership)"))?
+            .clone();
+        self.handles.push(std::thread::spawn(move || {
+            shard_thread_mpsc(cfg, compute, shard, shards, cmd_rx, tx)
+        }));
+        self.next_conn += 1;
+        Ok((self.next_conn, ShardTx::Mpsc(cmd_tx)))
+    }
+}
+
+/// How a [`WireAdmit`] provisions brand-new worker endpoints.
+enum WireMode {
+    /// In-process loopback byte pipes.
+    Loopback,
+    /// Localhost TCP through this listener (worker threads connect in).
+    Tcp { listener: TcpListener },
+}
+
+/// Wire-connection bookkeeping shared by every wire deployment shape:
+/// INIT handshakes, per-connection reader threads, byte counters, and
+/// (when a [`WireMode`] is present) provisioning of replacement
+/// workers.
+struct WireAdmit {
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    /// Fan-in sender cloned into every reader thread. Dropped via
+    /// [`WireAdmit::seal`] once no further admissions can happen, so
+    /// `msg_rx.recv()` still disconnects when every reader exits
+    /// without reporting.
+    msg_tx: Option<mpsc::Sender<ShardMsg>>,
+    shared: Arc<WireShared>,
+    mode: Option<WireMode>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    sent: Vec<Arc<AtomicU64>>,
+    received: Vec<Arc<AtomicU64>>,
+    next_conn: u64,
+}
+
+impl WireAdmit {
+    fn new(
+        cfg: &ExperimentConfig,
+        compute: &ComputeSpec,
+        msg_tx: mpsc::Sender<ShardMsg>,
+        mode: Option<WireMode>,
+    ) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            compute: compute.clone(),
+            msg_tx: Some(msg_tx),
+            shared: Arc::new(WireShared {
+                pool: Mutex::new(Vec::new()),
+                apply: Mutex::new(ApplyCache::default()),
+            }),
+            mode,
+            workers: Vec::new(),
+            readers: Vec::new(),
+            sent: Vec::new(),
+            received: Vec::new(),
+            next_conn: 0,
+        }
+    }
+
+    /// INIT an established connection as `shard` and start its reader.
+    fn attach(
+        &mut self,
+        shard: usize,
+        shards: usize,
+        conn: Box<dyn Transport>,
+    ) -> Result<(u64, ShardTx)> {
+        let (mut sink, source) = conn.open()?;
+        let mut buf = Vec::new();
+        wire::encode_init(&mut buf, shard, shards, &self.cfg, &self.compute);
+        sink.send(&buf)
+            .map_err(|e| anyhow!("shard {shard}: INIT send failed: {e:#}"))?;
+        self.sent.push(sink.counter());
+        self.received.push(source.counter());
+        self.next_conn += 1;
+        let conn_id = self.next_conn;
+        let tx = self
+            .msg_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("admission channel sealed (static membership)"))?
+            .clone();
+        let shared = self.shared.clone();
+        self.readers.push(std::thread::spawn(move || {
+            reader_loop(conn_id, shard, source, shared, tx)
+        }));
+        Ok((
+            conn_id,
+            ShardTx::Wire {
+                sink,
+                shared: self.shared.clone(),
+                buf: Vec::new(),
+            },
+        ))
+    }
+
+    /// Total frame-layer traffic across every connection ever attached.
+    fn wire_stats(&self) -> WireStats {
+        WireStats {
+            sent: self.sent.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
+            received: self
+                .received
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .sum(),
+        }
+    }
+
+    /// Join every reader and worker thread (teardown).
+    fn join_all(&mut self) {
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Admit for WireAdmit {
+    fn seal(&mut self) {
+        self.msg_tx = None;
+    }
+
+    fn admit(&mut self, shard: usize, shards: usize) -> Result<(u64, ShardTx)> {
+        enum Plan {
+            None,
+            Loopback,
+            Tcp(std::net::SocketAddr),
+        }
+        let plan = match &self.mode {
+            None => Plan::None,
+            Some(WireMode::Loopback) => Plan::Loopback,
+            Some(WireMode::Tcp { listener }) => Plan::Tcp(
+                listener
+                    .local_addr()
+                    .map_err(|e| anyhow!("listener address: {e}"))?,
+            ),
+        };
+        let conn: Box<dyn Transport> = match plan {
+            Plan::None => {
+                return NoAdmit.admit(shard, shards);
+            }
+            Plan::Loopback => {
+                let (coord_end, shard_end) = loopback_pair();
+                self.workers.push(std::thread::spawn(move || {
+                    serve_shard_transport(Box::new(shard_end))
+                }));
+                Box::new(coord_end)
+            }
+            Plan::Tcp(addr) => {
+                self.workers.push(std::thread::spawn(move || {
+                    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
+                }));
+                let stream = match &self.mode {
+                    Some(WireMode::Tcp { listener }) => {
+                        accept_one(listener, JOIN_TIMEOUT, || Ok(()))?
+                    }
+                    _ => unreachable!("plan was Tcp"),
+                };
+                Box::new(TcpTransport::new(stream))
+            }
+        };
+        self.attach(shard, shards, conn)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public deployment entry points
+// ---------------------------------------------------------------------------
 
 /// Run an experiment with clients sharded over `cfg.compute_shards`
 /// compute workers (one PJRT client per shard) over the config's
@@ -300,40 +648,111 @@ pub fn run_experiment_sharded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    run_sharded_impl(cfg, ComputeSpec::Real, &mut on_event)
+    run_sharded_impl(
+        cfg,
+        ComputeSpec::Real,
+        ElasticPlan::default(),
+        None,
+        &mut on_event,
+    )
+}
+
+/// [`run_experiment_sharded`] with a scripted [`ElasticPlan`]: shards
+/// leave and replacements re-join at the planned round boundaries, with
+/// client state migrating over the wire. Outputs stay byte-identical to
+/// the static-membership run.
+pub fn run_experiment_sharded_elastic(
+    cfg: ExperimentConfig,
+    plan: ElasticPlan,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_sharded_impl(cfg, ComputeSpec::Real, plan, None, &mut on_event)
+}
+
+/// Resume a previously-checkpointed experiment on real compute from a
+/// loaded [`SessionState`] (see `crate::session`; `fsfl run --resume`).
+/// The passed `cfg` must equal the snapshot's config.
+pub fn run_experiment_resumed(
+    cfg: ExperimentConfig,
+    state: SessionState,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_sharded_impl(
+        cfg,
+        ComputeSpec::Real,
+        ElasticPlan::default(),
+        Some(state),
+        &mut on_event,
+    )
 }
 
 /// [`run_experiment_sharded`] over the deterministic synthetic compute
 /// plane ([`crate::fl::SyntheticPlane`] on `manifest`) instead of real
-/// PJRT clients. This is the transport test harness: it exercises the
-/// full coordinator protocol — fan-out, wire serialization, ordered
-/// fan-in, FedAvg, broadcast, eval barrier — with no XLA backend and no
-/// artifacts, so the differential conformance and multi-process CI
-/// tests run everywhere.
+/// PJRT clients. This is the transport/session test harness: it
+/// exercises the full coordinator protocol — fan-out, wire
+/// serialization, ordered fan-in, FedAvg, broadcast, eval barrier,
+/// checkpoints — with no XLA backend and no artifacts, so the
+/// differential conformance and multi-process CI tests run everywhere.
 pub fn run_experiment_synthetic(
     cfg: ExperimentConfig,
     manifest: Arc<Manifest>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    run_sharded_impl(cfg, ComputeSpec::Synthetic { manifest }, &mut on_event)
+    run_sharded_impl(
+        cfg,
+        ComputeSpec::Synthetic { manifest },
+        ElasticPlan::default(),
+        None,
+        &mut on_event,
+    )
+}
+
+/// [`run_experiment_synthetic`] with full session control: a scripted
+/// membership plan and/or a resume state. This is the entry the session
+/// conformance tests and `fsfl run --synth` / `--resume` use.
+pub fn run_experiment_synthetic_session(
+    cfg: ExperimentConfig,
+    manifest: Arc<Manifest>,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_sharded_impl(
+        cfg,
+        ComputeSpec::Synthetic { manifest },
+        plan,
+        resume,
+        &mut on_event,
+    )
 }
 
 /// Transport dispatch for the sharded deployment shapes.
 fn run_sharded_impl(
     cfg: ExperimentConfig,
     compute: ComputeSpec,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
     let shards = resolved_shards(&cfg);
-    if shards <= 1 && !cfg.transport.is_wire() && matches!(compute, ComputeSpec::Real) {
+    if shards <= 1
+        && !cfg.transport.is_wire()
+        && matches!(compute, ComputeSpec::Real)
+        && cfg.session.is_none()
+        && resume.is_none()
+        && plan.is_empty()
+    {
         return run_single_thread(cfg, on_event);
     }
-    let result = match cfg.transport {
-        TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, on_event),
-        TransportKind::Loopback | TransportKind::Tcp => {
-            run_wire_sharded(&cfg, shards, &compute, on_event)
+    let result = (|| {
+        let mut session = SessionCtx::build(&cfg, &compute, plan, resume)?;
+        match cfg.transport {
+            TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, &mut session, on_event),
+            TransportKind::Loopback | TransportKind::Tcp => {
+                run_wire_sharded(&cfg, shards, &compute, &mut session, on_event)
+            }
         }
-    };
+    })();
     match &result {
         Ok(log) => on_event(&Event::Finished(log.clone())),
         Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
@@ -346,32 +765,55 @@ fn run_mpsc_sharded(
     cfg: &ExperimentConfig,
     shards: usize,
     compute: &ComputeSpec,
+    session: &mut SessionCtx,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
     let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+    let mut admit = MpscAdmit {
+        cfg: cfg.clone(),
+        compute: compute.clone(),
+        msg_tx: Some(msg_tx),
+        handles: Vec::new(),
+        next_conn: 0,
+    };
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
-    let mut handles = Vec::with_capacity(shards);
+    let mut active: Vec<u64> = Vec::with_capacity(shards);
     for shard in 0..shards {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
-        txs.push(ShardTx::Mpsc(cmd_tx));
-        let cfg2 = cfg.clone();
-        let compute2 = compute.clone();
-        let tx = msg_tx.clone();
-        handles.push(std::thread::spawn(move || {
-            shard_thread_mpsc(cfg2, compute2, shard, shards, cmd_rx, tx)
-        }));
+        let (conn, tx) = admit.admit(shard, shards)?;
+        active.push(conn);
+        txs.push(tx);
     }
-    drop(msg_tx);
+    // Static membership keeps no admission sender alive, so the fan-in
+    // channel disconnects (and the run fails fast) if every shard dies
+    // silently; elastic runs must keep it for later admissions.
+    if session.plan.is_empty() {
+        admit.seal();
+    }
 
-    let result = coordinate(cfg, shards, &mut txs, &msg_rx, on_event);
+    let result = coordinate(
+        cfg, shards, &mut txs, &mut active, &mut admit, &msg_rx, session, on_event,
+    );
     // Shut every shard down (dead shards just return a send error).
     for tx in &mut txs {
         let _ = tx.send(ShardCmd::Stop);
     }
-    for h in handles {
+    for h in admit.handles.drain(..) {
         let _ = h.join();
     }
     result
+}
+
+/// A Real-compute worker re-opens the artifacts path from the INIT
+/// handshake config; reject paths the UTF-8 config encoding would
+/// silently mangle instead of failing remotely with a phantom path.
+fn check_wire_cfg(cfg: &ExperimentConfig, compute: &ComputeSpec) -> Result<()> {
+    if matches!(compute, ComputeSpec::Real) && cfg.artifacts_root.to_str().is_none() {
+        return Err(anyhow!(
+            "artifacts path {:?} is not valid UTF-8 and cannot cross the config handshake",
+            cfg.artifacts_root
+        ));
+    }
+    Ok(())
 }
 
 /// Shards as threads speaking the serialized wire protocol (loopback
@@ -380,44 +822,58 @@ fn run_wire_sharded(
     cfg: &ExperimentConfig,
     shards: usize,
     compute: &ComputeSpec,
+    session: &mut SessionCtx,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
-    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
-    let mut handles = Vec::with_capacity(shards);
-    match cfg.transport {
-        TransportKind::Loopback => {
-            for _ in 0..shards {
-                let (coord_end, shard_end) = loopback_pair();
-                conns.push(Box::new(coord_end));
-                handles.push(std::thread::spawn(move || {
-                    serve_shard_transport(Box::new(shard_end))
-                }));
-            }
-        }
-        TransportKind::Tcp => {
-            let listener = TcpListener::bind("127.0.0.1:0")
-                .map_err(|e| anyhow!("binding shard listener: {e}"))?;
-            let addr = listener
-                .local_addr()
-                .map_err(|e| anyhow!("listener address: {e}"))?;
-            for _ in 0..shards {
-                handles.push(std::thread::spawn(move || {
-                    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
-                }));
-            }
-            for _ in 0..shards {
-                let stream = accept_one(&listener, JOIN_TIMEOUT, || Ok(()))?;
-                conns.push(Box::new(TcpTransport::new(stream)));
-            }
-        }
+    check_wire_cfg(cfg, compute)?;
+    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+    let mode = match cfg.transport {
+        TransportKind::Loopback => WireMode::Loopback,
+        TransportKind::Tcp => WireMode::Tcp {
+            listener: TcpListener::bind("127.0.0.1:0")
+                .map_err(|e| anyhow!("binding shard listener: {e}"))?,
+        },
         TransportKind::Mpsc => unreachable!("mpsc is not a wire transport"),
+    };
+    let mut admit = WireAdmit::new(cfg, compute, msg_tx, Some(mode));
+    let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
+    let mut active: Vec<u64> = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let (conn, tx) = admit.admit(shard, shards)?;
+        active.push(conn);
+        txs.push(tx);
+    }
+    // Static membership keeps no admission sender alive (see
+    // run_mpsc_sharded); elastic runs need it for later admissions.
+    if session.plan.is_empty() {
+        admit.seal();
     }
 
-    let result = drive_wire_coordinator(cfg, shards, conns, compute, on_event);
-    for h in handles {
-        let _ = h.join();
+    let result = coordinate(
+        cfg, shards, &mut txs, &mut active, &mut admit, &msg_rx, session, on_event,
+    );
+    teardown_wire(result, txs, &mut admit)
+}
+
+/// Shared wire-coordinator teardown: Stop fan-out, close the write
+/// halves so shards (and with them the readers) wind down even on the
+/// error path, join everything, and attach the measured frame-layer
+/// traffic to a successful log.
+fn teardown_wire(
+    result: Result<RunLog>,
+    mut txs: Vec<ShardTx>,
+    admit: &mut WireAdmit,
+) -> Result<RunLog> {
+    for tx in &mut txs {
+        let _ = tx.send(ShardCmd::Stop);
     }
-    result
+    drop(txs);
+    admit.join_all();
+    let stats = admit.wire_stats();
+    result.map(|mut log| {
+        log.wire = Some(stats);
+        log
+    })
 }
 
 /// Accept one shard connection with a deadline, polling `liveness`
@@ -454,84 +910,15 @@ fn accept_one(
     }
 }
 
-/// Run the coordinator over already-established wire connections: INIT
-/// handshakes out, per-connection reader threads in, then the shared
-/// control loop. Measures frame-layer traffic into [`RunLog::wire`].
-fn drive_wire_coordinator(
-    cfg: &ExperimentConfig,
-    shards: usize,
-    conns: Vec<Box<dyn Transport>>,
-    compute: &ComputeSpec,
-    on_event: &mut impl FnMut(&Event),
-) -> Result<RunLog> {
-    debug_assert_eq!(conns.len(), shards);
-    // A Real-compute worker re-opens the artifacts path from the
-    // handshake config; reject paths the UTF-8 config encoding would
-    // silently mangle instead of failing remotely with a phantom path.
-    if matches!(compute, ComputeSpec::Real) && cfg.artifacts_root.to_str().is_none() {
-        return Err(anyhow!(
-            "artifacts path {:?} is not valid UTF-8 and cannot cross the config handshake",
-            cfg.artifacts_root
-        ));
-    }
-    let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
-    let shared = Arc::new(WireShared {
-        pool: Mutex::new(Vec::new()),
-        apply: Mutex::new(ApplyCache::default()),
-    });
-    let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
-    let mut readers = Vec::with_capacity(shards);
-    let mut sent: Vec<Arc<AtomicU64>> = Vec::with_capacity(shards);
-    let mut received: Vec<Arc<AtomicU64>> = Vec::with_capacity(shards);
-    let mut buf = Vec::new();
-    for (shard, conn) in conns.into_iter().enumerate() {
-        let (mut sink, source) = conn.open()?;
-        wire::encode_init(&mut buf, shard, shards, cfg, compute);
-        sink.send(&buf)
-            .map_err(|e| anyhow!("shard {shard}: INIT send failed: {e:#}"))?;
-        sent.push(sink.counter());
-        received.push(source.counter());
-        let tx = msg_tx.clone();
-        let shared2 = shared.clone();
-        readers.push(std::thread::spawn(move || {
-            reader_loop(shard, source, shared2, tx)
-        }));
-        txs.push(ShardTx::Wire {
-            sink,
-            shared: shared.clone(),
-            buf: Vec::new(),
-        });
-    }
-    drop(msg_tx);
-
-    let result = coordinate(cfg, shards, &mut txs, &msg_rx, on_event);
-    for tx in &mut txs {
-        let _ = tx.send(ShardCmd::Stop);
-    }
-    // Close the write halves so shards (and with them the readers) wind
-    // down even on the error path.
-    drop(txs);
-    for r in readers {
-        let _ = r.join();
-    }
-    let stats = WireStats {
-        sent: sent.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
-        received: received.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
-    };
-    result.map(|mut log| {
-        log.wire = Some(stats);
-        log
-    })
-}
-
 /// One wire connection's receive pump: decode frames into [`ShardMsg`]s
 /// for the shared fan-in channel. Any transport error, protocol
-/// violation or mid-run close is surfaced as a `Failed` message so the
-/// control loop fails fast with a descriptive error instead of
-/// deadlocking on a barrier a dead shard will never reach. (A close
-/// *after* the control loop finished parks a `Failed` nobody reads —
-/// harmless.)
+/// violation or close is surfaced as a `ConnDown` message carrying this
+/// connection's generation; the control loop fails fast when the
+/// connection is the shard's active one and ignores it when the shard
+/// was deliberately replaced. (A close *after* the control loop
+/// finished parks a message nobody reads — harmless.)
 fn reader_loop(
+    conn: u64,
     shard: usize,
     mut source: FrameSource,
     shared: Arc<WireShared>,
@@ -543,14 +930,16 @@ fn reader_loop(
         match source.recv(&mut buf) {
             Ok(true) => {}
             Ok(false) => {
-                let _ = tx.send(ShardMsg::Failed {
+                let _ = tx.send(ShardMsg::ConnDown {
+                    conn,
                     shard,
                     msg: "connection closed".into(),
                 });
                 return;
             }
             Err(e) => {
-                let _ = tx.send(ShardMsg::Failed {
+                let _ = tx.send(ShardMsg::ConnDown {
+                    conn,
                     shard,
                     msg: format!("transport receive failed: {e:#}"),
                 });
@@ -564,7 +953,8 @@ fn reader_loop(
                 }
             }
             Err(e) => {
-                let _ = tx.send(ShardMsg::Failed {
+                let _ = tx.send(ShardMsg::ConnDown {
+                    conn,
                     shard,
                     msg: format!("wire decode failed: {e:#}"),
                 });
@@ -614,6 +1004,15 @@ fn decode_shard_msg(
                 scale_stats,
             })
         }
+        MsgTag::State => {
+            let (shard, clients) = wire::decode_state_msg(buf)?;
+            if shard != conn_shard {
+                return Err(anyhow!(
+                    "STATE claims shard {shard} on connection {conn_shard}"
+                ));
+            }
+            Ok(ShardMsg::State { shard, clients })
+        }
         MsgTag::Failed => {
             let (shard, msg) = wire::decode_failed(buf)?;
             Ok(ShardMsg::Failed { shard, msg })
@@ -621,32 +1020,70 @@ fn decode_shard_msg(
     }
 }
 
+/// Receive the next relevant shard message, translating an active
+/// connection's `ConnDown` into a shard failure and discarding stale
+/// reports from deliberately-replaced connections.
+fn next_msg(msg_rx: &mpsc::Receiver<ShardMsg>, active: &[u64]) -> Result<ShardMsg> {
+    loop {
+        match msg_rx.recv() {
+            Ok(ShardMsg::ConnDown { conn, shard, msg }) => {
+                if active.get(shard).map_or(true, |&a| a == conn) {
+                    return Ok(ShardMsg::Failed { shard, msg });
+                }
+                // A replaced shard's old reader winding down — ignore.
+            }
+            Ok(m) => return Ok(m),
+            Err(_) => return Err(anyhow!("all shard channels closed")),
+        }
+    }
+}
+
 /// Turn a dead-shard condition into its parked `Failed` message when one
 /// is already queued, otherwise the fallback description.
-fn shard_failure(msg_rx: &mpsc::Receiver<ShardMsg>, fallback: &str) -> anyhow::Error {
+fn shard_failure(
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    active: &[u64],
+    fallback: &str,
+) -> anyhow::Error {
     while let Ok(m) = msg_rx.try_recv() {
-        if let ShardMsg::Failed { shard, msg } = m {
-            return anyhow!("shard {shard}: {msg}");
+        match m {
+            ShardMsg::Failed { shard, msg } => return anyhow!("shard {shard}: {msg}"),
+            ShardMsg::ConnDown { conn, shard, msg } => {
+                if active.get(shard).map_or(true, |&a| a == conn) {
+                    return anyhow!("shard {shard}: {msg}");
+                }
+            }
+            _ => {}
         }
     }
     anyhow!("{fallback}")
 }
 
+// ---------------------------------------------------------------------------
+// The control loop
+// ---------------------------------------------------------------------------
+
 /// The coordinator's control loop: round fan-out, ordered fan-in
-/// reduction, FedAvg, broadcast, metrics. Transport-oblivious — it
-/// talks [`ShardTx`]/[`ShardMsg`] and never sees frames.
+/// reduction, FedAvg, broadcast, metrics — plus the session plane
+/// (resume install, checkpoint collection, elastic membership).
+/// Transport-oblivious — it talks [`ShardTx`]/[`ShardMsg`] and never
+/// sees frames.
+#[allow(clippy::too_many_arguments)]
 fn coordinate(
     cfg: &ExperimentConfig,
     shards: usize,
-    txs: &mut [ShardTx],
+    txs: &mut Vec<ShardTx>,
+    active: &mut Vec<u64>,
+    admit: &mut dyn Admit,
     msg_rx: &mpsc::Receiver<ShardMsg>,
+    session: &mut SessionCtx,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
     // Startup barrier: every shard builds its runtime + clients.
     let mut init: Option<ParamSet> = None;
     let mut ready = 0usize;
     while ready < shards {
-        match msg_rx.recv() {
+        match next_msg(msg_rx, active) {
             Ok(ShardMsg::Ready { shard, init: i }) => {
                 debug_assert!(shard < shards, "ready from unknown shard {shard}");
                 ready += 1;
@@ -656,12 +1093,102 @@ fn coordinate(
             }
             Ok(ShardMsg::Failed { shard, msg }) => return Err(anyhow!("shard {shard}: {msg}")),
             Ok(_) => return Err(anyhow!("unexpected shard message during startup")),
-            Err(_) => return Err(shard_failure(msg_rx, "shards exited during startup")),
+            Err(_) => {
+                return Err(shard_failure(
+                    msg_rx,
+                    active,
+                    "shards exited during startup",
+                ))
+            }
         }
     }
     let init = init.expect("startup barrier passed without init");
 
     let mut server = Server::new(init, cfg.downstream_codec());
+    let mut log = RunLog::new(cfg.name.clone());
+    let mut start_round = 0usize;
+
+    // ---- session resume: rebuild the server from the snapshot and
+    //      rehydrate every shard over the STATE pair ----
+    if let Some(state) = session.resume.take() {
+        // The experiment itself must be re-run verbatim; the session
+        // block (checkpoint dir/cadence/fault injection) is operational
+        // and may legitimately differ on resume, so it is normalized
+        // out of the comparison.
+        let mut ours_cfg = cfg.clone();
+        ours_cfg.session = None;
+        let mut theirs_cfg = state.cfg.clone();
+        theirs_cfg.session = None;
+        let mut ours = Vec::new();
+        let mut theirs = Vec::new();
+        wire::encode_config(&mut ours, &ours_cfg);
+        wire::encode_config(&mut theirs, &theirs_cfg);
+        if ours != theirs {
+            return Err(anyhow!(
+                "resume config does not match the snapshot's experiment config \
+                 (resume re-runs the snapshot's experiment verbatim)"
+            ));
+        }
+        let manifest = server.params.manifest.clone();
+        if state.manifest_tsv != manifest.to_tsv() {
+            return Err(anyhow!(
+                "resume model contract mismatch: the snapshot's manifest differs \
+                 from the shards' READY manifest"
+            ));
+        }
+        if state.next_round > cfg.rounds {
+            return Err(anyhow!(
+                "snapshot says {} rounds are done but the config runs only {}",
+                state.next_round,
+                cfg.rounds
+            ));
+        }
+        let params = state.params_for(&manifest)?;
+        server = Server::new(params, cfg.downstream_codec());
+        log.rounds = state.rounds.clone();
+        start_round = state.next_round;
+        for (s, tx) in txs.iter_mut().enumerate() {
+            let owned: Vec<ClientState> = state
+                .clients
+                .iter()
+                .filter(|c| scheduler::shard_of(c.id, shards) == s)
+                .cloned()
+                .collect();
+            tx.send(ShardCmd::State(StateCmd {
+                collect: false,
+                install: Some(StateInstall {
+                    shard: s,
+                    shards,
+                    rounds_done: state.next_round as u64,
+                    params: server.params.clone(),
+                    clients: owned,
+                }),
+            }))
+            .map_err(|_| {
+                shard_failure(msg_rx, active, &format!("shard {s} disconnected during resume"))
+            })?;
+        }
+    }
+
+    // Validate the membership plan up front: a silently-ignored event
+    // would not just skip the replacement, it would also keep the
+    // admission sender alive forever (see the seal below) and disable
+    // fail-fast on silent worker death.
+    for &(round, s) in &session.plan.replace {
+        if s >= shards {
+            return Err(anyhow!(
+                "elastic plan replaces shard {s} but only {shards} shards exist"
+            ));
+        }
+        if round < start_round || round >= cfg.rounds {
+            return Err(anyhow!(
+                "elastic plan schedules a replacement at round {round}, outside the \
+                 remaining rounds {start_round}..{}",
+                cfg.rounds
+            ));
+        }
+    }
+
     let update_idx = server.params.manifest.update_indices();
     let n = cfg.clients;
     let take = ((cfg.participation * n as f64).round() as usize).clamp(1, n);
@@ -672,9 +1199,87 @@ fn coordinate(
     // buffer is uniquely owned again and no model-sized allocation
     // happens in steady state (a slow shard only costs a fallback copy).
     let mut bc_slot: Option<Arc<Delta>> = None;
-    let mut log = RunLog::new(cfg.name.clone());
+    // Same recycling for the once-encoded downstream APPLY stream.
+    let mut stream_slot: Option<Arc<Vec<u8>>> = None;
 
-    for t in 0..cfg.rounds {
+    for t in start_round..cfg.rounds {
+        // ---- elastic membership: scripted replacements at this round
+        //      boundary (collect state → stop → admit → READY → install) ----
+        for ev in 0..session.plan.replace.len() {
+            let (round, s) = session.plan.replace[ev];
+            if round != t {
+                continue;
+            }
+            // 1 · collect the departing shard's client state.
+            txs[s]
+                .send(ShardCmd::State(StateCmd {
+                    collect: true,
+                    install: None,
+                }))
+                .map_err(|_| {
+                    shard_failure(msg_rx, active, &format!("shard {s} disconnected before handoff"))
+                })?;
+            let migrated = loop {
+                match next_msg(msg_rx, active) {
+                    Ok(ShardMsg::State { shard, clients }) if shard == s => break clients,
+                    Ok(ShardMsg::Failed { shard, msg }) => {
+                        return Err(anyhow!("shard {shard}: {msg}"))
+                    }
+                    Ok(_) => {
+                        return Err(anyhow!(
+                            "unexpected shard message while collecting shard {s}'s state"
+                        ))
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            // 2 · stop it and provision the replacement under the same
+            //     index; its old connection becomes stale.
+            let _ = txs[s].send(ShardCmd::Stop);
+            let (conn, tx) = admit.admit(s, shards)?;
+            txs[s] = tx;
+            active[s] = conn;
+            // 3 · the newcomer introduces itself through the ordinary
+            //     READY handshake (the elastic re-join point).
+            loop {
+                match next_msg(msg_rx, active) {
+                    Ok(ShardMsg::Ready { shard, .. }) if shard == s => break,
+                    Ok(ShardMsg::Failed { shard, msg }) => {
+                        return Err(anyhow!("shard {shard}: {msg}"))
+                    }
+                    Ok(_) => {
+                        return Err(anyhow!(
+                            "unexpected shard message while shard {s} was re-joining"
+                        ))
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            // 4 · rehydrate it: absolute replica params + the migrated
+            //     client states + the fast-forwarded round counter.
+            txs[s]
+                .send(ShardCmd::State(StateCmd {
+                    collect: false,
+                    install: Some(StateInstall {
+                        shard: s,
+                        shards,
+                        rounds_done: t as u64,
+                        params: server.params.clone(),
+                        clients: migrated,
+                    }),
+                }))
+                .map_err(|_| {
+                    shard_failure(msg_rx, active, &format!("shard {s} disconnected during re-join"))
+                })?;
+        }
+        // Once the last planned membership change is behind us, no
+        // further admission can happen — release the retained fan-in
+        // sender so silent worker death still disconnects the channel
+        // (static-membership runs seal before the control loop starts).
+        if !session.plan.is_empty() && session.plan.replace.iter().all(|&(r, _)| r <= t) {
+            admit.seal();
+        }
+
         // Fan-out: the same deterministic participant selection as the
         // single-thread round, split by shard ownership.
         scheduler::select_participants(cfg.seed, t, n, take, &mut order);
@@ -685,14 +1290,14 @@ fn coordinate(
         for (s, slots) in per_shard.into_iter().enumerate() {
             txs[s]
                 .send(ShardCmd::Round { slots })
-                .map_err(|_| shard_failure(msg_rx, &format!("shard {s} disconnected")))?;
+                .map_err(|_| shard_failure(msg_rx, active, &format!("shard {s} disconnected")))?;
         }
 
         // Fan-in: collect every shard's lanes, then reduce in slot order.
         let mut tagged: Vec<(usize, RoundLane)> = Vec::with_capacity(take);
         let mut done = 0usize;
         while done < shards {
-            match msg_rx.recv() {
+            match next_msg(msg_rx, active) {
                 Ok(ShardMsg::RoundDone { shard, lanes }) => {
                     debug_assert!(shard < shards, "lanes from unknown shard {shard}");
                     done += 1;
@@ -702,7 +1307,7 @@ fn coordinate(
                     return Err(anyhow!("shard {shard}: {msg}"))
                 }
                 Ok(_) => return Err(anyhow!("unexpected shard message during round {t}")),
-                Err(_) => return Err(shard_failure(msg_rx, "shards exited mid-round")),
+                Err(_) => return Err(shard_failure(msg_rx, active, "shards exited mid-round")),
             }
         }
         if tagged.len() != take {
@@ -743,6 +1348,24 @@ fn coordinate(
         if !reused {
             bc = Arc::new(broadcast.clone());
         }
+        // Encode-once APPLY: in bidirectional wire modes the downstream
+        // bitstream (already produced by `aggregate_into`) fans out as
+        // bytes; shards decode those exact bytes back into the identical
+        // dequantized broadcast.
+        let stream_arc: Option<Arc<Vec<u8>>> = match server.downstream_bytes() {
+            Some(bytes) if cfg.transport.is_wire() => {
+                let mut sa = stream_slot.take().unwrap_or_default();
+                match Arc::get_mut(&mut sa) {
+                    Some(v) => {
+                        v.clear();
+                        v.extend_from_slice(bytes);
+                    }
+                    None => sa = Arc::new(bytes.to_vec()),
+                }
+                Some(sa)
+            }
+            _ => None,
+        };
         let mut back: Vec<Vec<(usize, RoundLane)>> = vec![Vec::new(); shards];
         for (slot, lane) in tagged {
             back[scheduler::shard_of(lane.client, shards)].push((slot, lane));
@@ -751,13 +1374,14 @@ fn coordinate(
             txs[s]
                 .send(ShardCmd::Apply {
                     broadcast: bc.clone(),
+                    stream: stream_arc.clone(),
                     lanes,
                     eval: s == 0,
                 })
-                .map_err(|_| shard_failure(msg_rx, &format!("shard {s} disconnected")))?;
+                .map_err(|_| shard_failure(msg_rx, active, &format!("shard {s} disconnected")))?;
         }
         loop {
-            match msg_rx.recv() {
+            match next_msg(msg_rx, active) {
                 Ok(ShardMsg::Eval {
                     report,
                     scale_stats,
@@ -772,17 +1396,81 @@ fn coordinate(
                     return Err(anyhow!("shard {shard}: {msg}"))
                 }
                 Ok(_) => return Err(anyhow!("unexpected shard message awaiting eval")),
-                Err(_) => return Err(shard_failure(msg_rx, "shards exited awaiting eval")),
+                Err(_) => return Err(shard_failure(msg_rx, active, "shards exited awaiting eval")),
             }
         }
 
-        // Keep our reference for reuse next round (shards drop theirs
-        // once they have applied the delta).
+        // Keep our references for reuse next round (shards drop theirs
+        // once they have applied the delta / decoded the stream).
         bc_slot = Some(bc);
+        if let Some(sa) = stream_arc {
+            stream_slot = Some(sa);
+        }
 
-        on_event(&Event::RoundDone(m.clone()));
         let acc = m.accuracy;
         log.push(m);
+
+        // ---- checkpoint: collect every shard's client state and write
+        //      one atomic snapshot (before the round event fires, so an
+        //      observed round line implies its snapshot is on disk) ----
+        if let Some(store) = &session.store {
+            if session.every > 0 && (t + 1) % session.every == 0 {
+                for (s, tx) in txs.iter_mut().enumerate() {
+                    tx.send(ShardCmd::State(StateCmd {
+                        collect: true,
+                        install: None,
+                    }))
+                    .map_err(|_| {
+                        shard_failure(
+                            msg_rx,
+                            active,
+                            &format!("shard {s} disconnected during checkpoint"),
+                        )
+                    })?;
+                }
+                let mut clients: Vec<ClientState> = Vec::new();
+                let mut got = 0usize;
+                while got < shards {
+                    match next_msg(msg_rx, active) {
+                        Ok(ShardMsg::State { clients: c, .. }) => {
+                            got += 1;
+                            clients.extend(c);
+                        }
+                        Ok(ShardMsg::Failed { shard, msg }) => {
+                            return Err(anyhow!("shard {shard}: {msg}"))
+                        }
+                        Ok(_) => {
+                            return Err(anyhow!("unexpected shard message during checkpoint"))
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                clients.sort_by_key(|c| c.id);
+                let snap = SessionState {
+                    cfg: cfg.clone(),
+                    synthetic: session.synthetic,
+                    next_round: t + 1,
+                    manifest_tsv: server.params.manifest.to_tsv(),
+                    params: SessionState::bundle_params(&server.params),
+                    rounds: log.rounds.clone(),
+                    clients,
+                };
+                store.write(&snap)?;
+            }
+        }
+
+        on_event(&Event::RoundDone(
+            log.rounds.last().expect("round just pushed").clone(),
+        ));
+
+        // Fault injection for the session test plane: an in-process
+        // stand-in for `kill -9` right after round t's checkpoint.
+        if session.crash_after == Some(t) {
+            return Err(anyhow!(
+                "session: injected crash after round {t} (crash_after)"
+            ));
+        }
+
         if let Some(target) = cfg.target_accuracy {
             if acc >= target {
                 break;
@@ -811,6 +1499,12 @@ trait ShardBody {
     fn apply(&mut self, broadcast: &Delta) -> Result<()>;
     /// Evaluate the central model on the synced replica (shard 0 only).
     fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)>;
+    /// Export every local client's round-boundary state (session
+    /// plane; empty on the synthetic plane).
+    fn collect_state(&mut self) -> Vec<ClientState>;
+    /// Install a [`StateInstall`]: re-assignment, absolute replica
+    /// parameters, fast-forwarded round counter and client states.
+    fn install_state(&mut self, inst: &StateInstall) -> Result<()>;
 }
 
 /// Per-shard codec pool width: auto-sized pools split the machine
@@ -830,6 +1524,7 @@ fn shard_pool(cfg: &ExperimentConfig, shards: usize) -> WorkerPool {
 struct RealShard<'a, 'rt> {
     mr: &'a ModelRuntime<'rt>,
     cfg: &'a ExperimentConfig,
+    shard: usize,
     shards: usize,
     clients: Vec<Client>,
     train_data: Dataset,
@@ -857,6 +1552,7 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         Ok(Self {
             mr,
             cfg,
+            shard,
             shards,
             clients: setup.clients,
             train_data: setup.train_data,
@@ -931,6 +1627,54 @@ impl ShardBody for RealShard<'_, '_> {
             Vec::new()
         };
         Ok((report, scale_stats))
+    }
+
+    fn collect_state(&mut self) -> Vec<ClientState> {
+        self.clients.iter().map(|c| c.export_state()).collect()
+    }
+
+    fn install_state(&mut self, inst: &StateInstall) -> Result<()> {
+        if inst.params.numel() != self.init.numel() {
+            return Err(anyhow!(
+                "state params carry {} values, model has {}",
+                inst.params.numel(),
+                self.init.numel()
+            ));
+        }
+        // Cross-index reassignment never happens today: resume installs
+        // each shard's own index and elastic replacement admits the
+        // newcomer under the departed index (the per-connection readers
+        // validate shard identity, so a silently re-indexed worker would
+        // be rejected anyway). The assignment travels on the wire for
+        // forward compatibility; reject a mismatch instead of guessing.
+        if inst.shard != self.shard || inst.shards != self.shards {
+            return Err(anyhow!(
+                "state install re-assigns this worker from shard {}/{} to {}/{}; \
+                 cross-index reassignment is not supported (replacement workers \
+                 re-join under the departed index)",
+                self.shard,
+                self.shards,
+                inst.shard,
+                inst.shards
+            ));
+        }
+        // Absolute replica state: every local client equals the server.
+        for c in self.clients.iter_mut() {
+            c.global.copy_from(&inst.params);
+        }
+        if !inst.clients.is_empty() {
+            for c in self.clients.iter_mut() {
+                let st = inst
+                    .clients
+                    .iter()
+                    .find(|s| s.id == c.id)
+                    .ok_or_else(|| {
+                        anyhow!("no migrated state for locally-owned client {}", c.id)
+                    })?;
+                c.import_state(st)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1008,6 +1752,43 @@ impl ShardBody for SynthShard {
     fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)> {
         Ok((synth_eval(&self.accum), Vec::new()))
     }
+
+    fn collect_state(&mut self) -> Vec<ClientState> {
+        // The synthetic plane carries no per-client state: a client's
+        // output is a pure function of (round seed, id).
+        Vec::new()
+    }
+
+    fn install_state(&mut self, inst: &StateInstall) -> Result<()> {
+        // The synthetic init is all-zero, so the absolute server params
+        // equal the sequential broadcast sum bit for bit — installing
+        // them into `accum` reproduces the uninterrupted eval exactly.
+        if inst.params.tensors.len() != self.accum.tensors.len() {
+            return Err(anyhow!(
+                "state params carry {} tensors, synth plane has {}",
+                inst.params.tensors.len(),
+                self.accum.tensors.len()
+            ));
+        }
+        for (i, (a, p)) in self
+            .accum
+            .tensors
+            .iter_mut()
+            .zip(&inst.params.tensors)
+            .enumerate()
+        {
+            if a.len() != p.len() {
+                return Err(anyhow!(
+                    "state params tensor {i}: {} values, synth plane wants {}",
+                    p.len(),
+                    a.len()
+                ));
+            }
+            a.copy_from_slice(p);
+        }
+        self.round = inst.rounds_done;
+        Ok(())
+    }
 }
 
 /// The round-serving loop over typed mpsc channels (lanes move to the
@@ -1054,6 +1835,7 @@ fn shard_loop_mpsc(
             }
             Ok(ShardCmd::Apply {
                 broadcast,
+                stream: _,
                 lanes: returned,
                 eval,
             }) => {
@@ -1069,6 +1851,19 @@ fn shard_loop_mpsc(
                         .map_err(|_| anyhow!("coordinator disconnected"))?;
                 }
             }
+            Ok(ShardCmd::State(cmd)) => {
+                if let Some(inst) = &cmd.install {
+                    body.install_state(inst)?;
+                }
+                if cmd.collect {
+                    msg_tx
+                        .send(ShardMsg::State {
+                            shard,
+                            clients: body.collect_state(),
+                        })
+                        .map_err(|_| anyhow!("coordinator disconnected"))?;
+                }
+            }
             Ok(ShardCmd::Stop) | Err(_) => break,
         }
     }
@@ -1077,12 +1872,15 @@ fn shard_loop_mpsc(
 
 /// The round-serving loop over a wire connection: commands are decoded
 /// frames, lanes are serialized out and recycled locally (they never
-/// come back), the broadcast is deserialized into one recycled buffer.
+/// come back), the broadcast is deserialized into one recycled buffer
+/// (dense) or decoded from the once-encoded downstream stream
+/// (bidirectional).
 fn shard_loop_wire(
     body: &mut dyn ShardBody,
     shard: usize,
     sink: &mut FrameSink,
     source: &mut FrameSource,
+    downstream: Option<crate::compression::UpdateCodec>,
 ) -> Result<()> {
     let manifest = body.manifest();
     let mut out = Vec::new();
@@ -1093,6 +1891,7 @@ fn shard_loop_wire(
     let mut free: Vec<RoundLane> = Vec::new();
     let mut lanes: Vec<RoundLane> = Vec::new();
     let mut bcast = Delta::zeros(manifest.clone());
+    let mut scratch = crate::compression::CodecScratch::default();
     let mut inbuf = Vec::new();
     loop {
         // A *closed* inbound link is the wire analogue of the mpsc recv
@@ -1129,11 +1928,23 @@ fn shard_loop_wire(
                 free.extend(tagged.into_iter().map(|(_, l)| l));
             }
             CmdTag::Apply => {
-                let eval = wire::decode_apply_into(&inbuf, &mut bcast)?;
+                let eval =
+                    wire::decode_apply_into(&inbuf, &mut bcast, downstream.as_ref(), &mut scratch)?;
                 body.apply(&bcast)?;
                 if eval {
                     let (report, scale_stats) = body.eval()?;
                     wire::encode_eval(&mut out, &report, &scale_stats);
+                    sink.send(&out)
+                        .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+                }
+            }
+            CmdTag::State => {
+                let cmd = wire::decode_state_cmd(&inbuf, &manifest)?;
+                if let Some(inst) = &cmd.install {
+                    body.install_state(inst)?;
+                }
+                if cmd.collect {
+                    wire::encode_state_msg(&mut out, shard, &body.collect_state());
                     sink.send(&out)
                         .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
                 }
@@ -1148,16 +1959,17 @@ fn shard_loop_wire(
 /// loop with it. `Real` needs a PJRT runtime + artifacts; `Synthetic`
 /// needs neither.
 fn run_shard_body(init: &wire::Init, sink: &mut FrameSink, source: &mut FrameSource) -> Result<()> {
+    let downstream = init.cfg.downstream_codec();
     match &init.compute {
         ComputeSpec::Real => {
             let rt = Runtime::cpu()?;
             let mr = ModelRuntime::open(&rt, &init.cfg.artifacts_root, &init.cfg.variant)?;
             let mut body = RealShard::build(&mr, &init.cfg, init.shard, init.shards)?;
-            shard_loop_wire(&mut body, init.shard, sink, source)
+            shard_loop_wire(&mut body, init.shard, sink, source, downstream)
         }
         ComputeSpec::Synthetic { manifest } => {
             let mut body = SynthShard::new(manifest.clone(), &init.cfg, init.shards);
-            shard_loop_wire(&mut body, init.shard, sink, source)
+            shard_loop_wire(&mut body, init.shard, sink, source, downstream)
         }
     }
 }
@@ -1235,16 +2047,52 @@ pub fn serve(
     cfg: ExperimentConfig,
     listener: &TcpListener,
     compute: ComputeSpec,
+    liveness: impl FnMut() -> Result<()>,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    serve_session(cfg, listener, compute, None, liveness, on_event)
+}
+
+/// [`serve`] with an optional resume state: the coordinator rehydrates
+/// the joined workers from the snapshot before the first round (the
+/// multi-process leg of `fsfl run --resume`).
+pub fn serve_session(
+    cfg: ExperimentConfig,
+    listener: &TcpListener,
+    compute: ComputeSpec,
+    resume: Option<SessionState>,
     mut liveness: impl FnMut() -> Result<()>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
     let shards = resolved_shards(&cfg);
-    let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
-    for _ in 0..shards {
-        let stream = accept_one(listener, JOIN_TIMEOUT, &mut liveness)?;
-        conns.push(Box::new(TcpTransport::new(stream)));
-    }
-    let result = drive_wire_coordinator(&cfg, shards, conns, &compute, &mut on_event);
+    let result = (|| {
+        check_wire_cfg(&cfg, &compute)?;
+        let mut session = SessionCtx::build(&cfg, &compute, ElasticPlan::default(), resume)?;
+        let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+        let mut admit = WireAdmit::new(&cfg, &compute, msg_tx, None);
+        let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
+        let mut active: Vec<u64> = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let stream = accept_one(listener, JOIN_TIMEOUT, &mut liveness)?;
+            let (conn, tx) = admit.attach(shard, shards, Box::new(TcpTransport::new(stream)))?;
+            active.push(conn);
+            txs.push(tx);
+        }
+        // No further admissions happen here (externally-joined workers);
+        // keep disconnect detection alive.
+        admit.seal();
+        let result = coordinate(
+            &cfg,
+            shards,
+            &mut txs,
+            &mut active,
+            &mut NoAdmit,
+            &msg_rx,
+            &mut session,
+            &mut on_event,
+        );
+        teardown_wire(result, txs, &mut admit)
+    })();
     match &result {
         Ok(log) => on_event(&Event::Finished(log.clone())),
         Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
@@ -1271,6 +2119,18 @@ pub fn run_experiment_processes(
     worker_exe: &Path,
     on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_experiment_processes_session(cfg, compute, worker_exe, None, on_event)
+}
+
+/// [`run_experiment_processes`] with an optional resume state (the
+/// multi-process leg of `fsfl run --shard-procs --resume`).
+pub fn run_experiment_processes_session(
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    worker_exe: &Path,
+    resume: Option<SessionState>,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
     let shards = resolved_shards(&cfg);
     let listener =
         TcpListener::bind("127.0.0.1:0").map_err(|e| anyhow!("binding shard listener: {e}"))?;
@@ -1293,10 +2153,11 @@ pub fn run_experiment_processes(
         spawned.push(child);
     }
     let children = std::cell::RefCell::new(spawned);
-    let result = serve(
+    let result = serve_session(
         cfg,
         &listener,
         compute,
+        resume,
         || {
             let mut kids = children.borrow_mut();
             for (i, c) in kids.iter_mut().enumerate() {

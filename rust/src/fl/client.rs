@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::compression::Residual;
 use crate::data::{batches, Batch, Dataset, XorShiftRng};
@@ -22,6 +22,92 @@ use crate::fl::schedule::LrSchedule;
 use crate::model::params::Delta;
 use crate::model::{Group, ParamSet};
 use crate::runtime::{ModelRuntime, OptState};
+
+/// Snapshot of one optimizer state (Adam moments + step counter) —
+/// value-only, shapes validated against the live [`OptState`] on
+/// install.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptSnapshot {
+    /// First-moment estimates, one slab per group tensor.
+    pub m: Vec<Vec<f32>>,
+    /// Second-moment estimates, one slab per group tensor.
+    pub v: Vec<Vec<f32>>,
+    /// Adam step counter.
+    pub t: f32,
+}
+
+impl OptSnapshot {
+    /// Capture an optimizer state's values.
+    pub fn of(opt: &OptState) -> Self {
+        Self {
+            m: opt.m.clone(),
+            v: opt.v.clone(),
+            t: opt.t,
+        }
+    }
+
+    /// Validate shapes against `opt` without writing anything.
+    fn check(&self, opt: &OptState, what: &str) -> Result<()> {
+        if self.m.len() != opt.m.len() || self.v.len() != opt.v.len() {
+            return Err(anyhow!(
+                "{what}: snapshot has {}+{} moment slabs, state wants {}+{}",
+                self.m.len(),
+                self.v.len(),
+                opt.m.len(),
+                opt.v.len()
+            ));
+        }
+        for (i, (s, t)) in self.m.iter().zip(&opt.m).enumerate() {
+            if s.len() != t.len() {
+                return Err(anyhow!("{what}: m[{i}] len {} != {}", s.len(), t.len()));
+            }
+        }
+        for (i, (s, t)) in self.v.iter().zip(&opt.v).enumerate() {
+            if s.len() != t.len() {
+                return Err(anyhow!("{what}: v[{i}] len {} != {}", s.len(), t.len()));
+            }
+        }
+        Ok(())
+    }
+
+    fn install(&self, opt: &mut OptState) {
+        for (t, s) in opt.m.iter_mut().zip(&self.m) {
+            t.copy_from_slice(s);
+        }
+        for (t, s) in opt.v.iter_mut().zip(&self.v) {
+            t.copy_from_slice(s);
+        }
+        opt.t = self.t;
+    }
+}
+
+/// Everything one client carries **between** rounds, in portable form:
+/// the Eq. 5 error-accumulation residual, optimizer moments for both
+/// training groups, the RNG stream position, the LR-schedule position
+/// and the current training-sample permutation. The `global` replica is
+/// deliberately absent — it always equals the server parameters at a
+/// round boundary and is rehydrated from them (see the session plane in
+/// `ARCHITECTURE.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientState {
+    /// Global client id this state belongs to.
+    pub id: usize,
+    /// Raw [`XorShiftRng`] state.
+    pub rng: u64,
+    /// [`LrSchedule`] global step.
+    pub sched_global: u64,
+    /// [`LrSchedule`] within-period step.
+    pub sched_period: u64,
+    /// Current training-index permutation (shuffled in place each round,
+    /// so the order is part of the resumable state).
+    pub train_order: Vec<u64>,
+    /// Error-accumulation residual values (protocols with Eq. 5 only).
+    pub residual: Option<Vec<Vec<f32>>>,
+    /// Weight-group optimizer snapshot.
+    pub wopt: OptSnapshot,
+    /// Scale-group optimizer snapshot.
+    pub sopt: OptSnapshot,
+}
 
 /// One federated client: its replicas, optimizer state and round logic.
 pub struct Client {
@@ -242,6 +328,97 @@ impl Client {
         }
         lane.scale_accepted = accepted;
         lane.scale_ms = t1.elapsed().as_millis();
+        Ok(())
+    }
+
+    /// Capture this client's round-boundary state for the session plane
+    /// (checkpoints and shard-to-shard migration).
+    pub fn export_state(&self) -> ClientState {
+        ClientState {
+            id: self.id,
+            rng: self.rng.state(),
+            sched_global: self.schedule.global_step() as u64,
+            sched_period: self.schedule.period_step() as u64,
+            train_order: self.train_idx.iter().map(|&i| i as u64).collect(),
+            residual: self.residual.as_ref().map(|r| r.snapshot()),
+            wopt: OptSnapshot::of(&self.wopt),
+            sopt: OptSnapshot::of(&self.sopt),
+        }
+    }
+
+    /// Install a [`ClientState`] captured by [`Client::export_state`].
+    /// Every shape/consistency check runs **before** any field is
+    /// mutated, so a malformed state errors with this client untouched
+    /// (no partial apply). The `global` replica is not part of the state
+    /// — callers set it from the server parameters separately.
+    pub fn import_state(&mut self, st: &ClientState) -> Result<()> {
+        if st.id != self.id {
+            return Err(anyhow!(
+                "client state for id {} offered to client {}",
+                st.id,
+                self.id
+            ));
+        }
+        if st.train_order.len() != self.train_idx.len() {
+            return Err(anyhow!(
+                "client {}: state carries {} training indices, split has {}",
+                self.id,
+                st.train_order.len(),
+                self.train_idx.len()
+            ));
+        }
+        // The order must be a permutation of this client's own split —
+        // a stray sample index would otherwise pass the length check and
+        // panic deep inside batching instead of erroring here.
+        {
+            let mut ours: Vec<usize> = self.train_idx.clone();
+            let mut theirs: Vec<usize> = st.train_order.iter().map(|&i| i as usize).collect();
+            ours.sort_unstable();
+            theirs.sort_unstable();
+            if ours != theirs {
+                return Err(anyhow!(
+                    "client {}: state's training order is not a permutation of this \
+                     client's split",
+                    self.id
+                ));
+            }
+        }
+        match (&st.residual, &self.residual) {
+            (Some(_), None) => {
+                return Err(anyhow!(
+                    "client {}: state carries a residual but the protocol runs without one",
+                    self.id
+                ))
+            }
+            (None, Some(_)) => {
+                return Err(anyhow!(
+                    "client {}: protocol expects a residual but the state has none",
+                    self.id
+                ))
+            }
+            _ => {}
+        }
+        // Load-bearing pre-check: `restore` runs *after* the scalar
+        // fields below are already written, so its internal validation
+        // alone could not prevent a partial apply.
+        if let (Some(slabs), Some(res)) = (&st.residual, &self.residual) {
+            res.check(slabs)?;
+        }
+        st.wopt.check(&self.wopt, "weight optimizer")?;
+        st.sopt.check(&self.sopt, "scale optimizer")?;
+
+        // All checks passed — apply.
+        self.rng = XorShiftRng::from_state(st.rng);
+        self.schedule
+            .seek(st.sched_global as usize, st.sched_period as usize);
+        for (t, &i) in self.train_idx.iter_mut().zip(&st.train_order) {
+            *t = i as usize;
+        }
+        if let (Some(slabs), Some(res)) = (&st.residual, &mut self.residual) {
+            res.restore(slabs)?;
+        }
+        st.wopt.install(&mut self.wopt);
+        st.sopt.install(&mut self.sopt);
         Ok(())
     }
 

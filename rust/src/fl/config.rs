@@ -180,6 +180,24 @@ impl std::str::FromStr for TransportKind {
     }
 }
 
+/// Durable-session settings: where checkpoints go and how often they
+/// are written (see `crate::session`). Attached to an experiment via
+/// [`ExperimentConfig::session`]; `None` disables checkpointing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// Directory the session store writes snapshots into (created on
+    /// first write).
+    pub dir: std::path::PathBuf,
+    /// Snapshot cadence: write a checkpoint after every `every`-th
+    /// completed round (`1` = every round; `0` disables cadence writes
+    /// while keeping the directory configured for resume).
+    pub every: usize,
+    /// Fault injection for the session test plane: after completing
+    /// round `k` (checkpoint included), abort the run with an error as
+    /// an in-process stand-in for `kill -9`. Never set by the CLI.
+    pub crash_after: Option<usize>,
+}
+
 /// Full experiment description (one Fig. 2 curve / Table 2 cell).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -259,6 +277,10 @@ pub struct ExperimentConfig {
     /// (so the serialization seam is exercised); outputs are
     /// byte-identical for every kind.
     pub transport: TransportKind,
+    /// Durable-session settings (checkpoint directory + cadence); `None`
+    /// runs without checkpointing. A configured session forces the
+    /// sharded coordinator path so all persistence lives in one place.
+    pub session: Option<SessionConfig>,
 }
 
 impl ExperimentConfig {
@@ -298,6 +320,7 @@ impl ExperimentConfig {
             pipelined: false,
             compute_shards: 1,
             transport: TransportKind::Mpsc,
+            session: None,
         }
     }
 

@@ -46,8 +46,8 @@ pub mod synth;
 #[cfg(test)]
 mod tests;
 
-pub use client::Client;
-pub use config::{ExperimentConfig, Protocol, ProtocolConfig, TransportKind};
+pub use client::{Client, ClientState, OptSnapshot};
+pub use config::{ExperimentConfig, Protocol, ProtocolConfig, SessionConfig, TransportKind};
 pub use lane::{LaneParts, RoundLane};
 pub use schedule::{LrSchedule, ScheduleKind};
 pub use scheduler::{ComputePlane, ScheduleMode};

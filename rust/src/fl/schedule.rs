@@ -92,6 +92,19 @@ impl LrSchedule {
     pub fn global_step(&self) -> usize {
         self.global_step
     }
+
+    /// Batch-steps taken since the last warm restart.
+    pub fn period_step(&self) -> usize {
+        self.period_step
+    }
+
+    /// Jump the schedule to an absolute position (session resume): the
+    /// next [`LrSchedule::next_lr`] behaves exactly as it would have at
+    /// that point of the original run.
+    pub fn seek(&mut self, global_step: usize, period_step: usize) {
+        self.global_step = global_step;
+        self.period_step = period_step;
+    }
 }
 
 #[cfg(test)]

@@ -92,6 +92,16 @@ impl Server {
         down_bytes_each
     }
 
+    /// The downstream bitstream produced by the most recent
+    /// [`Server::aggregate_into`] (bidirectional setups only). This is
+    /// the encode-once APPLY payload: the coordinator fans these exact
+    /// bytes out to every shard instead of re-serializing the dense f32
+    /// broadcast per shard, and shards decode them back into the
+    /// identical dequantized delta (the codec round-trip invariant).
+    pub fn downstream_bytes(&self) -> Option<&[u8]> {
+        self.downstream.map(|_| self.down_stream.as_slice())
+    }
+
     /// Allocating wrapper around [`Server::aggregate_into`].
     pub fn aggregate<D: Borrow<Delta>>(&mut self, updates: &[D]) -> AggregateOutput {
         let mut broadcast = Delta::zeros(self.params.manifest.clone());

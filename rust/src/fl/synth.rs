@@ -71,6 +71,75 @@ pub fn synth_eval(broadcast_accum: &Delta) -> EvalReport {
     }
 }
 
+/// A small self-contained model contract for PJRT-free synthetic runs
+/// (`fsfl run --synth` and the session/transport CI planes): two
+/// row-structured weight tensors with biases and a per-filter scale
+/// vector, so every codec path (coarse rows, fine side-parameters, S
+/// streams) is exercised without artifacts or a backend.
+pub fn demo_manifest() -> Arc<Manifest> {
+    use crate::model::{Kind, TensorSpec};
+    let tensors = vec![
+        TensorSpec {
+            name: "conv1.w".into(),
+            shape: vec![8, 27],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "conv1".into(),
+            out_ch: Some(8),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv1.b".into(),
+            shape: vec![8],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "conv1".into(),
+            out_ch: Some(8),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv1.s".into(),
+            shape: vec![8],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "conv1".into(),
+            out_ch: Some(8),
+            scale_for: Some("conv1.w".into()),
+        },
+        TensorSpec {
+            name: "head.w".into(),
+            shape: vec![2, 32],
+            kind: Kind::DenseW,
+            group: Group::Weight,
+            layer: "head".into(),
+            out_ch: Some(2),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "head.b".into(),
+            shape: vec![2],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "head".into(),
+            out_ch: Some(2),
+            scale_for: None,
+        },
+    ];
+    let param_count = tensors.iter().map(|t| t.numel()).sum();
+    let m = Manifest {
+        model: "synth".into(),
+        variant: "synth".into(),
+        classes: 2,
+        input: vec![4, 4, 1],
+        batch: 1,
+        param_count,
+        scale_count: 8,
+        tensors,
+    };
+    debug_assert!(m.validate().is_ok(), "demo manifest must validate");
+    Arc::new(m)
+}
+
 /// A [`ComputePlane`] whose training output is a pure function of
 /// `(round_seed, client id)`. The driver sets [`Self::round_seed`]
 /// before each round (the synthetic shard worker derives it from the

@@ -30,6 +30,24 @@ fn write_lines(path: &Path, header: &str, rows: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Pick representative shallow / middle / deep layers from a recorded
+/// scale-stat layer list (Fig. 3 series selection). An empty list is a
+/// descriptive error — a run records no scale stats when the protocol
+/// disables scaling or exits before its first round — never a panic.
+fn pick_depth_layers(layers: &[String]) -> Result<[String; 3]> {
+    if layers.is_empty() {
+        return Err(anyhow::anyhow!(
+            "no scale-stat layers recorded: cannot pick shallow/middle/deep series \
+             (does the protocol run with scaling enabled for at least one round?)"
+        ));
+    }
+    Ok([
+        layers[0].clone(),
+        layers[layers.len() / 2].clone(),
+        layers[layers.len() - 1].clone(),
+    ])
+}
+
 fn run_and_save(rt: &Runtime, cfg: ExperimentConfig, out: &Path) -> Result<RunLog> {
     let name = cfg.name.clone();
     println!("== {name} ==");
@@ -286,14 +304,7 @@ pub fn fig3(artifacts: &Path, out: &Path, a: Fig3Args) -> Result<()> {
         .last()
         .map(|r| r.scale_stats.iter().map(|s| s.layer.clone()).collect())
         .unwrap_or_default();
-    if layers.is_empty() {
-        return Err(anyhow::anyhow!("no scale stats recorded"));
-    }
-    let picks = [
-        layers.first().unwrap().clone(),
-        layers[layers.len() / 2].clone(),
-        layers.last().unwrap().clone(),
-    ];
+    let picks = pick_depth_layers(&layers)?;
     let mut rows = Vec::new();
     for r in &log.rounds {
         for s in &r.scale_stats {
@@ -767,4 +778,35 @@ pub fn appendix_c(out: &Path, a: AppCArgs) -> Result<()> {
     write_lines(&path, "client,class,train_count,val_count", &rows)?;
     println!("appendix C → {}", path.display());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_depth_layers_empty_list_is_an_error_not_a_panic() {
+        // Regression: fig3 used first()/last().unwrap() on the recorded
+        // layer list; an empty list (scaling disabled, or a run that
+        // produced no rounds) must be a descriptive error.
+        let err = pick_depth_layers(&[]).unwrap_err();
+        assert!(
+            format!("{err}").contains("no scale-stat layers"),
+            "undescriptive: {err}"
+        );
+    }
+
+    #[test]
+    fn pick_depth_layers_selects_shallow_middle_deep() {
+        let ls: Vec<String> = ["a", "b", "c", "d", "e"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let picks = pick_depth_layers(&ls).unwrap();
+        assert_eq!(picks, ["a".to_string(), "c".to_string(), "e".to_string()]);
+        // a single layer is picked three times rather than panicking
+        let one = vec!["only".to_string()];
+        let picks = pick_depth_layers(&one).unwrap();
+        assert_eq!(picks, ["only".to_string(), "only".to_string(), "only".to_string()]);
+    }
 }

@@ -38,6 +38,7 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod session;
 pub mod runtime;
 
 pub use anyhow::{anyhow, Result};

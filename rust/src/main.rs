@@ -10,9 +10,10 @@ use fsfl::cli::Flags;
 use fsfl::compression::SparsifyMode;
 use fsfl::coordinator;
 use fsfl::data::TaskKind;
-use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind, TransportKind};
+use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind, SessionConfig, TransportKind};
 use fsfl::harness;
 use fsfl::runtime::Optimizer;
+use fsfl::session::SessionStore;
 
 const USAGE: &str = "\
 fsfl — Filter-Scaled Sparse Federated Learning (paper reproduction)
@@ -26,7 +27,11 @@ COMMANDS:
            --bidirectional --dirichlet --train-per-client --val-per-client
            --test-samples --warmup-steps --participation --seed
            --target-accuracy --codec-workers --pipelined
-           --compute-shards --transport mpsc|loopback|tcp --shard-procs)
+           --compute-shards --transport mpsc|loopback|tcp --shard-procs
+           --synth (PJRT-free synthetic compute plane)
+           --checkpoint-dir DIR --checkpoint-every K (durable session)
+           --resume DIR (continue a killed run from its last snapshot;
+           byte-identical to the uninterrupted run))
   shard-worker  join a coordinator as one shard process
            (--connect HOST:PORT; spawned automatically by
            `run --shard-procs`, or launch by hand against `serve`)
@@ -53,6 +58,98 @@ fn parse_task(s: &str) -> Result<TaskKind> {
         "xray" | "chest" => Ok(TaskKind::XrayLike),
         other => Err(anyhow::anyhow!("unknown task {other:?}")),
     }
+}
+
+/// Shared tail of every `run` leg: CSV sink + summary line.
+fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path) -> Result<()> {
+    let csv = out.join(format!("{}.csv", log.name));
+    log.write_csv(&csv)?;
+    println!(
+        "done: best acc {:.3}, total up {}, log → {}",
+        log.best_accuracy(),
+        fsfl::metrics::fmt_bytes(log.total_bytes(true)),
+        csv.display()
+    );
+    if let Some(w) = log.wire {
+        println!(
+            "wire (measured at the frame layer): {} to shards, {} from shards",
+            fsfl::metrics::fmt_bytes(w.sent as usize),
+            fsfl::metrics::fmt_bytes(w.received as usize),
+        );
+    }
+    Ok(())
+}
+
+/// `fsfl run --resume DIR`: continue a killed run from its newest valid
+/// snapshot. The snapshot's config is re-run verbatim (including its
+/// checkpoint settings, so the resumed run keeps checkpointing into the
+/// same session directory).
+fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()> {
+    // Read-only lookup: a mistyped path must error, not be created.
+    if !std::path::Path::new(dir).is_dir() {
+        return Err(anyhow::anyhow!("no session directory at {dir}"));
+    }
+    let store = SessionStore::open(dir)?;
+    let state = store
+        .latest()?
+        .ok_or_else(|| anyhow::anyhow!("no usable snapshot in {dir}"))?;
+    println!(
+        "resuming {:?} at round {} ({} rounds total, {} snapshot clients)",
+        state.cfg.name,
+        state.next_round,
+        state.cfg.rounds,
+        state.clients.len()
+    );
+    let mut cfg = state.cfg.clone();
+    // Keep checkpointing into the directory the snapshot was actually
+    // loaded from — the embedded dir may be relative to the original
+    // run's cwd and would silently point elsewhere here.
+    if let Some(s) = cfg.session.as_mut() {
+        s.dir = std::path::PathBuf::from(dir);
+    }
+    let on_event = |ev: &coordinator::Event| {
+        if let coordinator::Event::RoundDone(m) = ev {
+            coordinator::print_round(m);
+        }
+    };
+    let log = if state.synthetic {
+        let manifest = fsfl::model::Manifest::parse(&state.manifest_tsv)?;
+        manifest.validate()?;
+        let manifest = std::sync::Arc::new(manifest);
+        if shard_procs {
+            // Synthetic compute, real OS shard-worker processes.
+            let exe = std::env::current_exe()?;
+            coordinator::run_experiment_processes_session(
+                cfg,
+                coordinator::ComputeSpec::Synthetic { manifest },
+                &exe,
+                Some(state),
+                on_event,
+            )?
+        } else {
+            coordinator::run_experiment_synthetic_session(
+                cfg,
+                manifest,
+                coordinator::ElasticPlan::default(),
+                Some(state),
+                on_event,
+            )?
+        }
+    } else if shard_procs {
+        // Workers speak TCP regardless of the snapshot's transport
+        // field; the config itself is re-run verbatim.
+        let exe = std::env::current_exe()?;
+        coordinator::run_experiment_processes_session(
+            cfg,
+            coordinator::ComputeSpec::Real,
+            &exe,
+            Some(state),
+            on_event,
+        )?
+    } else {
+        coordinator::run_experiment_resumed(cfg, state, on_event)?
+    };
+    finish_run(&log, out)
 }
 
 fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
@@ -93,14 +190,68 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     cfg.target_accuracy = flags.get("target-accuracy")?;
     cfg.transport = flags.str_or("transport", "mpsc").parse::<TransportKind>()?;
     let shard_procs = flags.flag("shard-procs");
+    let synth = flags.flag("synth");
+    if let Some(dir) = flags.str_opt("checkpoint-dir") {
+        cfg.session = Some(SessionConfig {
+            dir: dir.into(),
+            every: flags.get_or("checkpoint-every", 1)?,
+            crash_after: None,
+        });
+    } else {
+        let _ = flags.get_or::<usize>("checkpoint-every", 1); // mark known
+    }
+    let resume_dir = flags.str_opt("resume");
     flags.reject_unknown()?;
+
+    if let Some(dir) = resume_dir {
+        // Resume re-runs the snapshot's config verbatim — refuse
+        // experiment-shape flags instead of silently ignoring them.
+        const RESUME_FLAGS: [&str; 4] = ["resume", "out", "artifacts", "shard-procs"];
+        let stray: Vec<String> = flags
+            .keys()
+            .into_iter()
+            .filter(|k| !RESUME_FLAGS.contains(&k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if !stray.is_empty() {
+            return Err(anyhow::anyhow!(
+                "--resume re-runs the snapshot's experiment config verbatim; \
+                 drop {} (or start a fresh checkpointed run)",
+                stray.join(" ")
+            ));
+        }
+        return cmd_resume(&dir, shard_procs, out);
+    }
 
     let on_event = |ev: &coordinator::Event| {
         if let coordinator::Event::RoundDone(m) = ev {
             coordinator::print_round(m);
         }
     };
-    let log = if shard_procs {
+    let log = if synth && shard_procs {
+        // Synthetic compute, real OS shard-worker processes (needs a
+        // socket: shard-procs implies TCP).
+        cfg.transport = TransportKind::Tcp;
+        let exe = std::env::current_exe()?;
+        coordinator::run_experiment_processes(
+            cfg,
+            coordinator::ComputeSpec::Synthetic {
+                manifest: fsfl::fl::synth::demo_manifest(),
+            },
+            &exe,
+            on_event,
+        )?
+    } else if synth {
+        // PJRT-free synthetic compute plane over the built-in demo model
+        // contract — what the session/transport CI jobs drive.
+        coordinator::run_experiment_synthetic_session(
+            cfg,
+            fsfl::fl::synth::demo_manifest(),
+            coordinator::ElasticPlan::default(),
+            None,
+            on_event,
+        )?
+    } else if shard_procs {
         // Real OS processes need a socket: shard-procs implies TCP.
         cfg.transport = TransportKind::Tcp;
         let exe = std::env::current_exe()?;
@@ -113,22 +264,7 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     } else {
         coordinator::run_experiment_threaded(cfg, on_event)?
     };
-    let csv = out.join(format!("{}.csv", log.name));
-    log.write_csv(&csv)?;
-    println!(
-        "done: best acc {:.3}, total up {}, log → {}",
-        log.best_accuracy(),
-        fsfl::metrics::fmt_bytes(log.total_bytes(true)),
-        csv.display()
-    );
-    if let Some(w) = log.wire {
-        println!(
-            "wire (measured at the frame layer): {} to shards, {} from shards",
-            fsfl::metrics::fmt_bytes(w.sent as usize),
-            fsfl::metrics::fmt_bytes(w.received as usize),
-        );
-    }
-    Ok(())
+    finish_run(&log, out)
 }
 
 fn main() -> Result<()> {

@@ -5,7 +5,7 @@
 use std::io::Write;
 
 /// Scale-factor distribution snapshot for one layer (Fig. 3 series).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScaleStats {
     /// Layer name.
     pub layer: String,
@@ -106,7 +106,7 @@ impl Confusion {
 }
 
 /// One communication round's record.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundMetrics {
     /// Round index t.
     pub round: usize,
@@ -163,7 +163,7 @@ impl WireStats {
 }
 
 /// Full experiment log: what all figure harnesses consume.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunLog {
     /// Experiment name (from the config).
     pub name: String,

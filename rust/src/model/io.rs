@@ -30,34 +30,31 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-/// Read a tensor bundle (e.g. `init.bin`) from disk.
-pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
-    let path = path.as_ref();
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
+/// Read a tensor bundle from any byte source (the FSTB codec itself;
+/// also embedded inside session snapshots — see `crate::session`).
+pub fn read_bundle_from(f: &mut impl Read) -> Result<Vec<BundleTensor>> {
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(anyhow!("{}: bad magic {magic:?}", path.display()));
+        return Err(anyhow!("bad bundle magic {magic:?}"));
     }
-    let version = read_u32(&mut f)?;
+    let version = read_u32(f)?;
     if version != VERSION {
         return Err(anyhow!("unsupported bundle version {version}"));
     }
-    let count = read_u32(&mut f)? as usize;
-    let mut out = Vec::with_capacity(count);
+    let count = read_u32(f)? as usize;
+    let mut out = Vec::with_capacity(count.min(1 << 16));
     for _ in 0..count {
-        let nlen = read_u32(&mut f)? as usize;
+        let nlen = read_u32(f)? as usize;
         let mut nb = vec![0u8; nlen];
         f.read_exact(&mut nb)?;
         let name = String::from_utf8(nb).context("tensor name not utf-8")?;
-        let ndim = read_u32(&mut f)? as usize;
-        let mut shape = Vec::with_capacity(ndim);
+        let ndim = read_u32(f)? as usize;
+        let mut shape = Vec::with_capacity(ndim.min(1 << 8));
         for _ in 0..ndim {
-            shape.push(read_u32(&mut f)? as usize);
+            shape.push(read_u32(f)? as usize);
         }
-        let dtype = read_u32(&mut f)?;
+        let dtype = read_u32(f)?;
         if dtype != DTYPE_F32 {
             return Err(anyhow!("{name}: unsupported dtype {dtype}"));
         }
@@ -73,9 +70,18 @@ pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
     Ok(out)
 }
 
-/// Write a tensor bundle to disk (the inverse of [`read_bundle`]).
-pub fn write_bundle(path: impl AsRef<Path>, tensors: &[BundleTensor]) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+/// Read a tensor bundle (e.g. `init.bin`) from disk.
+pub fn read_bundle(path: impl AsRef<Path>) -> Result<Vec<BundleTensor>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    read_bundle_from(&mut f).with_context(|| format!("reading bundle {}", path.display()))
+}
+
+/// Write a tensor bundle to any byte sink (inverse of
+/// [`read_bundle_from`]).
+pub fn write_bundle_to(f: &mut impl Write, tensors: &[BundleTensor]) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -96,6 +102,12 @@ pub fn write_bundle(path: impl AsRef<Path>, tensors: &[BundleTensor]) -> Result<
         }
     }
     Ok(())
+}
+
+/// Write a tensor bundle to disk (the inverse of [`read_bundle`]).
+pub fn write_bundle(path: impl AsRef<Path>, tensors: &[BundleTensor]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write_bundle_to(&mut f, tensors)
 }
 
 #[cfg(test)]

@@ -12,6 +12,6 @@ mod io;
 mod manifest;
 pub mod params;
 
-pub use io::{read_bundle, write_bundle, BundleTensor};
+pub use io::{read_bundle, read_bundle_from, write_bundle, write_bundle_to, BundleTensor};
 pub use manifest::{Group, Kind, Manifest, TensorSpec};
 pub use params::{Delta, ParamSet};

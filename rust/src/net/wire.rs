@@ -11,12 +11,14 @@
 //!             compute spec                       params (the model
 //! 0x02 ROUND  (slot, client)*                    contract crosses the
 //! 0x03 APPLY  broadcast Δ + eval                 wire, so the
-//! 0x04 STOP                                      coordinator needs no
-//!                                                artifacts of its own)
-//!                                0x12 ROUND_DONE lane frames: bitstreams
-//!                                                + per-lane metrics
-//!                                0x13 EVAL       EvalReport + ScaleStats
-//!                                0x14 FAILED     rendered error chain
+//!             (dense f32 or the                  coordinator needs no
+//!             downstream stream)                 artifacts of its own)
+//! 0x04 STOP
+//! 0x05 STATE  session plane:     0x12 ROUND_DONE lane frames: bitstreams
+//!             install replica/                   + per-lane metrics
+//!             client state and/  0x13 EVAL       EvalReport + ScaleStats
+//!             or collect it      0x14 FAILED     rendered error chain
+//!                                0x15 STATE      collected client states
 //! ```
 //!
 //! Integers are u64 LE, floats are IEEE-754 LE bit patterns (exact
@@ -30,12 +32,12 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::compression::{EncodeStats, QuantConfig, SparsifyMode};
+use crate::compression::{CodecScratch, EncodeStats, QuantConfig, SparsifyMode, UpdateCodec};
 use crate::data::TaskKind;
-use crate::fl::config::TransportKind;
+use crate::fl::config::{SessionConfig, TransportKind};
 use crate::fl::schedule::ScheduleKind;
 use crate::fl::server::EvalReport;
-use crate::fl::{ExperimentConfig, Protocol, RoundLane};
+use crate::fl::{ClientState, ExperimentConfig, OptSnapshot, Protocol, RoundLane};
 use crate::metrics::ScaleStats;
 use crate::model::params::{Delta, ParamSet};
 use crate::model::Manifest;
@@ -44,66 +46,78 @@ use crate::runtime::Optimizer;
 /// Wire-protocol revision; bumped on any incompatible layout change.
 /// Carried in INIT and READY so mismatched binaries fail the handshake
 /// with a clear error instead of a checksum/desync mystery.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// v2: session plane (STATE pair, config session block, APPLY format
+/// byte for the encode-once downstream stream).
+pub const PROTOCOL_VERSION: u8 = 2;
 
 const TAG_INIT: u8 = 0x01;
 const TAG_ROUND: u8 = 0x02;
 const TAG_APPLY: u8 = 0x03;
 const TAG_STOP: u8 = 0x04;
+const TAG_STATE: u8 = 0x05;
 const TAG_READY: u8 = 0x11;
 const TAG_ROUND_DONE: u8 = 0x12;
 const TAG_EVAL: u8 = 0x13;
 const TAG_FAILED: u8 = 0x14;
+const TAG_STATE_MSG: u8 = 0x15;
+
+/// APPLY payload carries the dense f32 broadcast delta.
+const APPLY_FMT_DENSE: u8 = 0;
+/// APPLY payload carries the downstream codec's bitstream (encoded once
+/// per round by the server, fanned out as bytes to every shard).
+const APPLY_FMT_STREAM: u8 = 1;
 
 // ---------------------------------------------------------------------------
 // primitives
 // ---------------------------------------------------------------------------
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_usize(buf: &mut Vec<u8>, v: usize) {
+pub(crate) fn put_usize(buf: &mut Vec<u8>, v: usize) {
     put_u64(buf, v as u64);
 }
 
-fn put_f32(buf: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_bool(buf: &mut Vec<u8>, v: bool) {
+pub(crate) fn put_bool(buf: &mut Vec<u8>, v: bool) {
     buf.push(v as u8);
 }
 
-fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+pub(crate) fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
     put_usize(buf, b.len());
     buf.extend_from_slice(b);
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_bytes(buf, s.as_bytes());
 }
 
-/// Bounds-checked cursor over one message payload.
-struct Rd<'a> {
+/// Bounds-checked cursor over one message payload. Shared with the
+/// session snapshot codec (`crate::session`), which speaks the same
+/// primitive layout.
+pub(crate) struct Rd<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Rd<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.remaining() < n {
             return Err(anyhow!(
                 "truncated message: wanted {n} bytes at offset {}, {} left",
@@ -116,35 +130,35 @@ impl<'a> Rd<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([
             b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
         ]))
     }
 
-    fn usize_(&mut self) -> Result<usize> {
+    pub(crate) fn usize_(&mut self) -> Result<usize> {
         let v = self.u64()?;
         usize::try_from(v).map_err(|_| anyhow!("value {v} overflows usize"))
     }
 
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         let b = self.take(8)?;
         Ok(f64::from_le_bytes([
             b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
         ]))
     }
 
-    fn bool_(&mut self) -> Result<bool> {
+    pub(crate) fn bool_(&mut self) -> Result<bool> {
         match self.u8()? {
             0 => Ok(false),
             1 => Ok(true),
@@ -152,19 +166,19 @@ impl<'a> Rd<'a> {
         }
     }
 
-    fn bytes(&mut self) -> Result<&'a [u8]> {
+    pub(crate) fn bytes(&mut self) -> Result<&'a [u8]> {
         let n = self.usize_()?;
         self.take(n)
     }
 
-    fn str_(&mut self) -> Result<String> {
+    pub(crate) fn str_(&mut self) -> Result<String> {
         let b = self.bytes()?;
         std::str::from_utf8(b)
             .map(|s| s.to_string())
             .map_err(|e| anyhow!("invalid utf-8 string on the wire: {e}"))
     }
 
-    fn done(&self) -> Result<()> {
+    pub(crate) fn done(&self) -> Result<()> {
         if self.remaining() != 0 {
             return Err(anyhow!(
                 "{} trailing bytes after message end (length desync)",
@@ -329,6 +343,21 @@ fn put_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
         TransportKind::Loopback => 1,
         TransportKind::Tcp => 2,
     });
+    match &cfg.session {
+        None => put_bool(buf, false),
+        Some(s) => {
+            put_bool(buf, true);
+            put_str(buf, &s.dir.to_string_lossy());
+            put_usize(buf, s.every);
+            match s.crash_after {
+                None => put_bool(buf, false),
+                Some(k) => {
+                    put_bool(buf, true);
+                    put_usize(buf, k);
+                }
+            }
+        }
+    }
 }
 
 fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
@@ -401,6 +430,22 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
         2 => TransportKind::Tcp,
         other => return Err(anyhow!("unknown transport tag {other}")),
     };
+    let session = if rd.bool_()? {
+        let dir = std::path::PathBuf::from(rd.str_()?);
+        let every = rd.usize_()?;
+        let crash_after = if rd.bool_()? {
+            Some(rd.usize_()?)
+        } else {
+            None
+        };
+        Some(SessionConfig {
+            dir,
+            every,
+            crash_after,
+        })
+    } else {
+        None
+    };
     Ok(ExperimentConfig {
         name,
         artifacts_root,
@@ -432,6 +477,7 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
         pipelined,
         compute_shards,
         transport,
+        session,
     })
 }
 
@@ -577,21 +623,54 @@ pub fn decode_round(payload: &[u8]) -> Result<Vec<(usize, usize)>> {
 }
 
 /// Encode an APPLY command (the aggregated broadcast delta + whether
-/// this shard evaluates the central model afterwards) into `buf`.
+/// this shard evaluates the central model afterwards) into `buf`. The
+/// payload carries the dense f32 delta; bidirectional setups use
+/// [`encode_apply_stream`] instead.
 pub fn encode_apply(buf: &mut Vec<u8>, broadcast: &Delta, eval: bool) {
     buf.clear();
     buf.push(TAG_APPLY);
     put_bool(buf, eval);
+    buf.push(APPLY_FMT_DENSE);
     put_delta(buf, broadcast);
 }
 
+/// Encode an APPLY command whose payload is the server's downstream
+/// bitstream (bidirectional setups): the broadcast is encoded **once**
+/// per round by `Server::aggregate_into` and these exact bytes fan out
+/// to every shard, which decodes them back into the identical
+/// dequantized delta.
+pub fn encode_apply_stream(buf: &mut Vec<u8>, stream: &[u8], eval: bool) {
+    buf.clear();
+    buf.push(TAG_APPLY);
+    put_bool(buf, eval);
+    buf.push(APPLY_FMT_STREAM);
+    put_bytes(buf, stream);
+}
+
 /// Decode an APPLY payload into a recycled broadcast buffer; returns
-/// the eval flag.
-pub fn decode_apply_into(payload: &[u8], broadcast: &mut Delta) -> Result<bool> {
+/// the eval flag. A stream-format payload is decoded with `downstream`
+/// (the shard's copy of the server's broadcast codec) — receiving one
+/// without a configured downstream codec is a protocol error.
+pub fn decode_apply_into(
+    payload: &[u8],
+    broadcast: &mut Delta,
+    downstream: Option<&UpdateCodec>,
+    scratch: &mut CodecScratch,
+) -> Result<bool> {
     let mut rd = Rd::new(payload);
     expect_tag(&mut rd, TAG_APPLY, "APPLY")?;
     let eval = rd.bool_()?;
-    read_delta_into(&mut rd, broadcast)?;
+    match rd.u8()? {
+        APPLY_FMT_DENSE => read_delta_into(&mut rd, broadcast)?,
+        APPLY_FMT_STREAM => {
+            let codec = downstream.ok_or_else(|| {
+                anyhow!("APPLY carries a downstream stream but no downstream codec is configured")
+            })?;
+            let stream = rd.bytes()?;
+            codec.decode_into(stream, broadcast, scratch)?;
+        }
+        other => return Err(anyhow!("unknown APPLY format byte {other:#04x}")),
+    }
     rd.done()?;
     Ok(eval)
 }
@@ -600,6 +679,261 @@ pub fn decode_apply_into(payload: &[u8], broadcast: &mut Delta) -> Result<bool> 
 pub fn encode_stop(buf: &mut Vec<u8>) {
     buf.clear();
     buf.push(TAG_STOP);
+}
+
+// ---------------------------------------------------------------------------
+// session plane: STATE command / message pair
+// ---------------------------------------------------------------------------
+
+/// Rehydration payload of a STATE command: re-assignment plus the
+/// absolute replica parameters and the client states a shard must
+/// install. Sent on resume (every shard) and on elastic membership
+/// changes (the shards whose assignment or client set changed).
+pub struct StateInstall {
+    /// The receiving shard's index (carried for forward compatibility;
+    /// current workers reject a changed assignment — replacements
+    /// re-join under the departed index).
+    pub shard: usize,
+    /// Total shard count under the membership.
+    pub shards: usize,
+    /// Rounds already completed; local round counters fast-forward here.
+    pub rounds_done: u64,
+    /// Absolute server parameters — every local replica is set to an
+    /// exact copy (bit-for-bit, which is what keeps resumed and
+    /// uninterrupted runs byte-identical).
+    pub params: ParamSet,
+    /// Round-boundary states for the clients this shard now owns (empty
+    /// on the synthetic plane, which carries no per-client state).
+    pub clients: Vec<ClientState>,
+}
+
+/// One STATE command: install state and/or collect it. `collect`
+/// requests a [`MsgTag::State`] response carrying every local client's
+/// exported state (how checkpoints and migrations read a shard).
+pub struct StateCmd {
+    /// Respond with the shard's current client states.
+    pub collect: bool,
+    /// State to install before responding (if any).
+    pub install: Option<StateInstall>,
+}
+
+fn put_slabs(buf: &mut Vec<u8>, slabs: &[Vec<f32>]) {
+    put_usize(buf, slabs.len());
+    for s in slabs {
+        put_usize(buf, s.len());
+        for &x in s {
+            put_f32(buf, x);
+        }
+    }
+}
+
+fn read_slabs(rd: &mut Rd) -> Result<Vec<Vec<f32>>> {
+    let count = rd.usize_()?;
+    if count > rd.remaining() / 8 {
+        return Err(anyhow!(
+            "implausible slab count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    // Capacity is capped: `count` is plausibility-checked above, but a
+    // crafted frame could still claim millions of entries — grow on
+    // demand instead of pre-allocating attacker-controlled capacity.
+    let mut out = Vec::with_capacity(count.min(1 << 12));
+    for _ in 0..count {
+        let len = rd.usize_()?;
+        let need = len
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("slab byte size overflows"))?;
+        let bytes = rd.take(need)?;
+        let mut slab = Vec::with_capacity(len);
+        for c in bytes.chunks_exact(4) {
+            slab.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        out.push(slab);
+    }
+    Ok(out)
+}
+
+fn put_opt_snapshot(buf: &mut Vec<u8>, o: &OptSnapshot) {
+    put_slabs(buf, &o.m);
+    put_slabs(buf, &o.v);
+    put_f32(buf, o.t);
+}
+
+fn read_opt_snapshot(rd: &mut Rd) -> Result<OptSnapshot> {
+    Ok(OptSnapshot {
+        m: read_slabs(rd)?,
+        v: read_slabs(rd)?,
+        t: rd.f32()?,
+    })
+}
+
+pub(crate) fn put_client_state(buf: &mut Vec<u8>, st: &ClientState) {
+    put_usize(buf, st.id);
+    put_u64(buf, st.rng);
+    put_u64(buf, st.sched_global);
+    put_u64(buf, st.sched_period);
+    put_usize(buf, st.train_order.len());
+    for &i in &st.train_order {
+        put_u64(buf, i);
+    }
+    match &st.residual {
+        None => put_bool(buf, false),
+        Some(slabs) => {
+            put_bool(buf, true);
+            put_slabs(buf, slabs);
+        }
+    }
+    put_opt_snapshot(buf, &st.wopt);
+    put_opt_snapshot(buf, &st.sopt);
+}
+
+pub(crate) fn read_client_state(rd: &mut Rd) -> Result<ClientState> {
+    let id = rd.usize_()?;
+    let rng = rd.u64()?;
+    let sched_global = rd.u64()?;
+    let sched_period = rd.u64()?;
+    let n = rd.usize_()?;
+    if n > rd.remaining() / 8 {
+        return Err(anyhow!(
+            "implausible training-order length {n} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut train_order = Vec::with_capacity(n);
+    for _ in 0..n {
+        train_order.push(rd.u64()?);
+    }
+    let residual = if rd.bool_()? {
+        Some(read_slabs(rd)?)
+    } else {
+        None
+    };
+    let wopt = read_opt_snapshot(rd)?;
+    let sopt = read_opt_snapshot(rd)?;
+    Ok(ClientState {
+        id,
+        rng,
+        sched_global,
+        sched_period,
+        train_order,
+        residual,
+        wopt,
+        sopt,
+    })
+}
+
+pub(crate) fn read_client_states(rd: &mut Rd) -> Result<Vec<ClientState>> {
+    let count = rd.usize_()?;
+    // Every client state needs at least its five fixed u64 fields.
+    if count > rd.remaining() / 40 {
+        return Err(anyhow!(
+            "implausible client-state count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut out = Vec::with_capacity(count.min(1 << 12));
+    for _ in 0..count {
+        out.push(read_client_state(rd)?);
+    }
+    Ok(out)
+}
+
+/// Encode a STATE command into `buf`.
+pub fn encode_state_cmd(buf: &mut Vec<u8>, cmd: &StateCmd) {
+    buf.clear();
+    buf.push(TAG_STATE);
+    put_bool(buf, cmd.collect);
+    match &cmd.install {
+        None => put_bool(buf, false),
+        Some(inst) => {
+            put_bool(buf, true);
+            put_usize(buf, inst.shard);
+            put_usize(buf, inst.shards);
+            put_u64(buf, inst.rounds_done);
+            put_usize(buf, inst.params.numel());
+            for t in &inst.params.tensors {
+                for &x in t {
+                    put_f32(buf, x);
+                }
+            }
+            put_usize(buf, inst.clients.len());
+            for c in &inst.clients {
+                put_client_state(buf, c);
+            }
+        }
+    }
+}
+
+/// Decode a STATE command; the install's parameter slab is shaped (and
+/// size-checked) against `manifest` before anything is returned.
+pub fn decode_state_cmd(payload: &[u8], manifest: &Arc<Manifest>) -> Result<StateCmd> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_STATE, "STATE")?;
+    let collect = rd.bool_()?;
+    let install = if rd.bool_()? {
+        let shard = rd.usize_()?;
+        let shards = rd.usize_()?;
+        if shards == 0 || shard >= shards {
+            return Err(anyhow!("invalid shard re-assignment {shard}/{shards}"));
+        }
+        let rounds_done = rd.u64()?;
+        let numel = rd.usize_()?;
+        let want: usize = manifest.tensors.iter().map(|t| t.numel()).sum();
+        if numel != want {
+            return Err(anyhow!(
+                "state params size mismatch: wire carries {numel} values, manifest wants {want}"
+            ));
+        }
+        let need = numel
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("param byte size overflows"))?;
+        let bytes = rd.take(need)?;
+        let mut chunks = bytes.chunks_exact(4);
+        let mut tensors = Vec::with_capacity(manifest.tensors.len());
+        for spec in &manifest.tensors {
+            let mut t = Vec::with_capacity(spec.numel());
+            for c in chunks.by_ref().take(spec.numel()) {
+                t.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            tensors.push(t);
+        }
+        let params = ParamSet::new(manifest.clone(), tensors)?;
+        let clients = read_client_states(&mut rd)?;
+        Some(StateInstall {
+            shard,
+            shards,
+            rounds_done,
+            params,
+            clients,
+        })
+    } else {
+        None
+    };
+    rd.done()?;
+    Ok(StateCmd { collect, install })
+}
+
+/// Encode a STATE message (a shard's collected client states) into
+/// `buf`.
+pub fn encode_state_msg(buf: &mut Vec<u8>, shard: usize, clients: &[ClientState]) {
+    buf.clear();
+    buf.push(TAG_STATE_MSG);
+    put_usize(buf, shard);
+    put_usize(buf, clients.len());
+    for c in clients {
+        put_client_state(buf, c);
+    }
+}
+
+/// Decode a STATE message payload.
+pub fn decode_state_msg(payload: &[u8]) -> Result<(usize, Vec<ClientState>)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_STATE_MSG, "STATE message")?;
+    let shard = rd.usize_()?;
+    let clients = read_client_states(&mut rd)?;
+    rd.done()?;
+    Ok((shard, clients))
 }
 
 /// Command-frame kinds (first payload byte), for dispatch before the
@@ -614,6 +948,8 @@ pub enum CmdTag {
     Apply,
     /// Clean shutdown.
     Stop,
+    /// Session-plane state install/collect.
+    State,
 }
 
 /// Classify a command payload by tag.
@@ -623,6 +959,7 @@ pub fn cmd_tag(payload: &[u8]) -> Result<CmdTag> {
         Some(&TAG_ROUND) => Ok(CmdTag::Round),
         Some(&TAG_APPLY) => Ok(CmdTag::Apply),
         Some(&TAG_STOP) => Ok(CmdTag::Stop),
+        Some(&TAG_STATE) => Ok(CmdTag::State),
         Some(&other) => Err(anyhow!("unknown command tag {other:#04x}")),
         None => Err(anyhow!("empty command frame")),
     }
@@ -915,6 +1252,8 @@ pub enum MsgTag {
     Eval,
     /// FAILED fatal error.
     Failed,
+    /// Collected session-plane client states.
+    State,
 }
 
 /// Classify a message payload by tag.
@@ -924,6 +1263,7 @@ pub fn msg_tag(payload: &[u8]) -> Result<MsgTag> {
         Some(&TAG_ROUND_DONE) => Ok(MsgTag::RoundDone),
         Some(&TAG_EVAL) => Ok(MsgTag::Eval),
         Some(&TAG_FAILED) => Ok(MsgTag::Failed),
+        Some(&TAG_STATE_MSG) => Ok(MsgTag::State),
         Some(&other) => Err(anyhow!("unknown message tag {other:#04x}")),
         None => Err(anyhow!("empty message frame")),
     }
@@ -945,6 +1285,11 @@ mod tests {
         cfg.sparsify = SparsifyMode::TopK { rate: 0.96 };
         cfg.participation = 0.625;
         cfg.seed = u64::MAX - 7;
+        cfg.session = Some(SessionConfig {
+            dir: "ckpt/run-a".into(),
+            every: 3,
+            crash_after: Some(5),
+        });
         cfg
     }
 
@@ -1016,9 +1361,117 @@ mod tests {
         assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Apply);
         let mut out = Delta::zeros(m);
         out.tensors[0][0] = 9.0; // stale garbage must be overwritten
-        let eval = decode_apply_into(&buf, &mut out).unwrap();
+        let mut scratch = CodecScratch::default();
+        let eval = decode_apply_into(&buf, &mut out, None, &mut scratch).unwrap();
         assert!(eval);
         assert_eq!(out, d);
+    }
+
+    #[test]
+    fn apply_stream_decodes_to_the_servers_dequantized_broadcast() {
+        let m = crate::model::params::tests_support::manifest_conv_dense();
+        let mut raw = Delta::zeros(m.clone());
+        let mut rng = crate::data::XorShiftRng::new(40);
+        for t in raw.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x = rng.normal() * 2e-3;
+            }
+        }
+        let codec = UpdateCodec::quant_only();
+        let idx: Vec<usize> = (0..m.tensors.len()).collect();
+        // What the server produces: the stream plus the dequantized deq.
+        let (stream, deq, _) = codec.encode(raw, &idx);
+
+        let mut buf = Vec::new();
+        encode_apply_stream(&mut buf, &stream, false);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Apply);
+        let mut out = Delta::zeros(m);
+        out.tensors[0][0] = 7.0; // stale garbage must be overwritten
+        let mut scratch = CodecScratch::default();
+        let eval = decode_apply_into(&buf, &mut out, Some(&codec), &mut scratch).unwrap();
+        assert!(!eval);
+        assert_eq!(out, deq, "decoded stream must equal the server broadcast");
+
+        // A stream APPLY without a codec is a protocol error, not a
+        // silent misread.
+        let err = decode_apply_into(&buf, &mut out, None, &mut scratch).unwrap_err();
+        assert!(format!("{err}").contains("downstream"));
+    }
+
+    fn sample_client_state(id: usize) -> ClientState {
+        ClientState {
+            id,
+            rng: 0xDEAD_BEEF_0BAD_F00D,
+            sched_global: 17,
+            sched_period: 3,
+            train_order: vec![4, 0, 2, 9, 1],
+            residual: Some(vec![vec![0.25, -0.5, 1e-7], vec![]]),
+            wopt: OptSnapshot {
+                m: vec![vec![0.1, 0.2]],
+                v: vec![vec![0.3, 0.4]],
+                t: 12.0,
+            },
+            sopt: OptSnapshot {
+                m: vec![vec![-1.0]],
+                v: vec![vec![2.0]],
+                t: 5.0,
+            },
+        }
+    }
+
+    #[test]
+    fn state_cmd_and_msg_round_trip() {
+        let m = crate::model::params::tests_support::manifest_conv_dense();
+        let mut params = ParamSet::new(
+            m.clone(),
+            m.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+        )
+        .unwrap();
+        params.tensors[0][2] = -3.5;
+        params.tensors[1][3] = 1e-6;
+        let cmd = StateCmd {
+            collect: true,
+            install: Some(StateInstall {
+                shard: 1,
+                shards: 3,
+                rounds_done: 42,
+                params: params.clone(),
+                clients: vec![sample_client_state(4), sample_client_state(7)],
+            }),
+        };
+        let mut buf = Vec::new();
+        encode_state_cmd(&mut buf, &cmd);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::State);
+        let back = decode_state_cmd(&buf, &m).unwrap();
+        assert!(back.collect);
+        let inst = back.install.expect("install lost");
+        assert_eq!((inst.shard, inst.shards, inst.rounds_done), (1, 3, 42));
+        assert_eq!(inst.params, params, "param bits must survive");
+        assert_eq!(inst.clients.len(), 2);
+        assert_eq!(inst.clients[0], sample_client_state(4));
+        assert_eq!(inst.clients[1], sample_client_state(7));
+
+        // collect-only command
+        let cmd = StateCmd {
+            collect: true,
+            install: None,
+        };
+        encode_state_cmd(&mut buf, &cmd);
+        let back = decode_state_cmd(&buf, &m).unwrap();
+        assert!(back.collect && back.install.is_none());
+
+        // message leg
+        let states = vec![sample_client_state(0)];
+        encode_state_msg(&mut buf, 2, &states);
+        assert_eq!(msg_tag(&buf).unwrap(), MsgTag::State);
+        let (shard, got) = decode_state_msg(&buf).unwrap();
+        assert_eq!(shard, 2);
+        assert_eq!(got, states);
+
+        // truncations error, never panic
+        for cut in 1..buf.len() {
+            assert!(decode_state_msg(&buf[..cut]).is_err());
+        }
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! Durable session plane: versioned checkpoint/resume for FL runs.
+//!
+//! FSFL's convergence depends on state that lives *between* rounds —
+//! the Eq. 5 error-accumulation residuals, optimizer moments, the
+//! per-client RNG/schedule positions and the server model itself. This
+//! module makes that state durable: at a configurable round cadence
+//! (see [`crate::fl::SessionConfig`]) the coordinator collects every
+//! shard's client state over the `STATE` wire pair, assembles a
+//! [`SessionState`] and writes it through [`SessionStore`] as one
+//! **versioned, FNV-checksummed snapshot file**.
+//!
+//! # Snapshot file format
+//!
+//! A snapshot is exactly one [`crate::net::frame`] frame on disk —
+//! the same length-prefix + FNV-1a-checksum discipline the shard wire
+//! protocol uses, so truncation (a crash mid-write) and bit rot are
+//! both detected at read time with a descriptive error, never a
+//! partially-applied state:
+//!
+//! ```text
+//! FSNT frame header (magic, payload length, FNV-1a of the payload)
+//! payload:
+//!   0x51 snapshot tag | u8 SNAPSHOT_VERSION
+//!   bool synthetic plane?
+//!   bytes experiment config        (net::wire config codec, exact)
+//!   u64  next_round                (rounds already completed)
+//!   str  manifest.tsv              (the model contract)
+//!   bytes server params            (FSTB tensor bundle, model::io)
+//!   RunLog rounds + per-client ClientStates
+//! ```
+//!
+//! Writes are atomic: the frame goes to a dot-tmp file, is fsynced and
+//! then renamed into place, so a kill at any instant leaves either the
+//! previous snapshot set or a complete new snapshot — [`SessionStore::latest`]
+//! skips unreadable files and falls back to the newest valid one.
+//!
+//! # Resume determinism invariant
+//!
+//! Resuming a killed run from its last snapshot produces **byte
+//! identical** remaining bitstreams and a byte-identical final
+//! [`RunLog`] compared to the uninterrupted run, for every transport
+//! and schedule shape — pinned on the `fl::synth` plane by
+//! `tests/integration_session.rs` (same invariant the transport
+//! conformance grid pins for deployment shapes).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fl::{ClientState, ExperimentConfig};
+use crate::metrics::{RoundMetrics, ScaleStats};
+use crate::model::params::ParamSet;
+use crate::model::{read_bundle_from, write_bundle_to, BundleTensor, Manifest};
+use crate::net::frame;
+use crate::net::wire::{self, Rd};
+
+/// Snapshot layout revision; bumped on any incompatible change. A
+/// mismatch fails [`decode_snapshot`] with a descriptive error instead
+/// of a misparse.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// First payload byte of every snapshot (distinct from all wire tags,
+/// so a misrouted file is caught immediately).
+const SNAP_TAG: u8 = 0x51;
+
+/// Snapshot filename prefix (`snap-<next_round>.fss`).
+const SNAP_PREFIX: &str = "snap-";
+/// Snapshot filename extension.
+const SNAP_EXT: &str = ".fss";
+
+/// How many snapshots [`SessionStore::write`] keeps: the new one plus
+/// one predecessor, so a crash mid-write always leaves a valid
+/// fallback.
+const KEEP: usize = 2;
+
+/// The complete durable state of an experiment at a round boundary.
+pub struct SessionState {
+    /// The exact experiment configuration of the original run (resume
+    /// re-runs it verbatim; floats travel as bit patterns).
+    pub cfg: ExperimentConfig,
+    /// Whether the run executed on the synthetic compute plane
+    /// (`fsfl run --synth` / the CI session job) instead of real PJRT
+    /// clients.
+    pub synthetic: bool,
+    /// Rounds already completed; resume continues at this round index.
+    pub next_round: usize,
+    /// The model contract, as `manifest.tsv` text.
+    pub manifest_tsv: String,
+    /// Server parameters as a named tensor bundle (validated against
+    /// the manifest on resume).
+    pub params: Vec<BundleTensor>,
+    /// The accumulated per-round log of the completed rounds.
+    pub rounds: Vec<RoundMetrics>,
+    /// Every client's round-boundary state (empty on the synthetic
+    /// plane, which carries no per-client state).
+    pub clients: Vec<ClientState>,
+}
+
+impl SessionState {
+    /// Shape the snapshot's server parameters against `manifest`,
+    /// validating tensor names and sizes (descriptive error, nothing
+    /// half-built).
+    pub fn params_for(&self, manifest: &std::sync::Arc<Manifest>) -> Result<ParamSet> {
+        if self.params.len() != manifest.tensors.len() {
+            return Err(anyhow!(
+                "snapshot carries {} parameter tensors, manifest wants {}",
+                self.params.len(),
+                manifest.tensors.len()
+            ));
+        }
+        let mut tensors = Vec::with_capacity(self.params.len());
+        for (bt, spec) in self.params.iter().zip(&manifest.tensors) {
+            if bt.name != spec.name {
+                return Err(anyhow!(
+                    "snapshot tensor order mismatch: {} != {}",
+                    bt.name,
+                    spec.name
+                ));
+            }
+            if bt.data.len() != spec.numel() {
+                return Err(anyhow!(
+                    "{}: snapshot has {} values, manifest wants {}",
+                    bt.name,
+                    bt.data.len(),
+                    spec.numel()
+                ));
+            }
+            tensors.push(bt.data.clone());
+        }
+        ParamSet::new(manifest.clone(), tensors)
+    }
+
+    /// Build the params bundle from a live [`ParamSet`].
+    pub fn bundle_params(params: &ParamSet) -> Vec<BundleTensor> {
+        params
+            .manifest
+            .tensors
+            .iter()
+            .zip(&params.tensors)
+            .map(|(spec, data)| BundleTensor {
+                name: spec.name.clone(),
+                shape: spec.shape.clone(),
+                data: data.clone(),
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot codec
+// ---------------------------------------------------------------------------
+
+fn put_round_metrics(buf: &mut Vec<u8>, m: &RoundMetrics) -> Result<()> {
+    wire::put_usize(buf, m.round);
+    wire::put_usize(buf, m.up_bytes);
+    wire::put_usize(buf, m.down_bytes);
+    wire::put_f64(buf, m.accuracy);
+    wire::put_f64(buf, m.f1);
+    wire::put_f64(buf, m.test_loss);
+    wire::put_f64(buf, m.update_sparsity);
+    wire::put_usize(buf, m.client_sparsity.len());
+    for &s in &m.client_sparsity {
+        wire::put_f64(buf, s);
+    }
+    wire::put_f64(buf, m.rows_skipped);
+    wire::put_usize(buf, m.scale_accepted);
+    wire::put_u64(
+        buf,
+        u64::try_from(m.train_ms).map_err(|_| anyhow!("train_ms overflows the snapshot"))?,
+    );
+    wire::put_u64(
+        buf,
+        u64::try_from(m.scale_ms).map_err(|_| anyhow!("scale_ms overflows the snapshot"))?,
+    );
+    wire::put_usize(buf, m.scale_stats.len());
+    for s in &m.scale_stats {
+        wire::put_str(buf, &s.layer);
+        wire::put_f32(buf, s.min);
+        wire::put_f32(buf, s.q25);
+        wire::put_f32(buf, s.median);
+        wire::put_f32(buf, s.q75);
+        wire::put_f32(buf, s.max);
+        wire::put_f32(buf, s.mean);
+        wire::put_f32(buf, s.suppressed);
+    }
+    Ok(())
+}
+
+fn read_round_metrics(rd: &mut Rd) -> Result<RoundMetrics> {
+    let round = rd.usize_()?;
+    let up_bytes = rd.usize_()?;
+    let down_bytes = rd.usize_()?;
+    let accuracy = rd.f64()?;
+    let f1 = rd.f64()?;
+    let test_loss = rd.f64()?;
+    let update_sparsity = rd.f64()?;
+    let n = rd.usize_()?;
+    if n > rd.remaining() / 8 {
+        return Err(anyhow!(
+            "implausible client-sparsity count {n} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut client_sparsity = Vec::with_capacity(n);
+    for _ in 0..n {
+        client_sparsity.push(rd.f64()?);
+    }
+    let rows_skipped = rd.f64()?;
+    let scale_accepted = rd.usize_()?;
+    let train_ms = rd.u64()? as u128;
+    let scale_ms = rd.u64()? as u128;
+    let n = rd.usize_()?;
+    if n > rd.remaining() {
+        return Err(anyhow!(
+            "implausible scale-stats count {n} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut scale_stats = Vec::with_capacity(n.min(1 << 10));
+    for _ in 0..n {
+        scale_stats.push(ScaleStats {
+            layer: rd.str_()?,
+            min: rd.f32()?,
+            q25: rd.f32()?,
+            median: rd.f32()?,
+            q75: rd.f32()?,
+            max: rd.f32()?,
+            mean: rd.f32()?,
+            suppressed: rd.f32()?,
+        });
+    }
+    Ok(RoundMetrics {
+        round,
+        up_bytes,
+        down_bytes,
+        accuracy,
+        f1,
+        test_loss,
+        update_sparsity,
+        client_sparsity,
+        rows_skipped,
+        scale_accepted,
+        train_ms,
+        scale_ms,
+        scale_stats,
+    })
+}
+
+/// Serialize a [`SessionState`] into `buf` (cleared first). Exact
+/// round-trip through [`decode_snapshot`]: floats travel as bit
+/// patterns, so resumed state equals checkpointed state bit for bit.
+pub fn encode_snapshot(buf: &mut Vec<u8>, st: &SessionState) -> Result<()> {
+    buf.clear();
+    buf.push(SNAP_TAG);
+    buf.push(SNAPSHOT_VERSION);
+    wire::put_bool(buf, st.synthetic);
+    let mut cfg_bytes = Vec::new();
+    wire::encode_config(&mut cfg_bytes, &st.cfg);
+    wire::put_bytes(buf, &cfg_bytes);
+    wire::put_usize(buf, st.next_round);
+    wire::put_str(buf, &st.manifest_tsv);
+    let mut bundle = Vec::new();
+    write_bundle_to(&mut bundle, &st.params)?;
+    wire::put_bytes(buf, &bundle);
+    wire::put_usize(buf, st.rounds.len());
+    for m in &st.rounds {
+        put_round_metrics(buf, m)?;
+    }
+    wire::put_usize(buf, st.clients.len());
+    for c in &st.clients {
+        wire::put_client_state(buf, c);
+    }
+    Ok(())
+}
+
+/// Inverse of [`encode_snapshot`]. Tag/version mismatches and any
+/// structural inconsistency error descriptively; a fresh state is
+/// built or nothing is (no partial apply).
+pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
+    let mut rd = Rd::new(payload);
+    let tag = rd.u8()?;
+    if tag != SNAP_TAG {
+        return Err(anyhow!(
+            "not a session snapshot (leading byte {tag:#04x}, want {SNAP_TAG:#04x})"
+        ));
+    }
+    let version = rd.u8()?;
+    if version != SNAPSHOT_VERSION {
+        return Err(anyhow!(
+            "snapshot version mismatch: file is v{version}, this binary reads v{SNAPSHOT_VERSION}"
+        ));
+    }
+    let synthetic = rd.bool_()?;
+    let cfg = wire::decode_config(rd.bytes()?)?;
+    let next_round = rd.usize_()?;
+    let manifest_tsv = rd.str_()?;
+    let mut bundle_bytes = rd.bytes()?;
+    let params = read_bundle_from(&mut bundle_bytes).context("snapshot params bundle")?;
+    let n = rd.usize_()?;
+    if n > rd.remaining() {
+        return Err(anyhow!(
+            "implausible round count {n} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    let mut rounds = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        rounds.push(read_round_metrics(&mut rd)?);
+    }
+    let clients = wire::read_client_states(&mut rd)?;
+    rd.done()?;
+    Ok(SessionState {
+        cfg,
+        synthetic,
+        next_round,
+        manifest_tsv,
+        params,
+        rounds,
+        clients,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// session store
+// ---------------------------------------------------------------------------
+
+/// A directory of round-boundary snapshots with atomic writes, pruning
+/// and newest-valid fallback.
+pub struct SessionStore {
+    dir: PathBuf,
+}
+
+impl SessionStore {
+    /// Open (creating if needed) a session directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating session dir {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    /// The directory this store writes into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the snapshot taken after `next_round` completed rounds.
+    pub fn snapshot_path(&self, next_round: usize) -> PathBuf {
+        self.dir
+            .join(format!("{SNAP_PREFIX}{next_round:08}{SNAP_EXT}"))
+    }
+
+    /// Every `snap-*.fss` file present, as `(next_round, path)` sorted
+    /// ascending by round. Files that don't parse as snapshot names are
+    /// ignored (they are not ours to manage).
+    pub fn snapshots(&self) -> Result<Vec<(usize, PathBuf)>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing session dir {}", self.dir.display()))?;
+        for e in entries {
+            let e = e?;
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name
+                .strip_prefix(SNAP_PREFIX)
+                .and_then(|s| s.strip_suffix(SNAP_EXT))
+            else {
+                continue;
+            };
+            if let Ok(round) = stem.parse::<usize>() {
+                out.push((round, e.path()));
+            }
+        }
+        out.sort_by_key(|&(r, _)| r);
+        Ok(out)
+    }
+
+    /// Write `st` as an atomic snapshot (tmp file → fsync → rename),
+    /// then prune to the newest [`KEEP`] snapshots. Returns the final
+    /// path.
+    pub fn write(&self, st: &SessionState) -> Result<PathBuf> {
+        let mut payload = Vec::new();
+        encode_snapshot(&mut payload, st)?;
+        let finalp = self.snapshot_path(st.next_round);
+        let tmp = self
+            .dir
+            .join(format!(".{SNAP_PREFIX}{:08}.tmp", st.next_round));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            frame::write_frame(&mut f, &payload)?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &finalp)
+            .with_context(|| format!("publishing {}", finalp.display()))?;
+        // Prune: keep the newest KEEP so a later torn write always has a
+        // valid fallback. Best effort — a remove failure never fails the
+        // checkpoint itself.
+        if let Ok(all) = self.snapshots() {
+            if all.len() > KEEP {
+                for (_, p) in &all[..all.len() - KEEP] {
+                    let _ = std::fs::remove_file(p);
+                }
+            }
+        }
+        Ok(finalp)
+    }
+
+    /// Load one snapshot file: the frame layer verifies length and
+    /// checksum (truncation/bit flips error descriptively), then the
+    /// payload decodes into a fresh [`SessionState`].
+    pub fn load(path: impl AsRef<Path>) -> Result<SessionState> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        let mut r = bytes.as_slice();
+        let mut payload = Vec::new();
+        let got = frame::read_frame(&mut r, &mut payload, frame::MAX_PAYLOAD)
+            .with_context(|| format!("snapshot {}", path.display()))?;
+        if !got {
+            return Err(anyhow!("snapshot {} is empty", path.display()));
+        }
+        decode_snapshot(&payload).with_context(|| format!("snapshot {}", path.display()))
+    }
+
+    /// The newest snapshot that loads cleanly, skipping torn or corrupt
+    /// files (the kill-mid-write fallback). `Ok(None)` when the
+    /// directory holds no usable snapshot.
+    pub fn latest(&self) -> Result<Option<SessionState>> {
+        let mut all = self.snapshots()?;
+        all.reverse();
+        for (_, path) in all {
+            match Self::load(&path) {
+                Ok(st) => return Ok(Some(st)),
+                Err(_) => continue, // torn write; fall back to older
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskKind;
+    use crate::fl::{OptSnapshot, Protocol};
+
+    fn sample_state() -> SessionState {
+        let m = crate::fl::synth::demo_manifest();
+        let mut params = ParamSet::new(
+            m.clone(),
+            m.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+        )
+        .unwrap();
+        params.tensors[0][7] = -0.125;
+        params.tensors[3][10] = 3.25e-5;
+        let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, Protocol::Fsfl);
+        cfg.rounds = 9;
+        cfg.seed = 1234;
+        SessionState {
+            cfg,
+            synthetic: true,
+            next_round: 4,
+            manifest_tsv: m.to_tsv(),
+            params: SessionState::bundle_params(&params),
+            rounds: vec![RoundMetrics {
+                round: 3,
+                up_bytes: 100,
+                down_bytes: 200,
+                accuracy: 0.5,
+                f1: 0.25,
+                test_loss: 1.5,
+                update_sparsity: 0.9,
+                client_sparsity: vec![0.8, 1.0],
+                rows_skipped: 0.5,
+                scale_accepted: 1,
+                train_ms: 12,
+                scale_ms: 3,
+                scale_stats: vec![ScaleStats {
+                    layer: "conv1".into(),
+                    min: -1.0,
+                    q25: 0.0,
+                    median: 0.5,
+                    q75: 0.75,
+                    max: 1.5,
+                    mean: 0.4,
+                    suppressed: 0.1,
+                }],
+            }],
+            clients: vec![ClientState {
+                id: 1,
+                rng: 99,
+                sched_global: 7,
+                sched_period: 2,
+                train_order: vec![3, 1, 2, 0],
+                residual: None,
+                wopt: OptSnapshot {
+                    m: vec![vec![0.5]],
+                    v: vec![vec![0.25]],
+                    t: 4.0,
+                },
+                sopt: OptSnapshot {
+                    m: vec![],
+                    v: vec![],
+                    t: 0.0,
+                },
+            }],
+        }
+    }
+
+    fn assert_states_eq(a: &SessionState, b: &SessionState) {
+        assert_eq!(format!("{:?}", a.cfg), format!("{:?}", b.cfg));
+        assert_eq!(a.synthetic, b.synthetic);
+        assert_eq!(a.next_round, b.next_round);
+        assert_eq!(a.manifest_tsv, b.manifest_tsv);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.clients, b.clients);
+    }
+
+    #[test]
+    fn snapshot_round_trips_exactly() {
+        let st = sample_state();
+        let mut buf = Vec::new();
+        encode_snapshot(&mut buf, &st).unwrap();
+        let back = decode_snapshot(&buf).unwrap();
+        assert_states_eq(&st, &back);
+        // params re-shape cleanly against the manifest
+        let m = std::sync::Arc::new(Manifest::parse(&st.manifest_tsv).unwrap());
+        let p = back.params_for(&m).unwrap();
+        assert_eq!(p.tensors[0][7], -0.125);
+    }
+
+    #[test]
+    fn snapshot_version_and_tag_mismatch_are_descriptive() {
+        let st = sample_state();
+        let mut buf = Vec::new();
+        encode_snapshot(&mut buf, &st).unwrap();
+        let mut bad = buf.clone();
+        bad[1] = SNAPSHOT_VERSION + 1;
+        let err = format!("{}", decode_snapshot(&bad).unwrap_err());
+        assert!(err.contains("version"), "undescriptive: {err}");
+        let mut bad = buf;
+        bad[0] = 0x7F;
+        let err = format!("{}", decode_snapshot(&bad).unwrap_err());
+        assert!(err.contains("not a session snapshot"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn store_write_load_latest_and_prune() {
+        let dir = std::env::temp_dir().join(format!("fsfl_session_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SessionStore::open(&dir).unwrap();
+        assert!(store.latest().unwrap().is_none(), "empty dir has no snapshot");
+        let mut st = sample_state();
+        for round in [2usize, 3, 4] {
+            st.next_round = round;
+            store.write(&st).unwrap();
+        }
+        // pruned to the newest KEEP
+        let names = store.snapshots().unwrap();
+        assert_eq!(
+            names.iter().map(|(r, _)| *r).collect::<Vec<_>>(),
+            vec![3, 4],
+            "prune must keep the newest {KEEP}"
+        );
+        let latest = store.latest().unwrap().expect("snapshot present");
+        assert_eq!(latest.next_round, 4);
+        // torn newest file → fall back to the previous valid snapshot
+        let torn = store.snapshot_path(5);
+        let bytes = std::fs::read(store.snapshot_path(4)).unwrap();
+        std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+        let latest = store.latest().unwrap().expect("fallback snapshot");
+        assert_eq!(latest.next_round, 4, "must fall back past the torn file");
+        // and loading the torn file directly is a descriptive error
+        let err = format!("{:#}", SessionStore::load(&torn).unwrap_err());
+        assert!(err.contains("mid-frame"), "undescriptive: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flips_are_detected_by_the_frame_checksum() {
+        let dir = std::env::temp_dir().join(format!("fsfl_session_flip_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SessionStore::open(&dir).unwrap();
+        let st = sample_state();
+        let path = store.write(&st).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", SessionStore::load(&path).unwrap_err());
+        assert!(
+            err.contains("checksum") || err.contains("magic") || err.contains("oversized"),
+            "undescriptive: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

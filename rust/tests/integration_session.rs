@@ -1,0 +1,383 @@
+//! Session-plane conformance and robustness suite (PJRT-free: the
+//! whole plane runs on the deterministic `fl::synth` compute plane, so
+//! every test here runs in CI on the vendored null XLA backend).
+//!
+//! 1. **Resume conformance** — for each transport in {mpsc, loopback,
+//!    tcp} (× plain/bidirectional), a run crashed at round k and then
+//!    resumed from its snapshot produces a final `RunLog` byte-identical
+//!    to the uninterrupted run (the synthetic eval is a checksum of
+//!    every aggregated broadcast, so metric equality pins the remaining
+//!    bitstreams bit for bit).
+//! 2. **Elastic membership** — shards leaving and replacements
+//!    re-joining at round boundaries (state migrating over the wire
+//!    `STATE` pair) leave the `RunLog` byte-identical to the
+//!    static-membership run.
+//! 3. **Robustness** — a torn (kill-mid-write) snapshot is skipped in
+//!    favor of the previous valid one; malformed client states are
+//!    rejected before anything is mutated.
+//! 4. **Real kill** — an `fsfl run --synth` child process is killed
+//!    mid-run with SIGKILL and `fsfl run --resume` reproduces the
+//!    uninterrupted run's CSV byte for byte.
+
+mod common;
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use common::*;
+
+use fsfl::coordinator::{self, ElasticPlan};
+use fsfl::data::TaskKind;
+use fsfl::fl::{
+    Client, ExperimentConfig, LrSchedule, Protocol, ScheduleKind, SessionConfig, TransportKind,
+};
+use fsfl::model::ParamSet;
+use fsfl::session::SessionStore;
+
+/// A unique temp dir per test leg (removed on success; best effort).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fsfl_session_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn scfg(transport: TransportKind, shards: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, Protocol::Fsfl);
+    cfg.clients = 5;
+    cfg.rounds = 6;
+    cfg.participation = 0.6; // 3 of 5 participate per round
+    cfg.seed = 77;
+    cfg.compute_shards = shards;
+    cfg.transport = transport;
+    cfg
+}
+
+const TRANSPORTS: [TransportKind; 3] = [
+    TransportKind::Mpsc,
+    TransportKind::Loopback,
+    TransportKind::Tcp,
+];
+
+// ---------------------------------------------------------------------------
+// 1 · resume conformance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crashed_run_resumes_byte_identical_across_transports() {
+    let m = manifest();
+    for transport in TRANSPORTS {
+        for bidir in [false, true] {
+            let tag = format!("{}{}", transport.name(), if bidir { "_bidir" } else { "" });
+            // Reference: the uninterrupted run.
+            let mut ref_cfg = scfg(transport, 2);
+            ref_cfg.bidirectional = bidir;
+            let reference =
+                coordinator::run_experiment_synthetic(ref_cfg, m.clone(), |_| {}).unwrap();
+            assert_eq!(reference.rounds.len(), 6);
+
+            // Victim: checkpoint every round, injected crash after round 2.
+            let dir = tmp_dir(&format!("resume_{tag}"));
+            let mut cfg = scfg(transport, 2);
+            cfg.bidirectional = bidir;
+            cfg.session = Some(SessionConfig {
+                dir: dir.clone(),
+                every: 1,
+                crash_after: Some(2),
+            });
+            let err = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("injected crash"),
+                "{tag}: expected the injected crash, got: {err:#}"
+            );
+
+            // Resume from the newest snapshot and finish the run.
+            let store = SessionStore::open(&dir).unwrap();
+            let state = store.latest().unwrap().expect("snapshot written");
+            assert_eq!(state.next_round, 3, "{tag}: crash after round 2");
+            assert!(state.synthetic);
+            assert_eq!(state.rounds.len(), 3);
+            let resumed = coordinator::run_experiment_synthetic_session(
+                state.cfg.clone(),
+                m.clone(),
+                ElasticPlan::default(),
+                Some(state),
+                |_| {},
+            )
+            .unwrap();
+            assert_eq!(
+                resumed.rounds, reference.rounds,
+                "{tag}: resumed RunLog diverged from the uninterrupted run"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn resume_rejects_a_mismatched_config() {
+    let m = manifest();
+    let dir = tmp_dir("cfg_mismatch");
+    let mut cfg = scfg(TransportKind::Loopback, 2);
+    cfg.session = Some(SessionConfig {
+        dir: dir.clone(),
+        every: 1,
+        crash_after: Some(1),
+    });
+    let _ = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
+    let state = SessionStore::open(&dir).unwrap().latest().unwrap().unwrap();
+    let mut wrong = state.cfg.clone();
+    wrong.seed ^= 1; // a different experiment
+    let err = coordinator::run_experiment_synthetic_session(
+        wrong,
+        m.clone(),
+        ElasticPlan::default(),
+        Some(state),
+        |_| {},
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("resume config"),
+        "undescriptive: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 2 · elastic membership
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_replacement_at_round_boundaries_is_byte_identical() {
+    let m = manifest();
+    for transport in TRANSPORTS {
+        let reference =
+            coordinator::run_experiment_synthetic(scfg(transport, 3), m.clone(), |_| {}).unwrap();
+        // Shard 0 (the eval shard) leaves at round 1, shard 2 at round
+        // 2, shard 1 at round 4 — each replaced by a fresh worker that
+        // re-joins through INIT/READY and is rehydrated over the wire.
+        let plan = ElasticPlan {
+            replace: vec![(1, 0), (2, 2), (4, 1)],
+        };
+        let log = coordinator::run_experiment_synthetic_session(
+            scfg(transport, 3),
+            m.clone(),
+            plan,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            log.rounds,
+            reference.rounds,
+            "{}: membership churn changed the RunLog",
+            transport.name()
+        );
+        if transport.is_wire() {
+            let churn = log.wire.expect("wire transports measure traffic");
+            let still = reference.wire.expect("wire transports measure traffic");
+            assert!(
+                churn.total() > still.total(),
+                "{}: re-join handshakes + state migration must show up in measured wire bytes",
+                transport.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3 · robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_snapshot_falls_back_to_previous_checkpoint_on_resume() {
+    let m = manifest();
+    let dir = tmp_dir("torn");
+    let mut cfg = scfg(TransportKind::Loopback, 2);
+    cfg.session = Some(SessionConfig {
+        dir: dir.clone(),
+        every: 1,
+        crash_after: Some(3),
+    });
+    let _ = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
+
+    // Simulate a kill mid-write: truncate the newest snapshot.
+    let store = SessionStore::open(&dir).unwrap();
+    let snaps = store.snapshots().unwrap();
+    let (newest_round, newest_path) = snaps.last().cloned().unwrap();
+    assert_eq!(newest_round, 4, "crash after round 3 leaves snapshot 4");
+    let bytes = std::fs::read(&newest_path).unwrap();
+    std::fs::write(&newest_path, &bytes[..bytes.len() / 3]).unwrap();
+
+    let state = store.latest().unwrap().expect("an older snapshot survives");
+    assert_eq!(
+        state.next_round, 3,
+        "resume must fall back to the previous valid checkpoint"
+    );
+    // Clear the injected crash for the resumed leg (operational session
+    // settings may differ on resume; the experiment itself may not).
+    let mut resume_cfg = state.cfg.clone();
+    if let Some(s) = resume_cfg.session.as_mut() {
+        s.crash_after = None;
+    }
+    let resumed = coordinator::run_experiment_synthetic_session(
+        resume_cfg,
+        m.clone(),
+        ElasticPlan::default(),
+        Some(state),
+        |_| {},
+    )
+    .unwrap();
+    let reference =
+        coordinator::run_experiment_synthetic(scfg(TransportKind::Loopback, 2), m.clone(), |_| {})
+            .unwrap();
+    assert_eq!(
+        resumed.rounds, reference.rounds,
+        "resume from the fallback checkpoint diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn client_state_import_validates_before_mutating() {
+    let m = manifest();
+    let init = ParamSet::new(
+        m.clone(),
+        m.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+    )
+    .unwrap();
+    let mut client = Client::new(
+        0,
+        init,
+        vec![0, 1, 2, 3],
+        vec![4, 5],
+        LrSchedule::new(ScheduleKind::Linear, 0.1, 20, 5),
+        true, // residuals on
+        9,
+    );
+    let good = client.export_state();
+
+    let mut bad = good.clone();
+    bad.id = 1;
+    assert!(client.import_state(&bad).is_err(), "wrong id accepted");
+    let mut bad = good.clone();
+    bad.train_order.push(9);
+    assert!(
+        client.import_state(&bad).is_err(),
+        "wrong train-order length accepted"
+    );
+    let mut bad = good.clone();
+    bad.residual = None;
+    assert!(
+        client.import_state(&bad).is_err(),
+        "missing residual accepted"
+    );
+    let mut bad = good.clone();
+    bad.residual = Some(vec![vec![0.0; 2]]); // wrong slab count
+    assert!(
+        client.import_state(&bad).is_err(),
+        "mis-shaped residual accepted"
+    );
+    let mut bad = good.clone();
+    bad.wopt.m[0].push(0.0); // wrong moment slab length
+    assert!(
+        client.import_state(&bad).is_err(),
+        "mis-shaped optimizer moments accepted"
+    );
+
+    // After every rejected import the state is untouched (no partial
+    // apply), and the good state still installs cleanly.
+    assert_eq!(client.export_state(), good);
+    client.import_state(&good).unwrap();
+    assert_eq!(client.export_state(), good);
+}
+
+// ---------------------------------------------------------------------------
+// 4 · a real kill -9 of a real process
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
+    let exe = env!("CARGO_BIN_EXE_fsfl");
+    let base = tmp_dir("proc_kill");
+    let out_ref = base.join("out_ref");
+    let out_victim = base.join("out_victim");
+    let out_resumed = base.join("out_resumed");
+    let ckpt = base.join("ckpt");
+    let run_args = [
+        "run",
+        "--synth",
+        "--clients",
+        "4",
+        "--rounds",
+        "6",
+        "--compute-shards",
+        "2",
+        "--transport",
+        "loopback",
+        "--seed",
+        "11",
+    ];
+
+    // Reference: an uninterrupted run.
+    let status = Command::new(exe)
+        .args(run_args)
+        .arg("--out")
+        .arg(&out_ref)
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "reference run failed");
+
+    // Victim: checkpoint every round; SIGKILL it after two round lines
+    // (a round line is printed only after its snapshot is on disk).
+    let mut child = Command::new(exe)
+        .args(run_args)
+        .arg("--checkpoint-dir")
+        .arg(&ckpt)
+        .arg("--out")
+        .arg(&out_victim)
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    {
+        let stdout = child.stdout.take().expect("piped stdout");
+        let reader = std::io::BufReader::new(stdout);
+        let mut round_lines = 0usize;
+        for line in reader.lines() {
+            let line = line.unwrap_or_default();
+            if line.starts_with("round") {
+                round_lines += 1;
+                if round_lines >= 2 {
+                    break;
+                }
+            }
+        }
+        assert!(round_lines >= 1, "victim produced no round lines");
+    }
+    let _ = child.kill(); // SIGKILL — no cleanup, a genuine crash
+    let _ = child.wait();
+
+    // Resume and finish.
+    let status = Command::new(exe)
+        .args(["run", "--resume"])
+        .arg(&ckpt)
+        .arg("--out")
+        .arg(&out_resumed)
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "resume run failed");
+
+    // The resumed run's CSV (snapshot rounds + re-run rounds) must be
+    // byte-identical to the uninterrupted run's.
+    let name = "synth-FSFL.csv";
+    let a = std::fs::read(out_ref.join(name)).unwrap();
+    let b = std::fs::read(out_resumed.join(name)).unwrap();
+    assert_eq!(
+        a, b,
+        "resumed CSV differs from the uninterrupted run's CSV"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}

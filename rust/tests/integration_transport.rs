@@ -355,6 +355,54 @@ fn runlog_identical_across_transports_schedules_and_shard_counts() {
 }
 
 #[test]
+fn bidirectional_broadcast_stream_is_conformant_across_transports() {
+    // Encode-once APPLY: with `bidirectional` set, wire transports fan
+    // out the server's downstream bitstream (encoded once per round)
+    // instead of the dense f32 delta; shards decode those exact bytes.
+    // The RunLog must stay byte-identical to the in-process mpsc path
+    // (which applies the dense dequantized broadcast directly), and
+    // loopback/TCP must measure identical frame-layer traffic.
+    let m = manifest();
+    let mut reference: Option<RoundsFp> = None;
+    let mut wire_ref: Option<WireStats> = None;
+    for transport in [
+        TransportKind::Mpsc,
+        TransportKind::Loopback,
+        TransportKind::Tcp,
+    ] {
+        let mut cfg = synth_cfg(Protocol::Fsfl);
+        cfg.bidirectional = true;
+        cfg.compute_shards = 2;
+        cfg.transport = transport;
+        let log = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap();
+        let fp = fp_rounds(&log);
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(
+                &fp,
+                r,
+                "bidirectional {}: RunLog diverged (stream APPLY != dense broadcast)",
+                transport.name()
+            ),
+        }
+        if transport.is_wire() {
+            let w = log.wire.expect("wire transports must measure traffic");
+            assert!(
+                w.sent > 0 && w.received > 0,
+                "stream APPLY bytes must be measured at the frame layer"
+            );
+            match &wire_ref {
+                None => wire_ref = Some(w),
+                Some(r) => assert_eq!(
+                    &w, r,
+                    "bidirectional: loopback vs tcp measured traffic diverged"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
 fn tcp_shard_processes_match_the_single_process_staged_schedule() {
     // The acceptance pin: `run_experiment_sharded` over TCP with real
     // OS shard-worker processes reproduces the single-process staged
