@@ -103,6 +103,30 @@ impl Flags {
         }
     }
 
+    /// Comma-separated `a:b` pair list (e.g. `--elastic-resize 2:3,4:1`
+    /// → `[(2, 3), (4, 1)]`). Empty segments are skipped; a segment
+    /// without exactly one `:` is an error.
+    pub fn pairs(&self, key: &str) -> Result<Option<Vec<(usize, usize)>>> {
+        self.mark(key);
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    let (a, b) = s
+                        .split_once(':')
+                        .ok_or_else(|| anyhow!("--{key} {s:?}: expected ROUND:VALUE"))?;
+                    Ok((
+                        a.parse::<usize>().map_err(|e| anyhow!("--{key} {a:?}: {e}"))?,
+                        b.parse::<usize>().map_err(|e| anyhow!("--{key} {b:?}: {e}"))?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
     /// Every flag name actually provided on the command line (for
     /// commands that must reject contradictory combinations, e.g.
     /// `run --resume` with experiment-shape flags).
@@ -151,6 +175,20 @@ mod tests {
     fn lists() {
         let f = Flags::parse(&args(&["--clients", "2,4,8"])).unwrap();
         assert_eq!(f.list::<usize>("clients").unwrap().unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn pairs_parse_round_colon_value_lists() {
+        let f = Flags::parse(&args(&["--elastic-resize", "2:3,4:1"])).unwrap();
+        assert_eq!(
+            f.pairs("elastic-resize").unwrap().unwrap(),
+            vec![(2, 3), (4, 1)]
+        );
+        assert!(f.pairs("absent").unwrap().is_none());
+        let f = Flags::parse(&args(&["--elastic-resize", "2-3"])).unwrap();
+        assert!(f.pairs("elastic-resize").is_err(), "missing colon accepted");
+        let f = Flags::parse(&args(&["--elastic-resize", "a:3"])).unwrap();
+        assert!(f.pairs("elastic-resize").is_err(), "non-numeric accepted");
     }
 
     #[test]

@@ -47,8 +47,15 @@
 //! remaining bitstreams and final [`RunLog`]. The same `STATE` machinery
 //! powers **elastic shard membership** ([`ElasticPlan`]): at a round
 //! boundary a shard can leave and a replacement join through the normal
-//! INIT/READY handshake; the departing shard's client state migrates
-//! over the wire into the newcomer, so membership churn never changes
+//! INIT/READY handshake, and the shard set itself can **grow or shrink
+//! N→M** — all client state is collected, leavers stop, newcomers join,
+//! and every member is rehydrated under the recomputed round-robin
+//! assignment, so each client's residuals, optimizer moments and
+//! RNG/schedule positions land on the worker that now owns it. In the
+//! [`serve`] shape, membership events are satisfied directly from the
+//! TCP listener: an external autoscaler just starts more `fsfl
+//! shard-worker` processes. Snapshots record the live assignment, so a
+//! resume rebuilds the post-resize membership. Churn never changes
 //! outputs.
 //!
 //! All shapes speak the *paper's* wire protocol: clients emit DeepCABAC
@@ -103,22 +110,88 @@ pub enum Event {
 }
 
 /// Scripted round-boundary membership changes for elastic deployments.
-/// Each `(round, shard)` entry means: immediately before round `round`
-/// starts, shard `shard` leaves (its client state is collected over the
-/// wire first) and a freshly provisioned worker re-joins under the same
-/// index through the ordinary INIT/READY handshake, then is rehydrated
-/// with the migrated state. Outputs are byte-identical to the
-/// static-membership run (pinned by `tests/integration_session.rs`).
+///
+/// * `replace`: each `(round, shard)` entry means: immediately before
+///   round `round` starts, shard `shard` leaves (its client state is
+///   collected over the wire first) and a freshly provisioned worker
+///   re-joins under the same index through the ordinary INIT/READY
+///   handshake, then is rehydrated with the migrated state.
+/// * `resize`: each `(round, shards)` entry means: immediately before
+///   round `round` starts, the shard set is resized N→M. All client
+///   state is collected, departing shards (on shrink) are stopped,
+///   newcomers (on grow) are admitted under the new count, and every
+///   member is rehydrated with the recomputed round-robin assignment —
+///   residuals, optimizer moments, RNG and schedule positions land on
+///   the worker that now owns each client.
+///
+/// Events at the same round boundary are processed replacements-first.
+/// Outputs are byte-identical to the static-membership run for any
+/// churn script, including N→M→N cycles (pinned by
+/// `tests/integration_session.rs`).
 #[derive(Debug, Clone, Default)]
 pub struct ElasticPlan {
     /// `(round, shard)` replacement events, processed in order.
     pub replace: Vec<(usize, usize)>,
+    /// `(round, new shard count)` resize events, processed in order
+    /// (after any replacement at the same round).
+    pub resize: Vec<(usize, usize)>,
+}
+
+/// One scripted membership event (see [`ElasticPlan`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ElasticEvent {
+    /// Replace the shard at this index with a fresh worker.
+    Replace(usize),
+    /// Resize the shard set to this count.
+    Resize(usize),
 }
 
 impl ElasticPlan {
     /// Whether the plan schedules no membership change at all.
     pub fn is_empty(&self) -> bool {
-        self.replace.is_empty()
+        self.replace.is_empty() && self.resize.is_empty()
+    }
+
+    /// Every event as `(round, event)`, sorted by round with
+    /// replacements before resizes at the same boundary (stable within
+    /// each kind, preserving listed order).
+    fn timeline(&self) -> Vec<(usize, ElasticEvent)> {
+        let mut ev: Vec<(usize, ElasticEvent)> = self
+            .replace
+            .iter()
+            .map(|&(r, s)| (r, ElasticEvent::Replace(s)))
+            .collect();
+        ev.extend(self.resize.iter().map(|&(r, m)| (r, ElasticEvent::Resize(m))));
+        ev.sort_by_key(|&(r, e)| (r, matches!(e, ElasticEvent::Resize(_))));
+        ev
+    }
+
+    /// The last round any event is scheduled at (`None` when empty).
+    fn last_event_round(&self) -> Option<usize> {
+        self.replace
+            .iter()
+            .chain(self.resize.iter())
+            .map(|&(r, _)| r)
+            .max()
+    }
+
+    /// How many distinct worker admissions a run starting at `shards`
+    /// needs under this plan (each replacement and each grown slot
+    /// consumes one) — the surplus the multi-process launcher
+    /// pre-spawns beyond the starting set.
+    fn admissions(&self, shards: usize) -> usize {
+        let mut cur = shards;
+        let mut extra = 0usize;
+        for (_, ev) in self.timeline() {
+            match ev {
+                ElasticEvent::Replace(_) => extra += 1,
+                ElasticEvent::Resize(m) => {
+                    extra += m.saturating_sub(cur);
+                    cur = m;
+                }
+            }
+        }
+        extra
     }
 }
 
@@ -126,6 +199,17 @@ impl ElasticPlan {
 /// shards than clients, never less than one).
 pub fn resolved_shards(cfg: &ExperimentConfig) -> usize {
     cfg.compute_shards.min(cfg.clients).max(1)
+}
+
+/// The shard count a (possibly resumed) session starts with: the
+/// snapshot's live assignment when resuming — after an elastic resize
+/// it legitimately differs from the config's `compute_shards` — or the
+/// config's resolved count for a fresh run.
+fn session_shards(cfg: &ExperimentConfig, resume: Option<&SessionState>) -> usize {
+    match resume {
+        Some(st) => st.shards.min(cfg.clients).max(1),
+        None => resolved_shards(cfg),
+    }
 }
 
 /// Run an experiment on dedicated compute thread(s), streaming per-round
@@ -397,7 +481,7 @@ impl SessionCtx {
                         s.dir
                     ));
                 }
-                Some(SessionStore::open(&s.dir)?)
+                Some(SessionStore::open(&s.dir)?.with_retain(s.retain))
             }
             None => None,
         };
@@ -477,18 +561,30 @@ impl Admit for MpscAdmit {
 }
 
 /// How a [`WireAdmit`] provisions brand-new worker endpoints.
-enum WireMode {
+enum WireMode<'a> {
     /// In-process loopback byte pipes.
     Loopback,
     /// Localhost TCP through this listener (worker threads connect in).
     Tcp { listener: TcpListener },
+    /// Accept an externally-launched worker from this listener without
+    /// provisioning anything — the [`serve`] shape, where an autoscaler
+    /// (or a human) starts `fsfl shard-worker` processes and the
+    /// coordinator admits whoever connects. Workers that connect before
+    /// a membership boundary simply wait in the accept backlog. The
+    /// caller's `liveness` poll runs while an accept blocks (initial
+    /// joins *and* mid-run membership admissions), so a dead worker
+    /// fails the join fast instead of burning the whole accept timeout.
+    Accept {
+        listener: TcpListener,
+        liveness: Box<dyn FnMut() -> Result<()> + 'a>,
+    },
 }
 
 /// Wire-connection bookkeeping shared by every wire deployment shape:
 /// INIT handshakes, per-connection reader threads, byte counters, and
 /// (when a [`WireMode`] is present) provisioning of replacement
 /// workers.
-struct WireAdmit {
+struct WireAdmit<'a> {
     cfg: ExperimentConfig,
     compute: ComputeSpec,
     /// Fan-in sender cloned into every reader thread. Dropped via
@@ -497,7 +593,7 @@ struct WireAdmit {
     /// without reporting.
     msg_tx: Option<mpsc::Sender<ShardMsg>>,
     shared: Arc<WireShared>,
-    mode: Option<WireMode>,
+    mode: Option<WireMode<'a>>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
     readers: Vec<std::thread::JoinHandle<()>>,
     sent: Vec<Arc<AtomicU64>>,
@@ -505,12 +601,12 @@ struct WireAdmit {
     next_conn: u64,
 }
 
-impl WireAdmit {
+impl<'a> WireAdmit<'a> {
     fn new(
         cfg: &ExperimentConfig,
         compute: &ComputeSpec,
         msg_tx: mpsc::Sender<ShardMsg>,
-        mode: Option<WireMode>,
+        mode: Option<WireMode<'a>>,
     ) -> Self {
         Self {
             cfg: cfg.clone(),
@@ -587,7 +683,7 @@ impl WireAdmit {
     }
 }
 
-impl Admit for WireAdmit {
+impl Admit for WireAdmit<'_> {
     fn seal(&mut self) {
         self.msg_tx = None;
     }
@@ -596,7 +692,10 @@ impl Admit for WireAdmit {
         enum Plan {
             None,
             Loopback,
+            /// Spawn an in-process worker thread that connects in.
             Tcp(std::net::SocketAddr),
+            /// Accept an externally-launched worker; spawn nothing.
+            Accept,
         }
         let plan = match &self.mode {
             None => Plan::None,
@@ -606,6 +705,7 @@ impl Admit for WireAdmit {
                     .local_addr()
                     .map_err(|e| anyhow!("listener address: {e}"))?,
             ),
+            Some(WireMode::Accept { .. }) => Plan::Accept,
         };
         let conn: Box<dyn Transport> = match plan {
             Plan::None => {
@@ -627,6 +727,15 @@ impl Admit for WireAdmit {
                         accept_one(listener, JOIN_TIMEOUT, || Ok(()))?
                     }
                     _ => unreachable!("plan was Tcp"),
+                };
+                Box::new(TcpTransport::new(stream))
+            }
+            Plan::Accept => {
+                let stream = match &mut self.mode {
+                    Some(WireMode::Accept { listener, liveness }) => {
+                        accept_one(listener, JOIN_TIMEOUT, &mut **liveness)?
+                    }
+                    _ => unreachable!("plan was Accept"),
                 };
                 Box::new(TcpTransport::new(stream))
             }
@@ -658,9 +767,9 @@ pub fn run_experiment_sharded(
 }
 
 /// [`run_experiment_sharded`] with a scripted [`ElasticPlan`]: shards
-/// leave and replacements re-join at the planned round boundaries, with
-/// client state migrating over the wire. Outputs stay byte-identical to
-/// the static-membership run.
+/// leave and replacements re-join, and the shard set grows/shrinks, at
+/// the planned round boundaries, with client state migrating over the
+/// wire. Outputs stay byte-identical to the static-membership run.
 pub fn run_experiment_sharded_elastic(
     cfg: ExperimentConfig,
     plan: ElasticPlan,
@@ -734,7 +843,7 @@ fn run_sharded_impl(
     resume: Option<SessionState>,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
-    let shards = resolved_shards(&cfg);
+    let shards = session_shards(&cfg, resume.as_ref());
     if shards <= 1
         && !cfg.transport.is_wire()
         && matches!(compute, ComputeSpec::Real)
@@ -862,7 +971,7 @@ fn run_wire_sharded(
 fn teardown_wire(
     result: Result<RunLog>,
     mut txs: Vec<ShardTx>,
-    admit: &mut WireAdmit,
+    admit: &mut WireAdmit<'_>,
 ) -> Result<RunLog> {
     for tx in &mut txs {
         let _ = tx.send(ShardCmd::Stop);
@@ -1038,6 +1147,47 @@ fn next_msg(msg_rx: &mpsc::Receiver<ShardMsg>, active: &[u64]) -> Result<ShardMs
     }
 }
 
+/// Fan a collect-only STATE command to every shard and gather the
+/// returned client states (any arrival order), sorted by client id —
+/// the shared read half of checkpoints and resizes. `what` names the
+/// operation in error messages.
+fn collect_all_states(
+    txs: &mut [ShardTx],
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    active: &[u64],
+    what: &str,
+) -> Result<Vec<ClientState>> {
+    let shards = txs.len();
+    for (s, tx) in txs.iter_mut().enumerate() {
+        tx.send(ShardCmd::State(StateCmd {
+            collect: true,
+            install: None,
+        }))
+        .map_err(|_| {
+            shard_failure(
+                msg_rx,
+                active,
+                &format!("shard {s} disconnected during {what}"),
+            )
+        })?;
+    }
+    let mut clients: Vec<ClientState> = Vec::new();
+    let mut got = 0usize;
+    while got < shards {
+        match next_msg(msg_rx, active) {
+            Ok(ShardMsg::State { clients: c, .. }) => {
+                got += 1;
+                clients.extend(c);
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => return Err(anyhow!("shard {shard}: {msg}")),
+            Ok(_) => return Err(anyhow!("unexpected shard message during {what}")),
+            Err(e) => return Err(e),
+        }
+    }
+    clients.sort_by_key(|c| c.id);
+    Ok(clients)
+}
+
 /// Turn a dead-shard condition into its parked `Failed` message when one
 /// is already queued, otherwise the fallback description.
 fn shard_failure(
@@ -1079,6 +1229,11 @@ fn coordinate(
     session: &mut SessionCtx,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
+    // The *current* shard count: elastic resizes re-bind it mid-run.
+    // `txs` always holds exactly `shards` senders; `active` is indexed
+    // by shard and never shrinks (a departed shard's slot is zeroed so
+    // its reader's late ConnDown is recognized as stale, not fatal).
+    let mut shards = shards;
     // Startup barrier: every shard builds its runtime + clients.
     let mut init: Option<ParamSet> = None;
     let mut ready = 0usize;
@@ -1143,6 +1298,14 @@ fn coordinate(
                 cfg.rounds
             ));
         }
+        if state.shards.min(cfg.clients).max(1) != shards {
+            return Err(anyhow!(
+                "snapshot was taken with {} shards but {} workers joined \
+                 (resume rebuilds the checkpointed post-resize membership)",
+                state.shards,
+                shards
+            ));
+        }
         let params = state.params_for(&manifest)?;
         server = Server::new(params, cfg.downstream_codec());
         log.rounds = state.rounds.clone();
@@ -1173,21 +1336,43 @@ fn coordinate(
     // Validate the membership plan up front: a silently-ignored event
     // would not just skip the replacement, it would also keep the
     // admission sender alive forever (see the seal below) and disable
-    // fail-fast on silent worker death.
-    for &(round, s) in &session.plan.replace {
-        if s >= shards {
-            return Err(anyhow!(
-                "elastic plan replaces shard {s} but only {shards} shards exist"
-            ));
-        }
-        if round < start_round || round >= cfg.rounds {
-            return Err(anyhow!(
-                "elastic plan schedules a replacement at round {round}, outside the \
-                 remaining rounds {start_round}..{}",
-                cfg.rounds
-            ));
+    // fail-fast on silent worker death. The walk simulates the shard
+    // count through the timeline so replacements are checked against
+    // the membership they will actually see.
+    let timeline = session.plan.timeline();
+    {
+        let mut cur = shards;
+        for &(round, ev) in &timeline {
+            if round < start_round || round >= cfg.rounds {
+                return Err(anyhow!(
+                    "elastic plan schedules an event at round {round}, outside the \
+                     remaining rounds {start_round}..{}",
+                    cfg.rounds
+                ));
+            }
+            match ev {
+                ElasticEvent::Replace(s) => {
+                    if s >= cur {
+                        return Err(anyhow!(
+                            "elastic plan replaces shard {s} but only {cur} shards \
+                             exist at round {round}"
+                        ));
+                    }
+                }
+                ElasticEvent::Resize(m) => {
+                    if m == 0 || m > cfg.clients {
+                        return Err(anyhow!(
+                            "elastic plan resizes to {m} shards at round {round}; \
+                             valid counts are 1..={} (the client count)",
+                            cfg.clients
+                        ));
+                    }
+                    cur = m;
+                }
+            }
         }
     }
+    let last_event_round = session.plan.last_event_round();
 
     let update_idx = server.params.manifest.update_indices();
     let n = cfg.clients;
@@ -1203,80 +1388,188 @@ fn coordinate(
     let mut stream_slot: Option<Arc<Vec<u8>>> = None;
 
     for t in start_round..cfg.rounds {
-        // ---- elastic membership: scripted replacements at this round
-        //      boundary (collect state → stop → admit → READY → install) ----
-        for ev in 0..session.plan.replace.len() {
-            let (round, s) = session.plan.replace[ev];
+        // ---- elastic membership: scripted events at this round
+        //      boundary (replacements first, then resizes) ----
+        for &(round, ev) in &timeline {
             if round != t {
                 continue;
             }
-            // 1 · collect the departing shard's client state.
-            txs[s]
-                .send(ShardCmd::State(StateCmd {
-                    collect: true,
-                    install: None,
-                }))
-                .map_err(|_| {
-                    shard_failure(msg_rx, active, &format!("shard {s} disconnected before handoff"))
-                })?;
-            let migrated = loop {
-                match next_msg(msg_rx, active) {
-                    Ok(ShardMsg::State { shard, clients }) if shard == s => break clients,
-                    Ok(ShardMsg::Failed { shard, msg }) => {
-                        return Err(anyhow!("shard {shard}: {msg}"))
+            match ev {
+                // Replacement: collect state → stop → admit → READY →
+                // install under the unchanged assignment.
+                ElasticEvent::Replace(s) => {
+                    // 1 · collect the departing shard's client state.
+                    txs[s]
+                        .send(ShardCmd::State(StateCmd {
+                            collect: true,
+                            install: None,
+                        }))
+                        .map_err(|_| {
+                            shard_failure(
+                                msg_rx,
+                                active,
+                                &format!("shard {s} disconnected before handoff"),
+                            )
+                        })?;
+                    let migrated = loop {
+                        match next_msg(msg_rx, active) {
+                            Ok(ShardMsg::State { shard, clients }) if shard == s => break clients,
+                            Ok(ShardMsg::Failed { shard, msg }) => {
+                                return Err(anyhow!("shard {shard}: {msg}"))
+                            }
+                            Ok(_) => {
+                                return Err(anyhow!(
+                                    "unexpected shard message while collecting shard {s}'s state"
+                                ))
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    };
+                    // 2 · stop it and provision the replacement under the
+                    //     same index; its old connection becomes stale.
+                    let _ = txs[s].send(ShardCmd::Stop);
+                    let (conn, tx) = admit.admit(s, shards)?;
+                    txs[s] = tx;
+                    active[s] = conn;
+                    // 3 · the newcomer introduces itself through the
+                    //     ordinary READY handshake (the elastic re-join
+                    //     point).
+                    loop {
+                        match next_msg(msg_rx, active) {
+                            Ok(ShardMsg::Ready { shard, .. }) if shard == s => break,
+                            Ok(ShardMsg::Failed { shard, msg }) => {
+                                return Err(anyhow!("shard {shard}: {msg}"))
+                            }
+                            Ok(_) => {
+                                return Err(anyhow!(
+                                    "unexpected shard message while shard {s} was re-joining"
+                                ))
+                            }
+                            Err(e) => return Err(e),
+                        }
                     }
-                    Ok(_) => {
-                        return Err(anyhow!(
-                            "unexpected shard message while collecting shard {s}'s state"
-                        ))
-                    }
-                    Err(e) => return Err(e),
+                    // 4 · rehydrate it: absolute replica params + the
+                    //     migrated client states + the fast-forwarded
+                    //     round counter.
+                    txs[s]
+                        .send(ShardCmd::State(StateCmd {
+                            collect: false,
+                            install: Some(StateInstall {
+                                shard: s,
+                                shards,
+                                rounds_done: t as u64,
+                                params: server.params.clone(),
+                                clients: migrated,
+                            }),
+                        }))
+                        .map_err(|_| {
+                            shard_failure(
+                                msg_rx,
+                                active,
+                                &format!("shard {s} disconnected during re-join"),
+                            )
+                        })?;
                 }
-            };
-            // 2 · stop it and provision the replacement under the same
-            //     index; its old connection becomes stale.
-            let _ = txs[s].send(ShardCmd::Stop);
-            let (conn, tx) = admit.admit(s, shards)?;
-            txs[s] = tx;
-            active[s] = conn;
-            // 3 · the newcomer introduces itself through the ordinary
-            //     READY handshake (the elastic re-join point).
-            loop {
-                match next_msg(msg_rx, active) {
-                    Ok(ShardMsg::Ready { shard, .. }) if shard == s => break,
-                    Ok(ShardMsg::Failed { shard, msg }) => {
-                        return Err(anyhow!("shard {shard}: {msg}"))
+                // Resize N→M: collect *all* state, stop leavers / admit
+                // newcomers, then install the recomputed assignment on
+                // every member so each client's residuals, moments, RNG
+                // and schedule land on the worker that now owns it.
+                ElasticEvent::Resize(target) => {
+                    if target == shards {
+                        continue; // no-op resize
                     }
-                    Ok(_) => {
-                        return Err(anyhow!(
-                            "unexpected shard message while shard {s} was re-joining"
-                        ))
+                    // 1 · collect every shard's client state.
+                    let clients = collect_all_states(
+                        txs,
+                        msg_rx,
+                        active,
+                        &format!("the {shards}->{target} resize"),
+                    )?;
+                    // 2 · shrink: stop the departing shards; their
+                    //     readers' late ConnDown reports become stale.
+                    if target < shards {
+                        for s in target..shards {
+                            let _ = txs[s].send(ShardCmd::Stop);
+                            active[s] = 0;
+                        }
+                        txs.truncate(target);
                     }
-                    Err(e) => return Err(e),
+                    // 3 · grow: admit newcomers under the new count and
+                    //     barrier on their READY handshakes (any order).
+                    if target > shards {
+                        for s in shards..target {
+                            let (conn, tx) = admit.admit(s, target)?;
+                            txs.push(tx);
+                            if s < active.len() {
+                                active[s] = conn;
+                            } else {
+                                active.push(conn);
+                            }
+                        }
+                        let mut pending: Vec<bool> = vec![true; target];
+                        for p in pending.iter_mut().take(shards) {
+                            *p = false;
+                        }
+                        let mut waiting = target - shards;
+                        while waiting > 0 {
+                            match next_msg(msg_rx, active) {
+                                Ok(ShardMsg::Ready { shard, .. })
+                                    if pending.get(shard).copied().unwrap_or(false) =>
+                                {
+                                    pending[shard] = false;
+                                    waiting -= 1;
+                                }
+                                Ok(ShardMsg::Failed { shard, msg }) => {
+                                    return Err(anyhow!("shard {shard}: {msg}"))
+                                }
+                                Ok(_) => {
+                                    return Err(anyhow!(
+                                        "unexpected shard message while shards joined for \
+                                         the {shards}->{target} resize"
+                                    ))
+                                }
+                                Err(e) => return Err(e),
+                            }
+                        }
+                    }
+                    shards = target;
+                    // 4 · install the new assignment everywhere: every
+                    //     member (kept or new) gets the absolute params,
+                    //     the fast-forwarded round counter, and exactly
+                    //     the client states it now owns.
+                    for s in 0..shards {
+                        let owned: Vec<ClientState> = clients
+                            .iter()
+                            .filter(|c| scheduler::shard_of(c.id, shards) == s)
+                            .cloned()
+                            .collect();
+                        txs[s]
+                            .send(ShardCmd::State(StateCmd {
+                                collect: false,
+                                install: Some(StateInstall {
+                                    shard: s,
+                                    shards,
+                                    rounds_done: t as u64,
+                                    params: server.params.clone(),
+                                    clients: owned,
+                                }),
+                            }))
+                            .map_err(|_| {
+                                shard_failure(
+                                    msg_rx,
+                                    active,
+                                    &format!("shard {s} disconnected during resize install"),
+                                )
+                            })?;
+                    }
                 }
             }
-            // 4 · rehydrate it: absolute replica params + the migrated
-            //     client states + the fast-forwarded round counter.
-            txs[s]
-                .send(ShardCmd::State(StateCmd {
-                    collect: false,
-                    install: Some(StateInstall {
-                        shard: s,
-                        shards,
-                        rounds_done: t as u64,
-                        params: server.params.clone(),
-                        clients: migrated,
-                    }),
-                }))
-                .map_err(|_| {
-                    shard_failure(msg_rx, active, &format!("shard {s} disconnected during re-join"))
-                })?;
         }
         // Once the last planned membership change is behind us, no
         // further admission can happen — release the retained fan-in
         // sender so silent worker death still disconnects the channel
         // (static-membership runs seal before the control loop starts).
-        if !session.plan.is_empty() && session.plan.replace.iter().all(|&(r, _)| r <= t) {
+        if last_event_round.map_or(false, |r| r <= t) {
             admit.seal();
         }
 
@@ -1415,41 +1708,12 @@ fn coordinate(
         //      observed round line implies its snapshot is on disk) ----
         if let Some(store) = &session.store {
             if session.every > 0 && (t + 1) % session.every == 0 {
-                for (s, tx) in txs.iter_mut().enumerate() {
-                    tx.send(ShardCmd::State(StateCmd {
-                        collect: true,
-                        install: None,
-                    }))
-                    .map_err(|_| {
-                        shard_failure(
-                            msg_rx,
-                            active,
-                            &format!("shard {s} disconnected during checkpoint"),
-                        )
-                    })?;
-                }
-                let mut clients: Vec<ClientState> = Vec::new();
-                let mut got = 0usize;
-                while got < shards {
-                    match next_msg(msg_rx, active) {
-                        Ok(ShardMsg::State { clients: c, .. }) => {
-                            got += 1;
-                            clients.extend(c);
-                        }
-                        Ok(ShardMsg::Failed { shard, msg }) => {
-                            return Err(anyhow!("shard {shard}: {msg}"))
-                        }
-                        Ok(_) => {
-                            return Err(anyhow!("unexpected shard message during checkpoint"))
-                        }
-                        Err(e) => return Err(e),
-                    }
-                }
-                clients.sort_by_key(|c| c.id);
+                let clients = collect_all_states(txs, msg_rx, active, "checkpoint")?;
                 let snap = SessionState {
                     cfg: cfg.clone(),
                     synthetic: session.synthetic,
                     next_round: t + 1,
+                    shards,
                     manifest_tsv: server.params.manifest.to_tsv(),
                     params: SessionState::bundle_params(&server.params),
                     rounds: log.rounds.clone(),
@@ -1641,22 +1905,39 @@ impl ShardBody for RealShard<'_, '_> {
                 self.init.numel()
             ));
         }
-        // Cross-index reassignment never happens today: resume installs
-        // each shard's own index and elastic replacement admits the
-        // newcomer under the departed index (the per-connection readers
-        // validate shard identity, so a silently re-indexed worker would
-        // be rejected anyway). The assignment travels on the wire for
-        // forward compatibility; reject a mismatch instead of guessing.
-        if inst.shard != self.shard || inst.shards != self.shards {
+        // Cross-index reassignment never happens: resume installs each
+        // shard's own index, elastic replacement admits the newcomer
+        // under the departed index, and a resize keeps every surviving
+        // worker's index (the per-connection readers validate shard
+        // identity, so a silently re-indexed worker would be rejected
+        // anyway). Reject an index change instead of guessing.
+        if inst.shard != self.shard {
             return Err(anyhow!(
-                "state install re-assigns this worker from shard {}/{} to {}/{}; \
+                "state install re-assigns this worker from shard {} to {}; \
                  cross-index reassignment is not supported (replacement workers \
                  re-join under the departed index)",
                 self.shard,
-                self.shards,
-                inst.shard,
-                inst.shards
+                inst.shard
             ));
+        }
+        // A changed shard *count* is an elastic resize: rebuild the
+        // local client set under the new round-robin assignment from
+        // the shared deterministic substrate, then let the install
+        // below overwrite replicas and import each migrated state. The
+        // recycled lane scratch stays valid (lanes are manifest-shaped,
+        // not assignment-shaped), and the codec pool keeps its width —
+        // width never changes outputs. Warmup is skipped: it only
+        // shapes the *initial* params, which the absolute install below
+        // overwrites bit-for-bit (datasets, splits and schedules do not
+        // depend on it), so the rebuild pays no PJRT train steps.
+        if inst.shards != self.shards {
+            let mut rebuild_cfg = self.cfg.clone();
+            rebuild_cfg.warmup_steps = 0;
+            let setup = build_setup(self.mr, &rebuild_cfg, |ci| {
+                scheduler::shard_of(ci, inst.shards) == inst.shard
+            })?;
+            self.clients = setup.clients;
+            self.shards = inst.shards;
         }
         // Absolute replica state: every local client equals the server.
         for c in self.clients.iter_mut() {
@@ -2050,43 +2331,68 @@ pub fn serve(
     liveness: impl FnMut() -> Result<()>,
     on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    serve_session(cfg, listener, compute, None, liveness, on_event)
+    serve_session(
+        cfg,
+        listener,
+        compute,
+        ElasticPlan::default(),
+        None,
+        liveness,
+        on_event,
+    )
 }
 
-/// [`serve`] with an optional resume state: the coordinator rehydrates
-/// the joined workers from the snapshot before the first round (the
-/// multi-process leg of `fsfl run --resume`).
+/// [`serve`] with full session control: an optional resume state (the
+/// coordinator rehydrates the joined workers from the snapshot before
+/// the first round — the multi-process leg of `fsfl run --resume`) and
+/// a scripted [`ElasticPlan`]. Membership events are satisfied
+/// **directly from the listener**: a replacement or a grown shard slot
+/// admits the next externally-launched worker that connects (an
+/// autoscaler just starts more `fsfl shard-worker` processes — workers
+/// that connect before the boundary wait in the accept backlog).
 pub fn serve_session(
     cfg: ExperimentConfig,
     listener: &TcpListener,
     compute: ComputeSpec,
+    plan: ElasticPlan,
     resume: Option<SessionState>,
-    mut liveness: impl FnMut() -> Result<()>,
+    liveness: impl FnMut() -> Result<()>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    let shards = resolved_shards(&cfg);
+    let shards = session_shards(&cfg, resume.as_ref());
     let result = (|| {
         check_wire_cfg(&cfg, &compute)?;
-        let mut session = SessionCtx::build(&cfg, &compute, ElasticPlan::default(), resume)?;
+        let mut session = SessionCtx::build(&cfg, &compute, plan, resume)?;
         let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
-        let mut admit = WireAdmit::new(&cfg, &compute, msg_tx, None);
+        let accept = WireMode::Accept {
+            listener: listener
+                .try_clone()
+                .map_err(|e| anyhow!("cloning the shard listener for admission: {e}"))?,
+            liveness: Box::new(liveness),
+        };
+        let mut admit = WireAdmit::new(&cfg, &compute, msg_tx, Some(accept));
         let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
         let mut active: Vec<u64> = Vec::with_capacity(shards);
+        // Initial joins go through the same listener-admission path as
+        // mid-run membership events, so the liveness poll guards both.
         for shard in 0..shards {
-            let stream = accept_one(listener, JOIN_TIMEOUT, &mut liveness)?;
-            let (conn, tx) = admit.attach(shard, shards, Box::new(TcpTransport::new(stream)))?;
+            let (conn, tx) = admit.admit(shard, shards)?;
             active.push(conn);
             txs.push(tx);
         }
-        // No further admissions happen here (externally-joined workers);
-        // keep disconnect detection alive.
-        admit.seal();
+        // With no membership plan no further admission happens
+        // (externally-joined workers); keep disconnect detection alive.
+        // Elastic runs keep the fan-in sender for later admissions and
+        // seal inside the control loop once the plan is exhausted.
+        if session.plan.is_empty() {
+            admit.seal();
+        }
         let result = coordinate(
             &cfg,
             shards,
             &mut txs,
             &mut active,
-            &mut NoAdmit,
+            &mut admit,
             &msg_rx,
             &mut session,
             &mut on_event,
@@ -2119,26 +2425,59 @@ pub fn run_experiment_processes(
     worker_exe: &Path,
     on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    run_experiment_processes_session(cfg, compute, worker_exe, None, on_event)
+    run_experiment_processes_session(
+        cfg,
+        compute,
+        worker_exe,
+        ElasticPlan::default(),
+        None,
+        on_event,
+    )
 }
 
-/// [`run_experiment_processes`] with an optional resume state (the
-/// multi-process leg of `fsfl run --shard-procs --resume`).
+/// [`run_experiment_processes`] with full session control: an optional
+/// resume state (the multi-process leg of `fsfl run --shard-procs
+/// --resume`) and a scripted [`ElasticPlan`]. Enough worker processes
+/// for the whole plan — the starting set plus one per replacement and
+/// per grown slot — are launched up front; the surplus sit connected in
+/// the listener's accept backlog until their membership boundary admits
+/// them (exactly how an external autoscaler would pre-provision).
 pub fn run_experiment_processes_session(
     cfg: ExperimentConfig,
     compute: ComputeSpec,
     worker_exe: &Path,
+    plan: ElasticPlan,
     resume: Option<SessionState>,
     on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    let shards = resolved_shards(&cfg);
+    let shards = session_shards(&cfg, resume.as_ref());
+    let workers = shards + plan.admissions(shards);
+    // How many workers the plan will deliberately stop (each replace
+    // stops one, each shrink stops the difference): the liveness poll
+    // below tolerates exactly that many clean (status 0) exits; any
+    // clean exit beyond the budget — in particular *any* with no plan —
+    // still fails the join fast instead of burning the accept timeout.
+    let planned_departures = {
+        let mut cur = shards;
+        let mut dep = 0usize;
+        for (_, ev) in plan.timeline() {
+            match ev {
+                ElasticEvent::Replace(_) => dep += 1,
+                ElasticEvent::Resize(m) => {
+                    dep += cur.saturating_sub(m);
+                    cur = m;
+                }
+            }
+        }
+        dep
+    };
     let listener =
         TcpListener::bind("127.0.0.1:0").map_err(|e| anyhow!("binding shard listener: {e}"))?;
     let addr = listener
         .local_addr()
         .map_err(|e| anyhow!("listener address: {e}"))?;
-    let mut spawned = Vec::with_capacity(shards);
-    for shard in 0..shards {
+    let mut spawned = Vec::with_capacity(workers);
+    for shard in 0..workers {
         let child = std::process::Command::new(worker_exe)
             .arg("shard-worker")
             .arg("--connect")
@@ -2157,17 +2496,33 @@ pub fn run_experiment_processes_session(
         cfg,
         &listener,
         compute,
+        plan,
         resume,
         || {
             let mut kids = children.borrow_mut();
+            let mut clean = 0usize;
             for (i, c) in kids.iter_mut().enumerate() {
                 if let Some(status) = c
                     .try_wait()
                     .map_err(|e| anyhow!("polling shard worker {i}: {e}"))?
                 {
-                    return Err(anyhow!(
-                        "shard worker {i} exited early ({status}) before joining"
-                    ));
+                    if !status.success() {
+                        return Err(anyhow!(
+                            "shard worker {i} exited early ({status}) before joining"
+                        ));
+                    }
+                    // A zero exit is a *planned* departure (a shard
+                    // stopped by a shrink or replacement winds down
+                    // cleanly) — but the plan bounds how many of those
+                    // can ever exist; one more means a worker died
+                    // cleanly before joining.
+                    clean += 1;
+                    if clean > planned_departures {
+                        return Err(anyhow!(
+                            "shard worker {i} exited cleanly before joining \
+                             ({clean} clean exits, the plan stops only {planned_departures})"
+                        ));
+                    }
                 }
             }
             Ok(())

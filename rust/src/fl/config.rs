@@ -192,10 +192,22 @@ pub struct SessionConfig {
     /// completed round (`1` = every round; `0` disables cadence writes
     /// while keeping the directory configured for resume).
     pub every: usize,
+    /// How many snapshots the store keeps after each write (GC knob;
+    /// values below 1 are treated as 1). The default of
+    /// [`SessionConfig::DEFAULT_RETAIN`] keeps the new snapshot plus
+    /// one predecessor, so a crash mid-write always has a valid
+    /// fallback.
+    pub retain: usize,
     /// Fault injection for the session test plane: after completing
     /// round `k` (checkpoint included), abort the run with an error as
     /// an in-process stand-in for `kill -9`. Never set by the CLI.
     pub crash_after: Option<usize>,
+}
+
+impl SessionConfig {
+    /// Default snapshot retention: the newest snapshot plus one
+    /// predecessor.
+    pub const DEFAULT_RETAIN: usize = 2;
 }
 
 /// Full experiment description (one Fig. 2 curve / Table 2 cell).

@@ -81,13 +81,33 @@ pub trait ComputePlane {
     fn scale(&mut self, lane: &mut RoundLane) -> Result<()>;
 }
 
+/// splitmix64 finalizer (Steele et al.): a full-avalanche u64 mixer, so
+/// every input bit affects every output bit.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-round selection seed: the `(seed, round)` pair routed through
+/// splitmix64 so nearby experiment seeds and rounds land on unrelated
+/// shuffle streams. The previous `seed ^ (round + 0xF00D)` derivation
+/// made distinct pairs collide outright — e.g. `(seed, round)` and
+/// `(seed ^ (round + 0xF00D) ^ (round' + 0xF00D), round')` selected the
+/// *same* participants — so sweeps over adjacent seeds produced
+/// correlated (or identical) participation schedules across runs.
+pub fn round_selection_seed(seed: u64, round: usize) -> u64 {
+    splitmix64(seed ^ splitmix64(round as u64))
+}
+
 /// Deterministic per-round participant selection under partial
 /// participation. Fills `order` with the participating client ids, one
 /// per round slot (`order.len() == take` afterwards). With full
 /// participation (`take == clients`) the order is the identity; with a
-/// subset it is a seeded shuffle of all clients truncated to `take` —
-/// exactly the PR 1 behavior, now shared between the single-process
-/// experiment and the sharded coordinator.
+/// subset it is a shuffle of all clients truncated to `take`, seeded by
+/// [`round_selection_seed`] — shared between the single-process
+/// experiment and the sharded coordinator so they can never diverge.
 pub fn select_participants(
     seed: u64,
     round: usize,
@@ -98,7 +118,7 @@ pub fn select_participants(
     order.clear();
     order.extend(0..clients);
     if take < clients {
-        let mut rng = XorShiftRng::new(seed ^ (round as u64 + 0xF00D));
+        let mut rng = XorShiftRng::new(round_selection_seed(seed, round));
         rng.shuffle(order);
     }
     order.truncate(take);
@@ -332,6 +352,45 @@ mod tests {
         // recycled buffer: contents fully replaced
         select_participants(7, 3, 6, 6, &mut a);
         assert_eq!(a, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn distinct_seed_round_pairs_select_distinct_permutations() {
+        // Regression for the old `seed ^ (round + 0xF00D)` derivation:
+        // pairs that collided under it (same xor) must now produce
+        // different permutations, and a grid of nearby seeds × rounds
+        // must be pairwise distinct.
+        let clients = 12;
+        let take = 8;
+        let mut perms: Vec<(u64, usize, Vec<usize>)> = Vec::new();
+        for seed in 0..6u64 {
+            for round in 0..6usize {
+                let mut order = Vec::new();
+                select_participants(seed, round, clients, take, &mut order);
+                for (s, r, p) in &perms {
+                    assert_ne!(
+                        p, &order,
+                        "(seed {seed}, round {round}) collides with (seed {s}, round {r})"
+                    );
+                }
+                perms.push((seed, round, order));
+            }
+        }
+
+        // An explicit old-scheme collision: pick (s1, r1), then derive
+        // the seed that made (s2, r2) select identically before the fix.
+        let (s1, r1, r2) = (7u64, 1usize, 2usize);
+        let s2 = s1 ^ (r1 as u64 + 0xF00D) ^ (r2 as u64 + 0xF00D);
+        assert_eq!(
+            s1 ^ (r1 as u64 + 0xF00D),
+            s2 ^ (r2 as u64 + 0xF00D),
+            "constructed pair must collide under the old derivation"
+        );
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        select_participants(s1, r1, clients, take, &mut a);
+        select_participants(s2, r2, clients, take, &mut b);
+        assert_ne!(a, b, "old-scheme collision survived the splitmix mix");
     }
 
     #[test]

@@ -29,12 +29,20 @@ COMMANDS:
            --target-accuracy --codec-workers --pipelined
            --compute-shards --transport mpsc|loopback|tcp --shard-procs
            --synth (PJRT-free synthetic compute plane)
-           --checkpoint-dir DIR --checkpoint-every K (durable session)
+           --checkpoint-dir DIR --checkpoint-every K
+           --checkpoint-retain N (durable session; keep newest N snapshots)
            --resume DIR (continue a killed run from its last snapshot;
-           byte-identical to the uninterrupted run))
+           byte-identical to the uninterrupted run)
+           --elastic-resize R:M[,R:M…] (grow/shrink the shard set to M
+           immediately before round R)
+           --elastic-replace R:S[,R:S…] (replace shard S with a fresh
+           worker immediately before round R))
   shard-worker  join a coordinator as one shard process
            (--connect HOST:PORT; spawned automatically by
            `run --shard-procs`, or launch by hand against `serve`)
+  session  inspect DIR — dump snapshot metadata (version, round, shard
+           assignment, client count, params checksum, size, valid/torn)
+           without decoding parameters
   fig1     LR schedule series (--epochs --steps-per-epoch --base-lr)
   fig2     accuracy vs transmitted data per config (--preset quick|paper
            --variant --task --sgd --bidirectional --clients --rounds)
@@ -94,10 +102,11 @@ fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()>
         .latest()?
         .ok_or_else(|| anyhow::anyhow!("no usable snapshot in {dir}"))?;
     println!(
-        "resuming {:?} at round {} ({} rounds total, {} snapshot clients)",
+        "resuming {:?} at round {} ({} rounds total, {} shards, {} snapshot clients)",
         state.cfg.name,
         state.next_round,
         state.cfg.rounds,
+        state.shards,
         state.clients.len()
     );
     let mut cfg = state.cfg.clone();
@@ -123,6 +132,7 @@ fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()>
                 cfg,
                 coordinator::ComputeSpec::Synthetic { manifest },
                 &exe,
+                coordinator::ElasticPlan::default(),
                 Some(state),
                 on_event,
             )?
@@ -143,6 +153,7 @@ fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()>
             cfg,
             coordinator::ComputeSpec::Real,
             &exe,
+            coordinator::ElasticPlan::default(),
             Some(state),
             on_event,
         )?
@@ -150,6 +161,50 @@ fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()>
         coordinator::run_experiment_resumed(cfg, state, on_event)?
     };
     finish_run(&log, out)
+}
+
+/// `fsfl session inspect DIR`: dump every snapshot's metadata without
+/// decoding server parameters or client states into memory.
+fn cmd_session_inspect(dir: &str) -> Result<()> {
+    if !std::path::Path::new(dir).is_dir() {
+        return Err(anyhow::anyhow!("no session directory at {dir}"));
+    }
+    let store = SessionStore::open(dir)?;
+    let metas = store.inspect()?;
+    if metas.is_empty() {
+        println!("no snapshots in {dir}");
+        return Ok(());
+    }
+    println!(
+        "{:<24} {:>10} {:>4} {:>6} {:>7} {:>8} {:>7}  {:<18} status",
+        "file", "bytes", "ver", "round", "shards", "clients", "rounds", "params-fnv"
+    );
+    for m in &metas {
+        let name = m
+            .path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| m.path.display().to_string());
+        match &m.status {
+            fsfl::session::SnapshotStatus::Valid(info) => println!(
+                "{:<24} {:>10} {:>4} {:>6} {:>7} {:>8} {:>7}  {:<18} valid{}",
+                name,
+                m.file_size,
+                info.version,
+                info.next_round,
+                info.shards,
+                info.clients,
+                info.rounds,
+                format!("{:016x}", info.params_checksum),
+                if info.synthetic { " (synth)" } else { "" },
+            ),
+            fsfl::session::SnapshotStatus::Torn(reason) => println!(
+                "{:<24} {:>10} {:>4} {:>6} {:>7} {:>8} {:>7}  {:<18} TORN: {reason}",
+                name, m.file_size, "-", "-", "-", "-", "-", "-",
+            ),
+        }
+    }
+    Ok(())
 }
 
 fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
@@ -195,10 +250,19 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         cfg.session = Some(SessionConfig {
             dir: dir.into(),
             every: flags.get_or("checkpoint-every", 1)?,
+            retain: flags.get_or("checkpoint-retain", SessionConfig::DEFAULT_RETAIN)?,
             crash_after: None,
         });
     } else {
         let _ = flags.get_or::<usize>("checkpoint-every", 1); // mark known
+        let _ = flags.get_or::<usize>("checkpoint-retain", SessionConfig::DEFAULT_RETAIN); // mark known
+    }
+    let mut plan = coordinator::ElasticPlan::default();
+    if let Some(p) = flags.pairs("elastic-replace")? {
+        plan.replace = p;
+    }
+    if let Some(p) = flags.pairs("elastic-resize")? {
+        plan.resize = p;
     }
     let resume_dir = flags.str_opt("resume");
     flags.reject_unknown()?;
@@ -233,12 +297,14 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         // socket: shard-procs implies TCP).
         cfg.transport = TransportKind::Tcp;
         let exe = std::env::current_exe()?;
-        coordinator::run_experiment_processes(
+        coordinator::run_experiment_processes_session(
             cfg,
             coordinator::ComputeSpec::Synthetic {
                 manifest: fsfl::fl::synth::demo_manifest(),
             },
             &exe,
+            plan,
+            None,
             on_event,
         )?
     } else if synth {
@@ -247,7 +313,7 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         coordinator::run_experiment_synthetic_session(
             cfg,
             fsfl::fl::synth::demo_manifest(),
-            coordinator::ElasticPlan::default(),
+            plan,
             None,
             on_event,
         )?
@@ -255,12 +321,16 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         // Real OS processes need a socket: shard-procs implies TCP.
         cfg.transport = TransportKind::Tcp;
         let exe = std::env::current_exe()?;
-        coordinator::run_experiment_processes(
+        coordinator::run_experiment_processes_session(
             cfg,
             coordinator::ComputeSpec::Real,
             &exe,
+            plan,
+            None,
             on_event,
         )?
+    } else if !plan.is_empty() {
+        coordinator::run_experiment_sharded_elastic(cfg, plan, on_event)?
     } else {
         coordinator::run_experiment_threaded(cfg, on_event)?
     };
@@ -273,6 +343,20 @@ fn main() -> Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
+    if cmd == "session" {
+        // `fsfl session inspect DIR` — positional sub-command, handled
+        // before the flag parser (which rejects positionals).
+        match (args.get(1).map(|s| s.as_str()), args.get(2)) {
+            (Some("inspect"), Some(dir)) => {
+                Flags::parse(&args[3..])?.reject_unknown()?;
+                return cmd_session_inspect(dir);
+            }
+            _ => {
+                eprintln!("usage: fsfl session inspect DIR\n\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
     let flags = Flags::parse(&args[1..])?;
     let artifacts = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
     let out = std::path::PathBuf::from(flags.str_or("out", "results"));

@@ -48,7 +48,11 @@ use crate::runtime::Optimizer;
 /// with a clear error instead of a checksum/desync mystery.
 /// v2: session plane (STATE pair, config session block, APPLY format
 /// byte for the encode-once downstream stream).
-pub const PROTOCOL_VERSION: u8 = 2;
+/// v3: the config session block carries the snapshot-retention knob,
+/// and the STATE install's `(shard, shards)` assignment became
+/// load-bearing — elastic resizing installs a changed shard count that
+/// workers now accept (previously forward-compat only).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 const TAG_INIT: u8 = 0x01;
 const TAG_ROUND: u8 = 0x02;
@@ -349,6 +353,7 @@ fn put_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
             put_bool(buf, true);
             put_str(buf, &s.dir.to_string_lossy());
             put_usize(buf, s.every);
+            put_usize(buf, s.retain);
             match s.crash_after {
                 None => put_bool(buf, false),
                 Some(k) => {
@@ -433,6 +438,7 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
     let session = if rd.bool_()? {
         let dir = std::path::PathBuf::from(rd.str_()?);
         let every = rd.usize_()?;
+        let retain = rd.usize_()?;
         let crash_after = if rd.bool_()? {
             Some(rd.usize_()?)
         } else {
@@ -441,6 +447,7 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
         Some(SessionConfig {
             dir,
             every,
+            retain,
             crash_after,
         })
     } else {
@@ -690,11 +697,14 @@ pub fn encode_stop(buf: &mut Vec<u8>) {
 /// install. Sent on resume (every shard) and on elastic membership
 /// changes (the shards whose assignment or client set changed).
 pub struct StateInstall {
-    /// The receiving shard's index (carried for forward compatibility;
-    /// current workers reject a changed assignment — replacements
-    /// re-join under the departed index).
+    /// The receiving shard's index. A worker keeps its index across an
+    /// elastic resize (cross-index reassignment stays rejected); only
+    /// replacements re-join under the departed index.
     pub shard: usize,
-    /// Total shard count under the membership.
+    /// Total shard count under the (possibly resized) membership.
+    /// Workers accept a changed count by rebuilding their client sets
+    /// under the new round-robin assignment before importing the
+    /// migrated states.
     pub shards: usize,
     /// Rounds already completed; local round counters fast-forward here.
     pub rounds_done: u64,
@@ -837,6 +847,63 @@ pub(crate) fn read_client_states(rd: &mut Rd) -> Result<Vec<ClientState>> {
         out.push(read_client_state(rd)?);
     }
     Ok(out)
+}
+
+/// Skip one slab block written by [`put_slabs`] without materializing
+/// the f32 vectors (used by the metadata-only snapshot inspector).
+fn skip_slabs(rd: &mut Rd) -> Result<()> {
+    let count = rd.usize_()?;
+    if count > rd.remaining() / 8 {
+        return Err(anyhow!(
+            "implausible slab count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    for _ in 0..count {
+        let len = rd.usize_()?;
+        let need = len
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("slab byte size overflows"))?;
+        rd.take(need)?;
+    }
+    Ok(())
+}
+
+/// Walk past a serialized client-state block, validating structure but
+/// allocating nothing — the metadata half of [`read_client_states`].
+/// Returns the client count.
+pub(crate) fn skip_client_states(rd: &mut Rd) -> Result<usize> {
+    let count = rd.usize_()?;
+    if count > rd.remaining() / 40 {
+        return Err(anyhow!(
+            "implausible client-state count {count} for {} remaining bytes",
+            rd.remaining()
+        ));
+    }
+    for _ in 0..count {
+        let _id = rd.usize_()?;
+        let _rng = rd.u64()?;
+        let _sched_global = rd.u64()?;
+        let _sched_period = rd.u64()?;
+        let n = rd.usize_()?;
+        if n > rd.remaining() / 8 {
+            return Err(anyhow!(
+                "implausible training-order length {n} for {} remaining bytes",
+                rd.remaining()
+            ));
+        }
+        rd.take(n * 8)?;
+        if rd.bool_()? {
+            skip_slabs(rd)?;
+        }
+        for _ in 0..2 {
+            // wopt then sopt: two slab blocks + the step counter each
+            skip_slabs(rd)?;
+            skip_slabs(rd)?;
+            rd.f32()?;
+        }
+    }
+    Ok(count)
 }
 
 /// Encode a STATE command into `buf`.
@@ -1288,6 +1355,7 @@ mod tests {
         cfg.session = Some(SessionConfig {
             dir: "ckpt/run-a".into(),
             every: 3,
+            retain: 7,
             crash_after: Some(5),
         });
         cfg

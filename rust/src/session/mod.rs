@@ -57,7 +57,11 @@ use crate::net::wire::{self, Rd};
 /// Snapshot layout revision; bumped on any incompatible change. A
 /// mismatch fails [`decode_snapshot`] with a descriptive error instead
 /// of a misparse.
-pub const SNAPSHOT_VERSION: u8 = 1;
+/// v2: the snapshot carries the live shard assignment (`shards`), so
+/// `--resume` rebuilds the post-resize worker set after an elastic
+/// resize, and the embedded config codec gained the session `retain`
+/// knob.
+pub const SNAPSHOT_VERSION: u8 = 2;
 
 /// First payload byte of every snapshot (distinct from all wire tags,
 /// so a misrouted file is caught immediately).
@@ -68,10 +72,10 @@ const SNAP_PREFIX: &str = "snap-";
 /// Snapshot filename extension.
 const SNAP_EXT: &str = ".fss";
 
-/// How many snapshots [`SessionStore::write`] keeps: the new one plus
-/// one predecessor, so a crash mid-write always leaves a valid
-/// fallback.
-const KEEP: usize = 2;
+/// Default snapshot retention for [`SessionStore::write`]: the new one
+/// plus one predecessor, so a crash mid-write always leaves a valid
+/// fallback (see [`SessionStore::with_retain`] for the GC knob).
+const KEEP: usize = crate::fl::SessionConfig::DEFAULT_RETAIN;
 
 /// The complete durable state of an experiment at a round boundary.
 pub struct SessionState {
@@ -84,6 +88,11 @@ pub struct SessionState {
     pub synthetic: bool,
     /// Rounds already completed; resume continues at this round index.
     pub next_round: usize,
+    /// The live shard assignment when the snapshot was taken. After an
+    /// elastic resize this differs from the config's `compute_shards`;
+    /// resume spawns exactly this many workers so the post-resize
+    /// membership is rebuilt as checkpointed.
+    pub shards: usize,
     /// The model contract, as `manifest.tsv` text.
     pub manifest_tsv: String,
     /// Server parameters as a named tensor bundle (validated against
@@ -258,6 +267,7 @@ pub fn encode_snapshot(buf: &mut Vec<u8>, st: &SessionState) -> Result<()> {
     wire::encode_config(&mut cfg_bytes, &st.cfg);
     wire::put_bytes(buf, &cfg_bytes);
     wire::put_usize(buf, st.next_round);
+    wire::put_usize(buf, st.shards);
     wire::put_str(buf, &st.manifest_tsv);
     let mut bundle = Vec::new();
     write_bundle_to(&mut bundle, &st.params)?;
@@ -273,11 +283,31 @@ pub fn encode_snapshot(buf: &mut Vec<u8>, st: &SessionState) -> Result<()> {
     Ok(())
 }
 
-/// Inverse of [`encode_snapshot`]. Tag/version mismatches and any
-/// structural inconsistency error descriptively; a fresh state is
-/// built or nothing is (no partial apply).
-pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
-    let mut rd = Rd::new(payload);
+/// The shared header prefix of a snapshot payload — everything before
+/// the round-metrics block. Read by ONE function
+/// ([`read_snapshot_header`]) for both [`decode_snapshot`] and the
+/// metadata-only inspector, so the two walks can never skew when the
+/// layout changes.
+struct SnapshotHeader<'a> {
+    /// Layout revision the file carries (already validated).
+    version: u8,
+    /// Whether the run executed on the synthetic compute plane.
+    synthetic: bool,
+    /// Raw config block (net/wire config codec), not yet decoded.
+    cfg: &'a [u8],
+    /// Rounds already completed.
+    next_round: usize,
+    /// The live shard assignment when the snapshot was taken.
+    shards: usize,
+    /// The model contract, as `manifest.tsv` text.
+    manifest_tsv: String,
+    /// Raw server-params FSTB bundle, not yet decoded.
+    bundle: &'a [u8],
+}
+
+/// Read (and validate tag/version of) a snapshot payload's header
+/// prefix, leaving `rd` positioned at the round-metrics block.
+fn read_snapshot_header<'a>(rd: &mut Rd<'a>) -> Result<SnapshotHeader<'a>> {
     let tag = rd.u8()?;
     if tag != SNAP_TAG {
         return Err(anyhow!(
@@ -290,11 +320,25 @@ pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
             "snapshot version mismatch: file is v{version}, this binary reads v{SNAPSHOT_VERSION}"
         ));
     }
-    let synthetic = rd.bool_()?;
-    let cfg = wire::decode_config(rd.bytes()?)?;
-    let next_round = rd.usize_()?;
-    let manifest_tsv = rd.str_()?;
-    let mut bundle_bytes = rd.bytes()?;
+    Ok(SnapshotHeader {
+        version,
+        synthetic: rd.bool_()?,
+        cfg: rd.bytes()?,
+        next_round: rd.usize_()?,
+        shards: rd.usize_()?,
+        manifest_tsv: rd.str_()?,
+        bundle: rd.bytes()?,
+    })
+}
+
+/// Inverse of [`encode_snapshot`]. Tag/version mismatches and any
+/// structural inconsistency error descriptively; a fresh state is
+/// built or nothing is (no partial apply).
+pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
+    let mut rd = Rd::new(payload);
+    let h = read_snapshot_header(&mut rd)?;
+    let cfg = wire::decode_config(h.cfg)?;
+    let mut bundle_bytes = h.bundle;
     let params = read_bundle_from(&mut bundle_bytes).context("snapshot params bundle")?;
     let n = rd.usize_()?;
     if n > rd.remaining() {
@@ -311,9 +355,10 @@ pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
     rd.done()?;
     Ok(SessionState {
         cfg,
-        synthetic,
-        next_round,
-        manifest_tsv,
+        synthetic: h.synthetic,
+        next_round: h.next_round,
+        shards: h.shards,
+        manifest_tsv: h.manifest_tsv,
         params,
         rounds,
         clients,
@@ -328,15 +373,26 @@ pub fn decode_snapshot(payload: &[u8]) -> Result<SessionState> {
 /// and newest-valid fallback.
 pub struct SessionStore {
     dir: PathBuf,
+    /// How many snapshots [`SessionStore::write`] keeps (≥ 1).
+    retain: usize,
 }
 
 impl SessionStore {
-    /// Open (creating if needed) a session directory.
+    /// Open (creating if needed) a session directory with the default
+    /// retention ([`crate::fl::SessionConfig::DEFAULT_RETAIN`]).
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating session dir {}", dir.display()))?;
-        Ok(Self { dir })
+        Ok(Self { dir, retain: KEEP })
+    }
+
+    /// Set how many snapshots each [`SessionStore::write`] keeps.
+    /// Values below 1 are clamped to 1 (the snapshot just written is
+    /// never pruned).
+    pub fn with_retain(mut self, retain: usize) -> Self {
+        self.retain = retain.max(1);
+        self
     }
 
     /// The directory this store writes into.
@@ -376,8 +432,14 @@ impl SessionStore {
     }
 
     /// Write `st` as an atomic snapshot (tmp file → fsync → rename),
-    /// then prune to the newest [`KEEP`] snapshots. Returns the final
-    /// path.
+    /// then prune to the newest `retain` snapshots (see
+    /// [`SessionStore::with_retain`]). Returns the final path.
+    ///
+    /// Prune failures are surfaced: a full or read-only disk that keeps
+    /// `remove_file` from succeeding would otherwise accumulate
+    /// snapshots unnoticed until the volume fills. The snapshot itself
+    /// is already durable on disk when the error is returned — the
+    /// caller loses nothing but must hear about the failing GC.
     pub fn write(&self, st: &SessionState) -> Result<PathBuf> {
         let mut payload = Vec::new();
         encode_snapshot(&mut payload, st)?;
@@ -394,14 +456,17 @@ impl SessionStore {
         }
         std::fs::rename(&tmp, &finalp)
             .with_context(|| format!("publishing {}", finalp.display()))?;
-        // Prune: keep the newest KEEP so a later torn write always has a
-        // valid fallback. Best effort — a remove failure never fails the
-        // checkpoint itself.
-        if let Ok(all) = self.snapshots() {
-            if all.len() > KEEP {
-                for (_, p) in &all[..all.len() - KEEP] {
-                    let _ = std::fs::remove_file(p);
-                }
+        // Prune: keep the newest `retain` so a later torn write always
+        // has a valid fallback.
+        let all = self.snapshots()?;
+        if all.len() > self.retain {
+            for (_, p) in &all[..all.len() - self.retain] {
+                std::fs::remove_file(p).with_context(|| {
+                    format!(
+                        "pruning old snapshot {} (snapshots are accumulating)",
+                        p.display()
+                    )
+                })?;
             }
         }
         Ok(finalp)
@@ -438,6 +503,125 @@ impl SessionStore {
         }
         Ok(None)
     }
+
+    /// Metadata for every snapshot file in the store, newest first —
+    /// what `fsfl session inspect DIR` prints. Torn/corrupt files are
+    /// reported as [`SnapshotStatus::Torn`] entries instead of failing
+    /// the listing, so an operator sees *which* file is damaged.
+    pub fn inspect(&self) -> Result<Vec<SnapshotMeta>> {
+        let mut all = self.snapshots()?;
+        all.reverse();
+        Ok(all
+            .into_iter()
+            .map(|(_, p)| Self::inspect_file(p))
+            .collect())
+    }
+
+    /// Metadata for one snapshot file without materializing the server
+    /// parameters or client states: the frame layer still verifies the
+    /// whole-file checksum, but the payload walk *skips over* the
+    /// params bundle and client-state slabs instead of decoding them
+    /// into tensors, so peak memory stays at one file read (no 4×
+    /// `Vec<f32>` expansion). Infallible per file: damage — including a
+    /// file pruned away by a live run between listing and read — is
+    /// reported in the returned [`SnapshotMeta::status`], never as an
+    /// error that would hide the rest of a listing.
+    pub fn inspect_file(path: impl Into<PathBuf>) -> SnapshotMeta {
+        let path = path.into();
+        let file_size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let status = match Self::inspect_payload_of(&path) {
+            Ok(info) => SnapshotStatus::Valid(info),
+            Err(e) => SnapshotStatus::Torn(format!("{e:#}")),
+        };
+        SnapshotMeta {
+            path,
+            file_size,
+            status,
+        }
+    }
+
+    /// The checksum-verified, metadata-only payload walk behind
+    /// [`SessionStore::inspect_file`].
+    fn inspect_payload_of(path: &Path) -> Result<SnapshotInfo> {
+        let bytes = std::fs::read(path)?;
+        let mut r = bytes.as_slice();
+        let mut payload = Vec::new();
+        if !frame::read_frame(&mut r, &mut payload, frame::MAX_PAYLOAD)? {
+            return Err(anyhow!("empty file"));
+        }
+        let mut rd = Rd::new(&payload);
+        // The exact header walk decode_snapshot uses — the config and
+        // params blocks come back as raw slices, which the inspector
+        // checksums instead of decoding.
+        let h = read_snapshot_header(&mut rd)?;
+        let params_bytes = h.bundle.len();
+        let params_checksum = frame::fnv1a(h.bundle);
+        let n = rd.usize_()?;
+        if n > rd.remaining() {
+            return Err(anyhow!(
+                "implausible round count {n} for {} remaining bytes",
+                rd.remaining()
+            ));
+        }
+        for _ in 0..n {
+            read_round_metrics(&mut rd)?; // small; validates structure
+        }
+        let clients = wire::skip_client_states(&mut rd)?;
+        rd.done()?;
+        Ok(SnapshotInfo {
+            version: h.version,
+            synthetic: h.synthetic,
+            next_round: h.next_round,
+            shards: h.shards,
+            rounds: n,
+            clients,
+            params_bytes,
+            params_checksum,
+        })
+    }
+}
+
+/// Whether a snapshot file parsed cleanly (metadata inside) or is
+/// damaged (torn write, bit rot, version mismatch — reason inside).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotStatus {
+    /// The file's frame checksum and payload structure verified.
+    Valid(SnapshotInfo),
+    /// The file cannot be used; the string is the rendered error chain.
+    Torn(String),
+}
+
+/// Parsed snapshot metadata (no parameters or client states are
+/// materialized to produce this — see [`SessionStore::inspect_file`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotInfo {
+    /// Snapshot layout revision the file carries.
+    pub version: u8,
+    /// Whether the run executed on the synthetic compute plane.
+    pub synthetic: bool,
+    /// Rounds completed when the snapshot was taken.
+    pub next_round: usize,
+    /// The live shard assignment when the snapshot was taken.
+    pub shards: usize,
+    /// How many per-round metric records the snapshot carries.
+    pub rounds: usize,
+    /// How many client states the snapshot carries.
+    pub clients: usize,
+    /// Size of the embedded server-parameter bundle in bytes.
+    pub params_bytes: usize,
+    /// FNV-1a checksum of the embedded server-parameter bundle.
+    pub params_checksum: u64,
+}
+
+/// One snapshot file's inspection record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotMeta {
+    /// The snapshot file.
+    pub path: PathBuf,
+    /// On-disk file size in bytes.
+    pub file_size: u64,
+    /// Valid metadata or the damage report.
+    pub status: SnapshotStatus,
 }
 
 #[cfg(test)]
@@ -462,6 +646,7 @@ mod tests {
             cfg,
             synthetic: true,
             next_round: 4,
+            shards: 2,
             manifest_tsv: m.to_tsv(),
             params: SessionState::bundle_params(&params),
             rounds: vec![RoundMetrics {
@@ -513,6 +698,7 @@ mod tests {
         assert_eq!(format!("{:?}", a.cfg), format!("{:?}", b.cfg));
         assert_eq!(a.synthetic, b.synthetic);
         assert_eq!(a.next_round, b.next_round);
+        assert_eq!(a.shards, b.shards);
         assert_eq!(a.manifest_tsv, b.manifest_tsv);
         assert_eq!(a.params, b.params);
         assert_eq!(a.rounds, b.rounds);
@@ -576,6 +762,98 @@ mod tests {
         // and loading the torn file directly is a descriptive error
         let err = format!("{:#}", SessionStore::load(&torn).unwrap_err());
         assert!(err.contains("mid-frame"), "undescriptive: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_is_configurable_and_prune_failures_surface() {
+        let dir = std::env::temp_dir().join(format!("fsfl_session_retain_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // retain 3 keeps three snapshots where the default keeps two
+        let store = SessionStore::open(&dir).unwrap().with_retain(3);
+        let mut st = sample_state();
+        for round in 1..=5usize {
+            st.next_round = round;
+            store.write(&st).unwrap();
+        }
+        assert_eq!(
+            store
+                .snapshots()
+                .unwrap()
+                .iter()
+                .map(|(r, _)| *r)
+                .collect::<Vec<_>>(),
+            vec![3, 4, 5],
+            "retain=3 must keep the newest three"
+        );
+        // retain < 1 clamps to 1: only the newest survives a write
+        let store = SessionStore::open(&dir).unwrap().with_retain(0);
+        st.next_round = 6;
+        store.write(&st).unwrap();
+        assert_eq!(
+            store
+                .snapshots()
+                .unwrap()
+                .iter()
+                .map(|(r, _)| *r)
+                .collect::<Vec<_>>(),
+            vec![6]
+        );
+        // A prune target that cannot be removed (a directory wearing a
+        // snapshot name — remove_file fails on it, standing in for a
+        // read-only/full disk) must surface, not be swallowed.
+        let blocker = store.snapshot_path(1);
+        std::fs::create_dir_all(blocker.join("x")).unwrap();
+        st.next_round = 7;
+        let err = format!("{:#}", store.write(&st).unwrap_err());
+        assert!(
+            err.contains("pruning old snapshot"),
+            "prune failure swallowed: {err}"
+        );
+        // …and the snapshot itself still landed before the GC error.
+        assert!(store.snapshot_path(7).is_file());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inspect_reports_metadata_without_decoding_params() {
+        let dir = std::env::temp_dir().join(format!("fsfl_session_inspect_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SessionStore::open(&dir).unwrap();
+        let st = sample_state();
+        let path = store.write(&st).unwrap();
+        // one torn file alongside the valid one
+        let torn = store.snapshot_path(9);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+
+        let metas = store.inspect().unwrap();
+        assert_eq!(metas.len(), 2, "both files listed");
+        // newest first: the torn snapshot-9 file leads
+        assert_eq!(metas[0].path, torn);
+        assert_eq!(metas[0].file_size, (bytes.len() / 2) as u64);
+        match &metas[0].status {
+            SnapshotStatus::Torn(reason) => {
+                assert!(reason.contains("mid-frame"), "undescriptive: {reason}")
+            }
+            SnapshotStatus::Valid(_) => panic!("torn file reported valid"),
+        }
+        match &metas[1].status {
+            SnapshotStatus::Valid(info) => {
+                assert_eq!(info.version, SNAPSHOT_VERSION);
+                assert!(info.synthetic);
+                assert_eq!(info.next_round, 4);
+                assert_eq!(info.shards, 2);
+                assert_eq!(info.rounds, 1);
+                assert_eq!(info.clients, 1);
+                assert!(info.params_bytes > 0);
+                // the checksum is of the exact embedded bundle bytes
+                let mut bundle = Vec::new();
+                write_bundle_to(&mut bundle, &st.params).unwrap();
+                assert_eq!(info.params_checksum, frame::fnv1a(&bundle));
+            }
+            SnapshotStatus::Torn(r) => panic!("valid file reported torn: {r}"),
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -11,7 +11,10 @@
 //! 2. **Elastic membership** — shards leaving and replacements
 //!    re-joining at round boundaries (state migrating over the wire
 //!    `STATE` pair) leave the `RunLog` byte-identical to the
-//!    static-membership run.
+//!    static-membership run; the shard set also **resizes** N→M (grow
+//!    2→3, shrink 3→1, combined churn, a resize straddling a
+//!    crash/`--resume` boundary, and listener-admitted late joiners)
+//!    with the same byte-identity guarantee.
 //! 3. **Robustness** — a torn (kill-mid-write) snapshot is skipped in
 //!    favor of the previous valid one; malformed client states are
 //!    rejected before anything is mutated.
@@ -27,7 +30,7 @@ use std::process::{Command, Stdio};
 
 use common::*;
 
-use fsfl::coordinator::{self, ElasticPlan};
+use fsfl::coordinator::{self, ComputeSpec, ElasticPlan};
 use fsfl::data::TaskKind;
 use fsfl::fl::{
     Client, ExperimentConfig, LrSchedule, Protocol, ScheduleKind, SessionConfig, TransportKind,
@@ -36,8 +39,14 @@ use fsfl::model::ParamSet;
 use fsfl::session::SessionStore;
 
 /// A unique temp dir per test leg (removed on success; best effort).
+/// CI points `FSFL_SESSION_TMP` at a known root so checkpoint dirs of
+/// *failed* legs survive for the artifact upload.
 fn tmp_dir(tag: &str) -> PathBuf {
-    let d = std::env::temp_dir().join(format!("fsfl_session_{}_{tag}", std::process::id()));
+    let root = std::env::var_os("FSFL_SESSION_TMP")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    let _ = std::fs::create_dir_all(&root);
+    let d = root.join(format!("fsfl_session_{}_{tag}", std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     std::fs::create_dir_all(&d).unwrap();
     d
@@ -84,6 +93,7 @@ fn crashed_run_resumes_byte_identical_across_transports() {
             cfg.session = Some(SessionConfig {
                 dir: dir.clone(),
                 every: 1,
+                retain: SessionConfig::DEFAULT_RETAIN,
                 crash_after: Some(2),
             });
             let err = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
@@ -123,6 +133,7 @@ fn resume_rejects_a_mismatched_config() {
     cfg.session = Some(SessionConfig {
         dir: dir.clone(),
         every: 1,
+        retain: SessionConfig::DEFAULT_RETAIN,
         crash_after: Some(1),
     });
     let _ = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
@@ -159,6 +170,7 @@ fn shard_replacement_at_round_boundaries_is_byte_identical() {
         // re-joins through INIT/READY and is rehydrated over the wire.
         let plan = ElasticPlan {
             replace: vec![(1, 0), (2, 2), (4, 1)],
+            ..Default::default()
         };
         let log = coordinator::run_experiment_synthetic_session(
             scfg(transport, 3),
@@ -186,6 +198,179 @@ fn shard_replacement_at_round_boundaries_is_byte_identical() {
     }
 }
 
+#[test]
+fn resizing_the_shard_set_is_byte_identical_across_transports() {
+    let m = manifest();
+    for transport in TRANSPORTS {
+        let reference =
+            coordinator::run_experiment_synthetic(scfg(transport, 2), m.clone(), |_| {}).unwrap();
+        // Grow 2→3 before round 2, shrink 3→1 before round 4 — the
+        // N→M→(smaller) churn script of the acceptance grid. Client
+        // state (on the synth plane: the replica params + round
+        // counters) migrates under the recomputed assignment both ways.
+        let plan = ElasticPlan {
+            resize: vec![(2, 3), (4, 1)],
+            ..Default::default()
+        };
+        let log = coordinator::run_experiment_synthetic_session(
+            scfg(transport, 2),
+            m.clone(),
+            plan,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            log.rounds,
+            reference.rounds,
+            "{}: resizing changed the RunLog",
+            transport.name()
+        );
+        if transport.is_wire() {
+            let churn = log.wire.expect("wire transports measure traffic");
+            let still = reference.wire.expect("wire transports measure traffic");
+            assert!(
+                churn.total() > still.total(),
+                "{}: resize handshakes + state migration must show up in measured wire bytes",
+                transport.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn combined_replace_and_resize_churn_is_byte_identical() {
+    let m = manifest();
+    let reference =
+        coordinator::run_experiment_synthetic(scfg(TransportKind::Tcp, 2), m.clone(), |_| {})
+            .unwrap();
+    // A full churn script: replace shard 1, grow 2→3 at the same
+    // boundary, replace a grown shard, then shrink back 3→2 — ending at
+    // the starting count (the N→M→N cycle).
+    let plan = ElasticPlan {
+        replace: vec![(1, 1), (3, 2)],
+        resize: vec![(1, 3), (4, 2)],
+    };
+    let log = coordinator::run_experiment_synthetic_session(
+        scfg(TransportKind::Tcp, 2),
+        m.clone(),
+        plan,
+        None,
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "combined replace+resize churn changed the RunLog"
+    );
+}
+
+#[test]
+fn resize_across_a_crash_resume_boundary_is_byte_identical() {
+    let m = manifest();
+    for transport in TRANSPORTS {
+        let tag = transport.name();
+        let reference =
+            coordinator::run_experiment_synthetic(scfg(transport, 2), m.clone(), |_| {}).unwrap();
+
+        // Victim: grow 2→3 before round 2, checkpoint every round,
+        // crash after round 3 — so the newest snapshot was taken by the
+        // *post-resize* membership and records 3 shards.
+        let dir = tmp_dir(&format!("resize_resume_{tag}"));
+        let mut cfg = scfg(transport, 2);
+        cfg.session = Some(SessionConfig {
+            dir: dir.clone(),
+            every: 1,
+            retain: SessionConfig::DEFAULT_RETAIN,
+            crash_after: Some(3),
+        });
+        let plan = ElasticPlan {
+            resize: vec![(2, 3)],
+            ..Default::default()
+        };
+        let err = coordinator::run_experiment_synthetic_session(
+            cfg,
+            m.clone(),
+            plan,
+            None,
+            |_| {},
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected crash"),
+            "{tag}: expected the injected crash, got: {err:#}"
+        );
+
+        // The snapshot carries the live (resized) assignment…
+        let store = SessionStore::open(&dir).unwrap();
+        let state = store.latest().unwrap().expect("snapshot written");
+        assert_eq!(state.next_round, 4, "{tag}: crash after round 3");
+        assert_eq!(
+            state.shards, 3,
+            "{tag}: snapshot must record the post-resize shard count"
+        );
+        // …and resume rebuilds exactly that membership (the config
+        // still says compute_shards = 2) and finishes byte-identically.
+        let resumed = coordinator::run_experiment_synthetic_session(
+            state.cfg.clone(),
+            m.clone(),
+            ElasticPlan::default(),
+            Some(state),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            resumed.rounds, reference.rounds,
+            "{tag}: resume across the resize diverged from the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn serve_admits_late_joiners_from_its_listener_for_resize_and_replace() {
+    use std::net::TcpListener;
+
+    let m = manifest();
+    let reference =
+        coordinator::run_experiment_synthetic(scfg(TransportKind::Tcp, 2), m.clone(), |_| {})
+            .unwrap();
+
+    // The external-autoscaler shape: workers are launched *outside* the
+    // coordinator and join through its TCP listener. 2 initial workers
+    // + 1 for the grown slot + 1 for the replacement all connect up
+    // front; the surplus wait in the accept backlog until their
+    // membership boundary admits them.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || coordinator::join_shard(&addr.to_string()))
+        })
+        .collect();
+    let plan = ElasticPlan {
+        replace: vec![(3, 0)],
+        resize: vec![(1, 3), (4, 2)],
+    };
+    let log = coordinator::serve_session(
+        scfg(TransportKind::Tcp, 2),
+        &listener,
+        ComputeSpec::Synthetic { manifest: m.clone() },
+        plan,
+        None,
+        || Ok(()),
+        |_| {},
+    )
+    .unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "listener-admitted churn changed the RunLog"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // 3 · robustness
 // ---------------------------------------------------------------------------
@@ -198,6 +383,7 @@ fn torn_snapshot_falls_back_to_previous_checkpoint_on_resume() {
     cfg.session = Some(SessionConfig {
         dir: dir.clone(),
         every: 1,
+        retain: SessionConfig::DEFAULT_RETAIN,
         crash_after: Some(3),
     });
     let _ = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
@@ -305,6 +491,9 @@ fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
     let out_victim = base.join("out_victim");
     let out_resumed = base.join("out_resumed");
     let ckpt = base.join("ckpt");
+    // The run grows 2→3 shards before round 2, so the SIGKILL below
+    // (after three round lines) lands *after* the resize: the resumed
+    // run must rebuild the post-resize membership from the snapshot.
     let run_args = [
         "run",
         "--synth",
@@ -314,6 +503,8 @@ fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
         "6",
         "--compute-shards",
         "2",
+        "--elastic-resize",
+        "2:3",
         "--transport",
         "loopback",
         "--seed",
@@ -330,8 +521,9 @@ fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
         .unwrap();
     assert!(status.success(), "reference run failed");
 
-    // Victim: checkpoint every round; SIGKILL it after two round lines
-    // (a round line is printed only after its snapshot is on disk).
+    // Victim: checkpoint every round; SIGKILL it after three round
+    // lines — past the 2→3 resize — (a round line is printed only
+    // after its snapshot is on disk).
     let mut child = Command::new(exe)
         .args(run_args)
         .arg("--checkpoint-dir")
@@ -349,7 +541,7 @@ fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
             let line = line.unwrap_or_default();
             if line.starts_with("round") {
                 round_lines += 1;
-                if round_lines >= 2 {
+                if round_lines >= 3 {
                     break;
                 }
             }

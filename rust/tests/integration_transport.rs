@@ -238,6 +238,102 @@ fn ready_round_trips_manifest_and_params() {
     assert_eq!(got.tensors, init.tensors, "param bits must survive");
 }
 
+#[test]
+fn resize_bearing_state_and_init_frames_round_trip_and_reject_truncation() {
+    use fsfl::fl::OptSnapshot;
+    use fsfl::net::wire::{StateCmd, StateInstall};
+
+    let m = manifest();
+    let mut params = zero_params(&m);
+    params.tensors[0][3] = -1.5;
+    let client = |id: usize| fsfl::fl::ClientState {
+        id,
+        rng: 0x1234_5678_9ABC_DEF0 + id as u64,
+        sched_global: 11,
+        sched_period: 4,
+        train_order: vec![2, 0, 1],
+        residual: Some(vec![vec![0.5, -0.25], vec![]]),
+        wopt: OptSnapshot {
+            m: vec![vec![0.1]],
+            v: vec![vec![0.2]],
+            t: 3.0,
+        },
+        sopt: OptSnapshot {
+            m: vec![],
+            v: vec![],
+            t: 0.0,
+        },
+    };
+
+    // The resize install: a worker that joined as shard 1 of 2 is
+    // rehydrated under the *resized* 1-of-3 assignment — the
+    // previously forward-compat-only `(shard, shards)` fields are now
+    // load-bearing, so pin their exact round-trip plus the migrated
+    // client set that the new round-robin assignment owns.
+    let cmd = StateCmd {
+        collect: false,
+        install: Some(StateInstall {
+            shard: 1,
+            shards: 3,
+            rounds_done: 2,
+            params: params.clone(),
+            clients: vec![client(1), client(4)],
+        }),
+    };
+    let mut buf = Vec::new();
+    wire::encode_state_cmd(&mut buf, &cmd);
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::State);
+    let back = wire::decode_state_cmd(&buf, &m).unwrap();
+    let inst = back.install.expect("install lost");
+    assert_eq!((inst.shard, inst.shards, inst.rounds_done), (1, 3, 2));
+    assert_eq!(inst.params, params, "absolute params must survive bit-exact");
+    assert_eq!(inst.clients, vec![client(1), client(4)]);
+
+    // every truncation errors, never panics, never yields a partial install
+    for cut in 1..buf.len() {
+        assert!(
+            wire::decode_state_cmd(&buf[..cut], &m).is_err(),
+            "truncated resize STATE at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+
+    // a degenerate re-assignment (shard ≥ shards) is rejected outright
+    let bad = StateCmd {
+        collect: false,
+        install: Some(StateInstall {
+            shard: 3,
+            shards: 3,
+            rounds_done: 0,
+            params: params.clone(),
+            clients: Vec::new(),
+        }),
+    };
+    wire::encode_state_cmd(&mut buf, &bad);
+    assert!(
+        wire::decode_state_cmd(&buf, &m).is_err(),
+        "shard 3 of 3 must be rejected"
+    );
+
+    // The late-joiner INIT: a grown slot's handshake carries the
+    // post-resize count (shard 2 of 3 while the config still says
+    // compute_shards = 2).
+    let mut cfg = ExperimentConfig::quick("t", TaskKind::CifarLike, fsfl::fl::Protocol::Fsfl);
+    cfg.compute_shards = 2;
+    wire::encode_init(&mut buf, 2, 3, &cfg, &ComputeSpec::Synthetic { manifest: m.clone() });
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::Init);
+    let init = wire::decode_init(&buf).unwrap();
+    assert_eq!((init.shard, init.shards), (2, 3));
+    assert_eq!(init.cfg.compute_shards, 2, "the config crosses unmodified");
+    for cut in 1..buf.len() {
+        assert!(
+            wire::decode_init(&buf[..cut]).is_err(),
+            "truncated late-joiner INIT at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 3 · differential conformance
 // ---------------------------------------------------------------------------
