@@ -82,21 +82,28 @@ use crate::fl::scheduler::{self, ScheduleMode};
 use crate::fl::synth::{synth_eval, SyntheticPlane};
 use crate::fl::{
     build_setup, evaluate_params, Client, ClientState, EvalReport, Experiment, ExperimentCompute,
-    ExperimentConfig, ProtocolConfig, RoundLane, Server, TransportKind,
+    ExperimentConfig, OnShardLoss, ProtocolConfig, RoundLane, RoundPolicy, Server, TransportKind,
 };
-use crate::metrics::{RoundMetrics, RunLog, ScaleStats, WireStats};
+use crate::metrics::{RoundMetrics, RunLog, ScaleStats, ShardEvent, ShardEventKind, WireStats};
 use crate::model::params::Delta;
 use crate::model::{Group, Manifest, ParamSet};
 use crate::net::wire::{self, CmdTag, MsgTag, StateCmd, StateInstall};
 use crate::net::{loopback_pair, FrameSink, FrameSource, TcpTransport, Transport};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::session::{SessionState, SessionStore};
+use crate::supervise::{Backoff, Clock, MonotonicClock};
 
 pub use crate::net::wire::ComputeSpec;
 
-/// How long [`serve`] waits for all shard workers to join before giving
-/// up (the liveness callback can fail it earlier).
-const JOIN_TIMEOUT: Duration = Duration::from_secs(120);
+/// Poll granularity of supervised waits: how often a blocked control
+/// loop wakes to send heartbeats, advance a scripted clock and check
+/// deadlines. Wall-clock — but only as a wakeup, never as a timing
+/// source (all deadlines read the [`Clock`]).
+const SUP_POLL: Duration = Duration::from_millis(1);
+
+/// A silent-but-connected shard is declared dead when it has not echoed
+/// a heartbeat for this many heartbeat intervals while idle.
+const LEASE_INTERVALS: u32 = 3;
 
 /// Events streamed from the compute thread(s) to observers.
 #[derive(Debug)]
@@ -245,7 +252,12 @@ fn run_single_thread(cfg: ExperimentConfig, on_event: &mut impl FnMut(&Event)) -
                 let _ = tx.send(Event::Finished(log));
             }
             Err(e) => {
-                let _ = tx.send(Event::Failed(format!("{e:#}")));
+                let msg = format!("{e:#}");
+                // If the receiver is gone the failure would vanish
+                // silently — at least leave it on stderr.
+                if tx.send(Event::Failed(msg.clone())).is_err() {
+                    eprintln!("compute thread failed with no listener: {msg}");
+                }
             }
         }
     });
@@ -313,6 +325,9 @@ enum ShardMsg {
     },
     /// Fatal shard error (rendered error chain).
     Failed { shard: usize, msg: String },
+    /// Heartbeat echo: the shard acknowledges the coordinator's probe,
+    /// returning its nonce (liveness lease renewal + recovery barrier).
+    Heartbeat { shard: usize, nonce: u64 },
     /// A wire connection closed or corrupted (reader-local; `conn` is
     /// the connection generation, so stale reports from replaced shards
     /// are ignored).
@@ -344,6 +359,13 @@ enum ShardCmd {
     },
     /// Session plane: install replica/client state and/or collect it.
     State(StateCmd),
+    /// Liveness probe: the shard echoes the nonce back as
+    /// [`ShardMsg::Heartbeat`] as soon as it next reads its command
+    /// channel. A monotonically increasing nonce doubles as the
+    /// recovery barrier: once a shard echoes nonce N, FIFO ordering
+    /// guarantees no message it sent before receiving N is still in
+    /// flight.
+    Heartbeat { nonce: u64 },
     /// Shut down cleanly.
     Stop,
 }
@@ -436,6 +458,10 @@ impl ShardTx {
                     wire::encode_state_cmd(buf, &state);
                     sink.send(buf)
                 }
+                ShardCmd::Heartbeat { nonce } => {
+                    wire::encode_heartbeat_cmd(buf, nonce);
+                    sink.send(buf)
+                }
                 ShardCmd::Stop => {
                     wire::encode_stop(buf);
                     sink.send(buf)
@@ -449,9 +475,44 @@ impl ShardTx {
 // Session context + worker admission
 // ---------------------------------------------------------------------------
 
+/// Where a scripted chaos death strikes its shard worker (fault
+/// injection for the recovery conformance tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosPoint {
+    /// Die silently upon *receiving* the ROUND command for the scripted
+    /// round — mid-round, before any lane is returned.
+    MidRound,
+    /// Die silently upon receiving the first collecting STATE command
+    /// after completing the scripted round (mid-checkpoint-collect).
+    MidCollect,
+    /// Stop serving upon receiving the scripted round's ROUND command
+    /// but keep the connection open and keep draining commands — a
+    /// silent straggler, detectable only by deadline/lease expiry.
+    Stall,
+}
+
+/// One scripted shard death: worker `shard` dies at `point` of round
+/// `round`. Consumed by the *first* admission of that shard index, so a
+/// respawned replacement runs clean. "Silently" means no FAILED
+/// message: the coordinator must notice via connection teardown,
+/// deadline or lease — exactly like a `kill -9`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosDeath {
+    /// Which shard index dies.
+    pub shard: usize,
+    /// The (0-based) round whose command triggers the death. The
+    /// scripted worker counts the ROUND commands it receives, so the
+    /// trigger is exact as long as the chaos shard is the round's first
+    /// casualty (single-fault injection).
+    pub round: usize,
+    /// Where within the round it dies.
+    pub point: ChaosPoint,
+}
+
 /// Everything session-related the control loop needs: the snapshot
 /// store + cadence, an optional resume state, the scripted membership
-/// plan and crash injection.
+/// plan, crash/chaos injection and the time source for supervised
+/// waits.
 struct SessionCtx {
     store: Option<SessionStore>,
     every: usize,
@@ -459,6 +520,11 @@ struct SessionCtx {
     resume: Option<SessionState>,
     plan: ElasticPlan,
     synthetic: bool,
+    /// Time source for heartbeats, deadlines and backoff sleeps —
+    /// monotonic in production, scripted in the chaos tests.
+    clock: Arc<dyn Clock>,
+    /// Scripted shard deaths, handed to workers at admission.
+    chaos: Vec<ChaosDeath>,
 }
 
 impl SessionCtx {
@@ -492,6 +558,8 @@ impl SessionCtx {
             resume,
             plan,
             synthetic: matches!(compute, ComputeSpec::Synthetic { .. }),
+            clock: Arc::new(MonotonicClock::new()),
+            chaos: Vec::new(),
         })
     }
 }
@@ -536,6 +604,8 @@ struct MpscAdmit {
     msg_tx: Option<mpsc::Sender<ShardMsg>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     next_conn: u64,
+    /// Scripted deaths, consumed by the first admission of their shard.
+    chaos: Vec<ChaosDeath>,
 }
 
 impl Admit for MpscAdmit {
@@ -552,12 +622,27 @@ impl Admit for MpscAdmit {
             .as_ref()
             .ok_or_else(|| anyhow!("admission channel sealed (static membership)"))?
             .clone();
-        self.handles.push(std::thread::spawn(move || {
-            shard_thread_mpsc(cfg, compute, shard, shards, cmd_rx, tx)
-        }));
+        let chaos = take_chaos(&mut self.chaos, shard);
+        // Under supervision a thread's exit must be *observable* (an
+        // mpsc worker has no reader thread to report EOF); the guard
+        // posts ConnDown on any exit, and staleness filtering discards
+        // it for deliberate departures.
+        let guard = cfg.policy.supervised();
         self.next_conn += 1;
-        Ok((self.next_conn, ShardTx::Mpsc(cmd_tx)))
+        let conn = self.next_conn;
+        self.handles.push(std::thread::spawn(move || {
+            shard_thread_mpsc(cfg, compute, shard, shards, conn, guard, chaos, cmd_rx, tx)
+        }));
+        Ok((conn, ShardTx::Mpsc(cmd_tx)))
     }
+}
+
+/// Pop the scripted death for `shard`, if one is still pending.
+fn take_chaos(chaos: &mut Vec<ChaosDeath>, shard: usize) -> Option<ChaosDeath> {
+    chaos
+        .iter()
+        .position(|c| c.shard == shard)
+        .map(|i| chaos.swap_remove(i))
 }
 
 /// How a [`WireAdmit`] provisions brand-new worker endpoints.
@@ -599,6 +684,8 @@ struct WireAdmit<'a> {
     sent: Vec<Arc<AtomicU64>>,
     received: Vec<Arc<AtomicU64>>,
     next_conn: u64,
+    /// Scripted deaths, consumed by the first admission of their shard.
+    chaos: Vec<ChaosDeath>,
 }
 
 impl<'a> WireAdmit<'a> {
@@ -622,6 +709,7 @@ impl<'a> WireAdmit<'a> {
             sent: Vec::new(),
             received: Vec::new(),
             next_conn: 0,
+            chaos: Vec::new(),
         }
     }
 
@@ -658,6 +746,20 @@ impl<'a> WireAdmit<'a> {
                 buf: Vec::new(),
             },
         ))
+    }
+
+    /// Arm the kernel-level read deadline on a coordinator-side TCP
+    /// stream when heartbeats are on: a transport-layer backstop under
+    /// the clock-driven lease. Generous by design — it must outlast a
+    /// whole round of compute plus the configured deadlines, so it only
+    /// catches connections that are truly wedged.
+    fn arm_deadline(&self, t: TcpTransport) -> Result<Box<dyn Transport>> {
+        let p = &self.cfg.policy;
+        if !p.heartbeat.is_zero() {
+            let backstop = (p.heartbeat * 4 + p.round_deadline * 2).max(Duration::from_secs(5));
+            t.set_read_deadline(Some(backstop))?;
+        }
+        Ok(Box::new(t))
     }
 
     /// Total frame-layer traffic across every connection ever attached.
@@ -707,6 +809,8 @@ impl Admit for WireAdmit<'_> {
             ),
             Some(WireMode::Accept { .. }) => Plan::Accept,
         };
+        let join_timeout = self.cfg.policy.join_timeout;
+        let chaos = take_chaos(&mut self.chaos, shard);
         let conn: Box<dyn Transport> = match plan {
             Plan::None => {
                 return NoAdmit.admit(shard, shards);
@@ -714,30 +818,30 @@ impl Admit for WireAdmit<'_> {
             Plan::Loopback => {
                 let (coord_end, shard_end) = loopback_pair();
                 self.workers.push(std::thread::spawn(move || {
-                    serve_shard_transport(Box::new(shard_end))
+                    serve_shard_transport_with(Box::new(shard_end), chaos)
                 }));
                 Box::new(coord_end)
             }
             Plan::Tcp(addr) => {
                 self.workers.push(std::thread::spawn(move || {
-                    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
+                    serve_shard_transport_with(Box::new(TcpTransport::connect(addr)?), chaos)
                 }));
                 let stream = match &self.mode {
                     Some(WireMode::Tcp { listener }) => {
-                        accept_one(listener, JOIN_TIMEOUT, || Ok(()))?
+                        accept_one(listener, join_timeout, || Ok(()))?
                     }
                     _ => unreachable!("plan was Tcp"),
                 };
-                Box::new(TcpTransport::new(stream))
+                self.arm_deadline(TcpTransport::new(stream))?
             }
             Plan::Accept => {
                 let stream = match &mut self.mode {
                     Some(WireMode::Accept { listener, liveness }) => {
-                        accept_one(listener, JOIN_TIMEOUT, &mut **liveness)?
+                        accept_one(listener, join_timeout, &mut **liveness)?
                     }
                     _ => unreachable!("plan was Accept"),
                 };
-                Box::new(TcpTransport::new(stream))
+                self.arm_deadline(TcpTransport::new(stream))?
             }
         };
         self.attach(shard, shards, conn)
@@ -824,15 +928,45 @@ pub fn run_experiment_synthetic_session(
     manifest: Arc<Manifest>,
     plan: ElasticPlan,
     resume: Option<SessionState>,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_experiment_synthetic_supervised(cfg, manifest, plan, resume, None, Vec::new(), on_event)
+}
+
+/// [`run_experiment_synthetic_session`] with the supervision test
+/// hooks: an injected [`Clock`] (scripted in the chaos tests, so no
+/// deadline ever sleeps on wall time) and scripted [`ChaosDeath`]s.
+/// Passing `None`/empty is exactly [`run_experiment_synthetic_session`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_synthetic_supervised(
+    cfg: ExperimentConfig,
+    manifest: Arc<Manifest>,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    clock: Option<Arc<dyn Clock>>,
+    chaos: Vec<ChaosDeath>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    run_sharded_impl(
-        cfg,
-        ComputeSpec::Synthetic { manifest },
-        plan,
-        resume,
-        &mut on_event,
-    )
+    let compute = ComputeSpec::Synthetic { manifest };
+    let shards = session_shards(&cfg, resume.as_ref());
+    let result = (|| {
+        let mut session = SessionCtx::build(&cfg, &compute, plan, resume)?;
+        if let Some(c) = clock {
+            session.clock = c;
+        }
+        session.chaos = chaos;
+        match cfg.transport {
+            TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, &mut session, &mut on_event),
+            TransportKind::Loopback | TransportKind::Tcp => {
+                run_wire_sharded(&cfg, shards, &compute, &mut session, &mut on_event)
+            }
+        }
+    })();
+    match &result {
+        Ok(log) => on_event(&Event::Finished(log.clone())),
+        Err(e) => on_event(&Event::Failed(format!("{e:#}"))),
+    }
+    result
 }
 
 /// Transport dispatch for the sharded deployment shapes.
@@ -884,6 +1018,7 @@ fn run_mpsc_sharded(
         msg_tx: Some(msg_tx),
         handles: Vec::new(),
         next_conn: 0,
+        chaos: std::mem::take(&mut session.chaos),
     };
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
     let mut active: Vec<u64> = Vec::with_capacity(shards);
@@ -894,8 +1029,10 @@ fn run_mpsc_sharded(
     }
     // Static membership keeps no admission sender alive, so the fan-in
     // channel disconnects (and the run fails fast) if every shard dies
-    // silently; elastic runs must keep it for later admissions.
-    if session.plan.is_empty() {
+    // silently; elastic runs must keep it for later admissions, and
+    // supervised runs must keep it for respawns (their exit guards and
+    // readers make silent death observable without the disconnect).
+    if session.plan.is_empty() && !cfg.policy.supervised() {
         admit.seal();
     }
 
@@ -945,6 +1082,7 @@ fn run_wire_sharded(
         TransportKind::Mpsc => unreachable!("mpsc is not a wire transport"),
     };
     let mut admit = WireAdmit::new(cfg, compute, msg_tx, Some(mode));
+    admit.chaos = std::mem::take(&mut session.chaos);
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
     let mut active: Vec<u64> = Vec::with_capacity(shards);
     for shard in 0..shards {
@@ -953,8 +1091,9 @@ fn run_wire_sharded(
         txs.push(tx);
     }
     // Static membership keeps no admission sender alive (see
-    // run_mpsc_sharded); elastic runs need it for later admissions.
-    if session.plan.is_empty() {
+    // run_mpsc_sharded); elastic runs need it for later admissions and
+    // supervised runs for respawns.
+    if session.plan.is_empty() && !cfg.policy.supervised() {
         admit.seal();
     }
 
@@ -1126,6 +1265,15 @@ fn decode_shard_msg(
             let (shard, msg) = wire::decode_failed(buf)?;
             Ok(ShardMsg::Failed { shard, msg })
         }
+        MsgTag::Heartbeat => {
+            let (shard, nonce) = wire::decode_heartbeat_msg(buf)?;
+            if shard != conn_shard {
+                return Err(anyhow!(
+                    "HEARTBEAT claims shard {shard} on connection {conn_shard}"
+                ));
+            }
+            Ok(ShardMsg::Heartbeat { shard, nonce })
+        }
     }
 }
 
@@ -1210,6 +1358,486 @@ fn shard_failure(
 }
 
 // ---------------------------------------------------------------------------
+// Round supervision (heartbeats, deadlines, recovery)
+// ---------------------------------------------------------------------------
+
+/// What a supervised wait produced: a regular message, or a shard
+/// declared dead (by its connection tearing down, its own FAILED
+/// report, a round deadline, or an expired liveness lease).
+enum Waited {
+    Msg(ShardMsg),
+    Dead {
+        shard: usize,
+        reason: String,
+        /// Whether the death was observed as the connection itself
+        /// going down (its channel is already fully drained) — when
+        /// false, recovery must still quarantine the old connection.
+        conn_down: bool,
+    },
+}
+
+/// The coordinator-side state needed to rewind the world to the last
+/// completed-round boundary: `rounds_done` rounds are final, `params`
+/// is the server model at that boundary and `clients` the
+/// round-boundary client states (empty on the synthetic plane, whose
+/// client outputs are pure functions of round seed and id).
+struct RecoveryCache {
+    rounds_done: usize,
+    params: ParamSet,
+    clients: Vec<ClientState>,
+}
+
+/// Mutable supervision state threaded through the control loop.
+struct Supervision {
+    /// Per-shard liveness: degraded shards are `false` and their slots
+    /// are never reused (messages from them are discarded).
+    live: Vec<bool>,
+    /// Client → shard assignment. Starts as round-robin; degradation
+    /// folds a dead shard's clients into the survivors.
+    assign: Vec<usize>,
+    /// Which shard evaluates the central model (lowest live index).
+    eval_shard: usize,
+    /// Last time each shard was heard from (lease bookkeeping).
+    last_seen: Vec<Duration>,
+    /// When the next heartbeat probe fan-out is due.
+    next_hb: Duration,
+    /// Monotonic heartbeat nonce (probes + recovery barriers).
+    hb_nonce: u64,
+    /// Rewind target for recovery.
+    cache: RecoveryCache,
+}
+
+/// A sender whose every send fails: installed in a dead shard's slot so
+/// `txs` keeps its indexing (degraded slots are never truncated) and —
+/// for a wire shard — the old sink drops, hanging up on the worker.
+fn dead_tx() -> ShardTx {
+    let (tx, _rx) = mpsc::channel::<ShardCmd>();
+    ShardTx::Mpsc(tx)
+}
+
+/// One supervised receive: polls the fan-in channel at [`SUP_POLL`]
+/// granularity so it can fan out heartbeat probes, advance a scripted
+/// clock, and enforce the phase `deadline` (over shards with
+/// `busy[s]` set — the ones allowed to be silently computing) and the
+/// heartbeat lease (over idle live shards). Messages from non-live
+/// (degraded) shards and stale connections are discarded.
+#[allow(clippy::too_many_arguments)]
+fn sup_wait(
+    sup: &mut Supervision,
+    txs: &mut [ShardTx],
+    active: &[u64],
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    clock: &dyn Clock,
+    policy: &RoundPolicy,
+    busy: &[bool],
+    deadline: Option<Duration>,
+) -> Result<Waited> {
+    loop {
+        let now = clock.now();
+        if !policy.heartbeat.is_zero() && now >= sup.next_hb {
+            sup.hb_nonce += 1;
+            let nonce = sup.hb_nonce;
+            for (s, tx) in txs.iter_mut().enumerate() {
+                if sup.live[s] {
+                    // A failed probe send is not itself a death verdict;
+                    // the connection teardown will surface one.
+                    let _ = tx.send(ShardCmd::Heartbeat { nonce });
+                }
+            }
+            sup.next_hb = now + policy.heartbeat;
+        }
+        match msg_rx.recv_timeout(SUP_POLL) {
+            Ok(ShardMsg::ConnDown { conn, shard, msg }) => {
+                let stale = active.get(shard).is_some_and(|&a| a != conn);
+                if stale || !sup.live.get(shard).copied().unwrap_or(false) {
+                    continue;
+                }
+                return Ok(Waited::Dead {
+                    shard,
+                    reason: msg,
+                    conn_down: true,
+                });
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => {
+                if !sup.live.get(shard).copied().unwrap_or(false) {
+                    continue;
+                }
+                return Ok(Waited::Dead {
+                    shard,
+                    reason: msg,
+                    conn_down: false,
+                });
+            }
+            Ok(ShardMsg::Heartbeat { shard, .. }) => {
+                if let Some(seen) = sup.last_seen.get_mut(shard) {
+                    *seen = clock.now();
+                }
+                continue;
+            }
+            Ok(m) => {
+                let from = match &m {
+                    ShardMsg::Ready { shard, .. }
+                    | ShardMsg::RoundDone { shard, .. }
+                    | ShardMsg::State { shard, .. } => Some(*shard),
+                    ShardMsg::Eval { .. } => Some(sup.eval_shard),
+                    _ => None,
+                };
+                if let Some(s) = from {
+                    if !sup.live.get(s).copied().unwrap_or(false) {
+                        continue; // a degraded straggler's late message
+                    }
+                    if let Some(seen) = sup.last_seen.get_mut(s) {
+                        *seen = clock.now();
+                    }
+                }
+                return Ok(Waited::Msg(m));
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                clock.idle_tick();
+                let now = clock.now();
+                if let Some(d) = deadline {
+                    if now >= d {
+                        if let Some(s) = (0..sup.live.len())
+                            .find(|&s| sup.live[s] && busy.get(s).copied().unwrap_or(false))
+                        {
+                            return Ok(Waited::Dead {
+                                shard: s,
+                                reason: format!(
+                                    "exceeded the round deadline ({:?})",
+                                    policy.round_deadline
+                                ),
+                                conn_down: false,
+                            });
+                        }
+                    }
+                }
+                if !policy.heartbeat.is_zero() {
+                    let lease = policy.heartbeat * LEASE_INTERVALS;
+                    if let Some(s) = (0..sup.live.len()).find(|&s| {
+                        sup.live[s]
+                            && !busy.get(s).copied().unwrap_or(false)
+                            && now.saturating_sub(sup.last_seen[s]) > lease
+                    }) {
+                        return Ok(Waited::Dead {
+                            shard: s,
+                            reason: format!("liveness lease expired ({lease:?} without an echo)"),
+                            conn_down: false,
+                        });
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("all shard channels closed"))
+            }
+        }
+    }
+}
+
+/// Wait (clock-driven, up to `timeout`) for the dead shard's connection
+/// teardown report, discarding its dying gasps and any stale round
+/// traffic. Returns whether the teardown was observed — `false` means
+/// the old incarnation may still be wedged on an open connection, so
+/// its index must not be reused. A *second* live shard failing during
+/// the drain aborts: recovery is single-fault per incident.
+fn drain_conn_down(
+    dead: usize,
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    active: &[u64],
+    live: &[bool],
+    clock: &dyn Clock,
+    timeout: Duration,
+) -> Result<bool> {
+    let deadline = clock.now() + timeout;
+    loop {
+        match msg_rx.recv_timeout(SUP_POLL) {
+            Ok(ShardMsg::ConnDown { conn, shard, .. }) => {
+                if shard == dead && active.get(dead).is_some_and(|&a| a == conn) {
+                    return Ok(true);
+                }
+                let stale = active.get(shard).is_some_and(|&a| a != conn);
+                if !stale && shard != dead && live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} also failed while recovering shard {dead} \
+                         (recovery handles one fault at a time)"
+                    ));
+                }
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => {
+                if shard != dead && live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} also failed while recovering shard {dead}: {msg}"
+                    ));
+                }
+            }
+            Ok(_) => {} // stale traffic; a rewind will replay the round
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                clock.idle_tick();
+                if clock.now() >= deadline {
+                    return Ok(false);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("all shard channels closed"));
+            }
+        }
+    }
+}
+
+/// Post-recovery synchronization barrier: probe every live shard with a
+/// fresh heartbeat nonce and drain the fan-in channel until each has
+/// echoed it. Per-connection FIFO ordering then guarantees no stale
+/// pre-recovery message is still in flight anywhere — everything
+/// drained on the way is replay-obsolete traffic.
+fn barrier_flush(
+    sup: &mut Supervision,
+    txs: &mut [ShardTx],
+    active: &[u64],
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    clock: &dyn Clock,
+    policy: &RoundPolicy,
+) -> Result<()> {
+    sup.hb_nonce += 1;
+    let nonce = sup.hb_nonce;
+    for (s, tx) in txs.iter_mut().enumerate() {
+        if sup.live[s] {
+            tx.send(ShardCmd::Heartbeat { nonce }).map_err(|_| {
+                anyhow!("shard {s} disconnected during the recovery barrier")
+            })?;
+        }
+    }
+    let mut pending: Vec<bool> = sup.live.clone();
+    let deadline = clock.now() + policy.join_timeout;
+    while pending.iter().any(|&p| p) {
+        match msg_rx.recv_timeout(SUP_POLL) {
+            Ok(ShardMsg::Heartbeat { shard, nonce: n }) => {
+                if let Some(seen) = sup.last_seen.get_mut(shard) {
+                    *seen = clock.now();
+                }
+                if n == nonce {
+                    if let Some(p) = pending.get_mut(shard) {
+                        *p = false;
+                    }
+                }
+            }
+            Ok(ShardMsg::ConnDown { conn, shard, msg }) => {
+                let stale = active.get(shard).is_some_and(|&a| a != conn);
+                if !stale && sup.live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} died during the recovery barrier: {msg}"
+                    ));
+                }
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => {
+                if sup.live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} failed during the recovery barrier: {msg}"
+                    ));
+                }
+            }
+            Ok(_) => {} // stale round traffic being flushed
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                clock.idle_tick();
+                if clock.now() >= deadline {
+                    return Err(anyhow!(
+                        "recovery barrier timed out after {:?}",
+                        policy.join_timeout
+                    ));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("all shard channels closed"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Wait for a freshly respawned shard's READY handshake. `Ok(true)` on
+/// READY, `Ok(false)` when this attempt's worker died or the join
+/// timeout lapsed (the caller retries or degrades), `Err` on a second
+/// live-shard fault.
+fn wait_respawn_ready(
+    dead: usize,
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    active: &[u64],
+    live: &[bool],
+    clock: &dyn Clock,
+    timeout: Duration,
+) -> Result<bool> {
+    let deadline = clock.now() + timeout;
+    loop {
+        match msg_rx.recv_timeout(SUP_POLL) {
+            Ok(ShardMsg::Ready { shard, .. }) if shard == dead => return Ok(true),
+            Ok(ShardMsg::ConnDown { conn, shard, .. }) => {
+                if shard == dead && active.get(dead).is_some_and(|&a| a == conn) {
+                    return Ok(false);
+                }
+                let stale = active.get(shard).is_some_and(|&a| a != conn);
+                if !stale && shard != dead && live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} also failed while shard {dead} was respawning"
+                    ));
+                }
+            }
+            Ok(ShardMsg::Failed { shard, msg }) => {
+                if shard != dead && live.get(shard).copied().unwrap_or(false) {
+                    return Err(anyhow!(
+                        "shard {shard} also failed while shard {dead} was respawning: {msg}"
+                    ));
+                }
+                // The respawn candidate's own FAILED: wait for its
+                // ConnDown so the attempt winds down cleanly.
+            }
+            Ok(_) => {} // stale traffic; the barrier flush follows
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                clock.idle_tick();
+                if clock.now() >= deadline {
+                    return Ok(false);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("all shard channels closed"));
+            }
+        }
+    }
+}
+
+/// The recovery state machine, run when a live shard is declared dead
+/// mid-round:
+///
+/// 1. **Quarantine** — hang up on the old incarnation and consume its
+///    connection-teardown report, so nothing it ever sent can be
+///    mistaken for its replacement's traffic.
+/// 2. **Respawn** (`on-shard-loss=respawn`) — re-admit a worker under
+///    the departed index, up to `retry_budget` attempts with
+///    exponential, seed-jittered backoff between them.
+/// 3. **Degrade** (`on-shard-loss=degrade`, or a respawn budget
+///    exhausted) — mark the shard dead for good and fold its clients
+///    deterministically into the survivors (quorum mode); the lowest
+///    live shard becomes the evaluator.
+/// 4. **Barrier-flush** every surviving channel (heartbeat nonce echo),
+///    then **rewind the world**: restore the server model from the
+///    recovery cache and install the cached round-boundary state on
+///    every live shard. The caller then replays the round from fan-out;
+///    determinism makes the replay byte-identical to an undisturbed
+///    round.
+#[allow(clippy::too_many_arguments)]
+fn recover(
+    cfg: &ExperimentConfig,
+    t: usize,
+    shards: usize,
+    dead: usize,
+    reason: String,
+    conn_down: bool,
+    sup: &mut Supervision,
+    txs: &mut [ShardTx],
+    active: &mut [u64],
+    admit: &mut dyn Admit,
+    msg_rx: &mpsc::Receiver<ShardMsg>,
+    clock: &dyn Clock,
+    server: &mut Server,
+    log: &mut RunLog,
+) -> Result<()> {
+    let policy = &cfg.policy;
+    log.events.push(ShardEvent {
+        round: t,
+        shard: dead,
+        kind: ShardEventKind::Death {
+            reason: reason.clone(),
+        },
+    });
+    if policy.on_loss == OnShardLoss::Abort {
+        return Err(anyhow!("shard {dead}: {reason}"));
+    }
+    // 1 · quarantine the old incarnation.
+    txs[dead] = dead_tx();
+    let gone = conn_down
+        || drain_conn_down(dead, msg_rx, active, &sup.live, clock, policy.join_timeout)?;
+    active[dead] = 0;
+    // 2 · respawn with backoff. A never-observed teardown (a wedged
+    //     straggler) forbids reusing the index — fall through to
+    //     degradation instead.
+    let mut respawned = false;
+    if policy.on_loss == OnShardLoss::Respawn && gone {
+        let seed = cfg.seed ^ (t as u64).rotate_left(17) ^ (dead as u64).rotate_left(41);
+        let mut backoff = Backoff::new(policy.backoff, policy.backoff.saturating_mul(32), seed);
+        for attempt in 1..=policy.retry_budget.max(1) {
+            clock.sleep(backoff.next_delay());
+            let Ok((conn, tx)) = admit.admit(dead, shards) else {
+                continue;
+            };
+            txs[dead] = tx;
+            active[dead] = conn;
+            if wait_respawn_ready(dead, msg_rx, active, &sup.live, clock, policy.join_timeout)? {
+                log.events.push(ShardEvent {
+                    round: t,
+                    shard: dead,
+                    kind: ShardEventKind::Respawned { attempt },
+                });
+                respawned = true;
+                break;
+            }
+            // This attempt's worker died or never came up: quarantine
+            // it too and try again.
+            txs[dead] = dead_tx();
+            let _ = drain_conn_down(dead, msg_rx, active, &sup.live, clock, policy.join_timeout)?;
+            active[dead] = 0;
+        }
+    }
+    // 3 · graceful degradation when the budget is spent (or scripted).
+    if !respawned {
+        sup.live[dead] = false;
+        let survivors: Vec<usize> = (0..shards).filter(|&s| sup.live[s]).collect();
+        if survivors.is_empty() {
+            return Err(anyhow!(
+                "shard {dead}: {reason} — and no live shards remain to absorb its clients"
+            ));
+        }
+        let mut moved = Vec::new();
+        for (c, a) in sup.assign.iter_mut().enumerate() {
+            if *a == dead {
+                *a = survivors[c % survivors.len()];
+                moved.push(c);
+            }
+        }
+        sup.eval_shard = survivors[0];
+        log.events.push(ShardEvent {
+            round: t,
+            shard: dead,
+            kind: ShardEventKind::Degraded { clients: moved },
+        });
+    }
+    // 4 · flush, then rewind the world to the round-t boundary.
+    barrier_flush(sup, txs, active, msg_rx, clock, policy)?;
+    server.params.copy_from(&sup.cache.params);
+    for s in 0..txs.len() {
+        if !sup.live[s] {
+            continue;
+        }
+        let owned: Vec<ClientState> = sup
+            .cache
+            .clients
+            .iter()
+            .filter(|c| sup.assign.get(c.id).copied() == Some(s))
+            .cloned()
+            .collect();
+        txs[s]
+            .send(ShardCmd::State(StateCmd {
+                collect: false,
+                install: Some(StateInstall {
+                    shard: s,
+                    shards,
+                    rounds_done: sup.cache.rounds_done as u64,
+                    params: sup.cache.params.clone(),
+                    clients: owned,
+                }),
+            }))
+            .map_err(|_| anyhow!("shard {s} disconnected during the rewind install"))?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // The control loop
 // ---------------------------------------------------------------------------
 
@@ -1262,18 +1890,22 @@ fn coordinate(
     let mut server = Server::new(init, cfg.downstream_codec());
     let mut log = RunLog::new(cfg.name.clone());
     let mut start_round = 0usize;
+    let mut resume_clients: Vec<ClientState> = Vec::new();
 
     // ---- session resume: rebuild the server from the snapshot and
     //      rehydrate every shard over the STATE pair ----
     if let Some(state) = session.resume.take() {
         // The experiment itself must be re-run verbatim; the session
-        // block (checkpoint dir/cadence/fault injection) is operational
-        // and may legitimately differ on resume, so it is normalized
-        // out of the comparison.
+        // block (checkpoint dir/cadence/fault injection) and the round
+        // supervision policy (heartbeats, deadlines, loss handling) are
+        // operational and may legitimately differ on resume, so they
+        // are normalized out of the comparison.
         let mut ours_cfg = cfg.clone();
         ours_cfg.session = None;
+        ours_cfg.policy = RoundPolicy::default();
         let mut theirs_cfg = state.cfg.clone();
         theirs_cfg.session = None;
+        theirs_cfg.policy = RoundPolicy::default();
         let mut ours = Vec::new();
         let mut theirs = Vec::new();
         wire::encode_config(&mut ours, &ours_cfg);
@@ -1331,6 +1963,7 @@ fn coordinate(
                 shard_failure(msg_rx, active, &format!("shard {s} disconnected during resume"))
             })?;
         }
+        resume_clients = state.clients;
     }
 
     // Validate the membership plan up front: a silently-ignored event
@@ -1386,6 +2019,32 @@ fn coordinate(
     let mut bc_slot: Option<Arc<Delta>> = None;
     // Same recycling for the once-encoded downstream APPLY stream.
     let mut stream_slot: Option<Arc<Vec<u8>>> = None;
+
+    // ---- round supervision state (heartbeats, deadlines, recovery) ----
+    let policy = cfg.policy.clone();
+    let supervised = policy.supervised();
+    let clock = session.clock.clone();
+    let mut sup = Supervision {
+        live: vec![true; shards],
+        assign: (0..n).map(|c| scheduler::shard_of(c, shards)).collect(),
+        eval_shard: 0,
+        last_seen: vec![clock.now(); shards],
+        next_hb: clock.now(),
+        hb_nonce: 0,
+        cache: RecoveryCache {
+            rounds_done: start_round,
+            params: server.params.clone(),
+            clients: resume_clients,
+        },
+    };
+    // Real-compute supervised runs rewind client state from the cache;
+    // prime it with an initial collect (the collect doubles as an
+    // acknowledgement barrier for any resume install above). The
+    // synthetic plane's clients are stateless — nothing to cache.
+    if supervised && !session.synthetic && sup.cache.clients.is_empty() && start_round < cfg.rounds
+    {
+        sup.cache.clients = collect_all_states(txs, msg_rx, active, "the recovery-cache prime")?;
+    }
 
     for t in start_round..cfg.rounds {
         // ---- elastic membership: scripted events at this round
@@ -1469,6 +2128,7 @@ fn coordinate(
                                 &format!("shard {s} disconnected during re-join"),
                             )
                         })?;
+                    sup.last_seen[s] = clock.now();
                 }
                 // Resize N→M: collect *all* state, stop leavers / admit
                 // newcomers, then install the recomputed assignment on
@@ -1562,6 +2222,21 @@ fn coordinate(
                                 )
                             })?;
                     }
+                    // Re-anchor supervision to the new membership: all
+                    // members are live, the assignment is the recomputed
+                    // round-robin, and the rewind cache carries the
+                    // just-collected states under the new shard count.
+                    sup.live = vec![true; shards];
+                    sup.assign = (0..n).map(|c| scheduler::shard_of(c, shards)).collect();
+                    sup.eval_shard = 0;
+                    sup.last_seen = vec![clock.now(); shards];
+                    if supervised {
+                        sup.cache = RecoveryCache {
+                            rounds_done: t,
+                            params: server.params.clone(),
+                            clients,
+                        };
+                    }
                 }
             }
         }
@@ -1569,146 +2244,316 @@ fn coordinate(
         // further admission can happen — release the retained fan-in
         // sender so silent worker death still disconnects the channel
         // (static-membership runs seal before the control loop starts).
-        if last_event_round.map_or(false, |r| r <= t) {
+        // Supervised runs never seal: a respawn may admit at any time.
+        if last_event_round.map_or(false, |r| r <= t) && !supervised {
             admit.seal();
         }
 
-        // Fan-out: the same deterministic participant selection as the
-        // single-thread round, split by shard ownership.
         scheduler::select_participants(cfg.seed, t, n, take, &mut order);
-        let mut per_shard: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards];
-        for (slot, &ci) in order.iter().enumerate() {
-            per_shard[scheduler::shard_of(ci, shards)].push((slot, ci));
-        }
-        for (s, slots) in per_shard.into_iter().enumerate() {
-            txs[s]
-                .send(ShardCmd::Round { slots })
-                .map_err(|_| shard_failure(msg_rx, active, &format!("shard {s} disconnected")))?;
-        }
+        let need_states = supervised && !session.synthetic;
+        let checkpoint_due =
+            session.store.is_some() && session.every > 0 && (t + 1) % session.every == 0;
 
-        // Fan-in: collect every shard's lanes, then reduce in slot order.
-        let mut tagged: Vec<(usize, RoundLane)> = Vec::with_capacity(take);
-        let mut done = 0usize;
-        while done < shards {
-            match next_msg(msg_rx, active) {
-                Ok(ShardMsg::RoundDone { shard, lanes }) => {
-                    debug_assert!(shard < shards, "lanes from unknown shard {shard}");
-                    done += 1;
-                    tagged.extend(lanes);
+        // The round attempt loop: a supervised round replays from here
+        // after a recovery — the world was rewound to the round-t
+        // boundary, so determinism makes the replay byte-identical to
+        // an undisturbed round. Unsupervised runs error out of their
+        // first attempt exactly as before.
+        let (m, collected) = 'attempt: loop {
+            let attempt_deadline = if supervised && !policy.round_deadline.is_zero() {
+                Some(clock.now() + policy.round_deadline)
+            } else {
+                None
+            };
+            let live_count = sup.live.iter().filter(|&&l| l).count();
+
+            // Fan-out: the same deterministic participant selection as
+            // the single-thread round, split by shard ownership (the
+            // supervised assignment map equals round-robin until a
+            // degradation folds a dead shard's clients into survivors).
+            let mut per_shard: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards];
+            for (slot, &ci) in order.iter().enumerate() {
+                per_shard[sup.assign[ci]].push((slot, ci));
+            }
+            let mut dead: Option<(usize, String, bool)> = None;
+            for (s, slots) in per_shard.into_iter().enumerate() {
+                if !sup.live[s] {
+                    continue;
                 }
-                Ok(ShardMsg::Failed { shard, msg }) => {
-                    return Err(anyhow!("shard {shard}: {msg}"))
-                }
-                Ok(_) => return Err(anyhow!("unexpected shard message during round {t}")),
-                Err(_) => return Err(shard_failure(msg_rx, active, "shards exited mid-round")),
-            }
-        }
-        if tagged.len() != take {
-            return Err(anyhow!(
-                "round {t}: fan-in produced {} lanes, expected {take}",
-                tagged.len()
-            ));
-        }
-        let mut tagged = scheduler::fan_in(tagged);
-        for (_, lane) in tagged.iter_mut() {
-            if let Some(e) = lane.error.take() {
-                return Err(e);
-            }
-        }
-
-        // Ordered reduction: metrics + FedAvg exactly as a single-shard
-        // round would compute them.
-        let mut m = RoundMetrics {
-            round: t,
-            ..Default::default()
-        };
-        scheduler::collect_lane_metrics(&mut m, tagged.iter().map(|(_, l)| l), &update_idx);
-        let updates: Vec<&Delta> = tagged.iter().map(|(_, l)| &l.decoded).collect();
-        let down_bytes_each = server.aggregate_into(&updates, &mut broadcast);
-        m.down_bytes = down_bytes_each * n;
-
-        // Broadcast + lane return; shard 0 evaluates the synced replica.
-        let mut bc = bc_slot
-            .take()
-            .unwrap_or_else(|| Arc::new(Delta::zeros(server.params.manifest.clone())));
-        let reused = match Arc::get_mut(&mut bc) {
-            Some(d) => {
-                d.copy_from(&broadcast);
-                true
-            }
-            None => false,
-        };
-        if !reused {
-            bc = Arc::new(broadcast.clone());
-        }
-        // Encode-once APPLY: in bidirectional wire modes the downstream
-        // bitstream (already produced by `aggregate_into`) fans out as
-        // bytes; shards decode those exact bytes back into the identical
-        // dequantized broadcast.
-        let stream_arc: Option<Arc<Vec<u8>>> = match server.downstream_bytes() {
-            Some(bytes) if cfg.transport.is_wire() => {
-                let mut sa = stream_slot.take().unwrap_or_default();
-                match Arc::get_mut(&mut sa) {
-                    Some(v) => {
-                        v.clear();
-                        v.extend_from_slice(bytes);
+                if txs[s].send(ShardCmd::Round { slots }).is_err() {
+                    if !supervised {
+                        return Err(shard_failure(
+                            msg_rx,
+                            active,
+                            &format!("shard {s} disconnected"),
+                        ));
                     }
-                    None => sa = Arc::new(bytes.to_vec()),
+                    dead = Some((s, format!("shard {s} disconnected"), false));
+                    break;
                 }
-                Some(sa)
             }
-            _ => None,
-        };
-        let mut back: Vec<Vec<(usize, RoundLane)>> = vec![Vec::new(); shards];
-        for (slot, lane) in tagged {
-            back[scheduler::shard_of(lane.client, shards)].push((slot, lane));
-        }
-        for (s, lanes) in back.into_iter().enumerate() {
-            txs[s]
-                .send(ShardCmd::Apply {
+            if let Some((s, reason, cd)) = dead {
+                recover(
+                    cfg, t, shards, s, reason, cd, &mut sup, txs, active, admit, msg_rx,
+                    clock.as_ref(), &mut server, &mut log,
+                )?;
+                continue 'attempt;
+            }
+
+            // Fan-in: collect every live shard's lanes (deduplicated
+            // per shard), then reduce in slot order.
+            let mut tagged: Vec<(usize, RoundLane)> = Vec::with_capacity(take);
+            let mut got: Vec<bool> = vec![false; shards];
+            let mut done = 0usize;
+            while done < live_count {
+                let busy: Vec<bool> = (0..shards).map(|s| sup.live[s] && !got[s]).collect();
+                match sup_wait(
+                    &mut sup, txs, active, msg_rx, clock.as_ref(), &policy, &busy,
+                    attempt_deadline,
+                ) {
+                    Ok(Waited::Msg(ShardMsg::RoundDone { shard, lanes })) => {
+                        debug_assert!(shard < shards, "lanes from unknown shard {shard}");
+                        if got.get(shard).copied().unwrap_or(true) {
+                            continue; // a replay duplicate — already reduced
+                        }
+                        got[shard] = true;
+                        done += 1;
+                        tagged.extend(lanes);
+                    }
+                    Ok(Waited::Msg(_)) => {
+                        return Err(anyhow!("unexpected shard message during round {t}"))
+                    }
+                    Ok(Waited::Dead {
+                        shard,
+                        reason,
+                        conn_down,
+                    }) => {
+                        if !supervised {
+                            return Err(anyhow!("shard {shard}: {reason}"));
+                        }
+                        recover(
+                            cfg, t, shards, shard, reason, conn_down, &mut sup, txs, active,
+                            admit, msg_rx, clock.as_ref(), &mut server, &mut log,
+                        )?;
+                        continue 'attempt;
+                    }
+                    Err(_) => {
+                        return Err(shard_failure(msg_rx, active, "shards exited mid-round"))
+                    }
+                }
+            }
+            if tagged.len() != take {
+                return Err(anyhow!(
+                    "round {t}: fan-in produced {} lanes, expected {take}",
+                    tagged.len()
+                ));
+            }
+            let mut tagged = scheduler::fan_in(tagged);
+            for (_, lane) in tagged.iter_mut() {
+                if let Some(e) = lane.error.take() {
+                    return Err(e);
+                }
+            }
+
+            // Ordered reduction: metrics + FedAvg exactly as a
+            // single-shard round would compute them.
+            let mut m = RoundMetrics {
+                round: t,
+                ..Default::default()
+            };
+            scheduler::collect_lane_metrics(&mut m, tagged.iter().map(|(_, l)| l), &update_idx);
+            let updates: Vec<&Delta> = tagged.iter().map(|(_, l)| &l.decoded).collect();
+            let down_bytes_each = server.aggregate_into(&updates, &mut broadcast);
+            m.down_bytes = down_bytes_each * n;
+
+            // Broadcast + lane return; the lowest live shard evaluates
+            // the synced replica.
+            let mut bc = bc_slot
+                .take()
+                .unwrap_or_else(|| Arc::new(Delta::zeros(server.params.manifest.clone())));
+            let reused = match Arc::get_mut(&mut bc) {
+                Some(d) => {
+                    d.copy_from(&broadcast);
+                    true
+                }
+                None => false,
+            };
+            if !reused {
+                bc = Arc::new(broadcast.clone());
+            }
+            // Encode-once APPLY: in bidirectional wire modes the
+            // downstream bitstream (already produced by
+            // `aggregate_into`) fans out as bytes; shards decode those
+            // exact bytes back into the identical dequantized broadcast.
+            let stream_arc: Option<Arc<Vec<u8>>> = match server.downstream_bytes() {
+                Some(bytes) if cfg.transport.is_wire() => {
+                    let mut sa = stream_slot.take().unwrap_or_default();
+                    match Arc::get_mut(&mut sa) {
+                        Some(v) => {
+                            v.clear();
+                            v.extend_from_slice(bytes);
+                        }
+                        None => sa = Arc::new(bytes.to_vec()),
+                    }
+                    Some(sa)
+                }
+                _ => None,
+            };
+            let mut back: Vec<Vec<(usize, RoundLane)>> = vec![Vec::new(); shards];
+            for (slot, lane) in tagged {
+                back[sup.assign[lane.client]].push((slot, lane));
+            }
+            let mut dead: Option<(usize, String, bool)> = None;
+            for (s, lanes) in back.into_iter().enumerate() {
+                if !sup.live[s] {
+                    continue;
+                }
+                let sent = txs[s].send(ShardCmd::Apply {
                     broadcast: bc.clone(),
                     stream: stream_arc.clone(),
                     lanes,
-                    eval: s == 0,
-                })
-                .map_err(|_| shard_failure(msg_rx, active, &format!("shard {s} disconnected")))?;
-        }
-        loop {
-            match next_msg(msg_rx, active) {
-                Ok(ShardMsg::Eval {
-                    report,
-                    scale_stats,
-                }) => {
-                    m.accuracy = report.accuracy;
-                    m.f1 = report.f1;
-                    m.test_loss = report.loss;
-                    m.scale_stats = scale_stats;
+                    eval: s == sup.eval_shard,
+                });
+                if sent.is_err() {
+                    if !supervised {
+                        return Err(shard_failure(
+                            msg_rx,
+                            active,
+                            &format!("shard {s} disconnected"),
+                        ));
+                    }
+                    dead = Some((s, format!("shard {s} disconnected"), false));
                     break;
                 }
-                Ok(ShardMsg::Failed { shard, msg }) => {
-                    return Err(anyhow!("shard {shard}: {msg}"))
-                }
-                Ok(_) => return Err(anyhow!("unexpected shard message awaiting eval")),
-                Err(_) => return Err(shard_failure(msg_rx, active, "shards exited awaiting eval")),
             }
-        }
+            if let Some((s, reason, cd)) = dead {
+                recover(
+                    cfg, t, shards, s, reason, cd, &mut sup, txs, active, admit, msg_rx,
+                    clock.as_ref(), &mut server, &mut log,
+                )?;
+                continue 'attempt;
+            }
+            loop {
+                let busy: Vec<bool> = (0..shards).map(|s| s == sup.eval_shard).collect();
+                match sup_wait(
+                    &mut sup, txs, active, msg_rx, clock.as_ref(), &policy, &busy,
+                    attempt_deadline,
+                ) {
+                    Ok(Waited::Msg(ShardMsg::Eval {
+                        report,
+                        scale_stats,
+                    })) => {
+                        m.accuracy = report.accuracy;
+                        m.f1 = report.f1;
+                        m.test_loss = report.loss;
+                        m.scale_stats = scale_stats;
+                        break;
+                    }
+                    Ok(Waited::Msg(_)) => {
+                        return Err(anyhow!("unexpected shard message awaiting eval"))
+                    }
+                    Ok(Waited::Dead {
+                        shard,
+                        reason,
+                        conn_down,
+                    }) => {
+                        if !supervised {
+                            return Err(anyhow!("shard {shard}: {reason}"));
+                        }
+                        recover(
+                            cfg, t, shards, shard, reason, conn_down, &mut sup, txs, active,
+                            admit, msg_rx, clock.as_ref(), &mut server, &mut log,
+                        )?;
+                        continue 'attempt;
+                    }
+                    Err(_) => {
+                        return Err(shard_failure(msg_rx, active, "shards exited awaiting eval"))
+                    }
+                }
+            }
 
-        // Keep our references for reuse next round (shards drop theirs
-        // once they have applied the delta / decoded the stream).
-        bc_slot = Some(bc);
-        if let Some(sa) = stream_arc {
-            stream_slot = Some(sa);
-        }
+            // Keep our references for reuse next round (shards drop
+            // theirs once they have applied the delta / decoded the
+            // stream).
+            bc_slot = Some(bc);
+            if let Some(sa) = stream_arc {
+                stream_slot = Some(sa);
+            }
+
+            // Round-boundary client-state collect: feeds the checkpoint
+            // below and (supervised, real compute) the rewind cache.
+            // Still inside the attempt loop so a death here rewinds and
+            // replays the whole round.
+            if !(need_states || checkpoint_due) {
+                break 'attempt (m, None);
+            }
+            if !supervised {
+                let clients = collect_all_states(txs, msg_rx, active, "checkpoint")?;
+                break 'attempt (m, Some(clients));
+            }
+            let mut clients: Vec<ClientState> = Vec::new();
+            let mut got: Vec<bool> = vec![false; shards];
+            let mut done = 0usize;
+            let mut dead: Option<(usize, String, bool)> = None;
+            for (s, tx) in txs.iter_mut().enumerate() {
+                if !sup.live[s] {
+                    continue;
+                }
+                let sent = tx.send(ShardCmd::State(StateCmd {
+                    collect: true,
+                    install: None,
+                }));
+                if sent.is_err() {
+                    dead = Some((s, format!("shard {s} disconnected during checkpoint"), false));
+                    break;
+                }
+            }
+            while dead.is_none() && done < live_count {
+                let busy: Vec<bool> = (0..shards).map(|s| sup.live[s] && !got[s]).collect();
+                match sup_wait(
+                    &mut sup, txs, active, msg_rx, clock.as_ref(), &policy, &busy,
+                    attempt_deadline,
+                ) {
+                    Ok(Waited::Msg(ShardMsg::State { shard, clients: c })) => {
+                        if got.get(shard).copied().unwrap_or(true) {
+                            continue;
+                        }
+                        got[shard] = true;
+                        done += 1;
+                        clients.extend(c);
+                    }
+                    Ok(Waited::Msg(_)) => {
+                        return Err(anyhow!("unexpected shard message during checkpoint"))
+                    }
+                    Ok(Waited::Dead {
+                        shard,
+                        reason,
+                        conn_down,
+                    }) => {
+                        dead = Some((shard, reason, conn_down));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if let Some((s, reason, cd)) = dead {
+                recover(
+                    cfg, t, shards, s, reason, cd, &mut sup, txs, active, admit, msg_rx,
+                    clock.as_ref(), &mut server, &mut log,
+                )?;
+                continue 'attempt;
+            }
+            clients.sort_by_key(|c| c.id);
+            break 'attempt (m, Some(clients));
+        };
 
         let acc = m.accuracy;
         log.push(m);
 
-        // ---- checkpoint: collect every shard's client state and write
-        //      one atomic snapshot (before the round event fires, so an
-        //      observed round line implies its snapshot is on disk) ----
-        if let Some(store) = &session.store {
-            if session.every > 0 && (t + 1) % session.every == 0 {
-                let clients = collect_all_states(txs, msg_rx, active, "checkpoint")?;
+        // ---- checkpoint: one atomic snapshot from the round-boundary
+        //      collect (before the round event fires, so an observed
+        //      round line implies its snapshot is on disk) ----
+        if checkpoint_due {
+            if let (Some(store), Some(clients)) = (&session.store, collected.as_ref()) {
                 let snap = SessionState {
                     cfg: cfg.clone(),
                     synthetic: session.synthetic,
@@ -1717,9 +2562,19 @@ fn coordinate(
                     manifest_tsv: server.params.manifest.to_tsv(),
                     params: SessionState::bundle_params(&server.params),
                     rounds: log.rounds.clone(),
-                    clients,
+                    clients: clients.clone(),
                 };
                 store.write(&snap)?;
+            }
+        }
+
+        // Advance the rewind target to the round-(t+1) boundary: round
+        // t is final, so recovery never replays across it.
+        if supervised {
+            sup.cache.rounds_done = t + 1;
+            sup.cache.params.copy_from(&server.params);
+            if need_states {
+                sup.cache.clients = collected.unwrap_or_default();
             }
         }
 
@@ -1939,6 +2794,24 @@ impl ShardBody for RealShard<'_, '_> {
             self.clients = setup.clients;
             self.shards = inst.shards;
         }
+        // Explicit ownership: a non-empty migrated set whose id set
+        // differs from the local round-robin assignment means the
+        // coordinator re-mapped clients (quorum degradation folds a dead
+        // shard's clients into survivors). Rebuild the local set from
+        // the explicit ids — warmup skipped for the same reason as the
+        // resize above — then import each migrated state below.
+        if !inst.clients.is_empty() {
+            let ids: std::collections::BTreeSet<usize> =
+                inst.clients.iter().map(|s| s.id).collect();
+            let local: std::collections::BTreeSet<usize> =
+                self.clients.iter().map(|c| c.id).collect();
+            if ids != local {
+                let mut rebuild_cfg = self.cfg.clone();
+                rebuild_cfg.warmup_steps = 0;
+                let setup = build_setup(self.mr, &rebuild_cfg, |ci| ids.contains(&ci))?;
+                self.clients = setup.clients;
+            }
+        }
         // Absolute replica state: every local client equals the server.
         for c in self.clients.iter_mut() {
             c.global.copy_from(&inst.params);
@@ -2073,10 +2946,13 @@ impl ShardBody for SynthShard {
 }
 
 /// The round-serving loop over typed mpsc channels (lanes move to the
-/// coordinator and come back for recycling in `Apply`).
+/// coordinator and come back for recycling in `Apply`). `chaos`
+/// scripts at most one fault-injected death for the recovery tests;
+/// production admissions pass `None`.
 fn shard_loop_mpsc(
     body: &mut dyn ShardBody,
     shard: usize,
+    chaos: Option<ChaosDeath>,
     cmd_rx: &mpsc::Receiver<ShardCmd>,
     msg_tx: &mpsc::Sender<ShardMsg>,
 ) -> Result<()> {
@@ -2091,9 +2967,28 @@ fn shard_loop_mpsc(
     // Recycled lanes: grown to this shard's per-round watermark.
     let mut free: Vec<RoundLane> = Vec::new();
     let mut lanes: Vec<RoundLane> = Vec::new();
+    let mut rounds_seen = 0usize;
     loop {
         match cmd_rx.recv() {
             Ok(ShardCmd::Round { slots }) => {
+                if let Some(cd) = &chaos {
+                    if cd.round == rounds_seen {
+                        match cd.point {
+                            // Silent death: no FAILED message — only the
+                            // supervisor's liveness machinery can notice.
+                            ChaosPoint::MidRound => return Ok(()),
+                            // A stall keeps the channel open but never
+                            // answers anything again (heartbeats
+                            // included), until the coordinator lets go.
+                            ChaosPoint::Stall => {
+                                while cmd_rx.recv().is_ok() {}
+                                return Ok(());
+                            }
+                            ChaosPoint::MidCollect => {}
+                        }
+                    }
+                }
+                rounds_seen += 1;
                 let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
                 while free.len() < order.len() {
                     free.push(RoundLane::new(manifest.clone()));
@@ -2133,6 +3028,13 @@ fn shard_loop_mpsc(
                 }
             }
             Ok(ShardCmd::State(cmd)) => {
+                if cmd.collect {
+                    if let Some(cd) = &chaos {
+                        if cd.point == ChaosPoint::MidCollect && rounds_seen == cd.round + 1 {
+                            return Ok(()); // silent death mid STATE collect
+                        }
+                    }
+                }
                 if let Some(inst) = &cmd.install {
                     body.install_state(inst)?;
                 }
@@ -2144,6 +3046,11 @@ fn shard_loop_mpsc(
                         })
                         .map_err(|_| anyhow!("coordinator disconnected"))?;
                 }
+            }
+            Ok(ShardCmd::Heartbeat { nonce }) => {
+                msg_tx
+                    .send(ShardMsg::Heartbeat { shard, nonce })
+                    .map_err(|_| anyhow!("coordinator disconnected"))?;
             }
             Ok(ShardCmd::Stop) | Err(_) => break,
         }
@@ -2159,6 +3066,7 @@ fn shard_loop_mpsc(
 fn shard_loop_wire(
     body: &mut dyn ShardBody,
     shard: usize,
+    chaos: Option<ChaosDeath>,
     sink: &mut FrameSink,
     source: &mut FrameSource,
     downstream: Option<crate::compression::UpdateCodec>,
@@ -2174,6 +3082,7 @@ fn shard_loop_wire(
     let mut bcast = Delta::zeros(manifest.clone());
     let mut scratch = crate::compression::CodecScratch::default();
     let mut inbuf = Vec::new();
+    let mut rounds_seen = 0usize;
     loop {
         // A *closed* inbound link is the wire analogue of the mpsc recv
         // error: the coordinator is gone, wind down quietly. A *corrupt*
@@ -2189,6 +3098,23 @@ fn shard_loop_wire(
             CmdTag::Init => return Err(anyhow!("unexpected second INIT handshake")),
             CmdTag::Round => {
                 let slots = wire::decode_round(&inbuf)?;
+                if let Some(cd) = &chaos {
+                    if cd.round == rounds_seen {
+                        match cd.point {
+                            // Silent death: drop the connection without a
+                            // FAILED frame — the reader surfaces ConnDown.
+                            ChaosPoint::MidRound => return Ok(()),
+                            // Stall: hold the link open, answer nothing
+                            // (not even heartbeats) until it closes.
+                            ChaosPoint::Stall => {
+                                while matches!(source.recv(&mut inbuf), Ok(true)) {}
+                                return Ok(());
+                            }
+                            ChaosPoint::MidCollect => {}
+                        }
+                    }
+                }
+                rounds_seen += 1;
                 let order: Vec<usize> = slots.iter().map(|&(_, ci)| ci).collect();
                 while free.len() < order.len() {
                     free.push(RoundLane::new(manifest.clone()));
@@ -2221,6 +3147,13 @@ fn shard_loop_wire(
             }
             CmdTag::State => {
                 let cmd = wire::decode_state_cmd(&inbuf, &manifest)?;
+                if cmd.collect {
+                    if let Some(cd) = &chaos {
+                        if cd.point == ChaosPoint::MidCollect && rounds_seen == cd.round + 1 {
+                            return Ok(()); // silent death mid STATE collect
+                        }
+                    }
+                }
                 if let Some(inst) = &cmd.install {
                     body.install_state(inst)?;
                 }
@@ -2229,6 +3162,12 @@ fn shard_loop_wire(
                     sink.send(&out)
                         .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
                 }
+            }
+            CmdTag::Heartbeat => {
+                let nonce = wire::decode_heartbeat_cmd(&inbuf)?;
+                wire::encode_heartbeat_msg(&mut out, shard, nonce);
+                sink.send(&out)
+                    .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
             }
             CmdTag::Stop => break,
         }
@@ -2239,18 +3178,23 @@ fn shard_loop_wire(
 /// Build the [`ShardBody`] a decoded INIT asks for and serve the wire
 /// loop with it. `Real` needs a PJRT runtime + artifacts; `Synthetic`
 /// needs neither.
-fn run_shard_body(init: &wire::Init, sink: &mut FrameSink, source: &mut FrameSource) -> Result<()> {
+fn run_shard_body(
+    init: &wire::Init,
+    chaos: Option<ChaosDeath>,
+    sink: &mut FrameSink,
+    source: &mut FrameSource,
+) -> Result<()> {
     let downstream = init.cfg.downstream_codec();
     match &init.compute {
         ComputeSpec::Real => {
             let rt = Runtime::cpu()?;
             let mr = ModelRuntime::open(&rt, &init.cfg.artifacts_root, &init.cfg.variant)?;
             let mut body = RealShard::build(&mr, &init.cfg, init.shard, init.shards)?;
-            shard_loop_wire(&mut body, init.shard, sink, source, downstream)
+            shard_loop_wire(&mut body, init.shard, chaos, sink, source, downstream)
         }
         ComputeSpec::Synthetic { manifest } => {
             let mut body = SynthShard::new(manifest.clone(), &init.cfg, init.shards);
-            shard_loop_wire(&mut body, init.shard, sink, source, downstream)
+            shard_loop_wire(&mut body, init.shard, chaos, sink, source, downstream)
         }
     }
 }
@@ -2260,6 +3204,17 @@ fn run_shard_body(init: &wire::Init, sink: &mut FrameSink, source: &mut FrameSou
 /// error is reported back as a FAILED frame (best effort) before
 /// returning it.
 fn serve_shard_transport(transport: Box<dyn Transport>) -> Result<()> {
+    serve_shard_transport_with(transport, None)
+}
+
+/// [`serve_shard_transport`] with a scripted chaos death (the in-process
+/// loopback/TCP admission path threads fault injection through here —
+/// chaos deaths are deliberately *silent*: the FAILED frame only covers
+/// real errors, so the supervisor must detect the loss itself).
+fn serve_shard_transport_with(
+    transport: Box<dyn Transport>,
+    chaos: Option<ChaosDeath>,
+) -> Result<()> {
     let (mut sink, mut source) = transport.open()?;
     let mut buf = Vec::new();
     match source.recv(&mut buf) {
@@ -2272,7 +3227,7 @@ fn serve_shard_transport(transport: Box<dyn Transport>) -> Result<()> {
     }
     let init = wire::decode_init(&buf)?;
     let shard = init.shard;
-    let result = run_shard_body(&init, &mut sink, &mut source);
+    let result = run_shard_body(&init, chaos, &mut sink, &mut source);
     if let Err(e) = &result {
         let mut out = Vec::new();
         wire::encode_failed(&mut out, shard, &format!("{e:#}"));
@@ -2281,27 +3236,58 @@ fn serve_shard_transport(transport: Box<dyn Transport>) -> Result<()> {
     result
 }
 
+/// Posts a `ConnDown` for its shard when the worker thread unwinds —
+/// the mpsc analogue of a wire reader noticing its connection die.
+/// Installed only for supervised runs: unsupervised mpsc death keeps
+/// its legacy shape (a silent exit simply closes the channel).
+struct ExitGuard {
+    tx: mpsc::Sender<ShardMsg>,
+    conn: u64,
+    shard: usize,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ShardMsg::ConnDown {
+            conn: self.conn,
+            shard: self.shard,
+            msg: "worker thread exited".into(),
+        });
+    }
+}
+
 /// One shard's mpsc-mode thread body: build the requested compute,
-/// then serve round commands until `Stop`.
+/// then serve round commands until `Stop`. `conn` is the admission's
+/// connection generation; `guard` (supervised runs) arms an
+/// [`ExitGuard`] so even a silent death surfaces as `ConnDown`.
+#[allow(clippy::too_many_arguments)]
 fn shard_thread_mpsc(
     cfg: ExperimentConfig,
     compute: ComputeSpec,
     shard: usize,
     shards: usize,
+    conn: u64,
+    guard: bool,
+    chaos: Option<ChaosDeath>,
     cmd_rx: mpsc::Receiver<ShardCmd>,
     msg_tx: mpsc::Sender<ShardMsg>,
 ) {
+    let _guard = guard.then(|| ExitGuard {
+        tx: msg_tx.clone(),
+        conn,
+        shard,
+    });
     let run = || -> Result<()> {
         match &compute {
             ComputeSpec::Real => {
                 let rt = Runtime::cpu()?;
                 let mr = ModelRuntime::open(&rt, &cfg.artifacts_root, &cfg.variant)?;
                 let mut body = RealShard::build(&mr, &cfg, shard, shards)?;
-                shard_loop_mpsc(&mut body, shard, &cmd_rx, &msg_tx)
+                shard_loop_mpsc(&mut body, shard, chaos, &cmd_rx, &msg_tx)
             }
             ComputeSpec::Synthetic { manifest } => {
                 let mut body = SynthShard::new(manifest.clone(), &cfg, shards);
-                shard_loop_mpsc(&mut body, shard, &cmd_rx, &msg_tx)
+                shard_loop_mpsc(&mut body, shard, chaos, &cmd_rx, &msg_tx)
             }
         }
     };
@@ -2383,8 +3369,10 @@ pub fn serve_session(
         // With no membership plan no further admission happens
         // (externally-joined workers); keep disconnect detection alive.
         // Elastic runs keep the fan-in sender for later admissions and
-        // seal inside the control loop once the plan is exhausted.
-        if session.plan.is_empty() {
+        // seal inside the control loop once the plan is exhausted;
+        // supervised runs keep it so a respawn can re-admit from the
+        // listener.
+        if session.plan.is_empty() && !cfg.policy.supervised() {
             admit.seal();
         }
         let result = coordinate(
@@ -2407,11 +3395,19 @@ pub fn serve_session(
 }
 
 /// Join a coordinator as one shard worker (the multi-process worker
-/// side; `fsfl shard-worker --connect HOST:PORT` calls this). Connects,
+/// side; `fsfl shard-worker --connect HOST:PORT` calls this). Connects
+/// with bounded retry + exponential backoff — a worker racing the
+/// coordinator's bind keeps trying instead of dying at startup — then
 /// receives the INIT handshake (experiment config + compute spec +
 /// shard assignment), serves rounds until STOP, then returns.
 pub fn join_shard(addr: &str) -> Result<()> {
-    serve_shard_transport(Box::new(TcpTransport::connect(addr)?))
+    let mut backoff = Backoff::new(
+        Duration::from_millis(50),
+        Duration::from_secs(2),
+        0x5AFE_C0DE_F157_F00D,
+    );
+    let t = TcpTransport::connect_retry(addr, 10, &mut backoff, &MonotonicClock::new())?;
+    serve_shard_transport(Box::new(t))
 }
 
 /// Run a sharded experiment with every shard as a **separate OS

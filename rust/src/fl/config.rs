@@ -180,6 +180,106 @@ impl std::str::FromStr for TransportKind {
     }
 }
 
+/// What the sharded coordinator does when a shard exhausts its retry
+/// budget (or dies with a budget of zero). See the failure-domain
+/// section of `ARCHITECTURE.md` for the full state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnShardLoss {
+    /// Abort the experiment with a descriptive error (historic
+    /// behaviour, still the default: fail fast unless recovery was
+    /// asked for).
+    #[default]
+    Abort,
+    /// Respawn/re-admit a replacement worker with exponential backoff,
+    /// rehydrate it from the coordinator's last collected state, and
+    /// replay the in-flight round — outputs stay byte-identical to an
+    /// undisturbed run.
+    Respawn,
+    /// Like `Respawn`, but once the retry budget is exhausted fold the
+    /// dead shard's clients into the survivors (quorum mode) instead
+    /// of aborting.
+    Degrade,
+}
+
+impl OnShardLoss {
+    /// Human-readable name (matches the `--on-shard-loss` CLI values).
+    pub fn name(self) -> &'static str {
+        match self {
+            OnShardLoss::Abort => "abort",
+            OnShardLoss::Respawn => "respawn",
+            OnShardLoss::Degrade => "degrade",
+        }
+    }
+}
+
+impl std::str::FromStr for OnShardLoss {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "abort" => Ok(OnShardLoss::Abort),
+            "respawn" | "retry" => Ok(OnShardLoss::Respawn),
+            "degrade" | "quorum" => Ok(OnShardLoss::Degrade),
+            other => Err(anyhow::anyhow!("unknown shard-loss policy {other:?}")),
+        }
+    }
+}
+
+/// Supervision policy for sharded rounds: liveness leases, the
+/// per-round deadline, and the retry/degrade budget the recovery state
+/// machine spends before giving up on a shard. Purely operational —
+/// it never changes what is computed, only how failures are handled —
+/// so resume treats it like [`SessionConfig`]: overridable without
+/// invalidating a snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundPolicy {
+    /// Liveness lease cadence for wire transports: the coordinator
+    /// pings idle connections every `heartbeat` and declares a
+    /// connection dead after ~3 missed beats. `0` disables leases.
+    pub heartbeat: std::time::Duration,
+    /// Upper bound on one round's compute+collect phase; a shard still
+    /// silent past it is declared dead instead of blocking fan-in
+    /// forever. `0` disables the deadline.
+    pub round_deadline: std::time::Duration,
+    /// How many respawn attempts the recovery machine makes per
+    /// incident before applying [`RoundPolicy::on_loss`]'s terminal
+    /// behaviour.
+    pub retry_budget: usize,
+    /// Base delay of the exponential (seeded-jitter) backoff between
+    /// respawn attempts; also the worker connect-retry base.
+    pub backoff: std::time::Duration,
+    /// How long the coordinator waits for a worker to join/handshake
+    /// (was a hardcoded 120 s).
+    pub join_timeout: std::time::Duration,
+    /// Terminal behaviour once the retry budget is exhausted.
+    pub on_loss: OnShardLoss,
+}
+
+impl RoundPolicy {
+    /// Whether this policy engages the round supervisor at all. The
+    /// default policy (no heartbeat, no deadline, abort on loss) is
+    /// fully unsupervised and preserves the legacy coordinator
+    /// behaviour bit for bit; setting any liveness knob — or a
+    /// non-abort loss reaction — turns supervision on.
+    pub fn supervised(&self) -> bool {
+        self.on_loss != OnShardLoss::Abort
+            || !self.heartbeat.is_zero()
+            || !self.round_deadline.is_zero()
+    }
+}
+
+impl Default for RoundPolicy {
+    fn default() -> Self {
+        Self {
+            heartbeat: std::time::Duration::ZERO,
+            round_deadline: std::time::Duration::ZERO,
+            retry_budget: 2,
+            backoff: std::time::Duration::from_millis(100),
+            join_timeout: std::time::Duration::from_secs(120),
+            on_loss: OnShardLoss::Abort,
+        }
+    }
+}
+
 /// Durable-session settings: where checkpoints go and how often they
 /// are written (see `crate::session`). Attached to an experiment via
 /// [`ExperimentConfig::session`]; `None` disables checkpointing.
@@ -293,6 +393,10 @@ pub struct ExperimentConfig {
     /// runs without checkpointing. A configured session forces the
     /// sharded coordinator path so all persistence lives in one place.
     pub session: Option<SessionConfig>,
+    /// Round supervision policy: heartbeats, deadlines, retry budget
+    /// and shard-loss behaviour. Operational only — never changes what
+    /// is computed.
+    pub policy: RoundPolicy,
 }
 
 impl ExperimentConfig {
@@ -333,6 +437,7 @@ impl ExperimentConfig {
             compute_shards: 1,
             transport: TransportKind::Mpsc,
             session: None,
+            policy: RoundPolicy::default(),
         }
     }
 

@@ -47,7 +47,7 @@ pub mod synth;
 mod tests;
 
 pub use client::{Client, ClientState, OptSnapshot};
-pub use config::{ExperimentConfig, Protocol, ProtocolConfig, SessionConfig, TransportKind};
+pub use config::{ExperimentConfig, OnShardLoss, Protocol, ProtocolConfig, RoundPolicy, SessionConfig, TransportKind};
 pub use lane::{LaneParts, RoundLane};
 pub use schedule::{LrSchedule, ScheduleKind};
 pub use scheduler::{ComputePlane, ScheduleMode};
@@ -186,9 +186,11 @@ pub(crate) fn build_setup(
 /// [`scheduler::ComputePlane`] over a (possibly sharded) client set:
 /// slot-ordered training and scale sub-epochs on the thread that owns
 /// the PJRT runtime. `clients` holds the locally-instantiated clients of
-/// one shard under round-robin ownership, so global client `ci` lives at
-/// local index `ci / shards`; the single-process [`Experiment`] is the
-/// `shards == 1` case, where that mapping is the identity.
+/// one shard — under round-robin ownership global client `ci` lives at
+/// local index `ci / shards` (the fast path; the single-process
+/// [`Experiment`] is the `shards == 1` identity case), but quorum
+/// degradation can fold foreign clients into a survivor shard, so an
+/// id search backs the arithmetic up.
 pub(crate) struct ExperimentCompute<'a, 'rt> {
     pub mr: &'a ModelRuntime<'rt>,
     pub clients: &'a mut [Client],
@@ -199,14 +201,28 @@ pub(crate) struct ExperimentCompute<'a, 'rt> {
     pub pcfg: &'a ProtocolConfig,
 }
 
+impl ExperimentCompute<'_, '_> {
+    /// Local index of global client `ci` (see the struct docs).
+    fn local_of(&self, ci: usize) -> Result<usize> {
+        let guess = ci / self.shards;
+        if self.clients.get(guess).is_some_and(|c| c.id == ci) {
+            return Ok(guess);
+        }
+        self.clients
+            .iter()
+            .position(|c| c.id == ci)
+            .ok_or_else(|| anyhow::anyhow!("client {ci} is not owned by this shard"))
+    }
+}
+
 impl ComputePlane for ExperimentCompute<'_, '_> {
     fn train(&mut self, lane: &mut RoundLane) -> Result<()> {
-        let local = lane.client / self.shards;
+        let local = self.local_of(lane.client)?;
         self.clients[local].train_round(self.mr, self.train_data, self.cfg, lane)
     }
 
     fn scale(&mut self, lane: &mut RoundLane) -> Result<()> {
-        let local = lane.client / self.shards;
+        let local = self.local_of(lane.client)?;
         self.clients[local].scale_round(self.mr, self.train_data, self.cfg, self.pcfg, lane)
     }
 }

@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod session;
+pub mod supervise;
 pub mod runtime;
 
 pub use anyhow::{anyhow, Result};

@@ -36,7 +36,13 @@ COMMANDS:
            --elastic-resize R:M[,R:M…] (grow/shrink the shard set to M
            immediately before round R)
            --elastic-replace R:S[,R:S…] (replace shard S with a fresh
-           worker immediately before round R))
+           worker immediately before round R)
+           --heartbeat MS (liveness lease cadence; 0 = off)
+           --round-deadline MS (straggler cutoff per round; 0 = off)
+           --shard-retries N (respawn attempts per shard loss, default 2)
+           --on-shard-loss abort|respawn|degrade (recovery policy once a
+           shard is declared dead; default abort)
+           --join-timeout SECS (worker join/handshake wait, default 120))
   shard-worker  join a coordinator as one shard process
            (--connect HOST:PORT; spawned automatically by
            `run --shard-procs`, or launch by hand against `serve`)
@@ -88,11 +94,48 @@ fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path) -> Result<()> 
     Ok(())
 }
 
+/// The supervision-policy flags shared by `run` and `run --resume`
+/// (operational knobs, not experiment shape — a resume may re-arm them
+/// freely without touching the snapshot's science config).
+const POLICY_FLAGS: [&str; 5] = [
+    "heartbeat",
+    "round-deadline",
+    "shard-retries",
+    "on-shard-loss",
+    "join-timeout",
+];
+
+/// Parse the supervision [`RoundPolicy`] flags (defaults preserved for
+/// absent flags).
+fn policy_from_flags(flags: &Flags) -> Result<fsfl::fl::RoundPolicy> {
+    let mut p = fsfl::fl::RoundPolicy::default();
+    if let Some(ms) = flags.get::<u64>("heartbeat")? {
+        p.heartbeat = std::time::Duration::from_millis(ms);
+    }
+    if let Some(ms) = flags.get::<u64>("round-deadline")? {
+        p.round_deadline = std::time::Duration::from_millis(ms);
+    }
+    p.retry_budget = flags.get_or("shard-retries", p.retry_budget)?;
+    if let Some(s) = flags.str_opt("on-shard-loss") {
+        p.on_loss = s.parse()?;
+    }
+    if let Some(secs) = flags.get::<u64>("join-timeout")? {
+        p.join_timeout = std::time::Duration::from_secs(secs);
+    }
+    Ok(p)
+}
+
 /// `fsfl run --resume DIR`: continue a killed run from its newest valid
 /// snapshot. The snapshot's config is re-run verbatim (including its
 /// checkpoint settings, so the resumed run keeps checkpointing into the
-/// same session directory).
-fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()> {
+/// same session directory). Supervision policy flags are operational
+/// and may be re-armed on resume.
+fn cmd_resume(
+    dir: &str,
+    shard_procs: bool,
+    policy: Option<fsfl::fl::RoundPolicy>,
+    out: &std::path::Path,
+) -> Result<()> {
     // Read-only lookup: a mistyped path must error, not be created.
     if !std::path::Path::new(dir).is_dir() {
         return Err(anyhow::anyhow!("no session directory at {dir}"));
@@ -115,6 +158,12 @@ fn cmd_resume(dir: &str, shard_procs: bool, out: &std::path::Path) -> Result<()>
     // run's cwd and would silently point elsewhere here.
     if let Some(s) = cfg.session.as_mut() {
         s.dir = std::path::PathBuf::from(dir);
+    }
+    // Re-arm (or disarm) supervision per this invocation's flags; the
+    // resume-equality check normalizes the policy, so this never trips
+    // the "config mismatch" guard.
+    if let Some(p) = policy {
+        cfg.policy = p;
     }
     let on_event = |ev: &coordinator::Event| {
         if let coordinator::Event::RoundDone(m) = ev {
@@ -264,17 +313,27 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     if let Some(p) = flags.pairs("elastic-resize")? {
         plan.resize = p;
     }
+    let policy = policy_from_flags(flags)?;
+    let policy_given = flags
+        .keys()
+        .iter()
+        .any(|k| POLICY_FLAGS.contains(&k.as_str()));
+    cfg.policy = policy.clone();
     let resume_dir = flags.str_opt("resume");
     flags.reject_unknown()?;
 
     if let Some(dir) = resume_dir {
         // Resume re-runs the snapshot's config verbatim — refuse
         // experiment-shape flags instead of silently ignoring them.
+        // Supervision policy flags are operational, not shape, and may
+        // be re-armed freely.
         const RESUME_FLAGS: [&str; 4] = ["resume", "out", "artifacts", "shard-procs"];
         let stray: Vec<String> = flags
             .keys()
             .into_iter()
-            .filter(|k| !RESUME_FLAGS.contains(&k.as_str()))
+            .filter(|k| {
+                !RESUME_FLAGS.contains(&k.as_str()) && !POLICY_FLAGS.contains(&k.as_str())
+            })
             .map(|k| format!("--{k}"))
             .collect();
         if !stray.is_empty() {
@@ -284,7 +343,7 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
                 stray.join(" ")
             ));
         }
-        return cmd_resume(&dir, shard_procs, out);
+        return cmd_resume(&dir, shard_procs, policy_given.then_some(policy), out);
     }
 
     let on_event = |ev: &coordinator::Event| {

@@ -162,6 +162,43 @@ impl WireStats {
     }
 }
 
+/// What happened to a shard, as recorded by the supervisor plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardEventKind {
+    /// The shard's connection died or its lease/deadline expired.
+    Death {
+        /// Human-readable cause (reader error, lease expiry, …).
+        reason: String,
+    },
+    /// A replacement worker was admitted and rehydrated.
+    Respawned {
+        /// 1-based respawn attempt that succeeded.
+        attempt: usize,
+    },
+    /// Retry budget exhausted: the shard's clients were folded into
+    /// survivors (quorum mode).
+    Degraded {
+        /// Clients reassigned away from the dead shard, in id order.
+        clients: Vec<usize>,
+    },
+}
+
+/// One supervisor-plane incident: round it happened in, shard it
+/// happened to, and what the recovery machine did about it.
+///
+/// Deliberately *not* part of [`RoundMetrics`]: round records stay
+/// byte-identical between a recovered run and an undisturbed one; the
+/// incident history rides alongside, like [`WireStats`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEvent {
+    /// Round index the incident occurred in.
+    pub round: usize,
+    /// Shard index it concerned.
+    pub shard: usize,
+    /// What happened.
+    pub kind: ShardEventKind,
+}
+
 /// Full experiment log: what all figure harnesses consume.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunLog {
@@ -173,6 +210,10 @@ pub struct RunLog {
     /// in-process paths). Deliberately *not* part of the per-round
     /// metrics: round records stay byte-identical across transports.
     pub wire: Option<WireStats>,
+    /// Supervisor-plane incident history (shard deaths, respawns,
+    /// degradations). Empty for an undisturbed run; excluded from the
+    /// CSV so recovered runs stay byte-identical there too.
+    pub events: Vec<ShardEvent>,
 }
 
 impl RunLog {
@@ -182,6 +223,7 @@ impl RunLog {
             name: name.into(),
             rounds: Vec::new(),
             wire: None,
+            events: Vec::new(),
         }
     }
 

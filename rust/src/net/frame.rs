@@ -29,10 +29,25 @@ pub const MAGIC: [u8; 4] = *b"FSNT";
 /// Fixed frame header size (magic + length + checksum).
 pub const HEADER_LEN: usize = 16;
 
-/// Default payload-size cap. Generous (a broadcast delta for a large
-/// model is tens of MB) but finite, so a corrupted length field can
-/// never drive an unbounded allocation.
+/// Absolute payload-size cap enforced by the writer. Generous (a
+/// broadcast delta for a large model is tens of MB) but finite, so a
+/// corrupted length field can never drive an unbounded allocation.
 pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Default *read-side* payload cap for frames arriving from a peer.
+/// The 4-byte length field is trusted before the checksum can be
+/// verified, so readers facing a network peer bound it well below the
+/// writer's [`MAX_PAYLOAD`]: 256 MiB comfortably covers the largest
+/// legitimate message while keeping the damage of a corrupted or
+/// hostile header small. Trusted local readers (e.g. snapshot files)
+/// may still pass [`MAX_PAYLOAD`].
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Payload bytes allocated per step while reading a frame body. The
+/// buffer grows only as bytes actually arrive, so a corrupt length
+/// claiming `max_payload` bytes costs at most one chunk of memory
+/// before the truncation is detected.
+const READ_CHUNK: usize = 4 << 20;
 
 /// FNV-1a 64 over a byte slice (same constants as `Delta::checksum`).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -121,12 +136,21 @@ pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>, max_payload: usize) -> R
         header[15],
     ]);
     buf.clear();
-    buf.resize(len, 0);
-    let got = read_full(r, buf, "payload", HEADER_LEN)?;
-    if got < len {
-        return Err(anyhow!(
-            "connection closed mid-frame ({got} of {len} payload bytes)"
-        ));
+    // Grow the buffer chunkwise as payload bytes actually arrive: the
+    // length field is unverified until the checksum passes, so a
+    // corrupt header must never be able to demand `len` bytes of
+    // memory up front.
+    while buf.len() < len {
+        let start = buf.len();
+        let step = (len - start).min(READ_CHUNK);
+        buf.resize(start + step, 0);
+        let got = read_full(r, &mut buf[start..], "payload", HEADER_LEN + start)?;
+        if got < step {
+            return Err(anyhow!(
+                "connection closed mid-frame ({} of {len} payload bytes)",
+                start + got
+            ));
+        }
     }
     let have = fnv1a(buf);
     if have != want {
@@ -212,6 +236,52 @@ mod tests {
         let wire = frame_bytes(&vec![0u8; 64]);
         let mut r = wire.as_slice();
         assert!(read_frame(&mut r, &mut Vec::new(), 16).is_err());
+    }
+
+    #[test]
+    fn read_side_cap_rejects_what_the_writer_would_allow() {
+        // A length legal under MAX_PAYLOAD but above the peer-facing
+        // MAX_FRAME_LEN is still refused before any payload read.
+        let mut wire = frame_bytes(b"x");
+        let claimed = (MAX_FRAME_LEN + 1) as u32;
+        wire[4..8].copy_from_slice(&claimed.to_le_bytes());
+        let mut r = wire.as_slice();
+        let err = read_frame(&mut r, &mut Vec::new(), MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err}").contains("oversized"));
+    }
+
+    #[test]
+    fn corrupt_length_cannot_force_a_large_allocation() {
+        // Header claims 64 MiB (under the cap) but the stream ends
+        // right after the header: the reader must fail on truncation
+        // having grown the buffer by at most one chunk, not reserve
+        // the full claimed length up front.
+        let mut wire = frame_bytes(b"x")[..HEADER_LEN].to_vec();
+        let claimed = (64u32) << 20;
+        wire[4..8].copy_from_slice(&claimed.to_le_bytes());
+        let mut r = wire.as_slice();
+        let mut buf = Vec::new();
+        let err = read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err}").contains("mid-frame"), "got: {err}");
+        assert!(
+            buf.capacity() <= 8 << 20,
+            "buffer ballooned to {} bytes on a corrupt length",
+            buf.capacity()
+        );
+    }
+
+    #[test]
+    fn multi_chunk_payload_round_trips() {
+        // A payload larger than one read chunk exercises the chunked
+        // growth path end to end.
+        let payload: Vec<u8> = (0..(READ_CHUNK + READ_CHUNK / 2 + 3))
+            .map(|i| (i * 31 + 7) as u8)
+            .collect();
+        let wire = frame_bytes(&payload);
+        let mut r = wire.as_slice();
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf, MAX_PAYLOAD).unwrap());
+        assert_eq!(buf, payload);
     }
 
     #[test]

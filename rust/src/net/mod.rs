@@ -28,8 +28,11 @@ use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
+
+use crate::supervise::{Backoff, Clock};
 
 /// Sending half of an opened transport: frames go out, bytes are
 /// counted. `Send` so the coordinator can keep it while the receiving
@@ -75,10 +78,12 @@ pub struct FrameSource {
 
 impl FrameSource {
     fn new(io: Box<dyn Read + Send>) -> Self {
+        // Peer-facing sources bound the unverified length field well
+        // below the writer's absolute cap; see `frame::MAX_FRAME_LEN`.
         Self {
             io,
             received: Arc::new(AtomicU64::new(0)),
-            max_payload: frame::MAX_PAYLOAD,
+            max_payload: frame::MAX_FRAME_LEN,
         }
     }
 
@@ -135,6 +140,42 @@ impl TcpTransport {
         let stream = TcpStream::connect(&addr)
             .map_err(|e| anyhow!("tcp connect to {addr:?} failed: {e}"))?;
         Ok(Self { stream })
+    }
+
+    /// Connect with bounded retry and exponential backoff: a worker
+    /// racing the coordinator's listener keeps trying instead of dying
+    /// at startup. Waits go through `clock` so tests never sleep on
+    /// wall time; `backoff` supplies the (seeded, jittered) delays.
+    pub fn connect_retry(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        attempts: usize,
+        backoff: &mut Backoff,
+        clock: &dyn Clock,
+    ) -> Result<Self> {
+        let attempts = attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            match TcpStream::connect(&addr) {
+                Ok(stream) => return Ok(Self { stream }),
+                Err(e) => last = e.to_string(),
+            }
+            if attempt + 1 < attempts {
+                clock.sleep(backoff.next_delay());
+            }
+        }
+        Err(anyhow!(
+            "tcp connect to {addr:?} failed after {attempts} attempts: {last}"
+        ))
+    }
+
+    /// Arm a read deadline on the receiving half: once opened, a
+    /// blocking `recv` that sees no bytes for `deadline` errors out
+    /// instead of hanging forever — the transport-level backstop of
+    /// the supervisor's liveness lease. `None` disarms (the default).
+    pub fn set_read_deadline(&self, deadline: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(deadline.filter(|d| !d.is_zero()))
+            .map_err(|e| anyhow!("tcp read deadline failed to arm: {e}"))
     }
 }
 
@@ -288,6 +329,33 @@ mod tests {
         let mut b_tx = b_tx;
         drop(_a_rx);
         assert!(b_tx.send(b"into the void").is_err());
+    }
+
+    #[test]
+    fn connect_retry_succeeds_against_a_live_listener() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let clock = crate::supervise::ScriptedClock::new(Duration::from_millis(1));
+        let mut backoff = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 1);
+        let t = TcpTransport::connect_retry(addr, 5, &mut backoff, &clock).unwrap();
+        assert_eq!(t.kind(), "tcp");
+        // first attempt connected: no backoff sleeps were taken
+        assert!(clock.slept().is_empty());
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_its_budget() {
+        // Bind then drop to obtain a port that refuses connections.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let clock = crate::supervise::ScriptedClock::new(Duration::from_millis(1));
+        let mut backoff = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 2);
+        let err = TcpTransport::connect_retry(addr, 3, &mut backoff, &clock).unwrap_err();
+        assert!(format!("{err}").contains("after 3 attempts"), "got: {err}");
+        // two inter-attempt waits, all on the scripted clock
+        assert_eq!(clock.slept().len(), 2);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!             install replica/                   + per-lane metrics
 //!             client state and/  0x13 EVAL       EvalReport + ScaleStats
 //!             or collect it      0x14 FAILED     rendered error chain
-//!                                0x15 STATE      collected client states
+//! 0x06 HEART- liveness ping      0x15 STATE      collected client states
+//!       BEAT  (nonce; supervisor 0x16 HEARTBEAT  echo of the ping's
+//!             lease renewal)                     nonce
 //! ```
 //!
 //! Integers are u64 LE, floats are IEEE-754 LE bit patterns (exact
@@ -34,7 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::compression::{CodecScratch, EncodeStats, QuantConfig, SparsifyMode, UpdateCodec};
 use crate::data::TaskKind;
-use crate::fl::config::{SessionConfig, TransportKind};
+use crate::fl::config::{OnShardLoss, RoundPolicy, SessionConfig, TransportKind};
 use crate::fl::schedule::ScheduleKind;
 use crate::fl::server::EvalReport;
 use crate::fl::{ClientState, ExperimentConfig, OptSnapshot, Protocol, RoundLane};
@@ -52,18 +54,24 @@ use crate::runtime::Optimizer;
 /// and the STATE install's `(shard, shards)` assignment became
 /// load-bearing — elastic resizing installs a changed shard count that
 /// workers now accept (previously forward-compat only).
-pub const PROTOCOL_VERSION: u8 = 3;
+/// v4: HEARTBEAT command/message pair (supervisor liveness leases), and
+/// the config grew a trailing round-supervision policy block (heartbeat
+/// cadence, round deadline, retry budget, backoff base, join timeout,
+/// shard-loss mode).
+pub const PROTOCOL_VERSION: u8 = 4;
 
 const TAG_INIT: u8 = 0x01;
 const TAG_ROUND: u8 = 0x02;
 const TAG_APPLY: u8 = 0x03;
 const TAG_STOP: u8 = 0x04;
 const TAG_STATE: u8 = 0x05;
+const TAG_HEARTBEAT: u8 = 0x06;
 const TAG_READY: u8 = 0x11;
 const TAG_ROUND_DONE: u8 = 0x12;
 const TAG_EVAL: u8 = 0x13;
 const TAG_FAILED: u8 = 0x14;
 const TAG_STATE_MSG: u8 = 0x15;
+const TAG_HEARTBEAT_MSG: u8 = 0x16;
 
 /// APPLY payload carries the dense f32 broadcast delta.
 const APPLY_FMT_DENSE: u8 = 0;
@@ -363,6 +371,18 @@ fn put_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
             }
         }
     }
+    // v4 round-supervision policy block. Durations travel as u64
+    // nanoseconds (exact for anything a policy plausibly holds).
+    put_u64(buf, cfg.policy.heartbeat.as_nanos() as u64);
+    put_u64(buf, cfg.policy.round_deadline.as_nanos() as u64);
+    put_usize(buf, cfg.policy.retry_budget);
+    put_u64(buf, cfg.policy.backoff.as_nanos() as u64);
+    put_u64(buf, cfg.policy.join_timeout.as_nanos() as u64);
+    buf.push(match cfg.policy.on_loss {
+        OnShardLoss::Abort => 0,
+        OnShardLoss::Respawn => 1,
+        OnShardLoss::Degrade => 2,
+    });
 }
 
 fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
@@ -453,6 +473,19 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
     } else {
         None
     };
+    let policy = RoundPolicy {
+        heartbeat: std::time::Duration::from_nanos(rd.u64()?),
+        round_deadline: std::time::Duration::from_nanos(rd.u64()?),
+        retry_budget: rd.usize_()?,
+        backoff: std::time::Duration::from_nanos(rd.u64()?),
+        join_timeout: std::time::Duration::from_nanos(rd.u64()?),
+        on_loss: match rd.u8()? {
+            0 => OnShardLoss::Abort,
+            1 => OnShardLoss::Respawn,
+            2 => OnShardLoss::Degrade,
+            other => return Err(anyhow!("unknown shard-loss tag {other}")),
+        },
+    };
     Ok(ExperimentConfig {
         name,
         artifacts_root,
@@ -485,6 +518,7 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
         compute_shards,
         transport,
         session,
+        policy,
     })
 }
 
@@ -1003,6 +1037,42 @@ pub fn decode_state_msg(payload: &[u8]) -> Result<(usize, Vec<ClientState>)> {
     Ok((shard, clients))
 }
 
+/// Encode a HEARTBEAT command (liveness ping) into `buf`. The nonce
+/// identifies the ping; the shard echoes it back in its HEARTBEAT
+/// message so the coordinator can renew the connection's lease.
+pub fn encode_heartbeat_cmd(buf: &mut Vec<u8>, nonce: u64) {
+    buf.clear();
+    buf.push(TAG_HEARTBEAT);
+    put_u64(buf, nonce);
+}
+
+/// Decode a HEARTBEAT command payload, returning the nonce to echo.
+pub fn decode_heartbeat_cmd(payload: &[u8]) -> Result<u64> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_HEARTBEAT, "HEARTBEAT command")?;
+    let nonce = rd.u64()?;
+    rd.done()?;
+    Ok(nonce)
+}
+
+/// Encode a HEARTBEAT message (the shard's echo of a ping) into `buf`.
+pub fn encode_heartbeat_msg(buf: &mut Vec<u8>, shard: usize, nonce: u64) {
+    buf.clear();
+    buf.push(TAG_HEARTBEAT_MSG);
+    put_usize(buf, shard);
+    put_u64(buf, nonce);
+}
+
+/// Decode a HEARTBEAT message payload: `(shard, echoed nonce)`.
+pub fn decode_heartbeat_msg(payload: &[u8]) -> Result<(usize, u64)> {
+    let mut rd = Rd::new(payload);
+    expect_tag(&mut rd, TAG_HEARTBEAT_MSG, "HEARTBEAT message")?;
+    let shard = rd.usize_()?;
+    let nonce = rd.u64()?;
+    rd.done()?;
+    Ok((shard, nonce))
+}
+
 /// Command-frame kinds (first payload byte), for dispatch before the
 /// per-kind decoder runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -1017,6 +1087,8 @@ pub enum CmdTag {
     Stop,
     /// Session-plane state install/collect.
     State,
+    /// Liveness ping (supervisor lease renewal).
+    Heartbeat,
 }
 
 /// Classify a command payload by tag.
@@ -1027,6 +1099,7 @@ pub fn cmd_tag(payload: &[u8]) -> Result<CmdTag> {
         Some(&TAG_APPLY) => Ok(CmdTag::Apply),
         Some(&TAG_STOP) => Ok(CmdTag::Stop),
         Some(&TAG_STATE) => Ok(CmdTag::State),
+        Some(&TAG_HEARTBEAT) => Ok(CmdTag::Heartbeat),
         Some(&other) => Err(anyhow!("unknown command tag {other:#04x}")),
         None => Err(anyhow!("empty command frame")),
     }
@@ -1321,6 +1394,8 @@ pub enum MsgTag {
     Failed,
     /// Collected session-plane client states.
     State,
+    /// Liveness-ping echo (supervisor lease renewal).
+    Heartbeat,
 }
 
 /// Classify a message payload by tag.
@@ -1331,6 +1406,7 @@ pub fn msg_tag(payload: &[u8]) -> Result<MsgTag> {
         Some(&TAG_EVAL) => Ok(MsgTag::Eval),
         Some(&TAG_FAILED) => Ok(MsgTag::Failed),
         Some(&TAG_STATE_MSG) => Ok(MsgTag::State),
+        Some(&TAG_HEARTBEAT_MSG) => Ok(MsgTag::Heartbeat),
         Some(&other) => Err(anyhow!("unknown message tag {other:#04x}")),
         None => Err(anyhow!("empty message frame")),
     }
@@ -1358,6 +1434,14 @@ mod tests {
             retain: 7,
             crash_after: Some(5),
         });
+        cfg.policy = RoundPolicy {
+            heartbeat: std::time::Duration::from_millis(250),
+            round_deadline: std::time::Duration::from_secs(30),
+            retry_budget: 4,
+            backoff: std::time::Duration::from_micros(7500),
+            join_timeout: std::time::Duration::from_secs(9),
+            on_loss: OnShardLoss::Degrade,
+        };
         cfg
     }
 
@@ -1403,6 +1487,21 @@ mod tests {
         assert!(format!("{}", decode_init(&buf).unwrap_err()).contains("version"));
         encode_init(&mut buf, 5, 2, &cfg, &ComputeSpec::Real);
         assert!(decode_init(&buf).is_err(), "shard ≥ shards must be rejected");
+    }
+
+    #[test]
+    fn heartbeat_pair_round_trips() {
+        let mut buf = Vec::new();
+        encode_heartbeat_cmd(&mut buf, 0xDEAD_BEEF_0042);
+        assert_eq!(cmd_tag(&buf).unwrap(), CmdTag::Heartbeat);
+        assert_eq!(decode_heartbeat_cmd(&buf).unwrap(), 0xDEAD_BEEF_0042);
+        // a trailing byte is a desync, not noise
+        buf.push(0);
+        assert!(decode_heartbeat_cmd(&buf).is_err());
+
+        encode_heartbeat_msg(&mut buf, 3, 17);
+        assert_eq!(msg_tag(&buf).unwrap(), MsgTag::Heartbeat);
+        assert_eq!(decode_heartbeat_msg(&buf).unwrap(), (3, 17));
     }
 
     #[test]

@@ -61,7 +61,9 @@ use crate::net::wire::{self, Rd};
 /// `--resume` rebuilds the post-resize worker set after an elastic
 /// resize, and the embedded config codec gained the session `retain`
 /// knob.
-pub const SNAPSHOT_VERSION: u8 = 2;
+/// v3: the embedded config codec grew the round-supervision policy
+/// block (wire protocol v4), changing the snapshot layout.
+pub const SNAPSHOT_VERSION: u8 = 3;
 
 /// First payload byte of every snapshot (distinct from all wire tags,
 /// so a misrouted file is caught immediately).

@@ -1,0 +1,273 @@
+//! Deterministic time and retry plumbing for the shard supervisor
+//! plane: a fakeable [`Clock`] so heartbeat leases, round deadlines and
+//! recovery backoff can be driven by a scripted time source in tests
+//! (no chaos test sleeps on wall-clock time), plus the seeded
+//! exponential [`Backoff`] shared by shard respawn and the
+//! `shard-worker --connect` retry loop.
+//!
+//! Production code holds an `Arc<dyn Clock>` and never calls
+//! `Instant::now()` or `thread::sleep` directly on a supervision path;
+//! tests substitute a [`ScriptedClock`] whose `sleep` advances fake
+//! time instantly and whose `idle_tick` models the poll quantum of the
+//! coordinator's wait loops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source the supervisor plane can be driven by.
+///
+/// Implementations must be cheap to query and safe to share across the
+/// coordinator and its reader threads (`Send + Sync`, used behind an
+/// `Arc`).
+pub trait Clock: Send + Sync {
+    /// Monotonic time elapsed since this clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Block (or pretend to block) for `d`. Recovery backoff waits go
+    /// through here so a scripted clock can collapse them to zero wall
+    /// time while still recording that the wait happened.
+    fn sleep(&self, d: Duration);
+
+    /// One poll-loop quantum elapsed with nothing received. The real
+    /// clock does nothing (its waits already block on channel/socket
+    /// timeouts); a scripted clock advances fake time so lease and
+    /// deadline expiry make progress without wall-time sleeps.
+    fn idle_tick(&self);
+}
+
+/// Production [`Clock`]: monotonic wall time from a fixed epoch.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    /// A clock whose epoch is "now".
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    fn idle_tick(&self) {}
+}
+
+/// Test [`Clock`]: fake time that only moves when the test (or a
+/// supervised wait loop) advances it.
+///
+/// `sleep(d)` advances fake time by `d` instantly and logs the request;
+/// `idle_tick()` advances by the configured tick quantum, standing in
+/// for one empty poll-loop pass. Chaos tests assert on lease/deadline
+/// behaviour purely through this clock.
+pub struct ScriptedClock {
+    now_ns: AtomicU64,
+    tick: Duration,
+    slept: Mutex<Vec<Duration>>,
+}
+
+impl ScriptedClock {
+    /// A scripted clock starting at t=0 whose idle tick is `tick`.
+    pub fn new(tick: Duration) -> Self {
+        Self {
+            now_ns: AtomicU64::new(0),
+            tick,
+            slept: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Advance fake time by `d` (test-side control).
+    pub fn advance(&self, d: Duration) {
+        self.now_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Every duration passed to [`Clock::sleep`] so far, in order.
+    pub fn slept(&self) -> Vec<Duration> {
+        self.slept.lock().unwrap().clone()
+    }
+}
+
+impl Clock for ScriptedClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns.load(Ordering::SeqCst))
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.slept.lock().unwrap().push(d);
+        self.advance(d);
+    }
+
+    fn idle_tick(&self) {
+        self.advance(self.tick);
+    }
+}
+
+/// splitmix64 step — same generator family the scheduler uses for
+/// participant selection, so backoff jitter is reproducible from a
+/// seed with zero dependencies.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded exponential backoff with equal jitter: attempt `k` waits
+/// `cap/2 + jitter` where `cap = min(base · 2^k, max)` and `jitter`
+/// is drawn uniformly from `[0, cap/2]` by a splitmix64 stream. The
+/// same seed always yields the same delay sequence, so recovery
+/// timing is as reproducible as everything else in the run.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    attempt: u32,
+    rng: u64,
+}
+
+impl Backoff {
+    /// Backoff starting at `base`, capped at `max`, jittered by `seed`.
+    pub fn new(base: Duration, max: Duration, seed: u64) -> Self {
+        Self {
+            base,
+            max: max.max(base),
+            attempt: 0,
+            rng: seed,
+        }
+    }
+
+    /// Delay to wait before the next attempt (advances the sequence).
+    pub fn next_delay(&mut self) -> Duration {
+        let cap_ns = self
+            .base
+            .as_nanos()
+            .saturating_mul(1u128 << self.attempt.min(48))
+            .min(self.max.as_nanos()) as u64;
+        self.attempt = self.attempt.saturating_add(1);
+        let half = cap_ns / 2;
+        let jitter = if half == 0 {
+            0
+        } else {
+            splitmix64(&mut self.rng) % (half + 1)
+        };
+        Duration::from_nanos(half + jitter)
+    }
+
+    /// Attempts taken so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Restart the sequence (keeps the current rng position so later
+    /// incidents don't replay the first incident's jitter).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let c = MonotonicClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        c.idle_tick(); // no-op, must not panic
+    }
+
+    #[test]
+    fn scripted_clock_is_fully_deterministic() {
+        let c = ScriptedClock::new(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(100));
+        assert_eq!(c.now(), Duration::from_millis(100));
+        c.idle_tick();
+        assert_eq!(c.now(), Duration::from_millis(105));
+        c.sleep(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(355));
+        assert_eq!(c.slept(), vec![Duration::from_millis(250)]);
+    }
+
+    #[test]
+    fn scripted_clock_shares_across_threads() {
+        let c = Arc::new(ScriptedClock::new(Duration::from_millis(1)));
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.advance(Duration::from_millis(7)));
+        h.join().unwrap();
+        assert_eq!(c.now(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn backoff_is_seed_deterministic() {
+        let mut a = Backoff::new(Duration::from_millis(50), Duration::from_secs(2), 42);
+        let mut b = Backoff::new(Duration::from_millis(50), Duration::from_secs(2), 42);
+        let sa: Vec<_> = (0..8).map(|_| a.next_delay()).collect();
+        let sb: Vec<_> = (0..8).map(|_| b.next_delay()).collect();
+        assert_eq!(sa, sb);
+        // a different seed jitters differently
+        let mut c = Backoff::new(Duration::from_millis(50), Duration::from_secs(2), 43);
+        let sc: Vec<_> = (0..8).map(|_| c.next_delay()).collect();
+        assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn backoff_grows_then_saturates_at_max() {
+        let base = Duration::from_millis(100);
+        let max = Duration::from_secs(1);
+        let mut b = Backoff::new(base, max, 7);
+        let delays: Vec<_> = (0..12).map(|_| b.next_delay()).collect();
+        // every delay lies in [cap/2, cap] for its attempt's cap
+        let mut cap = base;
+        for d in &delays {
+            assert!(*d >= cap / 2 && *d <= cap, "delay {d:?} outside [{:?}, {cap:?}]", cap / 2);
+            cap = (cap * 2).min(max);
+        }
+        // the tail is capped: never above max
+        assert!(delays.iter().all(|d| *d <= max));
+        // and the later attempts actually reach the cap's band
+        assert!(delays[8] >= max / 2);
+    }
+
+    #[test]
+    fn backoff_reset_restarts_growth_without_replaying_jitter() {
+        let mut b = Backoff::new(Duration::from_millis(50), Duration::from_secs(2), 9);
+        let first = b.next_delay();
+        b.next_delay();
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let again = b.next_delay();
+        // same cap band as attempt 0, but a fresh jitter draw
+        assert!(again <= Duration::from_millis(50));
+        assert_ne!(first, again);
+    }
+
+    #[test]
+    fn zero_base_backoff_is_zero() {
+        let mut b = Backoff::new(Duration::ZERO, Duration::ZERO, 1);
+        assert_eq!(b.next_delay(), Duration::ZERO);
+        assert_eq!(b.next_delay(), Duration::ZERO);
+    }
+}

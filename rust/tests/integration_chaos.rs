@@ -1,0 +1,347 @@
+//! Chaos conformance suite for the self-healing round supervisor.
+//!
+//! Every test injects a scripted [`ChaosDeath`] into a synthetic-plane
+//! sharded run and pins the recovery invariants:
+//!
+//! 1. **Respawn replay** — a shard killed mid-round (or mid-checkpoint
+//!    collect) is respawned, rehydrated from the recovery cache, and the
+//!    in-flight round replayed; the final per-round metrics are
+//!    byte-identical to the undisturbed run, on every transport.
+//! 2. **Quorum degradation** — with `on_loss = degrade`, the dead
+//!    shard's clients fold deterministically into the survivors
+//!    (`survivors[c % survivors.len()]`), eval migrates to the first
+//!    survivor, and the run still matches the undisturbed metrics.
+//! 3. **Deadline detection** — a silent straggler (stalls but keeps its
+//!    connection open) is detected purely by the scripted round
+//!    deadline, then recovered like a crash.
+//! 4. **No wall-clock sleeps** — all legs run on a [`ScriptedClock`];
+//!    recovery backoff sleeps land in the scripted log, never in real
+//!    time, so the whole suite stays fast and deterministic.
+//!
+//! The incident history rides in `RunLog.events` (excluded from the
+//! metrics CSV), so byte-identity of `rounds` and the recorded
+//! Death → Respawned/Degraded sequence are asserted independently.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::*;
+
+use fsfl::coordinator::{self, ChaosDeath, ChaosPoint, ElasticPlan};
+use fsfl::data::TaskKind;
+use fsfl::fl::{
+    ExperimentConfig, OnShardLoss, Protocol, RoundPolicy, SessionConfig, TransportKind,
+};
+use fsfl::metrics::{RunLog, ShardEventKind};
+use fsfl::session::SessionStore;
+use fsfl::supervise::ScriptedClock;
+
+/// A unique temp dir per test leg (removed on success; best effort).
+/// CI points `FSFL_SESSION_TMP` at a known root so checkpoint dirs of
+/// *failed* legs survive for the artifact upload.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let root = std::env::var_os("FSFL_SESSION_TMP")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    let _ = std::fs::create_dir_all(&root);
+    let d = root.join(format!("fsfl_chaos_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn ccfg(transport: TransportKind, shards: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, Protocol::Fsfl);
+    cfg.clients = 5;
+    cfg.rounds = 6;
+    cfg.participation = 0.6; // 3 of 5 participate per round
+    cfg.seed = 77;
+    cfg.compute_shards = shards;
+    cfg.transport = transport;
+    cfg
+}
+
+/// Supervision policy for the crash legs: loss handling only. Detection
+/// is via the torn connection itself (ConnDown), so no scripted time
+/// has to pass — the run is deterministic with leases and deadlines off.
+fn policy(on_loss: OnShardLoss) -> RoundPolicy {
+    RoundPolicy {
+        backoff: Duration::from_millis(10),
+        join_timeout: Duration::from_secs(30),
+        on_loss,
+        ..RoundPolicy::default()
+    }
+}
+
+const TRANSPORTS: [TransportKind; 3] = [
+    TransportKind::Mpsc,
+    TransportKind::Loopback,
+    TransportKind::Tcp,
+];
+
+fn undisturbed(transport: TransportKind) -> RunLog {
+    let reference =
+        coordinator::run_experiment_synthetic(ccfg(transport, 2), manifest(), |_| {}).unwrap();
+    assert_eq!(reference.rounds.len(), 6);
+    assert!(reference.events.is_empty());
+    reference
+}
+
+/// Run `cfg` under a scripted clock with one injected death; returns
+/// the finished log and the scripted clock for sleep-log assertions.
+fn chaotic(cfg: ExperimentConfig, death: ChaosDeath) -> (RunLog, Arc<ScriptedClock>) {
+    let clock = Arc::new(ScriptedClock::new(Duration::from_millis(5)));
+    let log = coordinator::run_experiment_synthetic_supervised(
+        cfg,
+        manifest(),
+        ElasticPlan::default(),
+        None,
+        Some(clock.clone()),
+        vec![death],
+        |_| {},
+    )
+    .unwrap();
+    (log, clock)
+}
+
+// ---------------------------------------------------------------------------
+// 1 · kill mid-round → respawn replay, every transport
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_round_kill_respawns_byte_identical_across_transports() {
+    for transport in TRANSPORTS {
+        let reference = undisturbed(transport);
+        let mut cfg = ccfg(transport, 2);
+        cfg.policy = policy(OnShardLoss::Respawn);
+        let death = ChaosDeath {
+            shard: 1,
+            round: 2,
+            point: ChaosPoint::MidRound,
+        };
+        let (log, clock) = chaotic(cfg, death);
+        let tag = transport.name();
+        assert_eq!(
+            log.rounds, reference.rounds,
+            "{tag}: recovered run diverged from the undisturbed run"
+        );
+        assert_eq!(log.events.len(), 2, "{tag}: events {:?}", log.events);
+        assert_eq!((log.events[0].round, log.events[0].shard), (2, 1), "{tag}");
+        assert!(
+            matches!(log.events[0].kind, ShardEventKind::Death { .. }),
+            "{tag}: {:?}",
+            log.events[0]
+        );
+        assert_eq!(
+            log.events[1].kind,
+            ShardEventKind::Respawned { attempt: 1 },
+            "{tag}"
+        );
+        assert!(
+            !clock.slept().is_empty(),
+            "{tag}: respawn backoff must sleep on the scripted clock"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2 · kill mid-round → quorum degradation, every transport
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_round_kill_degrades_deterministically_across_transports() {
+    for transport in TRANSPORTS {
+        let reference = undisturbed(transport);
+        // Kill shard 0 — the harder case: its clients {0, 2, 4} must
+        // fold into shard 1 and the eval role must migrate with them.
+        let mut cfg = ccfg(transport, 2);
+        cfg.policy = policy(OnShardLoss::Degrade);
+        let death = ChaosDeath {
+            shard: 0,
+            round: 3,
+            point: ChaosPoint::MidRound,
+        };
+        let (log, _clock) = chaotic(cfg, death);
+        let tag = transport.name();
+        assert_eq!(
+            log.rounds, reference.rounds,
+            "{tag}: degraded run diverged from the undisturbed run"
+        );
+        assert_eq!(log.events.len(), 2, "{tag}: events {:?}", log.events);
+        assert!(
+            matches!(log.events[0].kind, ShardEventKind::Death { .. }),
+            "{tag}: {:?}",
+            log.events[0]
+        );
+        assert_eq!(
+            log.events[1].kind,
+            ShardEventKind::Degraded {
+                clients: vec![0, 2, 4]
+            },
+            "{tag}: orphan fold-in must be deterministic"
+        );
+        assert_eq!((log.events[1].round, log.events[1].shard), (3, 0), "{tag}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3 · kill mid-STATE-collect (checkpointing every round)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_collect_kill_recovers_and_checkpoints_across_transports() {
+    for transport in TRANSPORTS {
+        for on_loss in [OnShardLoss::Respawn, OnShardLoss::Degrade] {
+            let reference = undisturbed(transport);
+            let tag = format!("{}_{on_loss:?}", transport.name());
+            let dir = tmp_dir(&format!("collect_{tag}"));
+            let mut cfg = ccfg(transport, 2);
+            cfg.policy = policy(on_loss);
+            cfg.session = Some(SessionConfig {
+                dir: dir.clone(),
+                every: 1,
+                retain: SessionConfig::DEFAULT_RETAIN,
+                crash_after: None,
+            });
+            let death = ChaosDeath {
+                shard: 1,
+                round: 2,
+                point: ChaosPoint::MidCollect,
+            };
+            let (log, _clock) = chaotic(cfg, death);
+            assert_eq!(
+                log.rounds, reference.rounds,
+                "{tag}: recovered run diverged from the undisturbed run"
+            );
+            assert_eq!((log.events[0].round, log.events[0].shard), (2, 1), "{tag}");
+            assert!(
+                matches!(log.events[0].kind, ShardEventKind::Death { .. }),
+                "{tag}: {:?}",
+                log.events[0]
+            );
+            match on_loss {
+                OnShardLoss::Respawn => assert_eq!(
+                    log.events[1].kind,
+                    ShardEventKind::Respawned { attempt: 1 },
+                    "{tag}"
+                ),
+                _ => assert_eq!(
+                    log.events[1].kind,
+                    ShardEventKind::Degraded {
+                        clients: vec![1, 3]
+                    },
+                    "{tag}"
+                ),
+            }
+            // The interrupted checkpoint was retried: the session ends
+            // with a snapshot covering the full run.
+            let store = SessionStore::open(&dir).unwrap();
+            let state = store.latest().unwrap().expect("final snapshot written");
+            assert_eq!(state.next_round, 6, "{tag}: checkpoint chain truncated");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4 · silent straggler → scripted deadline detection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stalled_shard_is_detected_by_the_scripted_round_deadline() {
+    let reference = undisturbed(TransportKind::Mpsc);
+    let mut cfg = ccfg(TransportKind::Mpsc, 2);
+    cfg.policy = RoundPolicy {
+        heartbeat: Duration::from_millis(20),
+        round_deadline: Duration::from_millis(50),
+        backoff: Duration::from_millis(10),
+        join_timeout: Duration::from_secs(30),
+        on_loss: OnShardLoss::Respawn,
+        ..RoundPolicy::default()
+    };
+    let death = ChaosDeath {
+        shard: 1,
+        round: 1,
+        point: ChaosPoint::Stall,
+    };
+    let (log, clock) = chaotic(cfg, death);
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "deadline recovery diverged from the undisturbed run"
+    );
+    assert_eq!((log.events[0].round, log.events[0].shard), (1, 1));
+    match &log.events[0].kind {
+        ShardEventKind::Death { reason } => assert!(
+            reason.contains("round deadline"),
+            "stall must be caught by the deadline, got: {reason}"
+        ),
+        other => panic!("expected a deadline death, got {other:?}"),
+    }
+    assert_eq!(log.events[1].kind, ShardEventKind::Respawned { attempt: 1 });
+    // The stall itself, its detection, and the respawn backoff all ran
+    // on scripted time — the sleep log proves no wall-clock waiting.
+    assert!(
+        !clock.slept().is_empty(),
+        "recovery must sleep on the scripted clock"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 5 · chained incidents: a degraded run keeps its snapshot/resume story
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degraded_run_remains_resumable() {
+    let reference = undisturbed(TransportKind::Loopback);
+    // Degrade at round 1, then kill the run at round 3 and resume: the
+    // resumed (fresh, full-quorum) run must still land on the reference
+    // metrics — degradation never leaks into the persisted state.
+    let dir = tmp_dir("degrade_resume");
+    let mut cfg = ccfg(TransportKind::Loopback, 2);
+    cfg.policy = policy(OnShardLoss::Degrade);
+    cfg.session = Some(SessionConfig {
+        dir: dir.clone(),
+        every: 1,
+        retain: SessionConfig::DEFAULT_RETAIN,
+        crash_after: Some(3),
+    });
+    let death = ChaosDeath {
+        shard: 1,
+        round: 1,
+        point: ChaosPoint::MidRound,
+    };
+    let clock = Arc::new(ScriptedClock::new(Duration::from_millis(5)));
+    let err = coordinator::run_experiment_synthetic_supervised(
+        cfg,
+        manifest(),
+        ElasticPlan::default(),
+        None,
+        Some(clock),
+        vec![death],
+        |_| {},
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("injected crash"),
+        "expected the injected crash, got: {err:#}"
+    );
+    let store = SessionStore::open(&dir).unwrap();
+    let state = store.latest().unwrap().expect("snapshot written");
+    assert_eq!(state.next_round, 4, "crash after round 3");
+    let resumed = coordinator::run_experiment_synthetic_session(
+        state.cfg.clone(),
+        manifest(),
+        ElasticPlan::default(),
+        Some(state),
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(
+        resumed.rounds, reference.rounds,
+        "resume after a degraded run diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -109,6 +109,63 @@ fn frame_codec_never_accepts_truncated_or_flipped_frames() {
     }
 }
 
+#[test]
+fn frame_codec_bounds_hostile_length_fields() {
+    let mut rng = XorShiftRng::new(0xC0FFEE);
+    let mut buf = Vec::new();
+    // Adversarial length-field corpus: every frame below has a valid
+    // magic but a forged length, read through the peer-facing cap
+    // `FrameSource` actually installs (`MAX_FRAME_LEN`). Each must
+    // error cleanly — no panic, and never ballooning the read buffer
+    // to the claimed length.
+    let forged: Vec<u32> = vec![
+        u32::MAX,
+        u32::MAX - 1,
+        frame::MAX_PAYLOAD as u32, // writer-legal, peer-facing-illegal
+        (frame::MAX_FRAME_LEN + 1) as u32,
+        (frame::MAX_FRAME_LEN as u32) << 1,
+        0x8000_0000,
+    ];
+    for claimed in forged {
+        for body in [0usize, 7, 256] {
+            let mut wire_bytes = Vec::new();
+            frame::write_frame(&mut wire_bytes, &vec![0xAB; body]).unwrap();
+            wire_bytes[4..8].copy_from_slice(&claimed.to_le_bytes());
+            let mut r = wire_bytes.as_slice();
+            let err = frame::read_frame(&mut r, &mut buf, frame::MAX_FRAME_LEN)
+                .expect_err("forged length accepted");
+            assert!(
+                format!("{err}").contains("oversized"),
+                "claimed {claimed} with {body}-byte body: unexpected error {err}"
+            );
+        }
+    }
+    // In-cap forged lengths over a truncated stream: the reader may
+    // only learn the length lied from the payload running dry, and the
+    // buffer must grow chunkwise, not by the claimed amount.
+    for _ in 0..20 {
+        // Claims start at 8 so none can coincide with the real 4-byte
+        // payload (which would make the frame legitimately valid).
+        let claimed = 8 + (rng.next_u64() as u32) % (frame::MAX_FRAME_LEN as u32 - 8);
+        let mut wire_bytes = Vec::new();
+        frame::write_frame(&mut wire_bytes, b"tiny").unwrap();
+        wire_bytes[4..8].copy_from_slice(&claimed.to_le_bytes());
+        let mut r = wire_bytes.as_slice();
+        buf = Vec::new();
+        let err = frame::read_frame(&mut r, &mut buf, frame::MAX_FRAME_LEN)
+            .expect_err("forged in-cap length accepted over a short stream");
+        assert!(
+            format!("{err}").contains("mid-frame") || format!("{err}").contains("checksum"),
+            "claimed {claimed}: unexpected error {err}"
+        );
+        assert!(
+            buf.capacity() <= 8 << 20,
+            "claimed {claimed} ballooned the buffer to {} bytes",
+            buf.capacity()
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 2 · wire message round-trips over real lanes
 // ---------------------------------------------------------------------------
