@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use fsfl::bench::summary::{self, Hist};
 use fsfl::benchkit::{smoke_mode, Report};
 use fsfl::compression::{QuantConfig, SparsifyMode};
 use fsfl::data::{TaskKind, XorShiftRng};
@@ -191,10 +192,13 @@ fn codec_plane_section(report: &mut Report, smoke: bool) {
             }
         }
 
+        let mut round_ms = Hist::new();
         let a0 = allocs();
         let t0 = Instant::now();
         for _ in 0..rounds {
+            let r0 = Instant::now();
             bench.round(&pool);
+            round_ms.push(r0.elapsed().as_secs_f64() * 1e3);
         }
         let secs = t0.elapsed().as_secs_f64();
         let allocs_per_round = (allocs() - a0) as f64 / rounds as f64;
@@ -233,7 +237,8 @@ fn codec_plane_section(report: &mut Report, smoke: bool) {
             .num("ms_per_round", secs * 1000.0 / rounds as f64)
             .num("encode_us_per_client", encode_us_per_client)
             .num("allocs_per_round", allocs_per_round)
-            .int("up_bytes_per_round", up_bytes as u64);
+            .int("up_bytes_per_round", up_bytes as u64)
+            .obj("round_ms", round_ms.report());
         report.obj(&format!("pool{}", pool.workers()), sub);
     }
 
@@ -323,7 +328,7 @@ fn scheduler_section(report: &mut Report, smoke: bool) {
     );
     println!("{:>10} {:>12} {:>14}", "schedule", "rounds/s", "ms/round");
 
-    let run_mode = |mode: ScheduleMode| -> (f64, Vec<Vec<u8>>) {
+    let run_mode = |mode: ScheduleMode| -> (f64, Hist, Vec<Vec<u8>>) {
         let mut lanes: Vec<RoundLane> = (0..clients)
             .map(|_| RoundLane::new(manifest.clone()))
             .collect();
@@ -338,12 +343,15 @@ fn scheduler_section(report: &mut Report, smoke: bool) {
         )
         .unwrap();
         let streams: Vec<Vec<u8>> = lanes.iter().map(|l| l.stream_w.clone()).collect();
+        let mut round_ms = Hist::new();
         let t0 = Instant::now();
         for _ in 0..rounds {
+            let r0 = Instant::now();
             scheduler::run_round(
                 mode, &pool, &mut compute, &mut lanes, &order, &pcfg, &update_idx, &scale_idx,
             )
             .unwrap();
+            round_ms.push(r0.elapsed().as_secs_f64() * 1e3);
         }
         let secs = t0.elapsed().as_secs_f64();
         let rps = rounds as f64 / secs;
@@ -353,11 +361,11 @@ fn scheduler_section(report: &mut Report, smoke: bool) {
             rps,
             secs * 1000.0 / rounds as f64
         );
-        (rps, streams)
+        (rps, round_ms, streams)
     };
 
-    let (staged_rps, staged_streams) = run_mode(ScheduleMode::Staged);
-    let (pipelined_rps, pipelined_streams) = run_mode(ScheduleMode::Pipelined);
+    let (staged_rps, staged_ms, staged_streams) = run_mode(ScheduleMode::Staged);
+    let (pipelined_rps, pipelined_ms, pipelined_streams) = run_mode(ScheduleMode::Pipelined);
     assert_eq!(
         staged_streams, pipelined_streams,
         "pipelined schedule changed the bitstreams"
@@ -371,7 +379,9 @@ fn scheduler_section(report: &mut Report, smoke: bool) {
         .num("pipeline_speedup", speedup)
         .bool("pipeline_overlap_wins", pipelined_rps >= staged_rps)
         .int("sim_train_iters", train_iters)
-        .int("clients", clients as u64);
+        .int("clients", clients as u64)
+        .obj("staged_round_ms", staged_ms.report())
+        .obj("pipelined_round_ms", pipelined_ms.report());
     report.obj("scheduler", sub);
 }
 
@@ -436,8 +446,9 @@ fn experiment_section() {
 fn main() {
     let smoke = smoke_mode();
     let mut report = Report::new();
-    report.str("bench", "fl_round");
-    report.str("mode", if smoke { "smoke" } else { "full" });
+    // Same versioned envelope as BENCH_scenarios.json, so one schema
+    // gate (and one CI diff script) covers both artifacts.
+    summary::file_header(&mut report, "fl_round", if smoke { "smoke" } else { "full" });
 
     codec_plane_section(&mut report, smoke);
     scheduler_section(&mut report, smoke);
@@ -445,9 +456,26 @@ fn main() {
         experiment_section();
     }
 
-    let out = std::env::var("FSFL_BENCH_OUT").unwrap_or_else(|_| "BENCH_fl_round.json".into());
-    match report.write(&out) {
-        Ok(()) => println!("\nreport → {out}"),
-        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    // Smoke mode exercises the very same writer + schema gate as a full
+    // run, but cleans up after itself unless FSFL_BENCH_OUT asks CI to
+    // keep the artifact.
+    let explicit = std::env::var("FSFL_BENCH_OUT").ok();
+    let ephemeral = smoke && explicit.is_none();
+    let out = explicit.unwrap_or_else(|| {
+        if ephemeral {
+            "BENCH_fl_round.smoke.tmp.json".into()
+        } else {
+            "BENCH_fl_round.json".into()
+        }
+    });
+    report.write(&out).expect("writing the bench report");
+    let text = std::fs::read_to_string(&out).expect("reading back the bench report");
+    let parsed = fsfl::bench::json::parse(&text).expect("bench report is valid JSON");
+    summary::validate_summary(&parsed).expect("bench report passes the schema gate");
+    if ephemeral {
+        std::fs::remove_file(&out).expect("removing the smoke-mode temp report");
+        println!("\nreport validated (smoke mode, temp file removed)");
+    } else {
+        println!("\nreport → {out}");
     }
 }

@@ -1,0 +1,889 @@
+//! The process driver: runs one [`Scenario`] against the release
+//! binary, parses its [`super::METRIC_PREFIX`] stdout lines, samples
+//! `/proc/<pid>`, and folds everything into a [`RunRecord`] /
+//! JSON-lines output plus the merged [`summarize`] report.
+//!
+//! Chaos handling lives here too: the `KillResume` leg SIGKILLs the
+//! child only after the required number of *live* round lines arrived
+//! (so the kill provably lands mid-run, past a checkpoint), then runs
+//! `fsfl run --resume` on the same session directory; the arrival leg
+//! runs `fsfl serve` and launches `fsfl shard-worker` children at the
+//! scenario's seeded Poisson offsets.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::benchkit::Report;
+use crate::fl::synth::STRAGGLE_ENV;
+
+use super::sampler::{ProcSampler, ProcUsage};
+use super::spec::{ChaosLeg, Scenario, SuiteKind};
+use super::summary::{self, Hist};
+use super::{METRIC_PREFIX, RUN_SCHEMA, SCHEMA_VERSION};
+
+/// Hard per-child wall-clock ceiling: a hung scenario is killed and
+/// recorded as failed instead of wedging the whole suite.
+pub const CHILD_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Everything the driver needs to run scenarios: the `fsfl` binary to
+/// drive and a scratch directory for per-scenario run dirs (kept on
+/// failure for post-mortem, removed on success).
+#[derive(Debug, Clone)]
+pub struct BenchCtx {
+    /// Path to the release `fsfl` binary.
+    pub exe: PathBuf,
+    /// Scratch root for per-scenario output/checkpoint dirs.
+    pub scratch: PathBuf,
+}
+
+/// Result of one scenario run — the source of one JSON line.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// The scenario that produced this record.
+    pub scenario: Scenario,
+    /// Whether the run completed every round and the child(ren) exited
+    /// cleanly.
+    pub ok: bool,
+    /// Failure description when `!ok`.
+    pub error: Option<String>,
+    /// Driver-side wall clock for the whole scenario, ms (spawn to
+    /// final exit, resume included).
+    pub wall_ms: f64,
+    /// Live per-round wall-clock latencies, ms, in round order.
+    pub round_ms: Vec<f64>,
+    /// Total upstream payload bytes over the run (codec accounting).
+    pub up_bytes: u64,
+    /// Total downstream payload bytes over the run.
+    pub down_bytes: u64,
+    /// Measured frame-layer bytes coordinator→shards (wire transports
+    /// only).
+    pub wire_sent: Option<u64>,
+    /// Measured frame-layer bytes shards→coordinator.
+    pub wire_recv: Option<u64>,
+    /// Synthetic model parameter count (for the dense-f32 baseline).
+    pub params: Option<u64>,
+    /// Dense-f32 upstream baseline: Σ rounds participants × params × 4
+    /// (extrapolated over rounds whose live line a SIGKILL swallowed).
+    pub dense_bytes: u64,
+    /// Peak RSS of the child(ren), KiB.
+    pub rss_peak_kb: Option<u64>,
+    /// Total child CPU time, ms.
+    pub cpu_ms: Option<u64>,
+    /// Compact supervisor-incident history
+    /// ([`crate::metrics::RunLog::events_compact`]).
+    pub events: String,
+    /// Whether a `--resume` leg ran.
+    pub resumed: bool,
+    /// Rounds the final log contained.
+    pub rounds_done: usize,
+}
+
+impl RunRecord {
+    fn skeleton(scenario: Scenario) -> Self {
+        RunRecord {
+            scenario,
+            ok: false,
+            error: None,
+            wall_ms: 0.0,
+            round_ms: Vec::new(),
+            up_bytes: 0,
+            down_bytes: 0,
+            wire_sent: None,
+            wire_recv: None,
+            params: None,
+            dense_bytes: 0,
+            rss_peak_kb: None,
+            cpu_ms: None,
+            events: "-".into(),
+            resumed: false,
+            rounds_done: 0,
+        }
+    }
+
+    /// Completed rounds per second of driver wall clock.
+    pub fn rounds_per_sec(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.rounds_done as f64 * 1e3 / self.wall_ms
+        } else {
+            0.0
+        }
+    }
+
+    /// Upstream compression ratio vs the dense-f32 baseline.
+    pub fn compression_x(&self) -> Option<f64> {
+        if self.dense_bytes > 0 && self.up_bytes > 0 {
+            Some(self.dense_bytes as f64 / self.up_bytes as f64)
+        } else {
+            None
+        }
+    }
+
+    fn round_hist(&self) -> Hist {
+        let mut h = Hist::new();
+        for &ms in &self.round_ms {
+            h.push(ms);
+        }
+        h
+    }
+
+    /// Render this record as one JSON line of the
+    /// [`super::RUN_SCHEMA`] schema (the exact field set
+    /// [`summary::RUN_FIELDS`] pins).
+    pub fn to_json_line(&self) -> String {
+        fn opt_int(r: &mut Report, key: &str, v: Option<u64>) {
+            match v {
+                Some(v) => {
+                    r.int(key, v);
+                }
+                None => {
+                    r.null(key);
+                }
+            }
+        }
+        fn opt_num(r: &mut Report, key: &str, v: Option<f64>) {
+            match v {
+                Some(v) => {
+                    r.num(key, v);
+                }
+                None => {
+                    r.null(key);
+                }
+            }
+        }
+        fn opt_str(r: &mut Report, key: &str, v: Option<&str>) {
+            match v {
+                Some(v) => {
+                    r.str(key, v);
+                }
+                None => {
+                    r.null(key);
+                }
+            }
+        }
+        let s = &self.scenario;
+        let h = self.round_hist();
+        let mut r = Report::new();
+        r.str("schema", RUN_SCHEMA)
+            .int("v", SCHEMA_VERSION)
+            .str("suite", s.suite.name())
+            .str("scenario", &s.id)
+            .str("transport", s.transport.name())
+            .str("schedule", s.schedule_name())
+            .int("shards", s.shards as u64)
+            .str("model", s.model.name())
+            .str("protocol", &s.protocol)
+            .int("clients", s.clients as u64)
+            .int("rounds", s.rounds as u64)
+            .int("seed", s.seed)
+            .num("participation", s.participation)
+            .bool("shard_procs", s.shard_procs)
+            .bool("ok", self.ok);
+        opt_str(&mut r, "error", self.error.as_deref());
+        r.bool("resumed", self.resumed)
+            .int("rounds_done", self.rounds_done as u64)
+            .num("wall_ms", self.wall_ms)
+            .num("rounds_per_sec", self.rounds_per_sec())
+            .nums("round_ms", &self.round_ms);
+        opt_num(&mut r, "round_ms_p50", h.percentile(50.0));
+        opt_num(&mut r, "round_ms_p95", h.percentile(95.0));
+        opt_num(&mut r, "round_ms_p99", h.percentile(99.0));
+        r.int("up_bytes", self.up_bytes)
+            .int("down_bytes", self.down_bytes);
+        opt_int(&mut r, "wire_sent", self.wire_sent);
+        opt_int(&mut r, "wire_recv", self.wire_recv);
+        opt_int(&mut r, "params", self.params);
+        r.int("dense_bytes", self.dense_bytes);
+        opt_num(&mut r, "compression_x", self.compression_x());
+        opt_int(&mut r, "rss_peak_kb", self.rss_peak_kb);
+        opt_int(&mut r, "cpu_ms", self.cpu_ms);
+        let arrivals: Vec<f64> = s.arrivals_ms.iter().map(|&ms| ms as f64).collect();
+        r.nums("arrivals_ms", &arrivals);
+        opt_str(
+            &mut r,
+            "straggle",
+            s.straggle.map(|(e, ms)| format!("{e}:{ms}")).as_deref(),
+        );
+        opt_str(&mut r, "chaos", s.chaos.as_ref().map(ChaosLeg::label).as_deref());
+        r.str("events", &self.events);
+        r.render()
+    }
+
+    /// One-line human outcome for the progress log.
+    pub fn outcome_line(&self) -> String {
+        match &self.error {
+            Some(e) => format!("FAILED: {e}"),
+            None => format!(
+                "ok: {:.2} rounds/s, up {} B, wire {}, compression {}, events {}",
+                self.rounds_per_sec(),
+                self.up_bytes,
+                match (self.wire_sent, self.wire_recv) {
+                    (Some(s), Some(r)) => format!("{} B", s + r),
+                    _ => "-".into(),
+                },
+                self.compression_x()
+                    .map(|x| format!("{x:.1}x"))
+                    .unwrap_or_else(|| "-".into()),
+                self.events
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric-line parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct RoundObs {
+    wall_ms: f64,
+    up: u64,
+    down: u64,
+    participants: u64,
+}
+
+#[derive(Debug, Default)]
+struct Parsed {
+    rounds: BTreeMap<usize, RoundObs>,
+    totals: Option<(usize, u64, u64)>,
+    wire: Option<(u64, u64)>,
+    params: Option<u64>,
+    events: Option<String>,
+}
+
+/// Parse every [`METRIC_PREFIX`] line in `lines` into `parsed`.
+/// `lenient` tolerates malformed metric lines (a SIGKILL can land
+/// mid-write, truncating the child's final line); strict mode treats
+/// them as protocol errors.
+fn parse_into(parsed: &mut Parsed, lines: &[String], lenient: bool) -> Result<()> {
+    for line in lines {
+        let Some(rest) = line.strip_prefix(METRIC_PREFIX) else {
+            continue;
+        };
+        let mut toks = rest.split_whitespace();
+        let kind = toks.next().unwrap_or("");
+        let kvs: Vec<(&str, &str)> = toks.filter_map(|t| t.split_once('=')).collect();
+        let get = |k: &str| kvs.iter().find(|(key, _)| *key == k).map(|&(_, v)| v);
+        let res: Result<()> = (|| {
+            let want = |k: &str| get(k).ok_or_else(|| anyhow!("metric line missing {k}: {line}"));
+            match kind {
+                "round" => {
+                    let r: usize = want("r")?.parse()?;
+                    parsed.rounds.insert(
+                        r,
+                        RoundObs {
+                            wall_ms: want("wall_ms")?.parse()?,
+                            up: want("up")?.parse()?,
+                            down: want("down")?.parse()?,
+                            participants: want("participants")?.parse()?,
+                        },
+                    );
+                }
+                "totals" => {
+                    parsed.totals = Some((
+                        want("rounds")?.parse()?,
+                        want("up")?.parse()?,
+                        want("down")?.parse()?,
+                    ));
+                }
+                "wire" => {
+                    parsed.wire = Some((want("sent")?.parse()?, want("recv")?.parse()?));
+                }
+                "run" => {
+                    if let Some(p) = get("params").filter(|v| *v != "-") {
+                        parsed.params = Some(p.parse()?);
+                    }
+                }
+                "events" => {
+                    parsed.events = Some(want("seq")?.to_string());
+                }
+                "listening" => {}
+                other => return Err(anyhow!("unknown metric line kind {other:?}: {line}")),
+            }
+            Ok(())
+        })();
+        if let Err(e) = res {
+            if !lenient {
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Child process supervision
+// ---------------------------------------------------------------------------
+
+/// What the monitor loop does beyond waiting for exit.
+enum Watch<'a> {
+    /// Just wait.
+    Plain,
+    /// SIGKILL the child once it has emitted this many live round
+    /// lines.
+    KillAfterRounds(usize),
+    /// Watch for the `listening addr=` line, then launch one
+    /// `shard-worker` child per delay entry (ms after the listen line).
+    Workers {
+        exe: &'a Path,
+        delays_ms: &'a [u64],
+    },
+}
+
+struct ChildOut {
+    lines: Vec<String>,
+    success: bool,
+    killed: bool,
+    usage: ProcUsage,
+}
+
+fn spawn_worker(exe: &Path, addr: &str) -> Result<Child> {
+    Command::new(exe)
+        .args(["shard-worker", "--connect", addr])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .map_err(|e| anyhow!("spawning shard-worker: {e}"))
+}
+
+/// Spawn `cmd`, pump its stdout through a reader thread, poll
+/// `/proc/<pid>` while executing the watch plan, and reap everything.
+fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<ChildOut> {
+    let program = format!("{:?}", cmd.get_program());
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped());
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| anyhow!("spawning {program}: {e}"))?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let lines = Arc::new(Mutex::new(Vec::<String>::new()));
+    let round_lines = Arc::new(AtomicUsize::new(0));
+    let reader = {
+        let lines = lines.clone();
+        let round_lines = round_lines.clone();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if line
+                    .strip_prefix(METRIC_PREFIX)
+                    .is_some_and(|r| r.starts_with("round "))
+                {
+                    round_lines.fetch_add(1, Ordering::SeqCst);
+                }
+                lines.lock().unwrap().push(line);
+            }
+        })
+    };
+    let mut sampler = ProcSampler::new(child.id());
+    let mut workers: Vec<Child> = Vec::new();
+    let mut next_worker = 0usize;
+    let mut listen: Option<(Instant, String)> = None;
+    let mut killed = false;
+    let t0 = Instant::now();
+    let reap_workers = |workers: &mut Vec<Child>| {
+        for w in workers.iter_mut() {
+            if matches!(w.try_wait(), Ok(None)) {
+                let _ = w.kill();
+            }
+            let _ = w.wait();
+        }
+    };
+    let status = loop {
+        sampler.sample();
+        if let Some(status) = child.try_wait()? {
+            break status;
+        }
+        if t0.elapsed() > timeout {
+            let _ = child.kill();
+            let _ = child.wait();
+            reap_workers(&mut workers);
+            let _ = reader.join();
+            return Err(anyhow!("child timed out after {timeout:?}"));
+        }
+        match &watch {
+            Watch::Plain => {}
+            Watch::KillAfterRounds(k) => {
+                if !killed && round_lines.load(Ordering::SeqCst) >= *k {
+                    let _ = child.kill();
+                    killed = true;
+                }
+            }
+            Watch::Workers { exe, delays_ms } => {
+                if listen.is_none() {
+                    let held = lines.lock().unwrap();
+                    if let Some(addr) = held.iter().find_map(|l| {
+                        l.strip_prefix(METRIC_PREFIX)
+                            .and_then(|r| r.strip_prefix("listening addr="))
+                    }) {
+                        listen = Some((Instant::now(), addr.to_string()));
+                    }
+                }
+                if let Some((t_listen, addr)) = &listen {
+                    while next_worker < delays_ms.len()
+                        && t_listen.elapsed() >= Duration::from_millis(delays_ms[next_worker])
+                    {
+                        workers.push(spawn_worker(exe, addr)?);
+                        next_worker += 1;
+                    }
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    let _ = reader.join();
+    reap_workers(&mut workers);
+    let lines = Arc::try_unwrap(lines)
+        .expect("reader thread joined")
+        .into_inner()
+        .unwrap();
+    Ok(ChildOut {
+        lines,
+        success: status.success(),
+        killed,
+        usage: sampler.finish(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scenario execution
+// ---------------------------------------------------------------------------
+
+fn base_cmd(ctx: &BenchCtx, s: &Scenario, rundir: &Path, serve: bool) -> Command {
+    let mut cmd = Command::new(&ctx.exe);
+    cmd.arg(if serve { "serve" } else { "run" });
+    if serve {
+        cmd.args(["--listen", "127.0.0.1:0"]);
+    }
+    cmd.arg("--synth")
+        .arg("--emit-metrics")
+        .arg("--out")
+        .arg(rundir)
+        .args(["--synth-model", s.model.name()])
+        .args(["--protocol", &s.protocol])
+        .args(["--clients", &s.clients.to_string()])
+        .args(["--rounds", &s.rounds.to_string()])
+        .args(["--seed", &s.seed.to_string()])
+        .args(["--participation", &s.participation.to_string()])
+        .args(["--compute-shards", &s.shards.to_string()])
+        .args(["--transport", s.transport.name()]);
+    if s.pipelined {
+        cmd.arg("--pipelined");
+    }
+    if s.shard_procs && !serve {
+        cmd.arg("--shard-procs");
+    }
+    if let Some((every, ms)) = s.straggle {
+        cmd.env(STRAGGLE_ENV, format!("{every}:{ms}"));
+    }
+    if let Some(ChaosLeg::Resize { round, to_shards }) = &s.chaos {
+        cmd.args(["--elastic-resize", &format!("{round}:{to_shards}")]);
+    }
+    if matches!(s.chaos, Some(ChaosLeg::KillResume { .. })) {
+        cmd.arg("--checkpoint-dir")
+            .arg(rundir.join("ckpt"))
+            .args(["--checkpoint-every", "1"]);
+    }
+    cmd
+}
+
+fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Result<()> {
+    let rundir = ctx.scratch.join(&s.id);
+    let _ = std::fs::remove_dir_all(&rundir);
+    std::fs::create_dir_all(&rundir)
+        .map_err(|e| anyhow!("creating {}: {e}", rundir.display()))?;
+    let mut parsed = Parsed::default();
+    let mut usage = ProcUsage::default();
+
+    if !s.arrivals_ms.is_empty() {
+        // `fsfl serve` + Poisson-scheduled shard-worker children.
+        let out = drive_child(
+            base_cmd(ctx, s, &rundir, true),
+            Watch::Workers {
+                exe: &ctx.exe,
+                delays_ms: &s.arrivals_ms,
+            },
+            CHILD_TIMEOUT,
+        )?;
+        usage = usage.merge(out.usage);
+        parse_into(&mut parsed, &out.lines, false)?;
+        if !out.success {
+            return Err(anyhow!("serve child exited with failure"));
+        }
+    } else if let Some(ChaosLeg::KillResume { after_rounds }) = &s.chaos {
+        // Phase 1: run until `after_rounds` live round lines, SIGKILL.
+        let out = drive_child(
+            base_cmd(ctx, s, &rundir, false),
+            Watch::KillAfterRounds(*after_rounds),
+            CHILD_TIMEOUT,
+        )?;
+        usage = usage.merge(out.usage);
+        // A SIGKILL can truncate the final stdout line mid-write.
+        parse_into(&mut parsed, &out.lines, out.killed)?;
+        if !out.killed && !out.success {
+            return Err(anyhow!("chaos child failed before the kill landed"));
+        }
+        // Phase 2: resume from the newest valid snapshot.
+        rec.resumed = true;
+        let mut resume = Command::new(&ctx.exe);
+        resume
+            .arg("run")
+            .arg("--resume")
+            .arg(rundir.join("ckpt"))
+            .arg("--emit-metrics")
+            .arg("--out")
+            .arg(&rundir);
+        if let Some((every, ms)) = s.straggle {
+            resume.env(STRAGGLE_ENV, format!("{every}:{ms}"));
+        }
+        let out = drive_child(resume, Watch::Plain, CHILD_TIMEOUT)?;
+        usage = usage.merge(out.usage);
+        parse_into(&mut parsed, &out.lines, false)?;
+        if !out.success {
+            return Err(anyhow!("resume child exited with failure"));
+        }
+    } else {
+        let out = drive_child(base_cmd(ctx, s, &rundir, false), Watch::Plain, CHILD_TIMEOUT)?;
+        usage = usage.merge(out.usage);
+        parse_into(&mut parsed, &out.lines, false)?;
+        if !out.success {
+            return Err(anyhow!("child exited with failure"));
+        }
+    }
+
+    let (rounds_done, up, down) = parsed
+        .totals
+        .ok_or_else(|| anyhow!("child emitted no totals metric line"))?;
+    rec.rounds_done = rounds_done;
+    rec.up_bytes = up;
+    rec.down_bytes = down;
+    rec.round_ms = parsed.rounds.values().map(|r| r.wall_ms).collect();
+    rec.wire_sent = parsed.wire.map(|w| w.0);
+    rec.wire_recv = parsed.wire.map(|w| w.1);
+    rec.params = parsed.params;
+    rec.events = parsed.events.unwrap_or_else(|| "-".into());
+    rec.rss_peak_kb = usage.rss_peak_kb;
+    rec.cpu_ms = usage.cpu_ms;
+    if let Some(params) = parsed.params {
+        let observed: u64 = parsed.rounds.values().map(|r| r.participants).sum();
+        if !parsed.rounds.is_empty() {
+            // Extrapolate over rounds whose live line the SIGKILL
+            // swallowed (participant counts are near-uniform per round).
+            let scale = rounds_done as f64 / parsed.rounds.len() as f64;
+            rec.dense_bytes = (observed as f64 * scale * params as f64 * 4.0) as u64;
+        }
+    }
+    if rounds_done != s.rounds {
+        return Err(anyhow!(
+            "run completed {rounds_done} of {} rounds",
+            s.rounds
+        ));
+    }
+    rec.ok = true;
+    let _ = std::fs::remove_dir_all(&rundir);
+    Ok(())
+}
+
+/// Run one scenario end to end. Never panics the suite: failures come
+/// back as `ok = false` records with the error recorded (and the
+/// scenario's scratch dir left in place for post-mortem).
+pub fn run_scenario(ctx: &BenchCtx, s: &Scenario) -> RunRecord {
+    let mut rec = RunRecord::skeleton(s.clone());
+    let t0 = Instant::now();
+    if let Err(e) = run_scenario_inner(ctx, s, &mut rec) {
+        rec.ok = false;
+        rec.error = Some(format!("{e:#}"));
+    }
+    rec.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    rec
+}
+
+/// Run every scenario sequentially (timings must not contend with each
+/// other), streaming one JSON line per run into
+/// `<out_dir>/bench_runs.jsonl` and a progress line to stdout.
+pub fn run_all(exe: &Path, scenarios: &[Scenario], out_dir: &Path) -> Result<Vec<RunRecord>> {
+    std::fs::create_dir_all(out_dir)?;
+    let ctx = BenchCtx {
+        exe: exe.to_path_buf(),
+        scratch: out_dir.join("scratch"),
+    };
+    let jsonl_path = out_dir.join("bench_runs.jsonl");
+    let mut jsonl = std::io::BufWriter::new(std::fs::File::create(&jsonl_path)?);
+    let mut records = Vec::with_capacity(scenarios.len());
+    for (i, s) in scenarios.iter().enumerate() {
+        println!("[{}/{}] {}", i + 1, scenarios.len(), s.id);
+        let rec = run_scenario(&ctx, s);
+        writeln!(jsonl, "{}", rec.to_json_line())?;
+        jsonl.flush()?;
+        println!("    {}", rec.outcome_line());
+        records.push(rec);
+    }
+    println!("runs → {}", jsonl_path.display());
+    Ok(records)
+}
+
+/// Merge run records into the `BENCH_scenarios.json` summary report:
+/// the shared file envelope, pooled percentile statistics per suite,
+/// and one compact entry per scenario.
+pub fn summarize(records: &[RunRecord], mode: &str, seed: u64) -> Report {
+    let mut r = Report::new();
+    summary::file_header(&mut r, "scenarios", mode);
+    r.int("seed", seed)
+        .int("runs", records.len() as u64)
+        .int("failures", records.iter().filter(|x| !x.ok).count() as u64);
+    for (suite, key) in [(SuiteKind::A, "suite_a"), (SuiteKind::B, "suite_b")] {
+        let subset: Vec<&RunRecord> = records
+            .iter()
+            .filter(|x| x.scenario.suite == suite)
+            .collect();
+        let mut round_ms = Hist::new();
+        let mut rounds_per_sec = Hist::new();
+        let mut wall_ms = Hist::new();
+        let mut wire_total = Hist::new();
+        let mut compression = Hist::new();
+        let mut rss = Hist::new();
+        let mut cpu = Hist::new();
+        for rec in subset.iter().filter(|x| x.ok) {
+            round_ms.merge(&rec.round_hist());
+            rounds_per_sec.push(rec.rounds_per_sec());
+            wall_ms.push(rec.wall_ms);
+            if let (Some(s), Some(v)) = (rec.wire_sent, rec.wire_recv) {
+                wire_total.push((s + v) as f64);
+            }
+            if let Some(x) = rec.compression_x() {
+                compression.push(x);
+            }
+            if let Some(kb) = rec.rss_peak_kb {
+                rss.push(kb as f64);
+            }
+            if let Some(ms) = rec.cpu_ms {
+                cpu.push(ms as f64);
+            }
+        }
+        let mut sub = Report::new();
+        sub.int("runs", subset.len() as u64)
+            .obj("round_ms", round_ms.report())
+            .obj("rounds_per_sec", rounds_per_sec.report())
+            .obj("wall_ms", wall_ms.report())
+            .obj("wire_total_bytes", wire_total.report())
+            .obj("compression_x", compression.report())
+            .obj("rss_peak_kb", rss.report())
+            .obj("cpu_ms", cpu.report());
+        r.obj(key, sub);
+    }
+    let mut scenarios = Report::new();
+    for rec in records {
+        let h = rec.round_hist();
+        let mut e = Report::new();
+        e.bool("ok", rec.ok)
+            .int("rounds_done", rec.rounds_done as u64)
+            .num("rounds_per_sec", rec.rounds_per_sec())
+            .num("round_ms_p50", h.percentile(50.0).unwrap_or(f64::NAN))
+            .num("round_ms_p95", h.percentile(95.0).unwrap_or(f64::NAN))
+            .num("round_ms_p99", h.percentile(99.0).unwrap_or(f64::NAN))
+            .int("up_bytes", rec.up_bytes);
+        match (rec.wire_sent, rec.wire_recv) {
+            (Some(s), Some(v)) => {
+                e.int("wire_total_bytes", s + v);
+            }
+            _ => {
+                e.null("wire_total_bytes");
+            }
+        }
+        match rec.compression_x() {
+            Some(x) => {
+                e.num("compression_x", x);
+            }
+            None => {
+                e.null("compression_x");
+            }
+        }
+        match rec.rss_peak_kb {
+            Some(kb) => {
+                e.int("rss_peak_kb", kb);
+            }
+            None => {
+                e.null("rss_peak_kb");
+            }
+        }
+        match rec.cpu_ms {
+            Some(ms) => {
+                e.int("cpu_ms", ms);
+            }
+            None => {
+                e.null("cpu_ms");
+            }
+        }
+        scenarios.obj(&rec.scenario.id, e);
+    }
+    r.obj("scenarios", scenarios);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::json;
+    use crate::bench::spec::{ModelSize, SuiteKind};
+    use crate::fl::TransportKind;
+
+    fn record() -> RunRecord {
+        let mut rec = RunRecord::skeleton(Scenario::cell(
+            TransportKind::Loopback,
+            false,
+            2,
+            ModelSize::Small,
+            4,
+            2,
+            42,
+        ));
+        rec.ok = true;
+        rec.wall_ms = 100.0;
+        rec.rounds_done = 2;
+        rec.round_ms = vec![40.0, 50.0];
+        rec.up_bytes = 2_000;
+        rec.down_bytes = 800;
+        rec.wire_sent = Some(5_000);
+        rec.wire_recv = Some(6_000);
+        rec.params = Some(1_000);
+        rec.dense_bytes = 32_000;
+        rec
+    }
+
+    #[test]
+    fn json_line_round_trips_through_the_schema_gate() {
+        let rec = record();
+        let v = json::parse(&rec.to_json_line()).unwrap();
+        summary::validate_run_line(&v).unwrap();
+        assert_eq!(v.get("compression_x").and_then(json::Value::as_f64), Some(16.0));
+        assert_eq!(v.get("rounds_per_sec").and_then(json::Value::as_f64), Some(20.0));
+        // nullable slots render as null, not as absent keys
+        assert!(matches!(v.get("rss_peak_kb"), Some(json::Value::Null)));
+        assert!(matches!(v.get("chaos"), Some(json::Value::Null)));
+    }
+
+    #[test]
+    fn failed_record_still_emits_a_valid_line() {
+        let mut rec = RunRecord::skeleton(Scenario::cell(
+            TransportKind::Mpsc,
+            false,
+            1,
+            ModelSize::Small,
+            2,
+            2,
+            1,
+        ));
+        rec.error = Some("child exited with failure".into());
+        let v = json::parse(&rec.to_json_line()).unwrap();
+        summary::validate_run_line(&v).unwrap();
+        assert_eq!(v.get("ok").and_then(json::Value::as_bool), Some(false));
+        assert!(matches!(v.get("compression_x"), Some(json::Value::Null)));
+    }
+
+    #[test]
+    fn summary_merges_records_and_validates() {
+        let records = vec![record(), record()];
+        let rep = summarize(&records, "smoke", 7);
+        let v = json::parse(&rep.render()).unwrap();
+        summary::validate_summary(&v).unwrap();
+        let suite_a = v.get("suite_a").unwrap();
+        assert_eq!(
+            suite_a
+                .get("round_ms")
+                .and_then(|h| h.get("count"))
+                .and_then(json::Value::as_f64),
+            Some(4.0)
+        );
+        assert!(v
+            .get("scenarios")
+            .and_then(|s| s.get("a-loopback-staged-s2-small"))
+            .is_some());
+        // suite_b is present (schema-complete) even with zero B runs
+        assert!(matches!(
+            v.get("suite_b").and_then(|s| s.get("round_ms")).and_then(|h| h.get("p50")),
+            Some(json::Value::Null)
+        ));
+    }
+
+    #[test]
+    fn metric_line_parser_handles_the_full_vocabulary() {
+        let lines: Vec<String> = [
+            "#fsfl-metric run name=synth-fsfl rounds=2 clients=4 params=1049",
+            "round 0: acc 0.5", // human line, ignored
+            "#fsfl-metric round r=0 wall_ms=12.5 up=100 down=50 participants=4",
+            "#fsfl-metric round r=1 wall_ms=11.0 up=90 down=40 participants=4",
+            "#fsfl-metric wire sent=1000 recv=2000",
+            "#fsfl-metric events n=0 seq=-",
+            "#fsfl-metric totals rounds=2 up=190 down=90 best_acc=0.5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut p = Parsed::default();
+        parse_into(&mut p, &lines, false).unwrap();
+        assert_eq!(p.totals, Some((2, 190, 90)));
+        assert_eq!(p.wire, Some((1000, 2000)));
+        assert_eq!(p.params, Some(1049));
+        assert_eq!(p.events.as_deref(), Some("-"));
+        assert_eq!(p.rounds.len(), 2);
+        assert_eq!(p.rounds[&0].participants, 4);
+
+        // strict mode rejects a truncated metric line; lenient skips it
+        let bad = vec!["#fsfl-metric round r=0 wall_ms=".to_string()];
+        let mut p = Parsed::default();
+        assert!(parse_into(&mut p, &bad, false).is_err());
+        parse_into(&mut p, &bad, true).unwrap();
+        assert!(p.rounds.is_empty());
+    }
+
+    #[test]
+    fn emitters_and_parser_agree() {
+        use crate::metrics::{RoundMetrics, RunLog, WireStats};
+        let mut log = RunLog::new("bench cell");
+        log.push(RoundMetrics {
+            round: 0,
+            up_bytes: 120,
+            down_bytes: 60,
+            accuracy: 0.25,
+            client_sparsity: vec![0.5, 0.5, 0.5],
+            ..Default::default()
+        });
+        log.push(RoundMetrics {
+            round: 1,
+            up_bytes: 110,
+            down_bytes: 55,
+            accuracy: 0.75,
+            client_sparsity: vec![0.5, 0.5],
+            ..Default::default()
+        });
+        log.wire = Some(WireStats { sent: 900, received: 1800 });
+        let mut lines = vec![
+            crate::bench::line_listening("127.0.0.1:4040"),
+            crate::bench::line_run("bench cell", 2, 3, Some(298)),
+            crate::bench::line_round(&log.rounds[0], 12.5),
+            crate::bench::line_round(&log.rounds[1], 11.25),
+        ];
+        lines.extend(crate::bench::lines_finish(&log));
+        let mut p = Parsed::default();
+        parse_into(&mut p, &lines, false).unwrap();
+        assert_eq!(p.params, Some(298));
+        assert_eq!(p.totals, Some((2, 230, 115)));
+        assert_eq!(p.wire, Some((900, 1800)));
+        assert_eq!(p.events.as_deref(), Some("-"));
+        assert_eq!(p.rounds[&0].participants, 3);
+        assert_eq!(p.rounds[&1].participants, 2);
+        assert_eq!(p.rounds[&0].wall_ms, 12.5);
+    }
+
+    #[test]
+    fn suite_kind_partition_is_total() {
+        // guards the summarize() suite split against new suite kinds
+        for s in [SuiteKind::A, SuiteKind::B] {
+            assert!(["a", "b"].contains(&s.name()));
+        }
+    }
+}

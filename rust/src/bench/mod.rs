@@ -1,0 +1,134 @@
+//! Cross-scenario benchmark harness (`fsfl bench`).
+//!
+//! The repo's other test planes pin *correctness* (byte-identical
+//! bitstreams across every deployment shape); this module pins the
+//! *performance trajectory*. It drives the **release binary** — not
+//! in-process functions — through two suites of scenarios and records
+//! one JSON line per run, then merges the lines into percentile-focused
+//! summaries committed as `BENCH_scenarios.json` (and, for the codec
+//! micro-bench, `BENCH_fl_round.json` via `benches/fl_round.rs`, which
+//! shares the same schema header).
+//!
+//! * **Suite A — deterministic grid** ([`spec::suite_a`]): transport
+//!   (mpsc × loopback × tcp) × schedule (staged / pipelined) × shard
+//!   count (1–4) × synthetic model size (small / large), fixed seed.
+//!   Every cell is an ordinary `fsfl run --synth` invocation.
+//! * **Suite B — stochastic legs** ([`spec::suite_b`]): seeded Poisson
+//!   client (shard-worker) arrivals against `fsfl serve`, heterogeneous
+//!   payload mixes, straggler injection
+//!   ([`crate::fl::synth::STRAGGLE_ENV`]), and chaos runs that SIGKILL
+//!   the child mid-run and `--resume` it, or elastically resize the
+//!   shard set mid-suite. Suite B is wall-clock stochastic but
+//!   **reproducible by seed**: the same `--seed` derives the same
+//!   scenario list, arrival schedules and straggler parameters, so two
+//!   runs differ only in the timing fields
+//!   ([`summary::TIMING_FIELDS`]).
+//!
+//! The measurement channel is a line protocol on the child's stdout:
+//! every machine-readable line starts with [`METRIC_PREFIX`] (emitted
+//! by `fsfl run/serve --emit-metrics`), and the driver
+//! ([`driver`]) parses round latencies, `RunLog::wire` byte counts and
+//! the supervisor-incident history from it while sampling RSS/CPU from
+//! `/proc/<pid>` ([`sampler`]). Rust's stdout handle is line-buffered
+//! even through a pipe, so round lines arrive live — which is what lets
+//! the chaos leg SIGKILL a child *after* it has provably finished k
+//! rounds.
+//!
+//! Schemas (validated by [`summary::validate_run_line`] /
+//! [`summary::validate_summary`], parsed by the dependency-free
+//! [`json`] reader) are versioned via [`SCHEMA_VERSION`]; CI diffs the
+//! produced summary's key structure against the committed `BENCH_*`
+//! files so drift fails the bench gate instead of silently rewriting
+//! the trajectory.
+
+pub mod driver;
+pub mod json;
+pub mod sampler;
+pub mod spec;
+pub mod summary;
+
+/// Prefix of every machine-readable metric line a child emits on stdout
+/// under `--emit-metrics`. Lines look like
+/// `#fsfl-metric round r=3 wall_ms=12.5 up=1024 down=512 participants=3`
+/// — a kind token followed by `key=value` pairs, no spaces inside
+/// values. Everything not starting with this prefix is human-readable
+/// progress output and ignored by the driver.
+pub const METRIC_PREFIX: &str = "#fsfl-metric ";
+
+/// `schema` tag of one per-run JSON line (`bench_runs.jsonl`).
+pub const RUN_SCHEMA: &str = "fsfl-bench-run";
+
+/// `schema` tag of a merged summary file (`BENCH_*.json`).
+pub const SUMMARY_SCHEMA: &str = "fsfl-bench-summary";
+
+/// Version of both the run-line and summary schemas. Bump on any
+/// structural change and re-bless the committed `BENCH_*.json` files.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Metric-line formatters
+//
+// The emitting side of the stdout protocol. `fsfl` (main.rs) prints
+// these under --emit-metrics; `driver::parse_into` reads them back.
+// Keeping both sides in this crate means one unit test can pin the
+// vocabulary end to end.
+// ---------------------------------------------------------------------------
+
+/// `listening` line: the bound socket a `fsfl serve` child accepts
+/// shard-worker joins on. Must be flushed before serving so the driver
+/// can launch workers against it.
+pub fn line_listening(addr: &str) -> String {
+    format!("{METRIC_PREFIX}listening addr={addr}")
+}
+
+/// `run` banner: experiment shape, emitted once before round 0.
+/// `params` is the synthetic manifest's parameter count (`None` for
+/// real PJRT runs, rendered `-`); whitespace in the name is flattened
+/// so the line stays token-splittable.
+pub fn line_run(name: &str, rounds: usize, clients: usize, params: Option<usize>) -> String {
+    let name: String = name
+        .chars()
+        .map(|c| if c.is_whitespace() { '_' } else { c })
+        .collect();
+    let p = params.map(|p| p.to_string()).unwrap_or_else(|| "-".into());
+    format!("{METRIC_PREFIX}run name={name} rounds={rounds} clients={clients} params={p}")
+}
+
+/// Live per-round line, printed from the round-event callback the
+/// moment the round completes. `wall_ms` is the caller's wall clock
+/// since the previous round line (scheduling overhead included — this
+/// is the latency an operator would observe, not just compute time).
+pub fn line_round(m: &crate::metrics::RoundMetrics, wall_ms: f64) -> String {
+    format!(
+        "{METRIC_PREFIX}round r={} wall_ms={:.3} up={} down={} participants={}",
+        m.round,
+        wall_ms,
+        m.up_bytes,
+        m.down_bytes,
+        m.client_sparsity.len()
+    )
+}
+
+/// End-of-run lines: totals (always), measured wire bytes (wire
+/// transports only) and the compact supervisor-incident history.
+pub fn lines_finish(log: &crate::metrics::RunLog) -> Vec<String> {
+    let mut out = vec![format!(
+        "{METRIC_PREFIX}totals rounds={} up={} down={} best_acc={:.6}",
+        log.rounds.len(),
+        log.total_bytes(true),
+        log.rounds.iter().map(|r| r.down_bytes).sum::<usize>(),
+        log.best_accuracy()
+    )];
+    if let Some(w) = log.wire {
+        out.push(format!(
+            "{METRIC_PREFIX}wire sent={} recv={}",
+            w.sent, w.received
+        ));
+    }
+    out.push(format!(
+        "{METRIC_PREFIX}events n={} seq={}",
+        log.events.len(),
+        log.events_compact()
+    ));
+    out
+}

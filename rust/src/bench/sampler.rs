@@ -1,0 +1,158 @@
+//! `/proc/<pid>` resource sampling for child benchmark processes.
+//!
+//! Pure std: reads `/proc/<pid>/status` for the peak resident set
+//! (`VmHWM`, falling back to tracking the max of `VmRSS` when the
+//! kernel omits it) and `/proc/<pid>/stat` for user+system CPU ticks.
+//! On platforms without procfs every read fails quietly and the
+//! sampled fields come back `None` — the run JSON renders them as
+//! `null` rather than inventing numbers.
+
+use std::path::PathBuf;
+
+/// Final resource usage of one (possibly finished) child process.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProcUsage {
+    /// Peak resident set size in KiB, if procfs was readable.
+    pub rss_peak_kb: Option<u64>,
+    /// Total CPU time (user + system, all threads) in milliseconds, if
+    /// procfs was readable.
+    pub cpu_ms: Option<u64>,
+}
+
+impl ProcUsage {
+    /// Combine usage of two sequential children of the same logical run
+    /// (e.g. a killed run and its `--resume`): RSS peaks take the max,
+    /// CPU times add.
+    pub fn merge(self, other: ProcUsage) -> ProcUsage {
+        let max_opt = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        let add_opt = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, b) => a.or(b),
+        };
+        ProcUsage {
+            rss_peak_kb: max_opt(self.rss_peak_kb, other.rss_peak_kb),
+            cpu_ms: add_opt(self.cpu_ms, other.cpu_ms),
+        }
+    }
+}
+
+/// Polls one PID's procfs entries while the driver's monitor loop spins
+/// (every sample is a snapshot; [`ProcSampler::finish`] folds them into
+/// a [`ProcUsage`]). The process disappearing between samples is normal
+/// — the last successful sample stands.
+#[derive(Debug)]
+pub struct ProcSampler {
+    status_path: PathBuf,
+    stat_path: PathBuf,
+    rss_peak_kb: Option<u64>,
+    cpu_ticks: Option<u64>,
+    tick_hz: u64,
+}
+
+impl ProcSampler {
+    /// Sampler for `pid`. `USER_HZ` is effectively always 100 on Linux;
+    /// override with the `FSFL_TICK_HZ` environment variable on exotic
+    /// kernels.
+    pub fn new(pid: u32) -> Self {
+        let tick_hz = std::env::var("FSFL_TICK_HZ")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&hz| hz > 0)
+            .unwrap_or(100);
+        ProcSampler {
+            status_path: PathBuf::from(format!("/proc/{pid}/status")),
+            stat_path: PathBuf::from(format!("/proc/{pid}/stat")),
+            rss_peak_kb: None,
+            cpu_ticks: None,
+            tick_hz,
+        }
+    }
+
+    /// Take one snapshot (cheap enough for a ~10 ms poll loop).
+    pub fn sample(&mut self) {
+        if let Ok(status) = std::fs::read_to_string(&self.status_path) {
+            // VmHWM is the kernel-tracked high-water mark; VmRSS is the
+            // instantaneous value we max over as a fallback.
+            let field = |name: &str| -> Option<u64> {
+                status
+                    .lines()
+                    .find(|l| l.starts_with(name))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|v| v.parse().ok())
+            };
+            if let Some(kb) = field("VmHWM:").or_else(|| field("VmRSS:")) {
+                self.rss_peak_kb = Some(self.rss_peak_kb.unwrap_or(0).max(kb));
+            }
+        }
+        if let Ok(stat) = std::fs::read_to_string(&self.stat_path) {
+            // Fields after the parenthesised comm (which may itself
+            // contain spaces): split at the last ')'.
+            if let Some(rest) = stat.rsplit_once(')').map(|(_, r)| r) {
+                let fields: Vec<&str> = rest.split_whitespace().collect();
+                // rest[0] is field 3 (state); utime/stime are fields
+                // 14/15 of the full line ⇒ rest indices 11/12.
+                if let (Some(ut), Some(st)) = (
+                    fields.get(11).and_then(|v| v.parse::<u64>().ok()),
+                    fields.get(12).and_then(|v| v.parse::<u64>().ok()),
+                ) {
+                    self.cpu_ticks = Some(ut + st);
+                }
+            }
+        }
+    }
+
+    /// Fold the samples into the final usage record.
+    pub fn finish(self) -> ProcUsage {
+        ProcUsage {
+            rss_peak_kb: self.rss_peak_kb,
+            cpu_ms: self.cpu_ticks.map(|t| t * 1000 / self.tick_hz),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_own_process_on_linux() {
+        let mut s = ProcSampler::new(std::process::id());
+        s.sample();
+        let usage = s.finish();
+        if cfg!(target_os = "linux") {
+            assert!(
+                usage.rss_peak_kb.unwrap_or(0) > 0,
+                "a live Rust test process has a nonzero RSS"
+            );
+            assert!(usage.cpu_ms.is_some());
+        }
+    }
+
+    #[test]
+    fn missing_pid_yields_nulls_not_zeros() {
+        // PID near the u32 ceiling: never a live procfs entry.
+        let mut s = ProcSampler::new(u32::MAX - 1);
+        s.sample();
+        let usage = s.finish();
+        assert_eq!(usage, ProcUsage::default());
+    }
+
+    #[test]
+    fn merge_maxes_rss_and_adds_cpu() {
+        let a = ProcUsage {
+            rss_peak_kb: Some(100),
+            cpu_ms: Some(40),
+        };
+        let b = ProcUsage {
+            rss_peak_kb: Some(70),
+            cpu_ms: Some(5),
+        };
+        let m = a.merge(b);
+        assert_eq!(m.rss_peak_kb, Some(100));
+        assert_eq!(m.cpu_ms, Some(45));
+        assert_eq!(a.merge(ProcUsage::default()), a);
+    }
+}

@@ -1,0 +1,463 @@
+//! Scenario specifications: the Suite A deterministic grid and the
+//! seeded Suite B stochastic legs.
+//!
+//! Everything here is a *pure function of its inputs*: [`suite_a`] of
+//! the smoke flag, [`suite_b`] of `(seed, smoke)`. The driver never
+//! draws randomness of its own, so two `fsfl bench --suite b --seed N`
+//! invocations run byte-identical scenario lists — arrival schedules,
+//! payload mixes, straggler parameters and chaos scripts included.
+//! That is the seed-reproducibility contract the integration tests pin
+//! (identical per-run JSON apart from [`super::summary::TIMING_FIELDS`]).
+
+use crate::data::XorShiftRng;
+use crate::fl::TransportKind;
+
+/// Which suite a scenario belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SuiteKind {
+    /// Deterministic grid (fixed seed, full participation).
+    A,
+    /// Seeded stochastic legs (arrivals, mixes, stragglers, chaos).
+    B,
+}
+
+impl SuiteKind {
+    /// Lowercase tag used in scenario ids and JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            SuiteKind::A => "a",
+            SuiteKind::B => "b",
+        }
+    }
+}
+
+/// Synthetic model size for a scenario (`fsfl run --synth-model`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelSize {
+    /// [`crate::fl::synth::demo_manifest`] (~300 parameters).
+    Small,
+    /// [`crate::fl::synth::large_manifest`] (~100k parameters).
+    Large,
+}
+
+impl ModelSize {
+    /// The `--synth-model` flag value.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelSize::Small => "small",
+            ModelSize::Large => "large",
+        }
+    }
+}
+
+/// A chaos script the driver applies to the child process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChaosLeg {
+    /// SIGKILL the run after it has emitted `after_rounds` round lines,
+    /// then `fsfl run --resume` it to completion (requires the scenario
+    /// to checkpoint; the driver adds `--checkpoint-dir` itself).
+    KillResume {
+        /// Minimum completed rounds before the kill lands.
+        after_rounds: usize,
+    },
+    /// Elastically resize the shard set mid-run via
+    /// `--elastic-resize round:to_shards` (under `--shard-procs`, so
+    /// the surplus workers are real OS processes admitted from the
+    /// listener backlog).
+    Resize {
+        /// Round boundary the resize fires before.
+        round: usize,
+        /// New shard count.
+        to_shards: usize,
+    },
+}
+
+impl ChaosLeg {
+    /// Compact label recorded in the run JSON (`"kill@1"`,
+    /// `"resize@2:3"`).
+    pub fn label(&self) -> String {
+        match self {
+            ChaosLeg::KillResume { after_rounds } => format!("kill@{after_rounds}"),
+            ChaosLeg::Resize { round, to_shards } => format!("resize@{round}:{to_shards}"),
+        }
+    }
+}
+
+/// One benchmark scenario: everything needed to build the child
+/// command line, plus the stochastic schedules Suite B derives from its
+/// seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Unique id within the suite run (JSON `scenario` field and
+    /// scratch-directory name).
+    pub id: String,
+    /// Owning suite.
+    pub suite: SuiteKind,
+    /// Shard transport under test.
+    pub transport: TransportKind,
+    /// Pipelined (true) vs staged (false) round schedule.
+    pub pipelined: bool,
+    /// Compute shard count.
+    pub shards: usize,
+    /// Synthetic model size.
+    pub model: ModelSize,
+    /// Protocol flag value (`fsfl`, `fedavg`, …).
+    pub protocol: String,
+    /// Client count.
+    pub clients: usize,
+    /// Round count.
+    pub rounds: usize,
+    /// Experiment seed (`--seed`).
+    pub seed: u64,
+    /// Participation fraction per round.
+    pub participation: f64,
+    /// Run shards as separate OS processes (`--shard-procs`).
+    pub shard_procs: bool,
+    /// Non-empty ⇒ serve-mode scenario: the driver runs `fsfl serve`
+    /// and launches one `fsfl shard-worker` per entry, each after its
+    /// Poisson-derived delay (ms from the coordinator's listen line).
+    /// Length always equals `shards`.
+    pub arrivals_ms: Vec<u64>,
+    /// Straggler injection `(every, ms)`: clients with
+    /// `id % every == 0` sleep `ms` per train call
+    /// (via [`crate::fl::synth::STRAGGLE_ENV`]).
+    pub straggle: Option<(usize, u64)>,
+    /// Chaos script, if any.
+    pub chaos: Option<ChaosLeg>,
+}
+
+impl Scenario {
+    /// A plain Suite A cell (no arrivals, stragglers or chaos).
+    pub fn cell(
+        transport: TransportKind,
+        pipelined: bool,
+        shards: usize,
+        model: ModelSize,
+        clients: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Self {
+        let schedule = if pipelined { "pipelined" } else { "staged" };
+        Scenario {
+            id: format!(
+                "a-{}-{}-s{}-{}",
+                transport.name(),
+                schedule,
+                shards,
+                model.name()
+            ),
+            suite: SuiteKind::A,
+            transport,
+            pipelined,
+            shards,
+            model,
+            protocol: "fsfl".into(),
+            clients,
+            rounds,
+            seed,
+            participation: 1.0,
+            // TCP cells exercise the real multi-process deployment.
+            shard_procs: transport == TransportKind::Tcp,
+            arrivals_ms: Vec::new(),
+            straggle: None,
+            chaos: None,
+        }
+    }
+
+    /// Schedule tag for JSON output.
+    pub fn schedule_name(&self) -> &'static str {
+        if self.pipelined {
+            "pipelined"
+        } else {
+            "staged"
+        }
+    }
+}
+
+/// Fixed Suite A seed: the grid is deterministic by construction, so
+/// it never takes a `--seed`.
+pub const SUITE_A_SEED: u64 = 42;
+
+const TRANSPORTS: [TransportKind; 3] = [
+    TransportKind::Mpsc,
+    TransportKind::Loopback,
+    TransportKind::Tcp,
+];
+
+/// The Suite A deterministic grid.
+///
+/// Full: transport × {staged, pipelined} × shards 1–4 × {small, large}
+/// (48 cells, 8 rounds each). Smoke: transport × staged × shards
+/// {1, 2} × small (6 cells, 2 rounds) — the per-PR CI gate.
+pub fn suite_a(smoke: bool) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    let (schedules, shard_counts, models, clients, rounds): (
+        &[bool],
+        &[usize],
+        &[ModelSize],
+        usize,
+        usize,
+    ) = if smoke {
+        (&[false], &[1, 2], &[ModelSize::Small], 4, 2)
+    } else {
+        (
+            &[false, true],
+            &[1, 2, 3, 4],
+            &[ModelSize::Small, ModelSize::Large],
+            8,
+            8,
+        )
+    };
+    for &transport in &TRANSPORTS {
+        for &pipelined in schedules {
+            for &shards in shard_counts {
+                for &model in models {
+                    out.push(Scenario::cell(
+                        transport,
+                        pipelined,
+                        shards,
+                        model,
+                        clients,
+                        rounds,
+                        SUITE_A_SEED,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Cumulative Poisson arrival schedule: `n` arrival offsets in
+/// milliseconds, with exponential inter-arrival times at rate
+/// `lambda_per_sec` (inverse-CDF sampling off the scenario RNG).
+pub fn poisson_arrivals(rng: &mut XorShiftRng, n: usize, lambda_per_sec: f64) -> Vec<u64> {
+    let mut t_ms = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f32() as f64; // [0, 1)
+            let dt_secs = -(1.0 - u).ln() / lambda_per_sec;
+            t_ms += dt_secs * 1e3;
+            t_ms as u64
+        })
+        .collect()
+}
+
+fn pick<T: Copy>(rng: &mut XorShiftRng, options: &[T]) -> T {
+    options[rng.below(options.len())]
+}
+
+fn range(rng: &mut XorShiftRng, lo: u64, hi: u64) -> u64 {
+    lo + rng.below((hi - lo + 1) as usize) as u64
+}
+
+/// The Suite B stochastic legs, derived entirely from `seed`.
+///
+/// * **arrivals** — `fsfl serve` over TCP with shard workers launched
+///   at seeded Poisson offsets (elastic-admission latency under churny
+///   joins).
+/// * **mix** — heterogeneous payloads: random protocol × model size ×
+///   client count × participation × transport × schedule.
+/// * **straggle** — straggler injection on the multi-process TCP path.
+/// * **kill** — SIGKILL mid-run + `--resume` (checkpointed, in-process
+///   loopback so the SIGKILL takes the whole deployment down).
+/// * **resize** — mid-run elastic shard resize under straggler load,
+///   with real worker processes admitted from the listener backlog.
+///
+/// Smoke runs one scenario per leg with small rounds; full runs widen
+/// the mix/straggle/arrival pools.
+pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
+    let mut rng = XorShiftRng::new(seed ^ 0xB0B5_CE9A_71ED_5EED);
+    let mut out = Vec::new();
+    let rounds = if smoke { 2 } else { 6 };
+    let chaos_rounds = if smoke { 3 } else { 6 };
+
+    // Leg 1: Poisson arrivals against `fsfl serve`.
+    for i in 0..if smoke { 1 } else { 3 } {
+        let shards = range(&mut rng, 2, 3) as usize;
+        let lambda = range(&mut rng, 4, 12) as f64; // workers/sec
+        let arrivals_ms = poisson_arrivals(&mut rng, shards, lambda);
+        out.push(Scenario {
+            id: format!("b-arrival-{i}"),
+            suite: SuiteKind::B,
+            transport: TransportKind::Tcp,
+            pipelined: false,
+            shards,
+            model: ModelSize::Small,
+            protocol: "fsfl".into(),
+            clients: range(&mut rng, 4, 8) as usize,
+            rounds,
+            seed: rng.next_u64(),
+            participation: 1.0,
+            shard_procs: false, // workers are the driver's children
+            arrivals_ms,
+            straggle: None,
+            chaos: None,
+        });
+    }
+
+    // Leg 2: heterogeneous payload mixes.
+    for i in 0..if smoke { 2 } else { 6 } {
+        let transport = pick(&mut rng, &TRANSPORTS);
+        out.push(Scenario {
+            id: format!("b-mix-{i}"),
+            suite: SuiteKind::B,
+            transport,
+            pipelined: rng.below(2) == 1,
+            shards: range(&mut rng, 1, 3) as usize,
+            model: pick(&mut rng, &[ModelSize::Small, ModelSize::Large]),
+            protocol: pick(&mut rng, &["fsfl", "fedavg", "stc"]).to_string(),
+            clients: range(&mut rng, 3, 8) as usize,
+            rounds,
+            seed: rng.next_u64(),
+            participation: pick(&mut rng, &[0.5, 0.75, 1.0]),
+            shard_procs: transport == TransportKind::Tcp,
+            arrivals_ms: Vec::new(),
+            straggle: None,
+            chaos: None,
+        });
+    }
+
+    // Leg 3: straggler injection on the multi-process path.
+    for i in 0..if smoke { 1 } else { 3 } {
+        out.push(Scenario {
+            id: format!("b-straggle-{i}"),
+            suite: SuiteKind::B,
+            transport: TransportKind::Tcp,
+            pipelined: false,
+            shards: range(&mut rng, 2, 3) as usize,
+            model: ModelSize::Small,
+            protocol: "fsfl".into(),
+            clients: range(&mut rng, 4, 8) as usize,
+            rounds,
+            seed: rng.next_u64(),
+            participation: 1.0,
+            shard_procs: true,
+            arrivals_ms: Vec::new(),
+            straggle: Some((range(&mut rng, 2, 4) as usize, range(&mut rng, 10, 40))),
+            chaos: None,
+        });
+    }
+
+    // Leg 4: SIGKILL + --resume. In-process loopback: killing the
+    // coordinator PID takes the whole deployment down at once, which is
+    // the crash the durable-session plane promises to absorb.
+    for i in 0..if smoke { 1 } else { 2 } {
+        out.push(Scenario {
+            id: format!("b-kill-{i}"),
+            suite: SuiteKind::B,
+            transport: TransportKind::Loopback,
+            pipelined: false,
+            shards: 2,
+            model: ModelSize::Small,
+            protocol: "fsfl".into(),
+            clients: range(&mut rng, 4, 6) as usize,
+            rounds: chaos_rounds,
+            seed: rng.next_u64(),
+            participation: 1.0,
+            shard_procs: false,
+            arrivals_ms: Vec::new(),
+            straggle: None,
+            chaos: Some(ChaosLeg::KillResume {
+                after_rounds: range(&mut rng, 1, chaos_rounds as u64 - 1) as usize,
+            }),
+        });
+    }
+
+    // Leg 5: elastic resize mid-run under straggler load, real worker
+    // processes (the surplus waits in the listener backlog until its
+    // boundary admits it).
+    {
+        let round = range(&mut rng, 1, chaos_rounds as u64 - 1) as usize;
+        out.push(Scenario {
+            id: "b-resize-0".into(),
+            suite: SuiteKind::B,
+            transport: TransportKind::Tcp,
+            pipelined: false,
+            shards: 2,
+            model: ModelSize::Small,
+            protocol: "fsfl".into(),
+            clients: range(&mut rng, 4, 6) as usize,
+            rounds: chaos_rounds,
+            seed: rng.next_u64(),
+            participation: 1.0,
+            shard_procs: true,
+            arrivals_ms: Vec::new(),
+            straggle: Some((2, range(&mut rng, 5, 20))),
+            chaos: Some(ChaosLeg::Resize {
+                round,
+                to_shards: 3,
+            }),
+        });
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_a_smoke_and_full_grid_shapes() {
+        let smoke = suite_a(true);
+        assert_eq!(smoke.len(), 3 * 1 * 2 * 1);
+        assert!(smoke.iter().all(|s| s.rounds == 2 && s.chaos.is_none()));
+        let full = suite_a(false);
+        assert_eq!(full.len(), 3 * 2 * 4 * 2);
+        // ids unique
+        let mut ids: Vec<&str> = full.iter().map(|s| s.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len());
+        // tcp cells run as real processes
+        assert!(full
+            .iter()
+            .all(|s| s.shard_procs == (s.transport == TransportKind::Tcp)));
+    }
+
+    #[test]
+    fn suite_b_is_a_pure_function_of_the_seed() {
+        assert_eq!(suite_b(7, true), suite_b(7, true));
+        assert_eq!(suite_b(7, false), suite_b(7, false));
+        assert_ne!(suite_b(7, true), suite_b(8, true));
+    }
+
+    #[test]
+    fn suite_b_covers_every_leg_with_consistent_shapes() {
+        for smoke in [true, false] {
+            let b = suite_b(123, smoke);
+            assert!(b.iter().any(|s| !s.arrivals_ms.is_empty()));
+            assert!(b.iter().any(|s| s.straggle.is_some()));
+            assert!(b
+                .iter()
+                .any(|s| matches!(s.chaos, Some(ChaosLeg::KillResume { .. }))));
+            assert!(b
+                .iter()
+                .any(|s| matches!(s.chaos, Some(ChaosLeg::Resize { .. }))));
+            for s in &b {
+                if !s.arrivals_ms.is_empty() {
+                    assert_eq!(s.arrivals_ms.len(), s.shards, "{}", s.id);
+                    assert!(!s.shard_procs, "{}: driver launches the workers", s.id);
+                }
+                if let Some(ChaosLeg::KillResume { after_rounds }) = &s.chaos {
+                    assert!(*after_rounds < s.rounds, "{}", s.id);
+                }
+                if let Some(ChaosLeg::Resize { round, to_shards }) = &s.chaos {
+                    assert!(*round >= 1 && *round < s.rounds, "{}", s.id);
+                    assert!(s.shard_procs && *to_shards != s.shards, "{}", s.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_is_monotone_and_seed_stable() {
+        let mut a = XorShiftRng::new(9);
+        let mut b = XorShiftRng::new(9);
+        let s1 = poisson_arrivals(&mut a, 8, 10.0);
+        let s2 = poisson_arrivals(&mut b, 8, 10.0);
+        assert_eq!(s1, s2);
+        assert!(s1.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

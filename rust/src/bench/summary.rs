@@ -1,0 +1,374 @@
+//! Histogram / percentile math and the shared summary schema.
+//!
+//! Both `fsfl bench` (scenario summaries) and `benches/fl_round.rs`
+//! (codec micro-bench) write their artifacts through [`file_header`] +
+//! [`Hist::report`], so every committed `BENCH_*.json` carries the same
+//! envelope and the CI schema diff can treat them uniformly.
+
+use anyhow::{anyhow, Result};
+
+use crate::benchkit::Report;
+
+use super::json::Value;
+use super::{RUN_SCHEMA, SCHEMA_VERSION, SUMMARY_SCHEMA};
+
+/// A merge-able sample pool with nearest-rank percentiles.
+///
+/// Deliberately exact (keeps every sample) rather than bucketed: suite
+/// sizes are hundreds of samples at most, and exactness makes the
+/// single-sample and empty-suite edge cases trivially correct — an
+/// empty pool reports `null` for every statistic, a single sample *is*
+/// every percentile.
+#[derive(Debug, Clone, Default)]
+pub struct Hist {
+    samples: Vec<f64>,
+}
+
+impl Hist {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one sample. Non-finite values are ignored (a failed run must
+    /// not poison the percentiles of the runs that succeeded).
+    pub fn push(&mut self, v: f64) {
+        if v.is_finite() {
+            self.samples.push(v);
+        }
+    }
+
+    /// Fold another pool's samples into this one.
+    pub fn merge(&mut self, other: &Hist) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Number of (finite) samples recorded.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Smallest sample, `None` when empty.
+    pub fn min(&self) -> Option<f64> {
+        self.samples.iter().copied().reduce(f64::min)
+    }
+
+    /// Largest sample, `None` when empty.
+    pub fn max(&self) -> Option<f64> {
+        self.samples.iter().copied().reduce(f64::max)
+    }
+
+    /// Arithmetic mean, `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 100]`): the smallest sample
+    /// such that at least `p`% of the pool is ≤ it. `None` when empty.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        Some(sorted[rank.clamp(1, n) - 1])
+    }
+
+    /// Render as the standard statistic object:
+    /// `{count, min, p50, p95, p99, max, mean}` — every value `null`
+    /// when the pool is empty (the empty-suite case must still produce
+    /// a schema-complete summary).
+    pub fn report(&self) -> Report {
+        let or_nan = |v: Option<f64>| v.unwrap_or(f64::NAN); // NaN renders as null
+        let mut r = Report::new();
+        r.int("count", self.count() as u64)
+            .num("min", or_nan(self.min()))
+            .num("p50", or_nan(self.percentile(50.0)))
+            .num("p95", or_nan(self.percentile(95.0)))
+            .num("p99", or_nan(self.percentile(99.0)))
+            .num("max", or_nan(self.max()))
+            .num("mean", or_nan(self.mean()));
+        r
+    }
+}
+
+/// Write the shared summary-file envelope (`schema`, `v`, `bench`,
+/// `mode`) into `report`. Every `BENCH_*.json` writer must call this
+/// first so [`validate_summary`] and the CI schema diff hold across
+/// artifacts.
+pub fn file_header(report: &mut Report, bench: &str, mode: &str) {
+    report
+        .str("schema", SUMMARY_SCHEMA)
+        .int("v", SCHEMA_VERSION)
+        .str("bench", bench)
+        .str("mode", mode);
+}
+
+/// Expected type of one run-line field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldKind {
+    /// JSON string.
+    Str,
+    /// JSON number holding an integer.
+    Int,
+    /// JSON number.
+    Num,
+    /// JSON boolean.
+    Bool,
+    /// JSON number or `null`.
+    NumOrNull,
+    /// JSON string or `null`.
+    StrOrNull,
+    /// JSON array of numbers (possibly empty).
+    NumArr,
+}
+
+/// The complete per-run JSON-line schema: every key a line must carry,
+/// with its type. [`validate_run_line`] enforces this list *exactly* —
+/// missing keys, wrong types and unknown keys all fail — so any drift
+/// in `driver::RunRecord::to_json_line` is caught by tier-1 tests
+/// before it reaches a committed `BENCH_*.json`.
+pub const RUN_FIELDS: &[(&str, FieldKind)] = &[
+    ("schema", FieldKind::Str),
+    ("v", FieldKind::Int),
+    ("suite", FieldKind::Str),
+    ("scenario", FieldKind::Str),
+    ("transport", FieldKind::Str),
+    ("schedule", FieldKind::Str),
+    ("shards", FieldKind::Int),
+    ("model", FieldKind::Str),
+    ("protocol", FieldKind::Str),
+    ("clients", FieldKind::Int),
+    ("rounds", FieldKind::Int),
+    ("seed", FieldKind::Int),
+    ("participation", FieldKind::Num),
+    ("shard_procs", FieldKind::Bool),
+    ("ok", FieldKind::Bool),
+    ("error", FieldKind::StrOrNull),
+    ("resumed", FieldKind::Bool),
+    ("rounds_done", FieldKind::Int),
+    ("wall_ms", FieldKind::Num),
+    ("rounds_per_sec", FieldKind::Num),
+    ("round_ms", FieldKind::NumArr),
+    ("round_ms_p50", FieldKind::NumOrNull),
+    ("round_ms_p95", FieldKind::NumOrNull),
+    ("round_ms_p99", FieldKind::NumOrNull),
+    ("up_bytes", FieldKind::Int),
+    ("down_bytes", FieldKind::Int),
+    ("wire_sent", FieldKind::NumOrNull),
+    ("wire_recv", FieldKind::NumOrNull),
+    ("params", FieldKind::NumOrNull),
+    ("dense_bytes", FieldKind::Int),
+    ("compression_x", FieldKind::NumOrNull),
+    ("rss_peak_kb", FieldKind::NumOrNull),
+    ("cpu_ms", FieldKind::NumOrNull),
+    ("arrivals_ms", FieldKind::NumArr),
+    ("straggle", FieldKind::StrOrNull),
+    ("chaos", FieldKind::StrOrNull),
+    ("events", FieldKind::Str),
+];
+
+/// Run-line fields that are *expected* to differ between two runs of
+/// the same seeded Suite B scenario (wall-clock measurements and
+/// host-dependent resource usage). The seed-reproducibility contract —
+/// same `--seed` ⇒ identical per-run JSON — is asserted on everything
+/// *outside* this list; see [`reproducible_view`].
+pub const TIMING_FIELDS: &[&str] = &[
+    "wall_ms",
+    "rounds_per_sec",
+    "round_ms",
+    "round_ms_p50",
+    "round_ms_p95",
+    "round_ms_p99",
+    "rss_peak_kb",
+    "cpu_ms",
+];
+
+fn field_matches(kind: FieldKind, v: &Value) -> bool {
+    match kind {
+        FieldKind::Str => matches!(v, Value::Str(_)),
+        FieldKind::Bool => matches!(v, Value::Bool(_)),
+        FieldKind::Num => matches!(v, Value::Num(_)),
+        FieldKind::Int => matches!(v, Value::Num(n) if n.fract() == 0.0),
+        FieldKind::NumOrNull => matches!(v, Value::Num(_) | Value::Null),
+        FieldKind::StrOrNull => matches!(v, Value::Str(_) | Value::Null),
+        FieldKind::NumArr => match v {
+            Value::Arr(items) => items.iter().all(|x| matches!(x, Value::Num(_))),
+            _ => false,
+        },
+    }
+}
+
+/// Validate one parsed per-run JSON line against [`RUN_FIELDS`]:
+/// object shape, exact key set, per-key types, and the
+/// `schema`/`v` envelope values.
+pub fn validate_run_line(v: &Value) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("run line is not a JSON object"))?;
+    for (key, kind) in RUN_FIELDS {
+        let val = v
+            .get(key)
+            .ok_or_else(|| anyhow!("run line missing required key {key:?}"))?;
+        if !field_matches(*kind, val) {
+            return Err(anyhow!(
+                "run line key {key:?} has wrong type (expected {kind:?}, got {val:?})"
+            ));
+        }
+    }
+    for (key, _) in obj {
+        if !RUN_FIELDS.iter().any(|(k, _)| k == key) {
+            return Err(anyhow!("run line carries unknown key {key:?}"));
+        }
+    }
+    if v.get("schema").and_then(Value::as_str) != Some(RUN_SCHEMA) {
+        return Err(anyhow!("run line schema tag is not {RUN_SCHEMA:?}"));
+    }
+    if v.get("v").and_then(Value::as_f64) != Some(SCHEMA_VERSION as f64) {
+        return Err(anyhow!("run line schema version is not {SCHEMA_VERSION}"));
+    }
+    Ok(())
+}
+
+/// Validate a summary file's envelope: a JSON object whose
+/// `schema`/`v` match this build and whose `bench`/`mode` tags are
+/// present. Structural comparison against the committed baseline is
+/// CI's job (key-path diff); this check is what the bench smoke tests
+/// pin.
+pub fn validate_summary(v: &Value) -> Result<()> {
+    v.as_obj()
+        .ok_or_else(|| anyhow!("summary is not a JSON object"))?;
+    if v.get("schema").and_then(Value::as_str) != Some(SUMMARY_SCHEMA) {
+        return Err(anyhow!("summary schema tag is not {SUMMARY_SCHEMA:?}"));
+    }
+    if v.get("v").and_then(Value::as_f64) != Some(SCHEMA_VERSION as f64) {
+        return Err(anyhow!("summary schema version is not {SCHEMA_VERSION}"));
+    }
+    for key in ["bench", "mode"] {
+        if v.get(key).and_then(Value::as_str).is_none() {
+            return Err(anyhow!("summary missing string key {key:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// Project a parsed run line onto its seed-reproducible view: every
+/// field except [`TIMING_FIELDS`], rendered canonically. When the run
+/// had a chaos leg (`chaos` non-null) the `wire_*` fields are dropped
+/// too — how many frame bytes moved before a SIGKILL landed depends on
+/// where the kill raced the round pipeline, which is exactly the
+/// non-determinism chaos legs exist to exercise.
+pub fn reproducible_view(v: &Value) -> Vec<(String, String)> {
+    let chaotic = matches!(v.get("chaos"), Some(Value::Str(_)));
+    let mut out = Vec::new();
+    if let Some(obj) = v.as_obj() {
+        for (k, val) in obj {
+            if TIMING_FIELDS.contains(&k.as_str()) {
+                continue;
+            }
+            if chaotic && (k == "wire_sent" || k == "wire_recv") {
+                continue;
+            }
+            out.push((k.clone(), val.render()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::json;
+
+    #[test]
+    fn empty_hist_reports_nulls_but_stays_schema_complete() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.min(), None);
+        assert_eq!(h.mean(), None);
+        let rendered = h.report().render();
+        let v = json::parse(&rendered).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(0.0));
+        assert!(matches!(v.get("p50"), Some(Value::Null)));
+        assert!(matches!(v.get("mean"), Some(Value::Null)));
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = Hist::new();
+        h.push(42.0);
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), Some(42.0), "p{p}");
+        }
+        assert_eq!(h.min(), Some(42.0));
+        assert_eq!(h.max(), Some(42.0));
+        assert_eq!(h.mean(), Some(42.0));
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_on_known_pool() {
+        let mut h = Hist::new();
+        for i in 1..=100 {
+            h.push(i as f64);
+        }
+        assert_eq!(h.percentile(50.0), Some(50.0));
+        assert_eq!(h.percentile(95.0), Some(95.0));
+        assert_eq!(h.percentile(99.0), Some(99.0));
+        assert_eq!(h.percentile(100.0), Some(100.0));
+        assert_eq!(h.percentile(0.0), Some(1.0));
+    }
+
+    #[test]
+    fn merge_pools_and_ignore_non_finite() {
+        let mut a = Hist::new();
+        a.push(1.0);
+        a.push(f64::NAN);
+        a.push(f64::INFINITY);
+        let mut b = Hist::new();
+        b.push(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), Some(1.0));
+        assert_eq!(a.max(), Some(3.0));
+        assert_eq!(a.mean(), Some(2.0));
+    }
+
+    #[test]
+    fn summary_envelope_validates() {
+        let mut r = Report::new();
+        file_header(&mut r, "scenarios", "smoke");
+        let v = json::parse(&r.render()).unwrap();
+        validate_summary(&v).unwrap();
+
+        // wrong version fails
+        let bad = json::parse(
+            "{\"schema\": \"fsfl-bench-summary\", \"v\": 999, \
+             \"bench\": \"x\", \"mode\": \"smoke\"}",
+        )
+        .unwrap();
+        assert!(validate_summary(&bad).is_err());
+    }
+
+    #[test]
+    fn reproducible_view_drops_timing_and_chaotic_wire() {
+        let line = "{\"chaos\": \"kill@1\", \"wall_ms\": 12.0, \
+                    \"wire_sent\": 10, \"up_bytes\": 7, \"ok\": true}";
+        let v = json::parse(line).unwrap();
+        let view = reproducible_view(&v);
+        let keys: Vec<&str> = view.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["chaos", "up_bytes", "ok"]);
+
+        // without chaos, wire fields survive
+        let line = "{\"chaos\": null, \"wall_ms\": 12.0, \"wire_sent\": 10}";
+        let v = json::parse(line).unwrap();
+        let keys: Vec<String> = reproducible_view(&v).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["chaos", "wire_sent"]);
+    }
+}

@@ -143,6 +143,31 @@ impl Report {
         self
     }
 
+    /// Append an explicit `null` field (schema-nullable slots must stay
+    /// present rather than being omitted).
+    pub fn null(&mut self, key: &str) -> &mut Self {
+        self.fields.push((key.to_string(), "null".to_string()));
+        self
+    }
+
+    /// Append an array-of-numbers field (non-finite entries render as
+    /// `null`, like [`Report::num`]).
+    pub fn nums(&mut self, key: &str, values: &[f64]) -> &mut Self {
+        let inner: Vec<String> = values
+            .iter()
+            .map(|v| {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".to_string()
+                }
+            })
+            .collect();
+        self.fields
+            .push((key.to_string(), format!("[{}]", inner.join(", "))));
+        self
+    }
+
     /// Nest another report as an object value.
     pub fn obj(&mut self, key: &str, value: Report) -> &mut Self {
         self.fields.push((key.to_string(), value.render()));

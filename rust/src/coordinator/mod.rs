@@ -2855,6 +2855,9 @@ impl SynthShard {
                 manifest: manifest.clone(),
                 round_seed: 0,
                 scaled: pcfg.scaled,
+                // Env rather than config so `--shard-procs` workers
+                // inherit the bench straggler schedule automatically.
+                straggle: crate::fl::synth::straggle_from_env(),
             },
             pool: shard_pool(cfg, shards),
             pcfg,

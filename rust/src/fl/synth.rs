@@ -140,6 +140,122 @@ pub fn demo_manifest() -> Arc<Manifest> {
     Arc::new(m)
 }
 
+/// A larger self-contained model contract (~96k parameters, 10 classes)
+/// for the bench plane's `--synth-model large` cells: same tensor-kind
+/// coverage as [`demo_manifest`] but with enough rows per tensor that
+/// codec throughput and wire volume dominate fixed per-round overhead.
+pub fn large_manifest() -> Arc<Manifest> {
+    use crate::model::{Kind, TensorSpec};
+    let tensors = vec![
+        TensorSpec {
+            name: "conv1.w".into(),
+            shape: vec![64, 27],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "conv1".into(),
+            out_ch: Some(64),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv1.b".into(),
+            shape: vec![64],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "conv1".into(),
+            out_ch: Some(64),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv1.s".into(),
+            shape: vec![64],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "conv1".into(),
+            out_ch: Some(64),
+            scale_for: Some("conv1.w".into()),
+        },
+        TensorSpec {
+            name: "conv2.w".into(),
+            shape: vec![128, 576],
+            kind: Kind::ConvW,
+            group: Group::Weight,
+            layer: "conv2".into(),
+            out_ch: Some(128),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv2.b".into(),
+            shape: vec![128],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "conv2".into(),
+            out_ch: Some(128),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "conv2.s".into(),
+            shape: vec![128],
+            kind: Kind::Scale,
+            group: Group::Scale,
+            layer: "conv2".into(),
+            out_ch: Some(128),
+            scale_for: Some("conv2.w".into()),
+        },
+        TensorSpec {
+            name: "head.w".into(),
+            shape: vec![10, 2048],
+            kind: Kind::DenseW,
+            group: Group::Weight,
+            layer: "head".into(),
+            out_ch: Some(10),
+            scale_for: None,
+        },
+        TensorSpec {
+            name: "head.b".into(),
+            shape: vec![10],
+            kind: Kind::Bias,
+            group: Group::Weight,
+            layer: "head".into(),
+            out_ch: Some(10),
+            scale_for: None,
+        },
+    ];
+    let param_count = tensors.iter().map(|t| t.numel()).sum();
+    let m = Manifest {
+        model: "synth-large".into(),
+        variant: "synth".into(),
+        classes: 10,
+        input: vec![8, 8, 3],
+        batch: 1,
+        param_count,
+        scale_count: 192,
+        tensors,
+    };
+    debug_assert!(m.validate().is_ok(), "large manifest must validate");
+    Arc::new(m)
+}
+
+/// Environment variable carrying the synthetic straggler schedule as
+/// `EVERY:MS` (every EVERY-th client sleeps MS milliseconds in `train`).
+/// An env var rather than a CLI flag so the setting propagates to
+/// `shard-worker` child processes spawned by `--shard-procs` without
+/// widening the worker handshake.
+pub const STRAGGLE_ENV: &str = "FSFL_SYNTH_STRAGGLE";
+
+/// Parse [`STRAGGLE_ENV`] into `(every, sleep_ms)`. Unset, empty, or
+/// malformed values mean "no stragglers" — bench drivers set it, nothing
+/// else should notice it exists.
+pub fn straggle_from_env() -> Option<(usize, u64)> {
+    let raw = std::env::var(STRAGGLE_ENV).ok()?;
+    let (every, ms) = raw.split_once(':')?;
+    let every: usize = every.trim().parse().ok()?;
+    let ms: u64 = ms.trim().parse().ok()?;
+    if every == 0 {
+        return None;
+    }
+    Some((every, ms))
+}
+
 /// A [`ComputePlane`] whose training output is a pure function of
 /// `(round_seed, client id)`. The driver sets [`Self::round_seed`]
 /// before each round (the synthetic shard worker derives it from the
@@ -151,10 +267,20 @@ pub struct SyntheticPlane {
     pub round_seed: u64,
     /// Whether scale sub-epochs run (even-id clients keep an S update).
     pub scaled: bool,
+    /// Straggler injection: every N-th client sleeps the given number of
+    /// milliseconds in `train` (bench plane only; see [`STRAGGLE_ENV`]).
+    /// Wall-clock only — the emitted delta bytes are unaffected, so
+    /// bitstream fingerprints stay deterministic under stragglers.
+    pub straggle: Option<(usize, u64)>,
 }
 
 impl ComputePlane for SyntheticPlane {
     fn train(&mut self, lane: &mut RoundLane) -> Result<()> {
+        if let Some((every, ms)) = self.straggle {
+            if lane.client % every == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
         synth_client_delta(
             &self.manifest,
             self.round_seed + lane.client as u64,
@@ -175,5 +301,35 @@ impl ComputePlane for SyntheticPlane {
             lane.scale_accepted = true;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_manifest_validates_and_dwarfs_demo() {
+        let small = demo_manifest();
+        let large = large_manifest();
+        assert!(large.validate().is_ok());
+        assert!(large.param_count > 50 * small.param_count);
+        assert_eq!(large.scale_count, 64 + 128);
+    }
+
+    #[test]
+    fn straggle_env_parses_and_rejects_garbage() {
+        // One test owns the variable end to end: process env is shared
+        // across the test harness's threads.
+        std::env::set_var(STRAGGLE_ENV, "3:25");
+        assert_eq!(straggle_from_env(), Some((3, 25)));
+        std::env::set_var(STRAGGLE_ENV, " 2 : 40 ");
+        assert_eq!(straggle_from_env(), Some((2, 40)));
+        for bad in ["", "3", "0:10", "a:b", "3:10:2", "-1:5"] {
+            std::env::set_var(STRAGGLE_ENV, bad);
+            assert_eq!(straggle_from_env(), None, "input {bad:?}");
+        }
+        std::env::remove_var(STRAGGLE_ENV);
+        assert_eq!(straggle_from_env(), None);
     }
 }

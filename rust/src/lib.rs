@@ -27,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod bench;
 pub mod benchkit;
 pub mod cli;
 pub mod compression;

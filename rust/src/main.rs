@@ -29,6 +29,10 @@ COMMANDS:
            --target-accuracy --codec-workers --pipelined
            --compute-shards --transport mpsc|loopback|tcp --shard-procs
            --synth (PJRT-free synthetic compute plane)
+           --synth-model small|large (synthetic model contract)
+           --emit-metrics (machine-readable `#fsfl-metric` stdout lines
+           for the bench driver: live per-round latency/bytes, totals,
+           measured wire traffic, incident history)
            --checkpoint-dir DIR --checkpoint-every K
            --checkpoint-retain N (durable session; keep newest N snapshots)
            --resume DIR (continue a killed run from its last snapshot;
@@ -46,6 +50,15 @@ COMMANDS:
   shard-worker  join a coordinator as one shard process
            (--connect HOST:PORT; spawned automatically by
            `run --shard-procs`, or launch by hand against `serve`)
+  serve    bind a TCP listener and run one experiment over externally
+           launched shard workers (--listen HOST:PORT, default
+           127.0.0.1:0; accepts the same experiment flags as run;
+           workers join via `fsfl shard-worker --connect`)
+  bench    cross-scenario benchmark harness: drives this binary through
+           the deterministic suite-A grid and/or the seeded stochastic
+           suite-B legs, writes bench_runs.jsonl + BENCH_scenarios.json
+           (--suite a|b|all --smoke --seed N --out DIR, default
+           bench-out, --bin PATH to benchmark another fsfl build)
   session  inspect DIR — dump snapshot metadata (version, round, shard
            assignment, client count, params checksum, size, valid/torn)
            without decoding parameters
@@ -74,8 +87,10 @@ fn parse_task(s: &str) -> Result<TaskKind> {
     }
 }
 
-/// Shared tail of every `run` leg: CSV sink + summary line.
-fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path) -> Result<()> {
+/// Shared tail of every `run`/`serve` leg: CSV sink + summary line,
+/// plus the machine-readable totals/wire/events lines under
+/// `--emit-metrics`.
+fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path, emit: bool) -> Result<()> {
     let csv = out.join(format!("{}.csv", log.name));
     log.write_csv(&csv)?;
     println!(
@@ -91,7 +106,33 @@ fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path) -> Result<()> 
             fsfl::metrics::fmt_bytes(w.received as usize),
         );
     }
+    if emit {
+        for line in fsfl::bench::lines_finish(log) {
+            println!("{line}");
+        }
+    }
     Ok(())
+}
+
+/// Round-event callback shared by every leg: the human progress line,
+/// preceded under `--emit-metrics` by the live machine-readable round
+/// line (stdout is line-buffered even into a pipe, so the bench driver
+/// observes each round the moment it completes — that's what lets its
+/// chaos leg SIGKILL this process provably mid-run).
+fn round_printer(emit: bool) -> impl FnMut(&coordinator::Event) {
+    let mut last = std::time::Instant::now();
+    move |ev: &coordinator::Event| {
+        if let coordinator::Event::RoundDone(m) = ev {
+            if emit {
+                println!(
+                    "{}",
+                    fsfl::bench::line_round(m, last.elapsed().as_secs_f64() * 1e3)
+                );
+                last = std::time::Instant::now();
+            }
+            coordinator::print_round(m);
+        }
+    }
 }
 
 /// The supervision-policy flags shared by `run` and `run --resume`
@@ -135,6 +176,7 @@ fn cmd_resume(
     shard_procs: bool,
     policy: Option<fsfl::fl::RoundPolicy>,
     out: &std::path::Path,
+    emit: bool,
 ) -> Result<()> {
     // Read-only lookup: a mistyped path must error, not be created.
     if !std::path::Path::new(dir).is_dir() {
@@ -165,15 +207,27 @@ fn cmd_resume(
     if let Some(p) = policy {
         cfg.policy = p;
     }
-    let on_event = |ev: &coordinator::Event| {
-        if let coordinator::Event::RoundDone(m) = ev {
-            coordinator::print_round(m);
-        }
+    let manifest = if state.synthetic {
+        let m = fsfl::model::Manifest::parse(&state.manifest_tsv)?;
+        m.validate()?;
+        Some(std::sync::Arc::new(m))
+    } else {
+        None
     };
+    if emit {
+        println!(
+            "{}",
+            fsfl::bench::line_run(
+                &cfg.name,
+                cfg.rounds,
+                cfg.clients,
+                manifest.as_ref().map(|m| m.param_count),
+            )
+        );
+    }
+    let on_event = round_printer(emit);
     let log = if state.synthetic {
-        let manifest = fsfl::model::Manifest::parse(&state.manifest_tsv)?;
-        manifest.validate()?;
-        let manifest = std::sync::Arc::new(manifest);
+        let manifest = manifest.expect("synthetic snapshot carries a manifest");
         if shard_procs {
             // Synthetic compute, real OS shard-worker processes.
             let exe = std::env::current_exe()?;
@@ -209,7 +263,7 @@ fn cmd_resume(
     } else {
         coordinator::run_experiment_resumed(cfg, state, on_event)?
     };
-    finish_run(&log, out)
+    finish_run(&log, out, emit)
 }
 
 /// `fsfl session inspect DIR`: dump every snapshot's metadata without
@@ -256,7 +310,24 @@ fn cmd_session_inspect(dir: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
+/// Everything `run` and `serve` share: the parsed experiment config
+/// plus the deployment-shape knobs that ride alongside it.
+struct RunArgs {
+    cfg: ExperimentConfig,
+    plan: coordinator::ElasticPlan,
+    policy: fsfl::fl::RoundPolicy,
+    policy_given: bool,
+    shard_procs: bool,
+    synth: bool,
+    /// `Some` iff `--synth`: the selected synthetic model contract.
+    manifest: Option<std::sync::Arc<fsfl::model::Manifest>>,
+    emit: bool,
+    resume_dir: Option<String>,
+}
+
+/// Parse the experiment-shape flags `run` and `serve` share (the
+/// caller still runs `reject_unknown` after consuming its own extras).
+fn parse_run_args(flags: &Flags, artifacts: &std::path::Path) -> Result<RunArgs> {
     let task = parse_task(&flags.str_or("task", "cifar"))?;
     let protocol: Protocol = flags.str_or("protocol", "fsfl").parse()?;
     let variant = flags.str_or("variant", "tiny_cnn");
@@ -295,6 +366,23 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     cfg.transport = flags.str_or("transport", "mpsc").parse::<TransportKind>()?;
     let shard_procs = flags.flag("shard-procs");
     let synth = flags.flag("synth");
+    let emit = flags.flag("emit-metrics");
+    let model_name = flags.str_or("synth-model", "small");
+    let manifest = if synth {
+        Some(match model_name.as_str() {
+            "small" => fsfl::fl::synth::demo_manifest(),
+            "large" => fsfl::fl::synth::large_manifest(),
+            other => {
+                return Err(anyhow::anyhow!(
+                    "unknown --synth-model {other:?} (small|large)"
+                ))
+            }
+        })
+    } else if flags.str_opt("synth-model").is_some() {
+        return Err(anyhow::anyhow!("--synth-model requires --synth"));
+    } else {
+        None
+    };
     if let Some(dir) = flags.str_opt("checkpoint-dir") {
         cfg.session = Some(SessionConfig {
             dir: dir.into(),
@@ -320,14 +408,41 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         .any(|k| POLICY_FLAGS.contains(&k.as_str()));
     cfg.policy = policy.clone();
     let resume_dir = flags.str_opt("resume");
+    Ok(RunArgs {
+        cfg,
+        plan,
+        policy,
+        policy_given,
+        shard_procs,
+        synth,
+        manifest,
+        emit,
+        resume_dir,
+    })
+}
+
+fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
+    let args = parse_run_args(flags, artifacts)?;
     flags.reject_unknown()?;
+    let RunArgs {
+        mut cfg,
+        plan,
+        policy,
+        policy_given,
+        shard_procs,
+        synth,
+        manifest,
+        emit,
+        resume_dir,
+    } = args;
 
     if let Some(dir) = resume_dir {
         // Resume re-runs the snapshot's config verbatim — refuse
         // experiment-shape flags instead of silently ignoring them.
         // Supervision policy flags are operational, not shape, and may
-        // be re-armed freely.
-        const RESUME_FLAGS: [&str; 4] = ["resume", "out", "artifacts", "shard-procs"];
+        // be re-armed freely (as may metric emission).
+        const RESUME_FLAGS: [&str; 5] =
+            ["resume", "out", "artifacts", "shard-procs", "emit-metrics"];
         let stray: Vec<String> = flags
             .keys()
             .into_iter()
@@ -343,14 +458,21 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
                 stray.join(" ")
             ));
         }
-        return cmd_resume(&dir, shard_procs, policy_given.then_some(policy), out);
+        return cmd_resume(&dir, shard_procs, policy_given.then_some(policy), out, emit);
     }
 
-    let on_event = |ev: &coordinator::Event| {
-        if let coordinator::Event::RoundDone(m) = ev {
-            coordinator::print_round(m);
-        }
-    };
+    if emit {
+        println!(
+            "{}",
+            fsfl::bench::line_run(
+                &cfg.name,
+                cfg.rounds,
+                cfg.clients,
+                manifest.as_ref().map(|m| m.param_count),
+            )
+        );
+    }
+    let on_event = round_printer(emit);
     let log = if synth && shard_procs {
         // Synthetic compute, real OS shard-worker processes (needs a
         // socket: shard-procs implies TCP).
@@ -359,7 +481,7 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         coordinator::run_experiment_processes_session(
             cfg,
             coordinator::ComputeSpec::Synthetic {
-                manifest: fsfl::fl::synth::demo_manifest(),
+                manifest: manifest.expect("--synth selected a manifest"),
             },
             &exe,
             plan,
@@ -367,11 +489,11 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
             on_event,
         )?
     } else if synth {
-        // PJRT-free synthetic compute plane over the built-in demo model
-        // contract — what the session/transport CI jobs drive.
+        // PJRT-free synthetic compute plane over the selected model
+        // contract — what the session/transport/bench CI jobs drive.
         coordinator::run_experiment_synthetic_session(
             cfg,
-            fsfl::fl::synth::demo_manifest(),
+            manifest.expect("--synth selected a manifest"),
             plan,
             None,
             on_event,
@@ -393,7 +515,125 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
     } else {
         coordinator::run_experiment_threaded(cfg, on_event)?
     };
-    finish_run(&log, out)
+    finish_run(&log, out, emit)
+}
+
+/// `fsfl serve`: bind a TCP listener, announce it (machine-readably
+/// under `--emit-metrics`, so the bench driver can launch workers at
+/// seeded Poisson offsets), and run one experiment over externally
+/// launched `fsfl shard-worker` processes.
+fn cmd_serve(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) -> Result<()> {
+    let args = parse_run_args(flags, artifacts)?;
+    let listen = flags.str_or("listen", "127.0.0.1:0");
+    flags.reject_unknown()?;
+    if args.resume_dir.is_some() {
+        return Err(anyhow::anyhow!(
+            "serve does not resume sessions; use `fsfl run --resume DIR --shard-procs`"
+        ));
+    }
+    if args.shard_procs {
+        return Err(anyhow::anyhow!(
+            "serve admits externally launched workers; drop --shard-procs and start \
+             `fsfl shard-worker --connect` processes instead"
+        ));
+    }
+    let RunArgs {
+        mut cfg,
+        plan,
+        manifest,
+        emit,
+        ..
+    } = args;
+    // Externally-joined workers speak the TCP wire protocol regardless
+    // of the --transport flag.
+    cfg.transport = TransportKind::Tcp;
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+    let addr = listener.local_addr()?;
+    if emit {
+        println!("{}", fsfl::bench::line_listening(&addr.to_string()));
+        println!(
+            "{}",
+            fsfl::bench::line_run(
+                &cfg.name,
+                cfg.rounds,
+                cfg.clients,
+                manifest.as_ref().map(|m| m.param_count),
+            )
+        );
+    } else {
+        println!(
+            "listening on {addr}; waiting for {} shard worker(s)",
+            cfg.compute_shards
+        );
+    }
+    // Workers race the listen line; make sure it is on the wire first.
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    let compute = match &manifest {
+        Some(m) => coordinator::ComputeSpec::Synthetic { manifest: m.clone() },
+        None => coordinator::ComputeSpec::Real,
+    };
+    let log = coordinator::serve_session(
+        cfg,
+        &listener,
+        compute,
+        plan,
+        None,
+        || Ok(()),
+        round_printer(emit),
+    )?;
+    finish_run(&log, out, emit)
+}
+
+/// `fsfl bench`: build the scenario list, drive the (release) binary
+/// through it, and merge the per-run JSON lines into the committed
+/// `BENCH_scenarios.json` trajectory file.
+fn cmd_bench(flags: &Flags) -> Result<()> {
+    use fsfl::bench::{driver, spec};
+    let suite = flags.str_or("suite", "a").to_ascii_lowercase();
+    let smoke = flags.flag("smoke");
+    let seed: u64 = flags.get_or("seed", 7)?;
+    let out = std::path::PathBuf::from(flags.str_or("out", "bench-out"));
+    let exe = match flags.str_opt("bin") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::env::current_exe()?,
+    };
+    flags.reject_unknown()?;
+    let mut scenarios = Vec::new();
+    if matches!(suite.as_str(), "a" | "all") {
+        scenarios.extend(spec::suite_a(smoke));
+    }
+    if matches!(suite.as_str(), "b" | "all") {
+        scenarios.extend(spec::suite_b(seed, smoke));
+    }
+    if scenarios.is_empty() {
+        return Err(anyhow::anyhow!("unknown --suite {suite:?} (a|b|all)"));
+    }
+    let mode = if smoke { "smoke" } else { "full" };
+    println!(
+        "bench: {} scenario(s), suite {suite}, mode {mode}, driving {}",
+        scenarios.len(),
+        exe.display()
+    );
+    let records = driver::run_all(&exe, &scenarios, &out)?;
+    let report = driver::summarize(&records, mode, seed);
+    let path = out.join("BENCH_scenarios.json");
+    report.write(&path)?;
+    println!("summary → {}", path.display());
+    let failed: Vec<&str> = records
+        .iter()
+        .filter(|r| !r.ok)
+        .map(|r| r.scenario.id.as_str())
+        .collect();
+    if !failed.is_empty() {
+        return Err(anyhow::anyhow!(
+            "{} of {} scenario(s) failed: {}",
+            failed.len(),
+            records.len(),
+            failed.join(", ")
+        ));
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -420,12 +660,16 @@ fn main() -> Result<()> {
     let artifacts = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
     let out = std::path::PathBuf::from(flags.str_or("out", "results"));
     // Worker processes produce no result files; don't litter their CWD.
-    if !matches!(cmd.as_str(), "shard-worker" | "--shard-worker") {
+    // `bench` manages its own output tree (default bench-out, not
+    // results) inside cmd_bench.
+    if !matches!(cmd.as_str(), "shard-worker" | "--shard-worker" | "bench") {
         std::fs::create_dir_all(&out).ok();
     }
 
     match cmd.as_str() {
         "run" => cmd_run(&flags, &artifacts, &out)?,
+        "serve" => cmd_serve(&flags, &artifacts, &out)?,
+        "bench" => cmd_bench(&flags)?,
         "shard-worker" | "--shard-worker" => {
             let addr = flags
                 .str_opt("connect")

@@ -264,6 +264,34 @@ impl RunLog {
             .map(|i| (self.rounds[i].round, self.cumulative_bytes(i, up_only)))
     }
 
+    /// Compact single-token rendering of the incident history for
+    /// machine-readable log lines (the bench plane's metric stream and
+    /// the golden-output fixtures): `D{round}s{shard}` for a death,
+    /// `R{round}s{shard}a{attempt}` for a respawn,
+    /// `G{round}s{shard}c{id+id+…}` for a degradation, joined by `;`;
+    /// `-` when the run was undisturbed. Contains no spaces by
+    /// construction, so it survives `key=value` line formats.
+    pub fn events_compact(&self) -> String {
+        if self.events.is_empty() {
+            return "-".to_string();
+        }
+        let toks: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| match &e.kind {
+                ShardEventKind::Death { .. } => format!("D{}s{}", e.round, e.shard),
+                ShardEventKind::Respawned { attempt } => {
+                    format!("R{}s{}a{attempt}", e.round, e.shard)
+                }
+                ShardEventKind::Degraded { clients } => {
+                    let ids: Vec<String> = clients.iter().map(|c| c.to_string()).collect();
+                    format!("G{}s{}c{}", e.round, e.shard, ids.join("+"))
+                }
+            })
+            .collect();
+        toks.join(";")
+    }
+
     /// Write the per-round records as a CSV file.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -342,6 +370,32 @@ mod tests {
         // all-NaN input: still no panic
         let s = ScaleStats::from_values("l", &[f32::NAN, f32::NAN]);
         assert!(s.min.is_nan() && s.max.is_nan());
+    }
+
+    #[test]
+    fn events_compact_renders_every_kind_and_the_empty_case() {
+        let mut log = RunLog::new("t");
+        assert_eq!(log.events_compact(), "-");
+        log.events = vec![
+            ShardEvent {
+                round: 3,
+                shard: 0,
+                kind: ShardEventKind::Death { reason: "lease expired".into() },
+            },
+            ShardEvent {
+                round: 3,
+                shard: 0,
+                kind: ShardEventKind::Respawned { attempt: 2 },
+            },
+            ShardEvent {
+                round: 3,
+                shard: 0,
+                kind: ShardEventKind::Degraded { clients: vec![0, 2, 4] },
+            },
+        ];
+        let s = log.events_compact();
+        assert_eq!(s, "D3s0;R3s0a2;G3s0c0+2+4");
+        assert!(!s.contains(' '), "must survive key=value line formats");
     }
 
     #[test]

@@ -171,6 +171,7 @@ pub fn scheduled_round(
         manifest: m.clone(),
         round_seed,
         scaled: pcfg.scaled,
+        straggle: None,
     };
     scheduler::run_round(
         mode,

@@ -1,0 +1,301 @@
+//! Harness conformance for the `fsfl bench` plane.
+//!
+//! Four invariants, all exercised against the real binary via
+//! `CARGO_BIN_EXE_fsfl` (no mocked children):
+//!
+//! 1. **Run-line schema** — one 2-round Suite A smoke cell driven
+//!    through [`driver::run_scenario`] produces a JSON line that parses
+//!    with the dependency-free reader and passes
+//!    [`summary::validate_run_line`], with live per-round latencies and
+//!    a >1× upstream compression ratio vs the dense-f32 baseline.
+//! 2. **Seed reproducibility** — the Suite B scenario list is a pure
+//!    function of its seed, and re-running one cell yields an identical
+//!    [`summary::reproducible_view`] (timing fields excluded).
+//! 3. **Chaos recovery** — the `b-kill` leg SIGKILLs the child after k
+//!    observed round lines and `--resume`s it to the full round count.
+//! 4. **`fsfl bench` CLI** — the smoke Suite A grid end to end:
+//!    `bench_runs.jsonl` (one valid line per cell) plus a
+//!    schema-conformant `BENCH_scenarios.json`.
+//!
+//! Plus the golden-output regression pin: one deterministic
+//! scripted-clock degrade cell whose synth-plane CSV and compact event
+//! history are frozen in `tests/fixtures/golden_suite_a_cell.txt`
+//! (bless with `FSFL_BLESS=1`).
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fsfl::bench::driver::{self, BenchCtx};
+use fsfl::bench::json;
+use fsfl::bench::spec::{self, ChaosLeg, ModelSize, Scenario};
+use fsfl::bench::summary;
+use fsfl::coordinator::{self, ChaosDeath, ChaosPoint, ElasticPlan};
+use fsfl::data::TaskKind;
+use fsfl::fl::{ExperimentConfig, OnShardLoss, Protocol, RoundPolicy, TransportKind};
+use fsfl::metrics::RunLog;
+use fsfl::supervise::ScriptedClock;
+
+/// A unique temp dir per test (removed on success; kept on failure for
+/// post-mortems, matching the chaos suite's convention).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let root = std::env::var_os("FSFL_SESSION_TMP")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    let _ = std::fs::create_dir_all(&root);
+    let d = root.join(format!("fsfl_bench_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn ctx(tag: &str) -> BenchCtx {
+    BenchCtx {
+        exe: PathBuf::from(env!("CARGO_BIN_EXE_fsfl")),
+        scratch: tmp_dir(tag),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1 · one Suite A smoke cell → valid run line
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suite_a_smoke_cell_yields_a_schema_valid_run_line() {
+    let ctx = ctx("cell");
+    let s = Scenario::cell(
+        TransportKind::Mpsc,
+        false,
+        2,
+        ModelSize::Small,
+        4,
+        2,
+        spec::SUITE_A_SEED,
+    );
+    let rec = driver::run_scenario(&ctx, &s);
+    assert!(rec.ok, "scenario failed: {:?}", rec.error);
+    assert_eq!(rec.rounds_done, 2);
+    assert_eq!(
+        rec.round_ms.len(),
+        2,
+        "expected one live round line per round: {:?}",
+        rec.round_ms
+    );
+    assert!(rec.round_ms.iter().all(|&ms| ms >= 0.0));
+    assert!(rec.up_bytes > 0 && rec.down_bytes > 0);
+    assert!(
+        rec.compression_x().is_some_and(|x| x > 1.0),
+        "sparse upstream must beat the dense-f32 baseline: {:?} vs dense {}",
+        rec.up_bytes,
+        rec.dense_bytes
+    );
+    // The line the summary files are built from must self-validate.
+    let line = rec.to_json_line();
+    let parsed = json::parse(&line).unwrap_or_else(|e| panic!("unparsable run line {line}: {e}"));
+    summary::validate_run_line(&parsed).unwrap_or_else(|e| panic!("schema gate: {e}: {line}"));
+    let _ = std::fs::remove_dir_all(&ctx.scratch);
+}
+
+// ---------------------------------------------------------------------------
+// 2 · seed reproducibility
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_reruns_are_identical_apart_from_timing() {
+    // Scenario derivation is a pure function of the seed…
+    assert_eq!(spec::suite_b(7, true), spec::suite_b(7, true));
+    assert_eq!(spec::suite_b(7, false), spec::suite_b(7, false));
+    assert_ne!(spec::suite_b(7, true), spec::suite_b(9, true));
+
+    // …and an actual rerun of a cell matches field-for-field once the
+    // wall-clock fields are projected out.
+    let ctx_a = ctx("repro_a");
+    let ctx_b = ctx("repro_b");
+    let s = Scenario::cell(
+        TransportKind::Loopback,
+        false,
+        1,
+        ModelSize::Small,
+        4,
+        2,
+        spec::SUITE_A_SEED,
+    );
+    let rec_a = driver::run_scenario(&ctx_a, &s);
+    let rec_b = driver::run_scenario(&ctx_b, &s);
+    assert!(rec_a.ok, "first run failed: {:?}", rec_a.error);
+    assert!(rec_b.ok, "second run failed: {:?}", rec_b.error);
+    let view_a = summary::reproducible_view(&json::parse(&rec_a.to_json_line()).unwrap());
+    let view_b = summary::reproducible_view(&json::parse(&rec_b.to_json_line()).unwrap());
+    assert!(!view_a.is_empty());
+    assert_eq!(view_a, view_b, "non-timing fields diverged across reruns");
+    let _ = std::fs::remove_dir_all(&ctx_a.scratch);
+    let _ = std::fs::remove_dir_all(&ctx_b.scratch);
+}
+
+// ---------------------------------------------------------------------------
+// 3 · SIGKILL + --resume chaos leg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_resume_leg_recovers_to_the_full_round_count() {
+    let s = spec::suite_b(7, true)
+        .into_iter()
+        .find(|s| matches!(s.chaos, Some(ChaosLeg::KillResume { .. })))
+        .expect("smoke Suite B always carries a kill leg");
+    let ctx = ctx("kill");
+    let rec = driver::run_scenario(&ctx, &s);
+    assert!(rec.ok, "kill/resume scenario failed: {:?}", rec.error);
+    assert!(rec.resumed, "the driver must have run a --resume phase");
+    assert_eq!(rec.rounds_done, s.rounds);
+    let parsed = json::parse(&rec.to_json_line()).unwrap();
+    summary::validate_run_line(&parsed).unwrap();
+    // Chaos runs keep timing AND wire bytes out of the reproducible
+    // view (the kill point shifts how much was in flight).
+    let view = summary::reproducible_view(&parsed);
+    for dropped in ["wall_ms", "round_ms", "wire_sent", "wire_recv"] {
+        assert!(
+            view.iter().all(|(k, _)| k != dropped),
+            "{dropped} must not appear in a chaos run's reproducible view"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&ctx.scratch);
+}
+
+// ---------------------------------------------------------------------------
+// 4 · `fsfl bench --suite a --smoke` end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_subcommand_smoke_grid_writes_valid_artifacts() {
+    let dir = tmp_dir("cli");
+    let out = dir.join("bench-out");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_fsfl"))
+        .args(["bench", "--suite", "a", "--smoke", "--out"])
+        .arg(&out)
+        .status()
+        .expect("spawning fsfl bench");
+    assert!(status.success(), "fsfl bench exited with {status}");
+
+    let runs = std::fs::read_to_string(out.join("bench_runs.jsonl")).expect("bench_runs.jsonl");
+    let mut n = 0usize;
+    for line in runs.lines().filter(|l| !l.trim().is_empty()) {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("bad run line {line}: {e}"));
+        summary::validate_run_line(&v).unwrap_or_else(|e| panic!("schema gate: {e}: {line}"));
+        assert_eq!(v.get("ok").and_then(json::Value::as_bool), Some(true));
+        n += 1;
+    }
+    assert_eq!(n, spec::suite_a(true).len(), "one line per smoke cell");
+
+    let text = std::fs::read_to_string(out.join("BENCH_scenarios.json")).expect("summary file");
+    let parsed = json::parse(&text).expect("summary is valid JSON");
+    summary::validate_summary(&parsed).expect("summary passes the schema gate");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Golden-output regression pin
+// ---------------------------------------------------------------------------
+
+/// The pinned deterministic cell: the chaos plane's scripted-clock
+/// degrade leg (mpsc, 2 shards, shard 0 killed mid-round 3 with
+/// `on_loss = degrade`). No wall-clock sleeps reach the run, so its
+/// synth-plane CSV is reproducible byte for byte.
+fn golden_cell_log() -> RunLog {
+    let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, Protocol::Fsfl);
+    cfg.clients = 5;
+    cfg.rounds = 6;
+    cfg.participation = 0.6;
+    cfg.seed = 77;
+    cfg.compute_shards = 2;
+    cfg.transport = TransportKind::Mpsc;
+    cfg.policy = RoundPolicy {
+        backoff: Duration::from_millis(10),
+        join_timeout: Duration::from_secs(30),
+        on_loss: OnShardLoss::Degrade,
+        ..RoundPolicy::default()
+    };
+    let clock = Arc::new(ScriptedClock::new(Duration::from_millis(5)));
+    coordinator::run_experiment_synthetic_supervised(
+        cfg,
+        common::manifest(),
+        ElasticPlan::default(),
+        None,
+        Some(clock),
+        vec![ChaosDeath {
+            shard: 0,
+            round: 3,
+            point: ChaosPoint::MidRound,
+        }],
+        |_| {},
+    )
+    .expect("golden cell must complete")
+}
+
+/// Pinned compact event history of the golden cell: shard 0 dies in
+/// round 3, its clients {0, 2, 4} fold into the survivor.
+const GOLDEN_EVENTS: &str = "D3s0;G3s0c0+2+4";
+
+#[test]
+fn golden_cell_csv_and_event_history_are_pinned() {
+    let fixture = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("golden_suite_a_cell.txt");
+    let log = golden_cell_log();
+    assert_eq!(log.events_compact(), GOLDEN_EVENTS);
+
+    let dir = tmp_dir("golden");
+    let path = dir.join("run.csv");
+    log.write_csv(&path).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        csv.starts_with("round,up_bytes,down_bytes,"),
+        "CSV header drifted: {}",
+        csv.lines().next().unwrap_or("")
+    );
+
+    if std::env::var_os("FSFL_BLESS").is_some() {
+        let blessed = format!(
+            "# Golden synth-plane trajectory of the pinned degrade cell\n\
+             # (see integration_bench.rs::golden_cell_log). Re-bless with\n\
+             # FSFL_BLESS=1 after an intentional numeric change.\n\
+             # events: {GOLDEN_EVENTS}\n\
+             {csv}"
+        );
+        std::fs::write(&fixture, blessed).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        return;
+    }
+
+    let raw = std::fs::read_to_string(&fixture)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", fixture.display()));
+    let body: String = raw
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    if body.trim() == "PENDING-BLESS" {
+        // The fixture has not been blessed on a toolchain-bearing host
+        // yet. Pin determinism in the meantime: an identical rerun must
+        // reproduce the CSV byte for byte.
+        let log2 = golden_cell_log();
+        assert_eq!(log2.events_compact(), GOLDEN_EVENTS);
+        let path2 = dir.join("rerun.csv");
+        log2.write_csv(&path2).unwrap();
+        assert_eq!(
+            csv,
+            std::fs::read_to_string(&path2).unwrap(),
+            "golden cell is not deterministic — blessing would be meaningless"
+        );
+    } else {
+        assert_eq!(
+            csv, body,
+            "golden CSV drifted from the blessed fixture; if the change \
+             is intentional, re-bless with FSFL_BLESS=1 cargo test \
+             golden_cell_csv_and_event_history_are_pinned"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

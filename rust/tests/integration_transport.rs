@@ -296,6 +296,77 @@ fn ready_round_trips_manifest_and_params() {
 }
 
 #[test]
+fn heartbeat_frames_round_trip_and_reject_every_adversarial_mutation() {
+    let mut rng = XorShiftRng::new(0xBEA7);
+    let mut cmd = Vec::new();
+    let mut msg = Vec::new();
+    // Nonce corpus: boundary values plus seeded random draws; shard ids
+    // span the realistic range.
+    let mut nonces = vec![0u64, 1, u64::MAX, u64::MAX - 1, 0x8000_0000_0000_0000];
+    nonces.extend((0..32).map(|_| rng.next_u64()));
+    for (i, &nonce) in nonces.iter().enumerate() {
+        let shard = rng.below(64);
+
+        // command: round-trip, tag dispatch, trailing-byte rejection
+        wire::encode_heartbeat_cmd(&mut cmd, nonce);
+        assert_eq!(wire::cmd_tag(&cmd).unwrap(), wire::CmdTag::Heartbeat);
+        assert_eq!(wire::decode_heartbeat_cmd(&cmd).unwrap(), nonce);
+        for cut in 0..cmd.len() {
+            assert!(
+                wire::decode_heartbeat_cmd(&cmd[..cut]).is_err(),
+                "truncated HEARTBEAT cmd at {cut}/{} accepted",
+                cmd.len()
+            );
+        }
+        let mut padded = cmd.clone();
+        padded.push(0);
+        assert!(
+            wire::decode_heartbeat_cmd(&padded).is_err(),
+            "trailing byte after HEARTBEAT cmd accepted"
+        );
+
+        // message: same battery, plus the shard id
+        wire::encode_heartbeat_msg(&mut msg, shard, nonce);
+        assert_eq!(wire::msg_tag(&msg).unwrap(), wire::MsgTag::Heartbeat);
+        assert_eq!(wire::decode_heartbeat_msg(&msg).unwrap(), (shard, nonce));
+        for cut in 0..msg.len() {
+            assert!(
+                wire::decode_heartbeat_msg(&msg[..cut]).is_err(),
+                "truncated HEARTBEAT msg at {cut}/{} accepted",
+                msg.len()
+            );
+        }
+        let mut padded = msg.clone();
+        padded.push(0);
+        assert!(
+            wire::decode_heartbeat_msg(&padded).is_err(),
+            "trailing byte after HEARTBEAT msg accepted"
+        );
+
+        // cross-tag confusion: a cmd payload must not decode as a msg
+        // and vice versa (0x06 vs 0x16 differ in exactly one bit)
+        assert!(
+            wire::decode_heartbeat_msg(&cmd).is_err(),
+            "HEARTBEAT cmd bytes accepted by the msg decoder"
+        );
+        assert!(
+            wire::decode_heartbeat_cmd(&msg).is_err(),
+            "HEARTBEAT msg bytes accepted by the cmd decoder"
+        );
+
+        // a flipped nonce byte must surface as a *different* nonce, not
+        // be silently canonicalized (leases key on exact echo)
+        if i < 8 {
+            let byte = 1 + rng.below(8); // inside the nonce field
+            let mut flipped = cmd.clone();
+            flipped[byte] ^= 0x01;
+            let got = wire::decode_heartbeat_cmd(&flipped).unwrap();
+            assert_ne!(got, nonce, "nonce corruption went unnoticed");
+        }
+    }
+}
+
+#[test]
 fn resize_bearing_state_and_init_frames_round_trip_and_reject_truncation() {
     use fsfl::fl::OptSnapshot;
     use fsfl::net::wire::{StateCmd, StateInstall};
