@@ -72,6 +72,10 @@ pub struct RunRecord {
     /// Dense-f32 upstream baseline: Σ rounds participants × params × 4
     /// (extrapolated over rounds whose live line a SIGKILL swallowed).
     pub dense_bytes: u64,
+    /// Total client-rounds processed (Σ per-round participants,
+    /// extrapolated over rounds whose live line a SIGKILL swallowed,
+    /// like `dense_bytes`).
+    pub participants: u64,
     /// Peak RSS of the child(ren), KiB.
     pub rss_peak_kb: Option<u64>,
     /// Total child CPU time, ms.
@@ -99,6 +103,7 @@ impl RunRecord {
             wire_recv: None,
             params: None,
             dense_bytes: 0,
+            participants: 0,
             rss_peak_kb: None,
             cpu_ms: None,
             events: "-".into(),
@@ -111,6 +116,17 @@ impl RunRecord {
     pub fn rounds_per_sec(&self) -> f64 {
         if self.wall_ms > 0.0 {
             self.rounds_done as f64 * 1e3 / self.wall_ms
+        } else {
+            0.0
+        }
+    }
+
+    /// Client-rounds processed per second of driver wall clock — the
+    /// scale suite's headline number (how fast a deployment chews
+    /// through its cohort), meaningful for every suite.
+    pub fn clients_per_sec(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.participants as f64 * 1e3 / self.wall_ms
         } else {
             0.0
         }
@@ -183,6 +199,8 @@ impl RunRecord {
             .int("rounds", s.rounds as u64)
             .int("seed", s.seed)
             .num("participation", s.participation)
+            .int("resident_clients", s.resident_clients as u64)
+            .int("tree_children", s.tree_children as u64)
             .bool("shard_procs", s.shard_procs)
             .bool("ok", self.ok);
         opt_str(&mut r, "error", self.error.as_deref());
@@ -190,6 +208,8 @@ impl RunRecord {
             .int("rounds_done", self.rounds_done as u64)
             .num("wall_ms", self.wall_ms)
             .num("rounds_per_sec", self.rounds_per_sec())
+            .int("participants", self.participants)
+            .num("clients_per_sec", self.clients_per_sec())
             .nums("round_ms", &self.round_ms);
         opt_num(&mut r, "round_ms_p50", h.percentile(50.0));
         opt_num(&mut r, "round_ms_p95", h.percentile(95.0));
@@ -394,11 +414,21 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
         }
     };
     let status = loop {
+        // Sample *before* try_wait: try_wait reaps an exited child,
+        // destroying its /proc entry. A child that died between polls
+        // is a zombie here — its `stat` still carries the final CPU
+        // ticks (the `status` Vm* lines are already gone, so RSS must
+        // have been caught while it was live) — which is exactly the
+        // "one final sample before reaping" the short-lived smoke and
+        // chaos children need to not report stale or null usage.
         sampler.sample();
         if let Some(status) = child.try_wait()? {
             break status;
         }
         if t0.elapsed() > timeout {
+            // Final snapshot while the process is still live: after
+            // the kill it only ever degrades to a zombie (no Vm*).
+            sampler.sample();
             let _ = child.kill();
             let _ = child.wait();
             reap_workers(&mut workers);
@@ -409,6 +439,9 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
             Watch::Plain => {}
             Watch::KillAfterRounds(k) => {
                 if !killed && round_lines.load(Ordering::SeqCst) >= *k {
+                    // Final pre-kill snapshot (see the loop head): RSS
+                    // is unreadable once the child is a zombie.
+                    sampler.sample();
                     let _ = child.kill();
                     killed = true;
                 }
@@ -471,6 +504,12 @@ fn base_cmd(ctx: &BenchCtx, s: &Scenario, rundir: &Path, serve: bool) -> Command
         .args(["--participation", &s.participation.to_string()])
         .args(["--compute-shards", &s.shards.to_string()])
         .args(["--transport", s.transport.name()]);
+    if s.resident_clients > 0 {
+        cmd.args(["--resident-clients", &s.resident_clients.to_string()]);
+    }
+    if s.tree_children > 0 {
+        cmd.args(["--tree-children", &s.tree_children.to_string()]);
+    }
     if s.pipelined {
         cmd.arg("--pipelined");
     }
@@ -568,12 +607,13 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
     rec.events = parsed.events.unwrap_or_else(|| "-".into());
     rec.rss_peak_kb = usage.rss_peak_kb;
     rec.cpu_ms = usage.cpu_ms;
-    if let Some(params) = parsed.params {
-        let observed: u64 = parsed.rounds.values().map(|r| r.participants).sum();
-        if !parsed.rounds.is_empty() {
-            // Extrapolate over rounds whose live line the SIGKILL
-            // swallowed (participant counts are near-uniform per round).
-            let scale = rounds_done as f64 / parsed.rounds.len() as f64;
+    let observed: u64 = parsed.rounds.values().map(|r| r.participants).sum();
+    if !parsed.rounds.is_empty() {
+        // Extrapolate over rounds whose live line the SIGKILL
+        // swallowed (participant counts are near-uniform per round).
+        let scale = rounds_done as f64 / parsed.rounds.len() as f64;
+        rec.participants = (observed as f64 * scale) as u64;
+        if let Some(params) = parsed.params {
             rec.dense_bytes = (observed as f64 * scale * params as f64 * 4.0) as u64;
         }
     }
@@ -635,13 +675,18 @@ pub fn summarize(records: &[RunRecord], mode: &str, seed: u64) -> Report {
     r.int("seed", seed)
         .int("runs", records.len() as u64)
         .int("failures", records.iter().filter(|x| !x.ok).count() as u64);
-    for (suite, key) in [(SuiteKind::A, "suite_a"), (SuiteKind::B, "suite_b")] {
+    for (suite, key) in [
+        (SuiteKind::A, "suite_a"),
+        (SuiteKind::B, "suite_b"),
+        (SuiteKind::Scale, "suite_scale"),
+    ] {
         let subset: Vec<&RunRecord> = records
             .iter()
             .filter(|x| x.scenario.suite == suite)
             .collect();
         let mut round_ms = Hist::new();
         let mut rounds_per_sec = Hist::new();
+        let mut clients_per_sec = Hist::new();
         let mut wall_ms = Hist::new();
         let mut wire_total = Hist::new();
         let mut compression = Hist::new();
@@ -650,6 +695,7 @@ pub fn summarize(records: &[RunRecord], mode: &str, seed: u64) -> Report {
         for rec in subset.iter().filter(|x| x.ok) {
             round_ms.merge(&rec.round_hist());
             rounds_per_sec.push(rec.rounds_per_sec());
+            clients_per_sec.push(rec.clients_per_sec());
             wall_ms.push(rec.wall_ms);
             if let (Some(s), Some(v)) = (rec.wire_sent, rec.wire_recv) {
                 wire_total.push((s + v) as f64);
@@ -668,6 +714,7 @@ pub fn summarize(records: &[RunRecord], mode: &str, seed: u64) -> Report {
         sub.int("runs", subset.len() as u64)
             .obj("round_ms", round_ms.report())
             .obj("rounds_per_sec", rounds_per_sec.report())
+            .obj("clients_per_sec", clients_per_sec.report())
             .obj("wall_ms", wall_ms.report())
             .obj("wire_total_bytes", wire_total.report())
             .obj("compression_x", compression.report())
@@ -682,6 +729,7 @@ pub fn summarize(records: &[RunRecord], mode: &str, seed: u64) -> Report {
         e.bool("ok", rec.ok)
             .int("rounds_done", rec.rounds_done as u64)
             .num("rounds_per_sec", rec.rounds_per_sec())
+            .num("clients_per_sec", rec.clients_per_sec())
             .num("round_ms_p50", h.percentile(50.0).unwrap_or(f64::NAN))
             .num("round_ms_p95", h.percentile(95.0).unwrap_or(f64::NAN))
             .num("round_ms_p99", h.percentile(99.0).unwrap_or(f64::NAN))
@@ -747,6 +795,7 @@ mod tests {
         rec.round_ms = vec![40.0, 50.0];
         rec.up_bytes = 2_000;
         rec.down_bytes = 800;
+        rec.participants = 8;
         rec.wire_sent = Some(5_000);
         rec.wire_recv = Some(6_000);
         rec.params = Some(1_000);
@@ -761,6 +810,8 @@ mod tests {
         summary::validate_run_line(&v).unwrap();
         assert_eq!(v.get("compression_x").and_then(json::Value::as_f64), Some(16.0));
         assert_eq!(v.get("rounds_per_sec").and_then(json::Value::as_f64), Some(20.0));
+        assert_eq!(v.get("clients_per_sec").and_then(json::Value::as_f64), Some(80.0));
+        assert_eq!(v.get("resident_clients").and_then(json::Value::as_f64), Some(0.0));
         // nullable slots render as null, not as absent keys
         assert!(matches!(v.get("rss_peak_kb"), Some(json::Value::Null)));
         assert!(matches!(v.get("chaos"), Some(json::Value::Null)));
@@ -882,8 +933,26 @@ mod tests {
     #[test]
     fn suite_kind_partition_is_total() {
         // guards the summarize() suite split against new suite kinds
-        for s in [SuiteKind::A, SuiteKind::B] {
-            assert!(["a", "b"].contains(&s.name()));
+        for s in [SuiteKind::A, SuiteKind::B, SuiteKind::Scale] {
+            assert!(["a", "b", "scale"].contains(&s.name()));
+        }
+    }
+
+    #[test]
+    fn near_instant_child_still_yields_cpu_ticks() {
+        // A child that exits before (or between) polls is a zombie by
+        // the time the monitor observes it; sampling before try_wait
+        // reaps it must still recover its final CPU ticks instead of
+        // reporting stale or null usage.
+        let mut cmd = Command::new("/bin/sh");
+        cmd.args(["-c", "exit 0"]);
+        let out = drive_child(cmd, Watch::Plain, Duration::from_secs(30)).unwrap();
+        assert!(out.success);
+        if cfg!(target_os = "linux") {
+            assert!(
+                out.usage.cpu_ms.is_some(),
+                "a reap-raced child must still report CPU time"
+            );
         }
     }
 }

@@ -305,13 +305,62 @@ impl Parser<'_> {
         }
     }
 
+    /// Strict JSON number grammar:
+    /// `-? (0 | [1-9][0-9]*) ('.' [0-9]+)? ([eE] [+-]? [0-9]+)?`.
+    /// The scanner used to slurp any run of `[0-9+-.eE]` and lean on
+    /// `f64::parse` for rejection, so shapes like `1-2` or a lone `-`
+    /// surfaced as a confusing parse-float error (or, worse, as a
+    /// trailing-garbage error far from the real defect). Now every
+    /// malformed number fails HERE, with the byte offset where it
+    /// starts.
     fn number(&mut self) -> Result<Value> {
         let start = self.pos;
-        while let Some(b) = self.peek() {
-            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        match self.peek() {
+            Some(b'0') => {
                 self.pos += 1;
-            } else {
-                break;
+                if matches!(self.peek(), Some(b'0'..=b'9')) {
+                    return Err(anyhow!(
+                        "malformed number at byte {start}: leading zero"
+                    ));
+                }
+            }
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => {
+                return Err(anyhow!(
+                    "malformed number at byte {start}: expected a digit"
+                ))
+            }
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(anyhow!(
+                    "malformed number at byte {start}: fraction needs digits"
+                ));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(anyhow!(
+                    "malformed number at byte {start}: exponent needs digits"
+                ));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
@@ -373,6 +422,27 @@ mod tests {
     fn numbers_including_negatives_and_exponents() {
         assert_eq!(parse("-12.5e2").unwrap().as_f64(), Some(-1250.0));
         assert_eq!(parse("0").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parse("-0.5").unwrap().as_f64(), Some(-0.5));
+        assert_eq!(parse("1e-7").unwrap().as_f64(), Some(1e-7));
+        assert_eq!(parse("2E+3").unwrap().as_f64(), Some(2000.0));
         assert!(parse("1.2.3").is_err());
+    }
+
+    #[test]
+    fn malformed_numbers_fail_in_the_scanner_with_a_byte_offset() {
+        // shapes the old [0-9+-.eE] slurp accepted into f64::parse
+        for bad in ["1-2", "1e", "1E+", "1.", "-", "01", "1.2.3", "--1", "1e5e2"] {
+            let err = format!("{:#}", parse(bad).unwrap_err());
+            assert!(
+                err.contains("byte"),
+                "{bad:?} must fail with a byte offset, got: {err}"
+            );
+        }
+        // the offset points at the malformed number, not the document
+        // start — byte 7 is where `1e` begins inside the object
+        let err = format!("{:#}", parse("{\"ok\": 1e}").unwrap_err());
+        assert!(err.contains("byte 7"), "wrong offset: {err}");
+        // `+1` was already rejected at value dispatch; keep it that way
+        assert!(parse("+1").is_err());
     }
 }

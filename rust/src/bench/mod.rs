@@ -23,6 +23,11 @@
 //!   scenario list, arrival schedules and straggler parameters, so two
 //!   runs differ only in the timing fields
 //!   ([`summary::TIMING_FIELDS`]).
+//! * **Scale suite** ([`spec::suite_scale`], `--suite scale`): the
+//!   100k-client cells (flat fan-in vs `--tree-children`, both under a
+//!   `--resident-clients` budget) recording `clients_per_sec` and peak
+//!   RSS. Run explicitly — never part of `--suite all` — by the CI
+//!   `scale` job, which asserts an RSS ceiling on the result.
 //!
 //! The measurement channel is a line protocol on the child's stdout:
 //! every machine-readable line starts with [`METRIC_PREFIX`] (emitted
@@ -63,7 +68,10 @@ pub const SUMMARY_SCHEMA: &str = "fsfl-bench-summary";
 
 /// Version of both the run-line and summary schemas. Bump on any
 /// structural change and re-bless the committed `BENCH_*.json` files.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: `resident_clients`/`tree_children` scenario fields,
+/// `participants`/`clients_per_sec` throughput metrics, and the
+/// `suite_scale` summary section.
+pub const SCHEMA_VERSION: u64 = 2;
 
 // ---------------------------------------------------------------------------
 // Metric-line formatters

@@ -19,6 +19,10 @@ pub enum SuiteKind {
     A,
     /// Seeded stochastic legs (arrivals, mixes, stragglers, chaos).
     B,
+    /// 100k-client scale cells (cold-state paging budget + tree
+    /// fan-in); run explicitly via `--suite scale`, never part of
+    /// `all`.
+    Scale,
 }
 
 impl SuiteKind {
@@ -27,6 +31,7 @@ impl SuiteKind {
         match self {
             SuiteKind::A => "a",
             SuiteKind::B => "b",
+            SuiteKind::Scale => "scale",
         }
     }
 }
@@ -111,6 +116,12 @@ pub struct Scenario {
     pub seed: u64,
     /// Participation fraction per round.
     pub participation: f64,
+    /// Cold-state resident budget (`--resident-clients`; 0 = paging
+    /// off, every client stays resident).
+    pub resident_clients: usize,
+    /// Leaf shards per mid-tier aggregator (`--tree-children`; 0 =
+    /// flat fan-in).
+    pub tree_children: usize,
     /// Run shards as separate OS processes (`--shard-procs`).
     pub shard_procs: bool,
     /// Non-empty ⇒ serve-mode scenario: the driver runs `fsfl serve`
@@ -156,6 +167,8 @@ impl Scenario {
             rounds,
             seed,
             participation: 1.0,
+            resident_clients: 0,
+            tree_children: 0,
             // TCP cells exercise the real multi-process deployment.
             shard_procs: transport == TransportKind::Tcp,
             arrivals_ms: Vec::new(),
@@ -289,6 +302,8 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
             rounds,
             seed: rng.next_u64(),
             participation: 1.0,
+            resident_clients: 0,
+            tree_children: 0,
             shard_procs: false, // workers are the driver's children
             arrivals_ms,
             straggle: None,
@@ -311,6 +326,8 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
             rounds,
             seed: rng.next_u64(),
             participation: pick(&mut rng, &[0.5, 0.75, 1.0]),
+            resident_clients: 0,
+            tree_children: 0,
             shard_procs: transport == TransportKind::Tcp,
             arrivals_ms: Vec::new(),
             straggle: None,
@@ -332,6 +349,8 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
             rounds,
             seed: rng.next_u64(),
             participation: 1.0,
+            resident_clients: 0,
+            tree_children: 0,
             shard_procs: true,
             arrivals_ms: Vec::new(),
             straggle: Some((range(&mut rng, 2, 4) as usize, range(&mut rng, 10, 40))),
@@ -355,6 +374,8 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
             rounds: chaos_rounds,
             seed: rng.next_u64(),
             participation: 1.0,
+            resident_clients: 0,
+            tree_children: 0,
             shard_procs: false,
             arrivals_ms: Vec::new(),
             straggle: None,
@@ -381,6 +402,8 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
             rounds: chaos_rounds,
             seed: rng.next_u64(),
             participation: 1.0,
+            resident_clients: 0,
+            tree_children: 0,
             shard_procs: true,
             arrivals_ms: Vec::new(),
             straggle: Some((2, range(&mut rng, 5, 20))),
@@ -392,6 +415,47 @@ pub fn suite_b(seed: u64, smoke: bool) -> Vec<Scenario> {
     }
 
     out
+}
+
+/// The scale suite: 100k-client synthetic cells demonstrating that the
+/// coordinator survives the "millions of users" shape on one machine.
+/// Two cells, both with a cold-state resident budget
+/// (`--resident-clients`) far below the client count:
+///
+/// * **flat** — mpsc, flat fan-in (the baseline shape).
+/// * **tree** — loopback with `--tree-children`, so lanes reduce
+///   through mid-tier aggregators before reaching the coordinator.
+///
+/// Deterministic like Suite A (fixed seed, no chaos); the headline
+/// metrics are `clients_per_sec` and `rss_peak_kb` (the CI `scale` job
+/// asserts a ceiling on the latter). Deliberately **not** part of
+/// `--suite all`: at 100k clients a cell is orders of magnitude bigger
+/// than a smoke grid and runs in its own CI job.
+pub fn suite_scale(smoke: bool) -> Vec<Scenario> {
+    // Low participation is the realistic cross-device regime (and what
+    // makes paging matter: the cohort is tiny vs the population).
+    let (rounds, participation) = if smoke { (2, 0.005) } else { (4, 0.01) };
+    let make = |id: &str, transport, tree_children| {
+        let mut s = Scenario::cell(
+            transport,
+            false,
+            2,
+            ModelSize::Small,
+            100_000,
+            rounds,
+            SUITE_A_SEED,
+        );
+        s.id = id.into();
+        s.suite = SuiteKind::Scale;
+        s.participation = participation;
+        s.resident_clients = 512;
+        s.tree_children = tree_children;
+        s
+    };
+    vec![
+        make("scale-100k-flat", TransportKind::Mpsc, 0),
+        make("scale-100k-tree", TransportKind::Loopback, 2),
+    ]
 }
 
 #[cfg(test)]
@@ -449,6 +513,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn scale_suite_pins_the_100k_shape() {
+        for smoke in [true, false] {
+            let cells = suite_scale(smoke);
+            assert_eq!(cells.len(), 2);
+            for s in &cells {
+                assert_eq!(s.suite, SuiteKind::Scale, "{}", s.id);
+                assert_eq!(s.clients, 100_000, "{}", s.id);
+                assert!(
+                    s.resident_clients > 0 && s.resident_clients < s.clients,
+                    "{}: the budget must actually bound residency",
+                    s.id
+                );
+                assert!(s.chaos.is_none() && s.arrivals_ms.is_empty());
+            }
+            // one flat baseline, one tree fan-in cell
+            assert!(cells.iter().any(|s| s.tree_children == 0));
+            assert!(cells.iter().any(|s| s.tree_children > 0));
+        }
+        // deterministic: same flag, same cells
+        assert_eq!(suite_scale(true), suite_scale(true));
     }
 
     #[test]

@@ -148,6 +148,8 @@ pub const RUN_FIELDS: &[(&str, FieldKind)] = &[
     ("rounds", FieldKind::Int),
     ("seed", FieldKind::Int),
     ("participation", FieldKind::Num),
+    ("resident_clients", FieldKind::Int),
+    ("tree_children", FieldKind::Int),
     ("shard_procs", FieldKind::Bool),
     ("ok", FieldKind::Bool),
     ("error", FieldKind::StrOrNull),
@@ -155,6 +157,8 @@ pub const RUN_FIELDS: &[(&str, FieldKind)] = &[
     ("rounds_done", FieldKind::Int),
     ("wall_ms", FieldKind::Num),
     ("rounds_per_sec", FieldKind::Num),
+    ("participants", FieldKind::Int),
+    ("clients_per_sec", FieldKind::Num),
     ("round_ms", FieldKind::NumArr),
     ("round_ms_p50", FieldKind::NumOrNull),
     ("round_ms_p95", FieldKind::NumOrNull),
@@ -182,6 +186,7 @@ pub const RUN_FIELDS: &[(&str, FieldKind)] = &[
 pub const TIMING_FIELDS: &[&str] = &[
     "wall_ms",
     "rounds_per_sec",
+    "clients_per_sec",
     "round_ms",
     "round_ms_p50",
     "round_ms_p95",

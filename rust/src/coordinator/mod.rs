@@ -90,7 +90,7 @@ use crate::model::{Group, Manifest, ParamSet};
 use crate::net::wire::{self, CmdTag, MsgTag, StateCmd, StateInstall};
 use crate::net::{loopback_pair, FrameSink, FrameSource, TcpTransport, Transport};
 use crate::runtime::{ModelRuntime, Runtime};
-use crate::session::{SessionState, SessionStore};
+use crate::session::{ClientPager, SessionState, SessionStore};
 use crate::supervise::{Backoff, Clock, MonotonicClock};
 
 pub use crate::net::wire::ComputeSpec;
@@ -817,14 +817,27 @@ impl Admit for WireAdmit<'_> {
             }
             Plan::Loopback => {
                 let (coord_end, shard_end) = loopback_pair();
+                // Tree fan-in: spawn a mid-tier aggregator instead of a
+                // flat leaf worker; it fans its own subtree out over
+                // internal loopback pipes (see serve_aggregator_transport).
+                let tree = self.cfg.tree_children;
                 self.workers.push(std::thread::spawn(move || {
-                    serve_shard_transport_with(Box::new(shard_end), chaos)
+                    if tree > 0 {
+                        serve_aggregator_transport(Box::new(shard_end), tree)
+                    } else {
+                        serve_shard_transport_with(Box::new(shard_end), chaos)
+                    }
                 }));
                 Box::new(coord_end)
             }
             Plan::Tcp(addr) => {
+                let tree = self.cfg.tree_children;
                 self.workers.push(std::thread::spawn(move || {
-                    serve_shard_transport_with(Box::new(TcpTransport::connect(addr)?), chaos)
+                    if tree > 0 {
+                        serve_aggregator_transport(Box::new(TcpTransport::connect(addr)?), tree)
+                    } else {
+                        serve_shard_transport_with(Box::new(TcpTransport::connect(addr)?), chaos)
+                    }
                 }));
                 let stream = match &self.mode {
                     Some(WireMode::Tcp { listener }) => {
@@ -1072,6 +1085,19 @@ fn run_wire_sharded(
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
     check_wire_cfg(cfg, compute)?;
+    // Tree fan-in composes with static, unsupervised membership only: a
+    // resize or respawn would re-index the subtree's leaf shards, which
+    // the leaf install path (correctly) rejects, and chaos injection
+    // targets flat leaf workers. Reject the combination up front rather
+    // than failing mid-run with a confusing subtree error.
+    if cfg.tree_children > 0
+        && (cfg.policy.supervised() || !session.plan.is_empty() || !session.chaos.is_empty())
+    {
+        return Err(anyhow!(
+            "tree aggregation (tree_children > 0) requires static, unsupervised membership: \
+             run without an elastic plan, round supervision, or chaos injection"
+        ));
+    }
     let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
     let mode = match cfg.transport {
         TransportKind::Loopback => WireMode::Loopback,
@@ -1295,18 +1321,28 @@ fn next_msg(msg_rx: &mpsc::Receiver<ShardMsg>, active: &[u64]) -> Result<ShardMs
     }
 }
 
-/// Fan a collect-only STATE command to every shard and gather the
-/// returned client states (any arrival order), sorted by client id —
-/// the shared read half of checkpoints and resizes. `what` names the
-/// operation in error messages.
+/// Fan a collect-only STATE command to every **live** shard and gather
+/// the returned client states (any arrival order), sorted by client id
+/// — the shared read half of checkpoints and resizes. Degraded slots
+/// hold a dead sender whose send can only fail, so they are masked out
+/// by `live` rather than treated as a collect failure (the degrade
+/// already folded their clients onto survivors). Late heartbeat echoes
+/// are liveness-only and may still be in flight at a round boundary —
+/// they are skipped, not errors. `what` names the operation in error
+/// messages.
 fn collect_all_states(
     txs: &mut [ShardTx],
     msg_rx: &mpsc::Receiver<ShardMsg>,
     active: &[u64],
+    live: &[bool],
     what: &str,
 ) -> Result<Vec<ClientState>> {
-    let shards = txs.len();
+    let mut expected = 0usize;
     for (s, tx) in txs.iter_mut().enumerate() {
+        if !live.get(s).copied().unwrap_or(true) {
+            continue;
+        }
+        expected += 1;
         tx.send(ShardCmd::State(StateCmd {
             collect: true,
             install: None,
@@ -1321,12 +1357,13 @@ fn collect_all_states(
     }
     let mut clients: Vec<ClientState> = Vec::new();
     let mut got = 0usize;
-    while got < shards {
+    while got < expected {
         match next_msg(msg_rx, active) {
             Ok(ShardMsg::State { clients: c, .. }) => {
                 got += 1;
                 clients.extend(c);
             }
+            Ok(ShardMsg::Heartbeat { .. }) => {}
             Ok(ShardMsg::Failed { shard, msg }) => return Err(anyhow!("shard {shard}: {msg}")),
             Ok(_) => return Err(anyhow!("unexpected shard message during {what}")),
             Err(e) => return Err(e),
@@ -1892,6 +1929,16 @@ fn coordinate(
     let mut start_round = 0usize;
     let mut resume_clients: Vec<ClientState> = Vec::new();
 
+    // Client → shard ownership map: round-robin at startup, and the
+    // SINGLE source of truth from here on (it moves into
+    // `Supervision::assign` below). Every install fan-out and round
+    // fan-out reads this map; only membership events — resume install,
+    // elastic resize, quorum degradation — recompute it. Re-deriving
+    // ownership arithmetically at a use site can silently disagree with
+    // what the shards were actually told after a degrade or replace.
+    let n = cfg.clients;
+    let assign: Vec<usize> = (0..n).map(|c| scheduler::shard_of(c, shards)).collect();
+
     // ---- session resume: rebuild the server from the snapshot and
     //      rehydrate every shard over the STATE pair ----
     if let Some(state) = session.resume.take() {
@@ -1946,7 +1993,7 @@ fn coordinate(
             let owned: Vec<ClientState> = state
                 .clients
                 .iter()
-                .filter(|c| scheduler::shard_of(c.id, shards) == s)
+                .filter(|c| assign.get(c.id).copied() == Some(s))
                 .cloned()
                 .collect();
             tx.send(ShardCmd::State(StateCmd {
@@ -2008,7 +2055,6 @@ fn coordinate(
     let last_event_round = session.plan.last_event_round();
 
     let update_idx = server.params.manifest.update_indices();
-    let n = cfg.clients;
     let take = ((cfg.participation * n as f64).round() as usize).clamp(1, n);
     let mut order: Vec<usize> = Vec::with_capacity(n);
     let mut broadcast = Delta::zeros(server.params.manifest.clone());
@@ -2026,7 +2072,7 @@ fn coordinate(
     let clock = session.clock.clone();
     let mut sup = Supervision {
         live: vec![true; shards],
-        assign: (0..n).map(|c| scheduler::shard_of(c, shards)).collect(),
+        assign,
         eval_shard: 0,
         last_seen: vec![clock.now(); shards],
         next_hb: clock.now(),
@@ -2043,7 +2089,13 @@ fn coordinate(
     // synthetic plane's clients are stateless — nothing to cache.
     if supervised && !session.synthetic && sup.cache.clients.is_empty() && start_round < cfg.rounds
     {
-        sup.cache.clients = collect_all_states(txs, msg_rx, active, "the recovery-cache prime")?;
+        sup.cache.clients = collect_all_states(
+            txs,
+            msg_rx,
+            active,
+            &sup.live,
+            "the recovery-cache prime",
+        )?;
     }
 
     for t in start_round..cfg.rounds {
@@ -2073,6 +2125,7 @@ fn coordinate(
                     let migrated = loop {
                         match next_msg(msg_rx, active) {
                             Ok(ShardMsg::State { shard, clients }) if shard == s => break clients,
+                            Ok(ShardMsg::Heartbeat { .. }) => {}
                             Ok(ShardMsg::Failed { shard, msg }) => {
                                 return Err(anyhow!("shard {shard}: {msg}"))
                             }
@@ -2096,6 +2149,7 @@ fn coordinate(
                     loop {
                         match next_msg(msg_rx, active) {
                             Ok(ShardMsg::Ready { shard, .. }) if shard == s => break,
+                            Ok(ShardMsg::Heartbeat { .. }) => {}
                             Ok(ShardMsg::Failed { shard, msg }) => {
                                 return Err(anyhow!("shard {shard}: {msg}"))
                             }
@@ -2135,18 +2189,25 @@ fn coordinate(
                 // every member so each client's residuals, moments, RNG
                 // and schedule land on the worker that now owns it.
                 ElasticEvent::Resize(target) => {
-                    if target == shards {
-                        continue; // no-op resize
+                    if target == shards && sup.live.iter().take(shards).all(|&l| l) {
+                        continue; // no-op resize: same count, full quorum
                     }
-                    // 1 · collect every shard's client state.
+                    // 1 · collect every live shard's client state. A
+                    //     degraded slot holds a dead sender and its
+                    //     clients already live on survivors, so the
+                    //     live mask is what makes a resize after quorum
+                    //     degradation heal instead of erroring (a
+                    //     same-size resize re-admits the dead slots).
                     let clients = collect_all_states(
                         txs,
                         msg_rx,
                         active,
+                        &sup.live,
                         &format!("the {shards}->{target} resize"),
                     )?;
-                    // 2 · shrink: stop the departing shards; their
-                    //     readers' late ConnDown reports become stale.
+                    // 2 · shrink: stop the departing shards (a dead
+                    //     slot's send fails harmlessly); their readers'
+                    //     late ConnDown reports become stale.
                     if target < shards {
                         for s in target..shards {
                             let _ = txs[s].send(ShardCmd::Stop);
@@ -2154,53 +2215,67 @@ fn coordinate(
                         }
                         txs.truncate(target);
                     }
-                    // 3 · grow: admit newcomers under the new count and
-                    //     barrier on their READY handshakes (any order).
-                    if target > shards {
-                        for s in shards..target {
-                            let (conn, tx) = admit.admit(s, target)?;
+                    // 3 · admit a worker into every fresh slot — both
+                    //     the grown tail and any degraded slot being
+                    //     healed — under the new count, then barrier on
+                    //     their READY handshakes (any order).
+                    let mut pending: Vec<bool> = vec![false; target];
+                    let mut waiting = 0usize;
+                    for s in 0..target {
+                        let fresh =
+                            s >= txs.len() || !sup.live.get(s).copied().unwrap_or(false);
+                        if !fresh {
+                            continue;
+                        }
+                        let (conn, tx) = admit.admit(s, target)?;
+                        if s < txs.len() {
+                            txs[s] = tx;
+                        } else {
                             txs.push(tx);
-                            if s < active.len() {
-                                active[s] = conn;
-                            } else {
-                                active.push(conn);
-                            }
                         }
-                        let mut pending: Vec<bool> = vec![true; target];
-                        for p in pending.iter_mut().take(shards) {
-                            *p = false;
+                        if s < active.len() {
+                            active[s] = conn;
+                        } else {
+                            active.push(conn);
                         }
-                        let mut waiting = target - shards;
-                        while waiting > 0 {
-                            match next_msg(msg_rx, active) {
-                                Ok(ShardMsg::Ready { shard, .. })
-                                    if pending.get(shard).copied().unwrap_or(false) =>
-                                {
-                                    pending[shard] = false;
-                                    waiting -= 1;
-                                }
-                                Ok(ShardMsg::Failed { shard, msg }) => {
-                                    return Err(anyhow!("shard {shard}: {msg}"))
-                                }
-                                Ok(_) => {
-                                    return Err(anyhow!(
-                                        "unexpected shard message while shards joined for \
-                                         the {shards}->{target} resize"
-                                    ))
-                                }
-                                Err(e) => return Err(e),
+                        pending[s] = true;
+                        waiting += 1;
+                    }
+                    while waiting > 0 {
+                        match next_msg(msg_rx, active) {
+                            Ok(ShardMsg::Ready { shard, .. })
+                                if pending.get(shard).copied().unwrap_or(false) =>
+                            {
+                                pending[shard] = false;
+                                waiting -= 1;
                             }
+                            Ok(ShardMsg::Heartbeat { .. }) => {}
+                            Ok(ShardMsg::Failed { shard, msg }) => {
+                                return Err(anyhow!("shard {shard}: {msg}"))
+                            }
+                            Ok(_) => {
+                                return Err(anyhow!(
+                                    "unexpected shard message while shards joined for \
+                                     the {shards}->{target} resize"
+                                ))
+                            }
+                            Err(e) => return Err(e),
                         }
                     }
                     shards = target;
-                    // 4 · install the new assignment everywhere: every
-                    //     member (kept or new) gets the absolute params,
-                    //     the fast-forwarded round counter, and exactly
-                    //     the client states it now owns.
+                    // 4 · recompute the ownership map ONCE and install
+                    //     it everywhere: every member (kept, healed or
+                    //     new) gets the absolute params, the
+                    //     fast-forwarded round counter, and exactly the
+                    //     client states it now owns. The same map then
+                    //     becomes `sup.assign` below — the install and
+                    //     the fan-out can never drift apart.
+                    let assign: Vec<usize> =
+                        (0..n).map(|c| scheduler::shard_of(c, shards)).collect();
                     for s in 0..shards {
                         let owned: Vec<ClientState> = clients
                             .iter()
-                            .filter(|c| scheduler::shard_of(c.id, shards) == s)
+                            .filter(|c| assign.get(c.id).copied() == Some(s))
                             .cloned()
                             .collect();
                         txs[s]
@@ -2223,11 +2298,11 @@ fn coordinate(
                             })?;
                     }
                     // Re-anchor supervision to the new membership: all
-                    // members are live, the assignment is the recomputed
-                    // round-robin, and the rewind cache carries the
+                    // members are live, the assignment is the installed
+                    // map, and the rewind cache carries the
                     // just-collected states under the new shard count.
                     sup.live = vec![true; shards];
-                    sup.assign = (0..n).map(|c| scheduler::shard_of(c, shards)).collect();
+                    sup.assign = assign;
                     sup.eval_shard = 0;
                     sup.last_seen = vec![clock.now(); shards];
                     if supervised {
@@ -2488,7 +2563,7 @@ fn coordinate(
                 break 'attempt (m, None);
             }
             if !supervised {
-                let clients = collect_all_states(txs, msg_rx, active, "checkpoint")?;
+                let clients = collect_all_states(txs, msg_rx, active, &sup.live, "checkpoint")?;
                 break 'attempt (m, Some(clients));
             }
             let mut clients: Vec<ClientState> = Vec::new();
@@ -2619,8 +2694,10 @@ trait ShardBody {
     /// Evaluate the central model on the synced replica (shard 0 only).
     fn eval(&mut self) -> Result<(EvalReport, Vec<ScaleStats>)>;
     /// Export every local client's round-boundary state (session
-    /// plane; empty on the synthetic plane).
-    fn collect_state(&mut self) -> Vec<ClientState>;
+    /// plane; empty on the synthetic plane). Includes paged-out
+    /// clients, rehydrated from the spill store — which can fail, so
+    /// the export is fallible.
+    fn collect_state(&mut self) -> Result<Vec<ClientState>>;
     /// Install a [`StateInstall`]: re-assignment, absolute replica
     /// parameters, fast-forwarded round counter and client states.
     fn install_state(&mut self, inst: &StateInstall) -> Result<()>;
@@ -2655,6 +2732,13 @@ struct RealShard<'a, 'rt> {
     pool: WorkerPool,
     mode: ScheduleMode,
     init: ParamSet,
+    /// Cold-state spill store (`--resident-clients`); `None` when every
+    /// client stays resident.
+    pager: Option<ClientPager>,
+    /// Resident budget (0 = paging off). At least one client is always
+    /// kept resident — it donates the post-broadcast replica to
+    /// rehydrated clients and serves eval.
+    budget: usize,
 }
 
 impl<'a, 'rt> RealShard<'a, 'rt> {
@@ -2668,7 +2752,23 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         // round-robin-owned clients are instantiated here.
         let setup = build_setup(mr, cfg, |ci| scheduler::shard_of(ci, shards) == shard)?;
         let manifest = mr.manifest.clone();
-        Ok(Self {
+        // Cold-state paging: with a resident budget set, clients beyond
+        // it spill through the session snapshot codec and rehydrate on
+        // selection (see `session::pager`). The spill dir rides the
+        // session dir when one is configured (inspectable, but still
+        // ephemeral per run); otherwise a per-process temp dir the
+        // pager garbage-collects on drop.
+        let pager = if cfg.resident_clients > 0 {
+            let dir = match &cfg.session {
+                Some(s) => s.dir.join(format!("pages-shard-{shard}")),
+                None => std::env::temp_dir()
+                    .join(format!("fsfl-pages-{}-{shard}", std::process::id())),
+            };
+            Some(ClientPager::open(dir)?)
+        } else {
+            None
+        };
+        let mut built = Self {
             mr,
             cfg,
             shard,
@@ -2683,7 +2783,86 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
             mode: cfg.schedule_mode(),
             manifest,
             init: setup.init,
-        })
+            pager,
+            budget: cfg.resident_clients,
+        };
+        // Enforce the budget from round 0 (the build itself still
+        // instantiates the full owned set; spilling is immediate).
+        built.evict_cold(&[])?;
+        Ok(built)
+    }
+
+    /// Rehydrate every paged-out participant of `order` before the
+    /// round runs. One [`build_setup`] call reconstructs the
+    /// deterministic substrate objects for exactly the missing ids
+    /// (warmup skipped — its only effect is the initial params, which
+    /// the replica copy below overwrites), then each client takes a
+    /// resident donor's replica (all replicas are equal at a round
+    /// boundary) and its own spilled round-boundary state.
+    fn page_in(&mut self, order: &[usize]) -> Result<()> {
+        let Some(mut pager) = self.pager.take() else {
+            return Ok(());
+        };
+        let res = self.page_in_from(&mut pager, order);
+        self.pager = Some(pager);
+        res
+    }
+
+    fn page_in_from(&mut self, pager: &mut ClientPager, order: &[usize]) -> Result<()> {
+        let missing: std::collections::BTreeSet<usize> = order
+            .iter()
+            .copied()
+            .filter(|&ci| pager.contains(ci))
+            .collect();
+        if missing.is_empty() {
+            return Ok(());
+        }
+        let donor_global = self
+            .clients
+            .first()
+            .ok_or_else(|| anyhow!("paging requires at least one resident client"))?
+            .global
+            .clone();
+        let mut rebuild_cfg = self.cfg.clone();
+        rebuild_cfg.warmup_steps = 0;
+        let setup = build_setup(self.mr, &rebuild_cfg, |ci| missing.contains(&ci))?;
+        for mut c in setup.clients {
+            let st = pager.take(c.id)?;
+            c.global.copy_from(&donor_global);
+            c.import_state(&st)?;
+            self.clients.push(c);
+        }
+        Ok(())
+    }
+
+    /// Enforce the resident budget after a round: this round's
+    /// participants (`used`) are the warmest, so non-participants spill
+    /// first (round-granularity LRU). At least one client always stays
+    /// resident — the replica donor for the next page-in and the eval
+    /// replica. Which clients spill never changes outputs (spilled
+    /// state is exact and replicas are interchangeable post-broadcast);
+    /// the paging legs of `tests/integration_session.rs` pin this.
+    fn evict_cold(&mut self, used: &[usize]) -> Result<()> {
+        let Some(mut pager) = self.pager.take() else {
+            return Ok(());
+        };
+        let res = (|| {
+            let target = self.budget.max(1);
+            if self.clients.len() > target {
+                let warm: std::collections::BTreeSet<usize> =
+                    used.iter().copied().collect();
+                // Stable sort: cold (non-participant) clients sink to
+                // the front and spill first.
+                self.clients.sort_by_key(|c| warm.contains(&c.id));
+                while self.clients.len() > target {
+                    let c = self.clients.remove(0);
+                    pager.store(&c.export_state())?;
+                }
+            }
+            Ok(())
+        })();
+        self.pager = Some(pager);
+        res
     }
 }
 
@@ -2697,8 +2876,14 @@ impl ShardBody for RealShard<'_, '_> {
     }
 
     fn run_round(&mut self, order: &[usize], lanes: &mut Vec<RoundLane>) -> Result<()> {
+        // Paging bracket: rehydrate this round's cohort, run, then
+        // spill back down to the budget. Spilling before APPLY is safe
+        // because a client's exportable state excludes the global
+        // replica — a rehydrated client takes a resident donor's.
+        self.page_in(order)?;
         // The same ComputePlane glue the single-process Experiment uses,
-        // with round-robin local indexing.
+        // with round-robin local indexing (the compute plane falls back
+        // to an id search when paging reorders the local set).
         let mut compute = ExperimentCompute {
             mr: self.mr,
             clients: &mut self.clients,
@@ -2716,7 +2901,8 @@ impl ShardBody for RealShard<'_, '_> {
             &self.pcfg,
             &self.update_idx,
             &self.scale_idx,
-        )
+        )?;
+        self.evict_cold(order)
     }
 
     fn apply(&mut self, broadcast: &Delta) -> Result<()> {
@@ -2748,8 +2934,19 @@ impl ShardBody for RealShard<'_, '_> {
         Ok((report, scale_stats))
     }
 
-    fn collect_state(&mut self) -> Vec<ClientState> {
-        self.clients.iter().map(|c| c.export_state()).collect()
+    fn collect_state(&mut self) -> Result<Vec<ClientState>> {
+        let mut states: Vec<ClientState> =
+            self.clients.iter().map(|c| c.export_state()).collect();
+        if let Some(pager) = &mut self.pager {
+            // Spilled states are already round-boundary exports — load
+            // them verbatim (they stay spilled; a collect is a read).
+            let spilled: Vec<usize> = pager.ids().collect();
+            for id in spilled {
+                states.push(pager.load(id)?);
+            }
+        }
+        states.sort_by_key(|c| c.id);
+        Ok(states)
     }
 
     fn install_state(&mut self, inst: &StateInstall) -> Result<()> {
@@ -2775,43 +2972,63 @@ impl ShardBody for RealShard<'_, '_> {
                 inst.shard
             ));
         }
-        // A changed shard *count* is an elastic resize: rebuild the
-        // local client set under the new round-robin assignment from
-        // the shared deterministic substrate, then let the install
-        // below overwrite replicas and import each migrated state. The
-        // recycled lane scratch stays valid (lanes are manifest-shaped,
-        // not assignment-shaped), and the codec pool keeps its width —
-        // width never changes outputs. Warmup is skipped: it only
-        // shapes the *initial* params, which the absolute install below
-        // overwrites bit-for-bit (datasets, splits and schedules do not
-        // depend on it), so the rebuild pays no PJRT train steps.
-        if inst.shards != self.shards {
-            let mut rebuild_cfg = self.cfg.clone();
-            rebuild_cfg.warmup_steps = 0;
-            let setup = build_setup(self.mr, &rebuild_cfg, |ci| {
-                scheduler::shard_of(ci, inst.shards) == inst.shard
-            })?;
-            self.clients = setup.clients;
-            self.shards = inst.shards;
-        }
-        // Explicit ownership: a non-empty migrated set whose id set
-        // differs from the local round-robin assignment means the
-        // coordinator re-mapped clients (quorum degradation folds a dead
-        // shard's clients into survivors). Rebuild the local set from
-        // the explicit ids — warmup skipped for the same reason as the
-        // resize above — then import each migrated state below.
-        if !inst.clients.is_empty() {
-            let ids: std::collections::BTreeSet<usize> =
-                inst.clients.iter().map(|s| s.id).collect();
-            let local: std::collections::BTreeSet<usize> =
-                self.clients.iter().map(|c| c.id).collect();
-            if ids != local {
-                let mut rebuild_cfg = self.cfg.clone();
-                rebuild_cfg.warmup_steps = 0;
-                let setup = build_setup(self.mr, &rebuild_cfg, |ci| ids.contains(&ci))?;
-                self.clients = setup.clients;
+        // Unified ownership resolution — ONE wanted id set, with the
+        // coordinator's explicit migrated set dominating arithmetic:
+        //   · a non-empty migrated set IS the ownership (quorum
+        //     degradation folds a dead shard's clients into survivors,
+        //     so re-deriving round-robin here would drift from what the
+        //     coordinator installed — the PR-6 `local_of` bug class);
+        //   · an empty set with a changed shard *count* is an elastic
+        //     resize under round-robin;
+        //   · otherwise ownership is unchanged.
+        // A rebuild reconstructs the local set from the shared
+        // deterministic substrate. The recycled lane scratch stays
+        // valid (lanes are manifest-shaped, not assignment-shaped) and
+        // the codec pool keeps its width — width never changes outputs.
+        // Warmup is skipped: it only shapes the *initial* params, which
+        // the absolute install below overwrites bit-for-bit (datasets,
+        // splits and schedules do not depend on it), so the rebuild
+        // pays no PJRT train steps.
+        let want: Option<std::collections::BTreeSet<usize>> = if !inst.clients.is_empty() {
+            Some(inst.clients.iter().map(|s| s.id).collect())
+        } else if inst.shards != self.shards {
+            Some(
+                (0..self.cfg.clients)
+                    .filter(|&ci| scheduler::shard_of(ci, inst.shards) == inst.shard)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        match want {
+            Some(ids) => {
+                // Resident ids only: with paging on, a wanted-but-spilled
+                // client must be rebuilt resident too (its spill predates
+                // the install and is cleared below).
+                let local: std::collections::BTreeSet<usize> =
+                    self.clients.iter().map(|c| c.id).collect();
+                if ids != local {
+                    let mut rebuild_cfg = self.cfg.clone();
+                    rebuild_cfg.warmup_steps = 0;
+                    let setup = build_setup(self.mr, &rebuild_cfg, |ci| ids.contains(&ci))?;
+                    self.clients = setup.clients;
+                }
+            }
+            None => {
+                // Ownership unchanged: rehydrate every spilled client
+                // (per-client state carries over verbatim) so the
+                // absolute replica install below reaches them too.
+                let spilled: Vec<usize> = self
+                    .pager
+                    .as_ref()
+                    .map(|p| p.ids().collect())
+                    .unwrap_or_default();
+                if !spilled.is_empty() {
+                    self.page_in(&spilled)?;
+                }
             }
         }
+        self.shards = inst.shards;
         // Absolute replica state: every local client equals the server.
         for c in self.clients.iter_mut() {
             c.global.copy_from(&inst.params);
@@ -2828,7 +3045,12 @@ impl ShardBody for RealShard<'_, '_> {
                 c.import_state(st)?;
             }
         }
-        Ok(())
+        // The install is absolute: whatever was spilled before it is
+        // stale. Drop it all, then re-enforce the resident budget.
+        if let Some(pager) = &mut self.pager {
+            pager.clear()?;
+        }
+        self.evict_cold(&[])
     }
 }
 
@@ -2910,10 +3132,10 @@ impl ShardBody for SynthShard {
         Ok((synth_eval(&self.accum), Vec::new()))
     }
 
-    fn collect_state(&mut self) -> Vec<ClientState> {
+    fn collect_state(&mut self) -> Result<Vec<ClientState>> {
         // The synthetic plane carries no per-client state: a client's
         // output is a pure function of (round seed, id).
-        Vec::new()
+        Ok(Vec::new())
     }
 
     fn install_state(&mut self, inst: &StateInstall) -> Result<()> {
@@ -3042,11 +3264,9 @@ fn shard_loop_mpsc(
                     body.install_state(inst)?;
                 }
                 if cmd.collect {
+                    let clients = body.collect_state()?;
                     msg_tx
-                        .send(ShardMsg::State {
-                            shard,
-                            clients: body.collect_state(),
-                        })
+                        .send(ShardMsg::State { shard, clients })
                         .map_err(|_| anyhow!("coordinator disconnected"))?;
                 }
             }
@@ -3161,7 +3381,8 @@ fn shard_loop_wire(
                     body.install_state(inst)?;
                 }
                 if cmd.collect {
-                    wire::encode_state_msg(&mut out, shard, &body.collect_state());
+                    let states = body.collect_state()?;
+                    wire::encode_state_msg(&mut out, shard, &states);
                     sink.send(&out)
                         .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
                 }
@@ -3237,6 +3458,341 @@ fn serve_shard_transport_with(
         let _ = sink.send(&out);
     }
     result
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical tree fan-in: mid-tier aggregators
+// ---------------------------------------------------------------------------
+
+/// Serve one **mid-tier aggregator** over an established upstream
+/// transport connection: receive the ordinary shard INIT, spawn
+/// `children` leaf shard workers over in-process loopback pipes, and
+/// relay the round protocol between them — reducing the subtree's
+/// ROUND_DONE lanes through the same associative, slot-ordered
+/// [`scheduler::fan_in`] the coordinator uses into ONE merged upstream
+/// frame.
+///
+/// From the coordinator's point of view an aggregator **is** a shard:
+/// it answers READY / ROUND_DONE / EVAL / STATE / HEARTBEAT under its
+/// own index `a` of `A` top-level slots, and the coordinator needs no
+/// topology awareness at all. Internally, child `j` is initialized as
+/// global leaf shard `a + A·j` of `A·children` leaves, so the union of
+/// the children's round-robin client sets is exactly `{c : c mod A ==
+/// a}` — the aggregator's own slot set — and every client lands on one
+/// deterministic leaf (`child_of(c) = (c / A) mod children`).
+///
+/// Determinism: `fan_in` sorts lanes by global round slot, so reducing
+/// per-subtree before the coordinator's final reduction reassociates
+/// but never reorders the aggregation — the coordinator decodes a lane
+/// sequence byte-identical to the flat fan-in. A depth-1 tree
+/// (`children == 1`) relays frames essentially verbatim, and every
+/// deeper shape pins the same `RunLog` rounds
+/// (`tests/integration_tree.rs`). Only coordinator↔aggregator frames
+/// count toward [`RunLog::wire`]; subtree-internal loopback traffic is
+/// topology-private.
+pub fn serve_aggregator_transport(upstream: Box<dyn Transport>, children: usize) -> Result<()> {
+    let (mut sink, mut source) = upstream.open()?;
+    let mut buf = Vec::new();
+    match source.recv(&mut buf) {
+        Ok(true) => {}
+        Ok(false) => return Err(anyhow!("coordinator closed before INIT")),
+        Err(e) => return Err(anyhow!("INIT receive failed: {e:#}")),
+    }
+    if !matches!(wire::cmd_tag(&buf)?, CmdTag::Init) {
+        return Err(anyhow!("expected INIT handshake first"));
+    }
+    let init = wire::decode_init(&buf)?;
+    let shard = init.shard;
+    let result = run_aggregator(&init, children.max(1), &mut sink, &mut source);
+    if let Err(e) = &result {
+        let mut out = Vec::new();
+        wire::encode_failed(&mut out, shard, &format!("{e:#}"));
+        let _ = sink.send(&out);
+    }
+    result
+}
+
+/// Receive child `j`'s next frame into `buf`. A closed pipe or a FAILED
+/// frame becomes a descriptive error (tagged with the failing leaf's
+/// global index) — the upstream FAILED relay happens in
+/// [`serve_aggregator_transport`]'s error path.
+fn recv_child(source: &mut FrameSource, buf: &mut Vec<u8>, j: usize) -> Result<MsgTag> {
+    match source.recv(buf) {
+        Ok(true) => {}
+        Ok(false) => return Err(anyhow!("subtree child {j} closed its pipe")),
+        Err(e) => return Err(anyhow!("subtree child {j}: receive failed: {e:#}")),
+    }
+    let tag = wire::msg_tag(buf)?;
+    if matches!(tag, MsgTag::Failed) {
+        let (leaf, msg) = wire::decode_failed(buf)?;
+        return Err(anyhow!("subtree leaf shard {leaf}: {msg}"));
+    }
+    Ok(tag)
+}
+
+/// The aggregator relay loop (see [`serve_aggregator_transport`] for
+/// the topology and determinism contract).
+fn run_aggregator(
+    init: &wire::Init,
+    children: usize,
+    up_sink: &mut FrameSink,
+    up_source: &mut FrameSource,
+) -> Result<()> {
+    let a = init.shard;
+    let top = init.shards;
+    let leaves = top * children;
+    let mut out = Vec::new();
+    let mut inbuf = Vec::new();
+    let mut buf = Vec::new();
+
+    // Spawn the subtree: child j serves global leaf shard a + top*j
+    // over an internal loopback pipe. The INIT config is forwarded
+    // verbatim — leaves ignore `tree_children`; the INIT's own
+    // shard/shards fields carry the leaf indexing.
+    let mut kids: Vec<(FrameSink, FrameSource)> = Vec::with_capacity(children);
+    let mut handles = Vec::with_capacity(children);
+    for j in 0..children {
+        let (agg_end, leaf_end) = loopback_pair();
+        handles.push(std::thread::spawn(move || {
+            serve_shard_transport(Box::new(leaf_end))
+        }));
+        let (mut k_sink, k_source) = (Box::new(agg_end) as Box<dyn Transport>).open()?;
+        wire::encode_init(&mut out, a + top * j, leaves, &init.cfg, &init.compute);
+        k_sink
+            .send(&out)
+            .map_err(|e| anyhow!("subtree child {j}: {e:#}"))?;
+        kids.push((k_sink, k_source));
+    }
+
+    // Startup barrier: every child builds its plane and reports READY.
+    // The deterministic substrate makes every leaf's init params
+    // identical, so child 0's READY becomes the subtree's upstream
+    // READY.
+    let mut init_params: Option<ParamSet> = None;
+    for j in 0..children {
+        match recv_child(&mut kids[j].1, &mut buf, j)? {
+            MsgTag::Ready => {
+                let (leaf, params) = wire::decode_ready(&buf)?;
+                if leaf != a + top * j {
+                    return Err(anyhow!(
+                        "subtree child {j} claims leaf shard {leaf}, expected {}",
+                        a + top * j
+                    ));
+                }
+                if init_params.is_none() {
+                    init_params = Some(params);
+                }
+            }
+            t => return Err(anyhow!("unexpected {t:?} from subtree child {j} during startup")),
+        }
+    }
+    let init_params = init_params.expect("children >= 1");
+    let manifest = init_params.manifest.clone();
+    wire::encode_ready(&mut out, a, &init_params);
+    up_sink
+        .send(&out)
+        .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+
+    // Lane recycling across rounds, mirroring the coordinator's fan-in.
+    let mut free: Vec<RoundLane> = Vec::new();
+    loop {
+        match up_source.recv(&mut inbuf) {
+            Ok(true) => {}
+            Ok(false) => break, // coordinator hung up: clean teardown
+            Err(e) => return Err(anyhow!("coordinator receive failed: {e:#}")),
+        }
+        match wire::cmd_tag(&inbuf)? {
+            CmdTag::Init => return Err(anyhow!("unexpected second INIT handshake")),
+            CmdTag::Round => {
+                let slots = wire::decode_round(&inbuf)?;
+                // Fan the slot set out by leaf ownership. EVERY child
+                // gets a sub-ROUND, empty included: leaf shards count
+                // ROUND commands for their round seed, so all must see
+                // all rounds.
+                let mut per_child: Vec<Vec<(usize, usize)>> = vec![Vec::new(); children];
+                for &(slot, ci) in &slots {
+                    per_child[(ci / top) % children].push((slot, ci));
+                }
+                for (j, sub) in per_child.into_iter().enumerate() {
+                    wire::encode_round(&mut out, &sub);
+                    kids[j]
+                        .0
+                        .send(&out)
+                        .map_err(|e| anyhow!("subtree child {j}: {e:#}"))?;
+                }
+                // Collect each child's decoded lanes and reduce them
+                // through the shared slot-ordered fan-in before the
+                // single upstream ROUND_DONE.
+                let mut tagged: Vec<(usize, RoundLane)> = Vec::with_capacity(slots.len());
+                for j in 0..children {
+                    match recv_child(&mut kids[j].1, &mut buf, j)? {
+                        MsgTag::RoundDone => {
+                            let (leaf, lanes) =
+                                wire::decode_round_done_into(&buf, &manifest, &mut free)?;
+                            if leaf != a + top * j {
+                                return Err(anyhow!(
+                                    "subtree child {j} answered as leaf shard {leaf}, \
+                                     expected {}",
+                                    a + top * j
+                                ));
+                            }
+                            tagged.extend(lanes);
+                        }
+                        t => {
+                            return Err(anyhow!(
+                                "unexpected {t:?} from subtree child {j} during the round"
+                            ))
+                        }
+                    }
+                }
+                let tagged = scheduler::fan_in(tagged);
+                wire::encode_round_done(&mut out, a, &tagged)?;
+                up_sink
+                    .send(&out)
+                    .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+                free.extend(tagged.into_iter().map(|(_, lane)| lane));
+            }
+            CmdTag::Apply => {
+                if inbuf.len() <= APPLY_EVAL_OFFSET {
+                    return Err(anyhow!("malformed APPLY relay frame"));
+                }
+                // Relay the APPLY bytes verbatim — the broadcast stays
+                // the coordinator's exact bitstream — except the eval
+                // flag: only child 0 (whose leaf set contains the
+                // globally-lowest local client) may evaluate, and only
+                // when the coordinator asked this aggregator to.
+                let eval = inbuf[APPLY_EVAL_OFFSET] != 0;
+                for j in 0..children {
+                    inbuf[APPLY_EVAL_OFFSET] = u8::from(eval && j == 0);
+                    kids[j]
+                        .0
+                        .send(&inbuf)
+                        .map_err(|e| anyhow!("subtree child {j}: {e:#}"))?;
+                }
+                if eval {
+                    match recv_child(&mut kids[0].1, &mut buf, 0)? {
+                        // EVAL carries no shard field — relay verbatim.
+                        MsgTag::Eval => up_sink
+                            .send(&buf)
+                            .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?,
+                        t => {
+                            return Err(anyhow!(
+                                "unexpected {t:?} from subtree child 0 awaiting eval"
+                            ))
+                        }
+                    }
+                }
+            }
+            CmdTag::State => {
+                let cmd = wire::decode_state_cmd(&inbuf, &manifest)?;
+                if let Some(inst) = &cmd.install {
+                    // Membership is static under a tree (the
+                    // coordinator rejects the combination up front);
+                    // installs only ever re-target the same topology.
+                    if inst.shards != top {
+                        return Err(anyhow!(
+                            "tree aggregation does not support membership resizing \
+                             (install under {} top-level shards, subtree built for {top})",
+                            inst.shards
+                        ));
+                    }
+                    if inst.shard != a {
+                        return Err(anyhow!(
+                            "state install re-assigns aggregator {a} to {}",
+                            inst.shard
+                        ));
+                    }
+                    for j in 0..children {
+                        let owned: Vec<ClientState> = inst
+                            .clients
+                            .iter()
+                            .filter(|c| (c.id / top) % children == j)
+                            .cloned()
+                            .collect();
+                        let sub = StateCmd {
+                            collect: cmd.collect,
+                            install: Some(StateInstall {
+                                shard: a + top * j,
+                                shards: leaves,
+                                rounds_done: inst.rounds_done,
+                                params: inst.params.clone(),
+                                clients: owned,
+                            }),
+                        };
+                        wire::encode_state_cmd(&mut out, &sub);
+                        kids[j]
+                            .0
+                            .send(&out)
+                            .map_err(|e| anyhow!("subtree child {j}: {e:#}"))?;
+                    }
+                } else {
+                    for j in 0..children {
+                        wire::encode_state_cmd(
+                            &mut out,
+                            &StateCmd {
+                                collect: cmd.collect,
+                                install: None,
+                            },
+                        );
+                        kids[j]
+                            .0
+                            .send(&out)
+                            .map_err(|e| anyhow!("subtree child {j}: {e:#}"))?;
+                    }
+                }
+                if cmd.collect {
+                    let mut all: Vec<ClientState> = Vec::new();
+                    for j in 0..children {
+                        match recv_child(&mut kids[j].1, &mut buf, j)? {
+                            MsgTag::State => {
+                                let (leaf, clients) = wire::decode_state_msg(&buf)?;
+                                if leaf != a + top * j {
+                                    return Err(anyhow!(
+                                        "subtree child {j} answered as leaf shard {leaf}, \
+                                         expected {}",
+                                        a + top * j
+                                    ));
+                                }
+                                all.extend(clients);
+                            }
+                            t => {
+                                return Err(anyhow!(
+                                    "unexpected {t:?} from subtree child {j} during state \
+                                     collect"
+                                ))
+                            }
+                        }
+                    }
+                    all.sort_by_key(|c| c.id);
+                    wire::encode_state_msg(&mut out, a, &all);
+                    up_sink
+                        .send(&out)
+                        .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+                }
+            }
+            CmdTag::Heartbeat => {
+                // The aggregator IS the shard upstream probes — echo
+                // its own liveness directly; children carry no pending
+                // probe (their liveness surfaces as relay errors).
+                let nonce = wire::decode_heartbeat_cmd(&inbuf)?;
+                wire::encode_heartbeat_msg(&mut out, a, nonce);
+                up_sink
+                    .send(&out)
+                    .map_err(|e| anyhow!("coordinator disconnected: {e:#}"))?;
+            }
+            CmdTag::Stop => break,
+        }
+    }
+    // Wind the subtree down: STOP every child, drop the pipes, join.
+    for (k_sink, _) in kids.iter_mut() {
+        wire::encode_stop(&mut out);
+        let _ = k_sink.send(&out);
+    }
+    drop(kids);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
 }
 
 /// Posts a `ConnDown` for its shard when the worker thread unwinds —
@@ -3411,6 +3967,23 @@ pub fn join_shard(addr: &str) -> Result<()> {
     );
     let t = TcpTransport::connect_retry(addr, 10, &mut backoff, &MonotonicClock::new())?;
     serve_shard_transport(Box::new(t))
+}
+
+/// Join a coordinator as one **mid-tier aggregator** owning `children`
+/// leaf shards (the multi-process tree side; `fsfl aggregator --connect
+/// HOST:PORT --children K` calls this). Connects with the same bounded
+/// retry + backoff as [`join_shard`], receives the ordinary shard INIT
+/// under its top-level slot, spawns its subtree in-process, and serves
+/// the aggregation relay (see [`serve_aggregator_transport`]) until
+/// STOP.
+pub fn join_aggregator(addr: &str, children: usize) -> Result<()> {
+    let mut backoff = Backoff::new(
+        Duration::from_millis(50),
+        Duration::from_secs(2),
+        0x5AFE_C0DE_F157_F00D,
+    );
+    let t = TcpTransport::connect_retry(addr, 10, &mut backoff, &MonotonicClock::new())?;
+    serve_aggregator_transport(Box::new(t), children)
 }
 
 /// Run a sharded experiment with every shard as a **separate OS

@@ -397,6 +397,23 @@ pub struct ExperimentConfig {
     /// and shard-loss behaviour. Operational only — never changes what
     /// is computed.
     pub policy: RoundPolicy,
+    /// Hierarchical fan-in: on a wire transport each top-level slot
+    /// becomes a mid-tier aggregator that owns this many leaf shards
+    /// and reduces their lanes before streaming one merged ROUND_DONE
+    /// upward (see the tree/aggregation-plane section of
+    /// `ARCHITECTURE.md`). `0` = flat fan-in (today's shape); `1` = a
+    /// depth-1 relay tree, byte-identical to flat by construction. The
+    /// reduction in `scheduler::fan_in` is associative and slot-ordered,
+    /// so every tree shape produces byte-identical `RunLog` rounds.
+    /// Ignored on the mpsc transport (nothing is serialized there).
+    pub tree_children: usize,
+    /// Cold-state paging budget: at most this many `ClientState`s stay
+    /// resident per shard between rounds; the rest page through the
+    /// session snapshot codec on disk and are rehydrated when their
+    /// client is selected. `0` = everything resident (today's shape).
+    /// Purely a memory knob — paged and fully-resident runs are
+    /// byte-identical.
+    pub resident_clients: usize,
 }
 
 impl ExperimentConfig {
@@ -438,6 +455,8 @@ impl ExperimentConfig {
             transport: TransportKind::Mpsc,
             session: None,
             policy: RoundPolicy::default(),
+            tree_children: 0,
+            resident_clients: 0,
         }
     }
 

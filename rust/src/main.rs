@@ -28,6 +28,12 @@ COMMANDS:
            --test-samples --warmup-steps --participation --seed
            --target-accuracy --codec-workers --pipelined
            --compute-shards --transport mpsc|loopback|tcp --shard-procs
+           --tree-children K (hierarchical fan-in: each wire shard slot
+           becomes a mid-tier aggregator reducing K leaf shards;
+           byte-identical to the flat fan-in)
+           --resident-clients N (cold-state paging: keep at most N
+           client states resident per shard, spill the rest through the
+           session snapshot codec; 0 = everything resident)
            --synth (PJRT-free synthetic compute plane)
            --synth-model small|large (synthetic model contract)
            --emit-metrics (machine-readable `#fsfl-metric` stdout lines
@@ -50,6 +56,10 @@ COMMANDS:
   shard-worker  join a coordinator as one shard process
            (--connect HOST:PORT; spawned automatically by
            `run --shard-procs`, or launch by hand against `serve`)
+  aggregator  join a coordinator as one mid-tier aggregator that fans
+           its slot out over K in-process leaf shards and streams one
+           merged lane set upward (--connect HOST:PORT --children K;
+           launch by hand against `serve`, one per shard slot)
   serve    bind a TCP listener and run one experiment over externally
            launched shard workers (--listen HOST:PORT, default
            127.0.0.1:0; accepts the same experiment flags as run;
@@ -57,8 +67,10 @@ COMMANDS:
   bench    cross-scenario benchmark harness: drives this binary through
            the deterministic suite-A grid and/or the seeded stochastic
            suite-B legs, writes bench_runs.jsonl + BENCH_scenarios.json
-           (--suite a|b|all --smoke --seed N --out DIR, default
-           bench-out, --bin PATH to benchmark another fsfl build)
+           (--suite a|b|all|scale --smoke --seed N --out DIR, default
+           bench-out, --bin PATH to benchmark another fsfl build;
+           `scale` is the 100k-client paging cell and is not part of
+           `all`)
   session  inspect DIR — dump snapshot metadata (version, round, shard
            assignment, client count, params checksum, size, valid/torn)
            without decoding parameters
@@ -364,6 +376,8 @@ fn parse_run_args(flags: &Flags, artifacts: &std::path::Path) -> Result<RunArgs>
     cfg.seed = flags.get_or("seed", 0)?;
     cfg.target_accuracy = flags.get("target-accuracy")?;
     cfg.transport = flags.str_or("transport", "mpsc").parse::<TransportKind>()?;
+    cfg.tree_children = flags.get_or("tree-children", 0)?;
+    cfg.resident_clients = flags.get_or("resident-clients", 0)?;
     let shard_procs = flags.flag("shard-procs");
     let synth = flags.flag("synth");
     let emit = flags.flag("emit-metrics");
@@ -606,8 +620,13 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     if matches!(suite.as_str(), "b" | "all") {
         scenarios.extend(spec::suite_b(seed, smoke));
     }
+    // The 100k-client scale cell is opt-in only: it is a memory/
+    // throughput probe, not part of the `all` regression grids.
+    if suite.as_str() == "scale" {
+        scenarios.extend(spec::suite_scale(smoke));
+    }
     if scenarios.is_empty() {
-        return Err(anyhow::anyhow!("unknown --suite {suite:?} (a|b|all)"));
+        return Err(anyhow::anyhow!("unknown --suite {suite:?} (a|b|all|scale)"));
     }
     let mode = if smoke { "smoke" } else { "full" };
     println!(
@@ -662,7 +681,10 @@ fn main() -> Result<()> {
     // Worker processes produce no result files; don't litter their CWD.
     // `bench` manages its own output tree (default bench-out, not
     // results) inside cmd_bench.
-    if !matches!(cmd.as_str(), "shard-worker" | "--shard-worker" | "bench") {
+    if !matches!(
+        cmd.as_str(),
+        "shard-worker" | "--shard-worker" | "aggregator" | "bench"
+    ) {
         std::fs::create_dir_all(&out).ok();
     }
 
@@ -676,6 +698,17 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("shard-worker needs --connect HOST:PORT"))?;
             flags.reject_unknown()?;
             coordinator::join_shard(&addr)?;
+        }
+        "aggregator" => {
+            let addr = flags
+                .str_opt("connect")
+                .ok_or_else(|| anyhow::anyhow!("aggregator needs --connect HOST:PORT"))?;
+            let children: usize = flags.get_or("children", 1)?;
+            flags.reject_unknown()?;
+            if children == 0 {
+                return Err(anyhow::anyhow!("aggregator needs --children >= 1"));
+            }
+            coordinator::join_aggregator(&addr, children)?;
         }
         "fig1" => {
             let a = harness::Fig1Args::from_flags(&flags)?;

@@ -58,7 +58,10 @@ use crate::runtime::Optimizer;
 /// the config grew a trailing round-supervision policy block (heartbeat
 /// cadence, round deadline, retry budget, backoff base, join timeout,
 /// shard-loss mode).
-pub const PROTOCOL_VERSION: u8 = 4;
+/// v5: the config grew a trailing hierarchy block — `tree_children`
+/// (mid-tier aggregator fan-out; 0 = flat fan-in) and
+/// `resident_clients` (cold-state paging budget; 0 = fully resident).
+pub const PROTOCOL_VERSION: u8 = 5;
 
 const TAG_INIT: u8 = 0x01;
 const TAG_ROUND: u8 = 0x02;
@@ -383,6 +386,9 @@ fn put_config(buf: &mut Vec<u8>, cfg: &ExperimentConfig) {
         OnShardLoss::Respawn => 1,
         OnShardLoss::Degrade => 2,
     });
+    // v5 hierarchy block: aggregator fan-out + paging budget.
+    put_usize(buf, cfg.tree_children);
+    put_usize(buf, cfg.resident_clients);
 }
 
 fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
@@ -486,6 +492,8 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
             other => return Err(anyhow!("unknown shard-loss tag {other}")),
         },
     };
+    let tree_children = rd.usize_()?;
+    let resident_clients = rd.usize_()?;
     Ok(ExperimentConfig {
         name,
         artifacts_root,
@@ -519,6 +527,8 @@ fn read_config(rd: &mut Rd) -> Result<ExperimentConfig> {
         transport,
         session,
         policy,
+        tree_children,
+        resident_clients,
     })
 }
 
@@ -1442,6 +1452,8 @@ mod tests {
             join_timeout: std::time::Duration::from_secs(9),
             on_loss: OnShardLoss::Degrade,
         };
+        cfg.tree_children = 2;
+        cfg.resident_clients = 5;
         cfg
     }
 

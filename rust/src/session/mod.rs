@@ -47,6 +47,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+pub mod pager;
+pub use pager::ClientPager;
+
 use crate::fl::{ClientState, ExperimentConfig};
 use crate::metrics::{RoundMetrics, ScaleStats};
 use crate::model::params::ParamSet;
@@ -63,7 +66,10 @@ use crate::net::wire::{self, Rd};
 /// knob.
 /// v3: the embedded config codec grew the round-supervision policy
 /// block (wire protocol v4), changing the snapshot layout.
-pub const SNAPSHOT_VERSION: u8 = 3;
+/// v4: the embedded config codec grew the hierarchy block — tree
+/// fan-out + cold-state paging budget (wire protocol v5), changing the
+/// snapshot layout.
+pub const SNAPSHOT_VERSION: u8 = 4;
 
 /// First payload byte of every snapshot (distinct from all wire tags,
 /// so a misrouted file is caught immediately).

@@ -1,0 +1,322 @@
+//! Cold-state paging for per-client round-boundary state.
+//!
+//! At 100k+ clients the resident-state wall is O(clients × model):
+//! every client's Eq. 5 residual, Adam moments and RNG/schedule
+//! positions stay in RAM between rounds even though partial
+//! participation touches only a small cohort per round. The pager
+//! spills cold [`ClientState`]s to disk and rehydrates them when their
+//! client is selected, so the shard's resident set is bounded by
+//! [`crate::fl::ExperimentConfig::resident_clients`] instead of the
+//! client count.
+//!
+//! **No new format.** Each spilled state is one `net/frame` frame
+//! (`FSNT` magic, length prefix, FNV-1a payload checksum) whose payload
+//! is the exact client-state block the session snapshot codec and the
+//! wire `STATE` pair already speak — a torn or bit-rotted spill file is
+//! detected at load time with a descriptive error, never a
+//! half-restored client.
+//!
+//! The pager is deliberately *not* an LRU itself: it is the spill
+//! store. The shard decides what stays resident (its budget policy)
+//! and calls [`ClientPager::store`]/[`ClientPager::load`] at round
+//! boundaries. Paging is purely a memory knob — a paged run's outputs
+//! are byte-identical to a fully-resident run, pinned by the paging
+//! legs in `tests/integration_session.rs`.
+//!
+//! Spill files are ephemeral per run: durable checkpoints still carry
+//! the full client-state set (the coordinator collects it over the
+//! `STATE` pair), so crash/`--resume` never reads a spill directory —
+//! a resumed shard re-pages from the installed state.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fl::ClientState;
+use crate::net::frame;
+use crate::net::wire::{self, Rd};
+
+/// Spill-file extension (`client-<id>.fcs`, "fsfl client state").
+const PAGE_EXT: &str = ".fcs";
+
+/// A directory of spilled per-client states, one checksummed frame
+/// file each (see the module docs for the format and the resident-set
+/// contract).
+pub struct ClientPager {
+    dir: PathBuf,
+    /// Ids currently spilled (the in-memory index; spill files are
+    /// ephemeral per run, so no directory scan is ever needed).
+    spilled: BTreeSet<usize>,
+    /// Whether this pager created `dir` and should remove it on drop.
+    created_dir: bool,
+    /// Reused encode buffer (steady-state spills allocate nothing
+    /// beyond file I/O).
+    buf: Vec<u8>,
+}
+
+impl ClientPager {
+    /// Open (creating if needed) a spill directory. If the directory
+    /// did not exist, the pager owns it and removes it on drop
+    /// (best-effort); a pre-existing directory is left in place.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let created_dir = !dir.exists();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating pager dir {}", dir.display()))?;
+        Ok(Self {
+            dir,
+            spilled: BTreeSet::new(),
+            created_dir,
+            buf: Vec::new(),
+        })
+    }
+
+    /// The directory spill files live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Spill file path for one client id.
+    fn page_path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("client-{id:08}{PAGE_EXT}"))
+    }
+
+    /// How many clients are currently spilled.
+    pub fn len(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Whether nothing is spilled.
+    pub fn is_empty(&self) -> bool {
+        self.spilled.is_empty()
+    }
+
+    /// Whether `id`'s state is currently spilled.
+    pub fn contains(&self, id: usize) -> bool {
+        self.spilled.contains(&id)
+    }
+
+    /// The spilled client ids, ascending.
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.spilled.iter().copied()
+    }
+
+    /// Spill one client state (overwriting any previous spill of the
+    /// same id). The write is a plain create-and-write — spill files
+    /// are ephemeral per run, so the snapshot store's atomic
+    /// tmp-rename discipline would buy nothing here; torn writes are
+    /// still *detected* at load time by the frame checksum.
+    pub fn store(&mut self, st: &ClientState) -> Result<()> {
+        self.buf.clear();
+        wire::put_client_state(&mut self.buf, st);
+        let path = self.page_path(st.id);
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        frame::write_frame(&mut f, &self.buf)
+            .with_context(|| format!("spilling client {} to {}", st.id, path.display()))?;
+        self.spilled.insert(st.id);
+        Ok(())
+    }
+
+    /// Rehydrate one spilled client state. The frame layer verifies the
+    /// checksum, the payload decodes through the shared client-state
+    /// codec, and the decoded id must match the requested one — any
+    /// mismatch is a descriptive error, never a half-restored client.
+    pub fn load(&mut self, id: usize) -> Result<ClientState> {
+        if !self.spilled.contains(&id) {
+            return Err(anyhow!("client {id} is not spilled in this pager"));
+        }
+        let path = self.page_path(id);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading spill file {}", path.display()))?;
+        let mut r = bytes.as_slice();
+        self.buf.clear();
+        let got = frame::read_frame(&mut r, &mut self.buf, frame::MAX_PAYLOAD)
+            .with_context(|| format!("spill file {}", path.display()))?;
+        if !got {
+            return Err(anyhow!("spill file {} is empty", path.display()));
+        }
+        let mut rd = Rd::new(&self.buf);
+        let st = wire::read_client_state(&mut rd)
+            .with_context(|| format!("spill file {}", path.display()))?;
+        rd.done()
+            .with_context(|| format!("spill file {}", path.display()))?;
+        if st.id != id {
+            return Err(anyhow!(
+                "spill file {} carries client {}, wanted {id}",
+                path.display(),
+                st.id
+            ));
+        }
+        Ok(st)
+    }
+
+    /// Rehydrate and forget one spilled state (the page-in path: the
+    /// state moves back to the resident set, so the spill file is
+    /// stale the moment training touches the client again).
+    pub fn take(&mut self, id: usize) -> Result<ClientState> {
+        let st = self.load(id)?;
+        self.remove(id)?;
+        Ok(st)
+    }
+
+    /// Drop every spilled state (the install path: a state install is
+    /// absolute, so any spill it does not cover is stale by
+    /// definition).
+    pub fn clear(&mut self) -> Result<()> {
+        let ids: Vec<usize> = self.ids().collect();
+        for id in ids {
+            self.remove(id)?;
+        }
+        Ok(())
+    }
+
+    /// Drop one spilled state and its file.
+    pub fn remove(&mut self, id: usize) -> Result<()> {
+        if self.spilled.remove(&id) {
+            let path = self.page_path(id);
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing spill file {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ClientPager {
+    fn drop(&mut self) {
+        // Best-effort GC: spill files never outlive the run on
+        // purpose. Only a directory this pager created is removed
+        // wholesale; a shared pre-existing directory just loses the
+        // tracked spill files.
+        for id in std::mem::take(&mut self.spilled) {
+            let _ = std::fs::remove_file(self.page_path(id));
+        }
+        if self.created_dir {
+            let _ = std::fs::remove_dir(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::OptSnapshot;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fsfl_pager_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn state(id: usize) -> ClientState {
+        ClientState {
+            id,
+            rng: 0x5EED ^ id as u64,
+            sched_global: 10 + id as u64,
+            sched_period: 3,
+            train_order: vec![2, 0, 1],
+            residual: Some(vec![vec![0.5, -0.25], vec![1e-7]]),
+            wopt: OptSnapshot {
+                m: vec![vec![0.1]],
+                v: vec![vec![0.2]],
+                t: 7.0,
+            },
+            sopt: OptSnapshot {
+                m: vec![],
+                v: vec![],
+                t: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn spill_and_rehydrate_round_trips_exactly() {
+        let dir = tmp("roundtrip");
+        let mut pager = ClientPager::open(&dir).unwrap();
+        assert!(pager.is_empty());
+        for id in [4usize, 0, 9] {
+            pager.store(&state(id)).unwrap();
+        }
+        assert_eq!(pager.len(), 3);
+        assert_eq!(pager.ids().collect::<Vec<_>>(), vec![0, 4, 9]);
+        assert!(pager.contains(4) && !pager.contains(5));
+        for id in [0usize, 4, 9] {
+            assert_eq!(pager.load(id).unwrap(), state(id));
+        }
+        // take() rehydrates and forgets
+        let st = pager.take(4).unwrap();
+        assert_eq!(st, state(4));
+        assert!(!pager.contains(4));
+        assert!(pager.load(4).is_err(), "taken state must be gone");
+        drop(pager);
+        assert!(!dir.exists(), "pager-created dir must be removed on drop");
+    }
+
+    #[test]
+    fn overwrite_keeps_the_newest_state() {
+        let dir = tmp("overwrite");
+        let mut pager = ClientPager::open(&dir).unwrap();
+        pager.store(&state(2)).unwrap();
+        let mut newer = state(2);
+        newer.sched_global = 99;
+        newer.rng = 0xABCD;
+        pager.store(&newer).unwrap();
+        assert_eq!(pager.len(), 1);
+        assert_eq!(pager.load(2).unwrap(), newer);
+    }
+
+    #[test]
+    fn corruption_and_id_mismatch_are_descriptive_errors() {
+        let dir = tmp("corrupt");
+        let mut pager = ClientPager::open(&dir).unwrap();
+        pager.store(&state(3)).unwrap();
+        let path = pager.page_path(3);
+        // truncation (torn write) → frame-layer error
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = format!("{:#}", pager.load(3).unwrap_err());
+        assert!(err.contains("mid-frame"), "undescriptive: {err}");
+        // bit flip → checksum error
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() - 4;
+        flipped[mid] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = format!("{:#}", pager.load(3).unwrap_err());
+        assert!(
+            err.contains("checksum") || err.contains("magic") || err.contains("oversized"),
+            "undescriptive: {err}"
+        );
+        // a frame that decodes but carries the wrong id
+        let other = state(8);
+        let mut payload = Vec::new();
+        wire::put_client_state(&mut payload, &other);
+        let mut f = std::fs::File::create(&path).unwrap();
+        frame::write_frame(&mut f, &payload).unwrap();
+        drop(f);
+        let err = format!("{:#}", pager.load(3).unwrap_err());
+        assert!(err.contains("carries client 8"), "undescriptive: {err}");
+        // loading an id that was never spilled fails up front
+        assert!(pager.load(7).is_err());
+    }
+
+    #[test]
+    fn remove_is_idempotent_and_preexisting_dirs_survive_drop() {
+        let dir = tmp("remove");
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let mut pager = ClientPager::open(&dir).unwrap();
+            pager.store(&state(1)).unwrap();
+            pager.remove(1).unwrap();
+            assert!(pager.is_empty());
+            pager.remove(1).unwrap(); // no-op, no error
+            pager.store(&state(5)).unwrap();
+            pager.store(&state(6)).unwrap();
+            pager.clear().unwrap();
+            assert!(pager.is_empty());
+            assert!(!pager.page_path(5).exists());
+        }
+        assert!(dir.exists(), "pre-existing dir must survive pager drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -290,7 +290,63 @@ fn stalled_shard_is_detected_by_the_scripted_round_deadline() {
 }
 
 // ---------------------------------------------------------------------------
-// 5 · chained incidents: a degraded run keeps its snapshot/resume story
+// 5 · degrade, then elastic resize: the explicit assignment heals
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degrade_then_resize_heals_and_stays_byte_identical() {
+    // Regression: after quorum degradation installs an explicit
+    // `sup.assign` and marks the dead slot, a later scripted resize
+    // must (a) not fan the state collect into the dead slot's closed
+    // channel and (b) re-admit dead slots even when the target equals
+    // the current count (the old same-size guard skipped the heal
+    // entirely). Both a same-size heal and a grow are exercised; both
+    // must land on the undisturbed metrics.
+    let reference = undisturbed(TransportKind::Mpsc);
+    for target in [2usize, 3] {
+        let mut cfg = ccfg(TransportKind::Mpsc, 2);
+        cfg.policy = policy(OnShardLoss::Degrade);
+        let death = ChaosDeath {
+            shard: 1,
+            round: 1,
+            point: ChaosPoint::MidRound,
+        };
+        let clock = Arc::new(ScriptedClock::new(Duration::from_millis(5)));
+        let log = coordinator::run_experiment_synthetic_supervised(
+            cfg,
+            manifest(),
+            ElasticPlan {
+                replace: Vec::new(),
+                resize: vec![(3, target)],
+            },
+            None,
+            Some(clock),
+            vec![death],
+            |_| {},
+        )
+        .unwrap_or_else(|e| panic!("2->{target} resize after degrade failed: {e:#}"));
+        assert_eq!(
+            log.rounds, reference.rounds,
+            "2->{target}: degrade-then-resize diverged from the undisturbed run"
+        );
+        assert_eq!(log.events.len(), 2, "2->{target}: events {:?}", log.events);
+        assert!(
+            matches!(log.events[0].kind, ShardEventKind::Death { .. }),
+            "2->{target}: {:?}",
+            log.events[0]
+        );
+        assert_eq!(
+            log.events[1].kind,
+            ShardEventKind::Degraded {
+                clients: vec![1, 3]
+            },
+            "2->{target}: orphan fold-in must precede the healing resize"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6 · chained incidents: a degraded run keeps its snapshot/resume story
 // ---------------------------------------------------------------------------
 
 #[test]

@@ -21,6 +21,13 @@
 //! 4. **Real kill** — an `fsfl run --synth` child process is killed
 //!    mid-run with SIGKILL and `fsfl run --resume` reproduces the
 //!    uninterrupted run's CSV byte for byte.
+//! 5. **Cold-state paging** — `resident_clients` is a pure memory knob:
+//!    a minimal budget (1) must leave the `RunLog` rounds, the measured
+//!    wire bytes and the emitted CSV byte-identical to the fully
+//!    resident run (budget 0), including across a crash/`--resume`
+//!    boundary. The stateful spill→rehydrate codec round-trip itself is
+//!    pinned by the `session::pager` unit suite
+//!    (`spill_and_rehydrate_round_trips_exactly`).
 
 mod common;
 
@@ -571,5 +578,143 @@ fn killed_fsfl_process_resumes_byte_identical_on_the_synth_plane() {
         a, b,
         "resumed CSV differs from the uninterrupted run's CSV"
     );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------------
+// 5 · cold-state paging
+// ---------------------------------------------------------------------------
+
+/// `scfg` with a cold-state paging budget.
+fn pcfg(transport: TransportKind, shards: usize, resident: usize) -> ExperimentConfig {
+    let mut cfg = scfg(transport, shards);
+    cfg.resident_clients = resident;
+    cfg
+}
+
+#[test]
+fn paging_budget_is_byte_identical_across_transports() {
+    // The budget crosses the INIT handshake (wire config v5), drives
+    // the per-round page-in/evict bracket on stateful shards, and must
+    // never perturb selection, scheduling, bitstreams or the measured
+    // frame-layer traffic. Budget 1 is the harshest setting: every
+    // non-selected client is cold between rounds.
+    let m = manifest();
+    for transport in TRANSPORTS {
+        let reference =
+            coordinator::run_experiment_synthetic(pcfg(transport, 2, 0), m.clone(), |_| {})
+                .unwrap();
+        let paged =
+            coordinator::run_experiment_synthetic(pcfg(transport, 2, 1), m.clone(), |_| {})
+                .unwrap();
+        assert_eq!(
+            paged.rounds,
+            reference.rounds,
+            "{}: a resident budget of 1 changed the RunLog",
+            transport.name()
+        );
+        assert_eq!(
+            paged.wire,
+            reference.wire,
+            "{}: a resident budget of 1 changed the measured wire bytes",
+            transport.name()
+        );
+    }
+}
+
+#[test]
+fn paging_budget_is_byte_identical_across_crash_and_resume() {
+    let m = manifest();
+    for transport in TRANSPORTS {
+        let tag = transport.name();
+        // Reference: fully resident, uninterrupted.
+        let reference =
+            coordinator::run_experiment_synthetic(pcfg(transport, 2, 0), m.clone(), |_| {})
+                .unwrap();
+
+        // Victim: budget 1, checkpoint every round, crash after round 2.
+        let dir = tmp_dir(&format!("paging_resume_{tag}"));
+        let mut cfg = pcfg(transport, 2, 1);
+        cfg.session = Some(SessionConfig {
+            dir: dir.clone(),
+            every: 1,
+            retain: SessionConfig::DEFAULT_RETAIN,
+            crash_after: Some(2),
+        });
+        let err = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected crash"),
+            "{tag}: expected the injected crash, got: {err:#}"
+        );
+
+        // Resume keeps the budget (it is part of the snapshot config)
+        // and must still land on the fully-resident reference.
+        let store = SessionStore::open(&dir).unwrap();
+        let state = store.latest().unwrap().expect("snapshot written");
+        assert_eq!(state.next_round, 3, "{tag}: crash after round 2");
+        assert_eq!(
+            state.cfg.resident_clients, 1,
+            "{tag}: snapshot must preserve the paging budget"
+        );
+        let resumed = coordinator::run_experiment_synthetic_session(
+            state.cfg.clone(),
+            m.clone(),
+            ElasticPlan::default(),
+            Some(state),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            resumed.rounds, reference.rounds,
+            "{tag}: paged resume diverged from the fully-resident run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn fsfl_run_with_a_resident_budget_pins_the_csv() {
+    // End-to-end CLI plumbing: `--resident-clients 1` must leave the
+    // emitted CSV byte-identical to the unflagged run.
+    let exe = env!("CARGO_BIN_EXE_fsfl");
+    let base = tmp_dir("paging_csv");
+    let out_ref = base.join("out_ref");
+    let out_paged = base.join("out_paged");
+    let run_args = [
+        "run",
+        "--synth",
+        "--clients",
+        "4",
+        "--rounds",
+        "5",
+        "--compute-shards",
+        "2",
+        "--transport",
+        "loopback",
+        "--seed",
+        "11",
+    ];
+    let status = Command::new(exe)
+        .args(run_args)
+        .arg("--out")
+        .arg(&out_ref)
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "reference run failed");
+    let status = Command::new(exe)
+        .args(run_args)
+        .args(["--resident-clients", "1"])
+        .arg("--out")
+        .arg(&out_paged)
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "paged run failed");
+
+    let name = "synth-FSFL.csv";
+    let a = std::fs::read(out_ref.join(name)).unwrap();
+    let b = std::fs::read(out_paged.join(name)).unwrap();
+    assert_eq!(a, b, "--resident-clients 1 changed the CSV output");
     let _ = std::fs::remove_dir_all(&base);
 }

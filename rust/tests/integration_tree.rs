@@ -1,0 +1,254 @@
+//! Hierarchical tree fan-in conformance suite (PJRT-free: everything
+//! runs on the deterministic `fl::synth` compute plane).
+//!
+//! The contract under test (see the tree/aggregation-plane section of
+//! `ARCHITECTURE.md`): with `tree_children = K` on a wire transport,
+//! every top-level shard slot becomes a mid-tier aggregator that owns
+//! `K` leaf shards and reduces their lanes through the same
+//! associative, slot-ordered `scheduler::fan_in` the coordinator uses —
+//! so **every tree shape produces a `RunLog` with rounds byte-identical
+//! to the flat fan-in** (and, by the repo's standing invariant, to the
+//! single-thread mpsc run). `RunLog::wire` is *topology-dependent*
+//! (only coordinator↔aggregator frames are measured; subtree-internal
+//! loopback traffic is private), so these tests compare `log.rounds`,
+//! never `log.wire`.
+//!
+//! 1. **Conformance** — loopback and tcp, `tree_children ∈ {1, 2, 3}`,
+//!    all pinned against the flat mpsc reference.
+//! 2. **Mpsc ignores the knob** — nothing is serialized on mpsc, so
+//!    `tree_children` must be a no-op there.
+//! 3. **Static membership only** — supervision, elastic plans and chaos
+//!    are rejected up front with a descriptive error.
+//! 4. **External aggregators** — `fsfl aggregator --connect … --children
+//!    K` processes (and in-process `join_aggregator` threads) join a
+//!    `serve_session` listener and pin the same rounds.
+
+mod common;
+
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use common::*;
+
+use fsfl::coordinator::{self, ComputeSpec, ElasticPlan};
+use fsfl::data::TaskKind;
+use fsfl::fl::{ExperimentConfig, Protocol, RoundPolicy, TransportKind};
+
+/// The shared experiment shape: 5 clients, 6 rounds, 3 participants per
+/// round — small enough for CI, churny enough that a routing bug in the
+/// subtree's leaf arithmetic would misassign at least one client.
+fn tcfg(transport: TransportKind, shards: usize, children: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick("synth", TaskKind::CifarLike, Protocol::Fsfl);
+    cfg.clients = 5;
+    cfg.rounds = 6;
+    cfg.participation = 0.6;
+    cfg.seed = 77;
+    cfg.compute_shards = shards;
+    cfg.transport = transport;
+    cfg.tree_children = children;
+    cfg
+}
+
+/// The flat single-process reference every tree shape must reproduce.
+fn flat_reference() -> fsfl::metrics::RunLog {
+    let m = manifest();
+    coordinator::run_experiment_synthetic(tcfg(TransportKind::Mpsc, 2, 0), m, |_| {}).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 1 · conformance: every tree shape pins the flat rounds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tree_fan_in_pins_the_flat_round_log_across_transports() {
+    let m = manifest();
+    let reference = flat_reference();
+    assert_eq!(reference.rounds.len(), 6);
+    for transport in [TransportKind::Loopback, TransportKind::Tcp] {
+        for children in [1usize, 2, 3] {
+            let log = coordinator::run_experiment_synthetic(
+                tcfg(transport, 2, children),
+                m.clone(),
+                |_| {},
+            )
+            .unwrap_or_else(|e| {
+                panic!("{} tree_children={children} failed: {e:#}", transport.name())
+            });
+            assert_eq!(
+                log.rounds,
+                reference.rounds,
+                "{} tree_children={children}: tree fan-in changed the RunLog rounds",
+                transport.name()
+            );
+            // Wire traffic is measured at the coordinator↔aggregator
+            // boundary — present and non-trivial, but topology-shaped,
+            // so only its existence is pinned here.
+            let wire = log.wire.expect("wire transports measure traffic");
+            assert!(
+                wire.total() > 0,
+                "{} tree_children={children}: no coordinator-level wire traffic measured",
+                transport.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn uneven_tree_shapes_pin_the_flat_round_log() {
+    // 3 top-level aggregators × 2 leaves = 6 leaf shards over 5 clients:
+    // at least one leaf owns no client at all, and round-robin slot sets
+    // split unevenly across subtrees. The empty-sub-ROUND contract (every
+    // child sees every round for its seed bookkeeping) is what keeps
+    // this shape byte-identical.
+    let m = manifest();
+    let reference = flat_reference();
+    let log =
+        coordinator::run_experiment_synthetic(tcfg(TransportKind::Loopback, 3, 2), m, |_| {})
+            .unwrap();
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "3×2 tree (more leaves than clients) changed the RunLog rounds"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2 · mpsc ignores the knob
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mpsc_transport_ignores_tree_children() {
+    let m = manifest();
+    let reference = flat_reference();
+    let log =
+        coordinator::run_experiment_synthetic(tcfg(TransportKind::Mpsc, 2, 3), m, |_| {}).unwrap();
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "tree_children must be a no-op on the mpsc transport"
+    );
+    assert!(log.wire.is_none(), "mpsc measures no wire traffic");
+    assert!(log.events.is_empty(), "static run must log no shard events");
+}
+
+// ---------------------------------------------------------------------------
+// 3 · static, unsupervised membership only
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tree_rejects_supervision_and_elastic_membership_up_front() {
+    let m = manifest();
+
+    // Supervision (any liveness knob) + tree: rejected before any
+    // worker spawns.
+    let mut cfg = tcfg(TransportKind::Loopback, 2, 2);
+    cfg.policy = RoundPolicy {
+        heartbeat: Duration::from_secs(5),
+        ..RoundPolicy::default()
+    };
+    let err = coordinator::run_experiment_synthetic(cfg, m.clone(), |_| {}).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("requires static, unsupervised membership"),
+        "undescriptive supervision rejection: {err:#}"
+    );
+
+    // Elastic membership plan + tree: same rejection.
+    let plan = ElasticPlan {
+        resize: vec![(2, 3)],
+        ..Default::default()
+    };
+    let err = coordinator::run_experiment_synthetic_session(
+        tcfg(TransportKind::Loopback, 2, 2),
+        m.clone(),
+        plan,
+        None,
+        |_| {},
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("requires static, unsupervised membership"),
+        "undescriptive elastic-plan rejection: {err:#}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4 · externally-launched aggregators over a real TCP listener
+// ---------------------------------------------------------------------------
+
+#[test]
+fn join_aggregator_threads_over_a_tcp_listener_pin_the_flat_rounds() {
+    use std::net::TcpListener;
+
+    let m = manifest();
+    let reference = flat_reference();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Two top-level slots, each served by an external aggregator that
+    // fans out to 2 leaves (4 leaf shards total). The coordinator's
+    // config still says tree_children = 2, but in listener-admission
+    // mode the externally-launched worker decides its own role — the
+    // flag documents the intended topology.
+    let aggs: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || coordinator::join_aggregator(&addr, 2))
+        })
+        .collect();
+    let log = coordinator::serve_session(
+        tcfg(TransportKind::Tcp, 2, 2),
+        &listener,
+        ComputeSpec::Synthetic { manifest: m.clone() },
+        ElasticPlan::default(),
+        None,
+        || Ok(()),
+        |_| {},
+    )
+    .unwrap();
+    for a in aggs {
+        a.join().unwrap().unwrap();
+    }
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "externally-joined aggregators changed the RunLog rounds"
+    );
+}
+
+#[test]
+fn fsfl_aggregator_processes_pin_the_flat_rounds() {
+    use std::net::TcpListener;
+
+    let exe = env!("CARGO_BIN_EXE_fsfl");
+    let m = manifest();
+    let reference = flat_reference();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // The real CLI shape: one `fsfl aggregator` OS process per top-level
+    // slot, connecting into the coordinator's listener (connect-retry
+    // covers the race with admission).
+    let children: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(exe)
+                .args(["aggregator", "--connect", &addr, "--children", "2"])
+                .stdout(Stdio::null())
+                .stderr(Stdio::piped())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let log = coordinator::serve_session(
+        tcfg(TransportKind::Tcp, 2, 2),
+        &listener,
+        ComputeSpec::Synthetic { manifest: m.clone() },
+        ElasticPlan::default(),
+        None,
+        || Ok(()),
+        |_| {},
+    )
+    .unwrap();
+    for mut c in children {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "fsfl aggregator process exited non-zero");
+    }
+    assert_eq!(
+        log.rounds, reference.rounds,
+        "fsfl aggregator processes changed the RunLog rounds"
+    );
+}
