@@ -16,12 +16,13 @@ use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::benchkit::Report;
 use crate::fl::synth::STRAGGLE_ENV;
+use crate::supervise::{Clock, MonotonicClock};
 
 use super::sampler::{ProcSampler, ProcUsage};
 use super::spec::{ChaosLeg, Scenario, SuiteKind};
@@ -33,14 +34,19 @@ use super::{METRIC_PREFIX, RUN_SCHEMA, SCHEMA_VERSION};
 pub const CHILD_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// Everything the driver needs to run scenarios: the `fsfl` binary to
-/// drive and a scratch directory for per-scenario run dirs (kept on
-/// failure for post-mortem, removed on success).
-#[derive(Debug, Clone)]
+/// drive, a scratch directory for per-scenario run dirs (kept on
+/// failure for post-mortem, removed on success), and the time source
+/// every driver-side measurement reads (a [`MonotonicClock`] in
+/// production; fakeable like the supervision plane's).
+#[derive(Clone)]
 pub struct BenchCtx {
     /// Path to the release `fsfl` binary.
     pub exe: PathBuf,
     /// Scratch root for per-scenario output/checkpoint dirs.
     pub scratch: PathBuf,
+    /// Driver time source: child timeouts, worker arrival offsets and
+    /// scenario wall clocks all read this instead of raw `Instant`.
+    pub clock: Arc<dyn Clock>,
 }
 
 /// Result of one scenario run — the source of one JSON line.
@@ -275,6 +281,11 @@ struct Parsed {
     wire: Option<(u64, u64)>,
     params: Option<u64>,
     events: Option<String>,
+    /// `registry` line: (rounds, up, down, wire_sent, wire_recv) as the
+    /// child's live metrics registry counted them — an accounting path
+    /// independent of the `totals`/`wire` lines, cross-checked by
+    /// [`run_scenario`].
+    registry: Option<(u64, u64, u64, u64, u64)>,
 }
 
 /// Parse every [`METRIC_PREFIX`] line in `lines` into `parsed`.
@@ -314,6 +325,15 @@ fn parse_into(parsed: &mut Parsed, lines: &[String], lenient: bool) -> Result<()
                 }
                 "wire" => {
                     parsed.wire = Some((want("sent")?.parse()?, want("recv")?.parse()?));
+                }
+                "registry" => {
+                    parsed.registry = Some((
+                        want("rounds")?.parse()?,
+                        want("up")?.parse()?,
+                        want("down")?.parse()?,
+                        want("wire_sent")?.parse()?,
+                        want("wire_recv")?.parse()?,
+                    ));
                 }
                 "run" => {
                     if let Some(p) = get("params").filter(|v| *v != "-") {
@@ -374,7 +394,13 @@ fn spawn_worker(exe: &Path, addr: &str) -> Result<Child> {
 
 /// Spawn `cmd`, pump its stdout through a reader thread, poll
 /// `/proc/<pid>` while executing the watch plan, and reap everything.
-fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<ChildOut> {
+/// All waits and deadlines read `clock`, never raw `Instant`.
+fn drive_child(
+    mut cmd: Command,
+    watch: Watch<'_>,
+    timeout: Duration,
+    clock: &dyn Clock,
+) -> Result<ChildOut> {
     let program = format!("{:?}", cmd.get_program());
     cmd.stdin(Stdio::null()).stdout(Stdio::piped());
     let mut child = cmd
@@ -402,9 +428,9 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
     let mut sampler = ProcSampler::new(child.id());
     let mut workers: Vec<Child> = Vec::new();
     let mut next_worker = 0usize;
-    let mut listen: Option<(Instant, String)> = None;
+    let mut listen: Option<(Duration, String)> = None;
     let mut killed = false;
-    let t0 = Instant::now();
+    let t0 = clock.now();
     let reap_workers = |workers: &mut Vec<Child>| {
         for w in workers.iter_mut() {
             if matches!(w.try_wait(), Ok(None)) {
@@ -425,7 +451,7 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
         if let Some(status) = child.try_wait()? {
             break status;
         }
-        if t0.elapsed() > timeout {
+        if clock.now().saturating_sub(t0) > timeout {
             // Final snapshot while the process is still live: after
             // the kill it only ever degrades to a zombie (no Vm*).
             sampler.sample();
@@ -453,12 +479,13 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
                         l.strip_prefix(METRIC_PREFIX)
                             .and_then(|r| r.strip_prefix("listening addr="))
                     }) {
-                        listen = Some((Instant::now(), addr.to_string()));
+                        listen = Some((clock.now(), addr.to_string()));
                     }
                 }
                 if let Some((t_listen, addr)) = &listen {
                     while next_worker < delays_ms.len()
-                        && t_listen.elapsed() >= Duration::from_millis(delays_ms[next_worker])
+                        && clock.now().saturating_sub(*t_listen)
+                            >= Duration::from_millis(delays_ms[next_worker])
                     {
                         workers.push(spawn_worker(exe, addr)?);
                         next_worker += 1;
@@ -466,7 +493,7 @@ fn drive_child(mut cmd: Command, watch: Watch<'_>, timeout: Duration) -> Result<
                 }
             }
         }
-        std::thread::sleep(Duration::from_millis(5));
+        clock.sleep(Duration::from_millis(5));
     };
     let _ = reader.join();
     reap_workers(&mut workers);
@@ -547,6 +574,7 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
                 delays_ms: &s.arrivals_ms,
             },
             CHILD_TIMEOUT,
+            ctx.clock.as_ref(),
         )?;
         usage = usage.merge(out.usage);
         parse_into(&mut parsed, &out.lines, false)?;
@@ -559,6 +587,7 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
             base_cmd(ctx, s, &rundir, false),
             Watch::KillAfterRounds(*after_rounds),
             CHILD_TIMEOUT,
+            ctx.clock.as_ref(),
         )?;
         usage = usage.merge(out.usage);
         // A SIGKILL can truncate the final stdout line mid-write.
@@ -579,14 +608,19 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
         if let Some((every, ms)) = s.straggle {
             resume.env(STRAGGLE_ENV, format!("{every}:{ms}"));
         }
-        let out = drive_child(resume, Watch::Plain, CHILD_TIMEOUT)?;
+        let out = drive_child(resume, Watch::Plain, CHILD_TIMEOUT, ctx.clock.as_ref())?;
         usage = usage.merge(out.usage);
         parse_into(&mut parsed, &out.lines, false)?;
         if !out.success {
             return Err(anyhow!("resume child exited with failure"));
         }
     } else {
-        let out = drive_child(base_cmd(ctx, s, &rundir, false), Watch::Plain, CHILD_TIMEOUT)?;
+        let out = drive_child(
+            base_cmd(ctx, s, &rundir, false),
+            Watch::Plain,
+            CHILD_TIMEOUT,
+            ctx.clock.as_ref(),
+        )?;
         usage = usage.merge(out.usage);
         parse_into(&mut parsed, &out.lines, false)?;
         if !out.success {
@@ -623,6 +657,32 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
             s.rounds
         ));
     }
+    // Telemetry cross-check: the `registry` line reports the child's
+    // live metrics-registry counters, accumulated independently of the
+    // RunLog the `totals`/`wire` lines derive from. Disagreement means
+    // the observability plane miscounts — fail the run. A resumed run
+    // restores its round history from the snapshot while the registry
+    // only saw the rounds the resume process executed, so the chaos leg
+    // skips the check.
+    if !rec.resumed {
+        if let Some((r_rounds, r_up, r_down, r_sent, r_recv)) = parsed.registry {
+            if (r_rounds, r_up, r_down) != (rounds_done as u64, up, down) {
+                return Err(anyhow!(
+                    "metrics registry disagrees with RunLog totals: registry \
+                     rounds={r_rounds} up={r_up} down={r_down} vs totals \
+                     rounds={rounds_done} up={up} down={down}"
+                ));
+            }
+            if let Some((sent, recv)) = parsed.wire {
+                if (r_sent, r_recv) != (sent, recv) {
+                    return Err(anyhow!(
+                        "metrics registry disagrees with measured wire bytes: \
+                         registry {r_sent}/{r_recv} vs frame layer {sent}/{recv}"
+                    ));
+                }
+            }
+        }
+    }
     rec.ok = true;
     let _ = std::fs::remove_dir_all(&rundir);
     Ok(())
@@ -633,12 +693,12 @@ fn run_scenario_inner(ctx: &BenchCtx, s: &Scenario, rec: &mut RunRecord) -> Resu
 /// scenario's scratch dir left in place for post-mortem).
 pub fn run_scenario(ctx: &BenchCtx, s: &Scenario) -> RunRecord {
     let mut rec = RunRecord::skeleton(s.clone());
-    let t0 = Instant::now();
+    let t0 = ctx.clock.now();
     if let Err(e) = run_scenario_inner(ctx, s, &mut rec) {
         rec.ok = false;
         rec.error = Some(format!("{e:#}"));
     }
-    rec.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    rec.wall_ms = ctx.clock.now().saturating_sub(t0).as_secs_f64() * 1e3;
     rec
 }
 
@@ -650,6 +710,7 @@ pub fn run_all(exe: &Path, scenarios: &[Scenario], out_dir: &Path) -> Result<Vec
     let ctx = BenchCtx {
         exe: exe.to_path_buf(),
         scratch: out_dir.join("scratch"),
+        clock: Arc::new(MonotonicClock::new()),
     };
     let jsonl_path = out_dir.join("bench_runs.jsonl");
     let mut jsonl = std::io::BufWriter::new(std::fs::File::create(&jsonl_path)?);
@@ -868,6 +929,7 @@ mod tests {
             "#fsfl-metric round r=0 wall_ms=12.5 up=100 down=50 participants=4",
             "#fsfl-metric round r=1 wall_ms=11.0 up=90 down=40 participants=4",
             "#fsfl-metric wire sent=1000 recv=2000",
+            "#fsfl-metric registry rounds=2 up=190 down=90 wire_sent=1000 wire_recv=2000",
             "#fsfl-metric events n=0 seq=-",
             "#fsfl-metric totals rounds=2 up=190 down=90 best_acc=0.5",
         ]
@@ -878,6 +940,7 @@ mod tests {
         parse_into(&mut p, &lines, false).unwrap();
         assert_eq!(p.totals, Some((2, 190, 90)));
         assert_eq!(p.wire, Some((1000, 2000)));
+        assert_eq!(p.registry, Some((2, 190, 90, 1000, 2000)));
         assert_eq!(p.params, Some(1049));
         assert_eq!(p.events.as_deref(), Some("-"));
         assert_eq!(p.rounds.len(), 2);
@@ -911,7 +974,7 @@ mod tests {
             client_sparsity: vec![0.5, 0.5],
             ..Default::default()
         });
-        log.wire = Some(WireStats { sent: 900, received: 1800 });
+        log.wire = Some(WireStats::from_totals(900, 1800));
         let mut lines = vec![
             crate::bench::line_listening("127.0.0.1:4040"),
             crate::bench::line_run("bench cell", 2, 3, Some(298)),
@@ -919,11 +982,19 @@ mod tests {
             crate::bench::line_round(&log.rounds[1], 11.25),
         ];
         lines.extend(crate::bench::lines_finish(&log));
+        // The registry accumulates through its own path; feeding it the
+        // same rounds must yield a line the parser reads back equal.
+        let reg = crate::obs::MetricsRegistry::default();
+        for m in &log.rounds {
+            reg.record_round(m);
+        }
+        lines.push(crate::bench::line_registry(&reg));
         let mut p = Parsed::default();
         parse_into(&mut p, &lines, false).unwrap();
         assert_eq!(p.params, Some(298));
         assert_eq!(p.totals, Some((2, 230, 115)));
         assert_eq!(p.wire, Some((900, 1800)));
+        assert_eq!(p.registry, Some((2, 230, 115, 0, 0)));
         assert_eq!(p.events.as_deref(), Some("-"));
         assert_eq!(p.rounds[&0].participants, 3);
         assert_eq!(p.rounds[&1].participants, 2);
@@ -946,7 +1017,8 @@ mod tests {
         // reporting stale or null usage.
         let mut cmd = Command::new("/bin/sh");
         cmd.args(["-c", "exit 0"]);
-        let out = drive_child(cmd, Watch::Plain, Duration::from_secs(30)).unwrap();
+        let clock = MonotonicClock::new();
+        let out = drive_child(cmd, Watch::Plain, Duration::from_secs(30), &clock).unwrap();
         assert!(out.success);
         if cfg!(target_os = "linux") {
             assert!(

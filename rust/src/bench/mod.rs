@@ -130,7 +130,8 @@ pub fn lines_finish(log: &crate::metrics::RunLog) -> Vec<String> {
     if let Some(w) = log.wire {
         out.push(format!(
             "{METRIC_PREFIX}wire sent={} recv={}",
-            w.sent, w.received
+            w.sent(),
+            w.received()
         ));
     }
     out.push(format!(
@@ -139,4 +140,23 @@ pub fn lines_finish(log: &crate::metrics::RunLog) -> Vec<String> {
         log.events_compact()
     ));
     out
+}
+
+/// `registry` line: the live metrics-registry totals, emitted after the
+/// `totals`/`wire` lines whenever a telemetry handle was attached to
+/// the run. The registry accumulates through an independent path
+/// (atomic counters bumped as rounds seal and frames cross the wire)
+/// from the `RunLog` the other lines are derived from, so the driver
+/// cross-checks the two and fails the run if they disagree.
+pub fn line_registry(reg: &crate::obs::MetricsRegistry) -> String {
+    use std::sync::atomic::Ordering;
+    let w = reg.wire_snapshot();
+    format!(
+        "{METRIC_PREFIX}registry rounds={} up={} down={} wire_sent={} wire_recv={}",
+        reg.rounds_total.load(Ordering::Relaxed),
+        reg.up_bytes_total.load(Ordering::Relaxed),
+        reg.down_bytes_total.load(Ordering::Relaxed),
+        w.sent(),
+        w.received(),
+    )
 }

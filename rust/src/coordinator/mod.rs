@@ -70,7 +70,7 @@
 
 use std::net::TcpListener;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -84,11 +84,12 @@ use crate::fl::{
     build_setup, evaluate_params, Client, ClientState, EvalReport, Experiment, ExperimentCompute,
     ExperimentConfig, OnShardLoss, ProtocolConfig, RoundLane, RoundPolicy, Server, TransportKind,
 };
-use crate::metrics::{RoundMetrics, RunLog, ScaleStats, ShardEvent, ShardEventKind, WireStats};
+use crate::metrics::{MsgKind, RoundMetrics, RunLog, ScaleStats, ShardEvent, ShardEventKind, WireStats};
 use crate::model::params::Delta;
 use crate::model::{Group, Manifest, ParamSet};
 use crate::net::wire::{self, CmdTag, MsgTag, StateCmd, StateInstall};
-use crate::net::{loopback_pair, FrameSink, FrameSource, TcpTransport, Transport};
+use crate::net::{loopback_pair, FrameSink, FrameSource, KindCounters, TcpTransport, Transport};
+use crate::obs::{track, Obs};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::session::{ClientPager, SessionState, SessionStore};
 use crate::supervise::{Backoff, Clock, MonotonicClock};
@@ -228,19 +229,44 @@ pub fn run_experiment_threaded(
     cfg: ExperimentConfig,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_experiment_threaded_observed(cfg, None, &mut on_event)
+}
+
+/// [`run_experiment_threaded`] with an attached telemetry handle
+/// (`fsfl run --trace-out` / `--metrics-addr`). Telemetry is strictly
+/// passive: every output is byte-identical to the unobserved run.
+pub fn run_experiment_threaded_observed(
+    cfg: ExperimentConfig,
+    obs: Obs,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
     if resolved_shards(&cfg) > 1 || cfg.transport.is_wire() || cfg.session.is_some() {
-        return run_experiment_sharded(cfg, on_event);
+        return run_sharded_impl(
+            cfg,
+            ComputeSpec::Real,
+            ElasticPlan::default(),
+            None,
+            obs,
+            on_event,
+        );
     }
-    run_single_thread(cfg, &mut on_event)
+    run_single_thread(cfg, obs, on_event)
 }
 
 /// The single-compute-thread launcher body.
-fn run_single_thread(cfg: ExperimentConfig, on_event: &mut impl FnMut(&Event)) -> Result<RunLog> {
+fn run_single_thread(
+    cfg: ExperimentConfig,
+    obs: Obs,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
     let (tx, rx) = mpsc::channel::<Event>();
     let handle = std::thread::spawn(move || {
         let run = || -> Result<RunLog> {
             let rt = Runtime::cpu()?;
             let mut exp = Experiment::build(&rt, cfg)?;
+            if let Some(t) = obs {
+                exp.set_telemetry(t);
+            }
             let tx2 = tx.clone();
             let log = exp.run_with(move |m| {
                 let _ = tx2.send(Event::RoundDone(m.clone()));
@@ -525,6 +551,9 @@ struct SessionCtx {
     clock: Arc<dyn Clock>,
     /// Scripted shard deaths, handed to workers at admission.
     chaos: Vec<ChaosDeath>,
+    /// Telemetry handle (strictly passive; `None` keeps every
+    /// instrumentation site a single branch).
+    obs: Obs,
 }
 
 impl SessionCtx {
@@ -560,6 +589,7 @@ impl SessionCtx {
             synthetic: matches!(compute, ComputeSpec::Synthetic { .. }),
             clock: Arc::new(MonotonicClock::new()),
             chaos: Vec::new(),
+            obs: None,
         })
     }
 }
@@ -606,6 +636,9 @@ struct MpscAdmit {
     next_conn: u64,
     /// Scripted deaths, consumed by the first admission of their shard.
     chaos: Vec<ChaosDeath>,
+    /// Telemetry handle cloned into every admitted shard thread (mpsc
+    /// shards run in-process, so their codec stages can be traced).
+    obs: Obs,
 }
 
 impl Admit for MpscAdmit {
@@ -630,8 +663,9 @@ impl Admit for MpscAdmit {
         let guard = cfg.policy.supervised();
         self.next_conn += 1;
         let conn = self.next_conn;
+        let obs = self.obs.clone();
         self.handles.push(std::thread::spawn(move || {
-            shard_thread_mpsc(cfg, compute, shard, shards, conn, guard, chaos, cmd_rx, tx)
+            shard_thread_mpsc(cfg, compute, shard, shards, conn, guard, chaos, obs, cmd_rx, tx)
         }));
         Ok((conn, ShardTx::Mpsc(cmd_tx)))
     }
@@ -681,11 +715,14 @@ struct WireAdmit<'a> {
     mode: Option<WireMode<'a>>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
     readers: Vec<std::thread::JoinHandle<()>>,
-    sent: Vec<Arc<AtomicU64>>,
-    received: Vec<Arc<AtomicU64>>,
+    sent: Vec<Arc<KindCounters>>,
+    received: Vec<Arc<KindCounters>>,
     next_conn: u64,
     /// Scripted deaths, consumed by the first admission of their shard.
     chaos: Vec<ChaosDeath>,
+    /// Telemetry handle; attached endpoints get frame-level spans and
+    /// register their counters with the live registry.
+    obs: Obs,
 }
 
 impl<'a> WireAdmit<'a> {
@@ -710,6 +747,7 @@ impl<'a> WireAdmit<'a> {
             received: Vec::new(),
             next_conn: 0,
             chaos: Vec::new(),
+            obs: None,
         }
     }
 
@@ -720,7 +758,12 @@ impl<'a> WireAdmit<'a> {
         shards: usize,
         conn: Box<dyn Transport>,
     ) -> Result<(u64, ShardTx)> {
-        let (mut sink, source) = conn.open()?;
+        let (mut sink, mut source) = conn.open()?;
+        if let Some(t) = &self.obs {
+            sink.set_telemetry(t.clone());
+            source.set_telemetry(t.clone());
+            t.metrics.register_wire(sink.counter(), source.counter());
+        }
         let mut buf = Vec::new();
         wire::encode_init(&mut buf, shard, shards, &self.cfg, &self.compute);
         sink.send(&buf)
@@ -762,16 +805,23 @@ impl<'a> WireAdmit<'a> {
         Ok(Box::new(t))
     }
 
-    /// Total frame-layer traffic across every connection ever attached.
+    /// Total frame-layer traffic across every connection ever attached,
+    /// broken down by message kind.
     fn wire_stats(&self) -> WireStats {
-        WireStats {
-            sent: self.sent.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
-            received: self
-                .received
-                .iter()
-                .map(|c| c.load(Ordering::Relaxed))
-                .sum(),
+        let mut stats = WireStats::default();
+        for c in &self.sent {
+            let s = c.snapshot();
+            for k in 0..MsgKind::COUNT {
+                stats.sent_by_kind[k] += s[k];
+            }
         }
+        for c in &self.received {
+            let r = c.snapshot();
+            for k in 0..MsgKind::COUNT {
+                stats.received_by_kind[k] += r[k];
+            }
+        }
+        stats
     }
 
     /// Join every reader and worker thread (teardown).
@@ -879,6 +929,7 @@ pub fn run_experiment_sharded(
         ComputeSpec::Real,
         ElasticPlan::default(),
         None,
+        None,
         &mut on_event,
     )
 }
@@ -892,7 +943,18 @@ pub fn run_experiment_sharded_elastic(
     plan: ElasticPlan,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
-    run_sharded_impl(cfg, ComputeSpec::Real, plan, None, &mut on_event)
+    run_sharded_impl(cfg, ComputeSpec::Real, plan, None, None, &mut on_event)
+}
+
+/// [`run_experiment_sharded_elastic`] with an attached telemetry
+/// handle (see [`run_experiment_threaded_observed`]).
+pub fn run_experiment_sharded_elastic_observed(
+    cfg: ExperimentConfig,
+    plan: ElasticPlan,
+    obs: Obs,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_sharded_impl(cfg, ComputeSpec::Real, plan, None, obs, on_event)
 }
 
 /// Resume a previously-checkpointed experiment on real compute from a
@@ -903,12 +965,24 @@ pub fn run_experiment_resumed(
     state: SessionState,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_experiment_resumed_observed(cfg, state, None, &mut on_event)
+}
+
+/// [`run_experiment_resumed`] with an attached telemetry handle (see
+/// [`run_experiment_threaded_observed`]).
+pub fn run_experiment_resumed_observed(
+    cfg: ExperimentConfig,
+    state: SessionState,
+    obs: Obs,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
     run_sharded_impl(
         cfg,
         ComputeSpec::Real,
         ElasticPlan::default(),
         Some(state),
-        &mut on_event,
+        obs,
+        on_event,
     )
 }
 
@@ -929,6 +1003,7 @@ pub fn run_experiment_synthetic(
         ComputeSpec::Synthetic { manifest },
         ElasticPlan::default(),
         None,
+        None,
         &mut on_event,
     )
 }
@@ -946,6 +1021,33 @@ pub fn run_experiment_synthetic_session(
     run_experiment_synthetic_supervised(cfg, manifest, plan, resume, None, Vec::new(), on_event)
 }
 
+/// [`run_experiment_synthetic_session`] with an injected [`Clock`] and
+/// an attached telemetry handle. The golden-trace tests drive this with
+/// a zero-tick scripted clock so every exported span timestamp is
+/// deterministic; `fsfl run --synth --trace-out` drives it with the
+/// monotonic clock.
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_synthetic_session_observed(
+    cfg: ExperimentConfig,
+    manifest: Arc<Manifest>,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    clock: Option<Arc<dyn Clock>>,
+    obs: Obs,
+    mut on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    run_synthetic_impl(
+        cfg,
+        manifest,
+        plan,
+        resume,
+        clock,
+        Vec::new(),
+        obs,
+        &mut on_event,
+    )
+}
+
 /// [`run_experiment_synthetic_session`] with the supervision test
 /// hooks: an injected [`Clock`] (scripted in the chaos tests, so no
 /// deadline ever sleeps on wall time) and scripted [`ChaosDeath`]s.
@@ -960,6 +1062,21 @@ pub fn run_experiment_synthetic_supervised(
     chaos: Vec<ChaosDeath>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_synthetic_impl(cfg, manifest, plan, resume, clock, chaos, None, &mut on_event)
+}
+
+/// Shared body of the synthetic session entry points.
+#[allow(clippy::too_many_arguments)]
+fn run_synthetic_impl(
+    cfg: ExperimentConfig,
+    manifest: Arc<Manifest>,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    clock: Option<Arc<dyn Clock>>,
+    chaos: Vec<ChaosDeath>,
+    obs: Obs,
+    on_event: &mut impl FnMut(&Event),
+) -> Result<RunLog> {
     let compute = ComputeSpec::Synthetic { manifest };
     let shards = session_shards(&cfg, resume.as_ref());
     let result = (|| {
@@ -968,10 +1085,11 @@ pub fn run_experiment_synthetic_supervised(
             session.clock = c;
         }
         session.chaos = chaos;
+        session.obs = obs;
         match cfg.transport {
-            TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, &mut session, &mut on_event),
+            TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, &mut session, on_event),
             TransportKind::Loopback | TransportKind::Tcp => {
-                run_wire_sharded(&cfg, shards, &compute, &mut session, &mut on_event)
+                run_wire_sharded(&cfg, shards, &compute, &mut session, on_event)
             }
         }
     })();
@@ -988,6 +1106,7 @@ fn run_sharded_impl(
     compute: ComputeSpec,
     plan: ElasticPlan,
     resume: Option<SessionState>,
+    obs: Obs,
     on_event: &mut impl FnMut(&Event),
 ) -> Result<RunLog> {
     let shards = session_shards(&cfg, resume.as_ref());
@@ -998,10 +1117,11 @@ fn run_sharded_impl(
         && resume.is_none()
         && plan.is_empty()
     {
-        return run_single_thread(cfg, on_event);
+        return run_single_thread(cfg, obs, on_event);
     }
     let result = (|| {
         let mut session = SessionCtx::build(&cfg, &compute, plan, resume)?;
+        session.obs = obs;
         match cfg.transport {
             TransportKind::Mpsc => run_mpsc_sharded(&cfg, shards, &compute, &mut session, on_event),
             TransportKind::Loopback | TransportKind::Tcp => {
@@ -1032,6 +1152,7 @@ fn run_mpsc_sharded(
         handles: Vec::new(),
         next_conn: 0,
         chaos: std::mem::take(&mut session.chaos),
+        obs: session.obs.clone(),
     };
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
     let mut active: Vec<u64> = Vec::with_capacity(shards);
@@ -1109,6 +1230,7 @@ fn run_wire_sharded(
     };
     let mut admit = WireAdmit::new(cfg, compute, msg_tx, Some(mode));
     admit.chaos = std::mem::take(&mut session.chaos);
+    admit.obs = session.obs.clone();
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
     let mut active: Vec<u64> = Vec::with_capacity(shards);
     for shard in 0..shards {
@@ -1924,6 +2046,14 @@ fn coordinate(
     }
     let init = init.expect("startup barrier passed without init");
 
+    // Passive telemetry handle: every touch below is gated on the
+    // option, so telemetry-off runs pay one branch per site and
+    // allocate nothing.
+    let obs = session.obs.clone();
+    if let Some(t) = &obs {
+        t.metrics.set_model_params(init.numel());
+    }
+
     let mut server = Server::new(init, cfg.downstream_codec());
     let mut log = RunLog::new(cfg.name.clone());
     let mut start_round = 0usize;
@@ -2099,6 +2229,13 @@ fn coordinate(
     }
 
     for t in start_round..cfg.rounds {
+        // Round-scoped telemetry: stamp the round cell (spans recorded
+        // anywhere below inherit it) and open the wall-clock bracket
+        // the `round` span closes at the bottom of the loop.
+        let round_t0 = obs.as_ref().map(|ob| {
+            ob.set_round(t as i64);
+            ob.now_ns()
+        });
         // ---- elastic membership: scripted events at this round
         //      boundary (replacements first, then resizes) ----
         for &(round, ev) in &timeline {
@@ -2341,6 +2478,12 @@ fn coordinate(
                 None
             };
             let live_count = sup.live.iter().filter(|&&l| l).count();
+            let fanout_t0 = obs.as_ref().map(|ob| {
+                ob.metrics
+                    .fan_in_pending
+                    .store(live_count as u64, Ordering::Relaxed);
+                ob.now_ns()
+            });
 
             // Fan-out: the same deterministic participant selection as
             // the single-thread round, split by shard ownership (the
@@ -2393,6 +2536,13 @@ fn coordinate(
                         }
                         got[shard] = true;
                         done += 1;
+                        if let (Some(ob), Some(t0)) = (&obs, fanout_t0) {
+                            ob.metrics.fan_in_pending.fetch_sub(1, Ordering::Relaxed);
+                            ob.metrics.observe_shard_round(
+                                shard,
+                                ob.now_ns().saturating_sub(t0) as f64 / 1e6,
+                            );
+                        }
                         tagged.extend(lanes);
                     }
                     Ok(Waited::Msg(_)) => {
@@ -2416,6 +2566,9 @@ fn coordinate(
                         return Err(shard_failure(msg_rx, active, "shards exited mid-round"))
                     }
                 }
+            }
+            if let (Some(ob), Some(t0)) = (&obs, fanout_t0) {
+                ob.span(track::COORDINATOR, "fan_in.wait", t0, live_count as i64, -1);
             }
             if tagged.len() != take {
                 return Err(anyhow!(
@@ -2474,6 +2627,7 @@ fn coordinate(
                 }
                 _ => None,
             };
+            let apply_t0 = obs.as_ref().map(|ob| ob.now_ns());
             let mut back: Vec<Vec<(usize, RoundLane)>> = vec![Vec::new(); shards];
             for (slot, lane) in tagged {
                 back[sup.assign[lane.client]].push((slot, lane));
@@ -2501,6 +2655,9 @@ fn coordinate(
                     break;
                 }
             }
+            if let (Some(ob), Some(t0)) = (&obs, apply_t0) {
+                ob.span(track::COORDINATOR, "apply.fan_out", t0, -1, -1);
+            }
             if let Some((s, reason, cd)) = dead {
                 recover(
                     cfg, t, shards, s, reason, cd, &mut sup, txs, active, admit, msg_rx,
@@ -2508,6 +2665,7 @@ fn coordinate(
                 )?;
                 continue 'attempt;
             }
+            let eval_t0 = obs.as_ref().map(|ob| ob.now_ns());
             loop {
                 let busy: Vec<bool> = (0..shards).map(|s| s == sup.eval_shard).collect();
                 match sup_wait(
@@ -2553,6 +2711,9 @@ fn coordinate(
             bc_slot = Some(bc);
             if let Some(sa) = stream_arc {
                 stream_slot = Some(sa);
+            }
+            if let (Some(ob), Some(t0)) = (&obs, eval_t0) {
+                ob.span(track::COORDINATOR, "eval.wait", t0, sup.eval_shard as i64, -1);
             }
 
             // Round-boundary client-state collect: feeds the checkpoint
@@ -2622,6 +2783,9 @@ fn coordinate(
         };
 
         let acc = m.accuracy;
+        if let Some(ob) = &obs {
+            ob.metrics.record_round(&m);
+        }
         log.push(m);
 
         // ---- checkpoint: one atomic snapshot from the round-boundary
@@ -2639,7 +2803,11 @@ fn coordinate(
                     rounds: log.rounds.clone(),
                     clients: clients.clone(),
                 };
+                let ckpt_t0 = obs.as_ref().map(|ob| ob.now_ns());
                 store.write(&snap)?;
+                if let (Some(ob), Some(t0)) = (&obs, ckpt_t0) {
+                    ob.span(track::SESSION, "checkpoint.write", t0, t as i64, -1);
+                }
             }
         }
 
@@ -2657,6 +2825,11 @@ fn coordinate(
             log.rounds.last().expect("round just pushed").clone(),
         ));
 
+        if let (Some(ob), Some(t0)) = (&obs, round_t0) {
+            ob.span(track::COORDINATOR, "round", t0, -1, -1);
+            ob.bridge_events(&log.events);
+        }
+
         // Fault injection for the session test plane: an in-process
         // stand-in for `kill -9` right after round t's checkpoint.
         if session.crash_after == Some(t) {
@@ -2670,6 +2843,12 @@ fn coordinate(
                 break;
             }
         }
+    }
+    if let Some(ob) = &obs {
+        // Catch incidents recorded after the last round span closed
+        // and park subsequent instants outside any round.
+        ob.bridge_events(&log.events);
+        ob.set_round(-1);
     }
     Ok(log)
 }
@@ -2739,6 +2918,9 @@ struct RealShard<'a, 'rt> {
     /// kept resident — it donates the post-broadcast replica to
     /// rehydrated clients and serves eval.
     budget: usize,
+    /// Telemetry handle (codec-stage spans, pager spans, residency
+    /// gauges). `None` on untraced shards (e.g. wire workers).
+    obs: Obs,
 }
 
 impl<'a, 'rt> RealShard<'a, 'rt> {
@@ -2747,6 +2929,7 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         cfg: &'a ExperimentConfig,
         shard: usize,
         shards: usize,
+        obs: Obs,
     ) -> Result<Self> {
         // Identical deterministic substrate on every shard; only the
         // round-robin-owned clients are instantiated here.
@@ -2785,7 +2968,15 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
             init: setup.init,
             pager,
             budget: cfg.resident_clients,
+            obs,
         };
+        // Residency gauges start from the fully-built set; the
+        // immediate evict below moves the cold share to `paged`.
+        if let Some(t) = &built.obs {
+            t.metrics
+                .resident_clients
+                .fetch_add(built.clients.len() as u64, Ordering::Relaxed);
+        }
         // Enforce the budget from round 0 (the build itself still
         // instantiates the full owned set; spilling is immediate).
         built.evict_cold(&[])?;
@@ -2817,6 +3008,7 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         if missing.is_empty() {
             return Ok(());
         }
+        let t0 = self.obs.as_ref().map(|t| t.now_ns());
         let donor_global = self
             .clients
             .first()
@@ -2826,11 +3018,19 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         let mut rebuild_cfg = self.cfg.clone();
         rebuild_cfg.warmup_steps = 0;
         let setup = build_setup(self.mr, &rebuild_cfg, |ci| missing.contains(&ci))?;
+        let rehydrated = setup.clients.len() as u64;
         for mut c in setup.clients {
             let st = pager.take(c.id)?;
             c.global.copy_from(&donor_global);
             c.import_state(&st)?;
             self.clients.push(c);
+        }
+        if let (Some(t), Some(t0)) = (&self.obs, t0) {
+            t.metrics
+                .resident_clients
+                .fetch_add(rehydrated, Ordering::Relaxed);
+            t.metrics.paged_clients.fetch_sub(rehydrated, Ordering::Relaxed);
+            t.span(track::SESSION, "pager.page_in", t0, rehydrated as i64, -1);
         }
         Ok(())
     }
@@ -2846,6 +3046,8 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
         let Some(mut pager) = self.pager.take() else {
             return Ok(());
         };
+        let t0 = self.obs.as_ref().map(|t| t.now_ns());
+        let mut spilled = 0u64;
         let res = (|| {
             let target = self.budget.max(1);
             if self.clients.len() > target {
@@ -2857,11 +3059,19 @@ impl<'a, 'rt> RealShard<'a, 'rt> {
                 while self.clients.len() > target {
                     let c = self.clients.remove(0);
                     pager.store(&c.export_state())?;
+                    spilled += 1;
                 }
             }
             Ok(())
         })();
         self.pager = Some(pager);
+        if let (Some(t), Some(t0)) = (&self.obs, t0) {
+            if spilled > 0 {
+                t.metrics.resident_clients.fetch_sub(spilled, Ordering::Relaxed);
+                t.metrics.paged_clients.fetch_add(spilled, Ordering::Relaxed);
+            }
+            t.span(track::SESSION, "pager.evict", t0, spilled as i64, -1);
+        }
         res
     }
 }
@@ -2892,7 +3102,7 @@ impl ShardBody for RealShard<'_, '_> {
             cfg: self.cfg,
             pcfg: &self.pcfg,
         };
-        scheduler::run_round(
+        scheduler::run_round_observed(
             self.mode,
             &self.pool,
             &mut compute,
@@ -2901,6 +3111,7 @@ impl ShardBody for RealShard<'_, '_> {
             &self.pcfg,
             &self.update_idx,
             &self.scale_idx,
+            self.obs.as_deref(),
         )?;
         self.evict_cold(order)
     }
@@ -3011,7 +3222,18 @@ impl ShardBody for RealShard<'_, '_> {
                     let mut rebuild_cfg = self.cfg.clone();
                     rebuild_cfg.warmup_steps = 0;
                     let setup = build_setup(self.mr, &rebuild_cfg, |ci| ids.contains(&ci))?;
+                    let old = self.clients.len() as u64;
                     self.clients = setup.clients;
+                    if let Some(t) = &self.obs {
+                        // Registry gauges are shared across shards, so
+                        // residency changes apply as deltas.
+                        let new = self.clients.len() as u64;
+                        if new >= old {
+                            t.metrics.resident_clients.fetch_add(new - old, Ordering::Relaxed);
+                        } else {
+                            t.metrics.resident_clients.fetch_sub(old - new, Ordering::Relaxed);
+                        }
+                    }
                 }
             }
             None => {
@@ -3048,6 +3270,10 @@ impl ShardBody for RealShard<'_, '_> {
         // The install is absolute: whatever was spilled before it is
         // stale. Drop it all, then re-enforce the resident budget.
         if let Some(pager) = &mut self.pager {
+            if let Some(t) = &self.obs {
+                let stale = pager.ids().count() as u64;
+                t.metrics.paged_clients.fetch_sub(stale, Ordering::Relaxed);
+            }
             pager.clear()?;
         }
         self.evict_cold(&[])
@@ -3067,10 +3293,12 @@ struct SynthShard {
     seed: u64,
     round: u64,
     accum: Delta,
+    /// Telemetry handle (codec-stage spans). `None` on untraced shards.
+    obs: Obs,
 }
 
 impl SynthShard {
-    fn new(manifest: Arc<Manifest>, cfg: &ExperimentConfig, shards: usize) -> Self {
+    fn new(manifest: Arc<Manifest>, cfg: &ExperimentConfig, shards: usize, obs: Obs) -> Self {
         let pcfg = cfg.protocol_config();
         Self {
             plane: SyntheticPlane {
@@ -3089,6 +3317,7 @@ impl SynthShard {
             seed: cfg.seed,
             round: 0,
             accum: Delta::zeros(manifest),
+            obs,
         }
     }
 }
@@ -3111,7 +3340,7 @@ impl ShardBody for SynthShard {
             .seed
             .wrapping_add((self.round + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
         self.round += 1;
-        scheduler::run_round(
+        scheduler::run_round_observed(
             self.mode,
             &self.pool,
             &mut self.plane,
@@ -3120,6 +3349,7 @@ impl ShardBody for SynthShard {
             &self.pcfg,
             &self.update_idx,
             &self.scale_idx,
+            self.obs.as_deref(),
         )
     }
 
@@ -3413,11 +3643,16 @@ fn run_shard_body(
         ComputeSpec::Real => {
             let rt = Runtime::cpu()?;
             let mr = ModelRuntime::open(&rt, &init.cfg.artifacts_root, &init.cfg.variant)?;
-            let mut body = RealShard::build(&mr, &init.cfg, init.shard, init.shards)?;
+            // Wire workers run outside the coordinator's trace: their
+            // codec stages would need a cross-process clock to land on
+            // the coordinator timeline, so they stay untraced (the
+            // coordinator-side frame endpoints still count and trace
+            // every byte they exchange).
+            let mut body = RealShard::build(&mr, &init.cfg, init.shard, init.shards, None)?;
             shard_loop_wire(&mut body, init.shard, chaos, sink, source, downstream)
         }
         ComputeSpec::Synthetic { manifest } => {
-            let mut body = SynthShard::new(manifest.clone(), &init.cfg, init.shards);
+            let mut body = SynthShard::new(manifest.clone(), &init.cfg, init.shards, None);
             shard_loop_wire(&mut body, init.shard, chaos, sink, source, downstream)
         }
     }
@@ -3828,6 +4063,7 @@ fn shard_thread_mpsc(
     conn: u64,
     guard: bool,
     chaos: Option<ChaosDeath>,
+    obs: Obs,
     cmd_rx: mpsc::Receiver<ShardCmd>,
     msg_tx: mpsc::Sender<ShardMsg>,
 ) {
@@ -3841,11 +4077,11 @@ fn shard_thread_mpsc(
             ComputeSpec::Real => {
                 let rt = Runtime::cpu()?;
                 let mr = ModelRuntime::open(&rt, &cfg.artifacts_root, &cfg.variant)?;
-                let mut body = RealShard::build(&mr, &cfg, shard, shards)?;
+                let mut body = RealShard::build(&mr, &cfg, shard, shards, obs)?;
                 shard_loop_mpsc(&mut body, shard, chaos, &cmd_rx, &msg_tx)
             }
             ComputeSpec::Synthetic { manifest } => {
-                let mut body = SynthShard::new(manifest.clone(), &cfg, shards);
+                let mut body = SynthShard::new(manifest.clone(), &cfg, shards, obs);
                 shard_loop_mpsc(&mut body, shard, chaos, &cmd_rx, &msg_tx)
             }
         }
@@ -3902,12 +4138,31 @@ pub fn serve_session(
     plan: ElasticPlan,
     resume: Option<SessionState>,
     liveness: impl FnMut() -> Result<()>,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
+    serve_session_observed(cfg, listener, compute, plan, resume, None, liveness, on_event)
+}
+
+/// [`serve_session`] with an attached telemetry handle: the serving
+/// coordinator's frame endpoints, round lifecycle and supervisor
+/// incidents all land in the trace/registry (`fsfl serve
+/// --metrics-addr` scrapes the registry live).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_session_observed(
+    cfg: ExperimentConfig,
+    listener: &TcpListener,
+    compute: ComputeSpec,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    obs: Obs,
+    liveness: impl FnMut() -> Result<()>,
     mut on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
     let shards = session_shards(&cfg, resume.as_ref());
     let result = (|| {
         check_wire_cfg(&cfg, &compute)?;
         let mut session = SessionCtx::build(&cfg, &compute, plan, resume)?;
+        session.obs = obs;
         let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
         let accept = WireMode::Accept {
             listener: listener
@@ -3916,6 +4171,7 @@ pub fn serve_session(
             liveness: Box::new(liveness),
         };
         let mut admit = WireAdmit::new(&cfg, &compute, msg_tx, Some(accept));
+        admit.obs = session.obs.clone();
         let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
         let mut active: Vec<u64> = Vec::with_capacity(shards);
         // Initial joins go through the same listener-admission path as
@@ -4022,6 +4278,21 @@ pub fn run_experiment_processes_session(
     resume: Option<SessionState>,
     on_event: impl FnMut(&Event),
 ) -> Result<RunLog> {
+    run_experiment_processes_session_observed(cfg, compute, worker_exe, plan, resume, None, on_event)
+}
+
+/// [`run_experiment_processes_session`] with an attached telemetry
+/// handle (coordinator-side only; worker processes stay untraced).
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_processes_session_observed(
+    cfg: ExperimentConfig,
+    compute: ComputeSpec,
+    worker_exe: &Path,
+    plan: ElasticPlan,
+    resume: Option<SessionState>,
+    obs: Obs,
+    on_event: impl FnMut(&Event),
+) -> Result<RunLog> {
     let shards = session_shards(&cfg, resume.as_ref());
     let workers = shards + plan.admissions(shards);
     // How many workers the plan will deliberately stop (each replace
@@ -4064,12 +4335,13 @@ pub fn run_experiment_processes_session(
         spawned.push(child);
     }
     let children = std::cell::RefCell::new(spawned);
-    let result = serve_session(
+    let result = serve_session_observed(
         cfg,
         &listener,
         compute,
         plan,
         resume,
+        obs,
         || {
             let mut kids = children.borrow_mut();
             let mut clean = 0usize;

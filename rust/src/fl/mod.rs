@@ -88,6 +88,9 @@ pub struct Experiment<'rt> {
     scale_idx: Vec<usize>,
     /// Recycled participant-selection buffer.
     order: Vec<usize>,
+    /// Telemetry handle (strictly passive; `None` keeps the round loop
+    /// allocation-free and branch-cheap).
+    obs: crate::obs::Obs,
 }
 
 /// The deterministic substrate every FL deployment shape shares: task
@@ -255,7 +258,16 @@ impl<'rt> Experiment<'rt> {
             clients: setup.clients,
             train_data: setup.train_data,
             test_batches: setup.test_batches,
+            obs: None,
         })
+    }
+
+    /// Attach a telemetry handle: rounds and codec stages record spans
+    /// and live counters from here on. Telemetry never feeds back into
+    /// the run — outputs stay byte-identical to an unobserved run.
+    pub fn set_telemetry(&mut self, obs: std::sync::Arc<crate::obs::Telemetry>) {
+        obs.metrics.set_model_params(self.server.params.numel());
+        self.obs = Some(obs);
     }
 
     /// Codec-plane pool width actually in use.
@@ -275,15 +287,26 @@ impl<'rt> Experiment<'rt> {
         let pcfg = self.cfg.protocol_config();
         let mut log = RunLog::new(self.cfg.name.clone());
         for t in 0..self.cfg.rounds {
+            let round_t0 = self.obs.as_ref().map(|ob| {
+                ob.set_round(t as i64);
+                ob.now_ns()
+            });
             let m = self.run_round(t, &pcfg)?;
             on_round(&m);
             let acc = m.accuracy;
+            if let (Some(ob), Some(t0)) = (&self.obs, round_t0) {
+                ob.metrics.record_round(&m);
+                ob.span(crate::obs::track::COORDINATOR, "round", t0, -1, -1);
+            }
             log.push(m);
             if let Some(target) = self.cfg.target_accuracy {
                 if acc >= target {
                     break;
                 }
             }
+        }
+        if let Some(ob) = &self.obs {
+            ob.set_round(-1);
         }
         Ok(log)
     }
@@ -311,7 +334,7 @@ impl<'rt> Experiment<'rt> {
                 cfg: &self.cfg,
                 pcfg,
             };
-            scheduler::run_round(
+            scheduler::run_round_observed(
                 mode,
                 &self.pool,
                 &mut compute,
@@ -320,6 +343,7 @@ impl<'rt> Experiment<'rt> {
                 pcfg,
                 &self.update_idx,
                 &self.scale_idx,
+                self.obs.as_deref(),
             )?;
         }
         for lane in &mut self.lanes {

@@ -50,6 +50,7 @@ use crate::exec::WorkerPool;
 use crate::fl::config::ProtocolConfig;
 use crate::fl::lane::RoundLane;
 use crate::metrics::RoundMetrics;
+use crate::obs::{track, Telemetry};
 
 /// How the round scheduler interleaves compute-plane and codec-plane
 /// work. Both modes produce byte-identical outputs; they differ only in
@@ -165,6 +166,29 @@ pub fn run_round<C: ComputePlane>(
     update_idx: &[usize],
     scale_idx: &[usize],
 ) -> Result<()> {
+    run_round_observed(
+        mode, pool, compute, lanes, order, pcfg, update_idx, scale_idx, None,
+    )
+}
+
+/// [`run_round`] with an optional telemetry handle: per-client
+/// `compute.train` / `compute.scale` / `codec.encode_w` /
+/// `codec.finish` spans land on the codec track. `obs = None` (the
+/// [`run_round`] path) makes every instrumentation site a single
+/// branch — the zero-allocation hot-path contract of
+/// `benches/fl_round.rs` is measured against exactly that path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_round_observed<C: ComputePlane>(
+    mode: ScheduleMode,
+    pool: &WorkerPool,
+    compute: &mut C,
+    lanes: &mut Vec<RoundLane>,
+    order: &[usize],
+    pcfg: &ProtocolConfig,
+    update_idx: &[usize],
+    scale_idx: &[usize],
+    obs: Option<&Telemetry>,
+) -> Result<()> {
     assert_eq!(
         lanes.len(),
         order.len(),
@@ -172,15 +196,16 @@ pub fn run_round<C: ComputePlane>(
     );
     match mode {
         ScheduleMode::Staged => {
-            run_staged(pool, compute, lanes, order, pcfg, update_idx, scale_idx)
+            run_staged(pool, compute, lanes, order, pcfg, update_idx, scale_idx, obs)
         }
         ScheduleMode::Pipelined => {
-            run_pipelined(pool, compute, lanes, order, pcfg, update_idx, scale_idx)
+            run_pipelined(pool, compute, lanes, order, pcfg, update_idx, scale_idx, obs)
         }
     }
 }
 
 /// PR 1's staged schedule: barrier between every stage.
+#[allow(clippy::too_many_arguments)]
 fn run_staged<C: ComputePlane>(
     pool: &WorkerPool,
     compute: &mut C,
@@ -189,27 +214,59 @@ fn run_staged<C: ComputePlane>(
     pcfg: &ProtocolConfig,
     update_idx: &[usize],
     scale_idx: &[usize],
+    obs: Option<&Telemetry>,
 ) -> Result<()> {
     // stage 1 · compute: local weight training, serial in slot order
     for (k, lane) in lanes.iter_mut().enumerate() {
         lane.begin(order[k]);
+        let t0 = obs.map(|o| o.now_ns());
         compute.train(lane)?;
+        if let (Some(o), Some(t0)) = (obs, t0) {
+            o.span(track::CODEC, "compute.train", t0, lane.client as i64, -1);
+        }
     }
     // stage 2 · codec: encode W updates, fanned out
     pool.run_mut(&mut lanes[..], |_, lane| {
-        lane.encode_upstream(pcfg, update_idx)
+        let t0 = obs.map(|o| o.now_ns());
+        lane.encode_upstream(pcfg, update_idx);
+        if let (Some(o), Some(t0)) = (obs, t0) {
+            o.span(
+                track::CODEC,
+                "codec.encode_w",
+                t0,
+                lane.client as i64,
+                lane.up_bytes as i64,
+            );
+        }
     });
     // stage 3 · compute: residuals + scale sub-epochs, serial
     for lane in lanes.iter_mut() {
+        let t0 = obs.map(|o| o.now_ns());
         compute.scale(lane)?;
+        if let (Some(o), Some(t0)) = (obs, t0) {
+            o.span(track::CODEC, "compute.scale", t0, lane.client as i64, -1);
+        }
     }
     // stage 4 · codec: encode S streams + wire decode, fanned out
-    pool.run_mut(&mut lanes[..], |_, lane| lane.finish_round(pcfg, scale_idx));
+    pool.run_mut(&mut lanes[..], |_, lane| {
+        let t0 = obs.map(|o| o.now_ns());
+        lane.finish_round(pcfg, scale_idx);
+        if let (Some(o), Some(t0)) = (obs, t0) {
+            o.span(
+                track::CODEC,
+                "codec.finish",
+                t0,
+                lane.client as i64,
+                lane.up_bytes as i64,
+            );
+        }
+    });
     Ok(())
 }
 
 /// The software-pipelined schedule: lanes move into owned codec jobs on
 /// the pool while the calling thread keeps training/scaling later slots.
+#[allow(clippy::too_many_arguments)]
 fn run_pipelined<C: ComputePlane>(
     pool: &WorkerPool,
     compute: &mut C,
@@ -218,6 +275,7 @@ fn run_pipelined<C: ComputePlane>(
     pcfg: &ProtocolConfig,
     update_idx: &[usize],
     scale_idx: &[usize],
+    obs: Option<&Telemetry>,
 ) -> Result<()> {
     /// One owned codec job: the lane travels with its stage tag.
     enum Job {
@@ -237,11 +295,31 @@ fn run_pipelined<C: ComputePlane>(
     pool.pipeline(
         |job: Job| match job {
             Job::Encode(mut lane) => {
+                let t0 = obs.map(|o| o.now_ns());
                 lane.encode_upstream(pcfg, update_idx);
+                if let (Some(o), Some(t0)) = (obs, t0) {
+                    o.span(
+                        track::CODEC,
+                        "codec.encode_w",
+                        t0,
+                        lane.client as i64,
+                        lane.up_bytes as i64,
+                    );
+                }
                 Job::Encode(lane)
             }
             Job::Finish(mut lane) => {
+                let t0 = obs.map(|o| o.now_ns());
                 lane.finish_round(pcfg, scale_idx);
+                if let (Some(o), Some(t0)) = (obs, t0) {
+                    o.span(
+                        track::CODEC,
+                        "codec.finish",
+                        t0,
+                        lane.client as i64,
+                        lane.up_bytes as i64,
+                    );
+                }
                 Job::Finish(lane)
             }
         },
@@ -251,8 +329,12 @@ fn run_pipelined<C: ComputePlane>(
                 let mut lane = slots[k].take().expect("lane taken twice");
                 lane.begin(order[k]);
                 if err.is_none() {
+                    let t0 = obs.map(|o| o.now_ns());
                     if let Err(e) = compute.train(&mut lane) {
                         err = Some(e);
+                    }
+                    if let (Some(o), Some(t0)) = (obs, t0) {
+                        o.span(track::CODEC, "compute.train", t0, lane.client as i64, -1);
                     }
                 }
                 enc_tickets[k] = h.submit(Job::Encode(lane));
@@ -264,8 +346,12 @@ fn run_pipelined<C: ComputePlane>(
                     Job::Finish(_) => unreachable!("encode ticket yielded finish job"),
                 };
                 if err.is_none() {
+                    let t0 = obs.map(|o| o.now_ns());
                     if let Err(e) = compute.scale(&mut lane) {
                         err = Some(e);
+                    }
+                    if let (Some(o), Some(t0)) = (obs, t0) {
+                        o.span(track::CODEC, "compute.scale", t0, lane.client as i64, -1);
                     }
                 }
                 fin_tickets[k] = h.submit(Job::Finish(lane));

@@ -39,6 +39,7 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod session;
 pub mod supervise;
 pub mod runtime;

@@ -39,6 +39,12 @@ COMMANDS:
            --emit-metrics (machine-readable `#fsfl-metric` stdout lines
            for the bench driver: live per-round latency/bytes, totals,
            measured wire traffic, incident history)
+           --trace-out FILE (export a Chrome-trace JSON of the run's
+           spans — open in Perfetto/chrome://tracing or inspect with
+           `fsfl trace summarize`; deterministic: telemetry never
+           changes the run's outputs)
+           --metrics-addr HOST:PORT (serve live Prometheus text on
+           GET /metrics for the run's duration)
            --checkpoint-dir DIR --checkpoint-every K
            --checkpoint-retain N (durable session; keep newest N snapshots)
            --resume DIR (continue a killed run from its last snapshot;
@@ -74,6 +80,8 @@ COMMANDS:
   session  inspect DIR — dump snapshot metadata (version, round, shard
            assignment, client count, params checksum, size, valid/torn)
            without decoding parameters
+  trace    summarize FILE — per-stage p50/p95/p99 latency and the
+           top-3 widest spans per round of a --trace-out export
   fig1     LR schedule series (--epochs --steps-per-epoch --base-lr)
   fig2     accuracy vs transmitted data per config (--preset quick|paper
            --variant --task --sgd --bidirectional --clients --rounds)
@@ -101,8 +109,14 @@ fn parse_task(s: &str) -> Result<TaskKind> {
 
 /// Shared tail of every `run`/`serve` leg: CSV sink + summary line,
 /// plus the machine-readable totals/wire/events lines under
-/// `--emit-metrics`.
-fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path, emit: bool) -> Result<()> {
+/// `--emit-metrics` (and the `registry` cross-check line whenever a
+/// telemetry handle was attached).
+fn finish_run(
+    log: &fsfl::metrics::RunLog,
+    out: &std::path::Path,
+    emit: bool,
+    telemetry: Option<&fsfl::obs::Telemetry>,
+) -> Result<()> {
     let csv = out.join(format!("{}.csv", log.name));
     log.write_csv(&csv)?;
     println!(
@@ -114,16 +128,80 @@ fn finish_run(log: &fsfl::metrics::RunLog, out: &std::path::Path, emit: bool) ->
     if let Some(w) = log.wire {
         println!(
             "wire (measured at the frame layer): {} to shards, {} from shards",
-            fsfl::metrics::fmt_bytes(w.sent as usize),
-            fsfl::metrics::fmt_bytes(w.received as usize),
+            fsfl::metrics::fmt_bytes(w.sent() as usize),
+            fsfl::metrics::fmt_bytes(w.received() as usize),
         );
     }
     if emit {
         for line in fsfl::bench::lines_finish(log) {
             println!("{line}");
         }
+        if let Some(t) = telemetry {
+            println!("{}", fsfl::bench::line_registry(&t.metrics));
+        }
     }
     Ok(())
+}
+
+/// Telemetry wiring for one `run`/`serve` invocation: the optional
+/// handle threaded into the coordinator, the live scrape endpoint, and
+/// the trace destination written once the run completes. Telemetry is
+/// strictly passive — a run with any of these armed produces
+/// byte-identical CSV/metric output to one without.
+struct ObsSetup {
+    telemetry: fsfl::obs::Obs,
+    trace_out: Option<std::path::PathBuf>,
+    server: Option<fsfl::obs::MetricsServer>,
+}
+
+impl ObsSetup {
+    /// Build the telemetry plane from the CLI flags. The handle exists
+    /// whenever any consumer does: span tracing for `--trace-out`, the
+    /// scrape endpoint for `--metrics-addr`, or the end-of-run
+    /// `registry` cross-check line for `--emit-metrics`.
+    fn build(
+        trace_out: Option<String>,
+        metrics_addr: Option<String>,
+        emit: bool,
+    ) -> Result<Self> {
+        let tracing = trace_out.is_some();
+        let telemetry = (tracing || metrics_addr.is_some() || emit).then(|| {
+            fsfl::obs::Telemetry::new(
+                std::sync::Arc::new(fsfl::supervise::MonotonicClock::new()),
+                tracing,
+            )
+        });
+        let server = match (metrics_addr, &telemetry) {
+            (Some(addr), Some(t)) => {
+                let srv = fsfl::obs::MetricsServer::bind(&addr, t.clone())?;
+                println!("metrics endpoint: http://{}/metrics", srv.addr());
+                // Scrapers race the run; make sure the address is on
+                // the wire before round 0.
+                std::io::Write::flush(&mut std::io::stdout()).ok();
+                Some(srv)
+            }
+            _ => None,
+        };
+        Ok(Self {
+            telemetry,
+            trace_out: trace_out.map(Into::into),
+            server,
+        })
+    }
+
+    /// Shared run tail: metric lines, then the exported trace (if
+    /// armed), then the scrape endpoint shuts down.
+    fn finish(self, log: &fsfl::metrics::RunLog, out: &std::path::Path, emit: bool) -> Result<()> {
+        finish_run(log, out, emit, self.telemetry.as_deref())?;
+        if let (Some(path), Some(t)) = (&self.trace_out, &self.telemetry) {
+            let doc = fsfl::obs::chrome::render(&t.drain_spans(), t.dropped_spans());
+            std::fs::write(path, doc)
+                .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))?;
+            println!("trace → {}", path.display());
+        }
+        drop(self.server);
+        Ok(())
+    }
 }
 
 /// Round-event callback shared by every leg: the human progress line,
@@ -189,6 +267,7 @@ fn cmd_resume(
     policy: Option<fsfl::fl::RoundPolicy>,
     out: &std::path::Path,
     emit: bool,
+    obs: ObsSetup,
 ) -> Result<()> {
     // Read-only lookup: a mistyped path must error, not be created.
     if !std::path::Path::new(dir).is_dir() {
@@ -237,26 +316,29 @@ fn cmd_resume(
             )
         );
     }
-    let on_event = round_printer(emit);
+    let mut on_event = round_printer(emit);
     let log = if state.synthetic {
         let manifest = manifest.expect("synthetic snapshot carries a manifest");
         if shard_procs {
             // Synthetic compute, real OS shard-worker processes.
             let exe = std::env::current_exe()?;
-            coordinator::run_experiment_processes_session(
+            coordinator::run_experiment_processes_session_observed(
                 cfg,
                 coordinator::ComputeSpec::Synthetic { manifest },
                 &exe,
                 coordinator::ElasticPlan::default(),
                 Some(state),
+                obs.telemetry.clone(),
                 on_event,
             )?
         } else {
-            coordinator::run_experiment_synthetic_session(
+            coordinator::run_experiment_synthetic_session_observed(
                 cfg,
                 manifest,
                 coordinator::ElasticPlan::default(),
                 Some(state),
+                None,
+                obs.telemetry.clone(),
                 on_event,
             )?
         }
@@ -264,18 +346,19 @@ fn cmd_resume(
         // Workers speak TCP regardless of the snapshot's transport
         // field; the config itself is re-run verbatim.
         let exe = std::env::current_exe()?;
-        coordinator::run_experiment_processes_session(
+        coordinator::run_experiment_processes_session_observed(
             cfg,
             coordinator::ComputeSpec::Real,
             &exe,
             coordinator::ElasticPlan::default(),
             Some(state),
+            obs.telemetry.clone(),
             on_event,
         )?
     } else {
-        coordinator::run_experiment_resumed(cfg, state, on_event)?
+        coordinator::run_experiment_resumed_observed(cfg, state, obs.telemetry.clone(), &mut on_event)?
     };
-    finish_run(&log, out, emit)
+    obs.finish(&log, out, emit)
 }
 
 /// `fsfl session inspect DIR`: dump every snapshot's metadata without
@@ -335,6 +418,10 @@ struct RunArgs {
     manifest: Option<std::sync::Arc<fsfl::model::Manifest>>,
     emit: bool,
     resume_dir: Option<String>,
+    /// `--trace-out FILE`: export a Chrome-trace JSON of the run.
+    trace_out: Option<String>,
+    /// `--metrics-addr HOST:PORT`: serve live Prometheus text.
+    metrics_addr: Option<String>,
 }
 
 /// Parse the experiment-shape flags `run` and `serve` share (the
@@ -422,6 +509,8 @@ fn parse_run_args(flags: &Flags, artifacts: &std::path::Path) -> Result<RunArgs>
         .any(|k| POLICY_FLAGS.contains(&k.as_str()));
     cfg.policy = policy.clone();
     let resume_dir = flags.str_opt("resume");
+    let trace_out = flags.str_opt("trace-out");
+    let metrics_addr = flags.str_opt("metrics-addr");
     Ok(RunArgs {
         cfg,
         plan,
@@ -432,6 +521,8 @@ fn parse_run_args(flags: &Flags, artifacts: &std::path::Path) -> Result<RunArgs>
         manifest,
         emit,
         resume_dir,
+        trace_out,
+        metrics_addr,
     })
 }
 
@@ -448,15 +539,26 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
         manifest,
         emit,
         resume_dir,
+        trace_out,
+        metrics_addr,
     } = args;
+    let obs = ObsSetup::build(trace_out, metrics_addr, emit)?;
 
     if let Some(dir) = resume_dir {
         // Resume re-runs the snapshot's config verbatim — refuse
         // experiment-shape flags instead of silently ignoring them.
         // Supervision policy flags are operational, not shape, and may
-        // be re-armed freely (as may metric emission).
-        const RESUME_FLAGS: [&str; 5] =
-            ["resume", "out", "artifacts", "shard-procs", "emit-metrics"];
+        // be re-armed freely (as may metric emission and telemetry —
+        // both strictly passive).
+        const RESUME_FLAGS: [&str; 7] = [
+            "resume",
+            "out",
+            "artifacts",
+            "shard-procs",
+            "emit-metrics",
+            "trace-out",
+            "metrics-addr",
+        ];
         let stray: Vec<String> = flags
             .keys()
             .into_iter()
@@ -472,7 +574,7 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
                 stray.join(" ")
             ));
         }
-        return cmd_resume(&dir, shard_procs, policy_given.then_some(policy), out, emit);
+        return cmd_resume(&dir, shard_procs, policy_given.then_some(policy), out, emit, obs);
     }
 
     if emit {
@@ -486,13 +588,13 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
             )
         );
     }
-    let on_event = round_printer(emit);
+    let mut on_event = round_printer(emit);
     let log = if synth && shard_procs {
         // Synthetic compute, real OS shard-worker processes (needs a
         // socket: shard-procs implies TCP).
         cfg.transport = TransportKind::Tcp;
         let exe = std::env::current_exe()?;
-        coordinator::run_experiment_processes_session(
+        coordinator::run_experiment_processes_session_observed(
             cfg,
             coordinator::ComputeSpec::Synthetic {
                 manifest: manifest.expect("--synth selected a manifest"),
@@ -500,36 +602,45 @@ fn cmd_run(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) ->
             &exe,
             plan,
             None,
+            obs.telemetry.clone(),
             on_event,
         )?
     } else if synth {
         // PJRT-free synthetic compute plane over the selected model
         // contract — what the session/transport/bench CI jobs drive.
-        coordinator::run_experiment_synthetic_session(
+        coordinator::run_experiment_synthetic_session_observed(
             cfg,
             manifest.expect("--synth selected a manifest"),
             plan,
             None,
+            None,
+            obs.telemetry.clone(),
             on_event,
         )?
     } else if shard_procs {
         // Real OS processes need a socket: shard-procs implies TCP.
         cfg.transport = TransportKind::Tcp;
         let exe = std::env::current_exe()?;
-        coordinator::run_experiment_processes_session(
+        coordinator::run_experiment_processes_session_observed(
             cfg,
             coordinator::ComputeSpec::Real,
             &exe,
             plan,
             None,
+            obs.telemetry.clone(),
             on_event,
         )?
     } else if !plan.is_empty() {
-        coordinator::run_experiment_sharded_elastic(cfg, plan, on_event)?
+        coordinator::run_experiment_sharded_elastic_observed(
+            cfg,
+            plan,
+            obs.telemetry.clone(),
+            &mut on_event,
+        )?
     } else {
-        coordinator::run_experiment_threaded(cfg, on_event)?
+        coordinator::run_experiment_threaded_observed(cfg, obs.telemetry.clone(), &mut on_event)?
     };
-    finish_run(&log, out, emit)
+    obs.finish(&log, out, emit)
 }
 
 /// `fsfl serve`: bind a TCP listener, announce it (machine-readably
@@ -556,8 +667,11 @@ fn cmd_serve(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) 
         plan,
         manifest,
         emit,
+        trace_out,
+        metrics_addr,
         ..
     } = args;
+    let obs = ObsSetup::build(trace_out, metrics_addr, emit)?;
     // Externally-joined workers speak the TCP wire protocol regardless
     // of the --transport flag.
     cfg.transport = TransportKind::Tcp;
@@ -587,16 +701,17 @@ fn cmd_serve(flags: &Flags, artifacts: &std::path::Path, out: &std::path::Path) 
         Some(m) => coordinator::ComputeSpec::Synthetic { manifest: m.clone() },
         None => coordinator::ComputeSpec::Real,
     };
-    let log = coordinator::serve_session(
+    let log = coordinator::serve_session_observed(
         cfg,
         &listener,
         compute,
         plan,
         None,
+        obs.telemetry.clone(),
         || Ok(()),
         round_printer(emit),
     )?;
-    finish_run(&log, out, emit)
+    obs.finish(&log, out, emit)
 }
 
 /// `fsfl bench`: build the scenario list, drive the (release) binary
@@ -661,6 +776,24 @@ fn main() -> Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
+    if cmd == "trace" {
+        // `fsfl trace summarize FILE` — positional sub-command, handled
+        // before the flag parser (which rejects positionals).
+        match (args.get(1).map(|s| s.as_str()), args.get(2)) {
+            (Some("summarize"), Some(file)) => {
+                Flags::parse(&args[3..])?.reject_unknown()?;
+                print!(
+                    "{}",
+                    fsfl::obs::summarize::summarize_file(std::path::Path::new(file))?
+                );
+                return Ok(());
+            }
+            _ => {
+                eprintln!("usage: fsfl trace summarize FILE\n\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
     if cmd == "session" {
         // `fsfl session inspect DIR` — positional sub-command, handled
         // before the flag parser (which rejects positionals).

@@ -136,29 +136,137 @@ pub struct RoundMetrics {
     pub scale_stats: Vec<ScaleStats>,
 }
 
+/// Wire message classification, derived from a frame payload's leading
+/// tag byte (see `net::wire`). Command and report variants of the same
+/// concept collapse into one kind — direction (sent vs. received)
+/// already disambiguates them: the coordinator *sends* `STATE` requests
+/// and *receives* `STATE` reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgKind {
+    /// Session bootstrap (`INIT`).
+    Init = 0,
+    /// Round fan-out and broadcast payloads (`ROUND`).
+    Round = 1,
+    /// Aggregated-delta application (`APPLY`).
+    Apply = 2,
+    /// Orderly shutdown (`STOP`).
+    Stop = 3,
+    /// Client-state requests and reports (`STATE`/`STATE_MSG`).
+    State = 4,
+    /// Liveness probes and acks (`HEARTBEAT`/`HEARTBEAT_MSG`).
+    Heartbeat = 5,
+    /// Worker admission handshake (`READY`).
+    Ready = 6,
+    /// Per-round lane results (`ROUND_DONE`).
+    RoundDone = 7,
+    /// Evaluation reports (`EVAL`).
+    Eval = 8,
+    /// Worker-side failure reports (`FAILED`).
+    Failed = 9,
+    /// Unrecognized tag byte (forward-compat bucket).
+    Other = 10,
+}
+
+impl MsgKind {
+    /// Number of kinds (array dimension for per-kind accounting).
+    pub const COUNT: usize = 11;
+
+    /// Every kind, in index order.
+    pub const ALL: [MsgKind; MsgKind::COUNT] = [
+        MsgKind::Init,
+        MsgKind::Round,
+        MsgKind::Apply,
+        MsgKind::Stop,
+        MsgKind::State,
+        MsgKind::Heartbeat,
+        MsgKind::Ready,
+        MsgKind::RoundDone,
+        MsgKind::Eval,
+        MsgKind::Failed,
+        MsgKind::Other,
+    ];
+
+    /// Array index of this kind.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Lowercase label used by metric-line and Prometheus exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            MsgKind::Init => "init",
+            MsgKind::Round => "round",
+            MsgKind::Apply => "apply",
+            MsgKind::Stop => "stop",
+            MsgKind::State => "state",
+            MsgKind::Heartbeat => "heartbeat",
+            MsgKind::Ready => "ready",
+            MsgKind::RoundDone => "round_done",
+            MsgKind::Eval => "eval",
+            MsgKind::Failed => "failed",
+            MsgKind::Other => "other",
+        }
+    }
+}
+
 /// Bytes actually moved over a shard transport, **measured at the frame
 /// layer** (length prefix, checksum and payload included) rather than
-/// estimated from bitstream lengths. Only populated by wire transports
+/// estimated from bitstream lengths, attributed per [`MsgKind`] from
+/// each frame's leading tag byte. Only populated by wire transports
 /// (loopback/TCP); the in-process mpsc fan-in moves no bytes.
 ///
-/// These are coordinator-side totals over the whole run: `sent` counts
-/// coordinator→shard traffic (round fan-out + broadcasts), `received`
-/// counts shard→coordinator traffic (lane bitstreams + metrics). The
-/// framing is deterministic, so for a fixed config the loopback and TCP
-/// transports measure identical totals (pinned by
+/// These are coordinator-side totals over the whole run: `sent_by_kind`
+/// counts coordinator→shard traffic (round fan-out + broadcasts),
+/// `received_by_kind` counts shard→coordinator traffic (lane bitstreams
+/// + metrics). The old directional totals survive as the derived
+/// [`sent`](WireStats::sent) / [`received`](WireStats::received) views.
+/// The framing is deterministic, so for a fixed config the loopback and
+/// TCP transports measure identical totals (pinned by
 /// `tests/integration_transport.rs`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct WireStats {
-    /// Total frame bytes sent coordinator → shards.
-    pub sent: u64,
-    /// Total frame bytes received shards → coordinator.
-    pub received: u64,
+    /// Frame bytes sent coordinator → shards, indexed by
+    /// [`MsgKind::index`].
+    pub sent_by_kind: [u64; MsgKind::COUNT],
+    /// Frame bytes received shards → coordinator, indexed by
+    /// [`MsgKind::index`].
+    pub received_by_kind: [u64; MsgKind::COUNT],
 }
 
 impl WireStats {
+    /// Stats carrying only directional totals (attributed to
+    /// [`MsgKind::Other`]) — for synthesizing fixtures and tests that
+    /// don't care about per-kind attribution.
+    pub fn from_totals(sent: u64, received: u64) -> Self {
+        let mut s = Self::default();
+        s.sent_by_kind[MsgKind::Other.index()] = sent;
+        s.received_by_kind[MsgKind::Other.index()] = received;
+        s
+    }
+
+    /// Total frame bytes sent coordinator → shards (derived view).
+    pub fn sent(&self) -> u64 {
+        self.sent_by_kind.iter().sum()
+    }
+
+    /// Total frame bytes received shards → coordinator (derived view).
+    pub fn received(&self) -> u64 {
+        self.received_by_kind.iter().sum()
+    }
+
+    /// Bytes sent for one message kind.
+    pub fn sent_of(&self, kind: MsgKind) -> u64 {
+        self.sent_by_kind[kind.index()]
+    }
+
+    /// Bytes received for one message kind.
+    pub fn received_of(&self, kind: MsgKind) -> u64 {
+        self.received_by_kind[kind.index()]
+    }
+
     /// Sum of both directions.
     pub fn total(&self) -> u64 {
-        self.sent + self.received
+        self.sent() + self.received()
     }
 }
 
@@ -396,6 +504,28 @@ mod tests {
         let s = log.events_compact();
         assert_eq!(s, "D3s0;R3s0a2;G3s0c0+2+4");
         assert!(!s.contains(' '), "must survive key=value line formats");
+    }
+
+    #[test]
+    fn msg_kind_indexing_and_wire_stat_views_agree() {
+        // ALL must enumerate every kind exactly once, in index order —
+        // the per-kind arrays and every exporter iterate it.
+        for (i, k) in MsgKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(MsgKind::ALL.len(), MsgKind::COUNT);
+        let mut w = WireStats::default();
+        w.sent_by_kind[MsgKind::Round.index()] = 100;
+        w.sent_by_kind[MsgKind::Apply.index()] = 50;
+        w.received_by_kind[MsgKind::RoundDone.index()] = 70;
+        assert_eq!(w.sent(), 150);
+        assert_eq!(w.received(), 70);
+        assert_eq!(w.total(), 220);
+        assert_eq!(w.sent_of(MsgKind::Round), 100);
+        assert_eq!(w.received_of(MsgKind::Round), 0);
+        let t = WireStats::from_totals(9, 11);
+        assert_eq!((t.sent(), t.received()), (9, 11));
+        assert_eq!(t.sent_of(MsgKind::Other), 9);
     }
 
     #[test]

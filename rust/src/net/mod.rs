@@ -32,39 +32,95 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::MsgKind;
+use crate::obs::Telemetry;
 use crate::supervise::{Backoff, Clock};
 
+/// Per-[`MsgKind`] frame byte counters shared between one transport
+/// endpoint and the coordinator's accounting/telemetry planes. Bytes
+/// include frame overhead (length prefix + checksum) and are attributed
+/// from each payload's leading tag byte.
+pub struct KindCounters {
+    by_kind: [AtomicU64; MsgKind::COUNT],
+}
+
+impl KindCounters {
+    /// Fresh all-zero counters.
+    pub fn new() -> Self {
+        Self {
+            by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Attribute `bytes` to `kind`.
+    pub fn add(&self, kind: MsgKind, bytes: u64) {
+        self.by_kind[kind.index()].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every kind's byte count, indexed by
+    /// [`MsgKind::index`].
+    pub fn snapshot(&self) -> [u64; MsgKind::COUNT] {
+        std::array::from_fn(|i| self.by_kind[i].load(Ordering::Relaxed))
+    }
+
+    /// Sum over all kinds.
+    pub fn total(&self) -> u64 {
+        self.by_kind.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for KindCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Sending half of an opened transport: frames go out, bytes are
-/// counted. `Send` so the coordinator can keep it while the receiving
-/// half lives on a reader thread.
+/// counted per message kind. `Send` so the coordinator can keep it
+/// while the receiving half lives on a reader thread.
 pub struct FrameSink {
     io: Box<dyn Write + Send>,
-    sent: Arc<AtomicU64>,
+    sent: Arc<KindCounters>,
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl FrameSink {
     fn new(io: Box<dyn Write + Send>) -> Self {
         Self {
             io,
-            sent: Arc::new(AtomicU64::new(0)),
+            sent: Arc::new(KindCounters::new()),
+            obs: None,
         }
+    }
+
+    /// Attach a telemetry handle: subsequent sends record
+    /// `net.send.<kind>` spans (bytes + latency). Counting is always
+    /// on; spans are opt-in because only coordinator-side endpoints
+    /// belong to the coordinator's trace.
+    pub fn set_telemetry(&mut self, obs: Arc<Telemetry>) {
+        self.obs = Some(obs);
     }
 
     /// Frame `payload`, write it out and flush (one message = one frame
     /// = one flush; commands are latency-bound, not throughput-bound).
     pub fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let kind = wire::kind_of(payload);
+        let start = self.obs.as_ref().map(|t| t.now_ns());
         frame::write_frame(&mut self.io, payload)?;
         self.io
             .flush()
             .map_err(|e| anyhow!("frame flush failed: {e}"))?;
-        self.sent
-            .fetch_add(frame::frame_len(payload.len()) as u64, Ordering::Relaxed);
+        let bytes = frame::frame_len(payload.len()) as u64;
+        self.sent.add(kind, bytes);
+        if let (Some(t), Some(t0)) = (&self.obs, start) {
+            t.span(crate::obs::track::NET, crate::obs::net_send_name(kind), t0, -1, bytes as i64);
+        }
         Ok(())
     }
 
-    /// Shared handle to the bytes-sent counter (frame overhead
-    /// included). Survives the sink moving to another thread.
-    pub fn counter(&self) -> Arc<AtomicU64> {
+    /// Shared handle to the per-kind bytes-sent counters (frame
+    /// overhead included). Survives the sink moving to another thread.
+    pub fn counter(&self) -> Arc<KindCounters> {
         self.sent.clone()
     }
 }
@@ -72,8 +128,9 @@ impl FrameSink {
 /// Receiving half of an opened transport.
 pub struct FrameSource {
     io: Box<dyn Read + Send>,
-    received: Arc<AtomicU64>,
+    received: Arc<KindCounters>,
     max_payload: usize,
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl FrameSource {
@@ -82,25 +139,43 @@ impl FrameSource {
         // below the writer's absolute cap; see `frame::MAX_FRAME_LEN`.
         Self {
             io,
-            received: Arc::new(AtomicU64::new(0)),
+            received: Arc::new(KindCounters::new()),
             max_payload: frame::MAX_FRAME_LEN,
+            obs: None,
         }
+    }
+
+    /// Attach a telemetry handle: subsequent receives record
+    /// `net.recv.<kind>` spans (bytes + wait latency).
+    pub fn set_telemetry(&mut self, obs: Arc<Telemetry>) {
+        self.obs = Some(obs);
     }
 
     /// Read the next frame's payload into `buf`. `Ok(true)` on a frame,
     /// `Ok(false)` on a clean close between frames, `Err` on anything
     /// torn or corrupt (see [`frame::read_frame`]).
     pub fn recv(&mut self, buf: &mut Vec<u8>) -> Result<bool> {
+        let start = self.obs.as_ref().map(|t| t.now_ns());
         let got = frame::read_frame(&mut self.io, buf, self.max_payload)?;
         if got {
-            self.received
-                .fetch_add(frame::frame_len(buf.len()) as u64, Ordering::Relaxed);
+            let kind = wire::kind_of(buf);
+            let bytes = frame::frame_len(buf.len()) as u64;
+            self.received.add(kind, bytes);
+            if let (Some(t), Some(t0)) = (&self.obs, start) {
+                t.span(
+                    crate::obs::track::NET,
+                    crate::obs::net_recv_name(kind),
+                    t0,
+                    -1,
+                    bytes as i64,
+                );
+            }
         }
         Ok(got)
     }
 
-    /// Shared handle to the bytes-received counter.
-    pub fn counter(&self) -> Arc<AtomicU64> {
+    /// Shared handle to the per-kind bytes-received counters.
+    pub fn counter(&self) -> Arc<KindCounters> {
         self.received.clone()
     }
 }
@@ -303,14 +378,12 @@ mod tests {
         assert_eq!(buf, b"ping");
         assert!(a_rx.recv(&mut buf).unwrap());
         assert_eq!(buf, b"pong!");
-        assert_eq!(
-            a_tx.counter().load(Ordering::Relaxed),
-            frame::frame_len(4) as u64
-        );
-        assert_eq!(
-            b_rx.counter().load(Ordering::Relaxed),
-            frame::frame_len(4) as u64
-        );
+        assert_eq!(a_tx.counter().total(), frame::frame_len(4) as u64);
+        assert_eq!(b_rx.counter().total(), frame::frame_len(4) as u64);
+        // Leading byte 'p' is no protocol tag: attributed to Other.
+        let snap = a_tx.counter().snapshot();
+        assert_eq!(snap[MsgKind::Other.index()], frame::frame_len(4) as u64);
+        assert_eq!(snap[MsgKind::Round.index()], 0);
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::fl::config::{OnShardLoss, RoundPolicy, SessionConfig, TransportKind};
 use crate::fl::schedule::ScheduleKind;
 use crate::fl::server::EvalReport;
 use crate::fl::{ClientState, ExperimentConfig, OptSnapshot, Protocol, RoundLane};
-use crate::metrics::ScaleStats;
+use crate::metrics::{MsgKind, ScaleStats};
 use crate::model::params::{Delta, ParamSet};
 use crate::model::Manifest;
 use crate::runtime::Optimizer;
@@ -75,6 +75,27 @@ const TAG_EVAL: u8 = 0x13;
 const TAG_FAILED: u8 = 0x14;
 const TAG_STATE_MSG: u8 = 0x15;
 const TAG_HEARTBEAT_MSG: u8 = 0x16;
+
+/// Classify a frame payload by its leading tag byte, for per-kind byte
+/// accounting at the frame layer. Command/report pairs of the same
+/// concept (`STATE`/`STATE_MSG`, `HEARTBEAT`/`HEARTBEAT_MSG`) collapse
+/// into one kind — direction disambiguates. Empty payloads and unknown
+/// tags land in [`MsgKind::Other`].
+pub fn kind_of(payload: &[u8]) -> MsgKind {
+    match payload.first() {
+        Some(&TAG_INIT) => MsgKind::Init,
+        Some(&TAG_ROUND) => MsgKind::Round,
+        Some(&TAG_APPLY) => MsgKind::Apply,
+        Some(&TAG_STOP) => MsgKind::Stop,
+        Some(&TAG_STATE) | Some(&TAG_STATE_MSG) => MsgKind::State,
+        Some(&TAG_HEARTBEAT) | Some(&TAG_HEARTBEAT_MSG) => MsgKind::Heartbeat,
+        Some(&TAG_READY) => MsgKind::Ready,
+        Some(&TAG_ROUND_DONE) => MsgKind::RoundDone,
+        Some(&TAG_EVAL) => MsgKind::Eval,
+        Some(&TAG_FAILED) => MsgKind::Failed,
+        _ => MsgKind::Other,
+    }
+}
 
 /// APPLY payload carries the dense f32 broadcast delta.
 const APPLY_FMT_DENSE: u8 = 0;

@@ -1,0 +1,140 @@
+//! Chrome-trace / Perfetto JSON exporter (`fsfl run --trace-out`).
+//!
+//! Emits the "JSON Array Format" every Chrome-descended trace viewer
+//! reads: one complete-duration (`"ph": "X"`) event per span, one
+//! virtual thread (`tid`) per telemetry track, timestamps in
+//! microseconds. The document is also valid input for the repo's own
+//! strict [`crate::bench::json`] reader — the CI `obs` job gates on
+//! that round-trip.
+//!
+//! **Canonical order.** Span arrival order is scheduling noise (striped
+//! sink, worker pools), so the exporter totally sorts the fully
+//! rendered span tuples before writing. Two runs that record the same
+//! span *multiset* therefore export byte-identical documents — the
+//! golden-fixture contract in `tests/integration_obs.rs`.
+
+use super::track;
+use super::trace::Span;
+
+/// Stable `tid` for a track name (its position in [`track::ALL`];
+/// unknown tracks sort after the known ones).
+fn track_tid(t: &str) -> usize {
+    track::ALL.iter().position(|&k| k == t).unwrap_or(track::ALL.len())
+}
+
+/// Microsecond rendering of a nanosecond count, at fixed nanosecond
+/// resolution (three decimals) so formatting never depends on the
+/// magnitude.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Render a complete Chrome-trace JSON document from `spans` (order
+/// irrelevant — see the module docs) plus the sink's dropped-span
+/// count. One event per line for diffable fixtures.
+pub fn render(spans: &[Span], dropped: u64) -> String {
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by_key(|s| {
+        (
+            track_tid(s.track),
+            s.ts_ns,
+            s.dur_ns,
+            s.name,
+            s.round,
+            s.unit,
+            s.bytes,
+        )
+    });
+    let mut out = String::with_capacity(256 + sorted.len() * 128);
+    out.push_str("{\n\"schema\": \"fsfl-trace\",\n\"v\": 1,\n\"displayTimeUnit\": \"ms\",\n");
+    out.push_str(&format!(
+        "\"otherData\": {{\"dropped_spans\": {dropped}}},\n\"traceEvents\": [\n"
+    ));
+    let mut first = true;
+    let mut push_event = |line: String, out: &mut String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&line);
+    };
+    for (tid, name) in track::ALL.iter().enumerate() {
+        push_event(
+            format!(
+                "{{\"ph\": \"M\", \"pid\": 0, \"tid\": {tid}, \"name\": \"thread_name\", \"args\": {{\"name\": \"{name}\"}}}}"
+            ),
+            &mut out,
+        );
+    }
+    for s in sorted {
+        push_event(
+            format!(
+                "{{\"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"ts\": {}, \"dur\": {}, \"name\": \"{}\", \"args\": {{\"round\": {}, \"unit\": {}, \"bytes\": {}}}}}",
+                track_tid(s.track),
+                us(s.ts_ns),
+                us(s.dur_ns),
+                s.name,
+                s.round,
+                s.unit,
+                s.bytes
+            ),
+            &mut out,
+        );
+    }
+    out.push_str("\n]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(track: &'static str, name: &'static str, ts: u64, unit: i64) -> Span {
+        Span {
+            ts_ns: ts,
+            dur_ns: 500,
+            track,
+            name,
+            round: 1,
+            unit,
+            bytes: -1,
+        }
+    }
+
+    #[test]
+    fn export_is_order_invariant_and_parses_strictly() {
+        let a = vec![
+            span(track::CODEC, "codec.encode_w", 2000, 0),
+            span(track::COORDINATOR, "round", 0, -1),
+            span(track::CODEC, "codec.encode_w", 1000, 1),
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        let ra = render(&a, 0);
+        let rb = render(&b, 0);
+        assert_eq!(ra, rb, "canonical sort must erase arrival order");
+        let doc = crate::bench::json::parse(&ra).expect("strict reader must accept the trace");
+        assert_eq!(
+            doc.get("schema").and_then(|v| v.as_str()),
+            Some("fsfl-trace")
+        );
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // 5 thread-name metadata events + 3 spans
+        assert_eq!(events.len(), 8);
+        let x = &events[5]; // first span: coordinator track (tid 0)
+        assert_eq!(x.get("name").and_then(|v| v.as_str()), Some("round"));
+        assert_eq!(x.get("ts").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(x.get("dur").and_then(|v| v.as_f64()), Some(0.5));
+        let args = x.get("args").unwrap();
+        assert_eq!(args.get("round").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(args.get("bytes").and_then(|v| v.as_f64()), Some(-1.0));
+    }
+
+    #[test]
+    fn microsecond_rendering_is_fixed_resolution() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(1), "0.001");
+        assert_eq!(us(1000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+}

@@ -1,0 +1,175 @@
+//! Minimal Prometheus text-exposition endpoint on `std::net`
+//! (`fsfl serve --metrics-addr HOST:PORT`).
+//!
+//! Hand-rolled on purpose: one nonblocking accept loop on a background
+//! thread, a just-enough GET parser, `Connection: close` semantics.
+//! The endpoint is read-only over the [`Telemetry`] registry — a
+//! scraper can never perturb the run.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::Telemetry;
+
+/// Accept-loop poll quantum while idle (no pending connection).
+const POLL: Duration = Duration::from_millis(25);
+
+/// Cap on request bytes read before answering (headers are discarded,
+/// only the request line matters).
+const MAX_REQUEST: usize = 8 * 1024;
+
+/// A running metrics endpoint: background accept thread + stop flag.
+/// Shut down explicitly with [`MetricsServer::shutdown`] or implicitly
+/// on drop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// start serving `telemetry`'s registry at `/metrics` (and `/`).
+    pub fn bind(addr: &str, telemetry: Arc<Telemetry>) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("metrics endpoint failed to bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow!("metrics endpoint nonblocking mode failed: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| anyhow!("metrics endpoint local_addr failed: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fsfl-metrics".into())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // Serve inline: scrapes are tiny and rare,
+                            // a per-connection thread buys nothing.
+                            let _ = handle_conn(stream, &telemetry);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL);
+                        }
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("metrics endpoint thread spawn failed: {e}"))?;
+        Ok(Self {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Answer one connection: parse the request line, route, respond,
+/// close.
+fn handle_conn(mut stream: TcpStream, telemetry: &Telemetry) -> Result<()> {
+    stream.set_nonblocking(false).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .ok();
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    // Read until the header terminator (the body, if any, is ignored).
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < MAX_REQUEST {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let mut line = request.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (line.next().unwrap_or(""), line.next().unwrap_or(""));
+    let (status, content_type, body) = if method != "GET" {
+        (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed\n".to_string(),
+        )
+    } else if path == "/metrics" || path == "/" {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            telemetry
+                .metrics
+                .render_prometheus(telemetry.dropped_spans()),
+        )
+    } else {
+        ("404 Not Found", "text/plain", "not found\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream
+        .write_all(response.as_bytes())
+        .map_err(|e| anyhow!("metrics response write failed: {e}"))?;
+    stream.flush().ok();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::supervise::MonotonicClock;
+
+    fn scrape(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_unknown_paths() {
+        let t = Telemetry::new(Arc::new(MonotonicClock::new()), false);
+        t.metrics.rounds_total.store(7, Ordering::Relaxed);
+        let server = MetricsServer::bind("127.0.0.1:0", t).unwrap();
+        let addr = server.addr();
+        let ok = scrape(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "got: {ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.contains("fsfl_rounds_total 7"));
+        let missing = scrape(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"));
+        let bad = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 405"));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,300 @@
+//! Observability plane: deterministic span tracing, a live metrics
+//! registry, and the exporters that serve them.
+//!
+//! Everything here is dependency-free and strictly *passive*: a
+//! [`Telemetry`] handle is runtime-only state (never part of
+//! [`ExperimentConfig`](crate::fl::ExperimentConfig), never serialized
+//! over the wire), it only ever *reads* the run, and with telemetry off
+//! the instrumented hot paths reduce to an `Option` check — zero
+//! allocation, zero atomics. With telemetry on, `RunLog.rounds`, wire
+//! bytes and CSV output stay byte-identical to a telemetry-off run
+//! (pinned by `tests/integration_transport.rs` /
+//! `tests/integration_tree.rs`).
+//!
+//! * [`trace`] — striped, pre-allocated span sink ([`TraceSink`]).
+//! * [`registry`] — atomic counters/gauges ([`MetricsRegistry`]).
+//! * [`chrome`] — Chrome-trace/Perfetto JSON exporter with a canonical
+//!   total sort (byte-stable output).
+//! * [`http`] — hand-rolled Prometheus text endpoint on `std::net`
+//!   (`fsfl serve --metrics-addr`).
+//! * [`summarize`] — browserless trace inspection
+//!   (`fsfl trace summarize FILE`).
+//!
+//! Timestamps come from the run's [`supervise::Clock`](crate::supervise::Clock):
+//! under a zero-tick [`ScriptedClock`](crate::supervise::ScriptedClock)
+//! every span lands at t=0 and the exported trace is a pure function of
+//! the config — rerunning reproduces it byte for byte.
+
+pub mod chrome;
+pub mod http;
+pub mod registry;
+pub mod summarize;
+pub mod trace;
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::{MsgKind, ShardEvent, ShardEventKind};
+use crate::supervise::Clock;
+
+pub use http::MetricsServer;
+pub use registry::MetricsRegistry;
+pub use trace::{Span, TraceSink};
+
+/// Span track names: the fixed exporter lanes. One track per plane, so
+/// a Perfetto view groups rounds, codec stages, wire traffic, session
+/// I/O and supervisor incidents into separate swimlanes.
+pub mod track {
+    /// Coordinator control loop: rounds, fan-in/eval waits, apply.
+    pub const COORDINATOR: &str = "coordinator";
+    /// Per-client compute + codec stages (train, scale, encode, finish).
+    pub const CODEC: &str = "codec";
+    /// Frame-layer sends/receives.
+    pub const NET: &str = "net";
+    /// Session plane: checkpoint writes, cold-state pager traffic.
+    pub const SESSION: &str = "session";
+    /// Supervisor incidents (deaths, respawns, degradations).
+    pub const SUPERVISOR: &str = "supervisor";
+
+    /// Every track, in canonical (exporter tid) order.
+    pub const ALL: [&str; 5] = [COORDINATOR, CODEC, NET, SESSION, SUPERVISOR];
+}
+
+/// Static `net.send.<kind>` span name for a message kind (span names
+/// must be `&'static str` so recording never allocates).
+pub fn net_send_name(kind: MsgKind) -> &'static str {
+    match kind {
+        MsgKind::Init => "net.send.init",
+        MsgKind::Round => "net.send.round",
+        MsgKind::Apply => "net.send.apply",
+        MsgKind::Stop => "net.send.stop",
+        MsgKind::State => "net.send.state",
+        MsgKind::Heartbeat => "net.send.heartbeat",
+        MsgKind::Ready => "net.send.ready",
+        MsgKind::RoundDone => "net.send.round_done",
+        MsgKind::Eval => "net.send.eval",
+        MsgKind::Failed => "net.send.failed",
+        MsgKind::Other => "net.send.other",
+    }
+}
+
+/// Static `net.recv.<kind>` span name for a message kind.
+pub fn net_recv_name(kind: MsgKind) -> &'static str {
+    match kind {
+        MsgKind::Init => "net.recv.init",
+        MsgKind::Round => "net.recv.round",
+        MsgKind::Apply => "net.recv.apply",
+        MsgKind::Stop => "net.recv.stop",
+        MsgKind::State => "net.recv.state",
+        MsgKind::Heartbeat => "net.recv.heartbeat",
+        MsgKind::Ready => "net.recv.ready",
+        MsgKind::RoundDone => "net.recv.round_done",
+        MsgKind::Eval => "net.recv.eval",
+        MsgKind::Failed => "net.recv.failed",
+        MsgKind::Other => "net.recv.other",
+    }
+}
+
+/// Optional telemetry handle, as threaded through the coordinator's
+/// runtime plumbing. `None` (the default everywhere) means every
+/// instrumentation site is a single branch — no clock reads, no
+/// atomics, no allocation.
+pub type Obs = Option<Arc<Telemetry>>;
+
+/// One run's telemetry: the clock that timestamps spans, an optional
+/// trace sink, the live metrics registry, and the current-round cell
+/// that attributes spans recorded off the control thread.
+///
+/// Shared by `Arc` across the coordinator, mpsc shard threads, codec
+/// worker pools and coordinator-side wire endpoints. Rounds are
+/// barriered (fan-out → fan-in → apply → eval), so a relaxed
+/// read of the round cell from any participating thread is
+/// deterministic.
+pub struct Telemetry {
+    clock: Arc<dyn Clock>,
+    trace: Option<TraceSink>,
+    /// Live counters/gauges; rendered by [`MetricsServer`].
+    pub metrics: MetricsRegistry,
+    round: AtomicI64,
+    /// High-water mark of `RunLog.events` already folded into the
+    /// registry (see [`Telemetry::bridge_events`]).
+    bridged: AtomicI64,
+}
+
+impl Telemetry {
+    /// A telemetry handle on `clock`. `tracing` enables the span sink;
+    /// without it only the registry is live (the `--metrics-addr`-only
+    /// configuration).
+    pub fn new(clock: Arc<dyn Clock>, tracing: bool) -> Arc<Self> {
+        Arc::new(Self {
+            clock,
+            trace: tracing.then(TraceSink::new),
+            metrics: MetricsRegistry::default(),
+            round: AtomicI64::new(-1),
+            bridged: AtomicI64::new(0),
+        })
+    }
+
+    /// Nanoseconds on the run clock (span timestamp source).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now().as_nanos() as u64
+    }
+
+    /// Set the round index subsequent spans are attributed to. Called
+    /// by the coordinator at the top of each round (and by the
+    /// single-thread experiment loop).
+    pub fn set_round(&self, round: i64) {
+        self.round.store(round, Ordering::Relaxed);
+    }
+
+    /// Round index spans are currently attributed to (-1 outside any
+    /// round).
+    pub fn round(&self) -> i64 {
+        self.round.load(Ordering::Relaxed)
+    }
+
+    /// Record a span that started at `start_ns` and ends now. No-op
+    /// without a trace sink. `unit` is the deterministic sub-key
+    /// (client id, shard slot, or -1); `bytes` is the attributed byte
+    /// count (or -1).
+    pub fn span(&self, track: &'static str, name: &'static str, start_ns: u64, unit: i64, bytes: i64) {
+        let Some(sink) = &self.trace else { return };
+        let end = self.now_ns();
+        sink.record(Span {
+            ts_ns: start_ns,
+            dur_ns: end.saturating_sub(start_ns),
+            track,
+            name,
+            round: self.round(),
+            unit,
+            bytes,
+        });
+    }
+
+    /// Record an instant (zero-duration) event at `round` — used for
+    /// supervisor incidents, whose round comes from the event record
+    /// rather than the current-round cell.
+    pub fn instant_at(&self, track: &'static str, name: &'static str, round: i64, unit: i64) {
+        let Some(sink) = &self.trace else { return };
+        let now = self.now_ns();
+        sink.record(Span {
+            ts_ns: now,
+            dur_ns: 0,
+            track,
+            name,
+            round,
+            unit,
+            bytes: -1,
+        });
+    }
+
+    /// Whether a trace sink is attached (exporters use this to decide
+    /// if there is anything to write).
+    pub fn tracing(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Drain all recorded spans (stripe order; exporters sort).
+    pub fn drain_spans(&self) -> Vec<Span> {
+        self.trace.as_ref().map(TraceSink::drain).unwrap_or_default()
+    }
+
+    /// Spans dropped by the sink (full stripes).
+    pub fn dropped_spans(&self) -> u64 {
+        self.trace.as_ref().map(TraceSink::dropped).unwrap_or(0)
+    }
+
+    /// Bridge supervisor incidents from `RunLog.events` into the
+    /// registry (death/respawn/degrade counters) and the trace
+    /// (instant events on the supervisor track). Idempotent across
+    /// calls: only events past the internal high-water mark are
+    /// processed, so the coordinator can call this every round and once
+    /// more at teardown.
+    pub fn bridge_events(&self, events: &[ShardEvent]) {
+        let from = self.bridged.load(Ordering::Relaxed).max(0) as usize;
+        for e in events.iter().skip(from) {
+            let name = match &e.kind {
+                ShardEventKind::Death { .. } => {
+                    self.metrics.deaths_total.fetch_add(1, Ordering::Relaxed);
+                    "incident.death"
+                }
+                ShardEventKind::Respawned { .. } => {
+                    self.metrics.respawns_total.fetch_add(1, Ordering::Relaxed);
+                    "incident.respawn"
+                }
+                ShardEventKind::Degraded { .. } => {
+                    self.metrics.degrades_total.fetch_add(1, Ordering::Relaxed);
+                    "incident.degrade"
+                }
+            };
+            self.instant_at(track::SUPERVISOR, name, e.round as i64, e.shard as i64);
+        }
+        self.bridged.store(events.len() as i64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::supervise::ScriptedClock;
+    use std::time::Duration;
+
+    #[test]
+    fn spans_carry_the_current_round_and_scripted_time() {
+        let clock = Arc::new(ScriptedClock::new(Duration::from_millis(1)));
+        let t = Telemetry::new(clock.clone(), true);
+        t.set_round(3);
+        let t0 = t.now_ns();
+        clock.advance(Duration::from_millis(2));
+        t.span(track::CODEC, "codec.encode_w", t0, 7, 128);
+        let spans = t.drain_spans();
+        assert_eq!(spans.len(), 1);
+        let s = spans[0];
+        assert_eq!(s.round, 3);
+        assert_eq!(s.unit, 7);
+        assert_eq!(s.bytes, 128);
+        assert_eq!(s.dur_ns, 2_000_000);
+        assert_eq!(s.name, "codec.encode_w");
+    }
+
+    #[test]
+    fn without_tracing_span_recording_is_a_no_op() {
+        let t = Telemetry::new(Arc::new(ScriptedClock::new(Duration::ZERO)), false);
+        t.span(track::NET, "net.send.round", 0, -1, 10);
+        assert!(!t.tracing());
+        assert!(t.drain_spans().is_empty());
+        assert_eq!(t.dropped_spans(), 0);
+    }
+
+    #[test]
+    fn bridge_events_is_incremental_and_idempotent() {
+        use crate::metrics::{ShardEvent, ShardEventKind};
+        let t = Telemetry::new(Arc::new(ScriptedClock::new(Duration::ZERO)), true);
+        let mut events = vec![ShardEvent {
+            round: 1,
+            shard: 0,
+            kind: ShardEventKind::Death { reason: "x".into() },
+        }];
+        t.bridge_events(&events);
+        t.bridge_events(&events); // no double counting
+        events.push(ShardEvent {
+            round: 1,
+            shard: 0,
+            kind: ShardEventKind::Respawned { attempt: 1 },
+        });
+        t.bridge_events(&events);
+        assert_eq!(t.metrics.deaths_total.load(Ordering::Relaxed), 1);
+        assert_eq!(t.metrics.respawns_total.load(Ordering::Relaxed), 1);
+        let spans = t.drain_spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.track == track::SUPERVISOR));
+    }
+
+    #[test]
+    fn net_span_names_cover_every_kind() {
+        for kind in MsgKind::ALL {
+            assert!(net_send_name(kind).starts_with("net.send."));
+            assert!(net_recv_name(kind).starts_with("net.recv."));
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Live counters/gauges registry and its Prometheus text rendering.
+//!
+//! The registry is the *live* side of the telemetry plane: every value
+//! is an atomic (or a short-lived mutex over histograms) that the
+//! coordinator, net layer, and pager update in place, and that the
+//! [`super::http`] endpoint renders on demand. Nothing here feeds back
+//! into the run — the registry is strictly write-from-run,
+//! read-from-scraper, which is what keeps telemetry-on runs
+//! byte-identical to telemetry-off runs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bench::summary::Hist;
+use crate::metrics::{MsgKind, RoundMetrics, WireStats};
+use crate::net::KindCounters;
+
+/// Atomic counters and gauges for one run. Constructed once per
+/// [`super::Telemetry`] handle; see the module docs for the
+/// write/read split.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    /// Rounds completed so far (counter).
+    pub rounds_total: AtomicU64,
+    /// Cumulative upstream (client → server) payload bytes (counter).
+    pub up_bytes_total: AtomicU64,
+    /// Cumulative downstream (server → client) payload bytes (counter).
+    pub down_bytes_total: AtomicU64,
+    /// Shards the coordinator is still waiting on in the current
+    /// fan-in (gauge).
+    pub fan_in_pending: AtomicU64,
+    /// Clients currently resident in shard memory (gauge; paged runs).
+    pub resident_clients: AtomicU64,
+    /// Clients currently parked in the cold-state pager (gauge).
+    pub paged_clients: AtomicU64,
+    /// Shard deaths observed by the supervisor (counter).
+    pub deaths_total: AtomicU64,
+    /// Successful shard respawns (counter).
+    pub respawns_total: AtomicU64,
+    /// Quorum degradations (counter).
+    pub degrades_total: AtomicU64,
+    /// Last round's dense-baseline / actual-upstream compression
+    /// ratio, stored as `f64::to_bits` (gauge).
+    compression_ratio_bits: AtomicU64,
+    /// Model parameter count, set once after init (gauge; also the
+    /// dense-baseline input for the compression ratio).
+    model_params: AtomicU64,
+    /// Per-shard round latency histograms, indexed by shard slot.
+    shard_round_ms: Mutex<Vec<Hist>>,
+    /// Per-endpoint frame counters registered by the wire transport
+    /// (`(sent, received)` per attached worker connection).
+    wire: Mutex<Vec<(Arc<KindCounters>, Arc<KindCounters>)>>,
+}
+
+impl MetricsRegistry {
+    /// Record the model's parameter count (dense baseline for the
+    /// compression-ratio gauge).
+    pub fn set_model_params(&self, params: usize) {
+        self.model_params.store(params as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one sealed round into the counters: bumps `rounds_total`,
+    /// the up/down byte counters, and refreshes the compression-ratio
+    /// gauge (dense f32 baseline over the round's participants vs. the
+    /// bytes actually shipped).
+    pub fn record_round(&self, m: &RoundMetrics) {
+        self.rounds_total.fetch_add(1, Ordering::Relaxed);
+        self.up_bytes_total.fetch_add(m.up_bytes as u64, Ordering::Relaxed);
+        self.down_bytes_total.fetch_add(m.down_bytes as u64, Ordering::Relaxed);
+        let params = self.model_params.load(Ordering::Relaxed);
+        let participants = m.client_sparsity.len() as u64;
+        if params > 0 && participants > 0 && m.up_bytes > 0 {
+            let dense = (params * participants * 4) as f64;
+            let ratio = dense / m.up_bytes as f64;
+            self.compression_ratio_bits.store(ratio.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Last recorded compression ratio (0.0 before any round seals).
+    pub fn compression_ratio(&self) -> f64 {
+        f64::from_bits(self.compression_ratio_bits.load(Ordering::Relaxed))
+    }
+
+    /// Record one shard's fan-out → round-done latency for the current
+    /// round, growing the per-shard histogram table as needed.
+    pub fn observe_shard_round(&self, shard: usize, ms: f64) {
+        let Ok(mut hists) = self.shard_round_ms.lock() else { return };
+        while hists.len() <= shard {
+            hists.push(Hist::default());
+        }
+        hists[shard].push(ms);
+    }
+
+    /// Register one wire endpoint's `(sent, received)` per-kind frame
+    /// counters so the scrape endpoint can render live wire totals.
+    pub fn register_wire(&self, sent: Arc<KindCounters>, received: Arc<KindCounters>) {
+        if let Ok(mut w) = self.wire.lock() {
+            w.push((sent, received));
+        }
+    }
+
+    /// Sum every registered wire endpoint into one per-kind
+    /// [`WireStats`] snapshot (empty stats when no wire transport is
+    /// attached, e.g. mpsc runs).
+    pub fn wire_snapshot(&self) -> WireStats {
+        let mut stats = WireStats::default();
+        if let Ok(w) = self.wire.lock() {
+            for (sent, received) in w.iter() {
+                let s = sent.snapshot();
+                let r = received.snapshot();
+                for k in 0..MsgKind::COUNT {
+                    stats.sent_by_kind[k] += s[k];
+                    stats.received_by_kind[k] += r[k];
+                }
+            }
+        }
+        stats
+    }
+
+    /// Render the registry in Prometheus text exposition format
+    /// (`text/plain; version=0.0.4`). Metric order is fixed so
+    /// successive scrapes of an idle run are byte-identical.
+    pub fn render_prometheus(&self, dropped_spans: u64) -> String {
+        let mut out = String::with_capacity(2048);
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        let gauge = |out: &mut String, name: &str, help: &str, v: String| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        counter(
+            &mut out,
+            "fsfl_rounds_total",
+            "Federated rounds completed.",
+            self.rounds_total.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "fsfl_up_bytes_total",
+            "Upstream (client to server) payload bytes.",
+            self.up_bytes_total.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "fsfl_down_bytes_total",
+            "Downstream (server to client) payload bytes.",
+            self.down_bytes_total.load(Ordering::Relaxed),
+        );
+        gauge(
+            &mut out,
+            "fsfl_compression_ratio",
+            "Dense-baseline over shipped upstream bytes, last sealed round.",
+            format!("{}", self.compression_ratio()),
+        );
+        gauge(
+            &mut out,
+            "fsfl_model_params",
+            "Model parameter count.",
+            format!("{}", self.model_params.load(Ordering::Relaxed)),
+        );
+        gauge(
+            &mut out,
+            "fsfl_fan_in_pending",
+            "Shards the coordinator is still waiting on this round.",
+            format!("{}", self.fan_in_pending.load(Ordering::Relaxed)),
+        );
+        gauge(
+            &mut out,
+            "fsfl_resident_clients",
+            "Clients resident in shard memory.",
+            format!("{}", self.resident_clients.load(Ordering::Relaxed)),
+        );
+        gauge(
+            &mut out,
+            "fsfl_paged_clients",
+            "Clients parked in the cold-state pager.",
+            format!("{}", self.paged_clients.load(Ordering::Relaxed)),
+        );
+        counter(
+            &mut out,
+            "fsfl_shard_deaths_total",
+            "Shard deaths observed by the supervisor.",
+            self.deaths_total.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "fsfl_shard_respawns_total",
+            "Successful shard respawns.",
+            self.respawns_total.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "fsfl_quorum_degrades_total",
+            "Quorum degradations.",
+            self.degrades_total.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "fsfl_trace_dropped_spans_total",
+            "Spans dropped because a trace stripe was full.",
+            dropped_spans,
+        );
+        // Per-kind wire bytes, fixed kind order, skipping the two
+        // TYPE-only header lines when no wire transport is attached
+        // would make scrape shape depend on topology — always render.
+        let wire = self.wire_snapshot();
+        out.push_str("# HELP fsfl_wire_sent_bytes_total Frame bytes sent by the coordinator, by message kind.\n# TYPE fsfl_wire_sent_bytes_total counter\n");
+        for kind in MsgKind::ALL {
+            out.push_str(&format!(
+                "fsfl_wire_sent_bytes_total{{kind=\"{}\"}} {}\n",
+                kind.name(),
+                wire.sent_of(kind)
+            ));
+        }
+        out.push_str("# HELP fsfl_wire_received_bytes_total Frame bytes received by the coordinator, by message kind.\n# TYPE fsfl_wire_received_bytes_total counter\n");
+        for kind in MsgKind::ALL {
+            out.push_str(&format!(
+                "fsfl_wire_received_bytes_total{{kind=\"{}\"}} {}\n",
+                kind.name(),
+                wire.received_of(kind)
+            ));
+        }
+        // Per-shard round latency summaries (nearest-rank percentiles
+        // from bench::summary::Hist).
+        out.push_str("# HELP fsfl_round_latency_ms Per-shard fan-out to round-done latency quantiles.\n# TYPE fsfl_round_latency_ms gauge\n");
+        if let Ok(hists) = self.shard_round_ms.lock() {
+            for (shard, h) in hists.iter().enumerate() {
+                if h.count() == 0 {
+                    continue;
+                }
+                for (stat, v) in [
+                    ("p50", h.percentile(50.0).unwrap_or(0.0)),
+                    ("p95", h.percentile(95.0).unwrap_or(0.0)),
+                    ("p99", h.percentile(99.0).unwrap_or(0.0)),
+                ] {
+                    out.push_str(&format!(
+                        "fsfl_round_latency_ms{{shard=\"{shard}\",stat=\"{stat}\"}} {v}\n"
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(up: usize, down: usize, participants: usize) -> RoundMetrics {
+        RoundMetrics {
+            up_bytes: up,
+            down_bytes: down,
+            client_sparsity: vec![0.9; participants],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn record_round_accumulates_and_derives_compression() {
+        let reg = MetricsRegistry::default();
+        reg.set_model_params(1000);
+        reg.record_round(&round(800, 4000, 2));
+        reg.record_round(&round(200, 4000, 2));
+        assert_eq!(reg.rounds_total.load(Ordering::Relaxed), 2);
+        assert_eq!(reg.up_bytes_total.load(Ordering::Relaxed), 1000);
+        assert_eq!(reg.down_bytes_total.load(Ordering::Relaxed), 8000);
+        // last round: 1000 params × 2 participants × 4 bytes / 200 = 40×
+        assert_eq!(reg.compression_ratio(), 40.0);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_stable_and_well_formed() {
+        let reg = MetricsRegistry::default();
+        reg.set_model_params(10);
+        reg.record_round(&round(100, 200, 1));
+        reg.observe_shard_round(1, 5.0);
+        let a = reg.render_prometheus(0);
+        let b = reg.render_prometheus(0);
+        assert_eq!(a, b, "idle scrapes must be byte-identical");
+        assert!(a.contains("fsfl_rounds_total 1"));
+        assert!(a.contains("fsfl_up_bytes_total 100"));
+        assert!(a.contains("fsfl_wire_sent_bytes_total{kind=\"round\"} 0"));
+        assert!(a.contains("fsfl_round_latency_ms{shard=\"1\",stat=\"p50\"} 5"));
+        // Every non-comment line is `name{labels}? value`.
+        for line in a.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable sample value in line: {line}"
+            );
+            assert!(parts.next().is_some(), "missing metric name: {line}");
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! `fsfl trace summarize FILE`: browserless inspection of an exported
+//! Chrome trace — per-stage p50/p95/p99 latency and the top-3 widest
+//! spans per round, computed with the same nearest-rank
+//! [`Hist`](crate::bench::summary::Hist) the bench plane reports with.
+//!
+//! Reads the trace back through the strict [`crate::bench::json`]
+//! parser, so summarizing doubles as schema validation (the CI `obs`
+//! job leans on this).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bench::json::{self, Value};
+use crate::bench::summary::Hist;
+
+/// One span as re-read from the exported document.
+struct Ev {
+    name: String,
+    dur_us: f64,
+    round: i64,
+    unit: i64,
+    bytes: i64,
+}
+
+fn field_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("trace event missing numeric {key:?}"))
+}
+
+/// Parse an exported trace document and render the summary text.
+pub fn summarize_str(doc: &str) -> Result<String> {
+    let root = json::parse(doc).context("trace is not valid JSON")?;
+    if root.get("schema").and_then(Value::as_str) != Some("fsfl-trace") {
+        return Err(anyhow!("not an fsfl trace (missing schema tag)"));
+    }
+    let dropped = root
+        .get("otherData")
+        .and_then(|o| o.get("dropped_spans"))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0) as u64;
+    let events = root
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("trace has no traceEvents array"))?;
+    let mut spans = Vec::new();
+    for ev in events {
+        if ev.get("ph").and_then(Value::as_str) != Some("X") {
+            continue;
+        }
+        let args = ev
+            .get("args")
+            .ok_or_else(|| anyhow!("span event missing args"))?;
+        spans.push(Ev {
+            name: ev
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("span event missing name"))?
+                .to_string(),
+            dur_us: field_f64(ev, "dur")?,
+            round: field_f64(args, "round")? as i64,
+            unit: field_f64(args, "unit")? as i64,
+            bytes: field_f64(args, "bytes")? as i64,
+        });
+    }
+
+    // Per-stage latency histograms (BTreeMap: stable stage order).
+    let mut stages: BTreeMap<&str, Hist> = BTreeMap::new();
+    for s in &spans {
+        stages.entry(s.name.as_str()).or_default().push(s.dur_us / 1000.0);
+    }
+    // Widest spans per round (rounds < 0 are out-of-round plumbing).
+    let mut rounds: BTreeMap<i64, Vec<&Ev>> = BTreeMap::new();
+    for s in spans.iter().filter(|s| s.round >= 0) {
+        rounds.entry(s.round).or_default().push(s);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} spans, {} stages, {} rounds, {} dropped\n",
+        spans.len(),
+        stages.len(),
+        rounds.len(),
+        dropped
+    ));
+    out.push_str("\nper-stage latency (ms):\n");
+    out.push_str(&format!(
+        "  {:<28} {:>7} {:>10} {:>10} {:>10}\n",
+        "stage", "count", "p50", "p95", "p99"
+    ));
+    for (name, h) in &stages {
+        out.push_str(&format!(
+            "  {:<28} {:>7} {:>10.3} {:>10.3} {:>10.3}\n",
+            name,
+            h.count(),
+            h.percentile(50.0).unwrap_or(0.0),
+            h.percentile(95.0).unwrap_or(0.0),
+            h.percentile(99.0).unwrap_or(0.0)
+        ));
+    }
+    out.push_str("\ntop-3 widest spans per round:\n");
+    for (round, mut evs) in rounds {
+        // Deterministic widest-first order: duration desc, then name
+        // and unit as tie-breaks.
+        evs.sort_by(|a, b| {
+            b.dur_us
+                .total_cmp(&a.dur_us)
+                .then_with(|| a.name.cmp(&b.name))
+                .then_with(|| a.unit.cmp(&b.unit))
+        });
+        out.push_str(&format!("  round {round}:\n"));
+        for (i, e) in evs.iter().take(3).enumerate() {
+            let bytes = if e.bytes >= 0 {
+                format!(", {} bytes", e.bytes)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!(
+                "    {}. {} ({:.3} ms, unit {}{})\n",
+                i + 1,
+                e.name,
+                e.dur_us / 1000.0,
+                e.unit,
+                bytes
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Read `path` and summarize it (the CLI verb's body).
+pub fn summarize_file(path: &std::path::Path) -> Result<String> {
+    let doc = std::fs::read_to_string(path)
+        .with_context(|| format!("failed to read trace {}", path.display()))?;
+    summarize_str(&doc).with_context(|| format!("failed to summarize {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{chrome, track, Span};
+
+    #[test]
+    fn summarizes_an_exported_trace() {
+        let spans = vec![
+            Span {
+                ts_ns: 0,
+                dur_ns: 2_000_000,
+                track: track::CODEC,
+                name: "codec.encode_w",
+                round: 0,
+                unit: 3,
+                bytes: 100,
+            },
+            Span {
+                ts_ns: 0,
+                dur_ns: 5_000_000,
+                track: track::COORDINATOR,
+                name: "round",
+                round: 0,
+                unit: -1,
+                bytes: -1,
+            },
+            Span {
+                ts_ns: 0,
+                dur_ns: 1_000_000,
+                track: track::CODEC,
+                name: "codec.encode_w",
+                round: 1,
+                unit: 4,
+                bytes: 80,
+            },
+        ];
+        let doc = chrome::render(&spans, 0);
+        let s = summarize_str(&doc).unwrap();
+        assert!(s.contains("3 spans"), "got: {s}");
+        assert!(s.contains("codec.encode_w"));
+        assert!(s.contains("round 0:"));
+        assert!(s.contains("round 1:"));
+        // round 0's widest span is the 5 ms coordinator round
+        let round0 = s.split("round 0:").nth(1).unwrap();
+        assert!(round0.trim_start().starts_with("1. round (5.000 ms"));
+    }
+
+    #[test]
+    fn rejects_non_trace_documents() {
+        assert!(summarize_str("{\"schema\": \"something-else\"}").is_err());
+        assert!(summarize_str("not json").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Ring-buffered span storage for the telemetry plane.
+//!
+//! Spans are recorded from many threads (the coordinator control loop,
+//! mpsc shard threads, codec worker pools, wire reader threads), so the
+//! sink is striped: each recording thread is assigned one of a fixed
+//! set of stripes on first use and only ever locks that stripe. Every
+//! stripe is a `Vec` with its full capacity pre-allocated, so recording
+//! a span never allocates on the hot path — when a stripe is full,
+//! further spans are counted as dropped instead of growing the buffer.
+//!
+//! Determinism contract: a span's *identity* is its rendered fields
+//! (`ts_ns`, `dur_ns`, `track`, `name`, `round`, `unit`, `bytes`) —
+//! which stripe it landed in and in what order is scheduling noise that
+//! the exporters erase with a canonical total sort (see
+//! [`super::chrome`]). Under a zero-tick
+//! [`ScriptedClock`](crate::supervise::ScriptedClock) every timestamp
+//! is zero and the span *multiset* is a pure function of the config, so
+//! two runs export byte-identical traces.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of independently-locked span buffers. Recording threads are
+/// assigned round-robin, so contention stays negligible for the thread
+/// counts the coordinator actually spawns.
+const STRIPES: usize = 8;
+
+/// Span capacity of one stripe. Pre-allocated up front; a full stripe
+/// drops further spans (counted) rather than allocating.
+const STRIPE_CAP: usize = 1 << 14;
+
+/// One completed span (or instant event, when `dur_ns == 0` carries no
+/// meaning for the name). Names and tracks are `&'static str` by
+/// design: recording a span moves no owned data and allocates nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Start timestamp, nanoseconds since the run clock's epoch.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds (0 for instant events).
+    pub dur_ns: u64,
+    /// Track (exporter lane) this span belongs to; one of
+    /// [`crate::obs::track::ALL`].
+    pub track: &'static str,
+    /// Stage name, e.g. `"codec.encode_w"` or `"net.send.round"`.
+    pub name: &'static str,
+    /// Round index the span belongs to (-1 when outside any round).
+    pub round: i64,
+    /// Deterministic sub-unit key: client id for codec stages, shard
+    /// index for fan-in/incident spans, -1 when not applicable.
+    pub unit: i64,
+    /// Byte count attributed to the span (-1 when not applicable).
+    pub bytes: i64,
+}
+
+/// Striped, fixed-capacity span sink. See the module docs for the
+/// recording and determinism contracts.
+pub struct TraceSink {
+    stripes: Vec<Mutex<Vec<Span>>>,
+    dropped: AtomicU64,
+}
+
+/// Round-robin stripe assignment for recording threads.
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_STRIPE: usize = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) % STRIPES;
+}
+
+impl TraceSink {
+    /// A sink with every stripe's capacity pre-allocated.
+    pub fn new() -> Self {
+        Self {
+            stripes: (0..STRIPES)
+                .map(|_| Mutex::new(Vec::with_capacity(STRIPE_CAP)))
+                .collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one span. Allocation-free: pushes into the recording
+    /// thread's pre-allocated stripe, or bumps the dropped counter when
+    /// that stripe is full (never blocks on another thread's stripe).
+    pub fn record(&self, span: Span) {
+        let stripe = MY_STRIPE.with(|&s| s);
+        let Ok(mut buf) = self.stripes[stripe].lock() else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        if buf.len() < STRIPE_CAP {
+            buf.push(span);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Move every recorded span out (stripe order, which is *not*
+    /// canonical — exporters must sort). The sink is reusable after.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for s in &self.stripes {
+            if let Ok(mut buf) = s.lock() {
+                out.append(&mut buf);
+                // append leaves the allocation in place only for `out`;
+                // restore the stripe's no-alloc recording guarantee.
+                buf.reserve(STRIPE_CAP);
+            }
+        }
+        out
+    }
+
+    /// Spans discarded because their stripe was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &'static str, unit: i64) -> Span {
+        Span {
+            ts_ns: 0,
+            dur_ns: 0,
+            track: "codec",
+            name,
+            round: 0,
+            unit,
+            bytes: -1,
+        }
+    }
+
+    #[test]
+    fn records_and_drains_across_threads() {
+        let sink = std::sync::Arc::new(TraceSink::new());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let s = sink.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        s.record(span("t", i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 400);
+        assert_eq!(sink.dropped(), 0);
+        // drained: the sink is empty and reusable
+        assert!(sink.drain().is_empty());
+        sink.record(span("again", 0));
+        assert_eq!(sink.drain().len(), 1);
+    }
+
+    #[test]
+    fn full_stripe_counts_drops_instead_of_growing() {
+        let sink = TraceSink::new();
+        // All from one thread → one stripe; overfill it.
+        for _ in 0..(STRIPE_CAP + 10) {
+            sink.record(span("x", 0));
+        }
+        assert_eq!(sink.dropped(), 10);
+        assert_eq!(sink.drain().len(), STRIPE_CAP);
+    }
+}

@@ -55,6 +55,7 @@ fn ctx(tag: &str) -> BenchCtx {
     BenchCtx {
         exe: PathBuf::from(env!("CARGO_BIN_EXE_fsfl")),
         scratch: tmp_dir(tag),
+        clock: Arc::new(fsfl::supervise::MonotonicClock::new()),
     }
 }
 

@@ -555,7 +555,7 @@ fn runlog_identical_across_transports_schedules_and_shard_counts() {
                     if transport.is_wire() {
                         let w = log.wire.expect("wire transports must measure traffic");
                         assert!(
-                            w.sent > 0 && w.received > 0,
+                            w.sent() > 0 && w.received() > 0,
                             "wire bytes must be measured, not estimated"
                         );
                         // Deterministic framing: loopback and TCP move
@@ -612,7 +612,7 @@ fn bidirectional_broadcast_stream_is_conformant_across_transports() {
         if transport.is_wire() {
             let w = log.wire.expect("wire transports must measure traffic");
             assert!(
-                w.sent > 0 && w.received > 0,
+                w.sent() > 0 && w.received() > 0,
                 "stream APPLY bytes must be measured at the frame layer"
             );
             match &wire_ref {
@@ -659,7 +659,91 @@ fn tcp_shard_processes_match_the_single_process_staged_schedule() {
             "{shards} OS shard processes diverged from the single-process staged schedule"
         );
         let w = log.wire.expect("process deployment must measure traffic");
-        assert!(w.sent > 0 && w.received > 0);
+        assert!(w.sent() > 0 && w.received() > 0);
+    }
+}
+
+#[test]
+fn telemetry_is_strictly_passive_across_transports() {
+    // The observability plane's hard requirement: attaching a live
+    // telemetry handle (span tracing on, metrics registry counting)
+    // must leave every run output byte-identical — RunLog rounds,
+    // measured per-kind wire traffic and the emitted CSV.
+    use fsfl::coordinator::ElasticPlan;
+    use fsfl::obs::Telemetry;
+    use fsfl::supervise::MonotonicClock;
+
+    let m = manifest();
+    for transport in [
+        TransportKind::Mpsc,
+        TransportKind::Loopback,
+        TransportKind::Tcp,
+    ] {
+        let mut cfg = synth_cfg(Protocol::Fsfl);
+        cfg.compute_shards = 2;
+        cfg.transport = transport;
+        let plain = coordinator::run_experiment_synthetic_session_observed(
+            cfg.clone(),
+            m.clone(),
+            ElasticPlan::default(),
+            None,
+            None,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        let telemetry = Telemetry::new(Arc::new(MonotonicClock::new()), true);
+        let observed = coordinator::run_experiment_synthetic_session_observed(
+            cfg,
+            m.clone(),
+            ElasticPlan::default(),
+            None,
+            None,
+            Some(telemetry.clone()),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            fp_rounds(&plain),
+            fp_rounds(&observed),
+            "{}: telemetry changed the RunLog rounds",
+            transport.name()
+        );
+        assert_eq!(
+            plain.wire,
+            observed.wire,
+            "{}: telemetry changed the measured per-kind wire bytes",
+            transport.name()
+        );
+        // …and the handle genuinely observed the run while staying
+        // passive: the registry counted every round and byte, and the
+        // trace sink recorded spans.
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            telemetry.metrics.rounds_total.load(Ordering::Relaxed) as usize,
+            observed.rounds.len(),
+            "{}: registry missed rounds",
+            transport.name()
+        );
+        assert_eq!(
+            telemetry.metrics.up_bytes_total.load(Ordering::Relaxed) as usize,
+            observed.total_bytes(true),
+            "{}: registry missed upstream bytes",
+            transport.name()
+        );
+        if let Some(w) = observed.wire {
+            assert_eq!(
+                telemetry.metrics.wire_snapshot(),
+                w,
+                "{}: registry wire counters diverged from RunLog::wire",
+                transport.name()
+            );
+        }
+        assert!(
+            !telemetry.drain_spans().is_empty(),
+            "{}: tracing was on but no spans were recorded",
+            transport.name()
+        );
     }
 }
 

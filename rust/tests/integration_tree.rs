@@ -94,6 +94,55 @@ fn tree_fan_in_pins_the_flat_round_log_across_transports() {
 }
 
 #[test]
+fn telemetry_is_passive_on_tree_and_flat_topologies() {
+    // Observability-plane requirement: a live telemetry handle must
+    // leave the tree fan-in's RunLog (rounds and measured wire bytes)
+    // byte-identical, on both the flat and the hierarchical topology.
+    use std::sync::Arc;
+
+    use fsfl::obs::Telemetry;
+    use fsfl::supervise::MonotonicClock;
+
+    let m = manifest();
+    for children in [0usize, 2] {
+        let cfg = tcfg(TransportKind::Loopback, 2, children);
+        let plain = coordinator::run_experiment_synthetic_session_observed(
+            cfg.clone(),
+            m.clone(),
+            ElasticPlan::default(),
+            None,
+            None,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        let telemetry = Telemetry::new(Arc::new(MonotonicClock::new()), true);
+        let observed = coordinator::run_experiment_synthetic_session_observed(
+            cfg,
+            m.clone(),
+            ElasticPlan::default(),
+            None,
+            None,
+            Some(telemetry.clone()),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            plain.rounds, observed.rounds,
+            "tree_children={children}: telemetry changed the RunLog rounds"
+        );
+        assert_eq!(
+            plain.wire, observed.wire,
+            "tree_children={children}: telemetry changed the measured wire bytes"
+        );
+        assert!(
+            !telemetry.drain_spans().is_empty(),
+            "tree_children={children}: tracing was on but recorded no spans"
+        );
+    }
+}
+
+#[test]
 fn uneven_tree_shapes_pin_the_flat_round_log() {
     // 3 top-level aggregators × 2 leaves = 6 leaf shards over 5 clients:
     // at least one leaf owns no client at all, and round-robin slot sets
