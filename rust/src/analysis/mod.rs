@@ -1,0 +1,242 @@
+//! Static-analysis plane: the `fsfl lint` invariant checker.
+//!
+//! The crate's determinism and performance guarantees rest on
+//! source-level invariants no runtime test can fully defend: wall-clock
+//! reads stay inside [`crate::supervise`], the steady-state codec path
+//! allocates nothing, the wire protocol's tags and version constants
+//! never drift from what ARCHITECTURE.md documents, and transport /
+//! supervision code returns typed errors instead of panicking. This
+//! module turns those prose rules into an enforced gate: a
+//! dependency-free, string/comment-aware line scanner
+//! ([`scanner::SourceFile`]) feeding a fixed rule set
+//! ([`rules::lint_files`]), driven by `fsfl lint` locally and by the CI
+//! `analysis` job on every push.
+//!
+//! Escape hatches are explicit and audited: `// fsfl-lint: allow(rule):
+//! why` suppresses one rule on one line and must carry a justification;
+//! `// fsfl-lint: hot` / `end-hot` fence the allocation-free regions.
+//! See ARCHITECTURE.md's "analysis plane" section for the full rule
+//! catalog and extension guide.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+pub mod rules;
+pub mod scanner;
+
+/// One lint violation, addressable as `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Crate-relative path (or `ARCHITECTURE.md` for doc findings).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (`clock`, `hot-alloc`, `panic`, `safety`,
+    /// `wire-tags`, `wire-version`, `wire-corpus`, `directive`).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding; `message` may be any string-ish value.
+    pub fn new(file: &str, line: usize, rule: &'static str, message: impl Into<String>) -> Self {
+        Self {
+            file: file.to_string(),
+            line,
+            rule,
+            message: message.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Result of one lint run: findings (sorted by file/line) plus how
+/// much source the run actually covered, so "0 findings" is checkable
+/// against "0 files scanned".
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when the run found nothing.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form:
+    /// `{"files_scanned":N,"findings":[{file,line,rule,message}…]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"files_scanned\":");
+        out.push_str(&self.files_scanned.to_string());
+        out.push_str(",\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"file\":\"");
+            out.push_str(&json_escape(&f.file));
+            out.push_str("\",\"line\":");
+            out.push_str(&f.line.to_string());
+            out.push_str(",\"rule\":\"");
+            out.push_str(&json_escape(f.rule));
+            out.push_str("\",\"message\":\"");
+            out.push_str(&json_escape(&f.message));
+            out.push_str("\"}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Minimal JSON string escape (control chars, quotes, backslashes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The resolved scan layout: where the crate lives and where the
+/// architecture doc is expected.
+struct Layout {
+    /// Directory containing `src/` (and usually `tests/`).
+    crate_dir: PathBuf,
+    /// ARCHITECTURE.md candidate path (may not exist).
+    doc: PathBuf,
+}
+
+/// Accept either the repository root (containing `rust/src`) or the
+/// crate directory itself (containing `src`), so `fsfl lint` works
+/// both from the repo checkout and from CI's `working-directory: rust`.
+fn resolve_layout(root: &Path) -> Result<Layout> {
+    if root.join("rust/src").is_dir() {
+        return Ok(Layout {
+            crate_dir: root.join("rust"),
+            doc: root.join("ARCHITECTURE.md"),
+        });
+    }
+    if root.join("src").is_dir() {
+        let doc = if root.join("ARCHITECTURE.md").is_file() {
+            root.join("ARCHITECTURE.md")
+        } else {
+            root.join("../ARCHITECTURE.md")
+        };
+        return Ok(Layout {
+            crate_dir: root.to_path_buf(),
+            doc,
+        });
+    }
+    Err(anyhow!(
+        "no Rust sources under {}: expected `src/` or `rust/src/`",
+        root.display()
+    ))
+}
+
+/// Collect `.rs` files under `dir` recursively, sorted for
+/// deterministic finding order. A missing `dir` yields an empty list
+/// (a crate without `tests/` is fine).
+fn rust_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&d).map_err(|e| anyhow!("reading {}: {e}", d.display()))?;
+        for entry in entries {
+            let path = entry
+                .map_err(|e| anyhow!("reading {}: {e}", d.display()))?
+                .path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run the full lint over `root` (repository root or crate directory).
+/// Scans `src/**` and `tests/**`, applies every rule, and reconciles
+/// version constants against ARCHITECTURE.md when present.
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let layout = resolve_layout(root)?;
+    let mut files = Vec::new();
+    let mut findings = Vec::new();
+    for sub in ["src", "tests"] {
+        for path in rust_files(&layout.crate_dir.join(sub))? {
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+            let rel = path
+                .strip_prefix(&layout.crate_dir)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let (file, errs) = scanner::SourceFile::parse(&rel, &src);
+            findings.extend(errs);
+            files.push(file);
+        }
+    }
+    let doc = std::fs::read_to_string(&layout.doc).ok();
+    findings.extend(rules::lint_files(&files, doc.as_deref()));
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport {
+        findings,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_display_is_file_line_rule_message() {
+        let f = Finding::new("src/x.rs", 7, "clock", "raw clock read");
+        assert_eq!(f.to_string(), "src/x.rs:7: [clock] raw clock read");
+    }
+
+    #[test]
+    fn report_json_escapes_and_counts() {
+        let report = LintReport {
+            findings: vec![Finding::new("src/a \"b\".rs", 2, "panic", "line\none")],
+            files_scanned: 3,
+        };
+        assert_eq!(
+            report.to_json(),
+            "{\"files_scanned\":3,\"findings\":[{\"file\":\"src/a \\\"b\\\".rs\",\
+             \"line\":2,\"rule\":\"panic\",\"message\":\"line\\none\"}]}"
+        );
+        assert!(!report.clean());
+    }
+}

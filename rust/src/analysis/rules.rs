@@ -1,0 +1,699 @@
+//! The lint rules: four source-level invariants the runtime tests
+//! cannot see, each matched against the scanner's code view.
+//!
+//! * `clock` — no `Instant::now()` / `SystemTime::now()` outside
+//!   `src/supervise.rs`; everything else reads time through
+//!   [`crate::supervise::Clock`], which is what makes scripted-clock
+//!   chaos tests and the determinism contract possible.
+//! * `hot-alloc` — no allocating constructs inside `// fsfl-lint: hot`
+//!   fences; the fences cover the steady-state codec path, twinning the
+//!   `benches/fl_round.rs` zero-allocation pin at the source level.
+//! * `panic` — no `unwrap()` / `expect()` / `panic!` in non-test code
+//!   under `src/net/`, `src/session/`, `src/coordinator/`: transport
+//!   and supervision errors must surface as typed results the recovery
+//!   plane can act on.
+//! * `safety` — every `unsafe` block carries a `// SAFETY:` comment
+//!   stating the invariant it relies on.
+//!
+//! Plus the cross-file **wire consistency** checks (`wire-tags`,
+//! `wire-version`, `wire-corpus`): tag bytes unique per direction,
+//! version constants agreeing with the numbers ARCHITECTURE.md quotes,
+//! and every `ShardCmd`/`ShardMsg` variant exercised by the transport
+//! corpus. Cross-file checks only run when their subject files are in
+//! the scan set, so the linter stays usable on fixture trees.
+
+use super::scanner::SourceFile;
+use super::Finding;
+
+/// Allocating constructs banned inside hot fences.
+const HOT_TOKENS: [&str; 7] = [
+    "Vec::new",
+    "vec!",
+    ".to_vec()",
+    "format!",
+    "String::from",
+    ".collect()",
+    "Box::new",
+];
+
+/// The version constants the wire-version rule reconciles with
+/// ARCHITECTURE.md: `(constant, defining file)`.
+const VERSIONS: [(&str, &str); 3] = [
+    ("PROTOCOL_VERSION", "src/net/wire.rs"),
+    ("SNAPSHOT_VERSION", "src/session/mod.rs"),
+    ("SCHEMA_VERSION", "src/bench/mod.rs"),
+];
+
+/// File whose `enum ShardCmd` / `enum ShardMsg` variants must be
+/// exercised by the transport corpus.
+const ENUM_FILE: &str = "src/coordinator/mod.rs";
+/// The corpus that must mention every wire enum variant.
+const CORPUS_FILE: &str = "tests/integration_transport.rs";
+
+/// Run every rule over the scanned files. `doc` is ARCHITECTURE.md's
+/// text when present (the wire-version rule reconciles against it).
+pub fn lint_files(files: &[SourceFile], doc: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        clock_rule(f, &mut out);
+        hot_alloc_rule(f, &mut out);
+        panic_rule(f, &mut out);
+        safety_rule(f, &mut out);
+    }
+    wire_tags_rule(files, &mut out);
+    wire_version_rule(files, doc, &mut out);
+    wire_corpus_rule(files, &mut out);
+    out
+}
+
+/// `clock`: raw monotonic/wall reads are `supervise.rs`'s monopoly.
+fn clock_rule(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.path == "src/supervise.rs" || f.path.ends_with("/src/supervise.rs") {
+        return;
+    }
+    for (no, line) in f.numbered() {
+        if (line.code.contains("Instant::now") || line.code.contains("SystemTime::now"))
+            && !line.allows("clock")
+        {
+            out.push(Finding::new(
+                &f.path,
+                no,
+                "clock",
+                "raw clock read; take time from `supervise::Clock` so scripted \
+                 clocks stay in control",
+            ));
+        }
+    }
+}
+
+/// `hot-alloc`: allocating constructs inside `fsfl-lint: hot` fences.
+fn hot_alloc_rule(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (no, line) in f.numbered() {
+        if !line.hot || line.allows("hot-alloc") {
+            continue;
+        }
+        for tok in HOT_TOKENS {
+            if line.code.contains(tok) {
+                out.push(Finding::new(
+                    &f.path,
+                    no,
+                    "hot-alloc",
+                    format!("allocating construct `{tok}` inside a hot fence"),
+                ));
+            }
+        }
+    }
+}
+
+/// `panic`: panicking constructs in non-test transport/supervision code.
+fn panic_rule(f: &SourceFile, out: &mut Vec<Finding>) {
+    let scope = ["src/net/", "src/session/", "src/coordinator/"]
+        .iter()
+        .find(|p| f.path.starts_with(**p));
+    let Some(scope) = scope else { return };
+    let plane = scope.trim_start_matches("src/").trim_end_matches('/');
+    for (no, line) in f.numbered() {
+        if line.in_test || line.allows("panic") {
+            continue;
+        }
+        for (tok, name) in [
+            (".unwrap()", "unwrap()"),
+            (".expect(", "expect()"),
+            ("panic!", "panic!"),
+        ] {
+            if line.code.contains(tok) {
+                out.push(Finding::new(
+                    &f.path,
+                    no,
+                    "panic",
+                    format!("`{name}` in non-test {plane} code; return a typed error"),
+                ));
+            }
+        }
+    }
+}
+
+/// `safety`: every `unsafe` block carries a `// SAFETY:` comment, on
+/// the same line or in the contiguous comment/attribute block above.
+fn safety_rule(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (no, line) in f.numbered() {
+        if !has_word(&line.code, "unsafe") || is_unsafe_item(&line.code) {
+            continue;
+        }
+        if line.allows("safety") {
+            continue;
+        }
+        let mut justified = line.comment.contains("SAFETY:");
+        let mut i = no - 1; // index of the line above
+        while !justified && i > 0 {
+            let above = &f.lines[i - 1];
+            let code = above.code.trim();
+            if !code.is_empty() && !code.starts_with("#[") {
+                break;
+            }
+            justified = above.comment.contains("SAFETY:");
+            i -= 1;
+        }
+        if !justified {
+            out.push(Finding::new(
+                &f.path,
+                no,
+                "safety",
+                "`unsafe` block without a `// SAFETY:` comment stating its invariant",
+            ));
+        }
+    }
+}
+
+/// `unsafe fn` / `unsafe impl` / `unsafe trait` declarations are API
+/// shape, not a block eliding a proof obligation at the use site.
+fn is_unsafe_item(code: &str) -> bool {
+    let Some(pos) = code.find("unsafe") else {
+        return false;
+    };
+    let after = code[pos + "unsafe".len()..].trim_start();
+    after.starts_with("fn ") || after.starts_with("impl ") || after.starts_with("trait ")
+}
+
+/// Word-boundary containment (so `unsafe` never matches `unsafety`).
+fn has_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        let after_ok = !code[at + word.len()..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// `wire-tags`: tag bytes unique per direction, with directions read
+/// from the `cmd_tag` / `msg_tag` classifier match arms.
+fn wire_tags_rule(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(wire) = files.iter().find(|f| f.path.ends_with("net/wire.rs")) else {
+        return;
+    };
+    // TAG_* constant table: name -> (value, defining line).
+    let mut consts: Vec<(String, u64, usize)> = Vec::new();
+    for (no, line) in wire.numbered() {
+        let code = line.code.trim();
+        let Some(rest) = code.strip_prefix("const TAG_") else {
+            continue;
+        };
+        let Some((head, value)) = rest.split_once('=') else {
+            continue;
+        };
+        let name: String = head
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if let Some(v) = parse_int(value) {
+            consts.push((format!("TAG_{name}"), v, no));
+        }
+    }
+    if consts.is_empty() {
+        out.push(Finding::new(
+            &wire.path,
+            1,
+            "wire-tags",
+            "no `const TAG_*` definitions found; the tag parser rotted",
+        ));
+        return;
+    }
+    // Directions: a line mentioning CmdTag:: (resp. MsgTag::) claims
+    // every TAG_* identifier on it for that direction.
+    for (marker, dir) in [("CmdTag::", "command"), ("MsgTag::", "message")] {
+        let mut seen: Vec<(u64, &str, usize)> = Vec::new();
+        for (no, line) in wire.numbered() {
+            if !line.code.contains(marker) {
+                continue;
+            }
+            for name in tag_idents(&line.code) {
+                let Some((cname, value, _)) = consts.iter().find(|(n, _, _)| *n == name) else {
+                    out.push(Finding::new(
+                        &wire.path,
+                        no,
+                        "wire-tags",
+                        format!("{dir} classifier references undefined `{name}`"),
+                    ));
+                    continue;
+                };
+                if let Some((_, other, _)) = seen.iter().find(|(v, _, _)| v == value) {
+                    if *other != *cname {
+                        out.push(Finding::new(
+                            &wire.path,
+                            no,
+                            "wire-tags",
+                            format!(
+                                "{dir} tag byte {value:#04x} is claimed by both \
+                                 `{other}` and `{cname}`"
+                            ),
+                        ));
+                    }
+                } else {
+                    seen.push((*value, cname.as_str(), no));
+                }
+            }
+        }
+        if seen.is_empty() {
+            out.push(Finding::new(
+                &wire.path,
+                1,
+                "wire-tags",
+                format!("no {dir} tags classified via `{marker}`; the direction parser rotted"),
+            ));
+        }
+    }
+}
+
+/// All `TAG_*` identifiers on a code line.
+fn tag_idents(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("TAG_") {
+        let at = from + pos;
+        let boundary = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        let name: String = code[at..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        from = at + name.len().max(4);
+        if boundary && name.len() > 4 {
+            out.push(name);
+        }
+    }
+    out
+}
+
+/// `wire-version`: the version constants in source agree with every
+/// number ARCHITECTURE.md quotes next to their names (and the doc must
+/// quote each constant that exists in the scan set at least once).
+fn wire_version_rule(files: &[SourceFile], doc: Option<&str>, out: &mut Vec<Finding>) {
+    for (name, file) in VERSIONS {
+        let Some(src) = files.iter().find(|f| f.path == file) else {
+            continue;
+        };
+        let mut defined: Option<(u64, usize)> = None;
+        for (no, line) in src.numbered() {
+            let code = line.code.trim();
+            if code.contains("const ") && code.contains(name) && code.contains('=') {
+                if let Some((_, value)) = code.split_once('=') {
+                    if let Some(v) = parse_int(value) {
+                        defined = Some((v, no));
+                        break;
+                    }
+                }
+            }
+        }
+        let Some((value, def_line)) = defined else {
+            out.push(Finding::new(
+                file,
+                1,
+                "wire-version",
+                format!("`{name}` constant not found; the version parser rotted"),
+            ));
+            continue;
+        };
+        let Some(doc) = doc else {
+            out.push(Finding::new(
+                file,
+                def_line,
+                "wire-version",
+                format!("ARCHITECTURE.md not found, cannot reconcile `{name}` = {value}"),
+            ));
+            continue;
+        };
+        let mut quoted = false;
+        for (i, dline) in doc.lines().enumerate() {
+            let Some(pos) = dline.find(name) else { continue };
+            let Some(n) = first_int(&dline[pos + name.len()..]) else {
+                continue;
+            };
+            quoted = true;
+            if n != value {
+                out.push(Finding::new(
+                    "ARCHITECTURE.md",
+                    i + 1,
+                    "wire-version",
+                    format!("quotes `{name}` = {n} but {file} defines {value}"),
+                ));
+            }
+        }
+        if !quoted {
+            out.push(Finding::new(
+                "ARCHITECTURE.md",
+                1,
+                "wire-version",
+                format!("never quotes `{name}` (source value: {value}); document it"),
+            ));
+        }
+    }
+}
+
+/// `wire-corpus`: every `ShardCmd` / `ShardMsg` variant name appears in
+/// the transport corpus (snake_case or verbatim), so a new control
+/// message cannot ship without corpus coverage.
+fn wire_corpus_rule(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(enums) = files.iter().find(|f| f.path == ENUM_FILE) else {
+        return;
+    };
+    let Some(corpus) = files.iter().find(|f| f.path == CORPUS_FILE) else {
+        out.push(Finding::new(
+            ENUM_FILE,
+            1,
+            "wire-corpus",
+            format!("`{CORPUS_FILE}` missing from the scan set"),
+        ));
+        return;
+    };
+    let hay: String = corpus
+        .lines
+        .iter()
+        .flat_map(|l| [l.code.as_str(), "\n"])
+        .collect::<String>()
+        .to_ascii_lowercase();
+    for enum_name in ["ShardCmd", "ShardMsg"] {
+        let variants = enum_variants(enums, enum_name);
+        if variants.is_empty() {
+            out.push(Finding::new(
+                ENUM_FILE,
+                1,
+                "wire-corpus",
+                format!("`enum {enum_name}` not found; the variant parser rotted"),
+            ));
+            continue;
+        }
+        for (name, no) in variants {
+            if enums.lines[no - 1].allows("wire-corpus") {
+                continue;
+            }
+            let snake = camel_to_snake(&name);
+            if !hay.contains(&snake) && !hay.contains(&name.to_ascii_lowercase()) {
+                out.push(Finding::new(
+                    ENUM_FILE,
+                    no,
+                    "wire-corpus",
+                    format!("`{enum_name}::{name}` is not exercised by {CORPUS_FILE}"),
+                ));
+            }
+        }
+    }
+}
+
+/// Variant names of `enum <name>` with their 1-based lines, read off
+/// brace depth (payload braces nest deeper than the variant list).
+fn enum_variants(f: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let header = format!("enum {name}");
+    let mut out = Vec::new();
+    let mut depth_in: Option<usize> = None;
+    let mut depth = 0usize;
+    for (no, line) in f.numbered() {
+        let opens_here = depth_in.is_none() && line.code.contains(&header);
+        if let Some(enum_depth) = depth_in {
+            let code = line.code.trim();
+            if depth == enum_depth + 1 {
+                if let Some(first) = code.chars().next() {
+                    if first.is_ascii_uppercase() {
+                        let ident: String = code
+                            .chars()
+                            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                            .collect();
+                        out.push((ident, no));
+                    }
+                }
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if opens_here && depth_in.is_none() {
+                        depth_in = Some(depth);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if depth_in == Some(depth) {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// CamelCase → snake_case (`RoundDone` → `round_done`).
+fn camel_to_snake(name: &str) -> String {
+    let mut out = String::new();
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_uppercase() {
+            if i > 0 {
+                out.push('_');
+            }
+            out.push(c.to_ascii_lowercase());
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// First base-10 or `0x` integer in `s`, if any.
+fn first_int(s: &str) -> Option<u64> {
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_digit() {
+            if bytes[i] == b'0' && bytes.get(i + 1).is_some_and(|b| *b == b'x' || *b == b'X') {
+                let hex: String = s[i + 2..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_hexdigit() || *c == '_')
+                    .collect();
+                return u64::from_str_radix(&hex.replace('_', ""), 16).ok();
+            }
+            let dec: String = s[i..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '_')
+                .collect();
+            return dec.replace('_', "").parse().ok();
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse an integer token like ` 0x11;` or ` 5;`.
+fn parse_int(s: &str) -> Option<u64> {
+    first_int(s.trim().trim_end_matches(';'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::SourceFile;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+        let (f, mut errs) = SourceFile::parse(path, src);
+        errs.extend(lint_files(&[f], None));
+        errs
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // -- clock ------------------------------------------------------------
+
+    #[test]
+    fn clock_rule_fires_outside_supervise() {
+        let bad = lint_one("src/fl/mod.rs", "let t = Instant::now();\n");
+        assert_eq!(rules_of(&bad), vec!["clock"]);
+        assert_eq!(bad[0].line, 1);
+    }
+
+    #[test]
+    fn clock_rule_spares_supervise_allows_and_strings() {
+        assert!(lint_one("src/supervise.rs", "let t = Instant::now();\n").is_empty());
+        assert!(lint_one(
+            "src/fl/mod.rs",
+            "// fsfl-lint: allow(clock): fixture wall-clock watchdog\n\
+             let t = Instant::now();\n"
+        )
+        .is_empty());
+        assert!(lint_one("src/fl/mod.rs", "let s = \"Instant::now()\";\n").is_empty());
+    }
+
+    // -- hot-alloc --------------------------------------------------------
+
+    #[test]
+    fn hot_alloc_fires_inside_fence_only() {
+        let bad = lint_one(
+            "src/fl/lane.rs",
+            "// fsfl-lint: hot\nlet v = Vec::new();\n// fsfl-lint: end-hot\n",
+        );
+        assert_eq!(rules_of(&bad), vec!["hot-alloc"]);
+        assert_eq!(bad[0].line, 2);
+        assert!(lint_one("src/fl/lane.rs", "let v = Vec::new();\n").is_empty());
+        assert!(lint_one(
+            "src/fl/lane.rs",
+            "// fsfl-lint: hot\nbuf.copy_from_slice(src);\n// fsfl-lint: end-hot\n"
+        )
+        .is_empty());
+    }
+
+    // -- panic ------------------------------------------------------------
+
+    #[test]
+    fn panic_rule_scopes_to_transport_planes_and_test_code() {
+        let bad = lint_one("src/net/frame.rs", "let x = y.unwrap();\n");
+        assert_eq!(rules_of(&bad), vec!["panic"]);
+        // Same construct outside the scoped planes: clean.
+        assert!(lint_one("src/fl/mod.rs", "let x = y.unwrap();\n").is_empty());
+        // Inside #[cfg(test)]: clean.
+        assert!(lint_one(
+            "src/net/frame.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n"
+        )
+        .is_empty());
+        // unwrap_or_else is not unwrap.
+        assert!(lint_one("src/net/frame.rs", "let x = y.unwrap_or_else(f);\n").is_empty());
+    }
+
+    // -- safety -----------------------------------------------------------
+
+    #[test]
+    fn safety_rule_wants_a_safety_comment() {
+        let bad = lint_one("src/runtime/step.rs", "let b = unsafe { f(p) };\n");
+        assert_eq!(rules_of(&bad), vec!["safety"]);
+        assert!(lint_one(
+            "src/runtime/step.rs",
+            "// SAFETY: p outlives b and the cast preserves size.\n\
+             let b = unsafe { f(p) };\n"
+        )
+        .is_empty());
+        // `unsafe fn` declarations are API shape, not use-site proof debt.
+        assert!(lint_one("src/runtime/step.rs", "unsafe fn f() {}\n").is_empty());
+    }
+
+    // -- wire-tags --------------------------------------------------------
+
+    const TAGS_OK: &str = "\
+const TAG_A: u8 = 0x01;
+const TAG_B: u8 = 0x02;
+fn cmd_tag(p: &[u8]) {
+    match p.first() {
+        Some(&TAG_A) => Ok(CmdTag::A),
+        Some(&TAG_B) => Ok(CmdTag::B),
+        _ => Err(()),
+    }
+}
+fn msg_tag(p: &[u8]) {
+    match p.first() {
+        Some(&TAG_A) => Ok(MsgTag::A),
+        _ => Err(()),
+    }
+}
+";
+
+    #[test]
+    fn wire_tags_accepts_unique_and_rejects_duplicate_bytes() {
+        let (ok, _) = SourceFile::parse("src/net/wire.rs", TAGS_OK);
+        assert!(lint_files(&[ok], None).is_empty());
+
+        let dup = TAGS_OK.replace("const TAG_B: u8 = 0x02;", "const TAG_B: u8 = 0x01;");
+        let (bad, _) = SourceFile::parse("src/net/wire.rs", &dup);
+        let found = lint_files(&[bad], None);
+        assert_eq!(rules_of(&found), vec!["wire-tags"], "{found:?}");
+        assert!(found[0].message.contains("0x01"));
+    }
+
+    // -- wire-version -----------------------------------------------------
+
+    fn session_src() -> SourceFile {
+        SourceFile::parse("src/session/mod.rs", "pub const SNAPSHOT_VERSION: u8 = 4;\n").0
+    }
+
+    #[test]
+    fn wire_version_reconciles_against_doc_quotes() {
+        let good = "| `SNAPSHOT_VERSION` | 4 | session snapshot header |\n";
+        let findings = lint_files(&[session_src()], Some(good));
+        assert!(findings.is_empty(), "{findings:?}");
+
+        let stale = "| `SNAPSHOT_VERSION` | 3 | session snapshot header |\n";
+        let findings = lint_files(&[session_src()], Some(stale));
+        assert_eq!(rules_of(&findings), vec!["wire-version"], "{findings:?}");
+        assert!(findings[0].message.contains("quotes `SNAPSHOT_VERSION` = 3"));
+    }
+
+    #[test]
+    fn wire_version_requires_a_doc_quote() {
+        let findings = lint_files(&[session_src()], Some("no numbers here\n"));
+        assert_eq!(rules_of(&findings), vec!["wire-version"]);
+        assert!(findings[0].message.contains("never quotes"));
+    }
+
+    // -- wire-corpus ------------------------------------------------------
+
+    const ENUMS: &str = "\
+enum ShardCmd {
+    Round { slots: Vec<usize> },
+    Stop,
+}
+enum ShardMsg {
+    RoundDone { shard: usize },
+    // fsfl-lint: allow(wire-corpus): fixture-local, never crosses the wire
+    LocalOnly { x: u64 },
+}
+";
+
+    #[test]
+    fn wire_corpus_checks_variant_coverage_with_escape() {
+        let (enums, errs) = SourceFile::parse("src/coordinator/mod.rs", ENUMS);
+        assert!(errs.is_empty(), "{errs:?}");
+        let (corpus, _) = SourceFile::parse(
+            "tests/integration_transport.rs",
+            "fn corpus() { encode_round(); encode_stop(); encode_round_done(); }\n",
+        );
+        let findings = lint_files(&[enums, corpus], None);
+        assert!(findings.is_empty(), "{findings:?}");
+
+        // Drop round_done coverage: the variant surfaces, the escaped
+        // LocalOnly still does not.
+        let (enums, _) = SourceFile::parse("src/coordinator/mod.rs", ENUMS);
+        let (thin, _) = SourceFile::parse(
+            "tests/integration_transport.rs",
+            "fn corpus() { encode_round(); encode_stop(); }\n",
+        );
+        let findings = lint_files(&[enums, thin], None);
+        assert_eq!(rules_of(&findings), vec!["wire-corpus"], "{findings:?}");
+        assert!(findings[0].message.contains("RoundDone"));
+    }
+
+    #[test]
+    fn helpers_parse_what_the_rules_need() {
+        assert_eq!(camel_to_snake("RoundDone"), "round_done");
+        assert_eq!(camel_to_snake("Stop"), "stop");
+        assert_eq!(first_int("| 5 |"), Some(5));
+        assert_eq!(first_int(" = 0x16;"), Some(0x16));
+        assert_eq!(first_int("no digits"), None);
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("unsafety", "unsafe"));
+        assert_eq!(tag_idents("Some(&TAG_READY) => Ok(MsgTag::Ready),"), vec!["TAG_READY"]);
+    }
+}

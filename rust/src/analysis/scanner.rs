@@ -1,0 +1,503 @@
+//! String/comment-aware source scanner for the lint plane.
+//!
+//! The scanner splits every line of a Rust source file into a **code
+//! view** (string/char-literal interiors blanked, comments removed)
+//! and a **comment view** (the comment text alone), so rules can match
+//! tokens without tripping over occurrences inside literals or prose.
+//! On top of the split it derives three per-line facts the rules
+//! consume: whether the line sits inside a `#[cfg(test)]` item, whether
+//! it sits inside a `// fsfl-lint: hot` fence, and which rules a
+//! `// fsfl-lint: allow(rule): why` directive suppresses on it.
+//!
+//! The scanner is deliberately a line-oriented token pass, not a
+//! parser: it understands exactly as much Rust syntax as the rules
+//! need (nested block comments, raw/byte strings, char literals vs
+//! lifetimes, brace depth) and nothing more, matching the crate's
+//! no-dependency style.
+
+use super::Finding;
+
+/// One source line, split into rule-consumable views.
+#[derive(Debug)]
+pub struct Line {
+    /// Source text with comments removed and string/char-literal
+    /// interiors blanked (delimiters kept, so `""` still reads as an
+    /// expression boundary).
+    pub code: String,
+    /// Comment text on this line (line + block comments concatenated).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item's braces (or on the attribute).
+    pub in_test: bool,
+    /// Inside a `// fsfl-lint: hot` … `end-hot` fence.
+    pub hot: bool,
+    /// Rules suppressed on this line by an `allow(rule): why` directive
+    /// (on the same line, or carried from a directive-only line above).
+    pub allows: Vec<&'static str>,
+}
+
+impl Line {
+    /// True if `rule` is suppressed on this line.
+    pub fn allows(&self, rule: &str) -> bool {
+        self.allows.iter().any(|r| *r == rule)
+    }
+}
+
+/// A scanned source file: normalized path plus per-line views.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Crate-relative path with `/` separators (`src/net/wire.rs`,
+    /// `tests/integration_transport.rs`).
+    pub path: String,
+    /// Per-line views, index 0 = line 1.
+    pub lines: Vec<Line>,
+}
+
+/// Rule names an `allow(...)` directive may target. `directive`
+/// findings themselves are not suppressible — a broken escape hatch
+/// must never hide itself.
+pub const RULES: [&str; 7] = [
+    "clock",
+    "hot-alloc",
+    "panic",
+    "safety",
+    "wire-tags",
+    "wire-version",
+    "wire-corpus",
+];
+
+/// Lexer state carried across lines.
+enum State {
+    Code,
+    /// Block comment at the contained nesting depth (Rust nests them).
+    Block(u32),
+    /// String literal (`"…"` / `b"…"`); escapes handled inline.
+    Str,
+    /// Raw string with its `#` count (`r"…"`, `r##"…"##`, `br#"…"#`).
+    RawStr(usize),
+}
+
+impl SourceFile {
+    /// Scan `src`, returning the file plus any malformed-directive
+    /// findings (unknown directive, missing justification, unbalanced
+    /// fences). `path` should already be crate-relative.
+    pub fn parse(path: &str, src: &str) -> (SourceFile, Vec<Finding>) {
+        let mut lines = split_views(src);
+        mark_test_regions(&mut lines);
+        let findings = apply_directives(path, &mut lines);
+        (
+            SourceFile {
+                path: path.to_string(),
+                lines,
+            },
+            findings,
+        )
+    }
+
+    /// 1-based line iteration: `(line_no, line)`.
+    pub fn numbered(&self) -> impl Iterator<Item = (usize, &Line)> {
+        self.lines.iter().enumerate().map(|(i, l)| (i + 1, l))
+    }
+}
+
+/// Pass 1: split source into per-line code/comment views.
+fn split_views(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    // In the `line` comment state until end of line.
+    let mut line_comment = false;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied().unwrap_or('\0');
+        if c == '\n' {
+            line_comment = false;
+            out.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+                hot: false,
+                allows: Vec::new(),
+            });
+            i += 1;
+            continue;
+        }
+        if line_comment {
+            comment.push(c);
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && next == '/' {
+                    line_comment = true;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'b' && next == '"' && !ident_tail(&code) {
+                    code.push_str("b\"");
+                    state = State::Str;
+                    i += 2;
+                } else if c == 'r' && (next == '"' || next == '#') && !ident_tail(&code) {
+                    // Raw (or raw-byte via the `b` branch above missing —
+                    // `br` handled here too) string candidate.
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('r');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: 'x' or '\…' is a literal,
+                    // anything else ('a in generics) is a lifetime tick.
+                    if next == '\\' {
+                        // Escaped char literal: blank to the closing quote.
+                        code.push_str("' ");
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            i += 1;
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if c == '/' && next == '*' {
+                    state = State::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        comment.push_str("*/");
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    // Skip the escaped char unless it is the newline of a
+                    // `\`-continued string (the newline must still split
+                    // lines, or every number below it drifts).
+                    i += if next == '\n' { 1 } else { 2 };
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0;
+                    while h < hashes && chars.get(j) == Some(&'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        state = State::Code;
+                        i = j;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(Line {
+        code,
+        comment,
+        in_test: false,
+        hot: false,
+        allows: Vec::new(),
+    });
+    out
+}
+
+/// True if the code buffer ends mid-identifier (so a following `b` or
+/// `r` is part of a name like `attr` rather than a literal prefix).
+fn ident_tail(code: &str) -> bool {
+    code.chars()
+        .next_back()
+        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Pass 2: mark lines inside `#[cfg(test)]` items via brace depth. The
+/// attribute arms a pending flag consumed by the next `{` at the same
+/// nesting level (covering `mod tests`, test fns and test impls); a
+/// `;` before any brace disarms it (attribute on a braceless item).
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth = 0usize;
+    let mut pending = false;
+    let mut test_from: Option<usize> = None;
+    for line in lines.iter_mut() {
+        if test_from.is_some() {
+            line.in_test = true;
+        }
+        if test_from.is_none() && is_cfg_test_attr(&line.code) {
+            pending = true;
+            line.in_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending && test_from.is_none() {
+                        test_from = Some(depth);
+                        pending = false;
+                        line.in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if test_from == Some(depth) {
+                        test_from = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if pending && line.code.contains(';') && !line.code.contains('{') {
+            pending = false;
+        }
+    }
+}
+
+/// `#[cfg(test)]` detector, whitespace-tolerant.
+fn is_cfg_test_attr(code: &str) -> bool {
+    let squashed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+    squashed.contains("#[cfg(test)]")
+}
+
+/// Pass 3: interpret `fsfl-lint:` directives, marking hot fences and
+/// allow sets, and reporting malformed directives as findings.
+fn apply_directives(path: &str, lines: &mut [Line]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut hot = false;
+    let mut hot_start = 0usize;
+    // Allows from directive-only lines, pending their next code line.
+    let mut carry: Vec<&'static str> = Vec::new();
+    for (idx, line) in lines.iter_mut().enumerate() {
+        let no = idx + 1;
+        // A directive must be the whole comment (`// fsfl-lint: …`), so
+        // prose that merely *mentions* the directive syntax never arms
+        // one.
+        let body = line
+            .comment
+            .trim()
+            .strip_prefix("fsfl-lint:")
+            .map(|rest| rest.trim().to_string());
+        let mut this: Vec<&'static str> = Vec::new();
+        if let Some(body) = body {
+            match body.as_str() {
+                "hot" => {
+                    if hot {
+                        findings.push(Finding::new(
+                            path,
+                            no,
+                            "directive",
+                            "nested `fsfl-lint: hot` fence (close the previous one first)",
+                        ));
+                    }
+                    hot = true;
+                    hot_start = no;
+                }
+                "end-hot" => {
+                    if !hot {
+                        findings.push(Finding::new(
+                            path,
+                            no,
+                            "directive",
+                            "`fsfl-lint: end-hot` without an open fence",
+                        ));
+                    }
+                    hot = false;
+                }
+                other => match parse_allow(other) {
+                    Some((Some(rule), true)) => this.push(rule),
+                    Some((Some(rule), false)) => findings.push(Finding::new(
+                        path,
+                        no,
+                        "directive",
+                        format!("allow({rule}) needs a justification: `allow({rule}): why`"),
+                    )),
+                    Some((None, _)) => findings.push(Finding::new(
+                        path,
+                        no,
+                        "directive",
+                        format!("allow() of unknown rule in `{other}`"),
+                    )),
+                    None => findings.push(Finding::new(
+                        path,
+                        no,
+                        "directive",
+                        format!("unknown directive `fsfl-lint: {other}`"),
+                    )),
+                },
+            }
+        }
+        line.hot = hot;
+        let has_code = !line.code.trim().is_empty();
+        if !this.is_empty() {
+            if has_code {
+                line.allows.append(&mut this);
+            } else {
+                carry.append(&mut this);
+            }
+        } else if has_code {
+            line.allows.append(&mut carry);
+        }
+    }
+    if hot {
+        findings.push(Finding::new(
+            path,
+            hot_start,
+            "directive",
+            "unclosed `fsfl-lint: hot` fence",
+        ));
+    }
+    findings
+}
+
+/// Parse `allow(rule): why`. Returns `Some((rule, has_justification))`
+/// with `rule = None` for an unknown rule name, or `None` if the text
+/// is not an allow directive at all.
+fn parse_allow(body: &str) -> Option<(Option<&'static str>, bool)> {
+    let rest = body.strip_prefix("allow(")?;
+    let (name, tail) = rest.split_once(')')?;
+    let rule = RULES.iter().find(|r| **r == name.trim()).copied();
+    let justified = tail
+        .trim_start()
+        .strip_prefix(':')
+        .is_some_and(|why| !why.trim().is_empty());
+    Some((rule, justified))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> SourceFile {
+        SourceFile::parse("src/fixture.rs", src).0
+    }
+
+    #[test]
+    fn strings_and_comments_leave_the_code_view() {
+        let f = scan("let x = \"Instant::now()\"; // Instant::now()\nInstant::now();\n");
+        assert!(!f.lines[0].code.contains("Instant::now"));
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert!(f.lines[1].code.contains("Instant::now"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_blank_correctly() {
+        let f = scan("let s = r#\"vec! \"# ; let c = '{'; let l: &'a str = s;\n");
+        let code = &f.lines[0].code;
+        assert!(!code.contains("vec!"), "raw string leaked: {code}");
+        assert!(!code.contains('{'), "char literal leaked: {code}");
+        assert!(code.contains("&'a str"), "lifetime mangled: {code}");
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        let f = scan("let s = \"a\\\nb\";\nsecond_line();\n");
+        assert!(f.lines[1].code.contains('b'));
+        assert!(f.lines[2].code.contains("second_line"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_the_right_depth() {
+        let f = scan("/* outer /* inner */ still comment */ code();\n");
+        assert!(f.lines[0].code.contains("code()"));
+        assert!(!f.lines[0].code.contains("outer"));
+    }
+
+    #[test]
+    fn cfg_test_region_covers_mod_body_only() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn hot_fence_and_allow_directives_mark_lines() {
+        let src = "\
+// fsfl-lint: hot
+fn hot_fn() {}
+// fsfl-lint: end-hot
+// fsfl-lint: allow(clock): fixture justification
+let t = Instant::now();
+";
+        let (f, errs) = SourceFile::parse("src/fixture.rs", src);
+        assert!(errs.is_empty(), "{errs:?}");
+        assert!(f.lines[1].hot);
+        assert!(!f.lines[4].hot);
+        assert!(f.lines[4].allows("clock"));
+    }
+
+    #[test]
+    fn malformed_directives_are_findings() {
+        let src = "\
+// fsfl-lint: allow(clock)
+// fsfl-lint: allow(nonsense): why
+// fsfl-lint: frobnicate
+// fsfl-lint: end-hot
+// fsfl-lint: hot
+";
+        let (_, errs) = SourceFile::parse("src/fixture.rs", src);
+        let rules: Vec<_> = errs.iter().map(|e| e.line).collect();
+        assert_eq!(rules, vec![1, 2, 3, 4, 5], "{errs:?}");
+        assert!(errs.iter().all(|e| e.rule == "directive"));
+    }
+}

@@ -11,7 +11,9 @@
 //!   emits `BENCH_fl_round.json` so future PRs can diff rounds/sec,
 //!   encode µs/client and allocation counts against this one.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::supervise::{Clock, MonotonicClock};
 
 /// Timing summary of one benchmark.
 pub struct BenchResult {
@@ -46,16 +48,30 @@ impl BenchResult {
     }
 }
 
-/// Run `f` for `warmup` untimed + `iters` timed iterations.
-pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+/// Run `f` for `warmup` untimed + `iters` timed iterations (wall time
+/// from a fresh [`MonotonicClock`]; see [`bench_with`] to inject one).
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -> BenchResult {
+    bench_with(&MonotonicClock::new(), name, warmup, iters, f)
+}
+
+/// [`bench`] against an explicit [`Clock`] — the timing reads go
+/// through the supervise plane like every other clock consumer, so a
+/// scripted clock can exercise the harness without wall time.
+pub fn bench_with<R>(
+    clock: &dyn Clock,
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> R,
+) -> BenchResult {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = clock.now();
         std::hint::black_box(f());
-        samples.push(t0.elapsed());
+        samples.push(clock.now().saturating_sub(t0));
     }
     samples.sort();
     let mean = samples.iter().sum::<Duration>() / iters as u32;
@@ -71,11 +87,15 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 /// Auto-calibrating variant: picks an iteration count so the whole
 /// measurement takes roughly `budget`.
 pub fn bench_auto<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> BenchResult {
-    let t0 = Instant::now();
+    let clock = MonotonicClock::new();
+    let t0 = clock.now();
     std::hint::black_box(f());
-    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let one = clock
+        .now()
+        .saturating_sub(t0)
+        .max(Duration::from_nanos(100));
     let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
-    bench(name, iters.min(10) / 3 + 1, iters, f)
+    bench_with(&clock, name, iters.min(10) / 3 + 1, iters, f)
 }
 
 /// True when the bench binary was invoked in smoke mode

@@ -122,6 +122,7 @@ pub fn encode_update_opts(
 /// Allocation-free core: encode into `dst` and the dequantized view into
 /// `deq` (both cleared first; `deq` must share `delta`'s manifest).
 /// Produces bitstreams byte-identical to [`encode_update_opts`].
+// fsfl-lint: hot
 pub fn encode_update_into(
     delta: &Delta,
     indices: &[usize],
@@ -192,6 +193,7 @@ pub fn encode_update_into(
     stats.bytes = dst.len();
     stats
 }
+// fsfl-lint: end-hot
 
 /// Decode a bitstream produced by [`encode_update`].
 pub fn decode_update(bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
@@ -207,6 +209,7 @@ pub fn decode_update_into(bytes: &[u8], out: &mut Delta) -> Result<()> {
 }
 
 /// Allocation-free core of [`decode_update`].
+// fsfl-lint: hot
 pub fn decode_update_with(bytes: &[u8], out: &mut Delta, scratch: &mut DecodeScratch) -> Result<()> {
     let manifest = out.manifest.clone();
     out.clear();
@@ -267,6 +270,7 @@ pub fn decode_update_with(bytes: &[u8], out: &mut Delta, scratch: &mut DecodeScr
     }
     Ok(())
 }
+// fsfl-lint: end-hot
 
 /// Bytes an *uncompressed* f32 transmission of these tensors would take
 /// (the paper's plain-FedAvg accounting in Table 2).

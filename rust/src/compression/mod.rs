@@ -143,6 +143,7 @@ impl UpdateCodec {
     /// codec.decode_into(&wire, &mut decoded, &mut scratch).unwrap();
     /// assert_eq!(decoded, deq);
     /// ```
+    // fsfl-lint: hot
     pub fn encode_into(
         &self,
         raw: &mut Delta,
@@ -183,6 +184,7 @@ impl UpdateCodec {
         let step_fn = move |spec: &crate::model::TensorSpec| quant.step_for(spec);
         cabac::encode_update_into(raw, indices, &step_fn, true, enc, deq, dst)
     }
+    // fsfl-lint: end-hot
 
     /// Decode a bitstream into a fresh [`Delta`].
     pub fn decode(&self, bytes: &[u8], manifest: &Arc<Manifest>) -> Result<Delta> {
@@ -191,6 +193,7 @@ impl UpdateCodec {
 
     /// Allocation-free decode into a recycled `Delta` (cleared first).
     /// See [`UpdateCodec::encode_into`] for a round-trip example.
+    // fsfl-lint: hot
     pub fn decode_into(
         &self,
         bytes: &[u8],
@@ -199,6 +202,7 @@ impl UpdateCodec {
     ) -> Result<()> {
         cabac::decode_update_with(bytes, out, &mut scratch.decode)
     }
+    // fsfl-lint: end-hot
 }
 
 #[cfg(test)]

@@ -191,6 +191,7 @@ pub fn apply_topk(t: &mut [f32], rate: f32) -> usize {
 
 /// Apply a [`SparsifyMode`] to every update tensor in `indices` using
 /// recycled scratch buffers. Returns total elements zeroed.
+// fsfl-lint: hot
 pub fn sparsify_with(
     delta: &mut Delta,
     indices: &[usize],
@@ -228,6 +229,7 @@ pub fn sparsify_with(
     }
     zeroed
 }
+// fsfl-lint: end-hot
 
 /// Apply a [`SparsifyMode`] to every update tensor in `indices`.
 /// Returns total elements zeroed.

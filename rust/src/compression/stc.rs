@@ -28,6 +28,7 @@ pub fn ternarize(delta: &mut Delta, indices: &[usize], rate: f32) -> Vec<f32> {
 /// magnitude buffer, `mus` the per-tensor μ output (resized + zeroed
 /// here). μ is accumulated in a single pass over the survivors instead
 /// of staging them in a temporary vector.
+// fsfl-lint: hot
 pub fn ternarize_into(
     delta: &mut Delta,
     indices: &[usize],
@@ -69,6 +70,7 @@ pub fn ternarize_into(
         }
     }
 }
+// fsfl-lint: end-hot
 
 #[cfg(test)]
 mod tests {

@@ -72,7 +72,7 @@ use std::net::TcpListener;
 use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -357,6 +357,7 @@ enum ShardMsg {
     /// A wire connection closed or corrupted (reader-local; `conn` is
     /// the connection generation, so stale reports from replaced shards
     /// are ignored).
+    // fsfl-lint: allow(wire-corpus): coordinator-local failure signal, never serialized onto the wire
     ConnDown {
         conn: u64,
         shard: usize,
@@ -723,6 +724,9 @@ struct WireAdmit<'a> {
     /// Telemetry handle; attached endpoints get frame-level spans and
     /// register their counters with the live registry.
     obs: Obs,
+    /// Supervision clock driving the join deadline in [`accept_one`]
+    /// (the session's clock, so scripted tests control join expiry).
+    clock: Arc<dyn Clock>,
 }
 
 impl<'a> WireAdmit<'a> {
@@ -731,6 +735,7 @@ impl<'a> WireAdmit<'a> {
         compute: &ComputeSpec,
         msg_tx: mpsc::Sender<ShardMsg>,
         mode: Option<WireMode<'a>>,
+        clock: Arc<dyn Clock>,
     ) -> Self {
         Self {
             cfg: cfg.clone(),
@@ -748,6 +753,7 @@ impl<'a> WireAdmit<'a> {
             next_conn: 0,
             chaos: Vec::new(),
             obs: None,
+            clock,
         }
     }
 
@@ -860,6 +866,7 @@ impl Admit for WireAdmit<'_> {
             Some(WireMode::Accept { .. }) => Plan::Accept,
         };
         let join_timeout = self.cfg.policy.join_timeout;
+        let clock = self.clock.clone();
         let chaos = take_chaos(&mut self.chaos, shard);
         let conn: Box<dyn Transport> = match plan {
             Plan::None => {
@@ -891,7 +898,7 @@ impl Admit for WireAdmit<'_> {
                 }));
                 let stream = match &self.mode {
                     Some(WireMode::Tcp { listener }) => {
-                        accept_one(listener, join_timeout, || Ok(()))?
+                        accept_one(listener, join_timeout, &*clock, || Ok(()))?
                     }
                     _ => unreachable!("plan was Tcp"),
                 };
@@ -900,7 +907,7 @@ impl Admit for WireAdmit<'_> {
             Plan::Accept => {
                 let stream = match &mut self.mode {
                     Some(WireMode::Accept { listener, liveness }) => {
-                        accept_one(listener, join_timeout, &mut **liveness)?
+                        accept_one(listener, join_timeout, &*clock, &mut **liveness)?
                     }
                     _ => unreachable!("plan was Accept"),
                 };
@@ -1228,7 +1235,7 @@ fn run_wire_sharded(
         },
         TransportKind::Mpsc => unreachable!("mpsc is not a wire transport"),
     };
-    let mut admit = WireAdmit::new(cfg, compute, msg_tx, Some(mode));
+    let mut admit = WireAdmit::new(cfg, compute, msg_tx, Some(mode), session.clock.clone());
     admit.chaos = std::mem::take(&mut session.chaos);
     admit.obs = session.obs.clone();
     let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
@@ -1274,16 +1281,20 @@ fn teardown_wire(
 
 /// Accept one shard connection with a deadline, polling `liveness`
 /// while waiting so a dead worker fails the join fast instead of
-/// hanging the accept loop.
+/// hanging the accept loop. The deadline reads the supervision
+/// [`Clock`] (so scripted clocks control join expiry like every other
+/// lease); the 10 ms sleep is a wall wakeup only, never a timing
+/// source — same split as the coordinator's poll loops.
 fn accept_one(
     listener: &TcpListener,
     timeout: Duration,
+    clock: &dyn Clock,
     mut liveness: impl FnMut() -> Result<()>,
 ) -> Result<std::net::TcpStream> {
     listener
         .set_nonblocking(true)
         .map_err(|e| anyhow!("listener nonblocking: {e}"))?;
-    let deadline = Instant::now() + timeout;
+    let deadline = clock.now() + timeout;
     loop {
         match listener.accept() {
             Ok((stream, _)) => {
@@ -1294,7 +1305,8 @@ fn accept_one(
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 liveness()?;
-                if Instant::now() > deadline {
+                clock.idle_tick();
+                if clock.now() > deadline {
                     return Err(anyhow!(
                         "timed out after {timeout:?} waiting for a shard worker to join"
                     ));
@@ -2044,7 +2056,8 @@ fn coordinate(
             }
         }
     }
-    let init = init.expect("startup barrier passed without init");
+    let init =
+        init.ok_or_else(|| anyhow!("startup barrier passed without an init model (no READY)"))?;
 
     // Passive telemetry handle: every touch below is gated on the
     // option, so telemetry-off runs pay one branch per site and
@@ -2821,9 +2834,11 @@ fn coordinate(
             }
         }
 
-        on_event(&Event::RoundDone(
-            log.rounds.last().expect("round just pushed").clone(),
-        ));
+        let done = log
+            .rounds
+            .last()
+            .ok_or_else(|| anyhow!("round log empty after recording round {t}"))?;
+        on_event(&Event::RoundDone(done.clone()));
 
         if let (Some(ob), Some(t0)) = (&obs, round_t0) {
             ob.span(track::COORDINATOR, "round", t0, -1, -1);
@@ -3330,6 +3345,7 @@ impl ShardBody for SynthShard {
     fn init_params(&self) -> ParamSet {
         let m = self.plane.manifest.clone();
         let tensors = m.tensors.iter().map(|t| vec![0.0f32; t.numel()]).collect();
+        // fsfl-lint: allow(panic): zeros are built from the manifest itself, so the shape check cannot fail; the trait returns a bare ParamSet
         ParamSet::new(m, tensors).expect("zero params match their own manifest")
     }
 
@@ -3821,7 +3837,8 @@ fn run_aggregator(
             t => return Err(anyhow!("unexpected {t:?} from subtree child {j} during startup")),
         }
     }
-    let init_params = init_params.expect("children >= 1");
+    let init_params =
+        init_params.ok_or_else(|| anyhow!("aggregator subtree produced no READY (children == 0?)"))?;
     let manifest = init_params.manifest.clone();
     wire::encode_ready(&mut out, a, &init_params);
     up_sink
@@ -4170,7 +4187,8 @@ pub fn serve_session_observed(
                 .map_err(|e| anyhow!("cloning the shard listener for admission: {e}"))?,
             liveness: Box::new(liveness),
         };
-        let mut admit = WireAdmit::new(&cfg, &compute, msg_tx, Some(accept));
+        let mut admit =
+            WireAdmit::new(&cfg, &compute, msg_tx, Some(accept), session.clock.clone());
         admit.obs = session.obs.clone();
         let mut txs: Vec<ShardTx> = Vec::with_capacity(shards);
         let mut active: Vec<u64> = Vec::with_capacity(shards);

@@ -10,7 +10,7 @@
 //! scale-selection buffers) is persistent: a steady-state round clones
 //! no `ParamSet` and allocates nothing on this path.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -22,6 +22,7 @@ use crate::fl::schedule::LrSchedule;
 use crate::model::params::Delta;
 use crate::model::{Group, ParamSet};
 use crate::runtime::{ModelRuntime, OptState};
+use crate::supervise::{Clock, MonotonicClock};
 
 /// Snapshot of one optimizer state (Adam moments + step counter) —
 /// value-only, shapes validated against the live [`OptState`] on
@@ -136,6 +137,10 @@ pub struct Client {
     baseline_scales: Vec<Vec<f32>>,
     best_scales: Vec<Vec<f32>>,
     rng: XorShiftRng,
+    /// Time source for the per-stage `train_ms`/`scale_ms` timings
+    /// (wall by default; swap via [`Client::set_clock`] to make the
+    /// timing fields deterministic under a scripted clock).
+    clock: Arc<dyn Clock>,
 }
 
 /// Snapshot `params`' scale tensors into reusable per-slot buffers.
@@ -177,7 +182,15 @@ impl Client {
             baseline_scales: Vec::new(),
             best_scales: Vec::new(),
             rng: XorShiftRng::new(seed ^ 0xC11E57),
+            clock: Arc::new(MonotonicClock::new()),
         }
+    }
+
+    /// Replace the timing clock (scripted clocks make the cosmetic
+    /// `train_ms`/`scale_ms` lane fields deterministic; training math
+    /// never reads it).
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.clock = clock;
     }
 
     /// Apply the server broadcast (Algorithm 1 lines 7–8).
@@ -215,7 +228,7 @@ impl Client {
         cfg: &ExperimentConfig,
         lane: &mut RoundLane,
     ) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         self.work.copy_from(&self.global);
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
@@ -233,7 +246,7 @@ impl Client {
                 loss_n += 1;
             }
         }
-        lane.train_ms = t0.elapsed().as_millis();
+        lane.train_ms = self.clock.now().saturating_sub(t0).as_millis();
         lane.train_loss = if loss_n == 0 {
             0.0
         } else {
@@ -271,7 +284,7 @@ impl Client {
             return Ok(());
         }
 
-        let t1 = Instant::now();
+        let t1 = self.clock.now();
         // Ŵ = W^(t) + Δ̂ (line 11): the base for scale training.
         self.hat.copy_from(&self.global);
         self.hat.add_delta(&lane.update);
@@ -327,7 +340,7 @@ impl Client {
             }
         }
         lane.scale_accepted = accepted;
-        lane.scale_ms = t1.elapsed().as_millis();
+        lane.scale_ms = self.clock.now().saturating_sub(t1).as_millis();
         Ok(())
     }
 

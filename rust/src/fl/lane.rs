@@ -139,6 +139,7 @@ impl RoundLane {
     /// Codec stage A (parallel, after local training): sparsify +
     /// quantize + DeepCABAC-encode the W update, or account the raw f32
     /// bytes for plain FedAvg. Pure function of lane state + `pcfg`.
+    // fsfl-lint: hot
     pub fn encode_upstream(&mut self, pcfg: &ProtocolConfig, update_idx: &[usize]) {
         self.stream_w.clear();
         self.stream_s.clear();
@@ -244,6 +245,7 @@ impl RoundLane {
         }
         Ok(())
     }
+    // fsfl-lint: end-hot
 
     /// The lane's wire image: exactly what a shard must transmit for the
     /// coordinator to reconstruct this round's contribution (see

@@ -205,6 +205,7 @@ pub fn run_round_observed<C: ComputePlane>(
 }
 
 /// PR 1's staged schedule: barrier between every stage.
+// fsfl-lint: hot
 #[allow(clippy::too_many_arguments)]
 fn run_staged<C: ComputePlane>(
     pool: &WorkerPool,
@@ -263,6 +264,7 @@ fn run_staged<C: ComputePlane>(
     });
     Ok(())
 }
+// fsfl-lint: end-hot
 
 /// The software-pipelined schedule: lanes move into owned codec jobs on
 /// the pool while the calling thread keeps training/scaling later slots.

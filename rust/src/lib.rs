@@ -27,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod bench;
 pub mod benchkit;
 pub mod cli;

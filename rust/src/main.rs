@@ -14,6 +14,7 @@ use fsfl::fl::{ExperimentConfig, Protocol, ScheduleKind, SessionConfig, Transpor
 use fsfl::harness;
 use fsfl::runtime::Optimizer;
 use fsfl::session::SessionStore;
+use fsfl::supervise::{Clock, MonotonicClock};
 
 const USAGE: &str = "\
 fsfl — Filter-Scaled Sparse Federated Learning (paper reproduction)
@@ -77,6 +78,11 @@ COMMANDS:
            bench-out, --bin PATH to benchmark another fsfl build;
            `scale` is the 100k-client paging cell and is not part of
            `all`)
+  lint     invariant lint over the crate's sources (--root DIR, default
+           `.`; accepts the repo root or the rust/ crate dir; --json for
+           machine-readable findings). Enforces clock discipline,
+           hot-path allocation fences, wire-protocol consistency, panic
+           hygiene and unsafe SAFETY comments; exits 1 on any finding
   session  inspect DIR — dump snapshot metadata (version, round, shard
            assignment, client count, params checksum, size, valid/torn)
            without decoding parameters
@@ -210,15 +216,20 @@ impl ObsSetup {
 /// observes each round the moment it completes — that's what lets its
 /// chaos leg SIGKILL this process provably mid-run).
 fn round_printer(emit: bool) -> impl FnMut(&coordinator::Event) {
-    let mut last = std::time::Instant::now();
+    // Time through the Clock trait, not Instant::now(): the inter-round
+    // gap is presentation-only wall time, but every read still goes
+    // through supervise so the clock-discipline lint holds crate-wide.
+    let clock = MonotonicClock::new();
+    let mut last = clock.now();
     move |ev: &coordinator::Event| {
         if let coordinator::Event::RoundDone(m) = ev {
             if emit {
+                let now = clock.now();
                 println!(
                     "{}",
-                    fsfl::bench::line_round(m, last.elapsed().as_secs_f64() * 1e3)
+                    fsfl::bench::line_round(m, now.saturating_sub(last).as_secs_f64() * 1e3)
                 );
-                last = std::time::Instant::now();
+                last = now;
             }
             coordinator::print_round(m);
         }
@@ -770,6 +781,31 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// `fsfl lint` — run the static-analysis plane over the crate sources
+/// and exit 1 if any invariant is violated (see `fsfl::analysis`).
+fn cmd_lint(flags: &Flags) -> Result<()> {
+    let root = std::path::PathBuf::from(flags.str_or("root", "."));
+    let json = flags.flag("json");
+    flags.reject_unknown()?;
+    let report = fsfl::analysis::run_lint(&root)?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "fsfl lint: {} file(s) scanned, {} finding(s)",
+            report.files_scanned,
+            report.findings.len()
+        );
+    }
+    if !report.clean() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().cloned() else {
@@ -816,7 +852,7 @@ fn main() -> Result<()> {
     // results) inside cmd_bench.
     if !matches!(
         cmd.as_str(),
-        "shard-worker" | "--shard-worker" | "aggregator" | "bench"
+        "shard-worker" | "--shard-worker" | "aggregator" | "bench" | "lint"
     ) {
         std::fs::create_dir_all(&out).ok();
     }
@@ -825,6 +861,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&flags, &artifacts, &out)?,
         "serve" => cmd_serve(&flags, &artifacts, &out)?,
         "bench" => cmd_bench(&flags)?,
+        "lint" => cmd_lint(&flags)?,
         "shard-worker" | "--shard-worker" => {
             let addr = flags
                 .str_opt("connect")

@@ -84,6 +84,11 @@ pub struct ModelRuntime<'rt> {
 fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     // Single-copy construction (perf pass): vec1+reshape would copy the
     // tensor twice; create_from_shape_and_untyped_data copies once.
+    // SAFETY: reinterpreting `data`'s f32s as their raw bytes — same
+    // allocation and lifetime (the slice borrows `data` and dies before
+    // it), length from size_of_val so it spans exactly the f32s, and
+    // u8's alignment (1) is always satisfied. Every f32 bit pattern is
+    // a valid u8 sequence, so no uninitialized or invalid bytes.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };

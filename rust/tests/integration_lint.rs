@@ -1,0 +1,179 @@
+//! `fsfl lint` end-to-end: the analysis plane run against real
+//! directory trees.
+//!
+//! Two halves:
+//!
+//! 1. **Round-trip on a synthetic crate** — a temp-dir fixture with one
+//!    seeded violation per rule must produce exactly those findings at
+//!    exactly those `file:line` coordinates (and a clean fixture must
+//!    produce none), pinning the scanner's line accounting through the
+//!    full `run_lint` pipeline: walker → scanner → rules → sort.
+//! 2. **The repository itself** — `run_lint` over this crate must come
+//!    back clean, so `cargo test` enforces every source invariant even
+//!    where CI's dedicated `fsfl lint` step is not wired in.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use fsfl::analysis::run_lint;
+
+/// Fresh fixture directory under the system temp dir. Seeded by case
+/// name + pid so parallel test binaries never collide; recreated from
+/// scratch each run.
+fn fixture_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fsfl-lint-it-{}-{case}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(dir.join("src")).expect("create fixture dir");
+    dir
+}
+
+fn write(root: &Path, rel: &str, content: &str) {
+    let path = root.join(rel);
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent).expect("create fixture subdir");
+    }
+    fs::write(path, content).expect("write fixture file");
+}
+
+#[test]
+fn clean_fixture_tree_produces_no_findings() {
+    let root = fixture_dir("clean");
+    write(
+        &root,
+        "src/lib.rs",
+        "//! Clean fixture crate.\n\
+         \n\
+         /// Wrapping add.\n\
+         pub fn add(a: u64, b: u64) -> u64 {\n\
+             a.wrapping_add(b)\n\
+         }\n",
+    );
+    let report = run_lint(&root).expect("lint run");
+    assert_eq!(report.files_scanned, 1);
+    assert!(
+        report.clean(),
+        "clean fixture produced findings: {:?}",
+        report.findings
+    );
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn seeded_violations_surface_at_exact_file_line_coordinates() {
+    let root = fixture_dir("seeded");
+    // line 5: raw clock read; line 9: same read under a justified allow
+    write(
+        &root,
+        "src/timer.rs",
+        "//! Fixture: clock discipline.\n\
+         use std::time::Instant;\n\
+         \n\
+         pub fn bad() -> Instant {\n\
+             Instant::now()\n\
+         }\n\
+         \n\
+         pub fn good() -> Instant {\n\
+             Instant::now() // fsfl-lint: allow(clock): fixture-sanctioned read\n\
+         }\n",
+    );
+    // line 3: non-test unwrap in net code; line 12: test-only unwrap (allowed)
+    write(
+        &root,
+        "src/net/conn.rs",
+        "//! Fixture: panic hygiene.\n\
+         pub fn parse(x: Option<u8>) -> u8 {\n\
+             x.unwrap()\n\
+         }\n\
+         \n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             #[test]\n\
+             fn ok() {\n\
+                 assert_eq!(super::parse(Some(3)), 3);\n\
+                 let _ = None::<u8>.unwrap_or(0);\n\
+                 let _ = Some(1u8).unwrap();\n\
+             }\n\
+         }\n",
+    );
+    // line 4: allocation inside a hot fence; line 10: unsafe without SAFETY
+    write(
+        &root,
+        "src/codec.rs",
+        "//! Fixture: hot fence + safety.\n\
+         // fsfl-lint: hot\n\
+         pub fn hot_path(out: &mut Vec<u8>) {\n\
+             let staged = vec![0u8; 4];\n\
+             out.extend_from_slice(&staged);\n\
+         }\n\
+         // fsfl-lint: end-hot\n\
+         \n\
+         pub fn reinterpret(x: &u32) -> u32 {\n\
+             unsafe { *(x as *const u32) }\n\
+         }\n",
+    );
+    // line 2: allow() without the mandatory justification
+    write(
+        &root,
+        "src/meta.rs",
+        "//! Fixture: directive hygiene.\n\
+         // fsfl-lint: allow(clock)\n\
+         pub fn noop() {}\n",
+    );
+
+    let report = run_lint(&root).expect("lint run");
+    assert_eq!(report.files_scanned, 4);
+    let got: Vec<(&str, usize, &str)> = report
+        .findings
+        .iter()
+        .map(|f| (f.file.as_str(), f.line, f.rule))
+        .collect();
+    assert_eq!(
+        got,
+        vec![
+            ("src/codec.rs", 4, "hot-alloc"),
+            ("src/codec.rs", 10, "safety"),
+            ("src/meta.rs", 2, "directive"),
+            ("src/net/conn.rs", 3, "panic"),
+            ("src/timer.rs", 5, "clock"),
+        ],
+        "full findings: {:#?}",
+        report.findings
+    );
+    // every finding renders as `file:line: [rule] message`
+    for f in &report.findings {
+        let line = f.to_string();
+        assert!(
+            line.starts_with(&format!("{}:{}: [{}] ", f.file, f.line, f.rule)),
+            "malformed finding line: {line}"
+        );
+    }
+    // and the JSON view carries the same coordinates
+    let json = report.to_json();
+    assert!(json.starts_with("{\"files_scanned\":4,\"findings\":["));
+    assert!(
+        json.contains("{\"file\":\"src/timer.rs\",\"line\":5,\"rule\":\"clock\""),
+        "json missing the clock finding: {json}"
+    );
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn repository_tip_lints_clean() {
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint(crate_dir).expect("lint run over the repository");
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned ({}) — walker regression?",
+        report.files_scanned
+    );
+    assert!(
+        report.clean(),
+        "lint findings on the repository tip:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

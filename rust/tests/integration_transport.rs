@@ -29,12 +29,13 @@ use std::time::{Duration, Instant};
 
 use common::*;
 
+use fsfl::compression::{CodecScratch, UpdateCodec};
 use fsfl::coordinator::{self, ComputeSpec};
 use fsfl::data::{TaskKind, XorShiftRng};
 use fsfl::exec::WorkerPool;
-use fsfl::fl::{ExperimentConfig, Protocol, RoundLane, TransportKind};
-use fsfl::metrics::{RunLog, WireStats};
-use fsfl::model::{Manifest, ParamSet};
+use fsfl::fl::{EvalReport, ExperimentConfig, Protocol, RoundLane, TransportKind};
+use fsfl::metrics::{MsgKind, RunLog, ScaleStats, WireStats};
+use fsfl::model::{Delta, Manifest, ParamSet};
 use fsfl::net::{frame, wire, FrameSink, FrameSource, TcpTransport, Transport};
 
 // ---------------------------------------------------------------------------
@@ -462,6 +463,201 @@ fn resize_bearing_state_and_init_frames_round_trip_and_reject_truncation() {
     }
 }
 
+#[test]
+fn apply_round_trips_dense_and_stream_formats() {
+    let m = manifest();
+    let mut rng = XorShiftRng::new(0xA11CE);
+    let mut broadcast = Delta::zeros(m.clone());
+    for t in broadcast.tensors.iter_mut() {
+        for x in t.iter_mut() {
+            *x = rng.normal();
+        }
+    }
+    let mut scratch = CodecScratch::default();
+
+    // dense format: raw f32 broadcast, bit-exact round-trip
+    let mut buf = Vec::new();
+    wire::encode_apply(&mut buf, &broadcast, true);
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::Apply);
+    let mut out = Delta::zeros(m.clone());
+    let eval = wire::decode_apply_into(&buf, &mut out, None, &mut scratch).unwrap();
+    assert!(eval, "eval flag lost");
+    assert_eq!(out, broadcast, "dense APPLY must round-trip bit-exact");
+    for cut in 1..buf.len() {
+        assert!(
+            wire::decode_apply_into(&buf[..cut], &mut out, None, &mut scratch).is_err(),
+            "truncated dense APPLY at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+
+    // stream format: the server encodes the broadcast once; every shard
+    // decodes the identical bytes through its downstream codec copy
+    let codec = UpdateCodec::fsfl(1.0, 1.0);
+    let indices: Vec<usize> = (0..m.tensors.len()).collect();
+    let mut raw = broadcast.clone();
+    let mut deq = Delta::zeros(m.clone());
+    let mut stream = Vec::new();
+    codec.encode_into(&mut raw, &indices, &mut scratch, &mut deq, &mut stream);
+    wire::encode_apply_stream(&mut buf, &stream, false);
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::Apply);
+    let eval = wire::decode_apply_into(&buf, &mut out, Some(&codec), &mut scratch).unwrap();
+    assert!(!eval, "eval flag invented");
+    assert_eq!(out, deq, "stream APPLY must decode to the server's dequantized Δ̂");
+
+    // a stream payload without a configured downstream codec is a
+    // protocol error, not a panic
+    assert!(
+        wire::decode_apply_into(&buf, &mut out, None, &mut scratch).is_err(),
+        "stream APPLY without a downstream codec accepted"
+    );
+
+    // unknown format byte (after tag + eval flag) is rejected
+    let mut bad = buf.clone();
+    bad[2] = 9;
+    assert!(
+        wire::decode_apply_into(&bad, &mut out, Some(&codec), &mut scratch).is_err(),
+        "unknown APPLY format byte accepted"
+    );
+}
+
+#[test]
+fn stop_eval_and_failed_round_trip_and_reject_truncation() {
+    // STOP is a bare tag
+    let mut buf = Vec::new();
+    wire::encode_stop(&mut buf);
+    assert_eq!(wire::cmd_tag(&buf).unwrap(), wire::CmdTag::Stop);
+    assert_eq!(buf.len(), 1, "STOP carries no payload");
+
+    // EVAL: central-model report plus per-layer scale statistics
+    let report = EvalReport {
+        loss: 0.25,
+        accuracy: 0.875,
+        f1: 0.8125,
+    };
+    let stats = vec![
+        ScaleStats {
+            layer: "conv1".into(),
+            min: -0.5,
+            q25: 0.1,
+            median: 0.5,
+            q75: 0.9,
+            max: 1.5,
+            mean: 0.55,
+            suppressed: 0.125,
+        },
+        ScaleStats {
+            layer: "fc".into(),
+            min: 0.0,
+            q25: 0.0,
+            median: 0.0,
+            q75: 0.0,
+            max: 0.0,
+            mean: 0.0,
+            suppressed: 1.0,
+        },
+    ];
+    wire::encode_eval(&mut buf, &report, &stats);
+    assert_eq!(wire::msg_tag(&buf).unwrap(), wire::MsgTag::Eval);
+    let (back, back_stats) = wire::decode_eval(&buf).unwrap();
+    assert_eq!(
+        (back.loss, back.accuracy, back.f1),
+        (report.loss, report.accuracy, report.f1),
+        "EVAL report diverged"
+    );
+    assert_eq!(back_stats, stats, "scale stats diverged");
+    for cut in 1..buf.len() {
+        assert!(
+            wire::decode_eval(&buf[..cut]).is_err(),
+            "truncated EVAL at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+
+    // FAILED: shard index + error text (non-ASCII must survive)
+    let text = "shard 3: µ-law explosion";
+    wire::encode_failed(&mut buf, 3, text);
+    assert_eq!(wire::msg_tag(&buf).unwrap(), wire::MsgTag::Failed);
+    assert_eq!(wire::decode_failed(&buf).unwrap(), (3, text.to_string()));
+    for cut in 1..buf.len() {
+        assert!(
+            wire::decode_failed(&buf[..cut]).is_err(),
+            "truncated FAILED at {cut}/{} accepted",
+            buf.len()
+        );
+    }
+
+    // cross-decodes reject: a FAILED payload is not an EVAL and vice versa
+    assert!(wire::decode_eval(&buf).is_err(), "FAILED decoded as EVAL");
+    wire::encode_eval(&mut buf, &report, &[]);
+    assert!(wire::decode_failed(&buf).is_err(), "EVAL decoded as FAILED");
+}
+
+#[test]
+fn every_msg_kind_is_reachable_from_a_real_encoder() {
+    let m = manifest();
+    let cfg = ExperimentConfig::quick("kinds", TaskKind::CifarLike, Protocol::Fsfl);
+    let empty_lanes: Vec<(usize, RoundLane)> = Vec::new();
+    let mut buf = Vec::new();
+    let mut payloads: Vec<(&str, Vec<u8>, MsgKind)> = Vec::new();
+
+    wire::encode_init(&mut buf, 0, 1, &cfg, &ComputeSpec::Synthetic { manifest: m.clone() });
+    payloads.push(("INIT", buf.clone(), MsgKind::Init));
+    wire::encode_round(&mut buf, &[(0, 0)]);
+    payloads.push(("ROUND", buf.clone(), MsgKind::Round));
+    wire::encode_apply(&mut buf, &Delta::zeros(m.clone()), false);
+    payloads.push(("APPLY", buf.clone(), MsgKind::Apply));
+    wire::encode_stop(&mut buf);
+    payloads.push(("STOP", buf.clone(), MsgKind::Stop));
+    wire::encode_state_cmd(
+        &mut buf,
+        &wire::StateCmd {
+            collect: true,
+            install: None,
+        },
+    );
+    payloads.push(("STATE", buf.clone(), MsgKind::State));
+    wire::encode_state_msg(&mut buf, 0, &[]);
+    payloads.push(("STATE_MSG", buf.clone(), MsgKind::State));
+    wire::encode_heartbeat_cmd(&mut buf, 7);
+    payloads.push(("HEARTBEAT", buf.clone(), MsgKind::Heartbeat));
+    wire::encode_heartbeat_msg(&mut buf, 1, 7);
+    payloads.push(("HEARTBEAT_MSG", buf.clone(), MsgKind::Heartbeat));
+    wire::encode_ready(&mut buf, 0, &zero_params(&m));
+    payloads.push(("READY", buf.clone(), MsgKind::Ready));
+    wire::encode_round_done(&mut buf, 0, &empty_lanes).unwrap();
+    payloads.push(("ROUND_DONE", buf.clone(), MsgKind::RoundDone));
+    wire::encode_eval(
+        &mut buf,
+        &EvalReport {
+            loss: 0.0,
+            accuracy: 0.0,
+            f1: 0.0,
+        },
+        &[],
+    );
+    payloads.push(("EVAL", buf.clone(), MsgKind::Eval));
+    wire::encode_failed(&mut buf, 0, "x");
+    payloads.push(("FAILED", buf.clone(), MsgKind::Failed));
+    // forward-compat bucket: unknown tag bytes and empty payloads
+    payloads.push(("UNKNOWN_TAG", vec![0xEE], MsgKind::Other));
+    payloads.push(("EMPTY", Vec::new(), MsgKind::Other));
+
+    let mut covered = [false; MsgKind::COUNT];
+    for (name, payload, want) in &payloads {
+        let got = wire::kind_of(payload);
+        assert_eq!(got, *want, "{name}: kind_of misclassified");
+        covered[got.index()] = true;
+    }
+    for kind in MsgKind::ALL {
+        assert!(
+            covered[kind.index()],
+            "MsgKind::{kind:?} unreachable from the encoder corpus — \
+             add an encoder round-trip for it above"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 3 · differential conformance
 // ---------------------------------------------------------------------------
@@ -760,10 +956,12 @@ fn join_with_timeout<T: Send + 'static>(
     secs: u64,
     what: &str,
 ) -> T {
+    // fsfl-lint: allow(clock): wall-clock watchdog guarding against a deadlocked coordinator; must not depend on the clock under test
     let deadline = Instant::now() + Duration::from_secs(secs);
     while !h.is_finished() {
         assert!(
-            Instant::now() < deadline,
+            Instant::now() < deadline, // fsfl-lint: allow(clock): same watchdog read as above
+
             "{what}: no result after {secs}s — coordinator deadlocked"
         );
         std::thread::sleep(Duration::from_millis(25));
